@@ -1,0 +1,64 @@
+//! Autotuning walkthrough: sweep the atomic-parallelism space on one
+//! matrix, compare the oracle-best against the input-dynamics selector
+//! (DA-SpMM-style), and print where each algorithm family wins.
+//!
+//! Run: `cargo run --release --example autotune [-- dataset-name]`
+
+use sgap::bench_util::random_b;
+use sgap::sim::{HwProfile, Machine};
+use sgap::sparse::{dataset, MatrixStats};
+use sgap::tuner::{self, Selector};
+
+fn main() -> anyhow::Result<()> {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "pl_2048_a1.6".into());
+    let d = dataset::suite()
+        .into_iter()
+        .find(|d| d.name == name)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {name}; see `sgap stats`"))?;
+    let a = d.matrix.to_csr();
+    let stats = MatrixStats::of(&a);
+    println!("dataset {name}: {} x {}, nnz {}, degree cv {:.2}", a.rows, a.cols, a.nnz(), stats.row_degree_cv);
+
+    let n = 4u32;
+    let b = random_b(a.cols, n as usize, 9);
+    let machine = Machine::new(HwProfile::rtx3090());
+
+    let mut cands = tuner::space::taco_candidates(n);
+    cands.extend(tuner::space::sgap_candidates(n));
+    let out = tuner::tune(&machine, &cands, &a, &b, n)?;
+
+    println!("\ntop 10 of {} candidates (RTX 3090):", out.ranked.len());
+    for (alg, t, gf) in out.ranked.iter().take(10) {
+        println!("  {:<36} {:>9.2} us {:>8.2} GFLOP/s", alg.name(), t * 1e6, gf);
+    }
+    let (best, t_best) = out.best();
+
+    let sel = Selector::default();
+    let chosen = sel.select(&stats, n);
+    let t_sel = chosen.run(&machine, &a, &b, n)?.time_s;
+    println!("\noracle best : {:<36} {:>9.2} us", best.name(), t_best * 1e6);
+    println!("selector    : {:<36} {:>9.2} us (regret {:.3}x)", chosen.name(), t_sel * 1e6, t_sel / t_best);
+
+    // family winners
+    for (label, pred) in [
+        ("best stock-TACO", false),
+        ("best segment-group", true),
+    ] {
+        let t = out
+            .ranked
+            .iter()
+            .find(|(a, _, _)| {
+                let is_sgap = matches!(
+                    a,
+                    sgap::algos::catalog::Algo::SgapRowGroup { .. }
+                        | sgap::algos::catalog::Algo::SgapNnzGroup { .. }
+                );
+                is_sgap == pred
+            })
+            .map(|&(a, t, _)| (a, t));
+        if let Some((a, t)) = t {
+            println!("{label:<20}: {:<36} {:>9.2} us", a.name(), t * 1e6);
+        }
+    }
+    Ok(())
+}

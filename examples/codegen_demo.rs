@@ -1,0 +1,31 @@
+//! Codegen demo: reproduce the paper's Listing 1 → Listing 2
+//! transformation — the same schedule lowered without and with segment
+//! group — plus the §5.3 macro-instruction header.
+//!
+//! Run: `cargo run --release --example codegen_demo`
+
+use sgap::compiler::codegen_cuda::{emit_kernel, macro_header};
+use sgap::compiler::schedule::{Schedule, SpmmConfig};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = SpmmConfig { n: 4, c: 4, p: 256, g: 1, r: 32, x: 1 };
+
+    println!("==== Listing 1 analogue: original TACO (serial reduction + atomicAdd) ====\n");
+    let orig = Schedule::taco_nnz_serial(SpmmConfig { g: 1, ..cfg });
+    println!("// CIN: {}\n", orig.to_cin());
+    println!("{}", emit_kernel(&sgap::compiler::lower(&orig)?));
+
+    println!("==== Listing 2 analogue: segment group (zero extension + segReduceGroup) ====\n");
+    let seg = Schedule::sgap_nnz_group(cfg, 32);
+    println!("// CIN: {}\n", seg.to_cin());
+    println!("{}", emit_kernel(&sgap::compiler::lower(&seg)?));
+
+    println!("==== Listing 5 analogue: {{<1/g row, c col>, r}} with atomicAddGroup ====\n");
+    let row = Schedule::sgap_row_group(SpmmConfig { g: 32, ..cfg }, 8);
+    println!("// CIN: {}\n", row.to_cin());
+    println!("{}", emit_kernel(&sgap::compiler::lower(&row)?));
+
+    println!("==== §5.3 macro instructions ====\n");
+    println!("{}", macro_header());
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! **Fig. 11** — per-dataset series: best new-algorithm speedup over the
+//! best original-TACO algorithm, against matrix density, for several N.
+//!
+//! Writes `results/fig11.csv` with columns
+//! `hw,n,dataset,family,density,cv,t_taco_us,t_new_us,speedup` — the
+//! series the paper plots (speedup vs density, one panel per N).
+//!
+//! Run: `cargo run --release --example fig11_sweep` (full suite; minutes)
+
+use std::io::Write;
+
+use sgap::bench_util::{normalized_speedup, random_b};
+use sgap::sim::{HwProfile, Machine};
+use sgap::sparse::{dataset, MatrixStats};
+use sgap::tuner::{self, tune};
+
+fn main() -> anyhow::Result<()> {
+    std::fs::create_dir_all("results")?;
+    let path = "results/fig11.csv";
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "hw,n,dataset,family,density,cv,t_taco_us,t_new_us,speedup")?;
+
+    let suite = dataset::suite();
+    let machine = Machine::new(HwProfile::rtx3090());
+    for n in [4u32, 16] {
+        let taco = tuner::space::taco_candidates(n);
+        let sgap_c = tuner::space::sgap_candidates(n);
+        println!("N = {n}: {} taco + {} sgap candidates over {} matrices", taco.len(), sgap_c.len(), suite.len());
+        for d in &suite {
+            let a = d.matrix.to_csr();
+            let s = MatrixStats::of(&a);
+            let b = random_b(a.cols, n as usize, 61);
+            let t_taco = tune(&machine, &taco, &a, &b, n)?.best().1;
+            let t_new = tune(&machine, &sgap_c, &a, &b, n)?.best().1;
+            let sp = normalized_speedup(t_new, t_taco);
+            writeln!(
+                f,
+                "{},{},{},{},{:.3e},{:.3},{:.3},{:.3},{:.4}",
+                machine.hw.name,
+                n,
+                d.name,
+                d.family,
+                s.density,
+                s.row_degree_cv,
+                t_taco * 1e6,
+                t_new * 1e6,
+                sp
+            )?;
+            println!("  {:<26} density {:>9.2e}  speedup {:.3}", d.name, s.density, sp);
+        }
+    }
+    println!("\nwrote {path}");
+    Ok(())
+}

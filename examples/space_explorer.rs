@@ -1,0 +1,50 @@
+//! Fig. 7/8 explorer: enumerate the atomic-parallelism space, show which
+//! points the three rules prune and where the known algorithm families
+//! (DA-SpMM, stock TACO, the two new Sgap algorithms) sit.
+//!
+//! Run: `cargo run --release --example space_explorer`
+
+use sgap::compiler::spaces::{enumerate_all, AtomicPoint};
+
+fn main() {
+    let gs = [2u32, 4, 8, 16, 32];
+    let cs = [2u32, 4, 8];
+    let rs = [1u32, 2, 4, 8, 16, 32];
+    let all = enumerate_all(&gs, &cs, &rs);
+    let legal: Vec<_> = all.iter().filter(|(_, l)| l.is_ok()).collect();
+    let mut by_rule: std::collections::BTreeMap<String, usize> = Default::default();
+    for (_, l) in &all {
+        if let Err(e) = l {
+            *by_rule.entry(format!("{e:?}")).or_default() += 1;
+        }
+    }
+
+    println!("atomic-parallelism space over g in {gs:?}, c in {cs:?}, r in {rs:?}");
+    println!("  total points : {}", all.len());
+    println!("  legal        : {}", legal.len());
+    for (rule, n) in &by_rule {
+        println!("  pruned by {rule}: {n}");
+    }
+
+    println!("\nknown algorithm families as points:");
+    for (name, p) in AtomicPoint::da_spmm_embedding(4) {
+        println!("  DA-SpMM {name:<8} {p}");
+    }
+    println!("  TACO   {{<g nnz,c col>,1}}   e.g. {}", AtomicPoint::eb_sr(4));
+    println!("  TACO   {{<x row,c col>,1}}   e.g. {}", AtomicPoint::rb_sr(4));
+    for r in [2u32, 8] {
+        println!("  Sgap   new nnz point       {}", AtomicPoint::sgap_nnz(4, r));
+    }
+    for (g, r) in [(8u32, 8u32), (16, 32)] {
+        println!("  Sgap   new row point       {}", AtomicPoint::sgap_row(g, 4, r));
+    }
+
+    println!("\npoints legal ONLY with Atomics races (rule-2 lift, §Table 1):");
+    let mut shown = 0;
+    for (p, l) in &all {
+        if l.is_err() && p.is_legal_with_atomics() && shown < 8 {
+            println!("  {p}");
+            shown += 1;
+        }
+    }
+}

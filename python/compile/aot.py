@@ -1,0 +1,118 @@
+"""AOT compile path: lower every L2 graph to HLO *text* artifacts.
+
+Run once at build time (``make artifacts``); the rust runtime loads the
+text with ``HloModuleProto::from_text_file`` and executes via PJRT. HLO
+text — NOT ``lowered.compiler_ir("hlo").as_serialized_hlo_module_proto()``
+— is the interchange format because jax >= 0.5 emits protos with 64-bit
+instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md).
+
+Also writes ``artifacts/manifest.json`` describing each artifact's
+signature and bucket parameters; ``rust/src/runtime/artifact.rs`` is the
+consumer and must stay in sync.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts``
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import CooBucket, EllBucket
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# Artifact registry — the single place new artifacts are declared.
+# ---------------------------------------------------------------------------
+
+# Default buckets: small enough to compile in seconds, big enough for the
+# e2e example (Cora-scale graph: 2708 rows / ~13k nnz after padding).
+COO_SMALL = CooBucket(rows=512, cols=512, nnz=4096, n=4, tile=256, group=32)
+GCN_BUCKET = CooBucket(rows=4096, cols=4096, nnz=16384, n=16, tile=256, group=32)
+
+
+def coo_name(b: CooBucket) -> str:
+    return f"spmm_nnz_sr_r{b.rows}_z{b.nnz}_n{b.n}_g{b.group}"
+
+
+def ell_name(b: EllBucket) -> str:
+    return f"spmm_row_pr_r{b.rows}_s{b.slots}_n{b.n}_g{b.group}"
+
+
+def build_registry():
+    """name -> (callable, example_args, manifest entry)."""
+    reg = {}
+
+    for group in (8, 32):
+        b = dataclasses.replace(COO_SMALL, group=group)
+        reg[coo_name(b)] = (
+            model.make_spmm_nnz_sr(b),
+            model.spmm_nnz_example_args(b),
+            {"kind": "spmm_nnz_sr", **dataclasses.asdict(b)},
+        )
+        e = EllBucket(rows=512, cols=512, slots=32, n=4, row_tile=64, group=group)
+        reg[ell_name(e)] = (
+            model.make_spmm_row_pr(e),
+            model.spmm_ell_example_args(e),
+            {"kind": "spmm_row_pr", **dataclasses.asdict(e)},
+        )
+
+    in_feat, hidden, out_feat = 64, 16, 16
+    reg["gcn2"] = (
+        model.make_gcn2(GCN_BUCKET),
+        model.gcn2_example_args(GCN_BUCKET, in_feat, hidden, out_feat),
+        {
+            "kind": "gcn2",
+            **dataclasses.asdict(GCN_BUCKET),
+            "in_feat": in_feat,
+            "hidden": hidden,
+            "out_feat": out_feat,
+        },
+    )
+    return reg
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="build a single named artifact")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {}
+    for name, (fn, example_args, meta) in sorted(build_registry().items()):
+        if args.only and name != args.only:
+            continue
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        text = to_hlo_text(jax.jit(fn).lower(*example_args))
+        with open(path, "w") as f:
+            f.write(text)
+        arg_sig = [[list(a.shape), a.dtype.name] for a in example_args]
+        manifest[name] = {**meta, "file": f"{name}.hlo.txt", "args": arg_sig}
+        print(f"aot: {name}: {len(text)} chars -> {path}")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    if not args.only:
+        with open(mpath, "w") as f:
+            json.dump(manifest, f, indent=2, sort_keys=True)
+        print(f"aot: manifest -> {mpath}")
+
+
+if __name__ == "__main__":
+    main()

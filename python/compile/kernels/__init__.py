@@ -1,0 +1,17 @@
+from .common import CooBucket, EllBucket, pad_coo, pad_ell, row_pad_sentinel
+from .spmm_nnz_sr import spmm_nnz_sr, spmm_block_partials
+from .spmm_row_pr import spmm_row_pr
+from .sddmm import SddmmBucket, sddmm, sddmm_ref
+from . import ref
+
+__all__ = [
+    "CooBucket",
+    "EllBucket",
+    "pad_coo",
+    "pad_ell",
+    "row_pad_sentinel",
+    "spmm_nnz_sr",
+    "spmm_block_partials",
+    "spmm_row_pr",
+    "ref",
+]

@@ -1,0 +1,94 @@
+"""Shared helpers for the Sgap Pallas kernels.
+
+Padding/bucketing: HLO artifacts are shape-static, so sparse inputs are
+padded to fixed *buckets* before entering the kernels. The rust runtime
+(`rust/src/runtime/artifact.rs`) performs the same padding; the constants
+here are the single source of truth and are exported into
+``artifacts/manifest.json`` by ``aot.py``.
+
+Conventions
+-----------
+* COO bucket: ``row_idx[i] == ROW_PAD_SENTINEL`` marks padding. Padding
+  entries carry ``val == 0`` and ``col_idx == 0`` so they are numerically
+  inert even when the segmented scan runs over them (the paper's *zero
+  extension*: out-of-bound reduction elements are allowed because warp
+  primitives run branch-free — §5.2).
+* ELL bucket: per-row slots beyond the true degree carry ``col == 0`` and
+  ``val == 0``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+# Padding rows index one past the real row range; the epilogue drops them.
+def row_pad_sentinel(num_rows_padded: int) -> int:
+    return num_rows_padded  # one extra segment id, sliced off after segment_sum
+
+
+@dataclasses.dataclass(frozen=True)
+class CooBucket:
+    """Static shapes for a COO (nnz-major) SpMM artifact."""
+
+    rows: int      # padded number of sparse-matrix rows (output rows)
+    cols: int      # padded number of sparse-matrix cols (== dense B rows)
+    nnz: int       # padded nnz, multiple of tile
+    n: int         # dense column count N
+    tile: int = 256    # nnz block processed per kernel instance
+    group: int = 32    # reduction parallelism r: segmented-scan span
+
+    def __post_init__(self):
+        assert self.nnz % self.tile == 0, "nnz bucket must be tile-aligned"
+        assert self.tile % self.group == 0, "tile must be group-aligned"
+        assert self.group & (self.group - 1) == 0, "group must be a power of 2"
+
+
+@dataclasses.dataclass(frozen=True)
+class EllBucket:
+    """Static shapes for an ELL (row-major) SpMM artifact."""
+
+    rows: int      # padded rows
+    cols: int      # padded cols (dense B rows)
+    slots: int     # padded max row degree, multiple of group
+    n: int
+    row_tile: int = 64   # rows per kernel instance
+    group: int = 32      # reduction parallelism r: tree-reduce span over slots
+
+    def __post_init__(self):
+        assert self.rows % self.row_tile == 0
+        assert self.slots % self.group == 0
+        assert self.group & (self.group - 1) == 0
+
+
+def pad_coo(row, col, val, bucket: CooBucket):
+    """Pad COO arrays (sorted by row) to the bucket's static nnz."""
+    row = np.asarray(row, np.int32)
+    col = np.asarray(col, np.int32)
+    val = np.asarray(val, np.float32)
+    nnz = row.shape[0]
+    assert nnz <= bucket.nnz, f"nnz {nnz} exceeds bucket {bucket.nnz}"
+    sent = row_pad_sentinel(bucket.rows)
+    pr = np.full(bucket.nnz, sent, np.int32)
+    pc = np.zeros(bucket.nnz, np.int32)
+    pv = np.zeros(bucket.nnz, np.float32)
+    pr[:nnz], pc[:nnz], pv[:nnz] = row, col, val
+    return jnp.asarray(pr), jnp.asarray(pc), jnp.asarray(pv)
+
+
+def pad_ell(indptr, indices, data, bucket: EllBucket):
+    """CSR -> padded ELL (cols[rows, slots], vals[rows, slots])."""
+    indptr = np.asarray(indptr, np.int64)
+    rows = indptr.shape[0] - 1
+    assert rows <= bucket.rows
+    cols = np.zeros((bucket.rows, bucket.slots), np.int32)
+    vals = np.zeros((bucket.rows, bucket.slots), np.float32)
+    for i in range(rows):
+        lo, hi = indptr[i], indptr[i + 1]
+        deg = hi - lo
+        assert deg <= bucket.slots, f"row {i} degree {deg} > slots {bucket.slots}"
+        cols[i, :deg] = indices[lo:hi]
+        vals[i, :deg] = data[lo:hi]
+    return jnp.asarray(cols), jnp.asarray(vals)

@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for the Sgap SpMM kernels.
+
+These are the correctness references the Pallas kernels are tested against
+(pytest + hypothesis in ``python/tests/``). They use only dense jnp /
+``segment_sum`` primitives with no tiling, so any structural bug in the
+kernels (scan span, group boundary, padding sentinel) shows up as a
+numeric mismatch.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import CooBucket, EllBucket
+
+
+def spmm_coo_ref(row_idx, col_idx, vals, b, num_rows_padded: int):
+    """C[i, :] = sum_{k: row[k]==i} vals[k] * B[col[k], :].
+
+    ``row_idx`` may contain the padding sentinel ``num_rows_padded``; the
+    extra segment is computed then sliced off, mirroring zero extension.
+    """
+    contrib = vals[:, None] * b[col_idx, :]              # (nnz, N)
+    out = jax.ops.segment_sum(contrib, row_idx, num_segments=num_rows_padded + 1)
+    return out[:num_rows_padded]
+
+
+def spmm_ell_ref(cols, vals, b):
+    """C[i, :] = sum_s vals[i, s] * B[cols[i, s], :] (padding slots are 0)."""
+    gathered = b[cols, :]                                # (rows, slots, N)
+    return jnp.einsum("rs,rsn->rn", vals, gathered)
+
+
+def spmm_dense_ref(a_dense, b):
+    """Dense matmul oracle used by the property tests to check the refs."""
+    return a_dense @ b
+
+
+def coo_to_dense(row_idx, col_idx, vals, rows, cols):
+    a = jnp.zeros((rows + 1, cols), vals.dtype)          # +1 = sentinel row
+    a = a.at[row_idx, col_idx].add(vals)
+    return a[:rows]
+
+
+def gcn2_ref(row_idx, col_idx, vals, h, w1, w2, num_rows_padded: int):
+    """Two-layer GCN forward: relu(Â (relu(Â H W1)) W2)."""
+    z1 = spmm_coo_ref(row_idx, col_idx, vals, h @ w1, num_rows_padded)
+    h1 = jax.nn.relu(z1)
+    z2 = spmm_coo_ref(row_idx, col_idx, vals, h1 @ w2, num_rows_padded)
+    return jax.nn.relu(z2)
+
+
+__all__ = [
+    "spmm_coo_ref",
+    "spmm_ell_ref",
+    "spmm_dense_ref",
+    "coo_to_dense",
+    "gcn2_ref",
+    "CooBucket",
+    "EllBucket",
+]

@@ -1,0 +1,85 @@
+"""L1 Pallas kernel: SDDMM with grouped tree reduction — the §4.3
+generalization of segment group beyond SpMM.
+
+``Y[p] = A_vals[p] * sum_j X1[row[p], j] * X2[j, col[p]]`` over the sparse
+pattern. The reduction (over the dense ``j``) reuses exactly the grouped
+tree-reduce structure of ``spmm_row_pr``: chunks of ``group`` lanes are
+tree-halved (the ``atomicAddGroup`` analogue), then chunk partials sum
+serially. Zero extension pads ``j`` to a group multiple with zeros and
+rows with a sentinel row of zeros in X1.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+@dataclasses.dataclass(frozen=True)
+class SddmmBucket:
+    rows: int      # padded rows of A (X1 gets one extra sentinel row)
+    cols: int      # padded cols of A (== X2 cols)
+    nnz: int       # padded nnz, multiple of tile
+    j: int         # dense reduction dim, multiple of group
+    tile: int = 256
+    group: int = 32
+
+    def __post_init__(self):
+        assert self.nnz % self.tile == 0
+        assert self.j % self.group == 0, "pad J to a group multiple (zero extension)"
+        assert self.group & (self.group - 1) == 0
+
+
+def _sddmm_kernel(row_ref, col_ref, val_ref, x1_ref, x2_ref, o_ref, *, group: int):
+    r = row_ref[...]                    # (tile,) int32, sentinel = rows
+    c = col_ref[...]                    # (tile,)
+    v = val_ref[...]                    # (tile,)
+    x1 = x1_ref[...]                    # (rows + 1, J) — sentinel row is zeros
+    x2 = x2_ref[...]                    # (J, cols)
+
+    g1 = jnp.take(x1, r, axis=0)        # (tile, J)
+    g2 = jnp.take(x2, c, axis=1).T      # (tile, J)
+    x = g1 * g2                         # per-lane partial products
+
+    # grouped tree reduction over j (same shape as spmm_row_pr's reduce)
+    tile, jdim = x.shape
+    x = x.reshape(tile, jdim // group, group)
+    d = group // 2
+    while d >= 1:
+        x = x[:, :, :d] + x[:, :, d : 2 * d]
+        d //= 2
+    dot = x[:, :, 0].sum(axis=1)        # serial chunk accumulation
+    o_ref[...] = v * dot
+
+
+def sddmm(row_idx, col_idx, vals, x1, x2, bucket: SddmmBucket):
+    """Padded SDDMM: returns (nnz,) outputs (padding slots are 0)."""
+    assert x1.shape == (bucket.rows + 1, bucket.j), "X1 must carry the sentinel row"
+    assert x2.shape == (bucket.j, bucket.cols)
+    kernel = functools.partial(_sddmm_kernel, group=bucket.group)
+    t = bucket.tile
+    return pl.pallas_call(
+        kernel,
+        grid=(bucket.nnz // t,),
+        in_specs=[
+            pl.BlockSpec((t,), lambda i: (i,)),
+            pl.BlockSpec((t,), lambda i: (i,)),
+            pl.BlockSpec((t,), lambda i: (i,)),
+            pl.BlockSpec((bucket.rows + 1, bucket.j), lambda i: (0, 0)),
+            pl.BlockSpec((bucket.j, bucket.cols), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((t,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((bucket.nnz,), jnp.float32),
+        interpret=True,
+    )(row_idx, col_idx, vals, x1, x2)
+
+
+def sddmm_ref(row_idx, col_idx, vals, x1, x2):
+    """Pure-jnp oracle (same padded signature)."""
+    g1 = jnp.take(x1, row_idx, axis=0)
+    g2 = jnp.take(x2, col_idx, axis=1).T
+    return vals * (g1 * g2).sum(axis=1)

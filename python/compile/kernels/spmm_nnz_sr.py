@@ -1,0 +1,96 @@
+"""L1 Pallas kernel: nnz-balanced SpMM with grouped *segment reduction*.
+
+This is the TPU adaptation of the paper's ``{<1 nnz, c col>, r}`` algorithm
+(Listing 6): every "thread" owns one non-zero; ``r`` threads synchronize; the
+writeback threads are decided at runtime by segment boundaries (segment
+reduction), because a group may straddle several sparse rows.
+
+GPU -> TPU mapping (DESIGN.md §Hardware-Adaptation):
+
+* warp shuffle (``__shfl_up_sync``) segmented scan  ->  log2-step *rolled*
+  segmented inclusive scan over a ``TILE`` block held in VMEM;
+* reduction parallelism ``r`` (= ``bucket.group``)  ->  the scan **span**:
+  lanes are grouped in chunks of ``r``; scan never crosses a chunk
+  boundary, exactly like a shuffle with group size ``r``;
+* ``segReduceWarp``'s runtime-decided writeback threads  ->  a segment-end
+  mask: only lanes that terminate a (row, group) segment emit their total,
+  all other lanes emit 0;
+* the cross-group combine (``atomicAdd`` of group totals on GPU)  ->  an XLA
+  ``segment_sum`` epilogue over the masked block outputs (TPU has no HBM
+  atomics; scatter-add is the idiomatic writeback).
+* the paper's *zero extension* (§5.2)  ->  padding non-zeros carry
+  ``val == 0`` and run through the scan branch-free instead of being
+  guarded out.
+
+The kernel is lowered with ``interpret=True`` (CPU-PJRT executable HLO);
+real-TPU performance is estimated in DESIGN.md from the VMEM footprint:
+``TILE*(4+4+4) + K*N*4 + TILE*N*4`` bytes per instance.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import CooBucket
+
+
+def _seg_scan_kernel(row_ref, col_ref, val_ref, b_ref, o_ref, *, tile: int, group: int):
+    """One grid step: scan `tile` non-zeros, emit masked segment totals."""
+    r = row_ref[...]                       # (tile,) int32 row ids (sentinel-padded)
+    c = col_ref[...]                       # (tile,) int32 col ids
+    v = val_ref[...]                       # (tile,) f32 values (0 on padding)
+    b = b_ref[...]                         # (K, N) dense matrix, staged per block
+
+    # Each lane's contribution: v[k] * B[c[k], :]  — the multiply half of
+    # the reduction; gather is XLA `gather` under interpret mode.
+    contrib = v[:, None] * jnp.take(b, c, axis=0)          # (tile, N)
+
+    # Grouped segmented inclusive scan (Hillis–Steele), span = `group`.
+    lane = jax.lax.iota(jnp.int32, tile) % group
+    x = contrib
+    d = 1
+    while d < group:
+        shifted = jnp.roll(x, d, axis=0)
+        same_row = r == jnp.roll(r, d)
+        in_span = lane >= d                 # never cross the group boundary
+        x = x + jnp.where((same_row & in_span)[:, None], shifted, 0.0)
+        d *= 2
+
+    # Writeback lanes: last lane of the group, or the row changes next lane.
+    nxt = jnp.roll(r, -1)
+    is_end = (lane == group - 1) | (r != nxt)
+    o_ref[...] = jnp.where(is_end[:, None], x, 0.0)
+
+
+def spmm_block_partials(row_idx, col_idx, vals, b, bucket: CooBucket):
+    """Run the Pallas scan over all nnz tiles; returns (nnz, N) masked totals."""
+    tile, group, n = bucket.tile, bucket.group, bucket.n
+    kernel = functools.partial(_seg_scan_kernel, tile=tile, group=group)
+    return pl.pallas_call(
+        kernel,
+        grid=(bucket.nnz // tile,),
+        in_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((bucket.cols, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bucket.nnz, n), jnp.float32),
+        interpret=True,
+    )(row_idx, col_idx, vals, b)
+
+
+def spmm_nnz_sr(row_idx, col_idx, vals, b, bucket: CooBucket):
+    """Full SpMM: Pallas grouped segment scan + scatter-add epilogue.
+
+    The epilogue sums at most ``nnz/group + #rows`` non-zero entries — it is
+    the TPU analogue of the per-group ``atomicAdd`` writeback.
+    """
+    partials = spmm_block_partials(row_idx, col_idx, vals, b, bucket)
+    out = jax.ops.segment_sum(partials, row_idx, num_segments=bucket.rows + 1)
+    return out[: bucket.rows]

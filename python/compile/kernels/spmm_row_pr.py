@@ -1,0 +1,70 @@
+"""L1 Pallas kernel: row-balanced SpMM with grouped *parallel reduction*.
+
+TPU adaptation of the paper's ``{<1/g row, c col>, r}`` algorithm
+(Listing 5): ``g`` threads cooperate on one sparse row, synchronizing in
+groups of ``r`` with a tree (parallel) reduction — exactly one writeback
+thread per row.
+
+GPU -> TPU mapping (DESIGN.md §Hardware-Adaptation):
+
+* the sparse matrix is staged as padded ELL (``cols/vals[rows, slots]``),
+  the TPU analogue of assigning ``g`` lanes per row: the ``slots`` axis is
+  the lane axis of the cooperating group;
+* the ``log2(r)`` shuffle tree of ``atomicAddGroup``  ->  a halving tree
+  reduction over chunks of ``r`` slots in VMEM;
+* ``g/r`` serial chunk accumulation (when the group is smaller than the
+  row's lane count)  ->  a sum over the ``slots/r`` chunk axis;
+* exactly one writeback per row (parallel reduction's single writeback
+  thread)  ->  the kernel writes the C tile directly, no epilogue.
+
+Padding slots carry ``val == 0`` — the zero-extension trick again: they
+flow through the tree instead of being guarded by control flow.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import EllBucket
+
+
+def _row_tree_kernel(col_ref, val_ref, b_ref, o_ref, *, group: int):
+    cols = col_ref[...]                      # (row_tile, slots)
+    vals = val_ref[...]                      # (row_tile, slots)
+    b = b_ref[...]                           # (K, N)
+
+    gathered = jnp.take(b, cols, axis=0)     # (row_tile, slots, N)
+    x = vals[..., None] * gathered           # (row_tile, slots, N)
+
+    # Chunk the slot axis into groups of `group` lanes …
+    rt, slots, n = x.shape
+    x = x.reshape(rt, slots // group, group, n)
+    # … tree-reduce inside each group (log2(r) steps, like shfl_down) …
+    d = group // 2
+    while d >= 1:
+        x = x[:, :, :d, :] + x[:, :, d : 2 * d, :]
+        d //= 2
+    # … then serially accumulate the g/r chunks; single writeback per row.
+    o_ref[...] = x[:, :, 0, :].sum(axis=1)
+
+
+def spmm_row_pr(cols, vals, b, bucket: EllBucket):
+    """Full SpMM over the ELL bucket; returns (rows, N)."""
+    kernel = functools.partial(_row_tree_kernel, group=bucket.group)
+    rt, n = bucket.row_tile, bucket.n
+    return pl.pallas_call(
+        kernel,
+        grid=(bucket.rows // rt,),
+        in_specs=[
+            pl.BlockSpec((rt, bucket.slots), lambda i: (i, 0)),
+            pl.BlockSpec((rt, bucket.slots), lambda i: (i, 0)),
+            pl.BlockSpec((bucket.cols, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((rt, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bucket.rows, n), jnp.float32),
+        interpret=True,
+    )(cols, vals, b)

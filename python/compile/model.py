@@ -1,0 +1,95 @@
+"""L2: jax compute graphs built on the Sgap Pallas kernels.
+
+Every public function here is a *pure* jax function of arrays only — the
+shapes are frozen by the bucket passed at build time, so ``aot.py`` can
+``jax.jit(...).lower(...)`` each one into a standalone HLO artifact that the
+rust runtime executes via PJRT. Python never runs at serve time.
+
+Artifacts
+---------
+* ``spmm_nnz_sr``  — the segment-group SpMM (paper's ``{<1 nnz,c col>,r}``)
+* ``spmm_row_pr``  — the grouped parallel-reduction SpMM
+  (paper's ``{<1/g row,c col>,r}``)
+* ``gcn2``         — 2-layer GCN forward whose aggregation is the
+  segment-group SpMM; the end-to-end workload of ``examples/e2e_gcn.rs``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import CooBucket, EllBucket, spmm_nnz_sr, spmm_row_pr
+
+
+def make_spmm_nnz_sr(bucket: CooBucket):
+    """SpMM via grouped segment reduction. Args: row, col, val, B."""
+
+    def fn(row_idx, col_idx, vals, b):
+        return (spmm_nnz_sr(row_idx, col_idx, vals, b, bucket),)
+
+    return fn
+
+
+def make_spmm_row_pr(bucket: EllBucket):
+    """SpMM via grouped parallel reduction over ELL. Args: cols, vals, B."""
+
+    def fn(cols, vals, b):
+        return (spmm_row_pr(cols, vals, b, bucket),)
+
+    return fn
+
+
+def make_gcn2(bucket: CooBucket):
+    """2-layer GCN forward; Â is the bucketed sparse matrix.
+
+    ``H' = relu(Â · relu(Â · H·W1) · W2)`` — both aggregations go through
+    the segment-group SpMM kernel, so the hot op in the artifact is the
+    paper's kernel, not a dense matmul.
+    """
+
+    def fn(row_idx, col_idx, vals, h, w1, w2):
+        z1 = spmm_nnz_sr(row_idx, col_idx, vals, h @ w1, bucket)
+        h1 = jax.nn.relu(z1)
+        z2 = spmm_nnz_sr(row_idx, col_idx, vals, h1 @ w2, bucket)
+        return (jax.nn.relu(z2),)
+
+    return fn
+
+
+def gcn2_example_args(bucket: CooBucket, in_feat: int, hidden: int, out_feat: int):
+    """ShapeDtypeStructs matching ``make_gcn2``'s signature.
+
+    The GCN aggregates (rows, hidden)-shaped activations, so the bucket's
+    ``n`` must equal ``hidden`` and ``out_feat`` — callers assert this.
+    """
+    assert bucket.n == hidden == out_feat, "gcn artifact: bucket.n == hidden == out_feat"
+    assert bucket.cols == bucket.rows, "gcn adjacency is square"
+    i32, f32 = jnp.int32, jnp.float32
+    return (
+        jax.ShapeDtypeStruct((bucket.nnz,), i32),
+        jax.ShapeDtypeStruct((bucket.nnz,), i32),
+        jax.ShapeDtypeStruct((bucket.nnz,), f32),
+        jax.ShapeDtypeStruct((bucket.rows, in_feat), f32),
+        jax.ShapeDtypeStruct((in_feat, hidden), f32),
+        jax.ShapeDtypeStruct((hidden, out_feat), f32),
+    )
+
+
+def spmm_nnz_example_args(bucket: CooBucket):
+    i32, f32 = jnp.int32, jnp.float32
+    return (
+        jax.ShapeDtypeStruct((bucket.nnz,), i32),
+        jax.ShapeDtypeStruct((bucket.nnz,), i32),
+        jax.ShapeDtypeStruct((bucket.nnz,), f32),
+        jax.ShapeDtypeStruct((bucket.cols, bucket.n), f32),
+    )
+
+
+def spmm_ell_example_args(bucket: EllBucket):
+    i32, f32 = jnp.int32, jnp.float32
+    return (
+        jax.ShapeDtypeStruct((bucket.rows, bucket.slots), i32),
+        jax.ShapeDtypeStruct((bucket.rows, bucket.slots), f32),
+        jax.ShapeDtypeStruct((bucket.cols, bucket.n), f32),
+    )

@@ -1,0 +1,227 @@
+"""Kernel-vs-oracle correctness: the CORE numeric signal for L1.
+
+Every Pallas kernel is checked against the pure-jnp ref (which is itself
+checked against a dense matmul), over hypothesis-generated random sparse
+matrices and the full sweep of group sizes / tile shapes the paper tunes.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import (
+    CooBucket,
+    EllBucket,
+    pad_coo,
+    pad_ell,
+    ref,
+    spmm_nnz_sr,
+    spmm_row_pr,
+)
+
+RNG = np.random.default_rng(0)
+
+
+def random_coo(rows, cols, nnz, rng):
+    """Random COO sorted by (row, col), unique coordinates."""
+    # sample without replacement from the flat index space
+    flat = rng.choice(rows * cols, size=min(nnz, rows * cols), replace=False)
+    flat.sort()
+    r = (flat // cols).astype(np.int32)
+    c = (flat % cols).astype(np.int32)
+    v = rng.standard_normal(len(flat)).astype(np.float32)
+    return r, c, v
+
+
+def coo_to_csr(r, c, v, rows):
+    indptr = np.zeros(rows + 1, np.int64)
+    np.add.at(indptr, r + 1, 1)
+    indptr = np.cumsum(indptr)
+    return indptr, c, v
+
+
+# ---------------------------------------------------------------------------
+# Oracle self-check: segment_sum ref == dense matmul.
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rows=st.integers(4, 64),
+    cols=st.integers(4, 64),
+    n=st.integers(1, 8),
+    density=st.floats(0.01, 0.5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ref_matches_dense(rows, cols, n, density, seed):
+    rng = np.random.default_rng(seed)
+    nnz = max(1, int(rows * cols * density))
+    r, c, v = random_coo(rows, cols, nnz, rng)
+    b = rng.standard_normal((cols, n)).astype(np.float32)
+    dense = np.asarray(ref.coo_to_dense(jnp.asarray(r), jnp.asarray(c), jnp.asarray(v), rows, cols))
+    want = dense @ b
+    got = ref.spmm_coo_ref(jnp.asarray(r), jnp.asarray(c), jnp.asarray(v), jnp.asarray(b), rows)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# spmm_nnz_sr (segment reduction) vs ref — sweep group sizes and tiles.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("group", [2, 4, 8, 16, 32, 64])
+@pytest.mark.parametrize("tile", [64, 256])
+def test_nnz_sr_group_sweep(group, tile):
+    if tile % group != 0:
+        pytest.skip("tile must be group-aligned")
+    rows, cols, n = 128, 96, 4
+    bucket = CooBucket(rows=rows, cols=cols, nnz=1024, n=n, tile=tile, group=group)
+    r, c, v = random_coo(rows, cols, 700, RNG)
+    b = RNG.standard_normal((cols, n)).astype(np.float32)
+    pr, pc, pv = pad_coo(r, c, v, bucket)
+    got = spmm_nnz_sr(pr, pc, pv, jnp.asarray(b), bucket)
+    want = ref.spmm_coo_ref(pr, pc, pv, jnp.asarray(b), rows)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    rows=st.integers(8, 200),
+    cols=st.integers(8, 200),
+    n=st.sampled_from([1, 2, 4, 7, 16]),
+    density=st.floats(0.005, 0.3),
+    group=st.sampled_from([2, 8, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_nnz_sr_hypothesis(rows, cols, n, density, group, seed):
+    rng = np.random.default_rng(seed)
+    nnz = max(1, int(rows * cols * density))
+    bucket_nnz = ((nnz + 255) // 256 + 1) * 256
+    bucket = CooBucket(rows=rows, cols=cols, nnz=bucket_nnz, n=n, tile=256, group=group)
+    r, c, v = random_coo(rows, cols, nnz, rng)
+    b = rng.standard_normal((cols, n)).astype(np.float32)
+    pr, pc, pv = pad_coo(r, c, v, bucket)
+    got = spmm_nnz_sr(pr, pc, pv, jnp.asarray(b), bucket)
+    want = ref.spmm_coo_ref(pr, pc, pv, jnp.asarray(b), rows)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=3e-5)
+
+
+def test_nnz_sr_empty_matrix():
+    """All-padding bucket must produce exactly zero output."""
+    bucket = CooBucket(rows=32, cols=32, nnz=256, n=4)
+    pr, pc, pv = pad_coo(np.empty(0, np.int32), np.empty(0, np.int32), np.empty(0, np.float32), bucket)
+    b = np.ones((32, 4), np.float32)
+    got = spmm_nnz_sr(pr, pc, pv, jnp.asarray(b), bucket)
+    assert np.all(np.asarray(got) == 0)
+
+
+def test_nnz_sr_single_long_row():
+    """One row owning every nnz: the worst case for segment boundaries."""
+    bucket = CooBucket(rows=8, cols=64, nnz=256, n=4, group=16)
+    c = np.arange(64, dtype=np.int32)
+    r = np.zeros(64, np.int32)
+    v = np.ones(64, np.float32)
+    b = RNG.standard_normal((64, 4)).astype(np.float32)
+    pr, pc, pv = pad_coo(r, c, v, bucket)
+    got = spmm_nnz_sr(pr, pc, pv, jnp.asarray(b), bucket)
+    np.testing.assert_allclose(np.asarray(got)[0], b.sum(axis=0), rtol=2e-5, atol=2e-5)
+    assert np.all(np.asarray(got)[1:] == 0)
+
+
+def test_nnz_sr_row_per_element():
+    """Every nnz its own row: every lane is a writeback lane."""
+    bucket = CooBucket(rows=256, cols=16, nnz=256, n=2, group=32)
+    r = np.arange(200, dtype=np.int32)
+    c = (np.arange(200) % 16).astype(np.int32)
+    v = RNG.standard_normal(200).astype(np.float32)
+    b = RNG.standard_normal((16, 2)).astype(np.float32)
+    pr, pc, pv = pad_coo(r, c, v, bucket)
+    got = spmm_nnz_sr(pr, pc, pv, jnp.asarray(b), bucket)
+    want = ref.spmm_coo_ref(pr, pc, pv, jnp.asarray(b), 256)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_nnz_sr_segment_straddles_tiles():
+    """A row whose nnz span a tile boundary must still sum correctly
+    (the cross-tile combine is the epilogue's job)."""
+    bucket = CooBucket(rows=4, cols=512, nnz=512, n=1, tile=256, group=32)
+    r = np.zeros(400, np.int32)  # row 0 spans tiles 0 and 1
+    c = np.arange(400, dtype=np.int32)
+    v = np.ones(400, np.float32)
+    b = np.ones((512, 1), np.float32)
+    pr, pc, pv = pad_coo(r, c, v, bucket)
+    got = spmm_nnz_sr(pr, pc, pv, jnp.asarray(b), bucket)
+    assert np.isclose(np.asarray(got)[0, 0], 400.0)
+
+
+# ---------------------------------------------------------------------------
+# spmm_row_pr (parallel reduction over ELL) vs ref.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("group", [2, 4, 8, 16, 32])
+def test_row_pr_group_sweep(group):
+    rows, cols, n, slots = 128, 96, 4, 32
+    bucket = EllBucket(rows=rows, cols=cols, slots=slots, n=n, row_tile=32, group=group)
+    r, c, v = random_coo(rows, cols, 600, RNG)
+    # clamp row degree to slots
+    keep = np.zeros(len(r), bool)
+    counts = {}
+    for i, ri in enumerate(r):
+        if counts.get(ri, 0) < slots:
+            keep[i] = True
+            counts[ri] = counts.get(ri, 0) + 1
+    r, c, v = r[keep], c[keep], v[keep]
+    indptr, idx, data = coo_to_csr(r, c, v, rows)
+    b = RNG.standard_normal((cols, n)).astype(np.float32)
+    cols_p, vals_p = pad_ell(indptr, idx, data, bucket)
+    got = spmm_row_pr(cols_p, vals_p, jnp.asarray(b), bucket)
+    want = ref.spmm_ell_ref(cols_p, vals_p, jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    rows=st.sampled_from([32, 64, 128]),
+    n=st.sampled_from([1, 4, 8]),
+    slots=st.sampled_from([8, 16, 32]),
+    group=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_row_pr_hypothesis(rows, n, slots, group, seed):
+    rng = np.random.default_rng(seed)
+    cols = rows
+    bucket = EllBucket(rows=rows, cols=cols, slots=slots, n=n, row_tile=32, group=group)
+    # random per-row degrees <= slots
+    deg = rng.integers(0, slots + 1, size=rows)
+    indptr = np.zeros(rows + 1, np.int64)
+    indptr[1:] = np.cumsum(deg)
+    idx = rng.integers(0, cols, size=indptr[-1]).astype(np.int32)
+    data = rng.standard_normal(indptr[-1]).astype(np.float32)
+    b = rng.standard_normal((cols, n)).astype(np.float32)
+    cols_p, vals_p = pad_ell(indptr, idx, data, bucket)
+    got = spmm_row_pr(cols_p, vals_p, jnp.asarray(b), bucket)
+    want = ref.spmm_ell_ref(cols_p, vals_p, jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=3e-5)
+
+
+def test_row_pr_matches_nnz_sr():
+    """The two kernels are different algorithms for the same algebra —
+    cross-check them against each other on the same matrix."""
+    rows = cols = 128
+    n = 4
+    r, c, v = random_coo(rows, cols, 500, np.random.default_rng(7))
+    b = RNG.standard_normal((cols, n)).astype(np.float32)
+
+    coo_b = CooBucket(rows=rows, cols=cols, nnz=512, n=n)
+    pr, pc, pv = pad_coo(r, c, v, coo_b)
+    out_sr = spmm_nnz_sr(pr, pc, pv, jnp.asarray(b), coo_b)
+
+    indptr, idx, data = coo_to_csr(r, c, v, rows)
+    ell_b = EllBucket(rows=rows, cols=cols, slots=32, n=n, row_tile=32)
+    cols_p, vals_p = pad_ell(indptr, idx, data, ell_b)
+    out_pr = spmm_row_pr(cols_p, vals_p, jnp.asarray(b), ell_b)
+
+    np.testing.assert_allclose(np.asarray(out_sr), np.asarray(out_pr), rtol=3e-5, atol=3e-5)

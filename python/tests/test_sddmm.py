@@ -1,0 +1,70 @@
+"""SDDMM Pallas kernel vs oracle — the §4.3 generalization at L1."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.sddmm import SddmmBucket, sddmm, sddmm_ref
+
+RNG = np.random.default_rng(5)
+
+
+def build(rows, cols, nnz, j, group, rng, bucket_nnz=None, tile=256):
+    bucket_nnz = bucket_nnz or ((nnz + tile - 1) // tile + 1) * tile
+    b = SddmmBucket(rows=rows, cols=cols, nnz=bucket_nnz, j=j, tile=tile, group=group)
+    flat = rng.choice(rows * cols, size=nnz, replace=False)
+    flat.sort()
+    r = np.full(b.nnz, rows, np.int32)  # sentinel
+    c = np.zeros(b.nnz, np.int32)
+    v = np.zeros(b.nnz, np.float32)
+    r[:nnz] = (flat // cols).astype(np.int32)
+    c[:nnz] = (flat % cols).astype(np.int32)
+    v[:nnz] = rng.standard_normal(nnz).astype(np.float32)
+    x1 = np.zeros((rows + 1, j), np.float32)
+    x1[:rows] = rng.standard_normal((rows, j)).astype(np.float32)  # sentinel row stays 0
+    x2 = rng.standard_normal((j, cols)).astype(np.float32)
+    return b, jnp.asarray(r), jnp.asarray(c), jnp.asarray(v), jnp.asarray(x1), jnp.asarray(x2)
+
+
+def test_ref_matches_dense():
+    b, r, c, v, x1, x2 = build(20, 24, 100, 16, 8, RNG)
+    want_dense = (np.asarray(x1)[:-1] @ np.asarray(x2))  # (rows, cols)
+    got = np.asarray(sddmm_ref(r, c, v, x1, x2))
+    for p in range(100):
+        i, k = int(r[p]), int(c[p])
+        np.testing.assert_allclose(got[p], float(v[p]) * want_dense[i, k], rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("group", [2, 4, 8, 16, 32])
+def test_kernel_group_sweep(group):
+    j = max(group, 32)
+    b, r, c, v, x1, x2 = build(48, 40, 300, j, group, RNG)
+    got = sddmm(r, c, v, x1, x2, b)
+    want = sddmm_ref(r, c, v, x1, x2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    rows=st.integers(8, 100),
+    cols=st.integers(8, 100),
+    j_chunks=st.integers(1, 4),
+    group=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_hypothesis(rows, cols, j_chunks, group, seed):
+    rng = np.random.default_rng(seed)
+    nnz = min(rows * cols // 2, 200) or 1
+    j = group * j_chunks
+    b, r, c, v, x1, x2 = build(rows, cols, nnz, j, group, rng)
+    got = sddmm(r, c, v, x1, x2, b)
+    want = sddmm_ref(r, c, v, x1, x2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-4, atol=3e-4)
+
+
+def test_padding_outputs_zero():
+    b, r, c, v, x1, x2 = build(16, 16, 10, 8, 8, RNG)
+    got = np.asarray(sddmm(r, c, v, x1, x2, b))
+    assert np.all(got[10:] == 0.0), "padding slots must stay zero (sentinel row + zero vals)"

@@ -1,0 +1,39 @@
+//! Wall-clock bench of the simulator hot path itself (L3 §Perf target):
+//! warp-interpretation throughput in simulated-nnz per wall-second.
+//! Used by the performance pass to measure interpreter optimizations.
+
+use std::time::Instant;
+
+use sgap::algos::catalog::Algo;
+use sgap::bench_util::random_b;
+use sgap::sim::{HwProfile, Machine};
+use sgap::sparse::power_law;
+
+fn main() {
+    let machine = Machine::new(HwProfile::rtx3090());
+    let a = power_law(4096, 4096, 65536, 1.6, 77).to_csr();
+    let n = 4u32;
+    let b = random_b(a.cols, n as usize, 3);
+
+    println!("sim_hotpath — interpreter wall-clock throughput (4096x4096, {} nnz)", a.nnz());
+    for (label, algo) in [
+        ("nnz-group r=32", Algo::SgapNnzGroup { c: 4, r: 32 }),
+        ("row-group g=32 r=8", Algo::SgapRowGroup { g: 32, c: 4, r: 8 }),
+        ("nnz-serial g=16", Algo::TacoNnzSerial { g: 16, c: 4 }),
+        ("row-serial", Algo::TacoRowSerial { x: 1, c: 4 }),
+    ] {
+        // warmup
+        algo.run(&machine, &a, &b, n).unwrap();
+        let iters = 3;
+        let start = Instant::now();
+        for _ in 0..iters {
+            algo.run(&machine, &a, &b, n).unwrap();
+        }
+        let dt = start.elapsed().as_secs_f64() / iters as f64;
+        println!(
+            "{label:<22} {:>8.1} ms/launch   {:>8.2} Mnnz/s",
+            dt * 1e3,
+            a.nnz() as f64 / dt / 1e6
+        );
+    }
+}

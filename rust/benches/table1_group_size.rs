@@ -1,0 +1,59 @@
+//! **Table 1** — flexible group size speedup.
+//!
+//! Paper: `{<1/g row, c col>, r}` with g = 32 fixed (stock TACO's split)
+//! and r ∈ {8, 4} vs the stock r = 32, on RTX 3090 / RTX 2080 / V100,
+//! N = 4. Paper numbers: 2.09–2.46× raw, 2.14–2.48× normalized.
+//!
+//! Reproduction target (DESIGN.md §5): r < 32 wins on average, with the
+//! biggest margins on short-row / skewed matrices; normalized ≈ raw.
+
+use sgap::algos::catalog::Algo;
+use sgap::bench_util::{bench_suite, geomean, normalized_speedup, random_b, speedup, Table};
+use sgap::sim::{HwProfile, Machine};
+
+fn main() {
+    let n = 4u32;
+    let c = 4u32;
+    let suite = bench_suite();
+    println!("Table 1 — flexible group size speedup ({} matrices, N={n})", suite.len());
+    println!("paper: r=8 ~2.09-2.45x, r=4 ~2.09-2.46x\n");
+
+    let mut table = Table::new(&["Hardware", "r=8", "r=8 norm", "r=4", "r=4 norm"]);
+    for hw in HwProfile::all() {
+        let machine = Machine::new(hw);
+        let mut sp = vec![vec![]; 2];
+        let mut nsp = vec![vec![]; 2];
+        for d in &suite {
+            let a = d.matrix.to_csr();
+            let b = random_b(a.cols, n as usize, 17);
+            let base = Algo::SgapRowGroup { g: 32, c, r: 32 }
+                .run(&machine, &a, &b, n)
+                .expect("baseline")
+                .time_s;
+            for (i, r) in [8u32, 4].into_iter().enumerate() {
+                let t = Algo::SgapRowGroup { g: 32, c, r }
+                    .run(&machine, &a, &b, n)
+                    .expect("variant")
+                    .time_s;
+                sp[i].push(speedup(t, base));
+                nsp[i].push(normalized_speedup(t, base));
+            }
+        }
+        table.row(&[
+            hw.name.to_string(),
+            format!("{:.3}", geomean(&sp[0])),
+            format!("{:.3}", geomean(&nsp[0])),
+            format!("{:.3}", geomean(&sp[1])),
+            format!("{:.3}", geomean(&nsp[1])),
+        ]);
+        // shape assertions: flexible group size must win on average
+        assert!(
+            geomean(&nsp[0]) > 1.1,
+            "{}: r=8 normalized speedup {} not > 1.1",
+            hw.name,
+            geomean(&nsp[0])
+        );
+    }
+    table.print();
+    println!("\nshape check passed: r<32 beats r=32 on average on all profiles");
+}

@@ -1,0 +1,60 @@
+//! **Table 2** — segment reduction normalized speedup.
+//!
+//! Paper: `{<1 nnz, c col>, r}` (grouped segment reduction) vs the best-g
+//! `{<1/g row, c col>, r}` (atomicAddGroup) per dataset, on RTX 3090,
+//! controlled c ∈ {1,2,4} and r ∈ {4,8,16,32}. Paper numbers: 1.008–1.381,
+//! growing with both c and r.
+//!
+//! Reproduction target: normalized geomean ≥ 1 everywhere (segment
+//! reduction wins where rows mismatch the group), increasing trend in r.
+
+use sgap::algos::catalog::Algo;
+use sgap::bench_util::{bench_suite, geomean, normalized_speedup, random_b, Table};
+use sgap::sim::{HwProfile, Machine};
+
+fn main() {
+    let n = 4u32;
+    let machine = Machine::new(HwProfile::rtx3090());
+    let suite = bench_suite();
+    println!("Table 2 — segment reduction normalized speedup (RTX 3090, {} matrices, N={n})", suite.len());
+    println!("paper: 1.008 (c=1,r=4) … 1.381 (c=4,r=32)\n");
+
+    let gs = [2u32, 4, 8, 16, 32];
+    let mut table = Table::new(&["c", "r=4", "r=8", "r=16", "r=32"]);
+    let mut by_r_at_c4: Vec<f64> = Vec::new();
+    for c in [1u32, 2, 4] {
+        let mut cells = vec![c.to_string()];
+        for r in [4u32, 8, 16, 32] {
+            let mut vals = Vec::new();
+            for d in &suite {
+                let a = d.matrix.to_csr();
+                let b = random_b(a.cols, n as usize, 23);
+                let t_seg = Algo::SgapNnzGroup { c, r }.run(&machine, &a, &b, n).unwrap().time_s;
+                // best g configuration of the row kernel at this (c, r)
+                let t_row = gs
+                    .iter()
+                    .filter(|&&g| r <= g && 256 % (g * (n / c)) == 0)
+                    .map(|&g| {
+                        Algo::SgapRowGroup { g, c, r }.run(&machine, &a, &b, n).unwrap().time_s
+                    })
+                    .fold(f64::MAX, f64::min);
+                vals.push(normalized_speedup(t_seg, t_row));
+            }
+            let gm = geomean(&vals);
+            cells.push(format!("{gm:.3}"));
+            if c == 4 {
+                by_r_at_c4.push(gm);
+            }
+        }
+        table.row(&cells);
+    }
+    table.print();
+
+    // shape: normalized speedup >= 1 by construction; check segment
+    // reduction genuinely wins somewhere (not all exactly 1)
+    assert!(
+        by_r_at_c4.iter().any(|&v| v > 1.02),
+        "segment reduction never wins: {by_r_at_c4:?}"
+    );
+    println!("\nshape check passed: segment reduction wins on part of the suite");
+}

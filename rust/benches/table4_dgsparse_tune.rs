@@ -1,0 +1,60 @@
+//! **Table 4** — atomic-parallelism tuning of dgSPARSE RB+PR+RM.
+//!
+//! Paper: tune `<groupSz, blockSz, tileSz, workerDimR>` against the stock
+//! configuration `<32, 256, 32, rows>` for N ∈ {4, 16, 64, 128}. Geomean
+//! speedups 1.6–2.3×, max up to 8.6×, gains largest at small N (the
+//! balance-bound regime).
+//!
+//! Reproduction target: geomean > 1.3 on every (hw, N); max ≥ 2; N = 4
+//! geomean ≥ N = 128 geomean (balance-bound favours tuning).
+
+use sgap::algos::catalog::Algo;
+use sgap::algos::dgsparse::DgConfig;
+use sgap::bench_util::{bench_suite_small as bench_suite, geomean, random_b, speedup, Table};
+use sgap::sim::{HwProfile, Machine};
+use sgap::tuner::{space::dg_candidates_small, tune};
+
+fn main() {
+    let suite = bench_suite();
+    println!("Table 4 — dgSPARSE RB+PR+RM tuning speedup ({} matrices)", suite.len());
+    println!("paper: geomean 1.69-2.31, max 3.39-8.58, N in {{4,16,64,128}}\n");
+
+    let mut table = Table::new(&["Hardware", "geomean", "max", "N"]);
+    for hw in HwProfile::all() {
+        let machine = Machine::new(hw);
+        let mut small_n_gm = 0.0;
+        let mut large_n_gm = 0.0;
+        for n in [128u32, 64, 16, 4] {
+            let cands = dg_candidates_small(n);
+            let stock = DgConfig::stock(n);
+            let mut sp = Vec::new();
+            for d in &suite {
+                let a = d.matrix.to_csr();
+                let b = random_b(a.cols, n as usize, 41);
+                let t_stock = Algo::Dg(stock).run(&machine, &a, &b, n).unwrap().time_s;
+                let t_best = tune(&machine, &cands, &a, &b, n).unwrap().best().1;
+                sp.push(speedup(t_best, t_stock));
+            }
+            let gm = geomean(&sp);
+            let mx = sp.iter().cloned().fold(0.0, f64::max);
+            if n == 4 {
+                small_n_gm = gm;
+            }
+            if n == 128 {
+                large_n_gm = gm;
+            }
+            table.row(&[hw.name.to_string(), format!("{gm:.3}"), format!("{mx:.3}"), n.to_string()]);
+            if gm <= 1.2 {
+                println!("SHAPE WARNING {} N={n}: tuning gains only {gm:.3}", hw.name);
+            }
+        }
+        if small_n_gm < large_n_gm * 0.8 {
+            println!(
+                "SHAPE WARNING {}: N=4 gain {small_n_gm:.3} below N=128 gain {large_n_gm:.3}",
+                hw.name
+            );
+        }
+    }
+    table.print();
+    println!("\ndone: tuning-vs-stock table above (shape warnings, if any, printed inline)");
+}

@@ -1,0 +1,169 @@
+//! Named algorithm points — the vocabulary shared by the tuner, the
+//! benches, and the coordinator's kernel selector.
+
+use anyhow::Result;
+
+use crate::compiler::schedule::{Schedule, SpmmConfig};
+use crate::compiler::spaces::AtomicPoint;
+use crate::sim::Machine;
+use crate::sparse::Csr;
+
+use super::cpu_ref::spmm_flops;
+use super::dgsparse::{self, DgConfig};
+use super::runner::{run_schedule, SpmmRun};
+
+/// An executable SpMM algorithm point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Algo {
+    /// `{<g nnz, c col>, 1}` — original TACO (Listing 3).
+    TacoNnzSerial { g: u32, c: u32 },
+    /// `{<x row, c col>, 1}` — original TACO (Listing 4).
+    TacoRowSerial { x: u32, c: u32 },
+    /// `{<1/g row, c col>, r}` — Sgap grouped parallel reduction.
+    SgapRowGroup { g: u32, c: u32, r: u32 },
+    /// `{<1 nnz, c col>, r}` — Sgap grouped segment reduction.
+    SgapNnzGroup { c: u32, r: u32 },
+    /// dgSPARSE RB+PR+RM library kernel.
+    Dg(DgConfig),
+}
+
+/// Outcome of running an algorithm on a matrix.
+#[derive(Debug, Clone)]
+pub struct AlgoResult {
+    pub run: SpmmRun,
+    pub time_s: f64,
+    pub gflops: f64,
+}
+
+impl Algo {
+    pub fn name(&self) -> String {
+        match self {
+            Algo::TacoNnzSerial { g, c } => format!("taco{{<{g} nnz,{c} col>,1}}"),
+            Algo::TacoRowSerial { x, c } => format!("taco{{<{x} row,{c} col>,1}}"),
+            Algo::SgapRowGroup { g, c, r } => format!("sgap{{<1/{g} row,{c} col>,{r}}}"),
+            Algo::SgapNnzGroup { c, r } => format!("sgap{{<1 nnz,{c} col>,{r}}}"),
+            Algo::Dg(d) => format!(
+                "dg<{},{},{},{}>",
+                d.group_sz, d.block_sz, d.tile_sz, d.worker_dim_r_frac
+            ),
+        }
+    }
+
+    /// The atomic-parallelism point this algorithm occupies (None for the
+    /// dgSPARSE entries, which carry more launch detail than the model).
+    pub fn to_point(&self) -> Option<AtomicPoint> {
+        match *self {
+            Algo::TacoNnzSerial { g, c } => Some(AtomicPoint::new(
+                crate::compiler::spaces::DataKind::Nnz,
+                crate::compiler::spaces::Factor::Times(g),
+                crate::compiler::spaces::Factor::Times(c),
+                1,
+            )),
+            Algo::TacoRowSerial { x, c } => Some(AtomicPoint::new(
+                crate::compiler::spaces::DataKind::Row,
+                if x > 1 {
+                    crate::compiler::spaces::Factor::Times(x)
+                } else {
+                    crate::compiler::spaces::Factor::One
+                },
+                crate::compiler::spaces::Factor::Times(c),
+                1,
+            )),
+            Algo::SgapRowGroup { g, c, r } => Some(AtomicPoint::sgap_row(g, c, r)),
+            Algo::SgapNnzGroup { c, r } => Some(AtomicPoint::sgap_nnz(c, r)),
+            Algo::Dg(_) => None,
+        }
+    }
+
+    /// Build the schedule for compiler-generated families.
+    pub fn schedule(&self, n: u32, p: u32) -> Option<Schedule> {
+        let base = SpmmConfig { n, c: 1, p, g: 32, r: 32, x: 1 };
+        match *self {
+            Algo::TacoNnzSerial { g, c } => {
+                Some(Schedule::taco_nnz_serial(SpmmConfig { c, g, ..base }))
+            }
+            Algo::TacoRowSerial { x, c } => {
+                Some(Schedule::taco_row_serial(SpmmConfig { c, x, ..base }))
+            }
+            Algo::SgapRowGroup { g, c, r } => {
+                Some(Schedule::sgap_row_group(SpmmConfig { c, g, ..base }, r))
+            }
+            Algo::SgapNnzGroup { c, r } => {
+                Some(Schedule::sgap_nnz_group(SpmmConfig { c, ..base }, r))
+            }
+            Algo::Dg(_) => None,
+        }
+    }
+
+    /// Execute on the simulator. `b` must be `a.cols * n` row-major.
+    pub fn run(&self, machine: &Machine, a: &Csr, b: &[f32], n: u32) -> Result<AlgoResult> {
+        let run = match self {
+            Algo::Dg(cfg) => {
+                anyhow::ensure!(cfg.n == n, "DgConfig.n {} != n {}", cfg.n, n);
+                dgsparse::run(machine, cfg, a, b)?
+            }
+            _ => {
+                let sched = self.schedule(n, 256).expect("compiler family");
+                run_schedule(machine, &sched, a, b)?
+            }
+        };
+        let time_s = run.report.time_s;
+        let gflops = run.report.gflops(spmm_flops(a, n as usize));
+        Ok(AlgoResult { run, time_s, gflops })
+    }
+}
+
+/// The default tuning grids (§7.1): `r` over powers of two, `c` dividing N.
+pub fn r_values() -> [u32; 6] {
+    [1, 2, 4, 8, 16, 32]
+}
+
+pub fn c_values(n: u32) -> Vec<u32> {
+    [1u32, 2, 4].into_iter().filter(|c| n % c == 0 && 256 % (n / c) == 0).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::HwProfile;
+    use crate::sparse::{erdos_renyi, SplitMix64};
+
+    #[test]
+    fn names_and_points() {
+        let a = Algo::SgapNnzGroup { c: 4, r: 8 };
+        assert_eq!(a.name(), "sgap{<1 nnz,4 col>,8}");
+        assert!(a.to_point().unwrap().is_legal());
+        let d = Algo::Dg(DgConfig::stock(4));
+        assert!(d.to_point().is_none());
+        assert!(d.name().starts_with("dg<32,256,32,1>"));
+    }
+
+    #[test]
+    fn all_catalog_entries_run_and_agree() {
+        let a = erdos_renyi(128, 128, 1024, 17).to_csr();
+        let n = 4u32;
+        let mut rng = SplitMix64::new(1);
+        let b: Vec<f32> = (0..a.cols * n as usize).map(|_| rng.value()).collect();
+        let m = Machine::new(HwProfile::rtx3090());
+        let algos = [
+            Algo::TacoNnzSerial { g: 16, c: 4 },
+            Algo::TacoRowSerial { x: 1, c: 4 },
+            Algo::SgapRowGroup { g: 32, c: 4, r: 8 },
+            Algo::SgapNnzGroup { c: 4, r: 32 },
+            Algo::Dg(DgConfig::stock(4)),
+        ];
+        let want = crate::algos::cpu_ref::spmm_serial(&a, &b, 4);
+        for alg in algos {
+            let res = alg.run(&m, &a, &b, n).unwrap();
+            let err = crate::algos::cpu_ref::max_rel_err(&res.run.c, &want);
+            assert!(err < 1e-4, "{}: err {err}", alg.name());
+            assert!(res.time_s > 0.0 && res.gflops > 0.0);
+        }
+    }
+
+    #[test]
+    fn c_values_respect_divisibility() {
+        assert_eq!(c_values(4), vec![1, 2, 4]);
+        assert!(c_values(128).contains(&4));
+    }
+}

@@ -1,0 +1,72 @@
+//! Serial CPU SpMM — the golden numeric oracle.
+
+use crate::sparse::Csr;
+
+/// `C = A · B` with `A` CSR `[rows × cols]`, `B` row-major `[cols × n]`.
+/// Returns row-major `C [rows × n]`.
+pub fn spmm_serial(a: &Csr, b: &[f32], n: usize) -> Vec<f32> {
+    assert_eq!(b.len(), a.cols * n, "B shape mismatch");
+    let mut c = vec![0f32; a.rows * n];
+    for i in 0..a.rows {
+        for p in a.indptr[i] as usize..a.indptr[i + 1] as usize {
+            let j = a.indices[p] as usize;
+            let v = a.data[p];
+            let brow = &b[j * n..(j + 1) * n];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for k in 0..n {
+                crow[k] += v * brow[k];
+            }
+        }
+    }
+    c
+}
+
+/// FLOP count of SpMM (2 per nnz per dense column).
+pub fn spmm_flops(a: &Csr, n: usize) -> u64 {
+    2 * a.nnz() as u64 * n as u64
+}
+
+/// Max relative error between two row-major matrices (for tolerance checks).
+pub fn max_rel_err(got: &[f32], want: &[f32]) -> f32 {
+    assert_eq!(got.len(), want.len());
+    got.iter()
+        .zip(want)
+        .map(|(&g, &w)| {
+            let denom = w.abs().max(1.0);
+            (g - w).abs() / denom
+        })
+        .fold(0.0, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+
+    #[test]
+    fn matches_dense_matmul() {
+        let a = Coo::new(3, 4, vec![(0, 1, 2.0), (1, 3, -1.0), (2, 0, 0.5), (2, 3, 4.0)]).to_csr();
+        let b: Vec<f32> = (0..8).map(|i| i as f32).collect(); // 4x2
+        let c = spmm_serial(&a, &b, 2);
+        // dense check
+        let ad = a.to_dense();
+        for i in 0..3 {
+            for k in 0..2 {
+                let want: f32 = (0..4).map(|j| ad[i][j] * b[j * 2 + k]).sum();
+                assert_eq!(c[i * 2 + k], want);
+            }
+        }
+    }
+
+    #[test]
+    fn flops_counts() {
+        let a = Coo::new(2, 2, vec![(0, 0, 1.0), (1, 1, 1.0)]).to_csr();
+        assert_eq!(spmm_flops(&a, 8), 32);
+    }
+
+    #[test]
+    fn rel_err_zero_for_identical() {
+        assert_eq!(max_rel_err(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        assert!(max_rel_err(&[1.0], &[1.1]) > 0.05);
+    }
+}

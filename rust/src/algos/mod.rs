@@ -1,0 +1,21 @@
+//! SpMM algorithm implementations.
+//!
+//! * [`cpu_ref`] — the serial golden oracle every kernel is checked against.
+//! * [`runner`] — binds a CSR matrix + dense B into simulator memory,
+//!   computes the launch grid for each compiler family, launches, and
+//!   extracts C with the cost report.
+//! * [`dgsparse`] — the dgSPARSE-library re-implementation (hand-authored
+//!   LLIR, not schedule-generated) with the full §7.2 parameter space.
+//! * [`catalog`] — named algorithm points used by the tuner and benches.
+
+pub mod catalog;
+pub mod cpu_ref;
+pub mod dgsparse;
+pub mod runner;
+pub mod mttkrp;
+pub mod sddmm;
+
+pub use catalog::{Algo, AlgoResult};
+pub use cpu_ref::{spmm_flops, spmm_serial};
+pub use dgsparse::DgConfig;
+pub use runner::{run_schedule, SpmmRun};

@@ -1,0 +1,157 @@
+//! Launch glue: bind a CSR matrix into simulator memory, pick the grid for
+//! each algorithm family, run, and extract `C` plus the cost report.
+
+use anyhow::Result;
+
+use crate::compiler::llir::Kernel;
+use crate::compiler::lower;
+use crate::compiler::schedule::{Family, Schedule};
+use crate::sim::{DeviceMemory, KernelReport, Machine};
+use crate::sparse::Csr;
+
+/// Result of one simulated SpMM launch.
+#[derive(Debug, Clone)]
+pub struct SpmmRun {
+    /// Row-major `[rows × n]` output (the zero-extension pad row dropped).
+    pub c: Vec<f32>,
+    pub report: KernelReport,
+    pub kernel_name: String,
+}
+
+/// Bind the standard TACO-named buffers. `C_vals` gets one pad row
+/// (zero extension can write to row index `rows`).
+pub fn bind_spmm(mem: &mut DeviceMemory, a: &Csr, b: &[f32], n: usize) {
+    assert_eq!(b.len(), a.cols * n, "B must be cols x n");
+    mem.bind_i32("A2_pos", a.indptr.iter().map(|&x| x as i32).collect());
+    mem.bind_i32("A2_crd", a.indices.iter().map(|&x| x as i32).collect());
+    mem.bind_f32("A_vals", a.data.clone());
+    mem.bind_f32("B_vals", b.to_vec());
+    mem.bind_f32("C_vals", vec![0.0; (a.rows + 1) * n]);
+    mem.bind_scalar("A1_dimension", a.rows as i64);
+    mem.bind_scalar("B2_dimension", n as i64);
+}
+
+/// Grid size + required `i_blockStarts` for a schedule family.
+pub fn launch_shape(schedule: &Schedule, a: &Csr) -> (u32, Option<Vec<i32>>) {
+    let cfg = schedule.config;
+    let kchunks = cfg.kchunks();
+    match schedule.classify().expect("classified") {
+        Family::NnzGroup => {
+            let nnzb = (cfg.p / kchunks) as usize;
+            let grid = a.nnz().div_ceil(nnzb).max(1) as u32;
+            let starts = a.block_starts(nnzb).iter().map(|&x| x as i32).collect();
+            (grid, Some(starts))
+        }
+        Family::NnzSerial => {
+            let nnzb = (cfg.g * cfg.p / kchunks) as usize;
+            let grid = a.nnz().div_ceil(nnzb).max(1) as u32;
+            let starts = a.block_starts(nnzb).iter().map(|&x| x as i32).collect();
+            (grid, Some(starts))
+        }
+        Family::RowSerial => {
+            let rpb = (cfg.x * cfg.p / kchunks) as usize;
+            (a.rows.div_ceil(rpb).max(1) as u32, None)
+        }
+        Family::RowGroup => {
+            let rpb = (cfg.p / (cfg.g * kchunks)) as usize;
+            (a.rows.div_ceil(rpb.max(1)).max(1) as u32, None)
+        }
+    }
+}
+
+/// Lower the schedule, launch it on `machine`, return C + report.
+pub fn run_schedule(machine: &Machine, schedule: &Schedule, a: &Csr, b: &[f32]) -> Result<SpmmRun> {
+    let n = schedule.config.n as usize;
+    let kernel = lower(schedule)?;
+    run_kernel(machine, &kernel, schedule, a, b, n)
+}
+
+/// Launch an already-lowered kernel (used by the tuner to cache lowering).
+pub fn run_kernel(
+    machine: &Machine,
+    kernel: &Kernel,
+    schedule: &Schedule,
+    a: &Csr,
+    b: &[f32],
+    n: usize,
+) -> Result<SpmmRun> {
+    let (grid, starts) = launch_shape(schedule, a);
+    let mut mem = DeviceMemory::new();
+    bind_spmm(&mut mem, a, b, n);
+    if let Some(s) = starts {
+        mem.bind_i32("i_blockStarts", s);
+    }
+    let report = machine.launch(kernel, grid, &mut mem)?;
+    let mut c = mem.take_f32("C_vals").expect("C_vals");
+    c.truncate(a.rows * n); // drop the zero-extension pad row
+    Ok(SpmmRun { c, report, kernel_name: kernel.name.clone() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::cpu_ref::{max_rel_err, spmm_serial};
+    use crate::compiler::schedule::SpmmConfig;
+    use crate::sim::HwProfile;
+    use crate::sparse::{erdos_renyi, power_law, SplitMix64};
+
+    fn check(schedule: Schedule, a: &Csr) {
+        let n = schedule.config.n as usize;
+        let mut rng = SplitMix64::new(99);
+        let b: Vec<f32> = (0..a.cols * n).map(|_| rng.value()).collect();
+        let want = spmm_serial(a, &b, n);
+        let m = Machine::new(HwProfile::rtx3090());
+        let run = run_schedule(&m, &schedule, a, &b).unwrap();
+        let err = max_rel_err(&run.c, &want);
+        assert!(err < 1e-4, "{}: max rel err {err}", run.kernel_name);
+    }
+
+    fn cfg(n: u32, c: u32) -> SpmmConfig {
+        SpmmConfig { n, c, p: 256, g: 32, r: 32, x: 1 }
+    }
+
+    #[test]
+    fn all_families_match_oracle_on_er() {
+        let a = erdos_renyi(200, 150, 1500, 42).to_csr();
+        check(Schedule::taco_nnz_serial(cfg(4, 4)), &a);
+        check(Schedule::taco_row_serial(cfg(4, 4)), &a);
+        check(Schedule::sgap_row_group(cfg(4, 4), 8), &a);
+        check(Schedule::sgap_nnz_group(cfg(4, 4), 32), &a);
+    }
+
+    #[test]
+    fn families_match_oracle_on_skewed() {
+        let a = power_law(256, 256, 4000, 1.8, 7).to_csr();
+        for r in [2u32, 8, 32] {
+            check(Schedule::sgap_nnz_group(cfg(4, 4), r), &a);
+            check(Schedule::sgap_row_group(cfg(4, 4), r.min(32)), &a);
+        }
+    }
+
+    #[test]
+    fn wider_n_with_coarsening() {
+        let a = erdos_renyi(128, 128, 1000, 3).to_csr();
+        check(Schedule::taco_row_serial(cfg(16, 4)), &a);
+        check(Schedule::sgap_nnz_group(cfg(16, 4), 16), &a);
+        check(Schedule::sgap_row_group(cfg(16, 4), 4), &a);
+        check(Schedule::taco_nnz_serial(cfg(16, 4)), &a);
+    }
+
+    #[test]
+    fn empty_rows_handled() {
+        // hub matrix: row 0 has many nnz, most rows empty
+        let mut triplets: Vec<(u32, u32, f32)> = (0..64u32).map(|c| (0u32, c, 1.0f32)).collect();
+        triplets.push((63, 0, 2.0));
+        let a = crate::sparse::Coo::new(64, 64, triplets).to_csr();
+        check(Schedule::sgap_nnz_group(cfg(4, 4), 32), &a);
+        check(Schedule::taco_nnz_serial(cfg(4, 4)), &a);
+        check(Schedule::sgap_row_group(cfg(4, 4), 32), &a);
+    }
+
+    #[test]
+    fn tiny_matrix_single_block() {
+        let a = erdos_renyi(8, 8, 12, 5).to_csr();
+        check(Schedule::sgap_nnz_group(cfg(4, 4), 8), &a);
+        check(Schedule::taco_row_serial(cfg(4, 4)), &a);
+    }
+}

@@ -1,0 +1,275 @@
+//! SDDMM with segment group — the §4.3 generalization claim.
+//!
+//! SDDMM (Eq. 2c): `Y(i,k) = A(i,k) · Σ_j X1(i,j) · X2(j,k)` with `Y`
+//! sharing `A`'s sparsity. Its reduction (over the dense `j`) "behaves the
+//! same" as SpMM's (§2.1, Fig. 4/5) — so the *same* `atomicAddGroup`
+//! macro instruction and the same GroupSize tuning apply. This module
+//! builds the `{<1/g nnz, ·>, r}`-style SDDMM kernel as LLIR and runs it
+//! on the same simulator, demonstrating that segment group is not
+//! SpMM-specific.
+//!
+//! Layout: `g` lanes cooperate on one non-zero; each lane strides the
+//! dense `j` dimension by `g`; an r-wide grouped tree reduction combines
+//! the partial dot products; lane 0 of each r-group writes back
+//! atomically (one output slot per nnz, group-uniform index).
+
+use anyhow::Result;
+
+use crate::compiler::llir::{Kernel, Param, Stmt, Val};
+use crate::sim::{DeviceMemory, Machine};
+use crate::sparse::Csr;
+
+use super::runner::SpmmRun;
+
+/// Serial oracle: `y[pos] = a.data[pos] * dot(X1[i,:], X2[:,k])`.
+///
+/// `x1` is row-major `[a.rows × j_dim]`, `x2` row-major `[j_dim × a.cols]`
+/// (so `k` indexes `x2`'s columns, matching `A`'s column space).
+pub fn sddmm_serial(a: &Csr, x1: &[f32], x2: &[f32], j_dim: usize) -> Vec<f32> {
+    assert_eq!(x1.len(), a.rows * j_dim);
+    assert_eq!(x2.len(), j_dim * a.cols);
+    let mut y = vec![0f32; a.nnz()];
+    for i in 0..a.rows {
+        for p in a.indptr[i] as usize..a.indptr[i + 1] as usize {
+            let k = a.indices[p] as usize;
+            let mut dot = 0f32;
+            for j in 0..j_dim {
+                dot += x1[i * j_dim + j] * x2[j * a.cols + k];
+            }
+            y[p] = a.data[p] * dot;
+        }
+    }
+    y
+}
+
+/// FLOPs: 2·nnz·J for the dots + nnz scaling multiplies.
+pub fn sddmm_flops(a: &Csr, j_dim: usize) -> u64 {
+    (2 * j_dim as u64 + 1) * a.nnz() as u64
+}
+
+/// Tunable SDDMM configuration: `g` lanes per nnz, reduction width `r`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SddmmConfig {
+    pub j_dim: u32,
+    /// Lanes cooperating per non-zero (power of 2, ≤ 32).
+    pub g: u32,
+    /// Reduction parallelism (GroupSize), `r <= g`.
+    pub r: u32,
+    /// Threads per block.
+    pub p: u32,
+}
+
+impl SddmmConfig {
+    pub fn new(j_dim: u32, g: u32, r: u32) -> Self {
+        SddmmConfig { j_dim, g, r, p: 256 }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.g.is_power_of_two() && self.g <= 32, "g must be a power of 2 <= 32");
+        anyhow::ensure!(self.r.is_power_of_two() && self.r <= self.g, "r must be a power of 2 <= g");
+        anyhow::ensure!(self.p % self.g == 0, "p must be divisible by g");
+        Ok(())
+    }
+
+    /// Non-zeros per block.
+    pub fn npb(&self) -> u32 {
+        self.p / self.g
+    }
+}
+
+/// Build the grouped SDDMM kernel.
+///
+/// Buffers: `A2_pos/A2_crd/A_vals` (CSR), `A_rowidx` (COO row per nnz),
+/// `X1_vals`, `X2_vals`, `Y_vals` (one slot per nnz); scalars
+/// `A1_dimension` (rows), `A2_dimension` (cols), `J_dimension`, `A_nnz`.
+pub fn build_kernel(cfg: &SddmmConfig) -> Kernel {
+    let i = Val::ConstI;
+    let g = cfg.g as i64;
+    let npb = cfg.npb() as i64;
+    let body = vec![
+        Stmt::Comment(format!("sddmm {{<1/{g} nnz>, {}}} — grouped dot-product reduction", cfg.r)),
+        Stmt::Decl { var: "lane".into(), init: Val::rem(Val::ThreadIdx, i(g)), float: false },
+        Stmt::Decl { var: "e".into(), init: Val::div(Val::ThreadIdx, i(g)), float: false },
+        Stmt::Decl {
+            var: "pos".into(),
+            init: Val::add(Val::mul(Val::BlockIdx, i(npb)), Val::var("e")),
+            float: false,
+        },
+        Stmt::If {
+            cond: Val::lt(Val::var("pos"), Val::param("A_nnz")),
+            then: vec![
+                Stmt::Decl { var: "i".into(), init: Val::load("A_rowidx", Val::var("pos")), float: false },
+                Stmt::Decl { var: "k".into(), init: Val::load("A2_crd", Val::var("pos")), float: false },
+                Stmt::Decl { var: "val".into(), init: Val::ConstF(0.0), float: true },
+                Stmt::Decl { var: "j".into(), init: Val::var("lane"), float: false },
+                Stmt::While {
+                    cond: Val::lt(Val::var("j"), Val::param("J_dimension")),
+                    body: vec![
+                        Stmt::Assign {
+                            var: "val".into(),
+                            val: Val::add(
+                                Val::var("val"),
+                                Val::mul(
+                                    Val::load(
+                                        "X1_vals",
+                                        Val::add(
+                                            Val::mul(Val::var("i"), Val::param("J_dimension")),
+                                            Val::var("j"),
+                                        ),
+                                    ),
+                                    Val::load(
+                                        "X2_vals",
+                                        Val::add(
+                                            Val::mul(Val::var("j"), Val::param("A2_dimension")),
+                                            Val::var("k"),
+                                        ),
+                                    ),
+                                ),
+                            ),
+                        },
+                        Stmt::Assign { var: "j".into(), val: Val::add(Val::var("j"), i(g)) },
+                    ],
+                },
+                // scale the partial by A's value up front (distributes over +)
+                Stmt::Assign {
+                    var: "val".into(),
+                    val: Val::mul(Val::var("val"), Val::load("A_vals", Val::var("pos"))),
+                },
+                // the same macro instruction as SpMM's row kernel (§4.3):
+                Stmt::AtomicAddGroup {
+                    array: "Y_vals".into(),
+                    idx: Val::var("pos"),
+                    val: Val::var("val"),
+                    group: cfg.r,
+                },
+            ],
+            els: vec![],
+        },
+    ];
+    Kernel {
+        name: format!("sddmm_g{}_r{}", cfg.g, cfg.r),
+        params: vec![
+            Param::i32_array("A2_pos"),
+            Param::i32_array("A2_crd"),
+            Param::i32_array("A_rowidx"),
+            Param::f32_array("A_vals"),
+            Param::f32_array("X1_vals"),
+            Param::f32_array("X2_vals"),
+            Param::f32_array("Y_vals"),
+            Param::i32_scalar("A1_dimension"),
+            Param::i32_scalar("A2_dimension"),
+            Param::i32_scalar("J_dimension"),
+            Param::i32_scalar("A_nnz"),
+        ],
+        body,
+        block_dim: cfg.p,
+    }
+}
+
+/// Run SDDMM on the simulator; returns per-nnz outputs + the report.
+pub fn run(
+    machine: &Machine,
+    cfg: &SddmmConfig,
+    a: &Csr,
+    x1: &[f32],
+    x2: &[f32],
+) -> Result<SpmmRun> {
+    cfg.validate()?;
+    assert_eq!(x1.len(), a.rows * cfg.j_dim as usize);
+    assert_eq!(x2.len(), cfg.j_dim as usize * a.cols);
+    let kernel = build_kernel(cfg);
+    let grid = (a.nnz() as u32).div_ceil(cfg.npb()).max(1);
+    let rowidx: Vec<i32> = a.to_coo().row_idx.iter().map(|&x| x as i32).collect();
+    let mut mem = DeviceMemory::new();
+    mem.bind_i32("A2_pos", a.indptr.iter().map(|&x| x as i32).collect());
+    mem.bind_i32("A2_crd", a.indices.iter().map(|&x| x as i32).collect());
+    mem.bind_i32("A_rowidx", rowidx);
+    mem.bind_f32("A_vals", a.data.clone());
+    mem.bind_f32("X1_vals", x1.to_vec());
+    mem.bind_f32("X2_vals", x2.to_vec());
+    mem.bind_f32("Y_vals", vec![0.0; a.nnz().max(1)]);
+    mem.bind_scalar("A1_dimension", a.rows as i64);
+    mem.bind_scalar("A2_dimension", a.cols as i64);
+    mem.bind_scalar("J_dimension", cfg.j_dim as i64);
+    mem.bind_scalar("A_nnz", a.nnz() as i64);
+    let report = machine.launch(&kernel, grid, &mut mem)?;
+    let c = mem.take_f32("Y_vals").expect("Y_vals");
+    Ok(SpmmRun { c, report, kernel_name: kernel.name })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::cpu_ref::max_rel_err;
+    use crate::sim::HwProfile;
+    use crate::sparse::{erdos_renyi, power_law, SplitMix64};
+
+    fn dense(len: usize, seed: u64) -> Vec<f32> {
+        let mut rng = SplitMix64::new(seed);
+        (0..len).map(|_| rng.value()).collect()
+    }
+
+    fn check(cfg: SddmmConfig, a: &Csr) -> SpmmRun {
+        let j = cfg.j_dim as usize;
+        let x1 = dense(a.rows * j, 1);
+        let x2 = dense(j * a.cols, 2);
+        let want = sddmm_serial(a, &x1, &x2, j);
+        let m = Machine::new(HwProfile::rtx3090());
+        let run = run(&m, &cfg, a, &x1, &x2).unwrap();
+        let err = max_rel_err(&run.c, &want);
+        assert!(err < 5e-4, "{}: err {err}", run.kernel_name);
+        run
+    }
+
+    #[test]
+    fn matches_oracle_group_sweep() {
+        let a = erdos_renyi(100, 80, 900, 11).to_csr();
+        for (g, r) in [(32u32, 32u32), (32, 8), (16, 16), (8, 4), (4, 4), (2, 2)] {
+            check(SddmmConfig::new(64, g, r), &a);
+        }
+    }
+
+    #[test]
+    fn matches_oracle_on_skewed_pattern() {
+        let a = power_law(128, 128, 1800, 1.9, 13).to_csr();
+        check(SddmmConfig::new(32, 16, 8), &a);
+    }
+
+    #[test]
+    fn j_not_multiple_of_g() {
+        // J = 50 with g = 16: tail lanes idle in the last stride
+        let a = erdos_renyi(64, 64, 400, 5).to_csr();
+        check(SddmmConfig::new(50, 16, 16), &a);
+    }
+
+    #[test]
+    fn small_r_beats_r32_for_small_j() {
+        // J = 8 with g = 32: 24 lanes carry nothing — exactly Fig. 1(b);
+        // a narrower reduction group wins
+        let a = erdos_renyi(256, 256, 4000, 21).to_csr();
+        let wide = check(SddmmConfig::new(8, 32, 32), &a);
+        let narrow = check(SddmmConfig::new(8, 32, 8), &a);
+        assert!(
+            narrow.report.time_s < wide.report.time_s,
+            "narrow {} !< wide {}",
+            narrow.report.time_s,
+            wide.report.time_s
+        );
+    }
+
+    #[test]
+    fn validation() {
+        assert!(SddmmConfig::new(64, 12, 4).validate().is_err());
+        assert!(SddmmConfig::new(64, 8, 16).validate().is_err());
+        assert!(SddmmConfig::new(64, 8, 8).validate().is_ok());
+    }
+
+    #[test]
+    fn empty_matrix_ok() {
+        let a = crate::sparse::Coo::new(8, 8, vec![]).to_csr();
+        let m = Machine::new(HwProfile::v100());
+        let cfg = SddmmConfig::new(16, 8, 8);
+        let run = run(&m, &cfg, &a, &dense(8 * 16, 3), &dense(16 * 8, 4)).unwrap();
+        assert!(run.c.iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,125 @@
+//! Shared bench harness (criterion is not in the offline dependency set;
+//! the benches are `harness = false` binaries that print paper-style
+//! tables and assert the headline *shape* holds).
+
+use crate::sparse::{dataset, DatasetSpec, SplitMix64};
+
+/// Geometric mean (the paper's aggregation for speedups, Table 4 note 1).
+pub fn geomean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    let s: f64 = xs.iter().map(|x| x.ln()).sum();
+    (s / xs.len() as f64).exp()
+}
+
+/// Normalized speedup of A over B (§7.1): if A beats B count the speedup,
+/// otherwise assume the user picks the better algorithm and count 1.0.
+pub fn normalized_speedup(t_a: f64, t_b: f64) -> f64 {
+    (t_b / t_a).max(1.0)
+}
+
+/// Raw speedup of A over B.
+pub fn speedup(t_a: f64, t_b: f64) -> f64 {
+    t_b / t_a
+}
+
+/// Random dense B, deterministic per seed.
+pub fn random_b(cols: usize, n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = SplitMix64::new(seed);
+    (0..cols * n).map(|_| rng.value()).collect()
+}
+
+/// The bench subset of the evaluation suite: one representative per
+/// family/size point (12 matrices) so every table finishes in minutes.
+/// `examples/fig11_sweep.rs` runs the full suite.
+pub fn bench_suite() -> Vec<DatasetSpec> {
+    let keep = [
+        "er_1024_d1e-3",
+        "er_1024_d2e-2",
+        "er_2048_d2e-3",
+        "er_4096_d1e-4",
+        "pl_1024_a1.8",
+        "pl_2048_a1.6",
+        "pl_4096_a2",
+        "band_1024_w5",
+        "band_2048_w9",
+        "block_2048_b16",
+        "corner_short_rows_2048",
+        "corner_hub_1024",
+    ];
+    let out: Vec<DatasetSpec> =
+        dataset::suite().into_iter().filter(|d| keep.contains(&d.name.as_str())).collect();
+    assert!(out.len() >= 10, "bench suite unexpectedly small: {}", out.len());
+    out
+}
+
+/// The dgSPARSE-sweep subset (tables 4/5): the bench suite minus the
+/// 4096-row matrices. Those tables sweep N up to 128 (32× the N=4 work)
+/// over ~20 configs × 3 profiles on the CI box's single core; the smaller
+/// matrices keep the sweep under ten minutes while preserving the
+/// density/skew span.
+pub fn bench_suite_small() -> Vec<DatasetSpec> {
+    bench_suite().into_iter().filter(|d| d.matrix.rows < 4096).collect()
+}
+
+/// Fixed-width table printer.
+pub struct Table {
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let parts: Vec<String> =
+                cells.iter().enumerate().map(|(i, c)| format!("{:<w$}", c, w = widths[i])).collect();
+            println!("| {} |", parts.join(" | "));
+        };
+        line(&self.headers);
+        println!(
+            "|{}|",
+            widths.iter().map(|w| "-".repeat(w + 2)).collect::<Vec<_>>().join("|")
+        );
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_of_constant() {
+        assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn normalized_clamps_at_one() {
+        assert_eq!(normalized_speedup(2.0, 1.0), 1.0); // A slower: count 1
+        assert_eq!(normalized_speedup(1.0, 2.0), 2.0);
+    }
+
+    #[test]
+    fn bench_suite_spans_families() {
+        let s = bench_suite();
+        let fams: std::collections::HashSet<&str> = s.iter().map(|d| d.family).collect();
+        assert!(fams.len() >= 4, "families: {fams:?}");
+    }
+}

@@ -1,0 +1,283 @@
+//! Concrete index notation (CIN) — the middle-end language (§2.4.1).
+//!
+//! A CIN tree describes loop structure, parallel bindings, and workspaces
+//! for a tensor algebra statement. The segment-group extension lives here:
+//! [`ParallelUnit::GPUGroup`] carries a [`GroupSpec`] with a *group size*
+//! (reduction parallelism `r`) and a *reduction strategy* — the two
+//! degrees of freedom the paper adds over stock TACO (§5.1).
+
+use std::fmt;
+
+use super::expr::{Access, Expr, IndexVar};
+
+/// Where a forall's iterations run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParallelUnit {
+    /// Serial CPU loop.
+    Serial,
+    /// CUDA blockIdx.x.
+    GPUBlock,
+    /// CUDA warp index — after the Sgap change this is **tiling-only**
+    /// semantics: outer sub-tile of threadIdx.x, no synchronization implied.
+    GPUWarp,
+    /// CUDA threadIdx.x (inner tile).
+    GPUThread,
+    /// The new unit: a synchronizing thread group (§5.1).
+    GPUGroup,
+}
+
+impl fmt::Display for ParallelUnit {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            ParallelUnit::Serial => "Serial",
+            ParallelUnit::GPUBlock => "GPUBlock",
+            ParallelUnit::GPUWarp => "GPUWarp",
+            ParallelUnit::GPUThread => "GPUThread",
+            ParallelUnit::GPUGroup => "GPUGroup",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// TACO's data-race declaration for parallel reductions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OutputRaceStrategy {
+    NoRaces,
+    IgnoreRaces,
+    Atomics,
+}
+
+impl fmt::Display for OutputRaceStrategy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            OutputRaceStrategy::NoRaces => "NoRaces",
+            OutputRaceStrategy::IgnoreRaces => "IgnoreRaces",
+            OutputRaceStrategy::Atomics => "Atomics",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// How a GPUGroup synchronizes its lanes (§4.2, §5.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReductionStrategy {
+    /// Tree reduction; exactly one writeback thread per group
+    /// (`atomicAddGroup<T,G>`).
+    ParallelReduction,
+    /// Segmented reduction; writeback threads decided at runtime by
+    /// segment boundaries (`segReduceGroup<T,G>`).
+    SegmentReduction,
+}
+
+impl fmt::Display for ReductionStrategy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            ReductionStrategy::ParallelReduction => "ParallelReduction",
+            ReductionStrategy::SegmentReduction => "Segment",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// The attributes of a GPUGroup binding: reduction parallelism (`GroupSize`,
+/// the paper's `r`) and the reduction strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GroupSpec {
+    pub size: u32,
+    pub strategy: ReductionStrategy,
+}
+
+impl GroupSpec {
+    pub fn new(size: u32, strategy: ReductionStrategy) -> Self {
+        assert!(size.is_power_of_two() && size <= 32, "group size must be a power of 2 ≤ 32");
+        GroupSpec { size, strategy }
+    }
+}
+
+/// A CIN statement tree.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Cin {
+    /// `forall(var, body, unit, race[, group])`.
+    Forall {
+        var: IndexVar,
+        body: Box<Cin>,
+        unit: ParallelUnit,
+        race: OutputRaceStrategy,
+        /// Present iff `unit == GPUGroup`.
+        group: Option<GroupSpec>,
+    },
+    /// `where(consumer, producer)` — workspace introduction (§5.3's
+    /// *scalar workspace*; the relaxed rule allows the producer's
+    /// assignment in a different basic block than its declaration).
+    Where { consumer: Box<Cin>, producer: Box<Cin> },
+    /// `lhs op= rhs`. `reduce == true` renders `+=`.
+    Assign { lhs: Access, reduce: bool, rhs: Expr },
+}
+
+impl Cin {
+    pub fn forall(var: &str, unit: ParallelUnit, race: OutputRaceStrategy, body: Cin) -> Cin {
+        Cin::Forall { var: IndexVar::new(var), body: Box::new(body), unit, race, group: None }
+    }
+
+    pub fn forall_group(var: &str, spec: GroupSpec, race: OutputRaceStrategy, body: Cin) -> Cin {
+        Cin::Forall {
+            var: IndexVar::new(var),
+            body: Box::new(body),
+            unit: ParallelUnit::GPUGroup,
+            race,
+            group: Some(spec),
+        }
+    }
+
+    /// Depth-first search for the forall binding `var`.
+    pub fn find_forall(&self, var: &IndexVar) -> Option<&Cin> {
+        match self {
+            Cin::Forall { var: v, body, .. } => {
+                if v == var {
+                    Some(self)
+                } else {
+                    body.find_forall(var)
+                }
+            }
+            Cin::Where { consumer, producer } => {
+                consumer.find_forall(var).or_else(|| producer.find_forall(var))
+            }
+            Cin::Assign { .. } => None,
+        }
+    }
+
+    /// All forall vars in tree order (outermost first).
+    pub fn loop_order(&self) -> Vec<IndexVar> {
+        let mut out = Vec::new();
+        self.collect_loops(&mut out);
+        out
+    }
+
+    fn collect_loops(&self, out: &mut Vec<IndexVar>) {
+        match self {
+            Cin::Forall { var, body, .. } => {
+                out.push(var.clone());
+                body.collect_loops(out);
+            }
+            Cin::Where { consumer, producer } => {
+                consumer.collect_loops(out);
+                producer.collect_loops(out);
+            }
+            Cin::Assign { .. } => {}
+        }
+    }
+
+    /// The GPUGroup spec, if any forall in the tree carries one.
+    pub fn group_spec(&self) -> Option<GroupSpec> {
+        match self {
+            Cin::Forall { unit, group, body, .. } => {
+                if *unit == ParallelUnit::GPUGroup {
+                    *group
+                } else {
+                    body.group_spec()
+                }
+            }
+            Cin::Where { consumer, producer } => {
+                consumer.group_spec().or_else(|| producer.group_spec())
+            }
+            Cin::Assign { .. } => None,
+        }
+    }
+}
+
+impl fmt::Display for Cin {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Cin::Forall { var, body, unit, race, group } => match group {
+                Some(g) => write!(
+                    f,
+                    "forall({var}, {body}, {unit}[{},{}], {race})",
+                    g.size, g.strategy
+                ),
+                None => write!(f, "forall({var}, {body}, {unit}, {race})"),
+            },
+            Cin::Where { consumer, producer } => write!(f, "where({consumer}, {producer})"),
+            Cin::Assign { lhs, reduce, rhs } => {
+                write!(f, "{lhs}{}{rhs}", if *reduce { "+=" } else { "=" })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::expr::Access;
+
+    fn assign() -> Cin {
+        Cin::Assign {
+            lhs: Access::new("C", &["i", "k"]),
+            reduce: true,
+            rhs: Expr::Mul(
+                Box::new(Expr::Access(Access::new("A", &["i", "j"]))),
+                Box::new(Expr::Access(Access::new("B", &["j", "k"]))),
+            ),
+        }
+    }
+
+    #[test]
+    fn display_matches_listing_style() {
+        let cin = Cin::forall(
+            "block",
+            ParallelUnit::GPUBlock,
+            OutputRaceStrategy::IgnoreRaces,
+            Cin::forall("fpos1", ParallelUnit::GPUThread, OutputRaceStrategy::Atomics, assign()),
+        );
+        let s = cin.to_string();
+        assert!(s.starts_with("forall(block,"));
+        assert!(s.contains("GPUThread, Atomics"));
+        assert!(s.contains("C(i,k)+=A(i,j)*B(j,k)"));
+    }
+
+    #[test]
+    fn group_spec_found_in_nest() {
+        let spec = GroupSpec::new(8, ReductionStrategy::SegmentReduction);
+        let cin = Cin::forall(
+            "block",
+            ParallelUnit::GPUBlock,
+            OutputRaceStrategy::NoRaces,
+            Cin::forall_group("jpos1", spec, OutputRaceStrategy::Atomics, assign()),
+        );
+        assert_eq!(cin.group_spec(), Some(spec));
+        assert_eq!(
+            cin.loop_order(),
+            vec![IndexVar::new("block"), IndexVar::new("jpos1")]
+        );
+    }
+
+    #[test]
+    fn find_forall_descends() {
+        let cin = Cin::forall(
+            "a",
+            ParallelUnit::Serial,
+            OutputRaceStrategy::NoRaces,
+            Cin::forall("b", ParallelUnit::Serial, OutputRaceStrategy::NoRaces, assign()),
+        );
+        assert!(cin.find_forall(&IndexVar::new("b")).is_some());
+        assert!(cin.find_forall(&IndexVar::new("zz")).is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "power of 2")]
+    fn group_size_must_be_pow2() {
+        GroupSpec::new(6, ReductionStrategy::ParallelReduction);
+    }
+
+    #[test]
+    fn where_displays() {
+        let w = Cin::Where {
+            consumer: Box::new(assign()),
+            producer: Box::new(Cin::Assign {
+                lhs: Access::new("tmp", &[]),
+                reduce: false,
+                rhs: Expr::Access(Access::new("A", &["i", "j"])),
+            }),
+        };
+        assert!(w.to_string().starts_with("where("));
+    }
+}

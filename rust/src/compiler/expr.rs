@@ -1,0 +1,271 @@
+//! Tensor algebra expressions — the compiler front-end input (§2.1).
+//!
+//! An expression in Einstein notation, e.g. SpMM `C(i,k) = A(i,j) * B(j,k)`,
+//! plus per-tensor level formats. The reduction analysis here is what makes
+//! atomic parallelism general: the *reduction dimensions* (index vars on the
+//! right not appearing on the left) are the objects segment group optimizes,
+//! for any sparse-dense hybrid algebra (SpMM, SDDMM, MTTKRP, TTM).
+
+use std::fmt;
+
+/// A named index variable (`i`, `j`, `jpos1`, …).
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct IndexVar(pub String);
+
+impl IndexVar {
+    pub fn new(s: &str) -> Self {
+        IndexVar(s.to_string())
+    }
+}
+
+impl fmt::Display for IndexVar {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+/// Per-dimension storage format (TACO level formats).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LevelFormat {
+    Dense,
+    Compressed,
+}
+
+/// A tensor variable with its per-level formats.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorVar {
+    pub name: String,
+    pub formats: Vec<LevelFormat>,
+}
+
+impl TensorVar {
+    pub fn dense(name: &str, order: usize) -> Self {
+        TensorVar { name: name.into(), formats: vec![LevelFormat::Dense; order] }
+    }
+
+    /// CSR-like: first level dense, rest compressed.
+    pub fn csr(name: &str, order: usize) -> Self {
+        let mut formats = vec![LevelFormat::Compressed; order];
+        formats[0] = LevelFormat::Dense;
+        TensorVar { name: name.into(), formats }
+    }
+
+    pub fn order(&self) -> usize {
+        self.formats.len()
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        self.formats.contains(&LevelFormat::Compressed)
+    }
+}
+
+/// A tensor access like `A(i,j)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Access {
+    pub tensor: String,
+    pub indices: Vec<IndexVar>,
+}
+
+impl Access {
+    pub fn new(tensor: &str, indices: &[&str]) -> Self {
+        Access { tensor: tensor.into(), indices: indices.iter().map(|s| IndexVar::new(s)).collect() }
+    }
+}
+
+impl fmt::Display for Access {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.indices.is_empty() {
+            // scalar workspace access, e.g. `tmp`
+            return write!(f, "{}", self.tensor);
+        }
+        let idx: Vec<String> = self.indices.iter().map(|i| i.to_string()).collect();
+        write!(f, "{}({})", self.tensor, idx.join(","))
+    }
+}
+
+/// Right-hand-side expression tree.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    Access(Access),
+    Mul(Box<Expr>, Box<Expr>),
+    Add(Box<Expr>, Box<Expr>),
+}
+
+impl Expr {
+    pub fn accesses(&self) -> Vec<&Access> {
+        match self {
+            Expr::Access(a) => vec![a],
+            Expr::Mul(l, r) | Expr::Add(l, r) => {
+                let mut v = l.accesses();
+                v.extend(r.accesses());
+                v
+            }
+        }
+    }
+
+    pub fn index_vars(&self) -> Vec<IndexVar> {
+        let mut vars: Vec<IndexVar> = Vec::new();
+        for a in self.accesses() {
+            for i in &a.indices {
+                if !vars.contains(i) {
+                    vars.push(i.clone());
+                }
+            }
+        }
+        vars
+    }
+}
+
+impl fmt::Display for Expr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Expr::Access(a) => write!(f, "{a}"),
+            Expr::Mul(l, r) => write!(f, "{l}*{r}"),
+            Expr::Add(l, r) => write!(f, "{l}+{r}"),
+        }
+    }
+}
+
+/// A full tensor algebra statement `lhs = rhs` with tensor declarations.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorAlgebra {
+    pub lhs: Access,
+    pub rhs: Expr,
+    pub tensors: Vec<TensorVar>,
+}
+
+impl TensorAlgebra {
+    /// Reduction dimensions: index vars of the rhs absent from the lhs —
+    /// the `⊕` dimensions of Eq. 3, and segment group's target.
+    pub fn reduction_dims(&self) -> Vec<IndexVar> {
+        self.rhs.index_vars().into_iter().filter(|v| !self.lhs.indices.contains(v)).collect()
+    }
+
+    pub fn tensor(&self, name: &str) -> Option<&TensorVar> {
+        self.tensors.iter().find(|t| t.name == name)
+    }
+
+    /// Sparse-dense hybrid check: exactly one sparse operand, rest dense
+    /// (Eq. 1's definition).
+    pub fn is_sparse_dense_hybrid(&self) -> bool {
+        let rhs_tensors: Vec<&str> =
+            self.rhs.accesses().iter().map(|a| a.tensor.as_str()).collect();
+        let sparse = rhs_tensors
+            .iter()
+            .filter(|n| self.tensor(n).map(|t| t.is_sparse()).unwrap_or(false))
+            .count();
+        sparse == 1
+    }
+
+    // ---- the four algebras of Eq. 2 -------------------------------------
+
+    /// SpMM (Eq. 2d): `C(i,k) = A(i,j) * B(j,k)`, A CSR, B/C dense row-major.
+    pub fn spmm() -> Self {
+        TensorAlgebra {
+            lhs: Access::new("C", &["i", "k"]),
+            rhs: Expr::Mul(
+                Box::new(Expr::Access(Access::new("A", &["i", "j"]))),
+                Box::new(Expr::Access(Access::new("B", &["j", "k"]))),
+            ),
+            tensors: vec![TensorVar::csr("A", 2), TensorVar::dense("B", 2), TensorVar::dense("C", 2)],
+        }
+    }
+
+    /// SDDMM (Eq. 2c): `Y(i,k) = A(i,k) * X1(i,j) * X2(j,k)`.
+    pub fn sddmm() -> Self {
+        TensorAlgebra {
+            lhs: Access::new("Y", &["i", "k"]),
+            rhs: Expr::Mul(
+                Box::new(Expr::Mul(
+                    Box::new(Expr::Access(Access::new("A", &["i", "k"]))),
+                    Box::new(Expr::Access(Access::new("X1", &["i", "j"]))),
+                )),
+                Box::new(Expr::Access(Access::new("X2", &["j", "k"]))),
+            ),
+            tensors: vec![
+                TensorVar::csr("A", 2),
+                TensorVar::dense("X1", 2),
+                TensorVar::dense("X2", 2),
+                TensorVar::csr("Y", 2),
+            ],
+        }
+    }
+
+    /// MTTKRP (Eq. 2a): `Y(i,j) = A(i,k,l) * X1(k,j) * X2(l,j)`.
+    pub fn mttkrp() -> Self {
+        TensorAlgebra {
+            lhs: Access::new("Y", &["i", "j"]),
+            rhs: Expr::Mul(
+                Box::new(Expr::Mul(
+                    Box::new(Expr::Access(Access::new("A", &["i", "k", "l"]))),
+                    Box::new(Expr::Access(Access::new("X1", &["k", "j"]))),
+                )),
+                Box::new(Expr::Access(Access::new("X2", &["l", "j"]))),
+            ),
+            tensors: vec![
+                TensorVar::csr("A", 3),
+                TensorVar::dense("X1", 2),
+                TensorVar::dense("X2", 2),
+                TensorVar::dense("Y", 2),
+            ],
+        }
+    }
+
+    /// TTM (Eq. 2b): `Y(i,j,l) = A(i,j,k) * X1(k,l)`.
+    pub fn ttm() -> Self {
+        TensorAlgebra {
+            lhs: Access::new("Y", &["i", "j", "l"]),
+            rhs: Expr::Mul(
+                Box::new(Expr::Access(Access::new("A", &["i", "j", "k"]))),
+                Box::new(Expr::Access(Access::new("X1", &["k", "l"]))),
+            ),
+            tensors: vec![TensorVar::csr("A", 3), TensorVar::dense("X1", 2), TensorVar::dense("Y", 3)],
+        }
+    }
+}
+
+impl fmt::Display for TensorAlgebra {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} = {}", self.lhs, self.rhs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spmm_reduces_over_j() {
+        let a = TensorAlgebra::spmm();
+        assert_eq!(a.reduction_dims(), vec![IndexVar::new("j")]);
+        assert!(a.is_sparse_dense_hybrid());
+        assert_eq!(a.to_string(), "C(i,k) = A(i,j)*B(j,k)");
+    }
+
+    #[test]
+    fn sddmm_reduces_over_j() {
+        let a = TensorAlgebra::sddmm();
+        assert_eq!(a.reduction_dims(), vec![IndexVar::new("j")]);
+    }
+
+    #[test]
+    fn mttkrp_reduces_over_k_l() {
+        let a = TensorAlgebra::mttkrp();
+        let dims = a.reduction_dims();
+        assert!(dims.contains(&IndexVar::new("k")) && dims.contains(&IndexVar::new("l")));
+        assert_eq!(dims.len(), 2);
+        assert!(a.is_sparse_dense_hybrid());
+    }
+
+    #[test]
+    fn ttm_reduces_over_k() {
+        let a = TensorAlgebra::ttm();
+        assert_eq!(a.reduction_dims(), vec![IndexVar::new("k")]);
+    }
+
+    #[test]
+    fn csr_format_is_sparse() {
+        assert!(TensorVar::csr("A", 2).is_sparse());
+        assert!(!TensorVar::dense("B", 2).is_sparse());
+    }
+}

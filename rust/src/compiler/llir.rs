@@ -1,0 +1,289 @@
+//! LLIR — the imperative low-level IR the middle-end lowers CIN into
+//! (§2.4.2). It is "almost executable code": basic blocks, for/while/if,
+//! loads/stores, atomics, and the two segment-group **macro instructions**
+//! of §5.3 (`atomicAddGroup<T,G>` and `segReduceGroup<T,G>`).
+//!
+//! Two consumers:
+//! * [`crate::compiler::codegen_cuda`] pretty-prints it as CUDA-like text
+//!   (for inspection + golden tests against the paper's Listings 1/2),
+//! * [`crate::sim`] executes it warp-by-warp with lane masks and charges
+//!   cycles — the stand-in for running the CUDA on a real GPU.
+
+use std::fmt;
+
+/// Binary operators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Mod,
+    Min,
+    Lt,
+    Le,
+    Eq,
+    Ne,
+    Ge,
+    Gt,
+    And,
+    Or,
+}
+
+impl BinOp {
+    pub fn is_compare(self) -> bool {
+        matches!(self, BinOp::Lt | BinOp::Le | BinOp::Eq | BinOp::Ne | BinOp::Ge | BinOp::Gt)
+    }
+}
+
+/// Value expressions (pure, per-lane).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Val {
+    /// Local scalar variable.
+    Var(String),
+    ConstI(i64),
+    ConstF(f32),
+    Bin(BinOp, Box<Val>, Box<Val>),
+    /// `array[idx]` — global memory load (either element type).
+    Load(String, Box<Val>),
+    /// `taco_binarySearchBefore(array, lo, hi, target)`: largest `i` in
+    /// `[lo, hi]` with `array[i] <= target` (Listing 1's row search).
+    BinarySearchBefore { array: String, lo: Box<Val>, hi: Box<Val>, target: Box<Val> },
+    /// blockIdx.x
+    BlockIdx,
+    /// threadIdx.x
+    ThreadIdx,
+    /// Kernel scalar parameter (grid-uniform), e.g. `B2_dimension`.
+    Param(String),
+}
+
+impl Val {
+    pub fn var(name: &str) -> Val {
+        Val::Var(name.into())
+    }
+    pub fn param(name: &str) -> Val {
+        Val::Param(name.into())
+    }
+    pub fn bin(op: BinOp, a: Val, b: Val) -> Val {
+        Val::Bin(op, Box::new(a), Box::new(b))
+    }
+    pub fn add(a: Val, b: Val) -> Val {
+        Val::bin(BinOp::Add, a, b)
+    }
+    pub fn sub(a: Val, b: Val) -> Val {
+        Val::bin(BinOp::Sub, a, b)
+    }
+    pub fn mul(a: Val, b: Val) -> Val {
+        Val::bin(BinOp::Mul, a, b)
+    }
+    pub fn div(a: Val, b: Val) -> Val {
+        Val::bin(BinOp::Div, a, b)
+    }
+    pub fn rem(a: Val, b: Val) -> Val {
+        Val::bin(BinOp::Mod, a, b)
+    }
+    pub fn min(a: Val, b: Val) -> Val {
+        Val::bin(BinOp::Min, a, b)
+    }
+    pub fn lt(a: Val, b: Val) -> Val {
+        Val::bin(BinOp::Lt, a, b)
+    }
+    pub fn le(a: Val, b: Val) -> Val {
+        Val::bin(BinOp::Le, a, b)
+    }
+    pub fn ge(a: Val, b: Val) -> Val {
+        Val::bin(BinOp::Ge, a, b)
+    }
+    pub fn eq(a: Val, b: Val) -> Val {
+        Val::bin(BinOp::Eq, a, b)
+    }
+    pub fn ne(a: Val, b: Val) -> Val {
+        Val::bin(BinOp::Ne, a, b)
+    }
+    pub fn and(a: Val, b: Val) -> Val {
+        Val::bin(BinOp::And, a, b)
+    }
+    pub fn load(array: &str, idx: Val) -> Val {
+        Val::Load(array.into(), Box::new(idx))
+    }
+}
+
+/// Statements.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Stmt {
+    /// `int/float name = init;` — declaration + init (type inferred).
+    Decl { var: String, init: Val, float: bool },
+    /// `name = val;`
+    Assign { var: String, val: Val },
+    /// `array[idx] = val;` (global store)
+    Store { array: String, idx: Val, val: Val },
+    /// `atomicAdd(&array[idx], val);` — plain CUDA atomic.
+    AtomicAdd { array: String, idx: Val, val: Val },
+    /// `atomicAddGroup<float,G>(array, idx, val);` — tree-reduce `val`
+    /// over each aligned G-lane group, lane 0 of the group does one
+    /// atomicAdd (macro instruction, §5.3). `idx` must be group-uniform.
+    AtomicAddGroup { array: String, idx: Val, val: Val, group: u32 },
+    /// `segReduceGroup<float,G>(array, idx, val);` — segmented scan over
+    /// each aligned G-lane group keyed by `idx`; segment-end lanes do the
+    /// atomic writeback (macro instruction, §5.3).
+    SegReduceGroup { array: String, idx: Val, val: Val, group: u32 },
+    /// `for (var = lo; var < hi; var += step) body`
+    For { var: String, lo: Val, hi: Val, step: Val, body: Vec<Stmt> },
+    /// `while (cond) body`
+    While { cond: Val, body: Vec<Stmt> },
+    If { cond: Val, then: Vec<Stmt>, els: Vec<Stmt> },
+    Break,
+    Comment(String),
+}
+
+/// Kernel parameter kinds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParamKind {
+    ArrayF32,
+    ArrayI32,
+    ScalarI32,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Param {
+    pub name: String,
+    pub kind: ParamKind,
+}
+
+impl Param {
+    pub fn f32_array(name: &str) -> Param {
+        Param { name: name.into(), kind: ParamKind::ArrayF32 }
+    }
+    pub fn i32_array(name: &str) -> Param {
+        Param { name: name.into(), kind: ParamKind::ArrayI32 }
+    }
+    pub fn i32_scalar(name: &str) -> Param {
+        Param { name: name.into(), kind: ParamKind::ScalarI32 }
+    }
+}
+
+/// Launch shape: `grid` blocks × `block` threads (1-D, as TACO emits —
+/// §2.4.3: "it only generates one dimension of block and thread").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LaunchConfig {
+    pub grid: u32,
+    pub block: u32,
+}
+
+/// A complete GPU kernel in LLIR.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Kernel {
+    pub name: String,
+    pub params: Vec<Param>,
+    pub body: Vec<Stmt>,
+    /// Threads per block (grid size is input-dependent, fixed at launch).
+    pub block_dim: u32,
+}
+
+impl Kernel {
+    /// All statements, depth-first (for structural asserts in tests).
+    pub fn walk(&self) -> Vec<&Stmt> {
+        fn go<'a>(stmts: &'a [Stmt], out: &mut Vec<&'a Stmt>) {
+            for s in stmts {
+                out.push(s);
+                match s {
+                    Stmt::For { body, .. } | Stmt::While { body, .. } => go(body, out),
+                    Stmt::If { then, els, .. } => {
+                        go(then, out);
+                        go(els, out);
+                    }
+                    _ => {}
+                }
+            }
+        }
+        let mut out = Vec::new();
+        go(&self.body, &mut out);
+        out
+    }
+
+    pub fn count_matching(&self, pred: impl Fn(&Stmt) -> bool) -> usize {
+        self.walk().into_iter().filter(|s| pred(s)).count()
+    }
+}
+
+impl fmt::Display for Val {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Val::Var(n) | Val::Param(n) => write!(f, "{n}"),
+            Val::ConstI(c) => write!(f, "{c}"),
+            Val::ConstF(c) => write!(f, "{c:?}f"),
+            Val::Bin(op, a, b) => {
+                let sym = match op {
+                    BinOp::Add => "+",
+                    BinOp::Sub => "-",
+                    BinOp::Mul => "*",
+                    BinOp::Div => "/",
+                    BinOp::Mod => "%",
+                    BinOp::Min => return write!(f, "min({a}, {b})"),
+                    BinOp::Lt => "<",
+                    BinOp::Le => "<=",
+                    BinOp::Eq => "==",
+                    BinOp::Ne => "!=",
+                    BinOp::Ge => ">=",
+                    BinOp::Gt => ">",
+                    BinOp::And => "&&",
+                    BinOp::Or => "||",
+                };
+                write!(f, "({a} {sym} {b})")
+            }
+            Val::Load(a, i) => write!(f, "{a}[{i}]"),
+            Val::BinarySearchBefore { array, lo, hi, target } => {
+                write!(f, "taco_binarySearchBefore({array}, {lo}, {hi}, {target})")
+            }
+            Val::BlockIdx => write!(f, "blockIdx.x"),
+            Val::ThreadIdx => write!(f, "threadIdx.x"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn val_display() {
+        let v = Val::add(Val::mul(Val::BlockIdx, Val::ConstI(256)), Val::ThreadIdx);
+        assert_eq!(v.to_string(), "((blockIdx.x * 256) + threadIdx.x)");
+    }
+
+    #[test]
+    fn binary_search_display() {
+        let v = Val::BinarySearchBefore {
+            array: "A2_pos".into(),
+            lo: Box::new(Val::var("pA2_begin")),
+            hi: Box::new(Val::var("pA2_end")),
+            target: Box::new(Val::var("fposA")),
+        };
+        assert_eq!(v.to_string(), "taco_binarySearchBefore(A2_pos, pA2_begin, pA2_end, fposA)");
+    }
+
+    #[test]
+    fn walk_counts_nested() {
+        let k = Kernel {
+            name: "k".into(),
+            params: vec![],
+            block_dim: 256,
+            body: vec![Stmt::For {
+                var: "i".into(),
+                lo: Val::ConstI(0),
+                hi: Val::ConstI(4),
+                step: Val::ConstI(1),
+                body: vec![
+                    Stmt::If {
+                        cond: Val::lt(Val::var("i"), Val::ConstI(2)),
+                        then: vec![Stmt::Break],
+                        els: vec![],
+                    },
+                    Stmt::Comment("x".into()),
+                ],
+            }],
+        };
+        assert_eq!(k.walk().len(), 4);
+        assert_eq!(k.count_matching(|s| matches!(s, Stmt::Break)), 1);
+    }
+}

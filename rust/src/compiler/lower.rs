@@ -1,0 +1,526 @@
+//! CIN → LLIR lowering (§5.2–5.3).
+//!
+//! The lowerer emits one GPU kernel per scheduled SpMM. It implements the
+//! paper's two lowering changes:
+//!
+//! * **Zero extension** (§5.2): for the nnz-group family, out-of-bound
+//!   lanes are *not* guarded out of the reduction — they compute
+//!   `val = 0` and flow through `segReduceGroup` branch-free, exactly the
+//!   Listing 1 → Listing 2 transformation.
+//! * **Relaxed scalar workspace** (§5.3): the workspace `val` is declared
+//!   in the loop scope but assigned inside an `else` basic block —
+//!   the pattern stock TACO's one-basic-block assumption cannot express.
+//!
+//! Array-name conventions match TACO's generated code (Listing 1/2):
+//! `A2_pos` (CSR indptr), `A2_crd` (column ids), `A_vals`, `B_vals`,
+//! `C_vals`, `i_blockStarts` (per-block row search windows), scalars
+//! `A1_dimension` (rows) and `B2_dimension`/`C2_dimension` (N).
+//!
+//! Note on the paper's Rule 2: we require `r <= g` in the row-group
+//! family so that every aligned r-lane subgroup maps to a single row
+//! (group-uniform writeback index) — Table 1's `g = 32, r ∈ {4, 8}`
+//! configurations satisfy this.
+
+use thiserror::Error;
+
+use super::llir::{Kernel, Param, Stmt, Val};
+use super::schedule::{Family, Schedule};
+
+#[derive(Debug, Error)]
+pub enum LowerError {
+    #[error("unsupported schedule shape: {0}")]
+    Unsupported(String),
+    #[error("invalid config: {0}")]
+    InvalidConfig(String),
+}
+
+/// Lower a scheduled SpMM to an LLIR kernel.
+pub fn lower(schedule: &Schedule) -> Result<Kernel, LowerError> {
+    schedule.config.validate().map_err(LowerError::InvalidConfig)?;
+    let family = schedule.classify().map_err(LowerError::Unsupported)?;
+    let cfg = schedule.config;
+    match family {
+        Family::NnzGroup => {
+            if cfg.r > cfg.p {
+                return Err(LowerError::InvalidConfig("r must be <= threads per block".into()));
+            }
+            Ok(lower_nnz_group(cfg.n, cfg.c, cfg.p, cfg.r))
+        }
+        Family::NnzSerial => Ok(lower_nnz_serial(cfg.n, cfg.c, cfg.p, cfg.g)),
+        Family::RowSerial => Ok(lower_row_serial(cfg.n, cfg.c, cfg.p, cfg.x)),
+        Family::RowGroup => {
+            if cfg.r > cfg.g {
+                return Err(LowerError::InvalidConfig(format!(
+                    "row-group family needs r <= g (got r={}, g={}): an r-subgroup must not straddle rows",
+                    cfg.r, cfg.g
+                )));
+            }
+            Ok(lower_row_group(cfg.n, cfg.c, cfg.p, cfg.g, cfg.r))
+        }
+    }
+}
+
+fn i(v: i64) -> Val {
+    Val::ConstI(v)
+}
+
+fn spmm_params(with_block_starts: bool) -> Vec<Param> {
+    let mut p = Vec::new();
+    if with_block_starts {
+        p.push(Param::i32_array("i_blockStarts"));
+    }
+    p.extend([
+        Param::i32_array("A2_pos"),
+        Param::i32_array("A2_crd"),
+        Param::f32_array("A_vals"),
+        Param::f32_array("B_vals"),
+        Param::f32_array("C_vals"),
+        Param::i32_scalar("A1_dimension"),
+        Param::i32_scalar("B2_dimension"),
+    ]);
+    p
+}
+
+/// Total nnz expressed as `A2_pos[A1_dimension]` (as the Listings do).
+fn nnz_total() -> Val {
+    Val::load("A2_pos", Val::param("A1_dimension"))
+}
+
+/// Listing 6 / Listing 2: `{<1 nnz, c col>, r}` with segment reduction.
+///
+/// Layout: `nnzb = p / (N/c)` non-zeros per block; thread covers
+/// `(ko, fpos1)` with `fpos1 = tid % nnzb` (consecutive lanes own
+/// consecutive non-zeros, so an r-lane group sees a contiguous nnz range —
+/// the precondition for segmented scan).
+fn lower_nnz_group(n: u32, c: u32, p: u32, r: u32) -> Kernel {
+    let kchunks = (n / c) as i64;
+    let nnzb = p as i64 / kchunks;
+    let body = vec![
+        Stmt::Comment(format!("{{<1 nnz, {c} col>, {r}}} — grouped segment reduction")),
+        Stmt::Decl { var: "fpos1".into(), init: Val::rem(Val::ThreadIdx, i(nnzb)), float: false },
+        Stmt::Decl { var: "ko".into(), init: Val::div(Val::ThreadIdx, i(nnzb)), float: false },
+        Stmt::Decl {
+            var: "fposA".into(),
+            init: Val::add(Val::mul(Val::BlockIdx, i(nnzb)), Val::var("fpos1")),
+            float: false,
+        },
+        Stmt::Decl { var: "pA2_begin".into(), init: Val::load("i_blockStarts", Val::BlockIdx), float: false },
+        Stmt::Decl {
+            var: "pA2_end".into(),
+            init: Val::load("i_blockStarts", Val::add(Val::BlockIdx, i(1))),
+            float: false,
+        },
+        Stmt::Decl {
+            var: "i_pos".into(),
+            init: Val::BinarySearchBefore {
+                array: "A2_pos".into(),
+                lo: Box::new(Val::var("pA2_begin")),
+                hi: Box::new(Val::var("pA2_end")),
+                target: Box::new(Val::var("fposA")),
+            },
+            float: false,
+        },
+        Stmt::Decl { var: "i".into(), init: Val::var("i_pos"), float: false },
+        Stmt::For {
+            var: "ki".into(),
+            lo: i(0),
+            hi: i(c as i64),
+            step: i(1),
+            body: vec![
+                Stmt::Decl {
+                    var: "k".into(),
+                    init: Val::add(Val::mul(Val::var("ko"), i(c as i64)), Val::var("ki")),
+                    float: false,
+                },
+                // relaxed scalar workspace: declared here, assigned in the
+                // else branch below (§5.3)
+                Stmt::Decl { var: "val".into(), init: Val::ConstF(0.0), float: true },
+                Stmt::If {
+                    // zero extension (§5.2): out-of-bound lanes keep val = 0
+                    // (and skip the row advance — exactly Listing 2's shape)
+                    cond: Val::ge(Val::var("fposA"), nnz_total()),
+                    then: vec![Stmt::Assign { var: "val".into(), val: Val::ConstF(0.0) }],
+                    els: vec![
+                        Stmt::Decl { var: "f".into(), init: Val::load("A2_crd", Val::var("fposA")), float: false },
+                        Stmt::Decl {
+                            var: "kB".into(),
+                            init: Val::add(Val::mul(Val::var("f"), Val::param("B2_dimension")), Val::var("k")),
+                            float: false,
+                        },
+                        // row advance: skip row starts equal to fposA
+                        // (handles empty rows; idempotent across ki)
+                        Stmt::While {
+                            cond: Val::eq(
+                                Val::var("fposA"),
+                                Val::load("A2_pos", Val::add(Val::var("i_pos"), i(1))),
+                            ),
+                            body: vec![
+                                Stmt::Assign { var: "i_pos".into(), val: Val::add(Val::var("i_pos"), i(1)) },
+                                Stmt::Assign { var: "i".into(), val: Val::var("i_pos") },
+                            ],
+                        },
+                        Stmt::Assign {
+                            var: "val".into(),
+                            val: Val::mul(Val::load("A_vals", Val::var("fposA")), Val::load("B_vals", Val::var("kB"))),
+                        },
+                    ],
+                },
+                Stmt::Decl {
+                    var: "kC".into(),
+                    init: Val::add(Val::mul(Val::var("i"), Val::param("B2_dimension")), Val::var("k")),
+                    float: false,
+                },
+                Stmt::SegReduceGroup { array: "C_vals".into(), idx: Val::var("kC"), val: Val::var("val"), group: r },
+            ],
+        },
+    ];
+    Kernel { name: format!("spmm_nnz_group_c{c}_r{r}"), params: spmm_params(true), body, block_dim: p }
+}
+
+/// Listing 3 / Listing 1: `{<g nnz, c col>, 1}` — serial accumulation over
+/// `g` consecutive non-zeros per thread, `atomicAdd` at row boundaries.
+fn lower_nnz_serial(n: u32, c: u32, p: u32, g: u32) -> Kernel {
+    let kchunks = (n / c) as i64;
+    let nnzt = p as i64 / kchunks; // nnz-owning threads per block
+    let g = g as i64;
+    let flush = |ip: &str, k: &str| Stmt::AtomicAdd {
+        array: "C_vals".into(),
+        idx: Val::add(Val::mul(Val::var(ip), Val::param("B2_dimension")), Val::var(k)),
+        val: Val::var("val"),
+    };
+    let body = vec![
+        Stmt::Comment(format!("{{<{g} nnz, {c} col>, 1}} — serial reduction (stock TACO)")),
+        Stmt::Decl { var: "fpos1".into(), init: Val::rem(Val::ThreadIdx, i(nnzt)), float: false },
+        Stmt::Decl { var: "ko".into(), init: Val::div(Val::ThreadIdx, i(nnzt)), float: false },
+        Stmt::Decl {
+            var: "fposStart".into(),
+            init: Val::add(
+                Val::mul(Val::BlockIdx, i(g * nnzt)),
+                Val::mul(Val::var("fpos1"), i(g)),
+            ),
+            float: false,
+        },
+        Stmt::Decl { var: "pA2_begin".into(), init: Val::load("i_blockStarts", Val::BlockIdx), float: false },
+        Stmt::Decl {
+            var: "pA2_end".into(),
+            init: Val::load("i_blockStarts", Val::add(Val::BlockIdx, i(1))),
+            float: false,
+        },
+        Stmt::Decl {
+            var: "i_pos0".into(),
+            init: Val::BinarySearchBefore {
+                array: "A2_pos".into(),
+                lo: Box::new(Val::var("pA2_begin")),
+                hi: Box::new(Val::var("pA2_end")),
+                target: Box::new(Val::var("fposStart")),
+            },
+            float: false,
+        },
+        Stmt::For {
+            var: "ki".into(),
+            lo: i(0),
+            hi: i(c as i64),
+            step: i(1),
+            body: vec![
+                Stmt::Decl {
+                    var: "k".into(),
+                    init: Val::add(Val::mul(Val::var("ko"), i(c as i64)), Val::var("ki")),
+                    float: false,
+                },
+                Stmt::Decl { var: "i_pos".into(), init: Val::var("i_pos0"), float: false },
+                Stmt::Decl { var: "val".into(), init: Val::ConstF(0.0), float: true },
+                Stmt::For {
+                    var: "fi".into(),
+                    lo: i(0),
+                    hi: i(g),
+                    step: i(1),
+                    body: vec![
+                        Stmt::Decl {
+                            var: "fposA".into(),
+                            init: Val::add(Val::var("fposStart"), Val::var("fi")),
+                            float: false,
+                        },
+                        Stmt::If {
+                            cond: Val::ge(Val::var("fposA"), nnz_total()),
+                            then: vec![Stmt::Break],
+                            els: vec![],
+                        },
+                        // flush accumulated value at each row boundary
+                        Stmt::While {
+                            cond: Val::eq(
+                                Val::var("fposA"),
+                                Val::load("A2_pos", Val::add(Val::var("i_pos"), i(1))),
+                            ),
+                            body: vec![
+                                flush("i_pos", "k"),
+                                Stmt::Assign { var: "val".into(), val: Val::ConstF(0.0) },
+                                Stmt::Assign { var: "i_pos".into(), val: Val::add(Val::var("i_pos"), i(1)) },
+                            ],
+                        },
+                        Stmt::Assign {
+                            var: "val".into(),
+                            val: Val::add(
+                                Val::var("val"),
+                                Val::mul(
+                                    Val::load("A_vals", Val::var("fposA")),
+                                    Val::load(
+                                        "B_vals",
+                                        Val::add(
+                                            Val::mul(
+                                                Val::load("A2_crd", Val::var("fposA")),
+                                                Val::param("B2_dimension"),
+                                            ),
+                                            Val::var("k"),
+                                        ),
+                                    ),
+                                ),
+                            ),
+                        },
+                    ],
+                },
+                flush("i_pos", "k"),
+            ],
+        },
+    ];
+    Kernel {
+        name: format!("spmm_nnz_serial_g{g}_c{c}"),
+        params: spmm_params(true),
+        body,
+        block_dim: p,
+    }
+}
+
+/// Listing 4: `{<x row, c col>, 1}` — one thread per row (×x), serial over
+/// the row's non-zeros, plain store (no races).
+fn lower_row_serial(n: u32, c: u32, p: u32, x: u32) -> Kernel {
+    let kchunks = (n / c) as i64;
+    let rowt = p as i64 / kchunks; // row-owning thread slots per block
+    let body = vec![
+        Stmt::Comment(format!("{{<{x} row, {c} col>, 1}} — row split, serial reduction (stock TACO)")),
+        Stmt::Decl { var: "rowslot".into(), init: Val::rem(Val::ThreadIdx, i(rowt)), float: false },
+        Stmt::Decl { var: "ko".into(), init: Val::div(Val::ThreadIdx, i(rowt)), float: false },
+        Stmt::For {
+            var: "xi".into(),
+            lo: i(0),
+            hi: i(x as i64),
+            step: i(1),
+            body: vec![
+                Stmt::Decl {
+                    var: "i".into(),
+                    init: Val::add(
+                        Val::mul(Val::BlockIdx, i(x as i64 * rowt)),
+                        Val::add(Val::mul(Val::var("xi"), i(rowt)), Val::var("rowslot")),
+                    ),
+                    float: false,
+                },
+                Stmt::If {
+                    cond: Val::lt(Val::var("i"), Val::param("A1_dimension")),
+                    then: vec![Stmt::For {
+                        var: "ki".into(),
+                        lo: i(0),
+                        hi: i(c as i64),
+                        step: i(1),
+                        body: vec![
+                            Stmt::Decl {
+                                var: "k".into(),
+                                init: Val::add(Val::mul(Val::var("ko"), i(c as i64)), Val::var("ki")),
+                                float: false,
+                            },
+                            Stmt::Decl { var: "val".into(), init: Val::ConstF(0.0), float: true },
+                            Stmt::For {
+                                var: "jj".into(),
+                                lo: Val::load("A2_pos", Val::var("i")),
+                                hi: Val::load("A2_pos", Val::add(Val::var("i"), i(1))),
+                                step: i(1),
+                                body: vec![Stmt::Assign {
+                                    var: "val".into(),
+                                    val: Val::add(
+                                        Val::var("val"),
+                                        Val::mul(
+                                            Val::load("A_vals", Val::var("jj")),
+                                            Val::load(
+                                                "B_vals",
+                                                Val::add(
+                                                    Val::mul(
+                                                        Val::load("A2_crd", Val::var("jj")),
+                                                        Val::param("B2_dimension"),
+                                                    ),
+                                                    Val::var("k"),
+                                                ),
+                                            ),
+                                        ),
+                                    ),
+                                }],
+                            },
+                            Stmt::Store {
+                                array: "C_vals".into(),
+                                idx: Val::add(Val::mul(Val::var("i"), Val::param("B2_dimension")), Val::var("k")),
+                                val: Val::var("val"),
+                            },
+                        ],
+                    }],
+                    els: vec![],
+                },
+            ],
+        },
+    ];
+    Kernel { name: format!("spmm_row_serial_x{x}_c{c}"), params: spmm_params(false), body, block_dim: p }
+}
+
+/// Listing 5: `{<1/g row, c col>, r}` — `g` threads cooperate per row,
+/// grouped parallel reduction with `atomicAddGroup<float, r>`.
+fn lower_row_group(n: u32, c: u32, p: u32, g: u32, r: u32) -> Kernel {
+    let kchunks = (n / c) as i64;
+    let g64 = g as i64;
+    let rpb = p as i64 / (g64 * kchunks); // rows per block
+    assert!(rpb >= 1, "p too small for g and N/c");
+    let body = vec![
+        Stmt::Comment(format!("{{<1/{g} row, {c} col>, {r}}} — grouped parallel reduction")),
+        Stmt::Decl { var: "jpos1".into(), init: Val::rem(Val::ThreadIdx, i(g64)), float: false },
+        Stmt::Decl {
+            var: "ko".into(),
+            init: Val::rem(Val::div(Val::ThreadIdx, i(g64)), i(kchunks)),
+            float: false,
+        },
+        Stmt::Decl {
+            var: "rowb".into(),
+            init: Val::div(Val::ThreadIdx, i(g64 * kchunks)),
+            float: false,
+        },
+        Stmt::Decl {
+            var: "i".into(),
+            init: Val::add(Val::mul(Val::BlockIdx, i(rpb)), Val::var("rowb")),
+            float: false,
+        },
+        Stmt::If {
+            cond: Val::lt(Val::var("i"), Val::param("A1_dimension")),
+            then: vec![Stmt::For {
+                var: "ki".into(),
+                lo: i(0),
+                hi: i(c as i64),
+                step: i(1),
+                body: vec![
+                    Stmt::Decl {
+                        var: "k".into(),
+                        init: Val::add(Val::mul(Val::var("ko"), i(c as i64)), Val::var("ki")),
+                        float: false,
+                    },
+                    Stmt::Decl { var: "tjpos1C".into(), init: Val::ConstF(0.0), float: true },
+                    Stmt::Decl {
+                        var: "jpos".into(),
+                        init: Val::add(Val::load("A2_pos", Val::var("i")), Val::var("jpos1")),
+                        float: false,
+                    },
+                    Stmt::While {
+                        cond: Val::lt(Val::var("jpos"), Val::load("A2_pos", Val::add(Val::var("i"), i(1)))),
+                        body: vec![
+                            Stmt::Assign {
+                                var: "tjpos1C".into(),
+                                val: Val::add(
+                                    Val::var("tjpos1C"),
+                                    Val::mul(
+                                        Val::load("A_vals", Val::var("jpos")),
+                                        Val::load(
+                                            "B_vals",
+                                            Val::add(
+                                                Val::mul(
+                                                    Val::load("A2_crd", Val::var("jpos")),
+                                                    Val::param("B2_dimension"),
+                                                ),
+                                                Val::var("k"),
+                                            ),
+                                        ),
+                                    ),
+                                ),
+                            },
+                            Stmt::Assign { var: "jpos".into(), val: Val::add(Val::var("jpos"), i(g64)) },
+                        ],
+                    },
+                    Stmt::AtomicAddGroup {
+                        array: "C_vals".into(),
+                        idx: Val::add(Val::mul(Val::var("i"), Val::param("B2_dimension")), Val::var("k")),
+                        val: Val::var("tjpos1C"),
+                        group: r,
+                    },
+                ],
+            }],
+            els: vec![],
+        },
+    ];
+    Kernel {
+        name: format!("spmm_row_group_g{g}_c{c}_r{r}"),
+        params: spmm_params(false),
+        body,
+        block_dim: p,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::schedule::SpmmConfig;
+
+    fn cfg() -> SpmmConfig {
+        SpmmConfig::default()
+    }
+
+    #[test]
+    fn lowers_all_families() {
+        lower(&Schedule::taco_nnz_serial(cfg())).unwrap();
+        lower(&Schedule::taco_row_serial(cfg())).unwrap();
+        lower(&Schedule::sgap_row_group(cfg(), 8)).unwrap();
+        lower(&Schedule::sgap_nnz_group(cfg(), 32)).unwrap();
+    }
+
+    #[test]
+    fn nnz_group_emits_seg_reduce_and_zero_extension() {
+        let k = lower(&Schedule::sgap_nnz_group(cfg(), 16)).unwrap();
+        assert_eq!(k.count_matching(|s| matches!(s, Stmt::SegReduceGroup { group: 16, .. })), 1);
+        // zero extension: an if whose then-branch zeroes the workspace
+        let zero_ext = k.count_matching(|s| {
+            matches!(s, Stmt::If { then, .. }
+                if matches!(then.first(), Some(Stmt::Assign { var, val: Val::ConstF(f) })
+                    if var == "val" && *f == 0.0))
+        });
+        assert_eq!(zero_ext, 1, "zero-extension branch missing");
+        // no plain atomicAdd in the segment-reduction kernel
+        assert_eq!(k.count_matching(|s| matches!(s, Stmt::AtomicAdd { .. })), 0);
+    }
+
+    #[test]
+    fn row_group_emits_atomic_add_group() {
+        let k = lower(&Schedule::sgap_row_group(cfg(), 4)).unwrap();
+        assert_eq!(k.count_matching(|s| matches!(s, Stmt::AtomicAddGroup { group: 4, .. })), 1);
+        assert_eq!(k.block_dim, 256);
+    }
+
+    #[test]
+    fn row_group_rejects_r_gt_g() {
+        let mut c = cfg();
+        c.g = 8;
+        let err = lower(&Schedule::sgap_row_group(c, 32)).unwrap_err();
+        assert!(matches!(err, LowerError::InvalidConfig(_)));
+    }
+
+    #[test]
+    fn nnz_serial_uses_plain_atomics() {
+        let k = lower(&Schedule::taco_nnz_serial(cfg())).unwrap();
+        assert!(k.count_matching(|s| matches!(s, Stmt::AtomicAdd { .. })) >= 2);
+        assert_eq!(k.count_matching(|s| matches!(s, Stmt::SegReduceGroup { .. })), 0);
+        assert_eq!(k.count_matching(|s| matches!(s, Stmt::AtomicAddGroup { .. })), 0);
+    }
+
+    #[test]
+    fn row_serial_has_no_atomics() {
+        let k = lower(&Schedule::taco_row_serial(cfg())).unwrap();
+        assert_eq!(k.count_matching(|s| matches!(s, Stmt::AtomicAdd { .. })), 0);
+        assert!(k.count_matching(|s| matches!(s, Stmt::Store { .. })) >= 1);
+    }
+
+    #[test]
+    fn invalid_config_rejected() {
+        let mut c = cfg();
+        c.c = 3; // does not divide N=4
+        assert!(lower(&Schedule::taco_row_serial(c)).is_err());
+    }
+}

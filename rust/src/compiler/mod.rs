@@ -1,0 +1,34 @@
+//! The mini-TACO sparse compiler with **segment group** support.
+//!
+//! Pipeline (mirrors Fig. 6 + Fig. 10 of the paper):
+//!
+//! ```text
+//! tensor algebra expression (expr)         — front-end input
+//!   └─ concretize → concrete index notation (cin)
+//!        └─ schedule commands transform the CIN (schedule)
+//!             fuse / split / pos / bound / reorder / parallelize
+//!             — parallelize now accepts GPUGroup{size, strategy} and
+//!               GPUWarp carries *tiling-only* semantics (§5.1)
+//!        └─ lower → imperative LLIR (lower, llir)
+//!             — segment-reduction lowering + zero extension (§5.2–5.3)
+//!        └─ codegen → CUDA-like text (codegen_cuda)
+//!                   → simulator launch (the LLIR itself runs on `sim`)
+//! ```
+//!
+//! The optimization space the schedules draw from is formalized in
+//! [`spaces`] (atomic parallelism, §3).
+
+pub mod cin;
+pub mod codegen_cuda;
+pub mod expr;
+pub mod llir;
+pub mod lower;
+pub mod schedule;
+pub mod spaces;
+
+pub use cin::{Cin, GroupSpec, OutputRaceStrategy, ParallelUnit, ReductionStrategy};
+pub use expr::{Access, Expr, IndexVar, LevelFormat, TensorAlgebra, TensorVar};
+pub use llir::{Kernel, LaunchConfig, Stmt, Val};
+pub use lower::{lower, LowerError};
+pub use schedule::{Schedule, ScheduleCmd};
+pub use spaces::{AtomicPoint, DataKind, Factor};

@@ -1,0 +1,377 @@
+//! Schedule commands — the TACO scheduling language plus the Sgap
+//! extension (§5.1): `parallelize` now accepts `GPUGroup` with a
+//! [`GroupSpec`], and `GPUWarp` keeps only tiling semantics.
+//!
+//! A [`Schedule`] is an ordered command list applied to a tensor algebra
+//! statement. [`Schedule::to_cin`] produces the concrete index notation
+//! (the paper's Listings 3–6); [`Schedule::classify`] recognizes which of
+//! the four SpMM algorithm families the command list describes so the
+//! lowerer can emit the corresponding LLIR.
+
+use std::fmt;
+
+use super::cin::{Cin, GroupSpec, OutputRaceStrategy, ParallelUnit, ReductionStrategy};
+use super::expr::{Access, Expr, IndexVar};
+
+/// One scheduling command (subset of TACO's API used by the paper).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ScheduleCmd {
+    /// `fuse(i, j, f)` — fuse two index vars into one.
+    Fuse { a: IndexVar, b: IndexVar, into: IndexVar },
+    /// `pos(f, fpos, A(i,j))` — move to position space of a tensor level.
+    Pos { var: IndexVar, pos_var: IndexVar, access: Access },
+    /// `split(v, outer, inner, factor)`.
+    Split { var: IndexVar, outer: IndexVar, inner: IndexVar, factor: u32 },
+    /// `bound(v, bv, extent, MaxExact)`.
+    Bound { var: IndexVar, bound_var: IndexVar, extent: u32 },
+    /// `reorder(vars...)`.
+    Reorder { order: Vec<IndexVar> },
+    /// `precompute(expr, v, workspace)` — scalar workspace (§5.3).
+    Precompute { workspace: String },
+    /// `parallelize(v, unit, race)` — stock TACO form.
+    Parallelize { var: IndexVar, unit: ParallelUnit, race: OutputRaceStrategy },
+    /// `parallelize(v, GPUGroup, r, strategy)` — the Sgap form.
+    ParallelizeGroup { var: IndexVar, spec: GroupSpec, race: OutputRaceStrategy },
+}
+
+impl fmt::Display for ScheduleCmd {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ScheduleCmd::Fuse { a, b, into } => write!(f, "fuse({a},{b},{into})"),
+            ScheduleCmd::Pos { var, pos_var, access } => write!(f, "pos({var},{pos_var},{access})"),
+            ScheduleCmd::Split { var, outer, inner, factor } => {
+                write!(f, "split({var},{outer},{inner},{factor})")
+            }
+            ScheduleCmd::Bound { var, bound_var, extent } => {
+                write!(f, "bound({var},{bound_var},{extent},MaxExact)")
+            }
+            ScheduleCmd::Reorder { order } => {
+                let s: Vec<String> = order.iter().map(|v| v.to_string()).collect();
+                write!(f, "reorder({})", s.join(","))
+            }
+            ScheduleCmd::Precompute { workspace } => write!(f, "precompute({workspace})"),
+            ScheduleCmd::Parallelize { var, unit, race } => {
+                write!(f, "parallelize({var},{unit},{race})")
+            }
+            ScheduleCmd::ParallelizeGroup { var, spec, race } => {
+                write!(f, "parallelize({var},GPUGroup,{},{},{race})", spec.size, spec.strategy)
+            }
+        }
+    }
+}
+
+/// Tunable parameters shared by all four SpMM schedules.
+///
+/// `n` = dense columns, `c` = coarsening (cols per thread), `p` = threads
+/// per block, `g` = the data granularity (nnz per thread, or threads per
+/// row), `r` = reduction parallelism (GroupSize), `x` = rows per thread.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpmmConfig {
+    pub n: u32,
+    pub c: u32,
+    pub p: u32,
+    pub g: u32,
+    pub r: u32,
+    pub x: u32,
+}
+
+impl Default for SpmmConfig {
+    fn default() -> Self {
+        SpmmConfig { n: 4, c: 4, p: 256, g: 32, r: 32, x: 1 }
+    }
+}
+
+impl SpmmConfig {
+    /// Column-chunks per row tile: how many thread-columns cover N.
+    /// (Callers must `validate()` first; a non-dividing `c` is reported
+    /// there, not here.)
+    pub fn kchunks(&self) -> u32 {
+        (self.n / self.c).max(1)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n % self.c != 0 {
+            return Err(format!("c={} must divide N={}", self.c, self.n));
+        }
+        if !self.r.is_power_of_two() || self.r > 32 {
+            return Err(format!("r={} must be a power of 2 <= 32", self.r));
+        }
+        if !self.g.is_power_of_two() && self.g != self.p {
+            // g is a thread-grouping factor in row-group schedules
+        }
+        if self.p % self.kchunks() != 0 {
+            return Err(format!("p={} must be divisible by N/c={}", self.p, self.kchunks()));
+        }
+        Ok(())
+    }
+}
+
+/// The four SpMM algorithm families of §6, identified from a command list.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Family {
+    /// `{<g nnz, c col>, 1}` — Listing 3 (EB + serial reduction).
+    NnzSerial,
+    /// `{<x row, c col>, 1}` — Listing 4 (RB + serial reduction).
+    RowSerial,
+    /// `{<1/g row, c col>, r}` — Listing 5 (RB + grouped parallel reduction).
+    RowGroup,
+    /// `{<1 nnz, c col>, r}` — Listing 6 (EB + grouped segment reduction).
+    NnzGroup,
+}
+
+/// A complete schedule: the commands plus resolved tuning parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Schedule {
+    pub cmds: Vec<ScheduleCmd>,
+    pub config: SpmmConfig,
+}
+
+impl Schedule {
+    // ---- the four canonical schedules (Listings 3–6) --------------------
+
+    /// Listing 3: `{<g nnz, c col>, 1}` — original TACO nnz-split.
+    pub fn taco_nnz_serial(config: SpmmConfig) -> Schedule {
+        let v = |s: &str| IndexVar::new(s);
+        let nnz_per_block = config.g * (config.p / config.kchunks());
+        Schedule {
+            cmds: vec![
+                ScheduleCmd::Fuse { a: v("i"), b: v("j"), into: v("f") },
+                ScheduleCmd::Pos { var: v("f"), pos_var: v("fpos"), access: Access::new("A", &["i", "j"]) },
+                ScheduleCmd::Split { var: v("fpos"), outer: v("block"), inner: v("fpos1"), factor: nnz_per_block },
+                ScheduleCmd::Split { var: v("fpos1"), outer: v("warp"), inner: v("fpos2"), factor: config.g },
+                ScheduleCmd::Split { var: v("k"), outer: v("ko"), inner: v("ki"), factor: config.c },
+                ScheduleCmd::Bound { var: v("ko"), bound_var: v("ko"), extent: config.kchunks() },
+                ScheduleCmd::Precompute { workspace: "tmp".into() },
+                ScheduleCmd::Parallelize { var: v("block"), unit: ParallelUnit::GPUBlock, race: OutputRaceStrategy::IgnoreRaces },
+                ScheduleCmd::Parallelize { var: v("warp"), unit: ParallelUnit::GPUWarp, race: OutputRaceStrategy::NoRaces },
+                ScheduleCmd::Parallelize { var: v("fpos2"), unit: ParallelUnit::GPUThread, race: OutputRaceStrategy::Atomics },
+            ],
+            config,
+        }
+    }
+
+    /// Listing 4: `{<x row, c col>, 1}` — original TACO row-split.
+    pub fn taco_row_serial(config: SpmmConfig) -> Schedule {
+        let v = |s: &str| IndexVar::new(s);
+        let rows_per_block = config.x * config.p / config.kchunks();
+        Schedule {
+            cmds: vec![
+                ScheduleCmd::Split { var: v("i"), outer: v("block"), inner: v("io"), factor: rows_per_block },
+                ScheduleCmd::Split { var: v("io"), outer: v("warp"), inner: v("ii"), factor: config.x },
+                ScheduleCmd::Split { var: v("k"), outer: v("ko"), inner: v("ki"), factor: config.c },
+                ScheduleCmd::Bound { var: v("ko"), bound_var: v("ko"), extent: config.kchunks() },
+                ScheduleCmd::Parallelize { var: v("block"), unit: ParallelUnit::GPUBlock, race: OutputRaceStrategy::NoRaces },
+                ScheduleCmd::Parallelize { var: v("ii"), unit: ParallelUnit::GPUThread, race: OutputRaceStrategy::NoRaces },
+            ],
+            config,
+        }
+    }
+
+    /// Listing 5: `{<1/g row, c col>, r}` — Sgap row-split with grouped
+    /// parallel reduction (`atomicAddGroup<float, r>`).
+    pub fn sgap_row_group(config: SpmmConfig, r: u32) -> Schedule {
+        let v = |s: &str| IndexVar::new(s);
+        let mut config = config;
+        config.r = r;
+        Schedule {
+            cmds: vec![
+                ScheduleCmd::Fuse { a: v("i"), b: v("k"), into: v("io") },
+                ScheduleCmd::Split { var: v("io"), outer: v("ko"), inner: v("ki"), factor: config.c * config.p / config.g },
+                ScheduleCmd::Split { var: v("ki"), outer: v("warp"), inner: v("kii"), factor: config.c },
+                ScheduleCmd::Pos { var: v("j"), pos_var: v("jpos"), access: Access::new("A", &["i", "j"]) },
+                ScheduleCmd::Split { var: v("jpos"), outer: v("jpos0"), inner: v("jpos1"), factor: config.g },
+                ScheduleCmd::Parallelize { var: v("ko"), unit: ParallelUnit::GPUBlock, race: OutputRaceStrategy::NoRaces },
+                ScheduleCmd::Parallelize { var: v("warp"), unit: ParallelUnit::GPUWarp, race: OutputRaceStrategy::Atomics },
+                ScheduleCmd::ParallelizeGroup {
+                    var: v("jpos1"),
+                    spec: GroupSpec::new(r, ReductionStrategy::ParallelReduction),
+                    race: OutputRaceStrategy::Atomics,
+                },
+            ],
+            config,
+        }
+    }
+
+    /// Listing 6: `{<1 nnz, c col>, r}` — Sgap nnz-split with grouped
+    /// segment reduction (`segReduceGroup<float, r>`).
+    pub fn sgap_nnz_group(config: SpmmConfig, r: u32) -> Schedule {
+        let v = |s: &str| IndexVar::new(s);
+        let mut config = config;
+        config.r = r;
+        let nnz_per_block = config.p / config.kchunks();
+        Schedule {
+            cmds: vec![
+                ScheduleCmd::Fuse { a: v("i"), b: v("j"), into: v("f") },
+                ScheduleCmd::Pos { var: v("f"), pos_var: v("fpos"), access: Access::new("A", &["i", "j"]) },
+                ScheduleCmd::Split { var: v("fpos"), outer: v("block"), inner: v("fpos1"), factor: nnz_per_block },
+                ScheduleCmd::Split { var: v("k"), outer: v("ko"), inner: v("ki"), factor: config.c },
+                ScheduleCmd::Bound { var: v("ko"), bound_var: v("warp"), extent: config.kchunks() },
+                ScheduleCmd::Precompute { workspace: "tmp".into() },
+                ScheduleCmd::Parallelize { var: v("block"), unit: ParallelUnit::GPUBlock, race: OutputRaceStrategy::IgnoreRaces },
+                ScheduleCmd::Parallelize { var: v("warp"), unit: ParallelUnit::GPUWarp, race: OutputRaceStrategy::NoRaces },
+                ScheduleCmd::Parallelize { var: v("fpos1"), unit: ParallelUnit::GPUThread, race: OutputRaceStrategy::Atomics },
+                ScheduleCmd::ParallelizeGroup {
+                    var: v("fpos1"),
+                    spec: GroupSpec::new(r, ReductionStrategy::SegmentReduction),
+                    race: OutputRaceStrategy::Atomics,
+                },
+            ],
+            config,
+        }
+    }
+
+    // ---- analysis --------------------------------------------------------
+
+    /// Identify which algorithm family the command list describes.
+    ///
+    /// Stock TACO (before Sgap) rejects anything with `GPUGroup`; here it
+    /// is a first-class citizen. Unrecognized command shapes are an error
+    /// — the lowerer supports exactly the shapes the paper exercises.
+    pub fn classify(&self) -> Result<Family, String> {
+        let has_pos = self.cmds.iter().any(|c| matches!(c, ScheduleCmd::Pos { .. }));
+        let group = self.group_cmd();
+        match (has_pos, group) {
+            (true, Some(spec)) => match spec.strategy {
+                ReductionStrategy::SegmentReduction => Ok(Family::NnzGroup),
+                ReductionStrategy::ParallelReduction => Ok(Family::RowGroup),
+            },
+            (true, None) => {
+                // pos without a group: nnz-split serial (Listing 3) unless the
+                // pos var is the reduction var split for cooperative rows.
+                let fused_ij = self.cmds.iter().any(|c| matches!(c, ScheduleCmd::Fuse { a, b, .. } if a.0 == "i" && b.0 == "j"));
+                if fused_ij {
+                    Ok(Family::NnzSerial)
+                } else {
+                    Err("pos-schedule without (i,j) fusion or GPUGroup is unsupported".into())
+                }
+            }
+            (false, None) => Ok(Family::RowSerial),
+            (false, Some(_)) => Err("GPUGroup requires a pos() schedule".into()),
+        }
+    }
+
+    fn group_cmd(&self) -> Option<GroupSpec> {
+        self.cmds.iter().find_map(|c| match c {
+            ScheduleCmd::ParallelizeGroup { spec, .. } => Some(*spec),
+            _ => None,
+        })
+    }
+
+    /// Build the concrete index notation (Listings 3–6 shapes).
+    pub fn to_cin(&self) -> Cin {
+        let mul = Expr::Mul(
+            Box::new(Expr::Access(Access::new("A", &["i", "j"]))),
+            Box::new(Expr::Access(Access::new("B", &["j", "k"]))),
+        );
+        match self.classify().expect("unsupported schedule") {
+            Family::NnzSerial | Family::NnzGroup => {
+                let strategy = self.group_cmd();
+                let consumer = Cin::Assign {
+                    lhs: Access::new("C", &["i", "k"]),
+                    reduce: true,
+                    rhs: Expr::Access(Access::new("tmp", &[])),
+                };
+                let producer = Cin::Assign {
+                    lhs: Access::new("tmp", &[]),
+                    reduce: strategy.is_none(), // serial family accumulates into tmp
+                    rhs: mul,
+                };
+                let wh = Cin::Where { consumer: Box::new(consumer), producer: Box::new(producer) };
+                let inner = match strategy {
+                    Some(spec) => Cin::forall_group("fpos1", spec, OutputRaceStrategy::Atomics, wh),
+                    None => Cin::forall("fpos2", ParallelUnit::GPUThread, OutputRaceStrategy::Atomics, wh),
+                };
+                let ki = Cin::forall("ki", ParallelUnit::Serial, OutputRaceStrategy::NoRaces, inner);
+                let warp = Cin::forall("warp", ParallelUnit::GPUWarp, OutputRaceStrategy::NoRaces, ki);
+                Cin::forall("block", ParallelUnit::GPUBlock, OutputRaceStrategy::IgnoreRaces, warp)
+            }
+            Family::RowSerial => {
+                let asn = Cin::Assign { lhs: Access::new("C", &["i", "k"]), reduce: true, rhs: mul };
+                let j = Cin::forall("j", ParallelUnit::Serial, OutputRaceStrategy::NoRaces, asn);
+                let ki = Cin::forall("ki", ParallelUnit::Serial, OutputRaceStrategy::NoRaces, j);
+                let ii = Cin::forall("ii", ParallelUnit::GPUThread, OutputRaceStrategy::NoRaces, ki);
+                Cin::forall("block", ParallelUnit::GPUBlock, OutputRaceStrategy::NoRaces, ii)
+            }
+            Family::RowGroup => {
+                let spec = self.group_cmd().unwrap();
+                let consumer = Cin::Assign {
+                    lhs: Access::new("C", &["i", "k"]),
+                    reduce: true,
+                    rhs: Expr::Access(Access::new("tjpos1C", &[])),
+                };
+                let producer = Cin::Assign {
+                    lhs: Access::new("tjpos1C", &[]),
+                    reduce: true,
+                    rhs: mul,
+                };
+                let jpos0 = Cin::forall("jpos0", ParallelUnit::Serial, OutputRaceStrategy::NoRaces, producer);
+                let wh = Cin::Where { consumer: Box::new(consumer), producer: Box::new(jpos0) };
+                let jpos1 = Cin::forall_group("jpos1", spec, OutputRaceStrategy::Atomics, wh);
+                let kii = Cin::forall("kii", ParallelUnit::GPUThread, OutputRaceStrategy::NoRaces, jpos1);
+                let warp = Cin::forall("warp", ParallelUnit::GPUWarp, OutputRaceStrategy::Atomics, kii);
+                Cin::forall("ko", ParallelUnit::GPUBlock, OutputRaceStrategy::NoRaces, warp)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classify_four_families() {
+        let cfg = SpmmConfig::default();
+        assert_eq!(Schedule::taco_nnz_serial(cfg).classify().unwrap(), Family::NnzSerial);
+        assert_eq!(Schedule::taco_row_serial(cfg).classify().unwrap(), Family::RowSerial);
+        assert_eq!(Schedule::sgap_row_group(cfg, 8).classify().unwrap(), Family::RowGroup);
+        assert_eq!(Schedule::sgap_nnz_group(cfg, 16).classify().unwrap(), Family::NnzGroup);
+    }
+
+    #[test]
+    fn listing5_cin_shape() {
+        let s = Schedule::sgap_row_group(SpmmConfig::default(), 8);
+        let cin = s.to_cin();
+        let txt = cin.to_string();
+        // Listing 5 structure: GPUGroup with ParallelReduction on jpos1,
+        // where() with the tjpos1C scalar workspace.
+        assert!(txt.contains("GPUGroup[8,ParallelReduction]"), "{txt}");
+        assert!(txt.contains("where("), "{txt}");
+        assert!(txt.contains("tjpos1C+=A(i,j)*B(j,k)"), "{txt}");
+        assert_eq!(cin.group_spec().unwrap().size, 8);
+    }
+
+    #[test]
+    fn listing6_cin_shape() {
+        let s = Schedule::sgap_nnz_group(SpmmConfig::default(), 32);
+        let txt = s.to_cin().to_string();
+        assert!(txt.contains("GPUGroup[32,Segment]"), "{txt}");
+        assert!(txt.contains("tmp=A(i,j)*B(j,k)"), "{txt}");
+    }
+
+    #[test]
+    fn stock_schedules_have_no_group() {
+        assert!(Schedule::taco_nnz_serial(SpmmConfig::default()).to_cin().group_spec().is_none());
+        assert!(Schedule::taco_row_serial(SpmmConfig::default()).to_cin().group_spec().is_none());
+    }
+
+    #[test]
+    fn config_validation() {
+        let ok = SpmmConfig { n: 16, c: 4, p: 256, g: 32, r: 8, x: 1 };
+        ok.validate().unwrap();
+        let bad_c = SpmmConfig { n: 4, c: 3, ..ok };
+        assert!(bad_c.validate().is_err());
+        let bad_r = SpmmConfig { r: 12, ..ok };
+        assert!(bad_r.validate().is_err());
+    }
+
+    #[test]
+    fn cmd_display() {
+        let s = Schedule::sgap_row_group(SpmmConfig::default(), 4);
+        let rendered: Vec<String> = s.cmds.iter().map(|c| c.to_string()).collect();
+        let all = rendered.join(" and ");
+        assert!(all.contains("fuse(i,k,io)"));
+        assert!(all.contains("pos(j,jpos,A(i,j))"));
+        assert!(all.contains("parallelize(jpos1,GPUGroup,4,ParallelReduction,Atomics)"));
+    }
+}

@@ -1,0 +1,274 @@
+//! Atomic parallelism — the SpMM optimization-space model (§3, Fig. 7/8).
+//!
+//! A point is `{<x D, y col>, r}` with `D ∈ {nnz, row}`,
+//! `x, y ∈ {1/g, 1, g}` (minimal data) and reduction parallelism
+//! `r ∈ {1, 2, 4, 8, 16, 32}`. Three pruning rules (§3.3) define legality;
+//! [`enumerate_legal`] walks the whole space, and
+//! [`AtomicPoint::da_spmm_embedding`] reproduces the paper's claim that
+//! DA-SpMM's 8-algorithm space embeds into atomic parallelism.
+
+use std::fmt;
+
+/// What a thread's minimal datum is along the sparse axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DataKind {
+    Nnz,
+    Row,
+}
+
+impl fmt::Display for DataKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", if *self == DataKind::Nnz { "nnz" } else { "row" })
+    }
+}
+
+/// The `x`/`y` multiplier of a minimal datum: `1/g`, `1`, or `g` — with
+/// `g > 1` tunable. `Inv(g)` means `g` threads share one datum.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Factor {
+    /// `1/g` — g threads cooperate on one datum.
+    Inv(u32),
+    /// exactly one datum per thread.
+    One,
+    /// `g` data per thread.
+    Times(u32),
+}
+
+impl Factor {
+    pub fn validate(self) -> Result<(), String> {
+        match self {
+            Factor::Inv(g) | Factor::Times(g) if g < 2 => {
+                Err(format!("tunable factor must be >= 2, got {g} (use One for 1)"))
+            }
+            _ => Ok(()),
+        }
+    }
+}
+
+impl fmt::Display for Factor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Factor::Inv(g) => write!(f, "1/{g}"),
+            Factor::One => write!(f, "1"),
+            Factor::Times(g) => write!(f, "{g}"),
+        }
+    }
+}
+
+/// A point in the atomic-parallelism space: `{<x D, y col>, r}`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct AtomicPoint {
+    pub kind: DataKind,
+    pub x: Factor,
+    pub col: Factor,
+    pub r: u32,
+}
+
+/// Why a point is illegal (§3.3's three rules).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Illegality {
+    /// Rule 1: `<1/g nnz, ...>` or `<x nnz, 1/c col>` — a non-zero must be
+    /// multiplied by at least one dense element.
+    Rule1FractionalNnzOrCol,
+    /// Rule 2: `<1/g row, x col>` with `r < g` — an r-wide parallel
+    /// reduction cannot cover the g cooperating threads' partials with a
+    /// single writeback thread.
+    Rule2ParallelReductionWriteback,
+    /// Rule 3: `<1/g row, 1/c col>` — resource parallelism may multiply
+    /// only one element of the atomic parallelism.
+    Rule3DoubleFraction,
+    /// r out of the hardware range {1,2,4,8,16,32}.
+    BadReductionParallelism,
+}
+
+impl AtomicPoint {
+    pub fn new(kind: DataKind, x: Factor, col: Factor, r: u32) -> Self {
+        AtomicPoint { kind, x, col, r }
+    }
+
+    /// Check the point against the three §3.3 rules. `Ok(())` = legal.
+    pub fn legality(&self) -> Result<(), Illegality> {
+        if !(self.r == 1 || (self.r.is_power_of_two() && self.r <= 32)) {
+            return Err(Illegality::BadReductionParallelism);
+        }
+        match (self.kind, self.x, self.col) {
+            // Rule 1: fractional nnz, or nnz with fractional col
+            (DataKind::Nnz, Factor::Inv(_), _) => Err(Illegality::Rule1FractionalNnzOrCol),
+            (DataKind::Nnz, _, Factor::Inv(_)) => Err(Illegality::Rule1FractionalNnzOrCol),
+            // Rule 3: both axes fractional
+            (DataKind::Row, Factor::Inv(_), Factor::Inv(_)) => Err(Illegality::Rule3DoubleFraction),
+            // Rule 2: cooperative rows need r >= g for parallel reduction
+            (DataKind::Row, Factor::Inv(g), _) if self.r < g => {
+                Err(Illegality::Rule2ParallelReductionWriteback)
+            }
+            _ => Ok(()),
+        }
+    }
+
+    pub fn is_legal(&self) -> bool {
+        self.legality().is_ok()
+    }
+
+    /// Legality when the output race strategy is `Atomics`: Rule 2 is
+    /// lifted, because each r-wide subgroup may write back atomically
+    /// (multiple writeback threads per cooperating row group). This is
+    /// exactly the configuration Table 1 evaluates (`g = 32, r ∈ {4, 8}`)
+    /// — the paper states Rule 2 for the single-writeback parallel
+    /// reduction only.
+    pub fn legality_with_atomics(&self) -> Result<(), Illegality> {
+        match self.legality() {
+            Err(Illegality::Rule2ParallelReductionWriteback) => Ok(()),
+            other => other,
+        }
+    }
+
+    pub fn is_legal_with_atomics(&self) -> bool {
+        self.legality_with_atomics().is_ok()
+    }
+
+    // ---- the DA-SpMM embedding (§3.3) ------------------------------------
+
+    /// `EB+PR` = `{<1 nnz, c col>, 32}`.
+    pub fn eb_pr(c: u32) -> Self {
+        AtomicPoint::new(DataKind::Nnz, Factor::One, Factor::Times(c), 32)
+    }
+    /// `RB+PR` = `{<1/32 row, c col>, 32}`.
+    pub fn rb_pr(c: u32) -> Self {
+        AtomicPoint::new(DataKind::Row, Factor::Inv(32), Factor::Times(c), 32)
+    }
+    /// `EB+SR` = `{<32 nnz, c col>, 1}`.
+    pub fn eb_sr(c: u32) -> Self {
+        AtomicPoint::new(DataKind::Nnz, Factor::Times(32), Factor::Times(c), 1)
+    }
+    /// `RB+SR` = `{<1 row, c col>, 1}`.
+    pub fn rb_sr(c: u32) -> Self {
+        AtomicPoint::new(DataKind::Row, Factor::One, Factor::Times(c), 1)
+    }
+
+    /// All four DA-SpMM algorithm classes (row-major half of the 8; the
+    /// paper folds RM/CM into implementation detail).
+    pub fn da_spmm_embedding(c: u32) -> Vec<(&'static str, AtomicPoint)> {
+        vec![
+            ("EB+PR", Self::eb_pr(c)),
+            ("RB+PR", Self::rb_pr(c)),
+            ("EB+SR", Self::eb_sr(c)),
+            ("RB+SR", Self::rb_sr(c)),
+        ]
+    }
+
+    /// The two new Sgap algorithms (§6.2).
+    pub fn sgap_row(g: u32, c: u32, r: u32) -> Self {
+        AtomicPoint::new(DataKind::Row, Factor::Inv(g), Factor::Times(c), r)
+    }
+    pub fn sgap_nnz(c: u32, r: u32) -> Self {
+        AtomicPoint::new(DataKind::Nnz, Factor::One, Factor::Times(c), r)
+    }
+}
+
+impl fmt::Display for AtomicPoint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{{<{} {}, {} col>, {}}}", self.x, self.kind, self.col, self.r)
+    }
+}
+
+/// Enumerate every point over the given tunable values and classify it —
+/// the data behind Fig. 7/8.
+pub fn enumerate_all(gs: &[u32], cs: &[u32], rs: &[u32]) -> Vec<(AtomicPoint, Result<(), Illegality>)> {
+    let mut out = Vec::new();
+    let factors = |vals: &[u32]| {
+        let mut f = vec![Factor::One];
+        for &v in vals {
+            f.push(Factor::Inv(v));
+            f.push(Factor::Times(v));
+        }
+        f
+    };
+    for kind in [DataKind::Nnz, DataKind::Row] {
+        for &x in &factors(gs) {
+            for &col in &factors(cs) {
+                for &r in rs {
+                    let p = AtomicPoint::new(kind, x, col, r);
+                    let l = p.legality();
+                    out.push((p, l));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Only the legal points.
+pub fn enumerate_legal(gs: &[u32], cs: &[u32], rs: &[u32]) -> Vec<AtomicPoint> {
+    enumerate_all(gs, cs, rs).into_iter().filter(|(_, l)| l.is_ok()).map(|(p, _)| p).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rule1_fractional_nnz_illegal() {
+        let p = AtomicPoint::new(DataKind::Nnz, Factor::Inv(4), Factor::One, 32);
+        assert_eq!(p.legality(), Err(Illegality::Rule1FractionalNnzOrCol));
+        let q = AtomicPoint::new(DataKind::Nnz, Factor::Times(4), Factor::Inv(2), 32);
+        assert_eq!(q.legality(), Err(Illegality::Rule1FractionalNnzOrCol));
+    }
+
+    #[test]
+    fn rule2_row_fraction_needs_r_ge_g() {
+        let bad = AtomicPoint::new(DataKind::Row, Factor::Inv(32), Factor::One, 8);
+        assert_eq!(bad.legality(), Err(Illegality::Rule2ParallelReductionWriteback));
+        let ok = AtomicPoint::new(DataKind::Row, Factor::Inv(8), Factor::One, 8);
+        assert!(ok.is_legal());
+        let ok2 = AtomicPoint::new(DataKind::Row, Factor::Inv(8), Factor::One, 32);
+        assert!(ok2.is_legal());
+    }
+
+    #[test]
+    fn rule3_double_fraction_illegal() {
+        let p = AtomicPoint::new(DataKind::Row, Factor::Inv(4), Factor::Inv(2), 32);
+        assert_eq!(p.legality(), Err(Illegality::Rule3DoubleFraction));
+    }
+
+    #[test]
+    fn da_spmm_points_are_legal_and_as_published() {
+        for (name, p) in AtomicPoint::da_spmm_embedding(4) {
+            assert!(p.is_legal(), "{name} {p} illegal");
+        }
+        assert_eq!(AtomicPoint::eb_pr(4).to_string(), "{<1 nnz, 4 col>, 32}");
+        assert_eq!(AtomicPoint::rb_pr(4).to_string(), "{<1/32 row, 4 col>, 32}");
+        assert_eq!(AtomicPoint::eb_sr(4).to_string(), "{<32 nnz, 4 col>, 1}");
+        assert_eq!(AtomicPoint::rb_sr(4).to_string(), "{<1 row, 4 col>, 1}");
+    }
+
+    #[test]
+    fn sgap_points_extend_da_spmm() {
+        // {<1 nnz, c col>, r} with r < 32 is legal but NOT in DA-SpMM
+        let p = AtomicPoint::sgap_nnz(4, 8);
+        assert!(p.is_legal());
+        for (_, q) in AtomicPoint::da_spmm_embedding(4) {
+            assert_ne!(p, q);
+        }
+    }
+
+    #[test]
+    fn enumeration_counts() {
+        let all = enumerate_all(&[8, 32], &[4], &[1, 8, 32]);
+        // factors: One, Inv8, T8, Inv32, T32 (5) × col: One, Inv4, T4 (3)
+        // × kinds 2 × r 3 = 90
+        assert_eq!(all.len(), 90);
+        let legal = enumerate_legal(&[8, 32], &[4], &[1, 8, 32]);
+        assert!(!legal.is_empty() && legal.len() < all.len());
+        for p in &legal {
+            assert!(p.is_legal());
+        }
+    }
+
+    #[test]
+    fn bad_r_rejected() {
+        let p = AtomicPoint::new(DataKind::Nnz, Factor::One, Factor::One, 12);
+        assert_eq!(p.legality(), Err(Illegality::BadReductionParallelism));
+        let q = AtomicPoint::new(DataKind::Nnz, Factor::One, Factor::One, 64);
+        assert_eq!(q.legality(), Err(Illegality::BadReductionParallelism));
+    }
+}

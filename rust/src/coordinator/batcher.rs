@@ -1,0 +1,117 @@
+//! Shape-bucket batcher: groups queued requests by routing key so the
+//! worker amortizes executable lookup/dispatch over a batch.
+//!
+//! Invariants (property-tested in `rust/tests/coordinator_props.rs`):
+//! * FIFO within a bucket — requests to the same key keep arrival order;
+//! * fairness across buckets — `next_batch` serves the bucket whose head
+//!   arrived earliest;
+//! * no loss — every pushed item is drained exactly once;
+//! * batch bound — a batch never exceeds `max_batch`.
+
+use std::collections::VecDeque;
+
+/// A keyed FIFO batcher.
+#[derive(Debug)]
+pub struct Batcher<K: Eq + Clone, T> {
+    /// (key, queue, arrival counter of head)
+    buckets: Vec<(K, VecDeque<(u64, T)>)>,
+    counter: u64,
+    max_batch: usize,
+}
+
+impl<K: Eq + Clone, T> Batcher<K, T> {
+    pub fn new(max_batch: usize) -> Self {
+        assert!(max_batch > 0);
+        Batcher { buckets: Vec::new(), counter: 0, max_batch }
+    }
+
+    pub fn push(&mut self, key: K, item: T) {
+        let seq = self.counter;
+        self.counter += 1;
+        if let Some((_, q)) = self.buckets.iter_mut().find(|(k, _)| *k == key) {
+            q.push_back((seq, item));
+        } else {
+            let mut q = VecDeque::new();
+            q.push_back((seq, item));
+            self.buckets.push((key, q));
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buckets.iter().map(|(_, q)| q.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Pop the next batch: up to `max_batch` items from the bucket whose
+    /// head request arrived earliest. Empty buckets are pruned.
+    pub fn next_batch(&mut self) -> Option<(K, Vec<T>)> {
+        let idx = self
+            .buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, (_, q))| !q.is_empty())
+            .min_by_key(|(_, (_, q))| q.front().map(|(s, _)| *s).unwrap_or(u64::MAX))
+            .map(|(i, _)| i)?;
+        let key = self.buckets[idx].0.clone();
+        let q = &mut self.buckets[idx].1;
+        let take = q.len().min(self.max_batch);
+        let items: Vec<T> = q.drain(..take).map(|(_, t)| t).collect();
+        if q.is_empty() {
+            self.buckets.remove(idx);
+        }
+        Some((key, items))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_within_bucket() {
+        let mut b = Batcher::new(10);
+        b.push("a", 1);
+        b.push("a", 2);
+        b.push("a", 3);
+        let (_, items) = b.next_batch().unwrap();
+        assert_eq!(items, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn earliest_head_served_first() {
+        let mut b = Batcher::new(10);
+        b.push("a", 1);
+        b.push("b", 2);
+        b.push("a", 3);
+        let (k1, _) = b.next_batch().unwrap();
+        assert_eq!(k1, "a");
+        let (k2, v2) = b.next_batch().unwrap();
+        assert_eq!((k2, v2), ("b", vec![2]));
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn batch_bound_respected() {
+        let mut b = Batcher::new(2);
+        for i in 0..5 {
+            b.push("a", i);
+        }
+        assert_eq!(b.next_batch().unwrap().1, vec![0, 1]);
+        assert_eq!(b.next_batch().unwrap().1, vec![2, 3]);
+        assert_eq!(b.next_batch().unwrap().1, vec![4]);
+    }
+
+    #[test]
+    fn len_tracks() {
+        let mut b = Batcher::new(4);
+        assert!(b.is_empty());
+        b.push(1u32, "x");
+        b.push(2u32, "y");
+        assert_eq!(b.len(), 2);
+        b.next_batch();
+        assert_eq!(b.len(), 1);
+    }
+}

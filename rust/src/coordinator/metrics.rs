@@ -1,0 +1,107 @@
+//! Service metrics: request counters and latency quantiles.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Shared, thread-safe metrics sink.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    errors: AtomicU64,
+    batches: AtomicU64,
+    /// Latencies in microseconds (bounded reservoir).
+    latencies_us: Mutex<Vec<u64>>,
+}
+
+/// Point-in-time view.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsSnapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub errors: u64,
+    pub batches: u64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub mean_us: f64,
+}
+
+const RESERVOIR: usize = 65_536;
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn on_submit(&self) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_batch(&self) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_complete(&self, latency: Duration) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        let mut l = self.latencies_us.lock().unwrap();
+        if l.len() < RESERVOIR {
+            l.push(latency.as_micros() as u64);
+        }
+    }
+
+    pub fn on_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut l = self.latencies_us.lock().unwrap().clone();
+        l.sort_unstable();
+        let q = |p: f64| -> u64 {
+            if l.is_empty() {
+                0
+            } else {
+                l[((l.len() - 1) as f64 * p) as usize]
+            }
+        };
+        let mean = if l.is_empty() { 0.0 } else { l.iter().sum::<u64>() as f64 / l.len() as f64 };
+        MetricsSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            p50_us: q(0.50),
+            p99_us: q(0.99),
+            mean_us: mean,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_quantiles() {
+        let m = Metrics::new();
+        for i in 1..=100u64 {
+            m.on_submit();
+            m.on_complete(Duration::from_micros(i));
+        }
+        m.on_error();
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 100);
+        assert_eq!(s.completed, 100);
+        assert_eq!(s.errors, 1);
+        assert!(s.p50_us >= 45 && s.p50_us <= 55, "p50 {}", s.p50_us);
+        assert!(s.p99_us >= 95, "p99 {}", s.p99_us);
+        assert!((s.mean_us - 50.5).abs() < 1.0);
+    }
+
+    #[test]
+    fn empty_snapshot_is_zero() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.p50_us, 0);
+        assert_eq!(s.mean_us, 0.0);
+    }
+}

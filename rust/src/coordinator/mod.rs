@@ -1,0 +1,17 @@
+//! The serving coordinator — L3's request path.
+//!
+//! The paper's contribution lives in the compiler (L2/L1-adjacent), so per
+//! DESIGN.md the coordinator is a focused service: an SpMM/GCN request
+//! queue with shape-bucket **batching**, artifact **routing** (PJRT
+//! executables compiled once and kept hot), a CPU fallback for requests no
+//! bucket admits, and metrics. Thread-based (the offline dependency set
+//! has no async runtime); one worker owns the PJRT client, callers get a
+//! channel future.
+
+pub mod batcher;
+pub mod metrics;
+pub mod server;
+
+pub use batcher::Batcher;
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use server::{Coordinator, Request, Response};

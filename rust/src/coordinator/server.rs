@@ -1,0 +1,247 @@
+//! The coordinator service: accepts SpMM/GCN jobs, batches them by
+//! artifact route, executes on the PJRT runtime (CPU fallback when no
+//! bucket admits a request), and reports metrics.
+//!
+//! Architecture: callers `submit()` onto an MPSC channel and receive a
+//! one-shot response channel. A single worker thread owns the PJRT client
+//! (executables stay hot in its cache), drains the queue into a
+//! [`Batcher`] keyed by artifact name, and serves batches FIFO-fairly.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::algos::cpu_ref::spmm_serial;
+use crate::runtime::{ArtifactKind, Runtime};
+use crate::sparse::Csr;
+
+use super::batcher::Batcher;
+use super::metrics::Metrics;
+
+/// An SpMM job: `C = A · B` with `B` row-major `[a.cols × n]`.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub a: Csr,
+    pub b: Vec<f32>,
+    pub n: usize,
+}
+
+/// The served result.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub c: Vec<f32>,
+    /// Which path served it: the artifact name, or "cpu-fallback".
+    pub backend: String,
+    pub latency_us: u64,
+}
+
+struct Job {
+    req: Request,
+    submitted: Instant,
+    resp: Sender<Result<Response, String>>,
+}
+
+/// Handle to a running coordinator.
+pub struct Coordinator {
+    tx: Option<Sender<Job>>,
+    worker: Option<JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+}
+
+const MAX_BATCH: usize = 16;
+
+impl Coordinator {
+    /// Start the worker. `artifacts_dir = None` forces the CPU fallback
+    /// path (useful in tests without built artifacts).
+    ///
+    /// The PJRT client is `!Send`, so the [`Runtime`] is constructed
+    /// *inside* the worker thread; startup errors are reported back over
+    /// a one-shot channel before the worker enters its loop.
+    pub fn start(artifacts_dir: Option<PathBuf>) -> Result<Coordinator> {
+        let (tx, rx) = channel::<Job>();
+        let metrics = Arc::new(Metrics::new());
+        let m = metrics.clone();
+        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+        let worker = std::thread::Builder::new()
+            .name("sgap-coordinator".into())
+            .spawn(move || {
+                let mut runtime = match &artifacts_dir {
+                    Some(dir) => match Runtime::load(dir) {
+                        Ok(rt) => {
+                            let _ = ready_tx.send(Ok(()));
+                            Some(rt)
+                        }
+                        Err(e) => {
+                            let _ = ready_tx.send(Err(e.to_string()));
+                            return;
+                        }
+                    },
+                    None => {
+                        let _ = ready_tx.send(Ok(()));
+                        None
+                    }
+                };
+                worker_loop(rx, &mut runtime, &m)
+            })
+            .expect("spawn coordinator");
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("coordinator worker died during startup"))?
+            .map_err(|e| anyhow::anyhow!("runtime load failed: {e}"))?;
+        Ok(Coordinator { tx: Some(tx), worker: Some(worker), metrics })
+    }
+
+    /// Submit a job; the returned channel yields the response.
+    pub fn submit(&self, req: Request) -> Receiver<Result<Response, String>> {
+        let (rtx, rrx) = channel();
+        self.metrics.on_submit();
+        let job = Job { req, submitted: Instant::now(), resp: rtx };
+        if let Some(tx) = &self.tx {
+            // a send error means the worker died; the caller sees a
+            // disconnected receiver
+            let _ = tx.send(job);
+        }
+        rrx
+    }
+
+    /// Convenience: submit and wait.
+    pub fn spmm_blocking(&self, a: Csr, b: Vec<f32>, n: usize) -> Result<Response> {
+        let rx = self.submit(Request { a, b, n });
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("coordinator worker gone"))?
+            .map_err(|e| anyhow::anyhow!(e))
+    }
+
+    /// Stop accepting work and join the worker.
+    pub fn shutdown(mut self) {
+        self.tx.take(); // close the channel
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.tx.take();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Routing key: the artifact that will serve a request.
+fn route(runtime: &Option<Runtime>, req: &Request) -> String {
+    if let Some(rt) = runtime {
+        if let Some(spec) =
+            rt.registry.route(ArtifactKind::SpmmNnzSr, req.a.rows, req.a.cols, req.a.nnz())
+        {
+            if spec.n == req.n {
+                return spec.name.clone();
+            }
+        }
+    }
+    "cpu-fallback".to_string()
+}
+
+fn worker_loop(rx: Receiver<Job>, runtime: &mut Option<Runtime>, metrics: &Metrics) {
+    let mut batcher: Batcher<String, Job> = Batcher::new(MAX_BATCH);
+    loop {
+        // Block for one job, then opportunistically drain the queue —
+        // micro-batching under load, low latency when idle.
+        match rx.recv() {
+            Ok(job) => {
+                let key = route(runtime, &job.req);
+                batcher.push(key, job);
+            }
+            Err(_) => break, // all senders dropped: shut down
+        }
+        while let Ok(job) = rx.try_recv() {
+            let key = route(runtime, &job.req);
+            batcher.push(key, job);
+        }
+        while let Some((key, jobs)) = batcher.next_batch() {
+            metrics.on_batch();
+            for job in jobs {
+                serve_one(&key, job, runtime, metrics);
+            }
+        }
+    }
+}
+
+fn serve_one(key: &str, job: Job, runtime: &mut Option<Runtime>, metrics: &Metrics) {
+    let result = if key == "cpu-fallback" {
+        Ok(spmm_serial(&job.req.a, &job.req.b, job.req.n))
+    } else {
+        runtime
+            .as_mut()
+            .expect("routed to artifact without runtime")
+            .run_spmm_nnz(key, &job.req.a, &job.req.b)
+            .map_err(|e| e.to_string())
+    };
+    let latency = job.submitted.elapsed();
+    match result {
+        Ok(c) => {
+            metrics.on_complete(latency);
+            let _ = job.resp.send(Ok(Response {
+                c,
+                backend: key.to_string(),
+                latency_us: latency.as_micros() as u64,
+            }));
+        }
+        Err(e) => {
+            metrics.on_error();
+            let _ = job.resp.send(Err(e));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::cpu_ref::max_rel_err;
+    use crate::sparse::{erdos_renyi, SplitMix64};
+
+    #[test]
+    fn serves_on_cpu_fallback() {
+        let coord = Coordinator::start(None).unwrap();
+        let a = erdos_renyi(64, 64, 300, 4).to_csr();
+        let mut rng = SplitMix64::new(5);
+        let b: Vec<f32> = (0..64 * 4).map(|_| rng.value()).collect();
+        let want = spmm_serial(&a, &b, 4);
+        let resp = coord.spmm_blocking(a, b, 4).unwrap();
+        assert_eq!(resp.backend, "cpu-fallback");
+        assert!(max_rel_err(&resp.c, &want) < 1e-6);
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.completed, 1);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn concurrent_submissions_all_complete() {
+        let coord = Coordinator::start(None).unwrap();
+        let mut rxs = Vec::new();
+        for seed in 0..20u64 {
+            let a = erdos_renyi(32, 32, 100, seed).to_csr();
+            let mut rng = SplitMix64::new(seed);
+            let b: Vec<f32> = (0..32 * 2).map(|_| rng.value()).collect();
+            rxs.push((seed, coord.submit(Request { a, b, n: 2 })));
+        }
+        for (seed, rx) in rxs {
+            let resp = rx.recv().unwrap().unwrap();
+            assert_eq!(resp.c.len(), 32 * 2, "seed {seed}");
+        }
+        assert_eq!(coord.metrics.snapshot().completed, 20);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn shutdown_is_clean() {
+        let coord = Coordinator::start(None).unwrap();
+        coord.shutdown(); // no panic, worker joined
+    }
+}

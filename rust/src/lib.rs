@@ -1,0 +1,30 @@
+//! # Sgap — segment group & atomic parallelism for sparse tensor algebra
+//!
+//! Reproduction of *"Sgap: Towards Efficient Sparse Tensor Algebra
+//! Compilation for GPU"* (Zhang et al., 2022) as a three-layer
+//! rust + JAX + Pallas stack. See `DESIGN.md` for the system inventory and
+//! `EXPERIMENTS.md` for the paper-vs-measured record.
+//!
+//! Crate layout:
+//!
+//! * [`sparse`] — sparse formats (COO/CSR/ELL), MatrixMarket IO, seeded
+//!   synthetic generators and the evaluation dataset suite.
+//! * [`compiler`] — the mini-TACO: tensor algebra expressions, concrete
+//!   index notation (CIN), schedule transformations (including the new
+//!   `parallelize(.., GPUGroup, r, strategy)`), lowering with segment
+//!   reduction + zero extension, LLIR, and CUDA-text / simulator codegen.
+//! * [`sim`] — the SIMT cost simulator standing in for the paper's GPUs.
+//! * [`algos`] — the four TACO algorithm families plus the dgSPARSE
+//!   kernels, each with numeric and simulated execution paths.
+//! * [`tuner`] — atomic-parallelism space search + input-dynamics selector.
+//! * [`runtime`] — PJRT artifact loading/execution (numeric hot path).
+//! * [`coordinator`] — async SpMM service: batching, routing, metrics.
+
+pub mod algos;
+pub mod compiler;
+pub mod coordinator;
+pub mod runtime;
+pub mod sim;
+pub mod sparse;
+pub mod tuner;
+pub mod bench_util;

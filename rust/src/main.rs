@@ -1,0 +1,194 @@
+//! `sgap` — CLI for the Sgap reproduction.
+//!
+//! Subcommands:
+//!   codegen   — lower a scheduled SpMM and print the CUDA-like kernel
+//!   space     — print the atomic-parallelism legality map (Fig. 7/8)
+//!   stats     — print the evaluation-suite matrix statistics
+//!   tune      — grid-search one suite matrix on the simulator
+//!   serve     — start the coordinator and push a demo workload
+//!
+//! Argument parsing is hand-rolled (`--key value` pairs) — the offline
+//! dependency set has no clap.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use sgap::compiler::codegen_cuda::{emit_translation_unit, macro_header};
+use sgap::compiler::schedule::{Schedule, SpmmConfig};
+use sgap::compiler::spaces;
+use sgap::coordinator::Coordinator;
+use sgap::sim::{HwProfile, Machine};
+use sgap::sparse::{suite, MatrixStats, SplitMix64};
+use sgap::tuner;
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut m = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let val = args.get(i + 1).cloned().unwrap_or_else(|| "true".into());
+            m.insert(key.to_string(), val);
+            i += 2;
+        } else {
+            i += 1;
+        }
+    }
+    m
+}
+
+fn flag_u32(flags: &HashMap<String, String>, key: &str, default: u32) -> Result<u32> {
+    match flags.get(key) {
+        Some(v) => v.parse().with_context(|| format!("--{key} must be an integer")),
+        None => Ok(default),
+    }
+}
+
+fn hw_by_name(name: &str) -> Result<HwProfile> {
+    Ok(match name {
+        "3090" | "rtx3090" => HwProfile::rtx3090(),
+        "2080" | "rtx2080" => HwProfile::rtx2080(),
+        "v100" => HwProfile::v100(),
+        other => bail!("unknown hardware profile `{other}` (3090|2080|v100)"),
+    })
+}
+
+fn cmd_codegen(flags: &HashMap<String, String>) -> Result<()> {
+    let n = flag_u32(flags, "n", 4)?;
+    let c = flag_u32(flags, "c", 4)?;
+    let r = flag_u32(flags, "r", 32)?;
+    let g = flag_u32(flags, "g", 32)?;
+    let cfg = SpmmConfig { n, c, p: 256, g, r, x: 1 };
+    let family = flags.get("family").map(String::as_str).unwrap_or("nnz-group");
+    let schedule = match family {
+        "nnz-group" => Schedule::sgap_nnz_group(cfg, r),
+        "row-group" => Schedule::sgap_row_group(cfg, r),
+        "nnz-serial" => Schedule::taco_nnz_serial(cfg),
+        "row-serial" => Schedule::taco_row_serial(cfg),
+        other => bail!("unknown family `{other}`"),
+    };
+    println!(
+        "// schedule: {}",
+        schedule.cmds.iter().map(|c| c.to_string()).collect::<Vec<_>>().join(" and ")
+    );
+    println!("// CIN: {}", schedule.to_cin());
+    println!();
+    let kernel = sgap::compiler::lower(&schedule)?;
+    print!("{}", emit_translation_unit(&kernel));
+    Ok(())
+}
+
+fn cmd_space() -> Result<()> {
+    println!("atomic parallelism space (g,c in {{2..32}}, r in {{1..32}}) — Fig. 7/8");
+    println!("{:<34} {:<10} reason", "point", "legal");
+    for (p, l) in spaces::enumerate_all(&[2, 8, 32], &[4], &[1, 4, 8, 32]) {
+        match l {
+            Ok(()) => println!("{:<34} {:<10}", p.to_string(), "yes"),
+            Err(e) => println!("{:<34} {:<10} {:?}", p.to_string(), "no", e),
+        }
+    }
+    println!("\nDA-SpMM embedding (c = 4):");
+    for (name, p) in spaces::AtomicPoint::da_spmm_embedding(4) {
+        println!("  {name:<8} = {p}");
+    }
+    Ok(())
+}
+
+fn cmd_stats() -> Result<()> {
+    println!(
+        "{:<26} {:>8} {:>10} {:>10} {:>8} {:>8} {:>6}",
+        "name", "rows", "nnz", "density", "deg", "cv", "gini"
+    );
+    for d in suite() {
+        let s = MatrixStats::of(&d.matrix.to_csr());
+        println!(
+            "{:<26} {:>8} {:>10} {:>10.2e} {:>8.1} {:>8.2} {:>6.2}",
+            d.name, s.rows, s.nnz, s.density, s.row_degree_mean, s.row_degree_cv, s.gini
+        );
+    }
+    Ok(())
+}
+
+fn cmd_tune(flags: &HashMap<String, String>) -> Result<()> {
+    let n = flag_u32(flags, "n", 4)?;
+    let hw = hw_by_name(flags.get("hw").map(String::as_str).unwrap_or("3090"))?;
+    let name = flags.get("dataset").cloned().unwrap_or_else(|| "er_1024_d5e-3".into());
+    let ds = suite()
+        .into_iter()
+        .find(|d| d.name == name)
+        .with_context(|| format!("dataset `{name}` not in suite (try `sgap stats` for names)"))?;
+    let a = ds.matrix.to_csr();
+    let mut rng = SplitMix64::new(7);
+    let b: Vec<f32> = (0..a.cols * n as usize).map(|_| rng.value()).collect();
+    let machine = Machine::new(hw);
+
+    let mut cands = tuner::space::taco_candidates(n);
+    cands.extend(tuner::space::sgap_candidates(n));
+    println!("tuning {} on {} ({} candidates, N={n})", name, hw.name, cands.len());
+    let out = tuner::tune(&machine, &cands, &a, &b, n)?;
+    println!("{:<34} {:>12} {:>10}", "algorithm", "time (us)", "GFLOP/s");
+    for (alg, t, gf) in out.ranked.iter().take(12) {
+        println!("{:<34} {:>12.2} {:>10.2}", alg.name(), t * 1e6, gf);
+    }
+    let (best, t) = out.best();
+    println!("\nbest: {} at {:.2} us", best.name(), t * 1e6);
+    Ok(())
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    let dir = sgap::runtime::Runtime::default_dir();
+    let use_artifacts = dir.join("manifest.json").exists() && !flags.contains_key("cpu-only");
+    println!(
+        "starting coordinator ({})",
+        if use_artifacts { "PJRT artifacts" } else { "cpu fallback" }
+    );
+    let coord = Coordinator::start(if use_artifacts { Some(dir) } else { None })?;
+    let requests = flag_u32(flags, "requests", 32)?;
+    let mut rng = SplitMix64::new(123);
+    let mut rxs = Vec::new();
+    for i in 0..requests {
+        let a = sgap::sparse::erdos_renyi(256, 256, 2000, i as u64).to_csr();
+        let b: Vec<f32> = (0..256 * 4).map(|_| rng.value()).collect();
+        rxs.push(coord.submit(sgap::coordinator::Request { a, b, n: 4 }));
+    }
+    for rx in rxs {
+        let resp = rx.recv().context("worker gone")?;
+        resp.map_err(|e| anyhow::anyhow!(e))?;
+    }
+    let s = coord.metrics.snapshot();
+    println!(
+        "served {} requests in {} batches: p50 {} us, p99 {} us, mean {:.1} us",
+        s.completed, s.batches, s.p50_us, s.p99_us, s.mean_us
+    );
+    coord.shutdown();
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let flags = parse_flags(&args[1.min(args.len())..]);
+    match cmd {
+        "codegen" => cmd_codegen(&flags),
+        "space" => cmd_space(),
+        "stats" => cmd_stats(),
+        "tune" => cmd_tune(&flags),
+        "serve" => cmd_serve(&flags),
+        "macros" => {
+            print!("{}", macro_header());
+            Ok(())
+        }
+        _ => {
+            println!("sgap — segment group & atomic parallelism (Sgap reproduction)");
+            println!();
+            println!("usage: sgap <command> [--flag value ...]");
+            println!("  codegen  --family nnz-group|row-group|nnz-serial|row-serial --n 4 --c 4 --g 32 --r 32");
+            println!("  space    (print the Fig. 7/8 legality map)");
+            println!("  stats    (print the evaluation-suite statistics)");
+            println!("  tune     --dataset er_1024_d5e-3 --n 4 --hw 3090|2080|v100");
+            println!("  serve    --requests 32 [--cpu-only] (SGAP_ARTIFACTS overrides artifacts dir)");
+            println!("  macros   (print the §5.3 macro-instruction header)");
+            Ok(())
+        }
+    }
+}

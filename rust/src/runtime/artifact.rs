@@ -1,0 +1,254 @@
+//! Artifact registry: parses `artifacts/manifest.json` (written by
+//! `python/compile/aot.py`) and marshals CSR matrices into the padded
+//! static-shape buffers each HLO artifact expects.
+//!
+//! The padding rules mirror `python/compile/kernels/common.py` exactly
+//! (single source of truth is the python side; tests cross-check against
+//! the oracle numerics, which would drift on any mismatch).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::sparse::Csr;
+
+use super::json::Json;
+
+/// Kinds of artifacts `aot.py` emits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    SpmmNnzSr,
+    SpmmRowPr,
+    Gcn2,
+}
+
+/// One artifact's static shapes.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub kind: ArtifactKind,
+    pub file: PathBuf,
+    pub rows: usize,
+    pub cols: usize,
+    pub n: usize,
+    /// COO kinds: padded nnz; ELL kind: slots per row.
+    pub nnz: usize,
+    pub slots: usize,
+    pub group: usize,
+    pub in_feat: usize,
+    pub hidden: usize,
+    pub out_feat: usize,
+}
+
+impl ArtifactSpec {
+    fn from_json(name: &str, dir: &Path, j: &Json) -> Result<Self> {
+        let kind_s = j.get("kind").and_then(Json::as_str).context("missing kind")?;
+        let kind = match kind_s {
+            "spmm_nnz_sr" => ArtifactKind::SpmmNnzSr,
+            "spmm_row_pr" => ArtifactKind::SpmmRowPr,
+            "gcn2" => ArtifactKind::Gcn2,
+            other => bail!("unknown artifact kind {other}"),
+        };
+        let get = |k: &str| j.get(k).and_then(Json::as_usize).unwrap_or(0);
+        Ok(ArtifactSpec {
+            name: name.to_string(),
+            kind,
+            file: dir.join(j.get("file").and_then(Json::as_str).context("missing file")?),
+            rows: get("rows"),
+            cols: get("cols"),
+            n: get("n"),
+            nnz: get("nnz"),
+            slots: get("slots"),
+            group: get("group"),
+            in_feat: get("in_feat"),
+            hidden: get("hidden"),
+            out_feat: get("out_feat"),
+        })
+    }
+
+    /// Can this artifact serve a `rows × cols` matrix with `nnz` non-zeros?
+    pub fn admits(&self, rows: usize, cols: usize, nnz: usize) -> bool {
+        rows <= self.rows
+            && cols <= self.cols
+            && match self.kind {
+                ArtifactKind::SpmmNnzSr | ArtifactKind::Gcn2 => nnz <= self.nnz,
+                ArtifactKind::SpmmRowPr => true, // per-row degree checked at pad time
+            }
+    }
+}
+
+/// Padded COO buffers for the nnz-SR artifacts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PaddedCoo {
+    pub row_idx: Vec<i32>,
+    pub col_idx: Vec<i32>,
+    pub vals: Vec<f32>,
+}
+
+/// Pad CSR to the artifact's COO bucket. Padding entries carry
+/// `row = spec.rows` (sentinel), `col = 0`, `val = 0` (zero extension).
+pub fn pad_coo(a: &Csr, spec: &ArtifactSpec) -> Result<PaddedCoo> {
+    if a.nnz() > spec.nnz || a.rows > spec.rows || a.cols > spec.cols {
+        bail!(
+            "matrix {}x{} nnz={} exceeds bucket {}x{} nnz={}",
+            a.rows, a.cols, a.nnz(), spec.rows, spec.cols, spec.nnz
+        );
+    }
+    let sentinel = spec.rows as i32;
+    let mut row_idx = vec![sentinel; spec.nnz];
+    let mut col_idx = vec![0i32; spec.nnz];
+    let mut vals = vec![0f32; spec.nnz];
+    let mut k = 0;
+    for i in 0..a.rows {
+        for p in a.indptr[i] as usize..a.indptr[i + 1] as usize {
+            row_idx[k] = i as i32;
+            col_idx[k] = a.indices[p] as i32;
+            vals[k] = a.data[p];
+            k += 1;
+        }
+    }
+    Ok(PaddedCoo { row_idx, col_idx, vals })
+}
+
+/// Padded ELL buffers for the row-PR artifacts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PaddedEll {
+    pub cols: Vec<i32>,
+    pub vals: Vec<f32>,
+}
+
+pub fn pad_ell(a: &Csr, spec: &ArtifactSpec) -> Result<PaddedEll> {
+    if a.rows > spec.rows || a.cols > spec.cols {
+        bail!("matrix too large for ELL bucket");
+    }
+    if a.max_row_degree() > spec.slots {
+        bail!("row degree {} exceeds bucket slots {}", a.max_row_degree(), spec.slots);
+    }
+    let mut cols = vec![0i32; spec.rows * spec.slots];
+    let mut vals = vec![0f32; spec.rows * spec.slots];
+    for i in 0..a.rows {
+        let lo = a.indptr[i] as usize;
+        for (s, p) in (lo..a.indptr[i + 1] as usize).enumerate() {
+            cols[i * spec.slots + s] = a.indices[p] as i32;
+            vals[i * spec.slots + s] = a.data[p];
+        }
+    }
+    Ok(PaddedEll { cols, vals })
+}
+
+/// Pad a row-major dense matrix `[rows × n]` to `[spec_rows × n]`.
+pub fn pad_dense(b: &[f32], rows: usize, n: usize, spec_rows: usize) -> Vec<f32> {
+    assert_eq!(b.len(), rows * n);
+    let mut out = vec![0f32; spec_rows * n];
+    out[..rows * n].copy_from_slice(b);
+    out
+}
+
+/// The artifact registry: all specs from a manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Registry {
+    pub specs: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Registry {
+    pub fn load(dir: &Path) -> Result<Registry> {
+        let manifest = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {}", manifest.display()))?;
+        Self::from_json_str(&text, dir)
+    }
+
+    pub fn from_json_str(text: &str, dir: &Path) -> Result<Registry> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let obj = j.as_obj().context("manifest must be an object")?;
+        let mut specs = BTreeMap::new();
+        for (name, entry) in obj {
+            specs.insert(name.clone(), ArtifactSpec::from_json(name, dir, entry)?);
+        }
+        Ok(Registry { specs })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.specs.get(name).with_context(|| format!("no artifact `{name}`"))
+    }
+
+    /// Find the best (smallest admitting) artifact of a kind for a matrix.
+    pub fn route(&self, kind: ArtifactKind, rows: usize, cols: usize, nnz: usize) -> Option<&ArtifactSpec> {
+        self.specs
+            .values()
+            .filter(|s| s.kind == kind && s.admits(rows, cols, nnz))
+            .min_by_key(|s| s.rows * s.n + s.nnz)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+
+    const MANIFEST: &str = r#"{
+      "spmm_nnz_sr_r512_z4096_n4_g32": {"kind": "spmm_nnz_sr", "file": "a.hlo.txt",
+        "rows": 512, "cols": 512, "nnz": 4096, "n": 4, "tile": 256, "group": 32},
+      "spmm_row_pr_r512_s32_n4_g32": {"kind": "spmm_row_pr", "file": "b.hlo.txt",
+        "rows": 512, "cols": 512, "slots": 32, "n": 4, "row_tile": 64, "group": 32},
+      "gcn2": {"kind": "gcn2", "file": "g.hlo.txt", "rows": 4096, "cols": 4096,
+        "nnz": 16384, "n": 16, "in_feat": 64, "hidden": 16, "out_feat": 16}
+    }"#;
+
+    fn reg() -> Registry {
+        Registry::from_json_str(MANIFEST, Path::new("/art")).unwrap()
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let r = reg();
+        assert_eq!(r.specs.len(), 3);
+        let s = r.get("gcn2").unwrap();
+        assert_eq!(s.kind, ArtifactKind::Gcn2);
+        assert_eq!(s.in_feat, 64);
+        assert_eq!(s.file, PathBuf::from("/art/g.hlo.txt"));
+    }
+
+    #[test]
+    fn routes_to_admitting_artifact() {
+        let r = reg();
+        let s = r.route(ArtifactKind::SpmmNnzSr, 100, 100, 1000).unwrap();
+        assert_eq!(s.rows, 512);
+        assert!(r.route(ArtifactKind::SpmmNnzSr, 1000, 100, 1000).is_none());
+    }
+
+    #[test]
+    fn pad_coo_layout_matches_python() {
+        let r = reg();
+        let spec = r.get("spmm_nnz_sr_r512_z4096_n4_g32").unwrap();
+        let a = Coo::new(3, 4, vec![(0, 1, 2.0), (2, 3, 1.5)]).to_csr();
+        let p = pad_coo(&a, spec).unwrap();
+        assert_eq!(p.row_idx.len(), 4096);
+        assert_eq!(&p.row_idx[..3], &[0, 2, 512]); // sentinel = spec.rows
+        assert_eq!(&p.col_idx[..2], &[1, 3]);
+        assert_eq!(p.vals[1], 1.5);
+        assert_eq!(p.vals[2], 0.0);
+    }
+
+    #[test]
+    fn pad_ell_rejects_fat_rows() {
+        let r = reg();
+        let spec = r.get("spmm_row_pr_r512_s32_n4_g32").unwrap();
+        let fat = Coo::new(64, 64, (0..40u32).map(|c| (0u32, c, 1.0f32)).collect()).to_csr();
+        assert!(pad_ell(&fat, spec).is_err());
+        let ok = Coo::new(4, 8, vec![(1, 2, 3.0)]).to_csr();
+        let p = pad_ell(&ok, spec).unwrap();
+        assert_eq!(p.cols[1 * 32], 2);
+        assert_eq!(p.vals[1 * 32], 3.0);
+    }
+
+    #[test]
+    fn pad_dense_extends_rows() {
+        let b = vec![1.0, 2.0, 3.0, 4.0]; // 2x2
+        let p = pad_dense(&b, 2, 2, 4);
+        assert_eq!(p.len(), 8);
+        assert_eq!(&p[..4], &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(&p[4..], &[0.0; 4]);
+    }
+}

@@ -1,0 +1,852 @@
+//! Warp-level interpreter: 32 lanes, lane masks, divergence, group
+//! reduction macro-instructions. Produces numerics + a [`WarpCost`].
+//!
+//! Executes the slot-resolved form ([`crate::sim::resolve`]) — the hot
+//! loop does no string hashing and no per-warp allocation beyond the
+//! slot vector (§Perf pass; see EXPERIMENTS.md).
+
+use thiserror::Error;
+
+use super::cost::{distinct_sectors, CostParams, WarpCost};
+use super::memory::{DeviceMemory, MemError};
+use super::resolve::{ResolvedKernel, RStmt, RVal};
+use crate::compiler::llir::BinOp;
+
+pub const WARP: usize = 32;
+
+#[derive(Debug, Error)]
+pub enum ExecError {
+    #[error("memory: {0}")]
+    Mem(#[from] MemError),
+    #[error("non-uniform group writeback index in atomicAddGroup (lane {lane}: {got} != {want})")]
+    NonUniformGroupIndex { lane: usize, got: i64, want: i64 },
+    #[error("infinite loop guard tripped ({0} iterations)")]
+    LoopGuard(u64),
+}
+
+/// A per-lane value: integer or float.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum V {
+    I(i64),
+    F(f32),
+}
+
+impl V {
+    #[inline]
+    fn as_f(self) -> f32 {
+        match self {
+            V::I(i) => i as f32,
+            V::F(f) => f,
+        }
+    }
+    #[inline]
+    fn as_i(self) -> i64 {
+        match self {
+            V::I(i) => i,
+            V::F(f) => f as i64,
+        }
+    }
+    #[inline]
+    fn truthy(self) -> bool {
+        match self {
+            V::I(i) => i != 0,
+            V::F(f) => f != 0.0,
+        }
+    }
+}
+
+type Lanes = [V; WARP];
+
+const ZERO: Lanes = [V::I(0); WARP];
+
+/// FNV-1a-ish mix for the per-warp sector cache key.
+#[inline]
+fn sector_key(array: u16, sector: u64) -> u64 {
+    (array as u64 + 1).wrapping_mul(0x100000001b3) ^ sector.wrapping_mul(0x9E3779B97F4A7C15)
+}
+
+/// Identity hasher for already-mixed u64 keys (the default SipHash showed
+/// up as the top cost of the sector cache in the §Perf pass).
+#[derive(Default)]
+pub struct IdentityHasher(u64);
+
+impl std::hash::Hasher for IdentityHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.0
+    }
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 = (self.0 << 8) | b as u64;
+        }
+    }
+    #[inline]
+    fn write_u64(&mut self, v: u64) {
+        self.0 = v;
+    }
+}
+
+type SectorSet = std::collections::HashSet<u64, std::hash::BuildHasherDefault<IdentityHasher>>;
+
+/// Executes one warp of a resolved kernel.
+pub struct WarpExecutor<'a> {
+    mem: &'a mut DeviceMemory,
+    params: &'a CostParams,
+    pub cost: WarpCost,
+    env: Vec<Lanes>,
+    block_idx: i64,
+    /// threadIdx.x of lane 0.
+    warp_base: i64,
+    /// Active-lane mask for lanes beyond blockDim.
+    shape_mask: u32,
+    /// Safety guard for while loops.
+    max_iters: u64,
+    /// L1-model: sectors already fetched by this warp cost no DRAM
+    /// traffic again.
+    seen_sectors: SectorSet,
+    /// Scratch for atomic serialization accounting.
+    addr_scratch: Vec<i64>,
+}
+
+#[inline]
+fn lanes_of(mask: u32) -> impl Iterator<Item = usize> {
+    let mut m = mask;
+    std::iter::from_fn(move || {
+        if m == 0 {
+            None
+        } else {
+            let l = m.trailing_zeros() as usize;
+            m &= m - 1;
+            Some(l)
+        }
+    })
+}
+
+/// Max multiplicity of any address (the atomic serialization depth).
+fn max_multiplicity(addrs: &mut Vec<i64>) -> u64 {
+    if addrs.is_empty() {
+        return 0;
+    }
+    addrs.sort_unstable();
+    let mut best = 1u64;
+    let mut run = 1u64;
+    for i in 1..addrs.len() {
+        if addrs[i] == addrs[i - 1] {
+            run += 1;
+            best = best.max(run);
+        } else {
+            run = 1;
+        }
+    }
+    best
+}
+
+impl<'a> WarpExecutor<'a> {
+    pub fn new(
+        mem: &'a mut DeviceMemory,
+        params: &'a CostParams,
+        block_idx: u32,
+        warp_in_block: u32,
+        block_dim: u32,
+    ) -> Self {
+        let warp_base = (warp_in_block as i64) * WARP as i64;
+        let mut shape_mask = 0u32;
+        for l in 0..WARP {
+            if warp_base + (l as i64) < block_dim as i64 {
+                shape_mask |= 1 << l;
+            }
+        }
+        WarpExecutor {
+            mem,
+            params,
+            cost: WarpCost::default(),
+            env: Vec::new(),
+            block_idx: block_idx as i64,
+            warp_base,
+            shape_mask,
+            max_iters: 100_000_000,
+            seen_sectors: SectorSet::default(),
+            addr_scratch: Vec::with_capacity(WARP),
+        }
+    }
+
+    /// Run the kernel body for this warp.
+    pub fn run(&mut self, kernel: &ResolvedKernel) -> Result<(), ExecError> {
+        let mask = self.shape_mask;
+        if mask == 0 {
+            return Ok(());
+        }
+        self.env.clear();
+        self.env.resize(kernel.slots as usize, ZERO);
+        let mut broke = 0u32;
+        self.exec_block(&kernel.body, mask, &mut broke)
+    }
+
+    /// Count DRAM sectors for `addrs`, filtered through the per-warp cache
+    /// (re-touched sectors are L1 hits: no DRAM traffic).
+    fn fresh_sectors(&mut self, array: u16, iv: &Lanes, mask: u32) -> u64 {
+        let mut fresh = 0u64;
+        for l in lanes_of(mask) {
+            let sector = (iv[l].as_i().max(0) as u64 * 4) / 32;
+            if self.seen_sectors.insert(sector_key(array, sector)) {
+                fresh += 1;
+            }
+        }
+        fresh
+    }
+
+    // ---- expression evaluation -------------------------------------------
+
+    fn eval(&mut self, v: &RVal, mask: u32) -> Result<Lanes, ExecError> {
+        match v {
+            RVal::Var(slot) => Ok(self.env[*slot as usize]),
+            RVal::ConstI(c) => Ok([V::I(*c); WARP]),
+            RVal::ConstF(c) => Ok([V::F(*c); WARP]),
+            RVal::BlockIdx => Ok([V::I(self.block_idx); WARP]),
+            RVal::ThreadIdx => {
+                let mut out = ZERO;
+                for (l, o) in out.iter_mut().enumerate() {
+                    *o = V::I(self.warp_base + l as i64);
+                }
+                Ok(out)
+            }
+            RVal::Bin(op, a, b) => {
+                let av = self.eval(a, mask)?;
+                let bv = self.eval(b, mask)?;
+                self.cost.add_alu(self.params, 1.0);
+                let mut out = ZERO;
+                for l in lanes_of(mask) {
+                    out[l] = bin_op(*op, av[l], bv[l]);
+                }
+                Ok(out)
+            }
+            RVal::Load { array, int, idx } => {
+                let iv = self.eval(idx, mask)?;
+                let id = *array as usize;
+                let mut out = ZERO;
+                if *int {
+                    for l in lanes_of(mask) {
+                        out[l] = V::I(self.mem.load_i_id(id, iv[l].as_i())?);
+                    }
+                } else {
+                    for l in lanes_of(mask) {
+                        out[l] = V::F(self.mem.load_num_id(id, iv[l].as_i())? as f32);
+                    }
+                }
+                let sectors = self.fresh_sectors(*array, &iv, mask);
+                self.cost.add_load(self.params, sectors);
+                Ok(out)
+            }
+            RVal::BinarySearchBefore { array, lo, hi, target } => {
+                let lov = self.eval(lo, mask)?;
+                let hiv = self.eval(hi, mask)?;
+                let tv = self.eval(target, mask)?;
+                let id = *array as usize;
+                let mut out = ZERO;
+                let mut max_steps = 0u32;
+                for l in lanes_of(mask) {
+                    let (mut lo, mut hi) = (lov[l].as_i(), hiv[l].as_i());
+                    let t = tv[l].as_i();
+                    let mut steps = 0u32;
+                    // largest i in [lo, hi] with array[i] <= t
+                    while lo < hi {
+                        let mid = (lo + hi + 1) / 2;
+                        if self.mem.load_i_id(id, mid)? <= t {
+                            lo = mid;
+                        } else {
+                            hi = mid - 1;
+                        }
+                        steps += 1;
+                    }
+                    max_steps = max_steps.max(steps);
+                    out[l] = V::I(lo);
+                }
+                // warp executes in lockstep: cost = slowest lane's steps,
+                // each step is a compare + dependent (uncoalesced) load
+                self.cost.add_alu(self.params, self.params.bsearch_step * max_steps as f64);
+                self.cost.sectors += max_steps as u64; // dependent scattered loads
+                Ok(out)
+            }
+        }
+    }
+
+    // ---- statement execution ---------------------------------------------
+
+    #[inline]
+    fn write_lanes(&mut self, slot: u16, vals: &Lanes, mask: u32, float: bool) {
+        let entry = &mut self.env[slot as usize];
+        if float {
+            for l in lanes_of(mask) {
+                entry[l] = V::F(vals[l].as_f());
+            }
+        } else {
+            for l in lanes_of(mask) {
+                entry[l] = V::I(vals[l].as_i());
+            }
+        }
+    }
+
+    fn exec_block(&mut self, stmts: &[RStmt], mask: u32, broke: &mut u32) -> Result<(), ExecError> {
+        for s in stmts {
+            let active = mask & !*broke;
+            if active == 0 {
+                break;
+            }
+            self.exec_stmt(s, active, broke)?;
+        }
+        Ok(())
+    }
+
+    fn exec_stmt(&mut self, s: &RStmt, mask: u32, broke: &mut u32) -> Result<(), ExecError> {
+        match s {
+            RStmt::Decl { var, init, float } => {
+                let vals = self.eval(init, mask)?;
+                self.write_lanes(*var, &vals, mask, *float);
+                Ok(())
+            }
+            RStmt::Assign { var, val, float } => {
+                let vals = self.eval(val, mask)?;
+                self.write_lanes(*var, &vals, mask, *float);
+                Ok(())
+            }
+            RStmt::Store { array, idx, val } => {
+                let iv = self.eval(idx, mask)?;
+                let vv = self.eval(val, mask)?;
+                let id = *array as usize;
+                for l in lanes_of(mask) {
+                    self.mem.store_f_id(id, iv[l].as_i(), vv[l].as_f())?;
+                }
+                // stores are write-through: always DRAM traffic
+                let sectors =
+                    distinct_sectors(lanes_of(mask).map(|l| iv[l].as_i().max(0) as usize), 4);
+                self.cost.add_load(self.params, sectors);
+                Ok(())
+            }
+            RStmt::AtomicAdd { array, idx, val } => {
+                let iv = self.eval(idx, mask)?;
+                let vv = self.eval(val, mask)?;
+                let id = *array as usize;
+                // predicated on value != 0 (skip useless atomics)
+                self.addr_scratch.clear();
+                for l in lanes_of(mask) {
+                    let v = vv[l].as_f();
+                    if v != 0.0 {
+                        self.mem.atomic_add_f_id(id, iv[l].as_i(), v)?;
+                        self.addr_scratch.push(iv[l].as_i());
+                    }
+                }
+                if !self.addr_scratch.is_empty() {
+                    let mut scratch = std::mem::take(&mut self.addr_scratch);
+                    let serialized = max_multiplicity(&mut scratch);
+                    self.addr_scratch = scratch;
+                    self.cost.add_atomics(self.params, serialized);
+                }
+                Ok(())
+            }
+            RStmt::AtomicAddGroup { array, idx, val, group } => {
+                self.group_atomic_add(*array, idx, val, *group, mask)
+            }
+            RStmt::SegReduceGroup { array, idx, val, group } => {
+                self.group_seg_reduce(*array, idx, val, *group, mask)
+            }
+            RStmt::If { cond, then, els } => {
+                let cv = self.eval(cond, mask)?;
+                let mut m_then = 0u32;
+                for l in lanes_of(mask) {
+                    if cv[l].truthy() {
+                        m_then |= 1 << l;
+                    }
+                }
+                let m_else = mask & !m_then;
+                if m_then != 0 {
+                    self.cost.add_alu(self.params, self.params.branch);
+                    self.exec_block(then, m_then, broke)?;
+                }
+                if m_else != 0 && !els.is_empty() {
+                    self.cost.add_alu(self.params, self.params.branch);
+                    self.exec_block(els, m_else, broke)?;
+                }
+                Ok(())
+            }
+            RStmt::While { cond, body } => {
+                let mut active = mask;
+                let mut iters = 0u64;
+                loop {
+                    let cv = self.eval(cond, active)?;
+                    let mut next = 0u32;
+                    for l in lanes_of(active) {
+                        if cv[l].truthy() {
+                            next |= 1 << l;
+                        }
+                    }
+                    if next == 0 {
+                        break;
+                    }
+                    let mut loop_broke = 0u32;
+                    self.exec_block(body, next, &mut loop_broke)?;
+                    active = next & !loop_broke;
+                    self.cost.add_alu(self.params, self.params.branch);
+                    iters += 1;
+                    if iters > self.max_iters {
+                        return Err(ExecError::LoopGuard(iters));
+                    }
+                }
+                Ok(())
+            }
+            RStmt::For { var, lo, hi, step, body } => {
+                let lov = self.eval(lo, mask)?;
+                self.write_lanes(*var, &lov, mask, false);
+                let mut active = mask;
+                let mut iters = 0u64;
+                loop {
+                    let hiv = self.eval(hi, active)?;
+                    let cur = self.env[*var as usize];
+                    let mut next = 0u32;
+                    for l in lanes_of(active) {
+                        if cur[l].as_i() < hiv[l].as_i() {
+                            next |= 1 << l;
+                        }
+                    }
+                    if next == 0 {
+                        break;
+                    }
+                    let mut loop_broke = 0u32;
+                    self.exec_block(body, next, &mut loop_broke)?;
+                    active = next & !loop_broke;
+                    // increment surviving lanes
+                    let stepv = self.eval(step, active)?;
+                    let entry = &mut self.env[*var as usize];
+                    for l in lanes_of(active) {
+                        entry[l] = V::I(entry[l].as_i() + stepv[l].as_i());
+                    }
+                    self.cost.add_alu(self.params, self.params.branch);
+                    iters += 1;
+                    if iters > self.max_iters {
+                        return Err(ExecError::LoopGuard(iters));
+                    }
+                }
+                Ok(())
+            }
+            RStmt::Break => {
+                *broke |= mask;
+                Ok(())
+            }
+        }
+    }
+
+    // ---- macro instructions (§5.3) ----------------------------------------
+
+    /// `atomicAddGroup<float, G>`: tree-reduce over each aligned G-lane
+    /// subgroup, lane 0 writes back. Writeback is skipped for subgroups
+    /// with zero contribution (predicated atomic).
+    fn group_atomic_add(
+        &mut self,
+        array: u16,
+        idx: &RVal,
+        val: &RVal,
+        group: u32,
+        mask: u32,
+    ) -> Result<(), ExecError> {
+        let iv = self.eval(idx, mask)?;
+        let vv = self.eval(val, mask)?;
+        if mask == 0 {
+            return Ok(());
+        }
+        self.cost.add_group_reduce(self.params, group, 1.0);
+        let g = group as usize;
+        let id = array as usize;
+        self.addr_scratch.clear();
+        for sg in 0..(WARP / g) {
+            let sub = ((1u64 << g) - 1) as u32;
+            let sub_mask = mask & (sub << (sg * g));
+            if sub_mask == 0 {
+                continue;
+            }
+            let first = sub_mask.trailing_zeros() as usize;
+            let addr = iv[first].as_i();
+            if cfg!(debug_assertions) {
+                for l in lanes_of(sub_mask) {
+                    if iv[l].as_i() != addr {
+                        return Err(ExecError::NonUniformGroupIndex {
+                            lane: l,
+                            got: iv[l].as_i(),
+                            want: addr,
+                        });
+                    }
+                }
+            }
+            let mut sum = 0.0f32;
+            for l in lanes_of(sub_mask) {
+                sum += vv[l].as_f();
+            }
+            if sum != 0.0 {
+                self.mem.atomic_add_f_id(id, addr, sum)?;
+                self.addr_scratch.push(addr);
+            }
+        }
+        if !self.addr_scratch.is_empty() {
+            let mut scratch = std::mem::take(&mut self.addr_scratch);
+            let serialized = max_multiplicity(&mut scratch);
+            self.addr_scratch = scratch;
+            self.cost.add_atomics(self.params, serialized);
+        }
+        Ok(())
+    }
+
+    /// `segReduceGroup<float, G>`: segmented scan over each aligned G-lane
+    /// subgroup keyed by `idx`; segment-end lanes write back.
+    fn group_seg_reduce(
+        &mut self,
+        array: u16,
+        idx: &RVal,
+        val: &RVal,
+        group: u32,
+        mask: u32,
+    ) -> Result<(), ExecError> {
+        let iv = self.eval(idx, mask)?;
+        let vv = self.eval(val, mask)?;
+        if mask == 0 {
+            return Ok(());
+        }
+        // scan shuffles carry value + key: 2 shfl per step
+        self.cost.add_group_reduce(self.params, group, 2.0);
+        let g = group as usize;
+        let id = array as usize;
+        self.addr_scratch.clear();
+        for sg in 0..(WARP / g) {
+            let sub = ((1u64 << g) - 1) as u32;
+            let sub_mask = mask & (sub << (sg * g));
+            if sub_mask == 0 {
+                continue;
+            }
+            let mut run_idx = i64::MIN;
+            let mut acc = 0.0f32;
+            for l in lanes_of(sub_mask) {
+                let li = iv[l].as_i();
+                if li != run_idx {
+                    if acc != 0.0 {
+                        self.mem.atomic_add_f_id(id, run_idx, acc)?;
+                        self.addr_scratch.push(run_idx);
+                    }
+                    run_idx = li;
+                    acc = 0.0;
+                }
+                acc += vv[l].as_f();
+            }
+            if acc != 0.0 {
+                self.mem.atomic_add_f_id(id, run_idx, acc)?;
+                self.addr_scratch.push(run_idx);
+            }
+        }
+        if !self.addr_scratch.is_empty() {
+            let mut scratch = std::mem::take(&mut self.addr_scratch);
+            let serialized = max_multiplicity(&mut scratch);
+            self.addr_scratch = scratch;
+            self.cost.add_atomics(self.params, serialized);
+        }
+        Ok(())
+    }
+}
+
+fn bin_op(op: BinOp, a: V, b: V) -> V {
+    use BinOp::*;
+    let both_int = matches!((a, b), (V::I(_), V::I(_)));
+    match op {
+        Add | Sub | Mul | Div | Mod | Min => {
+            if both_int {
+                let (x, y) = (a.as_i(), b.as_i());
+                V::I(match op {
+                    Add => x + y,
+                    Sub => x - y,
+                    Mul => x * y,
+                    Div => {
+                        if y == 0 {
+                            0
+                        } else {
+                            x / y
+                        }
+                    }
+                    Mod => {
+                        if y == 0 {
+                            0
+                        } else {
+                            x % y
+                        }
+                    }
+                    Min => x.min(y),
+                    _ => unreachable!(),
+                })
+            } else {
+                let (x, y) = (a.as_f(), b.as_f());
+                V::F(match op {
+                    Add => x + y,
+                    Sub => x - y,
+                    Mul => x * y,
+                    Div => x / y,
+                    Mod => x % y,
+                    Min => x.min(y),
+                    _ => unreachable!(),
+                })
+            }
+        }
+        Lt | Le | Eq | Ne | Ge | Gt => {
+            let r = if both_int {
+                let (x, y) = (a.as_i(), b.as_i());
+                match op {
+                    Lt => x < y,
+                    Le => x <= y,
+                    Eq => x == y,
+                    Ne => x != y,
+                    Ge => x >= y,
+                    Gt => x > y,
+                    _ => unreachable!(),
+                }
+            } else {
+                let (x, y) = (a.as_f(), b.as_f());
+                match op {
+                    Lt => x < y,
+                    Le => x <= y,
+                    Eq => x == y,
+                    Ne => x != y,
+                    Ge => x >= y,
+                    Gt => x > y,
+                    _ => unreachable!(),
+                }
+            };
+            V::I(r as i64)
+        }
+        And => V::I((a.truthy() && b.truthy()) as i64),
+        Or => V::I((a.truthy() || b.truthy()) as i64),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::llir::{Kernel, Param, Stmt, Val as LVal};
+    use crate::sim::resolve::resolve;
+
+    fn tiny_kernel(body: Vec<Stmt>) -> Kernel {
+        Kernel { name: "t".into(), params: vec![Param::f32_array("out")], body, block_dim: 32 }
+    }
+
+    fn run_one_warp(k: &Kernel, mem: &mut DeviceMemory) -> WarpCost {
+        let p = CostParams::default();
+        let rk = resolve(k, mem).unwrap();
+        let mut ex = WarpExecutor::new(mem, &p, 0, 0, rk.block_dim);
+        ex.run(&rk).unwrap();
+        ex.cost
+    }
+
+    #[test]
+    fn store_per_lane() {
+        let k = tiny_kernel(vec![Stmt::Store {
+            array: "out".into(),
+            idx: LVal::ThreadIdx,
+            val: LVal::bin(BinOp::Mul, LVal::ThreadIdx, LVal::ConstI(2)),
+        }]);
+        let mut mem = DeviceMemory::new();
+        mem.bind_f32("out", vec![0.0; 32]);
+        run_one_warp(&k, &mut mem);
+        let out = mem.f32_slice("out").unwrap();
+        assert_eq!(out[5], 10.0);
+        assert_eq!(out[31], 62.0);
+    }
+
+    #[test]
+    fn divergent_if() {
+        // lanes < 16 write 1, others write 2
+        let k = tiny_kernel(vec![Stmt::If {
+            cond: LVal::lt(LVal::ThreadIdx, LVal::ConstI(16)),
+            then: vec![Stmt::Store { array: "out".into(), idx: LVal::ThreadIdx, val: LVal::ConstF(1.0) }],
+            els: vec![Stmt::Store { array: "out".into(), idx: LVal::ThreadIdx, val: LVal::ConstF(2.0) }],
+        }]);
+        let mut mem = DeviceMemory::new();
+        mem.bind_f32("out", vec![0.0; 32]);
+        run_one_warp(&k, &mut mem);
+        let out = mem.f32_slice("out").unwrap();
+        assert_eq!(out[0], 1.0);
+        assert_eq!(out[16], 2.0);
+    }
+
+    #[test]
+    fn while_with_divergent_trip_counts() {
+        // lane l sums l values => out[l] = l
+        let k = tiny_kernel(vec![
+            Stmt::Decl { var: "acc".into(), init: LVal::ConstF(0.0), float: true },
+            Stmt::Decl { var: "i".into(), init: LVal::ConstI(0), float: false },
+            Stmt::While {
+                cond: LVal::lt(LVal::var("i"), LVal::ThreadIdx),
+                body: vec![
+                    Stmt::Assign { var: "acc".into(), val: LVal::add(LVal::var("acc"), LVal::ConstF(1.0)) },
+                    Stmt::Assign { var: "i".into(), val: LVal::add(LVal::var("i"), LVal::ConstI(1)) },
+                ],
+            },
+            Stmt::Store { array: "out".into(), idx: LVal::ThreadIdx, val: LVal::var("acc") },
+        ]);
+        let mut mem = DeviceMemory::new();
+        mem.bind_f32("out", vec![0.0; 32]);
+        run_one_warp(&k, &mut mem);
+        let out = mem.f32_slice("out").unwrap();
+        for l in 0..32 {
+            assert_eq!(out[l], l as f32, "lane {l}");
+        }
+    }
+
+    #[test]
+    fn for_with_break() {
+        // break when i == 3 => out[l] = 3 for all lanes
+        let k = tiny_kernel(vec![
+            Stmt::Decl { var: "acc".into(), init: LVal::ConstF(0.0), float: true },
+            Stmt::For {
+                var: "i".into(),
+                lo: LVal::ConstI(0),
+                hi: LVal::ConstI(10),
+                step: LVal::ConstI(1),
+                body: vec![
+                    Stmt::If {
+                        cond: LVal::eq(LVal::var("i"), LVal::ConstI(3)),
+                        then: vec![Stmt::Break],
+                        els: vec![],
+                    },
+                    Stmt::Assign { var: "acc".into(), val: LVal::add(LVal::var("acc"), LVal::ConstF(1.0)) },
+                ],
+            },
+            Stmt::Store { array: "out".into(), idx: LVal::ThreadIdx, val: LVal::var("acc") },
+        ]);
+        let mut mem = DeviceMemory::new();
+        mem.bind_f32("out", vec![0.0; 32]);
+        run_one_warp(&k, &mut mem);
+        assert_eq!(mem.f32_slice("out").unwrap()[7], 3.0);
+    }
+
+    #[test]
+    fn atomic_add_group_sums_subgroups() {
+        // group 8: subgroup s writes sum of its lane ids to out[s]
+        let k = tiny_kernel(vec![
+            Stmt::Decl { var: "sg".into(), init: LVal::div(LVal::ThreadIdx, LVal::ConstI(8)), float: false },
+            Stmt::AtomicAddGroup {
+                array: "out".into(),
+                idx: LVal::var("sg"),
+                val: LVal::bin(BinOp::Add, LVal::ConstF(0.0), LVal::ThreadIdx),
+                group: 8,
+            },
+        ]);
+        let mut mem = DeviceMemory::new();
+        mem.bind_f32("out", vec![0.0; 4]);
+        run_one_warp(&k, &mut mem);
+        let out = mem.f32_slice("out").unwrap();
+        assert_eq!(out, &[28.0, 92.0, 156.0, 220.0]); // sums of 0..8, 8..16, ...
+    }
+
+    #[test]
+    fn seg_reduce_group_respects_segments() {
+        // idx = lane / 4 (8 segments of 4 lanes), val = 1 => out[s] = 4
+        let k = tiny_kernel(vec![
+            Stmt::Decl { var: "s".into(), init: LVal::div(LVal::ThreadIdx, LVal::ConstI(4)), float: false },
+            Stmt::SegReduceGroup {
+                array: "out".into(),
+                idx: LVal::var("s"),
+                val: LVal::ConstF(1.0),
+                group: 32,
+            },
+        ]);
+        let mut mem = DeviceMemory::new();
+        mem.bind_f32("out", vec![0.0; 8]);
+        run_one_warp(&k, &mut mem);
+        assert_eq!(mem.f32_slice("out").unwrap(), &[4.0; 8]);
+    }
+
+    #[test]
+    fn seg_reduce_segment_straddling_group_boundary_uses_two_writebacks() {
+        // one segment across all 32 lanes, group 8 => 4 partial writebacks
+        let k = tiny_kernel(vec![Stmt::SegReduceGroup {
+            array: "out".into(),
+            idx: LVal::ConstI(0),
+            val: LVal::ConstF(1.0),
+            group: 8,
+        }]);
+        let mut mem = DeviceMemory::new();
+        mem.bind_f32("out", vec![0.0; 1]);
+        let cost = run_one_warp(&k, &mut mem);
+        assert_eq!(mem.f32_slice("out").unwrap()[0], 32.0);
+        assert_eq!(cost.atomic_updates, 4); // serialized: same address
+    }
+
+    #[test]
+    fn group_cost_smaller_for_smaller_r() {
+        let mk = |r: u32| {
+            tiny_kernel(vec![Stmt::AtomicAddGroup {
+                array: "out".into(),
+                idx: LVal::div(LVal::ThreadIdx, LVal::ConstI(r as i64)),
+                val: LVal::ConstF(1.0),
+                group: r,
+            }])
+        };
+        let p = CostParams::default();
+        let mut cost = vec![];
+        for r in [8u32, 32] {
+            let k = mk(r);
+            let mut mem = DeviceMemory::new();
+            mem.bind_f32("out", vec![0.0; 8]);
+            let rk = resolve(&k, &mem).unwrap();
+            let mut ex = WarpExecutor::new(&mut mem, &p, 0, 0, 32);
+            ex.run(&rk).unwrap();
+            cost.push(ex.cost.compute_cycles);
+        }
+        assert!(cost[0] < cost[1], "r=8 ({}) should beat r=32 ({})", cost[0], cost[1]);
+    }
+
+    #[test]
+    fn binary_search_before_semantics() {
+        let k = Kernel {
+            name: "t".into(),
+            params: vec![Param::f32_array("out"), Param::i32_array("pos")],
+            block_dim: 32,
+            body: vec![
+                Stmt::Decl {
+                    var: "i".into(),
+                    init: LVal::BinarySearchBefore {
+                        array: "pos".into(),
+                        lo: Box::new(LVal::ConstI(0)),
+                        hi: Box::new(LVal::ConstI(4)),
+                        target: Box::new(LVal::ThreadIdx),
+                    },
+                    float: false,
+                },
+                Stmt::Store {
+                    array: "out".into(),
+                    idx: LVal::ThreadIdx,
+                    val: LVal::bin(BinOp::Add, LVal::ConstF(0.0), LVal::var("i")),
+                },
+            ],
+        };
+        let mut mem = DeviceMemory::new();
+        // pos = [0,2,3,3,6]: row of nnz t
+        mem.bind_i32("pos", vec![0, 2, 3, 3, 6]);
+        mem.bind_f32("out", vec![0.0; 32]);
+        run_one_warp(&k, &mut mem);
+        let out = mem.f32_slice("out").unwrap();
+        assert_eq!(out[0], 0.0);
+        assert_eq!(out[1], 0.0);
+        assert_eq!(out[2], 1.0);
+        assert_eq!(out[3], 3.0); // pos[3]=3<=3
+        assert_eq!(out[6], 4.0);
+    }
+
+    #[test]
+    fn partial_warp_masks_tail_lanes() {
+        let mut k = tiny_kernel(vec![Stmt::Store {
+            array: "out".into(),
+            idx: LVal::ThreadIdx,
+            val: LVal::ConstF(1.0),
+        }]);
+        k.block_dim = 20; // only 20 threads
+        let mut mem = DeviceMemory::new();
+        mem.bind_f32("out", vec![0.0; 32]);
+        run_one_warp(&k, &mut mem);
+        let out = mem.f32_slice("out").unwrap();
+        assert_eq!(out[19], 1.0);
+        assert_eq!(out[20], 0.0);
+    }
+}

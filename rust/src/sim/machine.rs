@@ -1,0 +1,200 @@
+//! SM-level scheduling + hardware profiles: rolls per-warp costs up to an
+//! estimated kernel time on a named GPU.
+
+use anyhow::Result;
+
+use crate::compiler::llir::Kernel;
+
+use super::cost::{CostParams, WarpCost};
+use super::exec::WarpExecutor;
+use super::memory::DeviceMemory;
+
+/// A GPU hardware profile (§7 experiment settings).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HwProfile {
+    pub name: &'static str,
+    pub sm_count: u32,
+    pub clock_ghz: f64,
+    pub dram_gbps: f64,
+    /// Warp instructions issued per cycle per SM (schedulers).
+    pub issue_width: f64,
+    /// Fixed kernel launch overhead (seconds).
+    pub launch_overhead_s: f64,
+}
+
+impl HwProfile {
+    // Launch overhead is 0: the paper measures *kernel duration* with
+    // nsight-compute (§7), which excludes the host-side launch path.
+
+    /// NVIDIA RTX 3090: 68 Ampere SMs @ 1.395 GHz, 936 GB/s GDDR6X.
+    pub fn rtx3090() -> Self {
+        HwProfile { name: "RTX 3090", sm_count: 68, clock_ghz: 1.395, dram_gbps: 936.0, issue_width: 4.0, launch_overhead_s: 0.0 }
+    }
+    /// NVIDIA RTX 2080: 46 Turing SMs @ 1.515 GHz, 448 GB/s GDDR6.
+    pub fn rtx2080() -> Self {
+        HwProfile { name: "RTX 2080", sm_count: 46, clock_ghz: 1.515, dram_gbps: 448.0, issue_width: 4.0, launch_overhead_s: 0.0 }
+    }
+    /// NVIDIA Tesla V100: 80 Volta SMs @ 1.370 GHz, 900 GB/s HBM2.
+    pub fn v100() -> Self {
+        HwProfile { name: "Tesla V100", sm_count: 80, clock_ghz: 1.370, dram_gbps: 900.0, issue_width: 4.0, launch_overhead_s: 0.0 }
+    }
+
+    pub fn all() -> Vec<HwProfile> {
+        vec![Self::rtx3090(), Self::rtx2080(), Self::v100()]
+    }
+}
+
+/// Result of a simulated kernel launch.
+#[derive(Debug, Clone)]
+pub struct KernelReport {
+    pub hw: HwProfile,
+    pub grid: u32,
+    pub block_dim: u32,
+    pub warps: u64,
+    /// Aggregate over all warps.
+    pub total: WarpCost,
+    /// Critical path: the most expensive single warp (cycles).
+    pub max_warp_cycles: f64,
+    /// Estimated execution time in seconds.
+    pub time_s: f64,
+    /// Which bound dominated: "compute", "memory", or "latency".
+    pub bound: &'static str,
+}
+
+impl KernelReport {
+    pub fn gflops(&self, flops: u64) -> f64 {
+        flops as f64 / self.time_s / 1e9
+    }
+}
+
+/// A simulated GPU: executes LLIR kernels, charging the cost model.
+#[derive(Debug, Clone)]
+pub struct Machine {
+    pub hw: HwProfile,
+    pub params: CostParams,
+}
+
+impl Machine {
+    pub fn new(hw: HwProfile) -> Self {
+        Machine { hw, params: CostParams::default() }
+    }
+
+    /// Launch `kernel` over `grid` blocks against `mem`.
+    ///
+    /// Executes every warp (numerics are exact), accumulates costs, then
+    /// applies the roofline roll-up:
+    ///
+    /// `time = max(compute cycles per SM / issue width, DRAM bytes / BW,
+    ///             critical warp) + launch overhead`
+    pub fn launch(&self, kernel: &Kernel, grid: u32, mem: &mut DeviceMemory) -> Result<KernelReport> {
+        // resolve once per launch: slot vars, array ids, inlined params
+        let resolved = super::resolve::resolve(kernel, mem)
+            .map_err(|e| anyhow::anyhow!("kernel `{}`: {e}", kernel.name))?;
+        let warps_per_block = kernel.block_dim.div_ceil(32);
+        let mut sm_cycles = vec![0f64; self.hw.sm_count as usize];
+        let mut total = WarpCost::default();
+        let mut max_warp_cycles = 0f64;
+        let mut warps = 0u64;
+
+        for block in 0..grid {
+            let sm = (block % self.hw.sm_count) as usize;
+            for w in 0..warps_per_block {
+                let mut ex = WarpExecutor::new(mem, &self.params, block, w, kernel.block_dim);
+                ex.run(&resolved).map_err(|e| {
+                    anyhow::anyhow!("kernel `{}` block {block} warp {w}: {e}", kernel.name)
+                })?;
+                let c = ex.cost;
+                sm_cycles[sm] += c.compute_cycles;
+                max_warp_cycles = max_warp_cycles.max(c.compute_cycles);
+                total.merge(&c);
+                warps += 1;
+            }
+        }
+
+        let clock_hz = self.hw.clock_ghz * 1e9;
+        let t_compute = sm_cycles.iter().cloned().fold(0f64, f64::max) / self.hw.issue_width / clock_hz;
+        let t_memory = (total.sectors as f64 * 32.0) / (self.hw.dram_gbps * 1e9);
+        let t_latency = max_warp_cycles / clock_hz;
+        let body = t_compute.max(t_memory).max(t_latency);
+        let bound = if body == t_compute {
+            "compute"
+        } else if body == t_memory {
+            "memory"
+        } else {
+            "latency"
+        };
+
+        Ok(KernelReport {
+            hw: self.hw,
+            grid,
+            block_dim: kernel.block_dim,
+            warps,
+            total,
+            max_warp_cycles,
+            time_s: body + self.hw.launch_overhead_s,
+            bound,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::llir::{Param, Stmt, Val};
+
+    fn copy_kernel() -> Kernel {
+        // out[tid + blockIdx*block] = in[...] * 2
+        let gid = Val::add(Val::mul(Val::BlockIdx, Val::ConstI(64)), Val::ThreadIdx);
+        Kernel {
+            name: "copy".into(),
+            params: vec![Param::f32_array("in"), Param::f32_array("out")],
+            body: vec![Stmt::Store {
+                array: "out".into(),
+                idx: gid.clone(),
+                val: Val::mul(Val::load("in", gid), Val::ConstF(2.0)),
+            }],
+            block_dim: 64,
+        }
+    }
+
+    #[test]
+    fn launch_runs_all_blocks() {
+        let m = Machine::new(HwProfile::rtx3090());
+        let mut mem = DeviceMemory::new();
+        mem.bind_f32("in", (0..256).map(|i| i as f32).collect());
+        mem.bind_f32("out", vec![0.0; 256]);
+        let rep = m.launch(&copy_kernel(), 4, &mut mem).unwrap();
+        assert_eq!(rep.warps, 8);
+        let out = mem.f32_slice("out").unwrap();
+        assert_eq!(out[100], 200.0);
+        assert!(rep.time_s > 0.0);
+        assert!(rep.total.sectors >= 64); // 256 loads + 256 stores coalesced
+    }
+
+    #[test]
+    fn profiles_distinct() {
+        let a = HwProfile::rtx3090();
+        let b = HwProfile::rtx2080();
+        assert!(a.dram_gbps > b.dram_gbps);
+        assert_eq!(HwProfile::all().len(), 3);
+    }
+
+    #[test]
+    fn memory_bound_scales_with_bandwidth() {
+        // same kernel, slower DRAM => slower (it's memory bound)
+        let mut fast = Machine::new(HwProfile::rtx3090());
+        fast.hw.launch_overhead_s = 0.0;
+        let mut slow = Machine::new(HwProfile::rtx2080());
+        slow.hw.launch_overhead_s = 0.0;
+        let run = |m: &Machine| {
+            let mut mem = DeviceMemory::new();
+            mem.bind_f32("in", vec![1.0; 1 << 16]);
+            mem.bind_f32("out", vec![0.0; 1 << 16]);
+            m.launch(&copy_kernel(), (1 << 16) / 64, &mut mem).unwrap()
+        };
+        let rf = run(&fast);
+        let rs = run(&slow);
+        assert_eq!(rf.bound, "memory");
+        assert!(rs.time_s > rf.time_s);
+    }
+}

@@ -1,0 +1,262 @@
+//! Device global memory: named, typed buffers with bounds checking.
+//!
+//! Buffers live in a dense table; the resolve pass (`sim::resolve`) turns
+//! kernel array names into table ids once per launch so the interpreter's
+//! hot loop never hashes strings.
+
+use std::collections::HashMap;
+
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum MemError {
+    #[error("unknown buffer `{0}`")]
+    UnknownBuffer(String),
+    #[error("buffer `{name}` index {idx} out of bounds (len {len})")]
+    OutOfBounds { name: String, idx: i64, len: usize },
+    #[error("buffer `{0}` has the wrong element type for this access")]
+    TypeMismatch(String),
+}
+
+/// A device buffer.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Buffer {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Buffer {
+    pub fn len(&self) -> usize {
+        match self {
+            Buffer::F32(v) => v.len(),
+            Buffer::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Global memory: a table of named buffers plus grid-uniform i32 params.
+#[derive(Debug, Default, Clone)]
+pub struct DeviceMemory {
+    ids: HashMap<String, usize>,
+    names: Vec<String>,
+    buffers: Vec<Buffer>,
+    scalars: HashMap<String, i64>,
+}
+
+impl DeviceMemory {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn bind(&mut self, name: &str, buf: Buffer) -> &mut Self {
+        if let Some(&id) = self.ids.get(name) {
+            self.buffers[id] = buf;
+        } else {
+            let id = self.buffers.len();
+            self.ids.insert(name.to_string(), id);
+            self.names.push(name.to_string());
+            self.buffers.push(buf);
+        }
+        self
+    }
+
+    pub fn bind_f32(&mut self, name: &str, data: Vec<f32>) -> &mut Self {
+        self.bind(name, Buffer::F32(data))
+    }
+
+    pub fn bind_i32(&mut self, name: &str, data: Vec<i32>) -> &mut Self {
+        self.bind(name, Buffer::I32(data))
+    }
+
+    pub fn bind_scalar(&mut self, name: &str, v: i64) -> &mut Self {
+        self.scalars.insert(name.into(), v);
+        self
+    }
+
+    pub fn scalar(&self, name: &str) -> Result<i64, MemError> {
+        self.scalars.get(name).copied().ok_or_else(|| MemError::UnknownBuffer(name.into()))
+    }
+
+    // ---- id-based fast path (resolved kernels) ---------------------------
+
+    pub fn id_of(&self, name: &str) -> Option<usize> {
+        self.ids.get(name).copied()
+    }
+
+    pub fn is_int_id(&self, id: usize) -> bool {
+        matches!(self.buffers[id], Buffer::I32(_))
+    }
+
+    fn oob(&self, id: usize, idx: i64) -> MemError {
+        MemError::OutOfBounds { name: self.names[id].clone(), idx, len: self.buffers[id].len() }
+    }
+
+    /// Load as f64 regardless of element type (ints promote losslessly).
+    #[inline]
+    pub fn load_num_id(&self, id: usize, idx: i64) -> Result<f64, MemError> {
+        match &self.buffers[id] {
+            Buffer::F32(v) => match v.get(usize::try_from(idx).map_err(|_| self.oob(id, idx))?) {
+                Some(x) => Ok(*x as f64),
+                None => Err(self.oob(id, idx)),
+            },
+            Buffer::I32(v) => match v.get(usize::try_from(idx).map_err(|_| self.oob(id, idx))?) {
+                Some(x) => Ok(*x as f64),
+                None => Err(self.oob(id, idx)),
+            },
+        }
+    }
+
+    #[inline]
+    pub fn load_i_id(&self, id: usize, idx: i64) -> Result<i64, MemError> {
+        match &self.buffers[id] {
+            Buffer::I32(v) => match v.get(usize::try_from(idx).map_err(|_| self.oob(id, idx))?) {
+                Some(x) => Ok(*x as i64),
+                None => Err(self.oob(id, idx)),
+            },
+            Buffer::F32(_) => Err(MemError::TypeMismatch(self.names[id].clone())),
+        }
+    }
+
+    #[inline]
+    pub fn store_f_id(&mut self, id: usize, idx: i64, val: f32) -> Result<(), MemError> {
+        match &mut self.buffers[id] {
+            Buffer::F32(v) => {
+                let len = v.len();
+                match usize::try_from(idx).ok().and_then(|i| v.get_mut(i)) {
+                    Some(slot) => {
+                        *slot = val;
+                        Ok(())
+                    }
+                    None => Err(MemError::OutOfBounds { name: self.names[id].clone(), idx, len }),
+                }
+            }
+            Buffer::I32(_) => Err(MemError::TypeMismatch(self.names[id].clone())),
+        }
+    }
+
+    #[inline]
+    pub fn atomic_add_f_id(&mut self, id: usize, idx: i64, val: f32) -> Result<(), MemError> {
+        match &mut self.buffers[id] {
+            Buffer::F32(v) => {
+                let len = v.len();
+                match usize::try_from(idx).ok().and_then(|i| v.get_mut(i)) {
+                    Some(slot) => {
+                        *slot += val;
+                        Ok(())
+                    }
+                    None => Err(MemError::OutOfBounds { name: self.names[id].clone(), idx, len }),
+                }
+            }
+            Buffer::I32(_) => Err(MemError::TypeMismatch(self.names[id].clone())),
+        }
+    }
+
+    // ---- name-based API (setup / extraction / tests) ---------------------
+
+    pub fn buffer(&self, name: &str) -> Result<&Buffer, MemError> {
+        self.id_of(name)
+            .map(|id| &self.buffers[id])
+            .ok_or_else(|| MemError::UnknownBuffer(name.into()))
+    }
+
+    pub fn is_int_buffer(&self, name: &str) -> Result<bool, MemError> {
+        Ok(matches!(self.buffer(name)?, Buffer::I32(_)))
+    }
+
+    pub fn load_num(&self, name: &str, idx: i64) -> Result<f64, MemError> {
+        let id = self.id_of(name).ok_or_else(|| MemError::UnknownBuffer(name.into()))?;
+        self.load_num_id(id, idx)
+    }
+
+    pub fn load_i(&self, name: &str, idx: i64) -> Result<i64, MemError> {
+        let id = self.id_of(name).ok_or_else(|| MemError::UnknownBuffer(name.into()))?;
+        self.load_i_id(id, idx)
+    }
+
+    pub fn store_f(&mut self, name: &str, idx: i64, val: f32) -> Result<(), MemError> {
+        let id = self.id_of(name).ok_or_else(|| MemError::UnknownBuffer(name.into()))?;
+        self.store_f_id(id, idx, val)
+    }
+
+    pub fn atomic_add_f(&mut self, name: &str, idx: i64, val: f32) -> Result<(), MemError> {
+        let id = self.id_of(name).ok_or_else(|| MemError::UnknownBuffer(name.into()))?;
+        self.atomic_add_f_id(id, idx, val)
+    }
+
+    pub fn take_f32(&mut self, name: &str) -> Option<Vec<f32>> {
+        let id = self.id_of(name)?;
+        match std::mem::replace(&mut self.buffers[id], Buffer::F32(Vec::new())) {
+            Buffer::F32(v) => Some(v),
+            other => {
+                self.buffers[id] = other;
+                None
+            }
+        }
+    }
+
+    pub fn f32_slice(&self, name: &str) -> Result<&[f32], MemError> {
+        match self.buffer(name)? {
+            Buffer::F32(v) => Ok(v),
+            Buffer::I32(_) => Err(MemError::TypeMismatch(name.into())),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bind_load_store() {
+        let mut m = DeviceMemory::new();
+        m.bind_f32("x", vec![1.0, 2.0]).bind_i32("p", vec![0, 3]).bind_scalar("n", 2);
+        assert_eq!(m.load_num("x", 1).unwrap(), 2.0);
+        assert_eq!(m.load_i("p", 1).unwrap(), 3);
+        assert_eq!(m.scalar("n").unwrap(), 2);
+        m.store_f("x", 0, 9.0).unwrap();
+        assert_eq!(m.f32_slice("x").unwrap(), &[9.0, 2.0]);
+        m.atomic_add_f("x", 0, 1.0).unwrap();
+        assert_eq!(m.f32_slice("x").unwrap()[0], 10.0);
+    }
+
+    #[test]
+    fn bounds_checked() {
+        let mut m = DeviceMemory::new();
+        m.bind_f32("x", vec![0.0; 4]);
+        assert!(matches!(m.load_num("x", 4), Err(MemError::OutOfBounds { .. })));
+        assert!(matches!(m.load_num("x", -1), Err(MemError::OutOfBounds { .. })));
+        assert!(matches!(m.load_num("y", 0), Err(MemError::UnknownBuffer(_))));
+    }
+
+    #[test]
+    fn type_checked() {
+        let mut m = DeviceMemory::new();
+        m.bind_i32("p", vec![1]);
+        assert!(matches!(m.store_f("p", 0, 1.0), Err(MemError::TypeMismatch(_))));
+        assert!(matches!(m.load_i("p", 0), Ok(1)));
+    }
+
+    #[test]
+    fn rebind_keeps_id() {
+        let mut m = DeviceMemory::new();
+        m.bind_f32("x", vec![1.0]);
+        let id = m.id_of("x").unwrap();
+        m.bind_f32("x", vec![2.0, 3.0]);
+        assert_eq!(m.id_of("x").unwrap(), id);
+        assert_eq!(m.f32_slice("x").unwrap(), &[2.0, 3.0]);
+    }
+
+    #[test]
+    fn id_fast_path_matches_name_path() {
+        let mut m = DeviceMemory::new();
+        m.bind_i32("p", vec![7, 8]);
+        let id = m.id_of("p").unwrap();
+        assert!(m.is_int_id(id));
+        assert_eq!(m.load_i_id(id, 1).unwrap(), 8);
+        assert!(m.load_i_id(id, 9).is_err());
+    }
+}

@@ -1,0 +1,41 @@
+//! The SIMT cost simulator — the stand-in for the paper's three GPUs
+//! (DESIGN.md §2).
+//!
+//! [`exec`] interprets compiler-emitted LLIR kernels warp-by-warp with
+//! 32-lane masks, producing *both* the numeric result and a cycle/sector
+//! cost account. [`machine`] rolls warp costs up to a kernel time under a
+//! roofline-style SM/DRAM model parameterized by [`HwProfile`]s matching
+//! the paper's RTX 3090 / RTX 2080 / Tesla V100 (§7, experiment settings).
+//!
+//! ## Cost model (also DESIGN.md §cost-model)
+//!
+//! * ALU op: 1 cycle/warp-instruction; divergent `if` pays both sides.
+//! * Global load: fixed issue cost + one 32-byte **sector** per distinct
+//!   sector touched by active lanes (coalescing model).
+//! * `atomicAdd`: issue + serialization by address multiplicity.
+//! * Group reduce (`atomicAddGroup`/`segReduceGroup` with width `r`):
+//!   `log2(r)` shuffle steps; each step carries a **convergence overhead
+//!   proportional to the synchronized width** (`sync_per_lane · r`). This
+//!   is the simulator's rendering of Fig. 1(b): lanes that do not carry
+//!   data still have to arrive at the synchronization point, and wider
+//!   groups wait longer. It is what makes flexible group size (Table 1)
+//!   pay off; the constant is calibrated so the r=8-vs-32 gain on
+//!   short-row matrices lands in the paper's 2× band.
+//! * Zero-contribution subgroups skip their writeback (the emitted macro
+//!   predicates the atomic on `value != 0`).
+//!
+//! Kernel time = `max(compute bound, DRAM bound, critical warp)` over
+//! SMs + launch overhead. Absolute times are *estimates*; the experiments
+//! only consume ratios (who wins, by how much), per DESIGN.md.
+
+pub mod cost;
+pub mod exec;
+pub mod machine;
+pub mod memory;
+pub mod resolve;
+
+pub use cost::{CostParams, WarpCost};
+pub use exec::{ExecError, WarpExecutor};
+pub use machine::{HwProfile, KernelReport, Machine};
+pub use memory::{Buffer, DeviceMemory};
+pub use resolve::{resolve, ResolvedKernel};

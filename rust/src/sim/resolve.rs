@@ -1,0 +1,234 @@
+//! Resolve pass: LLIR → slot-indexed executable form.
+//!
+//! The interpreter's hot loop must not hash strings. This pass runs once
+//! per launch and rewrites the kernel so that
+//!
+//! * local variables become indices into a dense slot vector,
+//! * array names become buffer ids into [`DeviceMemory`]'s buffer table,
+//! * grid-uniform scalar params (`A1_dimension`, …) are **inlined as
+//!   integer constants** (they cannot change during a launch).
+//!
+//! Added in the §Perf pass — see EXPERIMENTS.md §Perf for before/after.
+
+use thiserror::Error;
+
+use crate::compiler::llir::{BinOp, Kernel, Stmt, Val};
+
+use super::memory::DeviceMemory;
+
+#[derive(Debug, Error)]
+pub enum ResolveError {
+    #[error("kernel references unbound array `{0}`")]
+    UnknownArray(String),
+    #[error("kernel references unbound scalar param `{0}`")]
+    UnknownScalar(String),
+}
+
+/// Resolved value expression.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RVal {
+    Var(u16),
+    ConstI(i64),
+    ConstF(f32),
+    Bin(BinOp, Box<RVal>, Box<RVal>),
+    /// `buffers[id][idx]`; `int` caches the element type.
+    Load { array: u16, int: bool, idx: Box<RVal> },
+    BinarySearchBefore { array: u16, lo: Box<RVal>, hi: Box<RVal>, target: Box<RVal> },
+    BlockIdx,
+    ThreadIdx,
+}
+
+/// Resolved statement.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RStmt {
+    Decl { var: u16, init: RVal, float: bool },
+    /// `float` mirrors the Decl that introduced the var.
+    Assign { var: u16, val: RVal, float: bool },
+    Store { array: u16, idx: RVal, val: RVal },
+    AtomicAdd { array: u16, idx: RVal, val: RVal },
+    AtomicAddGroup { array: u16, idx: RVal, val: RVal, group: u32 },
+    SegReduceGroup { array: u16, idx: RVal, val: RVal, group: u32 },
+    For { var: u16, lo: RVal, hi: RVal, step: RVal, body: Vec<RStmt> },
+    While { cond: RVal, body: Vec<RStmt> },
+    If { cond: RVal, then: Vec<RStmt>, els: Vec<RStmt> },
+    Break,
+}
+
+/// A launch-ready kernel.
+#[derive(Debug, Clone)]
+pub struct ResolvedKernel {
+    pub name: String,
+    pub body: Vec<RStmt>,
+    pub block_dim: u32,
+    /// Number of local-variable slots.
+    pub slots: u16,
+}
+
+struct Resolver<'m> {
+    mem: &'m DeviceMemory,
+    vars: Vec<String>,
+    floats: Vec<bool>,
+}
+
+impl<'m> Resolver<'m> {
+    fn var_slot(&mut self, name: &str) -> u16 {
+        if let Some(i) = self.vars.iter().position(|v| v == name) {
+            i as u16
+        } else {
+            self.vars.push(name.to_string());
+            self.floats.push(false);
+            (self.vars.len() - 1) as u16
+        }
+    }
+
+    fn array_id(&self, name: &str) -> Result<(u16, bool), ResolveError> {
+        let id = self
+            .mem
+            .id_of(name)
+            .ok_or_else(|| ResolveError::UnknownArray(name.to_string()))?;
+        Ok((id as u16, self.mem.is_int_id(id)))
+    }
+
+    fn val(&mut self, v: &Val) -> Result<RVal, ResolveError> {
+        Ok(match v {
+            Val::Var(n) => RVal::Var(self.var_slot(n)),
+            Val::ConstI(c) => RVal::ConstI(*c),
+            Val::ConstF(c) => RVal::ConstF(*c),
+            Val::Param(n) => RVal::ConstI(
+                self.mem.scalar(n).map_err(|_| ResolveError::UnknownScalar(n.clone()))?,
+            ),
+            Val::Bin(op, a, b) => RVal::Bin(*op, Box::new(self.val(a)?), Box::new(self.val(b)?)),
+            Val::Load(a, idx) => {
+                let (array, int) = self.array_id(a)?;
+                RVal::Load { array, int, idx: Box::new(self.val(idx)?) }
+            }
+            Val::BinarySearchBefore { array, lo, hi, target } => {
+                let (array, _) = self.array_id(array)?;
+                RVal::BinarySearchBefore {
+                    array,
+                    lo: Box::new(self.val(lo)?),
+                    hi: Box::new(self.val(hi)?),
+                    target: Box::new(self.val(target)?),
+                }
+            }
+            Val::BlockIdx => RVal::BlockIdx,
+            Val::ThreadIdx => RVal::ThreadIdx,
+        })
+    }
+
+    fn stmts(&mut self, stmts: &[Stmt]) -> Result<Vec<RStmt>, ResolveError> {
+        let mut out = Vec::with_capacity(stmts.len());
+        for s in stmts {
+            match s {
+                Stmt::Comment(_) => {}
+                Stmt::Decl { var, init, float } => {
+                    let init = self.val(init)?;
+                    let slot = self.var_slot(var);
+                    self.floats[slot as usize] = *float;
+                    out.push(RStmt::Decl { var: slot, init, float: *float });
+                }
+                Stmt::Assign { var, val } => {
+                    let val = self.val(val)?;
+                    let slot = self.var_slot(var);
+                    let float = self.floats[slot as usize];
+                    out.push(RStmt::Assign { var: slot, val, float });
+                }
+                Stmt::Store { array, idx, val } => {
+                    let (array, _) = self.array_id(array)?;
+                    out.push(RStmt::Store { array, idx: self.val(idx)?, val: self.val(val)? });
+                }
+                Stmt::AtomicAdd { array, idx, val } => {
+                    let (array, _) = self.array_id(array)?;
+                    out.push(RStmt::AtomicAdd { array, idx: self.val(idx)?, val: self.val(val)? });
+                }
+                Stmt::AtomicAddGroup { array, idx, val, group } => {
+                    let (array, _) = self.array_id(array)?;
+                    out.push(RStmt::AtomicAddGroup {
+                        array,
+                        idx: self.val(idx)?,
+                        val: self.val(val)?,
+                        group: *group,
+                    });
+                }
+                Stmt::SegReduceGroup { array, idx, val, group } => {
+                    let (array, _) = self.array_id(array)?;
+                    out.push(RStmt::SegReduceGroup {
+                        array,
+                        idx: self.val(idx)?,
+                        val: self.val(val)?,
+                        group: *group,
+                    });
+                }
+                Stmt::For { var, lo, hi, step, body } => {
+                    let lo = self.val(lo)?;
+                    let hi = self.val(hi)?;
+                    let step = self.val(step)?;
+                    let slot = self.var_slot(var);
+                    out.push(RStmt::For { var: slot, lo, hi, step, body: self.stmts(body)? });
+                }
+                Stmt::While { cond, body } => {
+                    out.push(RStmt::While { cond: self.val(cond)?, body: self.stmts(body)? });
+                }
+                Stmt::If { cond, then, els } => out.push(RStmt::If {
+                    cond: self.val(cond)?,
+                    then: self.stmts(then)?,
+                    els: self.stmts(els)?,
+                }),
+                Stmt::Break => out.push(RStmt::Break),
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Resolve a kernel against bound memory (arrays + scalars must be bound).
+pub fn resolve(kernel: &Kernel, mem: &DeviceMemory) -> Result<ResolvedKernel, ResolveError> {
+    let mut r = Resolver { mem, vars: Vec::new(), floats: Vec::new() };
+    let body = r.stmts(&kernel.body)?;
+    Ok(ResolvedKernel {
+        name: kernel.name.clone(),
+        body,
+        block_dim: kernel.block_dim,
+        slots: r.vars.len() as u16,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::llir::Param;
+
+    #[test]
+    fn params_inline_and_vars_slot() {
+        let k = Kernel {
+            name: "t".into(),
+            params: vec![Param::f32_array("x"), Param::i32_scalar("n")],
+            block_dim: 32,
+            body: vec![
+                Stmt::Decl { var: "a".into(), init: Val::param("n"), float: false },
+                Stmt::Assign { var: "a".into(), val: Val::add(Val::var("a"), Val::ConstI(1)) },
+                Stmt::Store { array: "x".into(), idx: Val::var("a"), val: Val::ConstF(1.0) },
+            ],
+        };
+        let mut mem = DeviceMemory::new();
+        mem.bind_f32("x", vec![0.0; 8]).bind_scalar("n", 5);
+        let r = resolve(&k, &mem).unwrap();
+        assert_eq!(r.slots, 1);
+        match &r.body[0] {
+            RStmt::Decl { init: RVal::ConstI(5), .. } => {}
+            other => panic!("param not inlined: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_array_errors() {
+        let k = Kernel {
+            name: "t".into(),
+            params: vec![],
+            block_dim: 32,
+            body: vec![Stmt::Store { array: "nope".into(), idx: Val::ConstI(0), val: Val::ConstF(0.0) }],
+        };
+        let mem = DeviceMemory::new();
+        assert!(matches!(resolve(&k, &mem), Err(ResolveError::UnknownArray(_))));
+    }
+}

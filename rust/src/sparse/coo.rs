@@ -1,0 +1,116 @@
+//! COO (coordinate) format — the interchange and generation format.
+
+use super::csr::Csr;
+
+/// Coordinate-format sparse matrix, entries sorted by `(row, col)`,
+/// coordinates unique. The invariants are enforced by [`Coo::new`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct Coo {
+    pub rows: usize,
+    pub cols: usize,
+    pub row_idx: Vec<u32>,
+    pub col_idx: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl Coo {
+    /// Build from unsorted, possibly-duplicated triplets; duplicates are
+    /// summed (the MatrixMarket convention).
+    pub fn new(rows: usize, cols: usize, mut triplets: Vec<(u32, u32, f32)>) -> Self {
+        triplets.sort_unstable_by_key(|&(r, c, _)| (r, c));
+        let mut row_idx = Vec::with_capacity(triplets.len());
+        let mut col_idx = Vec::with_capacity(triplets.len());
+        let mut vals: Vec<f32> = Vec::with_capacity(triplets.len());
+        for (r, c, v) in triplets {
+            assert!((r as usize) < rows && (c as usize) < cols, "coordinate out of range");
+            if let (Some(&lr), Some(&lc)) = (row_idx.last(), col_idx.last()) {
+                if lr == r && lc == c {
+                    *vals.last_mut().unwrap() += v;
+                    continue;
+                }
+            }
+            row_idx.push(r);
+            col_idx.push(c);
+            vals.push(v);
+        }
+        Self { rows, cols, row_idx, col_idx, vals }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    pub fn density(&self) -> f64 {
+        if self.rows == 0 || self.cols == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.rows as f64 * self.cols as f64)
+    }
+
+    /// Convert to CSR (the compute format).
+    pub fn to_csr(&self) -> Csr {
+        let mut indptr = vec![0u32; self.rows + 1];
+        for &r in &self.row_idx {
+            indptr[r as usize + 1] += 1;
+        }
+        for i in 0..self.rows {
+            indptr[i + 1] += indptr[i];
+        }
+        Csr {
+            rows: self.rows,
+            cols: self.cols,
+            indptr,
+            indices: self.col_idx.clone(),
+            data: self.vals.clone(),
+        }
+    }
+
+    /// Dense materialization (tests only — O(rows·cols)).
+    pub fn to_dense(&self) -> Vec<Vec<f32>> {
+        let mut d = vec![vec![0f32; self.cols]; self.rows];
+        for k in 0..self.nnz() {
+            d[self.row_idx[k] as usize][self.col_idx[k] as usize] += self.vals[k];
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dedup_sums_duplicates() {
+        let m = Coo::new(2, 2, vec![(0, 0, 1.0), (0, 0, 2.0), (1, 1, 3.0)]);
+        assert_eq!(m.nnz(), 2);
+        assert_eq!(m.vals, vec![3.0, 3.0]);
+    }
+
+    #[test]
+    fn sorts_by_row_then_col() {
+        let m = Coo::new(3, 3, vec![(2, 1, 1.0), (0, 2, 1.0), (2, 0, 1.0)]);
+        assert_eq!(m.row_idx, vec![0, 2, 2]);
+        assert_eq!(m.col_idx, vec![2, 0, 1]);
+    }
+
+    #[test]
+    fn csr_round_trip_dense() {
+        let m = Coo::new(3, 4, vec![(0, 1, 2.0), (1, 0, -1.0), (2, 3, 5.0), (2, 0, 4.0)]);
+        let csr = m.to_csr();
+        assert_eq!(csr.indptr, vec![0, 1, 2, 4]);
+        assert_eq!(m.to_dense(), csr.to_dense());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn rejects_out_of_range() {
+        Coo::new(2, 2, vec![(2, 0, 1.0)]);
+    }
+
+    #[test]
+    fn density_empty() {
+        let m = Coo::new(10, 10, vec![]);
+        assert_eq!(m.nnz(), 0);
+        assert_eq!(m.density(), 0.0);
+    }
+}

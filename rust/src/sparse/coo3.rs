@@ -1,0 +1,119 @@
+//! Third-order sparse tensors in coordinate format — the substrate for
+//! MTTKRP and TTM (Eq. 2a/2b).
+
+use super::rng::SplitMix64;
+
+/// Order-3 COO tensor, entries sorted by `(i, j, k)`, coordinates unique.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Coo3 {
+    pub dim0: usize,
+    pub dim1: usize,
+    pub dim2: usize,
+    pub idx0: Vec<u32>,
+    pub idx1: Vec<u32>,
+    pub idx2: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl Coo3 {
+    pub fn new(
+        dims: (usize, usize, usize),
+        mut entries: Vec<(u32, u32, u32, f32)>,
+    ) -> Self {
+        entries.sort_unstable_by_key(|&(a, b, c, _)| (a, b, c));
+        let (dim0, dim1, dim2) = dims;
+        let mut t = Coo3 {
+            dim0,
+            dim1,
+            dim2,
+            idx0: Vec::with_capacity(entries.len()),
+            idx1: Vec::with_capacity(entries.len()),
+            idx2: Vec::with_capacity(entries.len()),
+            vals: Vec::with_capacity(entries.len()),
+        };
+        for (a, b, c, v) in entries {
+            assert!(
+                (a as usize) < dim0 && (b as usize) < dim1 && (c as usize) < dim2,
+                "coordinate out of range"
+            );
+            if let (Some(&la), Some(&lb), Some(&lc)) = (t.idx0.last(), t.idx1.last(), t.idx2.last())
+            {
+                if (la, lb, lc) == (a, b, c) {
+                    *t.vals.last_mut().unwrap() += v;
+                    continue;
+                }
+            }
+            t.idx0.push(a);
+            t.idx1.push(b);
+            t.idx2.push(c);
+            t.vals.push(v);
+        }
+        t
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Uniform random order-3 tensor with exactly `nnz` entries.
+    pub fn random(dims: (usize, usize, usize), nnz: usize, seed: u64) -> Self {
+        let mut rng = SplitMix64::new(seed);
+        let cap = dims.0 * dims.1 * dims.2;
+        let nnz = nnz.min(cap);
+        let mut seen = std::collections::HashSet::with_capacity(nnz * 2);
+        let mut entries = Vec::with_capacity(nnz);
+        while entries.len() < nnz {
+            let a = rng.below(dims.0 as u64) as u32;
+            let b = rng.below(dims.1 as u64) as u32;
+            let c = rng.below(dims.2 as u64) as u32;
+            if seen.insert((a, b, c)) {
+                entries.push((a, b, c, rng.value()));
+            }
+        }
+        Coo3::new(dims, entries)
+    }
+
+    /// Fiber ids over the leading two modes: `fiber[p] = i*dim1 + j` —
+    /// the segment key for reductions over the trailing mode.
+    pub fn leading_fiber_ids(&self) -> Vec<u32> {
+        (0..self.nnz()).map(|p| self.idx0[p] * self.dim1 as u32 + self.idx1[p]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sorted_and_deduped() {
+        let t = Coo3::new(
+            (2, 2, 2),
+            vec![(1, 1, 1, 1.0), (0, 0, 0, 2.0), (0, 0, 0, 3.0), (0, 1, 0, 1.0)],
+        );
+        assert_eq!(t.nnz(), 3);
+        assert_eq!(t.vals[0], 5.0); // deduped (0,0,0)
+        assert_eq!(t.idx0, vec![0, 0, 1]);
+    }
+
+    #[test]
+    fn random_has_exact_nnz_and_valid_coords() {
+        let t = Coo3::random((8, 9, 10), 200, 7);
+        assert_eq!(t.nnz(), 200);
+        for p in 0..t.nnz() {
+            assert!((t.idx0[p] as usize) < 8);
+            assert!((t.idx1[p] as usize) < 9);
+            assert!((t.idx2[p] as usize) < 10);
+        }
+        // deterministic
+        assert_eq!(t, Coo3::random((8, 9, 10), 200, 7));
+    }
+
+    #[test]
+    fn fiber_ids_monotone_for_sorted_tensor() {
+        let t = Coo3::random((6, 5, 4), 60, 3);
+        let f = t.leading_fiber_ids();
+        for w in f.windows(2) {
+            assert!(w[0] <= w[1], "fiber ids must be sorted for segment reduction");
+        }
+    }
+}

@@ -1,0 +1,185 @@
+//! CSR (compressed sparse row) — the compute format for every kernel.
+
+use super::coo::Coo;
+use super::ell::Ell;
+
+/// CSR sparse matrix. Invariants: `indptr` is monotone, starts at 0 and
+/// ends at `nnz`; `indices` within each row are strictly increasing.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    pub indptr: Vec<u32>,
+    pub indices: Vec<u32>,
+    pub data: Vec<f32>,
+}
+
+impl Csr {
+    pub fn nnz(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn density(&self) -> f64 {
+        if self.rows == 0 || self.cols == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.rows as f64 * self.cols as f64)
+    }
+
+    pub fn row_degree(&self, i: usize) -> usize {
+        (self.indptr[i + 1] - self.indptr[i]) as usize
+    }
+
+    pub fn max_row_degree(&self) -> usize {
+        (0..self.rows).map(|i| self.row_degree(i)).max().unwrap_or(0)
+    }
+
+    /// Validate all structural invariants (used by proptest round-trips).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        if self.indptr.len() != self.rows + 1 {
+            return Err(format!("indptr len {} != rows+1 {}", self.indptr.len(), self.rows + 1));
+        }
+        if self.indptr[0] != 0 || *self.indptr.last().unwrap() as usize != self.nnz() {
+            return Err("indptr endpoints wrong".into());
+        }
+        for i in 0..self.rows {
+            if self.indptr[i] > self.indptr[i + 1] {
+                return Err(format!("indptr not monotone at {i}"));
+            }
+            let (lo, hi) = (self.indptr[i] as usize, self.indptr[i + 1] as usize);
+            for k in lo..hi {
+                if self.indices[k] as usize >= self.cols {
+                    return Err(format!("col index {} out of range", self.indices[k]));
+                }
+                if k > lo && self.indices[k] <= self.indices[k - 1] {
+                    return Err(format!("row {i} columns not strictly increasing"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_coo(&self) -> Coo {
+        let mut row_idx = Vec::with_capacity(self.nnz());
+        for i in 0..self.rows {
+            for _ in self.indptr[i]..self.indptr[i + 1] {
+                row_idx.push(i as u32);
+            }
+        }
+        Coo {
+            rows: self.rows,
+            cols: self.cols,
+            row_idx,
+            col_idx: self.indices.clone(),
+            vals: self.data.clone(),
+        }
+    }
+
+    /// Convert to ELL with `slots >= max_row_degree`, padding with
+    /// `(col=0, val=0)` — zero extension at the data level.
+    pub fn to_ell(&self, slots: usize) -> Ell {
+        assert!(slots >= self.max_row_degree(), "slots < max row degree");
+        let mut cols = vec![0u32; self.rows * slots];
+        let mut vals = vec![0f32; self.rows * slots];
+        for i in 0..self.rows {
+            let (lo, hi) = (self.indptr[i] as usize, self.indptr[i + 1] as usize);
+            for (s, k) in (lo..hi).enumerate() {
+                cols[i * slots + s] = self.indices[k];
+                vals[i * slots + s] = self.data[k];
+            }
+        }
+        Ell { rows: self.rows, cols_dim: self.cols, slots, cols, vals }
+    }
+
+    pub fn to_dense(&self) -> Vec<Vec<f32>> {
+        let mut d = vec![vec![0f32; self.cols]; self.rows];
+        for i in 0..self.rows {
+            for k in self.indptr[i] as usize..self.indptr[i + 1] as usize {
+                d[i][self.indices[k] as usize] += self.data[k];
+            }
+        }
+        d
+    }
+
+    /// `blockStarts` for nnz-split algorithms: for each block of `nnz_per_block`
+    /// non-zeros, the row containing its first nnz — the binary-search
+    /// precomputation TACO emits for `pos` splits (Listing 1).
+    pub fn block_starts(&self, nnz_per_block: usize) -> Vec<u32> {
+        assert!(nnz_per_block > 0);
+        let nblocks = self.nnz().div_ceil(nnz_per_block);
+        let mut starts = Vec::with_capacity(nblocks + 1);
+        for b in 0..=nblocks {
+            let fpos = (b * nnz_per_block).min(self.nnz()) as u32;
+            // binary search: last i with indptr[i] <= fpos
+            let mut lo = 0usize;
+            let mut hi = self.rows;
+            while lo < hi {
+                let mid = (lo + hi + 1) / 2;
+                if self.indptr[mid] <= fpos {
+                    lo = mid;
+                } else {
+                    hi = mid - 1;
+                }
+            }
+            starts.push(lo as u32);
+        }
+        starts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Csr {
+        Coo::new(
+            4,
+            5,
+            vec![(0, 1, 1.0), (0, 3, 2.0), (1, 0, 3.0), (3, 2, 4.0), (3, 4, 5.0), (3, 0, 6.0)],
+        )
+        .to_csr()
+    }
+
+    #[test]
+    fn invariants_hold() {
+        sample().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn coo_round_trip() {
+        let csr = sample();
+        assert_eq!(csr.to_coo().to_csr(), csr);
+    }
+
+    #[test]
+    fn ell_round_trip_dense() {
+        let csr = sample();
+        let ell = csr.to_ell(4);
+        assert_eq!(ell.to_dense(), csr.to_dense());
+    }
+
+    #[test]
+    fn degrees() {
+        let csr = sample();
+        assert_eq!(csr.row_degree(0), 2);
+        assert_eq!(csr.row_degree(2), 0);
+        assert_eq!(csr.max_row_degree(), 3);
+    }
+
+    #[test]
+    fn block_starts_match_linear_scan() {
+        let csr = sample(); // indptr = [0,2,3,3,6]
+        // entries are the row containing each block's first nnz; the final
+        // entry (fpos == nnz) is the search-window terminator, == rows.
+        assert_eq!(csr.block_starts(2), vec![0, 1, 3, 4]);
+        assert_eq!(csr.block_starts(4), vec![0, 3, 4]);
+    }
+
+    #[test]
+    fn block_starts_single_block() {
+        let csr = sample();
+        let s = csr.block_starts(100);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s[0], 0);
+    }
+}

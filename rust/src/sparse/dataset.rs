@@ -1,0 +1,177 @@
+//! The evaluation dataset suite — the stand-in for the DA-SpMM
+//! SuiteSparse selection (DESIGN.md §2).
+//!
+//! The suite sweeps the two axes the paper's results key on:
+//! * **density**: 1e-4 … 5e-2 (Fig. 11's x-axis),
+//! * **row-degree skew**: uniform (ER, banded) vs power-law vs block,
+//! at several sizes. Every matrix is seeded, so `suite()` is deterministic.
+
+use super::coo::Coo;
+use super::gen;
+
+/// A named matrix in the evaluation suite.
+#[derive(Debug, Clone)]
+pub struct DatasetSpec {
+    pub name: String,
+    /// Generator family, for grouping in reports.
+    pub family: &'static str,
+    pub matrix: Coo,
+}
+
+fn spec(name: String, family: &'static str, matrix: Coo) -> DatasetSpec {
+    DatasetSpec { name, family, matrix }
+}
+
+/// The full evaluation suite (~26 matrices, up to ~200k nnz).
+///
+/// Sizes are scaled to simulator throughput: large enough that warp
+/// scheduling and imbalance effects dominate, small enough that the whole
+/// Table-3 sweep runs in minutes.
+pub fn suite() -> Vec<DatasetSpec> {
+    let mut out = Vec::new();
+    let mut seed = 1000u64;
+    let mut next = || {
+        seed += 1;
+        seed
+    };
+
+    // Erdős–Rényi density sweep (uniform degrees) — Fig. 11's x-axis.
+    for &(n, dens) in &[
+        (1024usize, 1e-3f64),
+        (1024, 5e-3),
+        (1024, 2e-2),
+        (2048, 5e-4),
+        (2048, 2e-3),
+        (2048, 1e-2),
+        (4096, 1e-4),
+        (4096, 1e-3),
+        (4096, 5e-3),
+    ] {
+        let nnz = ((n * n) as f64 * dens) as usize;
+        out.push(spec(format!("er_{n}_d{dens:.0e}"), "erdos_renyi", gen::erdos_renyi(n, n, nnz, next())));
+    }
+
+    // Power-law skew sweep — the workload-imbalance axis.
+    for &(n, nnz, alpha) in &[
+        (1024usize, 8192usize, 1.2f64),
+        (1024, 8192, 1.8),
+        (2048, 16384, 1.2),
+        (2048, 16384, 1.6),
+        (2048, 16384, 2.2),
+        (4096, 32768, 1.5),
+        (4096, 32768, 2.0),
+    ] {
+        out.push(spec(
+            format!("pl_{n}_a{alpha}"),
+            "power_law",
+            gen::power_law(n, n, nnz, alpha, next()),
+        ));
+    }
+
+    // Banded (scientific) matrices — perfect balance + locality.
+    for &(n, band) in &[(1024usize, 5usize), (2048, 9), (4096, 27)] {
+        out.push(spec(format!("band_{n}_w{band}"), "banded", gen::banded(n, band, next())));
+    }
+
+    // Block-community (GNN-ish) graphs.
+    for &(n, blocks, dens, inter) in &[
+        (1024usize, 8usize, 0.05f64, 1000usize),
+        (2048, 16, 0.02, 4000),
+        (4096, 32, 0.01, 8000),
+    ] {
+        out.push(spec(
+            format!("block_{n}_b{blocks}"),
+            "block_community",
+            gen::block_community(n, blocks, dens, inter, next()),
+        ));
+    }
+
+    // Extreme corners: near-empty and single-hub — the degenerate inputs
+    // where static group size 32 wastes the most parallelism (Fig. 1b).
+    out.push(spec("corner_sparse_4096".into(), "corner", gen::erdos_renyi(4096, 4096, 4096, next())));
+    {
+        let n = 1024usize;
+        let mut triplets: Vec<(u32, u32, f32)> = (0..n as u32).map(|c| (0u32, c, 1.0f32)).collect();
+        for i in 1..n as u32 {
+            triplets.push((i, (i * 7) % n as u32, 0.5));
+        }
+        out.push(spec("corner_hub_1024".into(), "corner", Coo::new(n, n, triplets)));
+    }
+    // short rows: every row has exactly 2 nnz — group 32 wastes 30 lanes.
+    {
+        let n = 2048usize;
+        let mut triplets = Vec::new();
+        for i in 0..n as u32 {
+            triplets.push((i, i % n as u32, 1.0));
+            triplets.push((i, (i * 13 + 1) % n as u32, -1.0));
+        }
+        out.push(spec("corner_short_rows_2048".into(), "corner", Coo::new(n, n, triplets)));
+    }
+
+    out
+}
+
+/// A reduced suite for fast benches/tests (first ER, one PL, one banded,
+/// one corner).
+pub fn mini_suite() -> Vec<DatasetSpec> {
+    suite()
+        .into_iter()
+        .filter(|s| {
+            matches!(
+                s.name.as_str(),
+                "er_1024_d5e-3" | "pl_1024_a1.8" | "band_1024_w5" | "corner_short_rows_2048"
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::stats::MatrixStats;
+
+    #[test]
+    fn suite_is_nonempty_and_valid() {
+        let s = suite();
+        assert!(s.len() >= 20, "suite has {} entries", s.len());
+        for d in &s {
+            d.matrix.to_csr().check_invariants().unwrap_or_else(|e| panic!("{}: {e}", d.name));
+            assert!(d.matrix.nnz() > 0, "{} empty", d.name);
+        }
+    }
+
+    #[test]
+    fn suite_names_unique() {
+        let s = suite();
+        let mut names: Vec<_> = s.iter().map(|d| d.name.clone()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), s.len());
+    }
+
+    #[test]
+    fn suite_spans_density_and_skew() {
+        let s = suite();
+        let stats: Vec<MatrixStats> = s.iter().map(|d| MatrixStats::of(&d.matrix.to_csr())).collect();
+        let dmin = stats.iter().map(|t| t.density).fold(f64::MAX, f64::min);
+        let dmax = stats.iter().map(|t| t.density).fold(0.0, f64::max);
+        assert!(dmin < 5e-4 && dmax > 1e-2, "density span [{dmin}, {dmax}] too narrow");
+        let cvmax = stats.iter().map(|t| t.row_degree_cv).fold(0.0, f64::max);
+        let cvmin = stats.iter().map(|t| t.row_degree_cv).fold(f64::MAX, f64::min);
+        assert!(cvmax > 1.0 && cvmin < 0.2, "skew span [{cvmin}, {cvmax}] too narrow");
+    }
+
+    #[test]
+    fn mini_suite_subset() {
+        assert_eq!(mini_suite().len(), 4);
+    }
+
+    #[test]
+    fn suite_deterministic() {
+        let a = suite();
+        let b = suite();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.matrix, y.matrix, "{} differs between calls", x.name);
+        }
+    }
+}

@@ -1,0 +1,67 @@
+//! ELL (ELLPACK) format: fixed `slots` entries per row, zero-padded.
+//!
+//! This is the staging format for the row-balanced parallel-reduction
+//! kernels (and the layout the Pallas `spmm_row_pr` artifact expects).
+
+/// ELL matrix. `cols`/`vals` are row-major `[rows * slots]`; padding slots
+/// hold `(col=0, val=0)` so they are numerically inert (zero extension).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Ell {
+    pub rows: usize,
+    /// Number of columns of the logical matrix (not the slot count).
+    pub cols_dim: usize,
+    pub slots: usize,
+    pub cols: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl Ell {
+    #[inline]
+    pub fn slot(&self, row: usize, s: usize) -> (u32, f32) {
+        let k = row * self.slots + s;
+        (self.cols[k], self.vals[k])
+    }
+
+    pub fn to_dense(&self) -> Vec<Vec<f32>> {
+        let mut d = vec![vec![0f32; self.cols_dim]; self.rows];
+        for i in 0..self.rows {
+            for s in 0..self.slots {
+                let (c, v) = self.slot(i, s);
+                d[i][c as usize] += v;
+            }
+        }
+        d
+    }
+
+    /// Fraction of slots that are padding — the ELL memory-overhead metric
+    /// that makes row-balanced kernels lose on skewed matrices.
+    pub fn padding_ratio(&self) -> f64 {
+        if self.rows == 0 || self.slots == 0 {
+            return 0.0;
+        }
+        let pad = self.vals.iter().filter(|&&v| v == 0.0).count();
+        pad as f64 / (self.rows * self.slots) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::sparse::coo::Coo;
+
+    #[test]
+    fn padding_ratio_reflects_skew() {
+        // one dense-ish row + three empty rows -> high padding
+        let coo = Coo::new(4, 8, (0..8).map(|c| (0u32, c as u32, 1.0f32)).collect());
+        let ell = coo.to_csr().to_ell(8);
+        assert!(ell.padding_ratio() >= 0.74);
+    }
+
+    #[test]
+    fn slot_accessor() {
+        let coo = Coo::new(2, 4, vec![(0, 2, 5.0), (1, 0, 1.0), (1, 3, 2.0)]);
+        let ell = coo.to_csr().to_ell(2);
+        assert_eq!(ell.slot(0, 0), (2, 5.0));
+        assert_eq!(ell.slot(0, 1), (0, 0.0)); // padding
+        assert_eq!(ell.slot(1, 1), (3, 2.0));
+    }
+}

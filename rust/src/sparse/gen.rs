@@ -1,0 +1,218 @@
+//! Seeded synthetic sparse-matrix generators.
+//!
+//! The paper evaluates on the DA-SpMM SuiteSparse selection, which we do
+//! not have; these generators sweep the two axes that selection varies —
+//! **density** and **row-degree skew** — plus the banded/block structures
+//! common in scientific matrices (DESIGN.md §2 substitution table).
+
+use super::coo::Coo;
+use super::rng::SplitMix64;
+
+/// Erdős–Rényi: each of `nnz` entries uniform over the index space.
+/// Row degrees are near-uniform (low CV) — the regime where row-balanced
+/// kernels win.
+pub fn erdos_renyi(rows: usize, cols: usize, nnz: usize, seed: u64) -> Coo {
+    let mut rng = SplitMix64::new(seed);
+    let cap = rows * cols;
+    let nnz = nnz.min(cap);
+    let mut triplets = Vec::with_capacity(nnz);
+    let mut seen = std::collections::HashSet::with_capacity(nnz * 2);
+    while triplets.len() < nnz {
+        let r = rng.below(rows as u64) as u32;
+        let c = rng.below(cols as u64) as u32;
+        if seen.insert((r, c)) {
+            triplets.push((r, c, rng.value()));
+        }
+    }
+    Coo::new(rows, cols, triplets)
+}
+
+/// Power-law (Zipf) row degrees — the graph-like, high-skew regime where
+/// nnz-balanced kernels win. `alpha` is the Zipf exponent (1.0–2.5 typical);
+/// larger `alpha` = heavier skew concentrated on fewer rows.
+pub fn power_law(rows: usize, cols: usize, nnz: usize, alpha: f64, seed: u64) -> Coo {
+    let mut rng = SplitMix64::new(seed);
+    // Zipf weights over a shuffled row order so hub rows are scattered.
+    let mut order: Vec<u32> = (0..rows as u32).collect();
+    rng.shuffle(&mut order);
+    let weights: Vec<f64> = (1..=rows).map(|k| (k as f64).powf(-alpha)).collect();
+    let total: f64 = weights.iter().sum();
+    // per-row target degrees, largest remainder rounding, capped at `cols`
+    // (overflow past a full row is redistributed to rows with headroom)
+    let mut degrees: Vec<usize> =
+        weights.iter().map(|w| (((w / total) * nnz as f64).floor() as usize).min(cols)).collect();
+    let mut assigned: usize = degrees.iter().sum();
+    let mut k = 0;
+    let mut stall = 0;
+    while assigned < nnz && stall < rows {
+        let slot = k % rows;
+        if degrees[slot] < cols {
+            degrees[slot] += 1;
+            assigned += 1;
+            stall = 0;
+        } else {
+            stall += 1;
+        }
+        k += 1;
+    }
+    let mut triplets = Vec::with_capacity(nnz);
+    let mut seen = std::collections::HashSet::with_capacity(nnz * 2);
+    for (rank, &row) in order.iter().enumerate() {
+        let want = degrees[rank].min(cols);
+        let mut got = 0;
+        let mut attempts = 0;
+        while got < want && attempts < want * 20 + 16 {
+            let c = rng.below(cols as u64) as u32;
+            if seen.insert((row, c)) {
+                triplets.push((row, c, rng.value()));
+                got += 1;
+            }
+            attempts += 1;
+        }
+    }
+    Coo::new(rows, cols, triplets)
+}
+
+/// Banded matrix: `band` diagonals around the main diagonal — the
+/// scientific-computing regime (perfect locality, uniform degrees).
+pub fn banded(n: usize, band: usize, seed: u64) -> Coo {
+    let mut rng = SplitMix64::new(seed);
+    let half = band / 2;
+    let mut triplets = Vec::new();
+    for i in 0..n {
+        let lo = i.saturating_sub(half);
+        let hi = (i + half).min(n - 1);
+        for j in lo..=hi {
+            triplets.push((i as u32, j as u32, rng.value()));
+        }
+    }
+    Coo::new(n, n, triplets)
+}
+
+/// Block-community matrix: `blocks` dense-ish diagonal communities plus
+/// sparse inter-block noise — the GNN / social-graph regime.
+pub fn block_community(
+    n: usize,
+    blocks: usize,
+    intra_density: f64,
+    inter_nnz: usize,
+    seed: u64,
+) -> Coo {
+    assert!(blocks > 0 && n >= blocks);
+    let mut rng = SplitMix64::new(seed);
+    let bs = n / blocks;
+    let mut triplets = Vec::new();
+    let mut seen = std::collections::HashSet::new();
+    for b in 0..blocks {
+        let base = b * bs;
+        let size = if b == blocks - 1 { n - base } else { bs };
+        let want = ((size * size) as f64 * intra_density) as usize;
+        let mut got = 0;
+        while got < want {
+            let r = base as u64 + rng.below(size as u64);
+            let c = base as u64 + rng.below(size as u64);
+            if seen.insert((r as u32, c as u32)) {
+                triplets.push((r as u32, c as u32, rng.value()));
+                got += 1;
+            }
+        }
+    }
+    let mut got = 0;
+    while got < inter_nnz {
+        let r = rng.below(n as u64) as u32;
+        let c = rng.below(n as u64) as u32;
+        if seen.insert((r, c)) {
+            triplets.push((r, c, rng.value()));
+            got += 1;
+        }
+    }
+    Coo::new(n, n, triplets)
+}
+
+/// Row-normalized GCN adjacency Â = D^{-1}(A + I) from any square pattern.
+pub fn normalize_adjacency(m: &Coo) -> Coo {
+    assert_eq!(m.rows, m.cols, "adjacency must be square");
+    let mut triplets: Vec<(u32, u32, f32)> = Vec::with_capacity(m.nnz() + m.rows);
+    for k in 0..m.nnz() {
+        triplets.push((m.row_idx[k], m.col_idx[k], 1.0));
+    }
+    for i in 0..m.rows as u32 {
+        triplets.push((i, i, 1.0)); // self loop
+    }
+    let with_loops = Coo::new(m.rows, m.cols, triplets);
+    let csr = with_loops.to_csr();
+    let mut out = Vec::with_capacity(csr.nnz());
+    for i in 0..csr.rows {
+        let deg = csr.row_degree(i).max(1) as f32;
+        for k in csr.indptr[i] as usize..csr.indptr[i + 1] as usize {
+            out.push((i as u32, csr.indices[k], 1.0 / deg));
+        }
+    }
+    Coo::new(m.rows, m.cols, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::stats::MatrixStats;
+
+    #[test]
+    fn er_exact_nnz_and_valid() {
+        let m = erdos_renyi(100, 80, 500, 1);
+        assert_eq!(m.nnz(), 500);
+        m.to_csr().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn er_deterministic() {
+        assert_eq!(erdos_renyi(50, 50, 200, 42), erdos_renyi(50, 50, 200, 42));
+        assert_ne!(erdos_renyi(50, 50, 200, 42), erdos_renyi(50, 50, 200, 43));
+    }
+
+    #[test]
+    fn power_law_is_skewed() {
+        let er = erdos_renyi(512, 512, 4096, 7);
+        let pl = power_law(512, 512, 4096, 1.6, 7);
+        let cv_er = MatrixStats::of(&er.to_csr()).row_degree_cv;
+        let cv_pl = MatrixStats::of(&pl.to_csr()).row_degree_cv;
+        assert!(cv_pl > cv_er * 2.0, "power-law CV {cv_pl} not >> ER CV {cv_er}");
+    }
+
+    #[test]
+    fn power_law_nnz_close() {
+        let m = power_law(256, 256, 2048, 1.2, 3);
+        assert!(m.nnz() as f64 > 2048.0 * 0.9, "nnz {} too far below target", m.nnz());
+    }
+
+    #[test]
+    fn banded_structure() {
+        let m = banded(64, 5, 1);
+        let csr = m.to_csr();
+        csr.check_invariants().unwrap();
+        // interior rows have exactly band entries
+        assert_eq!(csr.row_degree(32), 5);
+        for k in 0..m.nnz() {
+            let (r, c) = (m.row_idx[k] as i64, m.col_idx[k] as i64);
+            assert!((r - c).abs() <= 2);
+        }
+    }
+
+    #[test]
+    fn block_community_shape() {
+        let m = block_community(128, 4, 0.2, 100, 5);
+        m.to_csr().check_invariants().unwrap();
+        assert!(m.nnz() > 4 * (32 * 32 / 5) && m.nnz() < 128 * 128);
+    }
+
+    #[test]
+    fn normalized_adjacency_rows_sum_to_one() {
+        let m = erdos_renyi(64, 64, 300, 11);
+        let a = normalize_adjacency(&m);
+        let csr = a.to_csr();
+        for i in 0..csr.rows {
+            let s: f32 =
+                (csr.indptr[i] as usize..csr.indptr[i + 1] as usize).map(|k| csr.data[k]).sum();
+            assert!((s - 1.0).abs() < 1e-5, "row {i} sums to {s}");
+        }
+    }
+}

@@ -1,0 +1,24 @@
+//! Sparse-matrix substrate: formats, IO, generators, datasets, statistics.
+//!
+//! Everything downstream (compiler-generated kernels, the simulator, the
+//! dgSPARSE re-implementation, the PJRT marshaller) consumes these types.
+//! All generators are seeded and deterministic so every experiment in
+//! `EXPERIMENTS.md` is reproducible bit-for-bit.
+
+pub mod coo;
+pub mod coo3;
+pub mod csr;
+pub mod dataset;
+pub mod ell;
+pub mod gen;
+pub mod mtx;
+pub mod rng;
+pub mod stats;
+
+pub use coo::Coo;
+pub use csr::Csr;
+pub use dataset::{suite, DatasetSpec};
+pub use ell::Ell;
+pub use gen::{banded, block_community, erdos_renyi, power_law};
+pub use rng::SplitMix64;
+pub use stats::MatrixStats;

@@ -1,0 +1,145 @@
+//! MatrixMarket (`.mtx`) reader/writer — coordinate real general/symmetric.
+//!
+//! Lets users run the benchmarks on real SuiteSparse matrices when they
+//! have them; the CI path uses the synthetic suite instead.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::coo::Coo;
+
+/// Parse a MatrixMarket stream into COO. Supports `matrix coordinate
+/// real|integer|pattern general|symmetric`.
+pub fn read_mtx<R: Read>(reader: R) -> Result<Coo> {
+    let mut lines = BufReader::new(reader).lines();
+
+    let header = lines.next().context("empty mtx file")??;
+    let h: Vec<&str> = header.split_whitespace().collect();
+    if h.len() < 4 || !h[0].starts_with("%%MatrixMarket") {
+        bail!("not a MatrixMarket file: {header}");
+    }
+    if h[1] != "matrix" || h[2] != "coordinate" {
+        bail!("only `matrix coordinate` supported, got {header}");
+    }
+    let field = h[3];
+    if !matches!(field, "real" | "integer" | "pattern") {
+        bail!("unsupported field type {field}");
+    }
+    let symmetric = h.get(4).is_some_and(|&s| s == "symmetric");
+
+    // skip comments, read size line
+    let size_line = loop {
+        let line = lines.next().context("missing size line")??;
+        if !line.starts_with('%') && !line.trim().is_empty() {
+            break line;
+        }
+    };
+    let dims: Vec<usize> =
+        size_line.split_whitespace().map(|t| t.parse().context("bad size line")).collect::<Result<_>>()?;
+    if dims.len() != 3 {
+        bail!("size line must have 3 fields");
+    }
+    let (rows, cols, nnz) = (dims[0], dims[1], dims[2]);
+
+    let mut triplets = Vec::with_capacity(if symmetric { nnz * 2 } else { nnz });
+    let mut seen = 0usize;
+    for line in lines {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let toks: Vec<&str> = t.split_whitespace().collect();
+        if toks.len() < 2 {
+            bail!("bad entry line: {t}");
+        }
+        let r: usize = toks[0].parse().context("bad row")?;
+        let c: usize = toks[1].parse().context("bad col")?;
+        let v: f32 = if field == "pattern" { 1.0 } else { toks.get(2).context("missing value")?.parse()? };
+        if r == 0 || c == 0 || r > rows || c > cols {
+            bail!("entry ({r},{c}) out of 1-based range {rows}x{cols}");
+        }
+        triplets.push((r as u32 - 1, c as u32 - 1, v));
+        if symmetric && r != c {
+            triplets.push((c as u32 - 1, r as u32 - 1, v));
+        }
+        seen += 1;
+    }
+    if seen != nnz {
+        bail!("expected {nnz} entries, saw {seen}");
+    }
+    Ok(Coo::new(rows, cols, triplets))
+}
+
+pub fn read_mtx_file<P: AsRef<Path>>(path: P) -> Result<Coo> {
+    let f = std::fs::File::open(&path)
+        .with_context(|| format!("open {}", path.as_ref().display()))?;
+    read_mtx(f)
+}
+
+/// Write COO as `matrix coordinate real general`.
+pub fn write_mtx<W: Write>(mut w: W, m: &Coo) -> Result<()> {
+    writeln!(w, "%%MatrixMarket matrix coordinate real general")?;
+    writeln!(w, "% written by sgap")?;
+    writeln!(w, "{} {} {}", m.rows, m.cols, m.nnz())?;
+    for k in 0..m.nnz() {
+        writeln!(w, "{} {} {}", m.row_idx[k] + 1, m.col_idx[k] + 1, m.vals[k])?;
+    }
+    Ok(())
+}
+
+pub fn write_mtx_file<P: AsRef<Path>>(path: P, m: &Coo) -> Result<()> {
+    let f = std::fs::File::create(&path)
+        .with_context(|| format!("create {}", path.as_ref().display()))?;
+    write_mtx(std::io::BufWriter::new(f), m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_general_real() {
+        let src = "%%MatrixMarket matrix coordinate real general\n% comment\n3 4 2\n1 2 1.5\n3 4 -2.0\n";
+        let m = read_mtx(src.as_bytes()).unwrap();
+        assert_eq!((m.rows, m.cols, m.nnz()), (3, 4, 2));
+        assert_eq!(m.vals, vec![1.5, -2.0]);
+    }
+
+    #[test]
+    fn parse_symmetric_expands() {
+        let src = "%%MatrixMarket matrix coordinate real symmetric\n2 2 2\n1 1 1.0\n2 1 3.0\n";
+        let m = read_mtx(src.as_bytes()).unwrap();
+        assert_eq!(m.nnz(), 3); // diagonal not duplicated
+    }
+
+    #[test]
+    fn parse_pattern() {
+        let src = "%%MatrixMarket matrix coordinate pattern general\n2 2 1\n1 2\n";
+        let m = read_mtx(src.as_bytes()).unwrap();
+        assert_eq!(m.vals, vec![1.0]);
+    }
+
+    #[test]
+    fn round_trip() {
+        let m = Coo::new(5, 5, vec![(0, 4, 1.0), (2, 2, -3.5), (4, 0, 2.25)]);
+        let mut buf = Vec::new();
+        write_mtx(&mut buf, &m).unwrap();
+        let back = read_mtx(buf.as_slice()).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn rejects_wrong_count() {
+        let src = "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n";
+        assert!(read_mtx(src.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn rejects_array_format() {
+        let src = "%%MatrixMarket matrix array real general\n2 2\n1.0\n";
+        assert!(read_mtx(src.as_bytes()).is_err());
+    }
+}

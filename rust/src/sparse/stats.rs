@@ -1,0 +1,92 @@
+//! Matrix statistics — the *input dynamics* features the DA-SpMM-style
+//! selector keys on (density, mean/CV of row degree, Gini imbalance).
+
+use super::csr::Csr;
+
+/// Summary statistics of a sparse matrix's structure.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MatrixStats {
+    pub rows: usize,
+    pub cols: usize,
+    pub nnz: usize,
+    pub density: f64,
+    pub row_degree_mean: f64,
+    /// Coefficient of variation of row degrees: std/mean. ~0 for ER/banded,
+    /// >1 for power-law — the skew axis of the selector.
+    pub row_degree_cv: f64,
+    pub row_degree_max: usize,
+    /// Gini coefficient of row degrees in [0,1): 0 = perfectly balanced.
+    pub gini: f64,
+    /// Fraction of empty rows (they still cost a thread in row-balanced kernels).
+    pub empty_row_frac: f64,
+}
+
+impl MatrixStats {
+    pub fn of(m: &Csr) -> Self {
+        let degrees: Vec<usize> = (0..m.rows).map(|i| m.row_degree(i)).collect();
+        let n = degrees.len().max(1) as f64;
+        let mean = degrees.iter().sum::<usize>() as f64 / n;
+        let var = degrees.iter().map(|&d| (d as f64 - mean).powi(2)).sum::<f64>() / n;
+        let cv = if mean > 0.0 { var.sqrt() / mean } else { 0.0 };
+
+        let mut sorted = degrees.clone();
+        sorted.sort_unstable();
+        let total: f64 = sorted.iter().sum::<usize>() as f64;
+        let gini = if total > 0.0 {
+            let weighted: f64 =
+                sorted.iter().enumerate().map(|(i, &d)| (2.0 * (i as f64 + 1.0) - n - 1.0) * d as f64).sum();
+            weighted / (n * total)
+        } else {
+            0.0
+        };
+
+        MatrixStats {
+            rows: m.rows,
+            cols: m.cols,
+            nnz: m.nnz(),
+            density: m.density(),
+            row_degree_mean: mean,
+            row_degree_cv: cv,
+            row_degree_max: degrees.iter().copied().max().unwrap_or(0),
+            gini,
+            empty_row_frac: degrees.iter().filter(|&&d| d == 0).count() as f64 / n,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::coo::Coo;
+
+    #[test]
+    fn uniform_degrees_have_zero_cv_and_gini() {
+        let coo = Coo::new(
+            4,
+            4,
+            (0..4).flat_map(|r| [(r as u32, 0u32, 1.0f32), (r as u32, 1, 1.0)]).collect(),
+        );
+        let s = MatrixStats::of(&coo.to_csr());
+        assert_eq!(s.row_degree_mean, 2.0);
+        assert!(s.row_degree_cv.abs() < 1e-12);
+        assert!(s.gini.abs() < 1e-12);
+        assert_eq!(s.empty_row_frac, 0.0);
+    }
+
+    #[test]
+    fn single_hub_row_is_maximally_skewed() {
+        let coo = Coo::new(4, 8, (0..8).map(|c| (0u32, c as u32, 1.0f32)).collect());
+        let s = MatrixStats::of(&coo.to_csr());
+        assert_eq!(s.row_degree_max, 8);
+        assert_eq!(s.empty_row_frac, 0.75);
+        assert!(s.gini > 0.7, "gini {} should be high", s.gini);
+        assert!(s.row_degree_cv > 1.5);
+    }
+
+    #[test]
+    fn density_matches() {
+        let coo = Coo::new(10, 10, vec![(0, 0, 1.0), (5, 5, 1.0)]);
+        let s = MatrixStats::of(&coo.to_csr());
+        assert!((s.density - 0.02).abs() < 1e-12);
+    }
+}

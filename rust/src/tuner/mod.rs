@@ -1,0 +1,10 @@
+//! Auto-tuning over the atomic-parallelism space (§7) and the
+//! input-dynamics selector (the DA-SpMM-style "dynamic choice" of Table 5).
+
+pub mod search;
+pub mod selector;
+pub mod space;
+
+pub use search::{tune, TuneOutcome};
+pub use selector::Selector;
+pub use space::{dg_candidates, sgap_candidates, taco_candidates};

@@ -1,0 +1,87 @@
+//! Grid-search driver: run a candidate list on a matrix, rank by simulated
+//! time. Candidates are independent, so the sweep fans out across OS
+//! threads (numerics stay deterministic — each run owns its memory).
+
+use anyhow::Result;
+
+use crate::algos::catalog::{Algo, AlgoResult};
+use crate::sim::Machine;
+use crate::sparse::Csr;
+
+/// Outcome of tuning one matrix: all results, sorted fastest-first.
+#[derive(Debug)]
+pub struct TuneOutcome {
+    /// `(algo, time_s, gflops)` sorted ascending by time.
+    pub ranked: Vec<(Algo, f64, f64)>,
+}
+
+impl TuneOutcome {
+    pub fn best(&self) -> (Algo, f64) {
+        let (a, t, _) = self.ranked[0];
+        (a, t)
+    }
+
+    /// Time of a specific algorithm in this sweep, if present.
+    pub fn time_of(&self, algo: &Algo) -> Option<f64> {
+        self.ranked.iter().find(|(a, _, _)| a == algo).map(|&(_, t, _)| t)
+    }
+}
+
+/// Number of worker threads for sweeps (bounded; sweeps are CPU-heavy).
+fn workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+}
+
+/// Run every candidate on `(a, b)`; errors in individual candidates are
+/// propagated (the grids are pre-validated, so any failure is a bug).
+pub fn tune(machine: &Machine, candidates: &[Algo], a: &Csr, b: &[f32], n: u32) -> Result<TuneOutcome> {
+    let nw = workers().min(candidates.len().max(1));
+    let results: Vec<Result<(Algo, AlgoResult)>> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for chunk in candidates.chunks(candidates.len().div_ceil(nw).max(1)) {
+            handles.push(scope.spawn(move || {
+                chunk
+                    .iter()
+                    .map(|alg| alg.run(machine, a, b, n).map(|r| (*alg, r)))
+                    .collect::<Vec<_>>()
+            }));
+        }
+        handles.into_iter().flat_map(|h| h.join().expect("tuner worker panicked")).collect()
+    });
+
+    let mut ranked = Vec::with_capacity(results.len());
+    for r in results {
+        let (alg, res) = r?;
+        ranked.push((alg, res.time_s, res.gflops));
+    }
+    ranked.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    anyhow::ensure!(!ranked.is_empty(), "no candidates supplied");
+    Ok(TuneOutcome { ranked })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::HwProfile;
+    use crate::sparse::{erdos_renyi, SplitMix64};
+    use crate::tuner::space::sgap_candidates;
+
+    #[test]
+    fn tune_ranks_candidates() {
+        let a = erdos_renyi(128, 128, 1024, 3).to_csr();
+        let n = 4u32;
+        let mut rng = SplitMix64::new(2);
+        let b: Vec<f32> = (0..a.cols * n as usize).map(|_| rng.value()).collect();
+        let m = Machine::new(HwProfile::rtx3090());
+        let cands: Vec<Algo> = sgap_candidates(n).into_iter().take(8).collect();
+        let out = tune(&m, &cands, &a, &b, n).unwrap();
+        assert_eq!(out.ranked.len(), 8);
+        // sorted ascending
+        for w in out.ranked.windows(2) {
+            assert!(w[0].1 <= w[1].1);
+        }
+        let (best, t) = out.best();
+        assert!(t > 0.0);
+        assert!(out.time_of(&best).unwrap() <= out.ranked.last().unwrap().1);
+    }
+}

@@ -1,0 +1,160 @@
+//! Input-dynamics selector — the DA-SpMM-style model that picks an
+//! algorithm *without* running the full sweep (Table 5's "dynamic choice").
+//!
+//! A shallow decision tree over the matrix statistics the DA-SpMM paper
+//! identifies as decisive: row-degree skew (CV) decides EB-vs-RB
+//! (nnz-balanced kernels win on skewed inputs), mean row degree decides
+//! the reduction granularity `r` (short rows want small groups), and N
+//! decides the coarsening. Thresholds can be re-fit against a training
+//! suite with [`Selector::fit`].
+
+use crate::algos::catalog::{c_values, Algo};
+use crate::sim::Machine;
+use crate::sparse::{Csr, MatrixStats};
+
+use super::search::tune;
+use super::space::sgap_candidates;
+
+/// Decision thresholds (defaults hand-calibrated on the synthetic suite).
+#[derive(Debug, Clone, Copy)]
+pub struct Selector {
+    /// Row-degree CV above which nnz-balanced (EB) kernels are chosen.
+    pub cv_eb_threshold: f64,
+    /// Mean row degree below which a small group size is chosen.
+    pub short_row_degree: f64,
+    /// Group size used for short rows.
+    pub r_short: u32,
+    /// Group size used for long rows.
+    pub r_long: u32,
+}
+
+impl Default for Selector {
+    fn default() -> Self {
+        Selector { cv_eb_threshold: 0.8, short_row_degree: 16.0, r_short: 4, r_long: 32 }
+    }
+}
+
+impl Selector {
+    /// Pick an algorithm from the matrix statistics (no simulation).
+    pub fn select(&self, stats: &MatrixStats, n: u32) -> Algo {
+        let c = *c_values(n).last().unwrap_or(&1);
+        let short = stats.row_degree_mean < self.short_row_degree;
+        let r = if short { self.r_short } else { self.r_long };
+        if stats.row_degree_cv > self.cv_eb_threshold || stats.empty_row_frac > 0.4 {
+            // skewed: nnz-balanced segment reduction
+            Algo::SgapNnzGroup { c, r }
+        } else {
+            // balanced: row-split with grouped parallel reduction;
+            // g tracks the mean degree (enough lanes to cover a row pass)
+            let g = [2u32, 4, 8, 16, 32]
+                .into_iter()
+                .filter(|&g| r <= g && 256 % (g * (n / c)) == 0)
+                .min_by_key(|&g| (g as f64 - stats.row_degree_mean).abs() as u64)
+                .unwrap_or(32);
+            Algo::SgapRowGroup { g, c, r }
+        }
+    }
+
+    /// Re-fit `cv_eb_threshold` on a training set by minimizing total
+    /// simulated time of the selector's choices (simple 1-D grid fit —
+    /// the DA-SpMM paper uses a decision tree trained the same spirit).
+    pub fn fit(machine: &Machine, train: &[(Csr, Vec<f32>)], n: u32) -> anyhow::Result<Selector> {
+        let mut best = Selector::default();
+        let mut best_total = f64::MAX;
+        for cv_t in [0.3, 0.5, 0.8, 1.2, 2.0] {
+            for deg_t in [4.0, 16.0, 64.0] {
+                let cand = Selector {
+                    cv_eb_threshold: cv_t,
+                    short_row_degree: deg_t,
+                    ..Selector::default()
+                };
+                let mut total = 0.0;
+                for (a, b) in train {
+                    let stats = MatrixStats::of(a);
+                    let algo = cand.select(&stats, n);
+                    total += algo.run(machine, a, b, n)?.time_s;
+                }
+                if total < best_total {
+                    best_total = total;
+                    best = cand;
+                }
+            }
+        }
+        Ok(best)
+    }
+
+    /// Regret of the selector on a matrix: selected time / oracle-best
+    /// time over the sgap candidate grid (1.0 = perfect).
+    pub fn regret(&self, machine: &Machine, a: &Csr, b: &[f32], n: u32) -> anyhow::Result<f64> {
+        let stats = MatrixStats::of(a);
+        let chosen = self.select(&stats, n);
+        let t_chosen = chosen.run(machine, a, b, n)?.time_s;
+        let sweep = tune(machine, &sgap_candidates(n), a, b, n)?;
+        let (_, t_best) = sweep.best();
+        Ok(t_chosen / t_best)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::HwProfile;
+    use crate::sparse::{erdos_renyi, power_law, SplitMix64};
+
+    fn b_for(a: &Csr, n: u32, seed: u64) -> Vec<f32> {
+        let mut rng = SplitMix64::new(seed);
+        (0..a.cols * n as usize).map(|_| rng.value()).collect()
+    }
+
+    #[test]
+    fn skewed_inputs_get_nnz_balanced() {
+        let s = Selector::default();
+        let skew = power_law(512, 512, 8192, 2.0, 1).to_csr();
+        let algo = s.select(&MatrixStats::of(&skew), 4);
+        assert!(matches!(algo, Algo::SgapNnzGroup { .. }), "got {}", algo.name());
+    }
+
+    #[test]
+    fn uniform_inputs_get_row_balanced() {
+        let s = Selector::default();
+        let er = crate::sparse::banded(512, 9, 2).to_csr();
+        let algo = s.select(&MatrixStats::of(&er), 4);
+        assert!(matches!(algo, Algo::SgapRowGroup { .. }), "got {}", algo.name());
+    }
+
+    #[test]
+    fn short_rows_get_small_groups() {
+        let s = Selector::default();
+        let er = erdos_renyi(512, 512, 1024, 3).to_csr(); // mean degree 2
+        let algo = s.select(&MatrixStats::of(&er), 4);
+        match algo {
+            Algo::SgapRowGroup { r, .. } | Algo::SgapNnzGroup { r, .. } => assert_eq!(r, 4),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn selected_algos_are_runnable() {
+        let m = Machine::new(HwProfile::rtx3090());
+        let s = Selector::default();
+        for a in [
+            erdos_renyi(128, 128, 512, 5).to_csr(),
+            power_law(128, 128, 2000, 1.8, 6).to_csr(),
+        ] {
+            let algo = s.select(&MatrixStats::of(&a), 4);
+            let b = b_for(&a, 4, 9);
+            algo.run(&m, &a, &b, 4).unwrap();
+        }
+    }
+
+    #[test]
+    fn regret_is_bounded() {
+        let m = Machine::new(HwProfile::rtx3090());
+        let s = Selector::default();
+        let a = erdos_renyi(96, 96, 700, 8).to_csr();
+        let b = b_for(&a, 4, 10);
+        let r = s.regret(&m, &a, &b, 4).unwrap();
+        assert!(r >= 1.0 - 1e-9, "regret {r} below 1");
+        assert!(r < 5.0, "selector badly mis-chooses: regret {r}");
+    }
+}

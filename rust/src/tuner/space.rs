@@ -1,0 +1,151 @@
+//! Candidate grids: which algorithm points the tuner sweeps.
+//!
+//! All grids respect the legality rules of `compiler::spaces` plus the
+//! launch-shape constraints (`p % (N/c) == 0`, at least one row per block,
+//! `groupSz <= workerSz`, …).
+
+use crate::algos::catalog::{c_values, Algo};
+use crate::algos::dgsparse::DgConfig;
+
+const P: u32 = 256;
+
+fn kchunks_ok(n: u32, c: u32) -> bool {
+    n % c == 0 && P % (n / c) == 0
+}
+
+/// Original-TACO candidates: `{<g nnz, c col>, 1}` and `{<x row, c col>, 1}`.
+pub fn taco_candidates(n: u32) -> Vec<Algo> {
+    let mut out = Vec::new();
+    for c in c_values(n) {
+        if !kchunks_ok(n, c) {
+            continue;
+        }
+        for g in [4u32, 8, 16, 32] {
+            out.push(Algo::TacoNnzSerial { g, c });
+        }
+        for x in [1u32, 2, 4] {
+            out.push(Algo::TacoRowSerial { x, c });
+        }
+    }
+    out
+}
+
+/// Sgap candidates: the two new families over (g, c, r).
+pub fn sgap_candidates(n: u32) -> Vec<Algo> {
+    let mut out = Vec::new();
+    for c in c_values(n) {
+        if !kchunks_ok(n, c) {
+            continue;
+        }
+        let kch = n / c;
+        for r in [2u32, 4, 8, 16, 32] {
+            out.push(Algo::SgapNnzGroup { c, r });
+            for g in [2u32, 4, 8, 16, 32] {
+                // rule 2 analogue: r <= g; and at least one row per block
+                if r <= g && P % (g * kch) == 0 && P / (g * kch) >= 1 {
+                    out.push(Algo::SgapRowGroup { g, c, r });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Reduced dgSPARSE grid for the CI benches: one blockSz, two workerDimR
+/// fractions, tileSz ∈ {groupSz, 8, 32}. Covers the paper's best-static
+/// shapes (`<4-8, 256, 8, 1/2-1>`) at ~6× less sweep cost; the full grid
+/// is `dg_candidates`.
+pub fn dg_candidates_small(n: u32) -> Vec<Algo> {
+    let stock = DgConfig::stock(n);
+    let mut out = Vec::new();
+    for group_sz in [2u32, 4, 8, 16, 32] {
+        for tile_sz in [group_sz, 8, 32] {
+            if tile_sz < group_sz || !tile_sz.is_power_of_two() {
+                continue;
+            }
+            for frac in [0.5f64, 1.0] {
+                let cfg = DgConfig {
+                    n,
+                    group_sz,
+                    block_sz: 256,
+                    tile_sz,
+                    worker_dim_r_frac: frac,
+                    worker_sz: stock.worker_sz,
+                    coarsen_sz: stock.coarsen_sz.min(n.min(tile_sz)),
+                };
+                if cfg.validate().is_ok() && !out.contains(&Algo::Dg(cfg)) {
+                    out.push(Algo::Dg(cfg));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// dgSPARSE tuning grid (§7.2): `<groupSz, blockSz, tileSz, workerDimR>`.
+pub fn dg_candidates(n: u32) -> Vec<Algo> {
+    let stock = DgConfig::stock(n);
+    let mut out = Vec::new();
+    for group_sz in [2u32, 4, 8, 16, 32] {
+        for block_sz in [128u32, 256, 512] {
+            for tile_exp in 0..8u32 {
+                let tile_sz = 1 << tile_exp;
+                if tile_sz < group_sz || tile_sz > 128 {
+                    continue;
+                }
+                for frac in [0.25f64, 0.5, 1.0, 2.0] {
+                    let cfg = DgConfig {
+                        n,
+                        group_sz,
+                        block_sz,
+                        tile_sz,
+                        worker_dim_r_frac: frac,
+                        worker_sz: stock.worker_sz,
+                        coarsen_sz: stock.coarsen_sz.min(n.min(tile_sz)),
+                    };
+                    if cfg.validate().is_ok() {
+                        out.push(Algo::Dg(cfg));
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgap_grid_nonempty_and_legal() {
+        for n in [4u32, 16, 64, 128] {
+            let cands = sgap_candidates(n);
+            assert!(!cands.is_empty(), "no sgap candidates for N={n}");
+            for a in &cands {
+                if let Some(p) = a.to_point() {
+                    // candidates lower with Atomics races, so Rule 2 is lifted
+                    assert!(p.is_legal_with_atomics(), "{} illegal", a.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dg_grid_valid() {
+        let cands = dg_candidates(4);
+        assert!(cands.len() > 20);
+        for a in cands {
+            if let Algo::Dg(c) = a {
+                c.validate().unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn taco_grid_has_both_families() {
+        let c = taco_candidates(4);
+        assert!(c.iter().any(|a| matches!(a, Algo::TacoNnzSerial { .. })));
+        assert!(c.iter().any(|a| matches!(a, Algo::TacoRowSerial { .. })));
+    }
+}

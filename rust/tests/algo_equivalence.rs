@@ -1,0 +1,147 @@
+//! Property tests (in-house, seeded — proptest is not in the offline
+//! dependency set): every algorithm point computes the same SpMM as the
+//! serial oracle over randomized matrices, shapes and configurations;
+//! format round-trips preserve the matrix.
+
+use sgap::algos::catalog::Algo;
+use sgap::algos::cpu_ref::{max_rel_err, spmm_serial};
+use sgap::algos::dgsparse::DgConfig;
+use sgap::sim::{HwProfile, Machine};
+use sgap::sparse::{erdos_renyi, power_law, Coo, SplitMix64};
+
+const CASES: usize = 30;
+
+fn random_matrix(rng: &mut SplitMix64) -> sgap::sparse::Csr {
+    let rows = 16 + rng.below(200) as usize;
+    let cols = 16 + rng.below(200) as usize;
+    let density = 0.002 + rng.uniform() * 0.2;
+    let nnz = ((rows * cols) as f64 * density) as usize;
+    if rng.below(2) == 0 {
+        erdos_renyi(rows, cols, nnz.max(1), rng.next_u64()).to_csr()
+    } else {
+        power_law(rows, cols, nnz.max(1), 1.2 + rng.uniform(), rng.next_u64()).to_csr()
+    }
+}
+
+#[test]
+fn prop_compiler_kernels_match_oracle() {
+    let machine = Machine::new(HwProfile::rtx3090());
+    let mut rng = SplitMix64::new(0xA11CE);
+    for case in 0..CASES {
+        let a = random_matrix(&mut rng);
+        let n = [1usize, 2, 4, 8][rng.below(4) as usize] as u32;
+        let b: Vec<f32> = (0..a.cols * n as usize).map(|_| rng.value()).collect();
+        let want = spmm_serial(&a, &b, n as usize);
+
+        let c_opts: Vec<u32> =
+            [1u32, 2, 4].into_iter().filter(|c| n % c == 0 && 256 % (n / c) == 0).collect();
+        let c = c_opts[rng.below(c_opts.len() as u64) as usize];
+        let r = [2u32, 4, 8, 16, 32][rng.below(5) as usize];
+        let g = [2u32, 4, 8, 16, 32][rng.below(5) as usize];
+
+        let mut algos = vec![
+            Algo::SgapNnzGroup { c, r },
+            Algo::TacoNnzSerial { g, c },
+            Algo::TacoRowSerial { x: 1 + rng.below(3) as u32, c },
+        ];
+        if r <= g && 256 % (g * (n / c)) == 0 {
+            algos.push(Algo::SgapRowGroup { g, c, r });
+        }
+        for alg in algos {
+            let res = alg.run(&machine, &a, &b, n).unwrap_or_else(|e| {
+                panic!("case {case}: {} failed: {e}", alg.name())
+            });
+            let err = max_rel_err(&res.run.c, &want);
+            assert!(
+                err < 5e-4,
+                "case {case}: {} err {err} (matrix {}x{} nnz {} n {n})",
+                alg.name(),
+                a.rows,
+                a.cols,
+                a.nnz()
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_dgsparse_matches_oracle() {
+    let machine = Machine::new(HwProfile::v100());
+    let mut rng = SplitMix64::new(0xD6);
+    for case in 0..CASES {
+        let a = random_matrix(&mut rng);
+        let n = [4u32, 16][rng.below(2) as usize];
+        let b: Vec<f32> = (0..a.cols * n as usize).map(|_| rng.value()).collect();
+        let want = spmm_serial(&a, &b, n as usize);
+        let group_sz = [2u32, 4, 8, 16, 32][rng.below(5) as usize];
+        let tile_sz = [8u32, 16, 32, 64][rng.below(4) as usize].max(group_sz);
+        let cfg = DgConfig {
+            n,
+            group_sz,
+            block_sz: [128u32, 256, 512][rng.below(3) as usize],
+            tile_sz,
+            worker_dim_r_frac: [0.25, 0.5, 1.0, 2.0][rng.below(4) as usize],
+            worker_sz: 32,
+            coarsen_sz: if n.min(tile_sz) % 4 == 0 { 4 } else { 2 },
+        };
+        if cfg.validate().is_err() {
+            continue;
+        }
+        let res = Algo::Dg(cfg).run(&machine, &a, &b, n).unwrap();
+        let err = max_rel_err(&res.run.c, &want);
+        assert!(err < 5e-4, "case {case}: dg cfg {cfg:?} err {err}");
+    }
+}
+
+#[test]
+fn prop_format_round_trips() {
+    let mut rng = SplitMix64::new(0xF0);
+    for _ in 0..CASES {
+        let a = random_matrix(&mut rng);
+        a.check_invariants().unwrap();
+        // CSR -> COO -> CSR
+        assert_eq!(a.to_coo().to_csr(), a);
+        // CSR -> ELL -> dense equals CSR -> dense
+        let slots = a.max_row_degree().max(1);
+        assert_eq!(a.to_ell(slots).to_dense(), a.to_dense());
+        // MatrixMarket round trip
+        let mut buf = Vec::new();
+        sgap::sparse::mtx::write_mtx(&mut buf, &a.to_coo()).unwrap();
+        let back = sgap::sparse::mtx::read_mtx(buf.as_slice()).unwrap();
+        assert_eq!(back.to_csr(), a);
+    }
+}
+
+#[test]
+fn prop_simulated_time_is_positive_and_deterministic() {
+    let machine = Machine::new(HwProfile::rtx2080());
+    let mut rng = SplitMix64::new(0x7E57);
+    for _ in 0..10 {
+        let a = random_matrix(&mut rng);
+        let b: Vec<f32> = (0..a.cols * 4).map(|_| rng.value()).collect();
+        let alg = Algo::SgapNnzGroup { c: 4, r: 8 };
+        let r1 = alg.run(&machine, &a, &b, 4).unwrap();
+        let r2 = alg.run(&machine, &a, &b, 4).unwrap();
+        assert!(r1.time_s > 0.0);
+        assert_eq!(r1.time_s, r2.time_s, "simulated time must be deterministic");
+        assert_eq!(r1.run.c, r2.run.c);
+    }
+}
+
+#[test]
+fn prop_identity_matrix_copies_b() {
+    let mut rng = SplitMix64::new(0x1D);
+    for _ in 0..5 {
+        let n_rows = 32 + rng.below(100) as usize;
+        let eye = Coo::new(
+            n_rows,
+            n_rows,
+            (0..n_rows as u32).map(|i| (i, i, 1.0f32)).collect(),
+        )
+        .to_csr();
+        let b: Vec<f32> = (0..n_rows * 4).map(|_| rng.value()).collect();
+        let machine = Machine::new(HwProfile::rtx3090());
+        let res = Algo::SgapNnzGroup { c: 4, r: 32 }.run(&machine, &eye, &b, 4).unwrap();
+        assert!(max_rel_err(&res.run.c, &b) < 1e-6);
+    }
+}

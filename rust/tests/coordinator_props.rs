@@ -1,0 +1,99 @@
+//! Property tests for the coordinator's batcher invariants plus a
+//! concurrency stress test of the full service (CPU fallback path).
+
+use sgap::coordinator::{Batcher, Coordinator, Request};
+use sgap::sparse::{erdos_renyi, SplitMix64};
+
+/// Random push/drain interleavings: FIFO per key, no loss, batch bound.
+#[test]
+fn prop_batcher_invariants() {
+    let mut rng = SplitMix64::new(0xBA7C4);
+    for case in 0..50 {
+        let max_batch = 1 + rng.below(8) as usize;
+        let mut b: Batcher<u32, (u32, u64)> = Batcher::new(max_batch);
+        let keys = 1 + rng.below(5) as u32;
+        let n_items = rng.below(100) as usize;
+        let mut pushed_per_key: Vec<Vec<u64>> = vec![vec![]; keys as usize];
+        let mut seq = 0u64;
+        let mut drained_per_key: Vec<Vec<u64>> = vec![vec![]; keys as usize];
+        let mut drained_total = 0usize;
+
+        for _ in 0..n_items {
+            // random interleave: mostly pushes, some drains
+            if rng.below(4) == 0 {
+                if let Some((k, items)) = b.next_batch() {
+                    assert!(items.len() <= max_batch, "case {case}: batch too big");
+                    drained_total += items.len();
+                    for (key, s) in items {
+                        assert_eq!(key, k);
+                        drained_per_key[k as usize].push(s);
+                    }
+                }
+            }
+            let k = rng.below(keys as u64) as u32;
+            b.push(k, (k, seq));
+            pushed_per_key[k as usize].push(seq);
+            seq += 1;
+        }
+        // drain the rest
+        while let Some((k, items)) = b.next_batch() {
+            assert!(items.len() <= max_batch);
+            drained_total += items.len();
+            for (key, s) in items {
+                assert_eq!(key, k);
+                drained_per_key[k as usize].push(s);
+            }
+        }
+        assert!(b.is_empty());
+        assert_eq!(drained_total, n_items, "case {case}: lost items");
+        for k in 0..keys as usize {
+            assert_eq!(drained_per_key[k], pushed_per_key[k], "case {case}: key {k} not FIFO");
+        }
+    }
+}
+
+/// Many threads submitting concurrently: every request is answered and
+/// the metrics agree.
+#[test]
+fn coordinator_stress_concurrent_clients() {
+    let coord = std::sync::Arc::new(Coordinator::start(None).unwrap());
+    let clients = 8;
+    let per_client = 12;
+    let mut handles = Vec::new();
+    for t in 0..clients {
+        let c = coord.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = SplitMix64::new(t as u64);
+            for i in 0..per_client {
+                let a = erdos_renyi(48, 48, 200, t * 100 + i).to_csr();
+                let b: Vec<f32> = (0..48 * 2).map(|_| rng.value()).collect();
+                let rx = c.submit(Request { a, b, n: 2 });
+                let resp = rx.recv().unwrap().unwrap();
+                assert_eq!(resp.c.len(), 48 * 2);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let s = coord.metrics.snapshot();
+    assert_eq!(s.submitted, (clients * per_client) as u64);
+    assert_eq!(s.completed, (clients * per_client) as u64);
+    assert_eq!(s.errors, 0);
+    assert!(s.batches >= 1);
+}
+
+/// Metrics quantiles are ordered.
+#[test]
+fn metrics_quantiles_ordered() {
+    let coord = Coordinator::start(None).unwrap();
+    for i in 0..30u64 {
+        let a = erdos_renyi(32, 32, 64, i).to_csr();
+        let b = vec![1.0f32; 32 * 2];
+        let _ = coord.spmm_blocking(a, b, 2).unwrap();
+    }
+    let s = coord.metrics.snapshot();
+    assert!(s.p50_us <= s.p99_us);
+    assert!(s.mean_us > 0.0);
+    coord.shutdown();
+}

@@ -1,0 +1,121 @@
+//! End-to-end integration over the whole L3 stack: schedule → CIN → LLIR
+//! → simulator on the evaluation suite, the codegen golden path, and the
+//! tuner/selector loop.
+
+use sgap::algos::catalog::Algo;
+use sgap::algos::cpu_ref::{max_rel_err, spmm_serial};
+use sgap::compiler::codegen_cuda::emit_kernel;
+use sgap::compiler::schedule::{Schedule, SpmmConfig};
+use sgap::sim::{HwProfile, Machine};
+use sgap::sparse::{dataset, MatrixStats, SplitMix64};
+use sgap::tuner::{self, Selector};
+
+#[test]
+fn mini_suite_all_algorithms_correct() {
+    let machine = Machine::new(HwProfile::rtx3090());
+    let n = 4u32;
+    for d in dataset::mini_suite() {
+        let a = d.matrix.to_csr();
+        let mut rng = SplitMix64::new(1);
+        let b: Vec<f32> = (0..a.cols * n as usize).map(|_| rng.value()).collect();
+        let want = spmm_serial(&a, &b, n as usize);
+        for alg in [
+            Algo::TacoNnzSerial { g: 16, c: 4 },
+            Algo::TacoRowSerial { x: 1, c: 4 },
+            Algo::SgapRowGroup { g: 32, c: 4, r: 8 },
+            Algo::SgapNnzGroup { c: 4, r: 16 },
+        ] {
+            let res = alg.run(&machine, &a, &b, n).unwrap();
+            let err = max_rel_err(&res.run.c, &want);
+            assert!(err < 5e-4, "{} on {}: err {err}", alg.name(), d.name);
+        }
+    }
+}
+
+#[test]
+fn full_pipeline_schedule_to_cuda_text() {
+    // the user story from the paper: schedule commands in, CUDA out
+    let cfg = SpmmConfig { n: 4, c: 4, p: 256, g: 32, r: 8, x: 1 };
+    let sched = Schedule::sgap_nnz_group(cfg, 8);
+    assert!(sched.to_cin().to_string().contains("GPUGroup[8,Segment]"));
+    let kernel = sgap::compiler::lower(&sched).unwrap();
+    let cuda = emit_kernel(&kernel);
+    assert!(cuda.contains("segReduceGroup<float,8>"));
+    // the same kernel executes on the simulator
+    let a = sgap::sparse::erdos_renyi(64, 64, 256, 3).to_csr();
+    let b = vec![1.0f32; 64 * 4];
+    let machine = Machine::new(HwProfile::rtx2080());
+    let run = sgap::algos::runner::run_schedule(&machine, &sched, &a, &b).unwrap();
+    assert_eq!(run.c.len(), 64 * 4);
+}
+
+#[test]
+fn tuner_beats_or_matches_any_fixed_choice() {
+    let machine = Machine::new(HwProfile::rtx3090());
+    let n = 4u32;
+    let d = &dataset::mini_suite()[0];
+    let a = d.matrix.to_csr();
+    let mut rng = SplitMix64::new(2);
+    let b: Vec<f32> = (0..a.cols * n as usize).map(|_| rng.value()).collect();
+    let cands = tuner::space::sgap_candidates(n);
+    let out = tuner::tune(&machine, &cands, &a, &b, n).unwrap();
+    let (_, best_t) = out.best();
+    for (_, t, _) in &out.ranked {
+        assert!(best_t <= *t + 1e-15);
+    }
+}
+
+#[test]
+fn selector_on_suite_has_sane_regret() {
+    let machine = Machine::new(HwProfile::rtx3090());
+    let sel = Selector::default();
+    let n = 4u32;
+    let mut worst: f64 = 1.0;
+    for d in dataset::mini_suite() {
+        let a = d.matrix.to_csr();
+        let mut rng = SplitMix64::new(3);
+        let b: Vec<f32> = (0..a.cols * n as usize).map(|_| rng.value()).collect();
+        let r = sel.regret(&machine, &a, &b, n).unwrap();
+        worst = worst.max(r);
+    }
+    assert!(worst < 6.0, "selector regret {worst} too high on the mini suite");
+}
+
+#[test]
+fn stats_drive_expected_selector_families() {
+    let sel = Selector::default();
+    for d in dataset::suite() {
+        let stats = MatrixStats::of(&d.matrix.to_csr());
+        let algo = sel.select(&stats, 4);
+        if d.family == "banded" {
+            assert!(
+                matches!(algo, Algo::SgapRowGroup { .. }),
+                "banded {} should be row-balanced, got {}",
+                d.name,
+                algo.name()
+            );
+        }
+        if d.name == "corner_hub_1024" {
+            assert!(
+                matches!(algo, Algo::SgapNnzGroup { .. }),
+                "hub matrix should be nnz-balanced, got {}",
+                algo.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn hardware_profiles_order_memory_bound_kernels() {
+    // a memory-bound kernel must run slower on the 2080 (448 GB/s) than
+    // the 3090 (936 GB/s)
+    let n = 4u32;
+    let d = dataset::suite().into_iter().find(|d| d.name == "er_4096_d5e-3").unwrap();
+    let a = d.matrix.to_csr();
+    let mut rng = SplitMix64::new(4);
+    let b: Vec<f32> = (0..a.cols * n as usize).map(|_| rng.value()).collect();
+    let alg = Algo::TacoRowSerial { x: 1, c: 4 };
+    let t3090 = alg.run(&Machine::new(HwProfile::rtx3090()), &a, &b, n).unwrap().time_s;
+    let t2080 = alg.run(&Machine::new(HwProfile::rtx2080()), &a, &b, n).unwrap().time_s;
+    assert!(t2080 >= t3090, "2080 {t2080} should not beat 3090 {t3090}");
+}

@@ -1,0 +1,129 @@
+//! Integration: PJRT runtime executes the AOT artifacts and matches the
+//! rust CPU oracle — proving the three layers (Pallas kernel → jax graph →
+//! rust runtime) compose numerically.
+//!
+//! Requires `make artifacts`. Tests are skipped (with a loud message) if
+//! the manifest is missing, so `cargo test` works on a fresh clone.
+
+use std::path::PathBuf;
+
+use sgap::algos::cpu_ref::{max_rel_err, spmm_serial};
+use sgap::runtime::Runtime;
+use sgap::sparse::{erdos_renyi, gen, SplitMix64};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = std::env::var_os("SGAP_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"));
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at {} — run `make artifacts`", dir.display());
+        None
+    }
+}
+
+#[test]
+fn spmm_nnz_sr_artifact_matches_oracle() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::load(&dir).unwrap();
+    let name = "spmm_nnz_sr_r512_z4096_n4_g32";
+    let a = erdos_renyi(500, 500, 3500, 42).to_csr();
+    let mut rng = SplitMix64::new(1);
+    let b: Vec<f32> = (0..500 * 4).map(|_| rng.value()).collect();
+    let got = rt.run_spmm_nnz(name, &a, &b).unwrap();
+    let want = spmm_serial(&a, &b, 4);
+    let err = max_rel_err(&got, &want);
+    assert!(err < 1e-4, "pjrt vs oracle err {err}");
+    assert!(rt.is_cached(name));
+}
+
+#[test]
+fn spmm_nnz_sr_group8_variant_matches() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::load(&dir).unwrap();
+    let a = erdos_renyi(300, 400, 2000, 7).to_csr();
+    let mut rng = SplitMix64::new(2);
+    let b: Vec<f32> = (0..400 * 4).map(|_| rng.value()).collect();
+    let got = rt.run_spmm_nnz("spmm_nnz_sr_r512_z4096_n4_g8", &a, &b).unwrap();
+    let want = spmm_serial(&a, &b, 4);
+    assert!(max_rel_err(&got, &want) < 1e-4);
+}
+
+#[test]
+fn spmm_row_pr_artifact_matches_oracle() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::load(&dir).unwrap();
+    // keep max row degree <= 32 slots: banded matrix
+    let a = gen::banded(400, 9, 3).to_csr();
+    let mut rng = SplitMix64::new(3);
+    let b: Vec<f32> = (0..400 * 4).map(|_| rng.value()).collect();
+    let got = rt.run_spmm_ell("spmm_row_pr_r512_s32_n4_g32", &a, &b).unwrap();
+    let want = spmm_serial(&a, &b, 4);
+    assert!(max_rel_err(&got, &want) < 1e-4);
+}
+
+#[test]
+fn gcn2_artifact_matches_rust_reference() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::load(&dir).unwrap();
+    let spec = rt.registry.get("gcn2").unwrap().clone();
+    let (fi, hd, fo) = (spec.in_feat, spec.hidden, spec.out_feat);
+
+    let nodes = 2708; // Cora-scale
+    let graph = gen::normalize_adjacency(&erdos_renyi(nodes, nodes, 10_000, 5));
+    let a = graph.to_csr();
+    let mut rng = SplitMix64::new(4);
+    let h: Vec<f32> = (0..nodes * fi).map(|_| rng.value()).collect();
+    let w1: Vec<f32> = (0..fi * hd).map(|_| rng.value()).collect();
+    let w2: Vec<f32> = (0..hd * fo).map(|_| rng.value()).collect();
+
+    let got = rt.run_gcn2("gcn2", &a, &h, &w1, &w2).unwrap();
+
+    // rust reference: relu(A * relu(A * (H W1)) W2)
+    let matmul = |x: &[f32], y: &[f32], m: usize, k: usize, n: usize| -> Vec<f32> {
+        let mut out = vec![0f32; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                let xv = x[i * k + kk];
+                if xv != 0.0 {
+                    for j in 0..n {
+                        out[i * n + j] += xv * y[kk * n + j];
+                    }
+                }
+            }
+        }
+        out
+    };
+    let relu = |v: &mut Vec<f32>| v.iter_mut().for_each(|x| *x = x.max(0.0));
+    let hw1 = matmul(&h, &w1, nodes, fi, hd);
+    let mut z1 = spmm_serial(&a, &hw1, hd);
+    relu(&mut z1);
+    let z1w2 = matmul(&z1, &w2, nodes, hd, fo);
+    let mut want = spmm_serial(&a, &z1w2, fo);
+    relu(&mut want);
+
+    let err = max_rel_err(&got, &want);
+    assert!(err < 5e-4, "gcn2 pjrt vs rust reference err {err}");
+}
+
+#[test]
+fn routing_picks_admitting_bucket() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    use sgap::runtime::ArtifactKind;
+    let spec = rt.registry.route(ArtifactKind::SpmmNnzSr, 100, 100, 500).unwrap();
+    assert!(spec.admits(100, 100, 500));
+    // too big for every bucket
+    assert!(rt.registry.route(ArtifactKind::SpmmNnzSr, 100_000, 10, 10).is_none());
+}
+
+#[test]
+fn oversized_matrix_rejected_cleanly() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::load(&dir).unwrap();
+    let a = erdos_renyi(600, 600, 100, 9).to_csr(); // rows > 512 bucket
+    let b = vec![0f32; 600 * 4];
+    let err = rt.run_spmm_nnz("spmm_nnz_sr_r512_z4096_n4_g32", &a, &b).unwrap_err();
+    assert!(err.to_string().contains("exceeds bucket"), "{err}");
+}

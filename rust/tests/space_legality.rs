@@ -1,0 +1,94 @@
+//! Fig. 7/8 reproduction: exhaustive enumeration of the atomic-parallelism
+//! space with the three pruning rules, plus the DA-SpMM embedding claim.
+
+use sgap::compiler::spaces::{
+    enumerate_all, enumerate_legal, AtomicPoint, DataKind, Factor, Illegality,
+};
+
+const GS: [u32; 5] = [2, 4, 8, 16, 32];
+const CS: [u32; 3] = [2, 4, 8];
+const RS: [u32; 6] = [1, 2, 4, 8, 16, 32];
+
+#[test]
+fn every_point_classified_exactly_once() {
+    let all = enumerate_all(&GS, &CS, &RS);
+    // factors: One + 2 per g (5 gs) = 11; cols: One + 2 per c (3 cs) = 7
+    assert_eq!(all.len(), 2 * 11 * 7 * RS.len());
+    let legal = enumerate_legal(&GS, &CS, &RS);
+    let illegal = all.len() - legal.len();
+    assert!(illegal > 0 && !legal.is_empty());
+}
+
+#[test]
+fn rule1_prunes_exactly_fractional_nnz_and_cols() {
+    for (p, l) in enumerate_all(&GS, &CS, &RS) {
+        let frac_x = matches!(p.x, Factor::Inv(_));
+        let frac_col = matches!(p.col, Factor::Inv(_));
+        if p.kind == DataKind::Nnz && (frac_x || frac_col) {
+            assert_eq!(l, Err(Illegality::Rule1FractionalNnzOrCol), "{p}");
+        }
+    }
+}
+
+#[test]
+fn rule3_prunes_double_fractions() {
+    for (p, l) in enumerate_all(&GS, &CS, &RS) {
+        if p.kind == DataKind::Row
+            && matches!(p.x, Factor::Inv(_))
+            && matches!(p.col, Factor::Inv(_))
+        {
+            assert_eq!(l, Err(Illegality::Rule3DoubleFraction), "{p}");
+        }
+    }
+}
+
+#[test]
+fn rule2_boundary_is_r_equals_g() {
+    for g in GS {
+        for r in RS {
+            let p = AtomicPoint::new(DataKind::Row, Factor::Inv(g), Factor::One, r);
+            if r < g {
+                assert_eq!(p.legality(), Err(Illegality::Rule2ParallelReductionWriteback), "{p}");
+                // …but legal under Atomics (the Table-1 configuration)
+                assert!(p.is_legal_with_atomics(), "{p} should be legal with atomics");
+            } else {
+                assert!(p.is_legal(), "{p} should be legal");
+            }
+        }
+    }
+}
+
+#[test]
+fn da_spmm_space_strictly_contained() {
+    // all four DA-SpMM points are legal…
+    let legal = enumerate_legal(&GS, &[4], &RS);
+    for (name, p) in AtomicPoint::da_spmm_embedding(4) {
+        assert!(legal.contains(&p), "{name} = {p} missing from the legal space");
+    }
+    // …and the legal space is strictly larger (Fig. 2's Venn diagram)
+    let da: Vec<AtomicPoint> =
+        AtomicPoint::da_spmm_embedding(4).into_iter().map(|(_, p)| p).collect();
+    let beyond: Vec<_> = legal.iter().filter(|p| !da.contains(p)).collect();
+    assert!(
+        beyond.len() > da.len() * 2,
+        "atomic parallelism should open much more space than DA-SpMM: {} extra points",
+        beyond.len()
+    );
+}
+
+#[test]
+fn sgap_new_algorithms_are_in_the_extension() {
+    // the two §6.2 algorithm families occupy points outside DA-SpMM
+    let da: Vec<AtomicPoint> =
+        AtomicPoint::da_spmm_embedding(4).into_iter().map(|(_, p)| p).collect();
+    for r in [2u32, 4, 8, 16] {
+        let p = AtomicPoint::sgap_nnz(4, r);
+        assert!(p.is_legal(), "{p}");
+        assert!(!da.contains(&p), "{p} should extend DA-SpMM");
+    }
+    for (g, r) in [(8u32, 8u32), (16, 16), (8, 32)] {
+        let p = AtomicPoint::sgap_row(g, 4, r);
+        assert!(p.is_legal(), "{p}");
+        assert!(!da.contains(&p), "{p} should extend DA-SpMM");
+    }
+}

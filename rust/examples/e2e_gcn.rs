@@ -17,7 +17,7 @@ use std::time::Instant;
 
 use sgap::algos::catalog::Algo;
 use sgap::algos::cpu_ref::{max_rel_err, spmm_serial};
-use sgap::coordinator::{Coordinator, Request};
+use sgap::coordinator::{Coordinator, CoordinatorConfig, Request};
 use sgap::runtime::Runtime;
 use sgap::sim::{HwProfile, Machine};
 use sgap::sparse::{erdos_renyi, gen, MatrixStats, SplitMix64};
@@ -99,19 +99,22 @@ fn main() -> anyhow::Result<()> {
     );
 
     // ---- batched SpMM serving through the coordinator -------------------
-    let coord = Coordinator::start(Some(dir))?;
+    let coord = Coordinator::start(CoordinatorConfig {
+        artifacts_dir: Some(dir),
+        ..CoordinatorConfig::default()
+    })?;
     let reqs = 64;
     let t0 = Instant::now();
     let mut rxs = Vec::new();
     for i in 0..reqs {
         let m = erdos_renyi(500, 500, 3000, 100 + i as u64).to_csr();
         let b: Vec<f32> = (0..500 * 4).map(|_| rng.value()).collect();
-        rxs.push(coord.submit(Request { a: m, b, n: 4 }));
+        rxs.push(coord.submit(Request::Spmm { a: m, b, n: 4 }));
     }
     let mut pjrt_served = 0;
     for rx in rxs {
         let resp = rx.recv().unwrap().map_err(|e| anyhow::anyhow!(e))?;
-        if resp.backend != "cpu-fallback" {
+        if resp.backend.starts_with("pjrt:") {
             pjrt_served += 1;
         }
     }

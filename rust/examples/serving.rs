@@ -1,0 +1,99 @@
+//! Serving-layer walkthrough: the multi-worker coordinator with its
+//! tuner-aware plan cache, on mixed SpMM + SDDMM traffic.
+//!
+//! Eight client threads push repeated matrix shapes; the first sight of
+//! each shape pays one selector decision (plan-cache miss) and enqueues a
+//! background grid-search refinement; every repeat is a cache hit served
+//! with the (eventually tuned) plan. The run ends with the service
+//! metrics: per-backend latency histograms and cache counters.
+//!
+//! Run: `cargo run --release --example serving [-- --requests 200]`
+
+use std::sync::Arc;
+
+use sgap::coordinator::{Coordinator, CoordinatorConfig, Request};
+use sgap::sparse::{erdos_renyi, power_law, SplitMix64};
+
+fn main() -> anyhow::Result<()> {
+    let per_client: usize = std::env::args()
+        .skip_while(|a| a != "--requests")
+        .nth(1)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(50);
+
+    let coord = Arc::new(Coordinator::start(CoordinatorConfig {
+        workers: 4,
+        background_tune: true,
+        ..CoordinatorConfig::default()
+    })?);
+    println!("coordinator up: 4 workers, background tuner on");
+
+    let clients = 8usize;
+    let mut handles = Vec::new();
+    for t in 0..clients {
+        let coord = coord.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = SplitMix64::new(t as u64);
+            for i in 0..per_client {
+                // four repeated shapes: two uniform, one skewed, one SDDMM
+                let shape = (t + i) % 4;
+                let resp = match shape {
+                    0 => {
+                        let a = erdos_renyi(192, 192, 1800, 11).to_csr();
+                        let b: Vec<f32> = (0..a.cols * 4).map(|_| rng.value()).collect();
+                        coord.spmm_blocking(a, b, 4)
+                    }
+                    1 => {
+                        let a = erdos_renyi(128, 128, 500, 12).to_csr();
+                        let b: Vec<f32> = (0..a.cols * 8).map(|_| rng.value()).collect();
+                        coord.spmm_blocking(a, b, 8)
+                    }
+                    2 => {
+                        let a = power_law(192, 192, 2500, 1.9, 13).to_csr();
+                        let b: Vec<f32> = (0..a.cols * 4).map(|_| rng.value()).collect();
+                        coord.spmm_blocking(a, b, 4)
+                    }
+                    _ => {
+                        let a = erdos_renyi(96, 96, 700, 14).to_csr();
+                        let j = 16usize;
+                        let x1: Vec<f32> = (0..a.rows * j).map(|_| rng.value()).collect();
+                        let x2: Vec<f32> = (0..j * a.cols).map(|_| rng.value()).collect();
+                        coord.sddmm_blocking(a, x1, x2, j)
+                    }
+                };
+                let resp = resp.expect("request failed");
+                if i == 0 {
+                    println!(
+                        "client {t}: first response via {} (plan {:?}, cache hit {})",
+                        resp.backend, resp.plan, resp.cache_hit
+                    );
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let snap = coord.metrics.snapshot();
+    println!(
+        "\nserved {} requests, {} batches, p50 {} us p99 {} us",
+        snap.completed, snap.batches, snap.p50_us, snap.p99_us
+    );
+    println!("plan cache: {} hits / {} misses", snap.cache_hits, snap.cache_misses);
+    for b in &snap.backends {
+        println!(
+            "  {:<24} {:>6} reqs  p50 {:>8} us  p99 {:>8} us  mean {:>10.1} us",
+            b.backend, b.count, b.p50_us, b.p99_us, b.mean_us
+        );
+    }
+
+    let cache = coord.plan_cache.clone();
+    Arc::try_unwrap(coord).ok().expect("all clients joined").shutdown();
+    let cs = cache.stats();
+    println!(
+        "plan cache after shutdown: {} entries, {} tuned upgrades, {} evictions",
+        cs.entries, cs.upgrades, cs.evictions
+    );
+    Ok(())
+}

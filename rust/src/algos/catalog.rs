@@ -49,6 +49,19 @@ impl Algo {
         }
     }
 
+    /// Coarse, stable family label — the metrics/batching key in the
+    /// coordinator (one latency histogram per family, not per tuning
+    /// point).
+    pub fn family_label(&self) -> &'static str {
+        match self {
+            Algo::TacoNnzSerial { .. } => "taco-nnz-serial",
+            Algo::TacoRowSerial { .. } => "taco-row-serial",
+            Algo::SgapRowGroup { .. } => "sgap-row-group",
+            Algo::SgapNnzGroup { .. } => "sgap-nnz-group",
+            Algo::Dg(_) => "dgsparse",
+        }
+    }
+
     /// The atomic-parallelism point this algorithm occupies (None for the
     /// dgSPARSE entries, which carry more launch detail than the model).
     pub fn to_point(&self) -> Option<AtomicPoint> {
@@ -113,6 +126,32 @@ impl Algo {
     }
 }
 
+/// Every launch-legal compiler-family point (TACO + Sgap, no dgSPARSE) at
+/// dense width `n` with reduction width `r` — the sweep the differential
+/// property tests (`rust/tests/spmm_differential.rs`) run against the
+/// serial oracle.
+pub fn compiler_family_sweep(n: u32, r: u32) -> Vec<Algo> {
+    let mut out = Vec::new();
+    for c in c_values(n) {
+        let kch = n / c;
+        out.push(Algo::SgapNnzGroup { c, r });
+        for g in [4u32, 16] {
+            out.push(Algo::TacoNnzSerial { g, c });
+        }
+        for x in [1u32, 2] {
+            out.push(Algo::TacoRowSerial { x, c });
+        }
+        for g in [2u32, 4, 8, 16, 32] {
+            // rule-2 analogue (r <= g) plus the launch-shape divisibility
+            // (which also bounds g*kch <= 256: at least one row per block)
+            if r <= g && 256 % (g * kch) == 0 {
+                out.push(Algo::SgapRowGroup { g, c, r });
+            }
+        }
+    }
+    out
+}
+
 /// The default tuning grids (§7.1): `r` over powers of two, `c` dividing N.
 pub fn r_values() -> [u32; 6] {
     [1, 2, 4, 8, 16, 32]
@@ -165,5 +204,20 @@ mod tests {
     fn c_values_respect_divisibility() {
         assert_eq!(c_values(4), vec![1, 2, 4]);
         assert!(c_values(128).contains(&4));
+    }
+
+    #[test]
+    fn family_sweep_nonempty_and_spans_families() {
+        for n in [1u32, 4, 32] {
+            for r in [2u32, 8, 32] {
+                let sweep = compiler_family_sweep(n, r);
+                assert!(!sweep.is_empty(), "empty sweep for n={n} r={r}");
+                assert!(sweep.iter().any(|a| matches!(a, Algo::SgapNnzGroup { .. })));
+                assert!(sweep.iter().any(|a| matches!(a, Algo::TacoRowSerial { .. })));
+            }
+        }
+        let labels: std::collections::HashSet<&str> =
+            compiler_family_sweep(4, 8).iter().map(|a| a.family_label()).collect();
+        assert_eq!(labels.len(), 4, "labels {labels:?}");
     }
 }

@@ -1,5 +1,14 @@
-//! Service metrics: request counters and latency quantiles.
+//! Service metrics: request counters, global latency quantiles,
+//! per-backend latency histograms, and plan-cache hit/miss counters.
+//!
+//! The global quantiles come from a bounded reservoir (exact for the first
+//! 64k requests); the per-backend histograms are log2-bucketed so they are
+//! O(1) per sample and never grow — the shape a production scrape target
+//! wants. Backends are keyed by coarse labels (`sim:sgap-nnz-group`,
+//! `pjrt:<artifact>`, `cpu-serial`, `cpu-fallback`, …) so the map stays
+//! small under diverse traffic.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
@@ -11,8 +20,65 @@ pub struct Metrics {
     completed: AtomicU64,
     errors: AtomicU64,
     batches: AtomicU64,
+    /// Mirrors of the PlanCache's own hit/miss counters, kept here so one
+    /// snapshot is the whole scrape surface. The coordinator worker is the
+    /// only writer of both, via `note_cache`; `PlanCache::stats()` remains
+    /// the source of truth for cache-internal events (upgrades, evictions).
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
+    /// Requests that fell back to the serial CPU path after their planned
+    /// backend failed.
+    fallbacks: AtomicU64,
     /// Latencies in microseconds (bounded reservoir).
     latencies_us: Mutex<Vec<u64>>,
+    backends: Mutex<BTreeMap<String, Hist>>,
+}
+
+/// Log2-bucketed latency histogram: bucket `i` counts samples with
+/// `us < 2^i` (last bucket is open-ended).
+#[derive(Debug, Default, Clone)]
+struct Hist {
+    count: u64,
+    sum_us: u64,
+    buckets: [u64; 32],
+}
+
+impl Hist {
+    fn record(&mut self, us: u64) {
+        self.count += 1;
+        self.sum_us += us;
+        // index of the first power of two strictly above `us`
+        let idx = (64 - us.leading_zeros() as usize).min(self.buckets.len() - 1);
+        self.buckets[idx] += 1;
+    }
+
+    /// Upper bound of the bucket where the cumulative count crosses `p`.
+    fn quantile_us(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((self.count as f64) * p).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += b;
+            if cum >= target {
+                return if i == 0 { 0 } else { 1u64 << (i - 1) };
+            }
+        }
+        1u64 << (self.buckets.len() - 2)
+    }
+}
+
+/// Per-backend latency summary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BackendSnapshot {
+    pub backend: String,
+    pub count: u64,
+    pub mean_us: f64,
+    /// Log2-bucket quantiles: the value is the lower bound of the bucket
+    /// the quantile falls in (0 for sub-microsecond).
+    pub p50_us: u64,
+    pub p99_us: u64,
 }
 
 /// Point-in-time view.
@@ -22,9 +88,14 @@ pub struct MetricsSnapshot {
     pub completed: u64,
     pub errors: u64,
     pub batches: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub fallbacks: u64,
     pub p50_us: u64,
     pub p99_us: u64,
     pub mean_us: f64,
+    /// One entry per backend label, sorted by label.
+    pub backends: Vec<BackendSnapshot>,
 }
 
 const RESERVOIR: usize = 65_536;
@@ -42,12 +113,30 @@ impl Metrics {
         self.batches.fetch_add(1, Ordering::Relaxed);
     }
 
-    pub fn on_complete(&self, latency: Duration) {
+    pub fn on_cache_hit(&self) {
+        self.cache_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_cache_miss(&self) {
+        self.cache_misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_fallback(&self) {
+        self.fallbacks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a served request: global counters + the backend's histogram.
+    pub fn on_complete(&self, backend: &str, latency: Duration) {
         self.completed.fetch_add(1, Ordering::Relaxed);
-        let mut l = self.latencies_us.lock().unwrap();
-        if l.len() < RESERVOIR {
-            l.push(latency.as_micros() as u64);
+        let us = latency.as_micros() as u64;
+        {
+            let mut l = self.latencies_us.lock().unwrap();
+            if l.len() < RESERVOIR {
+                l.push(us);
+            }
         }
+        let mut b = self.backends.lock().unwrap();
+        b.entry(backend.to_string()).or_default().record(us);
     }
 
     pub fn on_error(&self) {
@@ -65,14 +154,31 @@ impl Metrics {
             }
         };
         let mean = if l.is_empty() { 0.0 } else { l.iter().sum::<u64>() as f64 / l.len() as f64 };
+        let backends = self
+            .backends
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(name, h)| BackendSnapshot {
+                backend: name.clone(),
+                count: h.count,
+                mean_us: h.sum_us as f64 / h.count.max(1) as f64,
+                p50_us: h.quantile_us(0.50),
+                p99_us: h.quantile_us(0.99),
+            })
+            .collect();
         MetricsSnapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.cache_misses.load(Ordering::Relaxed),
+            fallbacks: self.fallbacks.load(Ordering::Relaxed),
             p50_us: q(0.50),
             p99_us: q(0.99),
             mean_us: mean,
+            backends,
         }
     }
 }
@@ -86,7 +192,7 @@ mod tests {
         let m = Metrics::new();
         for i in 1..=100u64 {
             m.on_submit();
-            m.on_complete(Duration::from_micros(i));
+            m.on_complete("cpu-serial", Duration::from_micros(i));
         }
         m.on_error();
         let s = m.snapshot();
@@ -103,5 +209,49 @@ mod tests {
         let s = Metrics::new().snapshot();
         assert_eq!(s.p50_us, 0);
         assert_eq!(s.mean_us, 0.0);
+        assert!(s.backends.is_empty());
+        assert_eq!(s.cache_hits + s.cache_misses + s.fallbacks, 0);
+    }
+
+    #[test]
+    fn per_backend_histograms_separate() {
+        let m = Metrics::new();
+        for _ in 0..10 {
+            m.on_complete("sim:sgap-nnz-group", Duration::from_micros(100));
+        }
+        for _ in 0..5 {
+            m.on_complete("cpu-serial", Duration::from_micros(3000));
+        }
+        let s = m.snapshot();
+        assert_eq!(s.backends.len(), 2);
+        let sim = s.backends.iter().find(|b| b.backend == "sim:sgap-nnz-group").unwrap();
+        let cpu = s.backends.iter().find(|b| b.backend == "cpu-serial").unwrap();
+        assert_eq!(sim.count, 10);
+        assert_eq!(cpu.count, 5);
+        assert!((sim.mean_us - 100.0).abs() < 1e-9);
+        assert!(cpu.p50_us > sim.p50_us, "cpu {} !> sim {}", cpu.p50_us, sim.p50_us);
+    }
+
+    #[test]
+    fn hist_quantiles_bracket_samples() {
+        let mut h = Hist::default();
+        for us in [1u64, 2, 4, 100, 1000] {
+            h.record(us);
+        }
+        let p50 = h.quantile_us(0.5);
+        assert!(p50 >= 2 && p50 <= 4, "p50 bucket {p50}");
+        assert!(h.quantile_us(0.99) >= 512, "p99 bucket {}", h.quantile_us(0.99));
+        assert_eq!(h.quantile_us(1.0), h.quantile_us(0.999));
+    }
+
+    #[test]
+    fn cache_counters() {
+        let m = Metrics::new();
+        m.on_cache_miss();
+        m.on_cache_hit();
+        m.on_cache_hit();
+        m.on_fallback();
+        let s = m.snapshot();
+        assert_eq!((s.cache_hits, s.cache_misses, s.fallbacks), (2, 1, 1));
     }
 }

@@ -1,17 +1,29 @@
 //! The serving coordinator — L3's request path.
 //!
-//! The paper's contribution lives in the compiler (L2/L1-adjacent), so per
-//! DESIGN.md the coordinator is a focused service: an SpMM/GCN request
-//! queue with shape-bucket **batching**, artifact **routing** (PJRT
-//! executables compiled once and kept hot), a CPU fallback for requests no
-//! bucket admits, and metrics. Thread-based (the offline dependency set
-//! has no async runtime); one worker owns the PJRT client, callers get a
-//! channel future.
+//! A production-shaped front end over the paper's machinery: a **pool** of
+//! worker threads ([`pool`]) drains a bounded job queue (backpressure on
+//! submit), micro-batches by backend ([`batcher`]), and serves both SpMM
+//! and SDDMM requests. Kernel choice is **tuner-aware**: each matrix shape
+//! is fingerprinted and looked up in the [`plan_cache`] — a miss runs the
+//! DA-SpMM-style [`Selector`](crate::tuner::Selector) fast path, and an
+//! optional background thread refines hot shapes with the full
+//! `tuner::tune` sweep, upgrading the cached plan in place. Execution goes
+//! to PJRT artifacts (when compiled in and admitted), the SIMT simulator
+//! (running the plan's kernel), or the serial CPU fallback; [`metrics`]
+//! keeps global quantiles, per-backend latency histograms, and cache
+//! hit/miss counters.
+//!
+//! Thread-based throughout (the offline dependency set has no async
+//! runtime); callers get a channel future per request.
 
 pub mod batcher;
 pub mod metrics;
+pub mod plan_cache;
+pub mod pool;
 pub mod server;
 
 pub use batcher::Batcher;
-pub use metrics::{Metrics, MetricsSnapshot};
-pub use server::{Coordinator, Request, Response};
+pub use metrics::{BackendSnapshot, Metrics, MetricsSnapshot};
+pub use plan_cache::{Plan, PlanCache, PlanCacheStats, PlanKind, PlanOrigin, Scenario, ShapeKey};
+pub use pool::JobQueue;
+pub use server::{Coordinator, CoordinatorConfig, Request, Response};

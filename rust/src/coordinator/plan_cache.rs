@@ -1,0 +1,298 @@
+//! Plan cache — the serving layer's memory of which kernel to run.
+//!
+//! The paper's headline is that the right algorithm point depends on the
+//! *input dynamics* (Table 5, DA-SpMM): the serving layer therefore keys a
+//! cache on a fingerprint of [`MatrixStats`] + the dense width, so the
+//! first sight of a matrix shape pays one [`Selector`] decision (fast
+//! path) and repeat traffic gets the chosen kernel at zero selection
+//! cost. An optional background tuner (`tuner::tune` over the sgap grid)
+//! later *upgrades* the cached plan from `Selector` to `Tuned`.
+//!
+//! Correctness does not depend on the fingerprint: every plan in the
+//! catalog computes the same SpMM/SDDMM (property-tested in
+//! `rust/tests/spmm_differential.rs`), so a fingerprint collision can only
+//! cost performance, never accuracy.
+//!
+//! [`Selector`]: crate::tuner::Selector
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::algos::catalog::Algo;
+use crate::algos::sddmm::SddmmConfig;
+use crate::sparse::MatrixStats;
+
+/// Which kernel scenario a plan serves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Scenario {
+    Spmm,
+    Sddmm,
+}
+
+/// Fingerprint of a request's input dynamics: exact shape plus quantized
+/// structure statistics (skew, mean degree, empty rows) — the features the
+/// DA-SpMM-style selector keys on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ShapeKey {
+    pub scenario: Scenario,
+    pub rows: usize,
+    pub cols: usize,
+    pub nnz: usize,
+    /// Dense column count N (SpMM) or inner dimension J (SDDMM).
+    pub width: u32,
+    /// Row-degree CV in eighths, saturated at 8.0.
+    cv_q: u16,
+    /// Mean row degree, log2-bucketed.
+    mean_q: u16,
+    /// Empty-row fraction in sixteenths.
+    empty_q: u16,
+}
+
+impl ShapeKey {
+    fn quantized(scenario: Scenario, stats: &MatrixStats, width: u32) -> ShapeKey {
+        ShapeKey {
+            scenario,
+            rows: stats.rows,
+            cols: stats.cols,
+            nnz: stats.nnz,
+            width,
+            cv_q: (stats.row_degree_cv.clamp(0.0, 8.0) * 8.0).round() as u16,
+            mean_q: (stats.row_degree_mean + 1.0).log2().floor().clamp(0.0, 64.0) as u16,
+            empty_q: (stats.empty_row_frac.clamp(0.0, 1.0) * 16.0).round() as u16,
+        }
+    }
+
+    pub fn spmm(stats: &MatrixStats, n: u32) -> ShapeKey {
+        Self::quantized(Scenario::Spmm, stats, n)
+    }
+
+    pub fn sddmm(stats: &MatrixStats, j_dim: u32) -> ShapeKey {
+        Self::quantized(Scenario::Sddmm, stats, j_dim)
+    }
+}
+
+/// The executable choice a plan resolves to.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PlanKind {
+    Spmm(Algo),
+    Sddmm(SddmmConfig),
+}
+
+impl PlanKind {
+    /// Full plan description (tuning parameters included).
+    pub fn describe(&self) -> String {
+        match self {
+            PlanKind::Spmm(algo) => algo.name(),
+            PlanKind::Sddmm(cfg) => format!("sddmm{{<1/{} nnz>,{}}}", cfg.g, cfg.r),
+        }
+    }
+
+    /// Coarse label for metrics aggregation (one histogram per family).
+    pub fn family_label(&self) -> &'static str {
+        match self {
+            PlanKind::Spmm(algo) => algo.family_label(),
+            PlanKind::Sddmm(_) => "sddmm-group",
+        }
+    }
+}
+
+/// How the cached plan was chosen.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanOrigin {
+    /// Fast path: the input-dynamics decision tree.
+    Selector,
+    /// Upgraded by the background grid-search tuner.
+    Tuned,
+}
+
+/// A cached serving plan.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Plan {
+    pub kind: PlanKind,
+    pub origin: PlanOrigin,
+}
+
+/// Point-in-time cache statistics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlanCacheStats {
+    pub entries: usize,
+    pub hits: u64,
+    pub misses: u64,
+    pub upgrades: u64,
+    pub evictions: u64,
+}
+
+struct Inner {
+    map: HashMap<ShapeKey, Plan>,
+    /// Insertion order for FIFO eviction.
+    order: VecDeque<ShapeKey>,
+}
+
+/// Bounded, thread-safe plan cache (FIFO eviction).
+pub struct PlanCache {
+    inner: Mutex<Inner>,
+    capacity: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    upgrades: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl PlanCache {
+    pub fn new(capacity: usize) -> PlanCache {
+        assert!(capacity > 0, "plan cache capacity must be positive");
+        PlanCache {
+            inner: Mutex::new(Inner { map: HashMap::new(), order: VecDeque::new() }),
+            capacity,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            upgrades: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// Look up `key`; on a miss run `select` (under the lock — selection is
+    /// a few float comparisons) and cache its choice with
+    /// [`PlanOrigin::Selector`]. Returns the plan and whether it was a hit.
+    pub fn get_or_insert_with(
+        &self,
+        key: ShapeKey,
+        select: impl FnOnce() -> PlanKind,
+    ) -> (Plan, bool) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(plan) = inner.map.get(&key) {
+            let plan = *plan;
+            drop(inner);
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return (plan, true);
+        }
+        while inner.map.len() >= self.capacity {
+            match inner.order.pop_front() {
+                Some(old) => {
+                    inner.map.remove(&old);
+                    self.evictions.fetch_add(1, Ordering::Relaxed);
+                }
+                None => break, // map/order drifted; never expected, but don't spin
+            }
+        }
+        let plan = Plan { kind: select(), origin: PlanOrigin::Selector };
+        inner.map.insert(key, plan);
+        inner.order.push_back(key);
+        drop(inner);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        (plan, false)
+    }
+
+    pub fn get(&self, key: &ShapeKey) -> Option<Plan> {
+        self.inner.lock().unwrap().map.get(key).copied()
+    }
+
+    /// Replace an existing entry with a tuner-chosen plan. Returns false if
+    /// the entry was evicted in the meantime (the upgrade is dropped — the
+    /// next miss re-selects and may be re-tuned).
+    pub fn upgrade(&self, key: ShapeKey, kind: PlanKind) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        match inner.map.get_mut(&key) {
+            Some(plan) => {
+                *plan = Plan { kind, origin: PlanOrigin::Tuned };
+                drop(inner);
+                self.upgrades.fetch_add(1, Ordering::Relaxed);
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn stats(&self) -> PlanCacheStats {
+        PlanCacheStats {
+            entries: self.len(),
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            upgrades: self.upgrades.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{banded, erdos_renyi, power_law};
+    use crate::tuner::Selector;
+
+    fn key_of(m: &crate::sparse::Csr, n: u32) -> ShapeKey {
+        ShapeKey::spmm(&MatrixStats::of(m), n)
+    }
+
+    #[test]
+    fn same_matrix_same_key_different_structure_different_key() {
+        let er = erdos_renyi(128, 128, 1024, 1).to_csr();
+        let er2 = erdos_renyi(128, 128, 1024, 1).to_csr();
+        let pl = power_law(128, 128, 1024, 2.0, 1).to_csr();
+        assert_eq!(key_of(&er, 4), key_of(&er2, 4));
+        assert_ne!(key_of(&er, 4), key_of(&er, 8), "width is part of the key");
+        assert_ne!(key_of(&er, 4), key_of(&pl, 4), "skew separates ER from power-law");
+        let stats = MatrixStats::of(&er);
+        assert_ne!(ShapeKey::spmm(&stats, 4), ShapeKey::sddmm(&stats, 4));
+    }
+
+    #[test]
+    fn miss_then_hit_returns_same_plan() {
+        let cache = PlanCache::new(8);
+        let a = banded(256, 5, 3).to_csr();
+        let stats = MatrixStats::of(&a);
+        let key = ShapeKey::spmm(&stats, 4);
+        let sel = Selector::default();
+        let (p1, hit1) = cache.get_or_insert_with(key, || PlanKind::Spmm(sel.select(&stats, 4)));
+        let (p2, hit2) =
+            cache.get_or_insert_with(key, || panic!("selector must not run on a hit"));
+        assert!(!hit1 && hit2);
+        assert_eq!(p1, p2);
+        assert_eq!(p1.origin, PlanOrigin::Selector);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+    }
+
+    #[test]
+    fn upgrade_marks_tuned_and_survives_hits() {
+        let cache = PlanCache::new(8);
+        let a = erdos_renyi(64, 64, 400, 9).to_csr();
+        let stats = MatrixStats::of(&a);
+        let key = ShapeKey::spmm(&stats, 4);
+        let sel = Selector::default();
+        cache.get_or_insert_with(key, || PlanKind::Spmm(sel.select(&stats, 4)));
+        let tuned = PlanKind::Spmm(Algo::SgapNnzGroup { c: 4, r: 8 });
+        assert!(cache.upgrade(key, tuned));
+        let (p, hit) = cache.get_or_insert_with(key, || panic!("must hit"));
+        assert!(hit);
+        assert_eq!(p.origin, PlanOrigin::Tuned);
+        assert_eq!(p.kind, tuned);
+        assert_eq!(cache.stats().upgrades, 1);
+    }
+
+    #[test]
+    fn capacity_bounds_entries_fifo() {
+        let cache = PlanCache::new(2);
+        let keys: Vec<ShapeKey> = (0..3usize)
+            .map(|i| key_of(&erdos_renyi(32 + i, 32, 64, i as u64).to_csr(), 4))
+            .collect();
+        for k in &keys {
+            cache.get_or_insert_with(*k, || PlanKind::Spmm(Algo::TacoRowSerial { x: 1, c: 1 }));
+        }
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.stats().evictions, 1);
+        assert!(cache.get(&keys[0]).is_none(), "oldest entry evicted");
+        assert!(cache.get(&keys[2]).is_some());
+        // upgrading an evicted key is a no-op
+        assert!(!cache.upgrade(keys[0], PlanKind::Spmm(Algo::SgapNnzGroup { c: 1, r: 2 })));
+    }
+}

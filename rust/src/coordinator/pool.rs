@@ -1,0 +1,222 @@
+//! Bounded MPMC job queue — the spine of the coordinator's worker pool.
+//!
+//! `std::sync::mpsc` is single-consumer, so a pool of N workers needs its
+//! own queue. This is the simplest correct one: a `Mutex<VecDeque>` with
+//! two condvars (not-empty for workers, not-full for submitters). Pushing
+//! onto a full queue **blocks** — that is the coordinator's backpressure:
+//! submitters slow down to the service rate instead of growing an
+//! unbounded backlog.
+//!
+//! Shutdown is graceful: `close()` stops new pushes immediately, but
+//! workers keep draining (`pop` keeps returning items) until the queue is
+//! empty, so no accepted job is ever dropped.
+//!
+//! Invariants (unit-tested below, stress-tested through the coordinator in
+//! `rust/tests/coordinator_props.rs`):
+//! * every pushed item is popped exactly once (across all consumers);
+//! * `len() <= capacity` at all times;
+//! * `close()` wakes all blocked pushers (they get their item back) and
+//!   all blocked poppers (they see `None` once the queue is drained).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// A bounded multi-producer multi-consumer queue with blocking push/pop.
+pub struct JobQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+}
+
+impl<T> JobQueue<T> {
+    pub fn new(capacity: usize) -> JobQueue<T> {
+        assert!(capacity > 0, "queue capacity must be positive");
+        JobQueue {
+            inner: Mutex::new(Inner { items: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// Push, blocking while the queue is full (backpressure). Returns the
+    /// item back if the queue has been closed.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut inner = self.inner.lock().unwrap();
+        while inner.items.len() >= self.capacity && !inner.closed {
+            inner = self.not_full.wait(inner).unwrap();
+        }
+        if inner.closed {
+            return Err(item);
+        }
+        inner.items.push_back(item);
+        drop(inner);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Non-blocking push. `Err` returns the item when full or closed.
+    pub fn try_push(&self, item: T) -> Result<(), T> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed || inner.items.len() >= self.capacity {
+            return Err(item);
+        }
+        inner.items.push_back(item);
+        drop(inner);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Pop, blocking while the queue is empty. Returns `None` only once the
+    /// queue is closed **and** fully drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = inner.items.pop_front() {
+                drop(inner);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = self.not_empty.wait(inner).unwrap();
+        }
+    }
+
+    /// Non-blocking pop (used by workers to opportunistically micro-batch).
+    pub fn try_pop(&self) -> Option<T> {
+        let mut inner = self.inner.lock().unwrap();
+        let item = inner.items.pop_front();
+        drop(inner);
+        if item.is_some() {
+            self.not_full.notify_one();
+        }
+        item
+    }
+
+    /// Stop accepting pushes and wake everyone. Idempotent.
+    pub fn close(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.closed = true;
+        drop(inner);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_and_bounds() {
+        let q = JobQueue::new(2);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert!(q.try_push(3).is_err(), "full queue rejects try_push");
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.try_pop(), None);
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q = JobQueue::new(4);
+        q.push("a").unwrap();
+        q.close();
+        assert!(q.push("b").is_err(), "closed queue rejects pushes");
+        assert_eq!(q.pop(), Some("a"), "items survive close");
+        assert_eq!(q.pop(), None);
+        q.close(); // idempotent
+    }
+
+    #[test]
+    fn backpressure_blocks_until_pop() {
+        let q = Arc::new(JobQueue::new(1));
+        q.push(0u32).unwrap();
+        let q2 = q.clone();
+        let pusher = std::thread::spawn(move || q2.push(1).is_ok());
+        // give the pusher time to block on the full queue
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.pop(), Some(0));
+        assert!(pusher.join().unwrap(), "blocked push completes after pop");
+        assert_eq!(q.pop(), Some(1));
+    }
+
+    #[test]
+    fn close_wakes_blocked_pusher_and_popper() {
+        let q = Arc::new(JobQueue::new(1));
+        q.push(7u8).unwrap();
+        let qp = q.clone();
+        let pusher = std::thread::spawn(move || qp.push(8));
+        let qe = Arc::new(JobQueue::<u8>::new(1));
+        let qe2 = qe.clone();
+        let popper = std::thread::spawn(move || qe2.pop());
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        qe.close();
+        assert_eq!(pusher.join().unwrap(), Err(8), "pusher got its item back");
+        assert_eq!(popper.join().unwrap(), None);
+    }
+
+    #[test]
+    fn mpmc_no_loss_no_duplication() {
+        let q = Arc::new(JobQueue::new(8));
+        let popped = Arc::new(AtomicUsize::new(0));
+        let sum = Arc::new(AtomicUsize::new(0));
+        let mut consumers = Vec::new();
+        for _ in 0..3 {
+            let q = q.clone();
+            let popped = popped.clone();
+            let sum = sum.clone();
+            consumers.push(std::thread::spawn(move || {
+                while let Some(v) = q.pop() {
+                    popped.fetch_add(1, Ordering::Relaxed);
+                    sum.fetch_add(v, Ordering::Relaxed);
+                }
+            }));
+        }
+        let mut producers = Vec::new();
+        for p in 0..4usize {
+            let q = q.clone();
+            producers.push(std::thread::spawn(move || {
+                for i in 0..50usize {
+                    q.push(p * 1000 + i).unwrap();
+                }
+            }));
+        }
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        for c in consumers {
+            c.join().unwrap();
+        }
+        assert_eq!(popped.load(Ordering::Relaxed), 200);
+        let want: usize = (0..4).map(|p| (0..50).map(|i| p * 1000 + i).sum::<usize>()).sum();
+        assert_eq!(sum.load(Ordering::Relaxed), want);
+    }
+}

@@ -1,14 +1,36 @@
-//! The coordinator service: accepts SpMM/GCN jobs, batches them by
-//! artifact route, executes on the PJRT runtime (CPU fallback when no
-//! bucket admits a request), and reports metrics.
+//! The coordinator service: a pool of worker threads serving SpMM and
+//! SDDMM jobs, with tuner-aware kernel selection through a shared
+//! [`PlanCache`].
 //!
-//! Architecture: callers `submit()` onto an MPSC channel and receive a
-//! one-shot response channel. A single worker thread owns the PJRT client
-//! (executables stay hot in its cache), drains the queue into a
-//! [`Batcher`] keyed by artifact name, and serves batches FIFO-fairly.
+//! Architecture (see DESIGN.md §serving):
+//!
+//! ```text
+//! callers ── submit() ──▶ bounded JobQueue (backpressure) ──▶ N workers
+//!                                                              │
+//!                 ┌────────────────────────────────────────────┤
+//!                 ▼                                            ▼
+//!          PlanCache (ShapeKey → Algo/SddmmConfig)      Batcher per worker
+//!                 │ miss: Selector::select (fast)              │
+//!                 │ async: tuner::tune upgrades the plan       ▼
+//!                 ▼                                   PJRT / simulator /
+//!          background tuner thread                    CPU-serial backends
+//! ```
+//!
+//! Callers `submit()` a [`Request`] and receive a one-shot response
+//! channel. Workers drain the shared queue (micro-batching under load via
+//! the [`Batcher`]), fingerprint each matrix, and consult the plan cache:
+//! the first sight of a shape runs the DA-SpMM-style [`Selector`] (a few
+//! float comparisons); repeats are served with the cached plan at zero
+//! selection cost. When `background_tune` is on, every cache miss also
+//! enqueues a grid-search refinement that later *upgrades* the cached plan
+//! to the sweep's winner, so sustained traffic converges on the tuned
+//! kernel. PJRT artifacts (when compiled in and present) serve admitted
+//! SpMM requests on the numeric hot path; everything else runs the chosen
+//! kernel on the SIMT simulator, with the serial CPU path as the
+//! last-resort fallback.
 
 use std::path::PathBuf;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
@@ -16,26 +38,90 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::algos::cpu_ref::spmm_serial;
-use crate::runtime::{ArtifactKind, Runtime};
-use crate::sparse::Csr;
+use crate::algos::sddmm::{self, sddmm_serial};
+use crate::runtime::{ArtifactKind, Registry, Runtime};
+use crate::sim::{HwProfile, Machine};
+use crate::sparse::{Csr, MatrixStats, SplitMix64};
+use crate::tuner::{self, Selector};
 
 use super::batcher::Batcher;
 use super::metrics::Metrics;
+use super::plan_cache::{Plan, PlanCache, PlanKind, Scenario, ShapeKey};
+use super::pool::JobQueue;
 
-/// An SpMM job: `C = A · B` with `B` row-major `[a.cols × n]`.
+/// A serving job: SpMM (`C = A · B`) or SDDMM
+/// (`Y = A ⊙ (X1 · X2)`, one output per non-zero of `A`).
 #[derive(Debug, Clone)]
-pub struct Request {
-    pub a: Csr,
-    pub b: Vec<f32>,
-    pub n: usize,
+pub enum Request {
+    /// `C = A · B` with `B` row-major `[a.cols × n]`.
+    Spmm { a: Csr, b: Vec<f32>, n: usize },
+    /// `Y(pos) = A_vals(pos) · dot(X1[i,:], X2[:,k])` with `x1` row-major
+    /// `[a.rows × j_dim]` and `x2` row-major `[j_dim × a.cols]`.
+    Sddmm { a: Csr, x1: Vec<f32>, x2: Vec<f32>, j_dim: usize },
+}
+
+impl Request {
+    fn validate(&self) -> Result<(), String> {
+        match self {
+            Request::Spmm { a, b, n } => {
+                if *n == 0 {
+                    return Err("spmm: n must be >= 1".into());
+                }
+                if b.len() != a.cols * n {
+                    return Err(format!(
+                        "spmm: B has {} elements, want cols x n = {} x {}",
+                        b.len(),
+                        a.cols,
+                        n
+                    ));
+                }
+                Ok(())
+            }
+            Request::Sddmm { a, x1, x2, j_dim } => {
+                if *j_dim == 0 {
+                    return Err("sddmm: j_dim must be >= 1".into());
+                }
+                if x1.len() != a.rows * j_dim {
+                    return Err(format!(
+                        "sddmm: X1 has {} elements, want rows x j = {} x {}",
+                        x1.len(),
+                        a.rows,
+                        j_dim
+                    ));
+                }
+                if x2.len() != j_dim * a.cols {
+                    return Err(format!(
+                        "sddmm: X2 has {} elements, want j x cols = {} x {}",
+                        x2.len(),
+                        j_dim,
+                        a.cols
+                    ));
+                }
+                Ok(())
+            }
+        }
+    }
+
+    fn matrix(&self) -> &Csr {
+        match self {
+            Request::Spmm { a, .. } | Request::Sddmm { a, .. } => a,
+        }
+    }
 }
 
 /// The served result.
 #[derive(Debug, Clone)]
 pub struct Response {
+    /// SpMM: row-major `[rows × n]`; SDDMM: one value per non-zero.
     pub c: Vec<f32>,
-    /// Which path served it: the artifact name, or "cpu-fallback".
+    /// Which path served it: `pjrt:<artifact>`, `sim:<family>`,
+    /// `cpu-serial`, or `cpu-fallback`.
     pub backend: String,
+    /// The plan-cache choice that routed this request (None on the PJRT
+    /// and degenerate-input paths, which bypass the cache).
+    pub plan: Option<String>,
+    /// Whether the plan came from a cache hit (vs a fresh selection).
+    pub cache_hit: bool,
     pub latency_us: u64,
 }
 
@@ -45,157 +131,447 @@ struct Job {
     resp: Sender<Result<Response, String>>,
 }
 
-/// Handle to a running coordinator.
-pub struct Coordinator {
-    tx: Option<Sender<Job>>,
-    worker: Option<JoinHandle<()>>,
-    pub metrics: Arc<Metrics>,
+/// Where a routed job executes.
+enum Backend {
+    /// PJRT artifact by name (numeric hot path).
+    Pjrt(String),
+    /// Simulator execution of a plan-cache choice.
+    Sim(Plan, bool),
+    /// Serial CPU path (degenerate inputs the kernels don't cover).
+    Cpu,
 }
 
-const MAX_BATCH: usize = 16;
+struct Routed {
+    job: Job,
+    backend: Backend,
+}
+
+/// Tuning parameters of the serving layer.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Worker threads in the pool (>= 1).
+    pub workers: usize,
+    /// Micro-batch bound per queue drain (the batch window).
+    pub max_batch: usize,
+    /// Job-queue bound; `submit` blocks (backpressure) when full.
+    pub queue_cap: usize,
+    /// PJRT artifacts directory; `None` disables artifact routing.
+    pub artifacts_dir: Option<PathBuf>,
+    /// Refine cache misses with a background grid-search tuner.
+    pub background_tune: bool,
+    /// Plan-cache entry bound (FIFO eviction).
+    pub plan_cache_capacity: usize,
+    /// Hardware profile for the simulator backend.
+    pub hw: HwProfile,
+    /// The input-dynamics selector (fast-path plan choice).
+    pub selector: Selector,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        let workers =
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2).clamp(2, 4);
+        CoordinatorConfig {
+            workers,
+            max_batch: 16,
+            queue_cap: 256,
+            artifacts_dir: None,
+            background_tune: false,
+            plan_cache_capacity: 1024,
+            hw: HwProfile::rtx3090(),
+            selector: Selector::default(),
+        }
+    }
+}
+
+struct TuneTask {
+    key: ShapeKey,
+    a: Csr,
+    width: u32,
+}
+
+struct WorkerCtx {
+    queue: Arc<JobQueue<Job>>,
+    metrics: Arc<Metrics>,
+    plan_cache: Arc<PlanCache>,
+    selector: Selector,
+    machine: Machine,
+    artifacts_dir: Option<PathBuf>,
+    max_batch: usize,
+    tune_tx: Option<SyncSender<TuneTask>>,
+}
+
+/// Handle to a running coordinator.
+pub struct Coordinator {
+    queue: Arc<JobQueue<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    tune_tx: Option<SyncSender<TuneTask>>,
+    tuner: Option<JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+    pub plan_cache: Arc<PlanCache>,
+}
 
 impl Coordinator {
-    /// Start the worker. `artifacts_dir = None` forces the CPU fallback
-    /// path (useful in tests without built artifacts).
+    /// Start the worker pool.
     ///
-    /// The PJRT client is `!Send`, so the [`Runtime`] is constructed
-    /// *inside* the worker thread; startup errors are reported back over
-    /// a one-shot channel before the worker enters its loop.
-    pub fn start(artifacts_dir: Option<PathBuf>) -> Result<Coordinator> {
-        let (tx, rx) = channel::<Job>();
+    /// The artifacts manifest (if configured) is validated here so a bad
+    /// directory fails fast; the PJRT clients themselves are `!Send` and
+    /// are constructed inside each worker thread. A worker whose client
+    /// fails to come up degrades to the simulator/CPU backends.
+    pub fn start(cfg: CoordinatorConfig) -> Result<Coordinator> {
+        anyhow::ensure!(cfg.workers >= 1, "need at least one worker");
+        anyhow::ensure!(cfg.max_batch >= 1, "max_batch must be >= 1");
+        if let Some(dir) = &cfg.artifacts_dir {
+            Registry::load(dir)?; // fail fast on a broken manifest
+        }
+        let queue = Arc::new(JobQueue::new(cfg.queue_cap.max(1)));
         let metrics = Arc::new(Metrics::new());
-        let m = metrics.clone();
-        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
-        let worker = std::thread::Builder::new()
-            .name("sgap-coordinator".into())
-            .spawn(move || {
-                let mut runtime = match &artifacts_dir {
-                    Some(dir) => match Runtime::load(dir) {
-                        Ok(rt) => {
-                            let _ = ready_tx.send(Ok(()));
-                            Some(rt)
-                        }
-                        Err(e) => {
-                            let _ = ready_tx.send(Err(e.to_string()));
-                            return;
-                        }
-                    },
-                    None => {
-                        let _ = ready_tx.send(Ok(()));
-                        None
-                    }
-                };
-                worker_loop(rx, &mut runtime, &m)
-            })
-            .expect("spawn coordinator");
-        ready_rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("coordinator worker died during startup"))?
-            .map_err(|e| anyhow::anyhow!("runtime load failed: {e}"))?;
-        Ok(Coordinator { tx: Some(tx), worker: Some(worker), metrics })
+        let plan_cache = Arc::new(PlanCache::new(cfg.plan_cache_capacity.max(1)));
+
+        let (tune_tx, tuner) = if cfg.background_tune {
+            let (tx, rx) = std::sync::mpsc::sync_channel::<TuneTask>(32);
+            let cache = plan_cache.clone();
+            let machine = Machine::new(cfg.hw);
+            let handle = std::thread::Builder::new()
+                .name("sgap-tuner".into())
+                .spawn(move || tuner_loop(rx, &machine, &cache))
+                .expect("spawn tuner");
+            (Some(tx), Some(handle))
+        } else {
+            (None, None)
+        };
+
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for i in 0..cfg.workers {
+            let ctx = WorkerCtx {
+                queue: queue.clone(),
+                metrics: metrics.clone(),
+                plan_cache: plan_cache.clone(),
+                selector: cfg.selector,
+                machine: Machine::new(cfg.hw),
+                artifacts_dir: cfg.artifacts_dir.clone(),
+                max_batch: cfg.max_batch,
+                tune_tx: tune_tx.clone(),
+            };
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("sgap-worker-{i}"))
+                    .spawn(move || worker_loop(ctx))
+                    .expect("spawn coordinator worker"),
+            );
+        }
+        Ok(Coordinator { queue, workers, tune_tx, tuner, metrics, plan_cache })
     }
 
-    /// Submit a job; the returned channel yields the response.
+    /// Submit a job; the returned channel yields the response. Blocks while
+    /// the job queue is full (backpressure).
     pub fn submit(&self, req: Request) -> Receiver<Result<Response, String>> {
         let (rtx, rrx) = channel();
-        self.metrics.on_submit();
         let job = Job { req, submitted: Instant::now(), resp: rtx };
-        if let Some(tx) = &self.tx {
-            // a send error means the worker died; the caller sees a
-            // disconnected receiver
-            let _ = tx.send(job);
+        // a push error means the pool is shut down; dropping the job drops
+        // its response sender, so the caller sees a disconnected receiver.
+        // Only accepted jobs count as submitted — that keeps the metrics
+        // identity `completed + errors == submitted` true across close().
+        if self.queue.push(job).is_ok() {
+            self.metrics.on_submit();
         }
         rrx
     }
 
-    /// Convenience: submit and wait.
+    /// Convenience: submit an SpMM job and wait.
     pub fn spmm_blocking(&self, a: Csr, b: Vec<f32>, n: usize) -> Result<Response> {
-        let rx = self.submit(Request { a, b, n });
+        let rx = self.submit(Request::Spmm { a, b, n });
         rx.recv()
             .map_err(|_| anyhow::anyhow!("coordinator worker gone"))?
             .map_err(|e| anyhow::anyhow!(e))
     }
 
-    /// Stop accepting work and join the worker.
-    pub fn shutdown(mut self) {
-        self.tx.take(); // close the channel
-        if let Some(w) = self.worker.take() {
+    /// Convenience: submit an SDDMM job and wait.
+    pub fn sddmm_blocking(
+        &self,
+        a: Csr,
+        x1: Vec<f32>,
+        x2: Vec<f32>,
+        j_dim: usize,
+    ) -> Result<Response> {
+        let rx = self.submit(Request::Sddmm { a, x1, x2, j_dim });
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("coordinator worker gone"))?
+            .map_err(|e| anyhow::anyhow!(e))
+    }
+
+    /// Stop accepting new work without joining: in-flight and queued jobs
+    /// are still served. Subsequent `submit` calls yield a disconnected
+    /// receiver. Call [`Coordinator::shutdown`] (or drop) to join.
+    pub fn close(&self) {
+        self.queue.close();
+    }
+
+    fn shutdown_inner(&mut self) {
+        // stop accepting work; workers drain what was already accepted
+        self.queue.close();
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
+        // workers (and their tune_tx clones) are gone: disconnect and join
+        // the tuner so pending upgrades land before shutdown returns
+        self.tune_tx.take();
+        if let Some(t) = self.tuner.take() {
+            let _ = t.join();
+        }
+    }
+
+    /// Stop accepting work, drain accepted jobs, join every thread.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
     }
 }
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        self.tx.take();
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
+        self.shutdown_inner();
     }
 }
 
-/// Routing key: the artifact that will serve a request.
-fn route(runtime: &Option<Runtime>, req: &Request) -> String {
-    if let Some(rt) = runtime {
-        if let Some(spec) =
-            rt.registry.route(ArtifactKind::SpmmNnzSr, req.a.rows, req.a.cols, req.a.nnz())
-        {
-            if spec.n == req.n {
-                return spec.name.clone();
-            }
-        }
-    }
-    "cpu-fallback".to_string()
-}
+// ---- worker ---------------------------------------------------------------
 
-fn worker_loop(rx: Receiver<Job>, runtime: &mut Option<Runtime>, metrics: &Metrics) {
-    let mut batcher: Batcher<String, Job> = Batcher::new(MAX_BATCH);
-    loop {
-        // Block for one job, then opportunistically drain the queue —
-        // micro-batching under load, low latency when idle.
-        match rx.recv() {
-            Ok(job) => {
-                let key = route(runtime, &job.req);
-                batcher.push(key, job);
-            }
-            Err(_) => break, // all senders dropped: shut down
-        }
-        while let Ok(job) = rx.try_recv() {
-            let key = route(runtime, &job.req);
-            batcher.push(key, job);
-        }
-        while let Some((key, jobs)) = batcher.next_batch() {
-            metrics.on_batch();
-            for job in jobs {
-                serve_one(&key, job, runtime, metrics);
-            }
-        }
+/// Batcher key for a routed job: one bucket per backend family.
+fn batch_label(backend: &Backend) -> String {
+    match backend {
+        Backend::Pjrt(name) => format!("pjrt:{name}"),
+        Backend::Sim(plan, _) => format!("sim:{}", plan.kind.family_label()),
+        Backend::Cpu => "cpu-serial".to_string(),
     }
 }
 
-fn serve_one(key: &str, job: Job, runtime: &mut Option<Runtime>, metrics: &Metrics) {
-    let result = if key == "cpu-fallback" {
-        Ok(spmm_serial(&job.req.a, &job.req.b, job.req.n))
+fn worker_loop(ctx: WorkerCtx) {
+    // The PJRT client is !Send, so each worker owns its own Runtime (the
+    // executable cache stays hot per worker). In builds without the `pjrt`
+    // feature `Runtime::available()` is false and this stays `None`.
+    let mut runtime: Option<Runtime> = if Runtime::available() {
+        ctx.artifacts_dir.as_ref().and_then(|d| Runtime::load(d).ok())
     } else {
-        runtime
-            .as_mut()
-            .expect("routed to artifact without runtime")
-            .run_spmm_nnz(key, &job.req.a, &job.req.b)
-            .map_err(|e| e.to_string())
+        None
+    };
+
+    let mut batcher: Batcher<String, Routed> = Batcher::new(ctx.max_batch);
+    while let Some(job) = ctx.queue.pop() {
+        let mut drained = 1usize;
+        enqueue(job, &ctx, &runtime, &mut batcher);
+        // opportunistic micro-batch: grab whatever else is queued, up to
+        // the batch window, without blocking
+        while drained < ctx.max_batch {
+            match ctx.queue.try_pop() {
+                Some(job) => {
+                    enqueue(job, &ctx, &runtime, &mut batcher);
+                    drained += 1;
+                }
+                None => break,
+            }
+        }
+        while let Some((label, jobs)) = batcher.next_batch() {
+            ctx.metrics.on_batch();
+            for routed in jobs {
+                serve_one(&label, routed, &mut runtime, &ctx);
+            }
+        }
+    }
+}
+
+/// Validate, route (plan-cache consult), and stage a job for batching.
+/// Invalid requests are answered immediately and never enter a batch.
+fn enqueue(job: Job, ctx: &WorkerCtx, runtime: &Option<Runtime>, batcher: &mut Batcher<String, Routed>) {
+    if let Err(e) = job.req.validate() {
+        ctx.metrics.on_error();
+        let _ = job.resp.send(Err(e));
+        return;
+    }
+    let backend = route(&job.req, ctx, runtime);
+    let label = batch_label(&backend);
+    batcher.push(label, Routed { job, backend });
+}
+
+/// Pick the backend for a request. PJRT admission wins (it is the numeric
+/// hot path); otherwise the plan cache decides which kernel the simulator
+/// runs; degenerate inputs go straight to the serial CPU path.
+fn route(req: &Request, ctx: &WorkerCtx, runtime: &Option<Runtime>) -> Backend {
+    if req.matrix().nnz() == 0 || req.matrix().rows == 0 {
+        return Backend::Cpu;
+    }
+    match req {
+        Request::Spmm { a, n, .. } => {
+            if let Some(rt) = runtime {
+                if let Some(spec) =
+                    rt.registry.route(ArtifactKind::SpmmNnzSr, a.rows, a.cols, a.nnz())
+                {
+                    if spec.n == *n {
+                        return Backend::Pjrt(spec.name.clone());
+                    }
+                }
+            }
+            let stats = MatrixStats::of(a);
+            let key = ShapeKey::spmm(&stats, *n as u32);
+            let (plan, hit) = ctx
+                .plan_cache
+                .get_or_insert_with(key, || PlanKind::Spmm(ctx.selector.select(&stats, *n as u32)));
+            note_cache(ctx, hit);
+            if !hit {
+                request_tune(ctx, key, a, *n as u32);
+            }
+            Backend::Sim(plan, hit)
+        }
+        Request::Sddmm { a, j_dim, .. } => {
+            let stats = MatrixStats::of(a);
+            let key = ShapeKey::sddmm(&stats, *j_dim as u32);
+            let (plan, hit) = ctx.plan_cache.get_or_insert_with(key, || {
+                PlanKind::Sddmm(ctx.selector.select_sddmm(&stats, *j_dim as u32))
+            });
+            note_cache(ctx, hit);
+            if !hit {
+                request_tune(ctx, key, a, *j_dim as u32);
+            }
+            Backend::Sim(plan, hit)
+        }
+    }
+}
+
+fn note_cache(ctx: &WorkerCtx, hit: bool) {
+    if hit {
+        ctx.metrics.on_cache_hit();
+    } else {
+        ctx.metrics.on_cache_miss();
+    }
+}
+
+/// Hand a cache miss to the background tuner (best-effort: a full refine
+/// queue just means this shape keeps its selector plan a little longer).
+fn request_tune(ctx: &WorkerCtx, key: ShapeKey, a: &Csr, width: u32) {
+    if let Some(tx) = &ctx.tune_tx {
+        match tx.try_send(TuneTask { key, a: a.clone(), width }) {
+            Ok(()) | Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {}
+        }
+    }
+}
+
+fn serve_one(label: &str, routed: Routed, runtime: &mut Option<Runtime>, ctx: &WorkerCtx) {
+    let Routed { job, backend } = routed;
+    let (plan_desc, cache_hit) = match &backend {
+        Backend::Sim(plan, hit) => (Some(plan.kind.describe()), *hit),
+        _ => (None, false),
+    };
+    // (result, backend label actually used)
+    let outcome: (Result<Vec<f32>, String>, String) = match (&backend, &job.req) {
+        (Backend::Pjrt(name), Request::Spmm { a, b, n }) => {
+            let rt = runtime.as_mut().expect("routed to artifact without runtime");
+            match rt.run_spmm_nnz(name, a, b) {
+                Ok(c) => (Ok(c), label.to_string()),
+                Err(_) => {
+                    ctx.metrics.on_fallback();
+                    (Ok(spmm_serial(a, b, *n)), "cpu-fallback".to_string())
+                }
+            }
+        }
+        (Backend::Sim(plan, _), Request::Spmm { a, b, n }) => match plan.kind {
+            PlanKind::Spmm(algo) => match algo.run(&ctx.machine, a, b, *n as u32) {
+                Ok(res) => (Ok(res.run.c), label.to_string()),
+                Err(_) => {
+                    ctx.metrics.on_fallback();
+                    (Ok(spmm_serial(a, b, *n)), "cpu-fallback".to_string())
+                }
+            },
+            // a colliding fingerprint can hand an SpMM job an SDDMM plan;
+            // serve it correctly on the CPU rather than guessing a kernel
+            PlanKind::Sddmm(_) => {
+                ctx.metrics.on_fallback();
+                (Ok(spmm_serial(a, b, *n)), "cpu-fallback".to_string())
+            }
+        },
+        (Backend::Sim(plan, _), Request::Sddmm { a, x1, x2, j_dim }) => match plan.kind {
+            PlanKind::Sddmm(cfg) => match sddmm::run(&ctx.machine, &cfg, a, x1, x2) {
+                Ok(res) => (Ok(res.c), label.to_string()),
+                Err(_) => {
+                    ctx.metrics.on_fallback();
+                    (Ok(sddmm_serial(a, x1, x2, *j_dim)), "cpu-fallback".to_string())
+                }
+            },
+            PlanKind::Spmm(_) => {
+                ctx.metrics.on_fallback();
+                (Ok(sddmm_serial(a, x1, x2, *j_dim)), "cpu-fallback".to_string())
+            }
+        },
+        (Backend::Cpu, Request::Spmm { a, b, n }) => {
+            (Ok(spmm_serial(a, b, *n)), "cpu-serial".to_string())
+        }
+        (Backend::Cpu, Request::Sddmm { a, x1, x2, j_dim }) => {
+            (Ok(sddmm_serial(a, x1, x2, *j_dim)), "cpu-serial".to_string())
+        }
+        // route() never pairs Pjrt with Sddmm
+        (Backend::Pjrt(_), Request::Sddmm { a, x1, x2, j_dim }) => {
+            (Ok(sddmm_serial(a, x1, x2, *j_dim)), "cpu-fallback".to_string())
+        }
     };
     let latency = job.submitted.elapsed();
-    match result {
-        Ok(c) => {
-            metrics.on_complete(latency);
+    match outcome {
+        (Ok(c), served_by) => {
+            ctx.metrics.on_complete(&served_by, latency);
             let _ = job.resp.send(Ok(Response {
                 c,
-                backend: key.to_string(),
+                backend: served_by,
+                plan: plan_desc,
+                cache_hit,
                 latency_us: latency.as_micros() as u64,
             }));
         }
-        Err(e) => {
-            metrics.on_error();
+        (Err(e), _) => {
+            ctx.metrics.on_error();
             let _ = job.resp.send(Err(e));
+        }
+    }
+}
+
+// ---- background tuner ------------------------------------------------------
+
+/// Drain refinement tasks; each winning sweep upgrades the cached plan.
+/// Exits when every sender (the workers) is gone.
+fn tuner_loop(rx: std::sync::mpsc::Receiver<TuneTask>, machine: &Machine, cache: &PlanCache) {
+    use super::plan_cache::PlanOrigin;
+    while let Ok(task) = rx.recv() {
+        // The cache itself is the dedupe state: skip shapes already tuned
+        // (duplicate queued tasks land here after the first upgrade) and
+        // shapes that were evicted meanwhile (the upgrade would be dropped
+        // anyway; a future miss re-enqueues them).
+        match cache.get(&task.key) {
+            Some(plan) if plan.origin == PlanOrigin::Tuned => continue,
+            Some(_) => {}
+            None => continue,
+        }
+        // deterministic dense operands: only the timing matters
+        let seed = (task.a.rows as u64) ^ ((task.a.nnz() as u64) << 20) ^ task.width as u64;
+        let mut rng = SplitMix64::new(seed);
+        match task.key.scenario {
+            Scenario::Spmm => {
+                let cands = tuner::space::sgap_candidates(task.width);
+                if cands.is_empty() {
+                    continue;
+                }
+                let b: Vec<f32> =
+                    (0..task.a.cols * task.width as usize).map(|_| rng.value()).collect();
+                if let Ok(out) = tuner::tune(machine, &cands, &task.a, &b, task.width) {
+                    let (best, _) = out.best();
+                    cache.upgrade(task.key, PlanKind::Spmm(best));
+                }
+            }
+            Scenario::Sddmm => {
+                let j = task.width as usize;
+                let x1: Vec<f32> = (0..task.a.rows * j).map(|_| rng.value()).collect();
+                let x2: Vec<f32> = (0..j * task.a.cols).map(|_| rng.value()).collect();
+                let cands = tuner::space::sddmm_candidates(task.width);
+                if let Ok((best, _)) =
+                    tuner::search::tune_sddmm(machine, &cands, &task.a, &x1, &x2)
+                {
+                    cache.upgrade(task.key, PlanKind::Sddmm(best));
+                }
+            }
         }
     }
 }
@@ -204,32 +580,61 @@ fn serve_one(key: &str, job: Job, runtime: &mut Option<Runtime>, metrics: &Metri
 mod tests {
     use super::*;
     use crate::algos::cpu_ref::max_rel_err;
+    use crate::coordinator::plan_cache::PlanOrigin;
     use crate::sparse::{erdos_renyi, SplitMix64};
 
+    fn small_cfg() -> CoordinatorConfig {
+        CoordinatorConfig { workers: 2, ..CoordinatorConfig::default() }
+    }
+
     #[test]
-    fn serves_on_cpu_fallback() {
-        let coord = Coordinator::start(None).unwrap();
+    fn serves_spmm_through_plan_cache() {
+        let coord = Coordinator::start(small_cfg()).unwrap();
         let a = erdos_renyi(64, 64, 300, 4).to_csr();
         let mut rng = SplitMix64::new(5);
         let b: Vec<f32> = (0..64 * 4).map(|_| rng.value()).collect();
         let want = spmm_serial(&a, &b, 4);
-        let resp = coord.spmm_blocking(a, b, 4).unwrap();
-        assert_eq!(resp.backend, "cpu-fallback");
-        assert!(max_rel_err(&resp.c, &want) < 1e-6);
+        let resp = coord.spmm_blocking(a.clone(), b.clone(), 4).unwrap();
+        assert!(resp.backend.starts_with("sim:"), "backend {}", resp.backend);
+        assert!(!resp.cache_hit, "first sight must be a miss");
+        assert!(resp.plan.is_some());
+        assert!(max_rel_err(&resp.c, &want) < 5e-4);
+        // repeat: identical shape hits the cache and matches bit-for-bit
+        let resp2 = coord.spmm_blocking(a, b, 4).unwrap();
+        assert!(resp2.cache_hit);
+        assert_eq!(resp2.plan, resp.plan);
+        assert_eq!(resp2.c, resp.c, "cached plan must reproduce the result exactly");
         let snap = coord.metrics.snapshot();
-        assert_eq!(snap.completed, 1);
+        assert_eq!(snap.completed, 2);
+        assert_eq!(snap.cache_hits, 1);
+        assert_eq!(snap.cache_misses, 1);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn serves_sddmm() {
+        let coord = Coordinator::start(small_cfg()).unwrap();
+        let a = erdos_renyi(48, 40, 300, 9).to_csr();
+        let mut rng = SplitMix64::new(1);
+        let j = 16usize;
+        let x1: Vec<f32> = (0..a.rows * j).map(|_| rng.value()).collect();
+        let x2: Vec<f32> = (0..j * a.cols).map(|_| rng.value()).collect();
+        let want = sddmm_serial(&a, &x1, &x2, j);
+        let resp = coord.sddmm_blocking(a, x1, x2, j).unwrap();
+        assert!(max_rel_err(&resp.c, &want) < 5e-4);
+        assert!(resp.backend.starts_with("sim:sddmm"), "backend {}", resp.backend);
         coord.shutdown();
     }
 
     #[test]
     fn concurrent_submissions_all_complete() {
-        let coord = Coordinator::start(None).unwrap();
+        let coord = Coordinator::start(small_cfg()).unwrap();
         let mut rxs = Vec::new();
         for seed in 0..20u64 {
             let a = erdos_renyi(32, 32, 100, seed).to_csr();
             let mut rng = SplitMix64::new(seed);
             let b: Vec<f32> = (0..32 * 2).map(|_| rng.value()).collect();
-            rxs.push((seed, coord.submit(Request { a, b, n: 2 })));
+            rxs.push((seed, coord.submit(Request::Spmm { a, b, n: 2 })));
         }
         for (seed, rx) in rxs {
             let resp = rx.recv().unwrap().unwrap();
@@ -240,8 +645,51 @@ mod tests {
     }
 
     #[test]
+    fn invalid_request_is_an_error_not_a_panic() {
+        let coord = Coordinator::start(small_cfg()).unwrap();
+        let a = erdos_renyi(16, 16, 40, 1).to_csr();
+        let err = coord.spmm_blocking(a.clone(), vec![0.0; 3], 2).unwrap_err();
+        assert!(err.to_string().contains("spmm"), "{err}");
+        let err = coord.sddmm_blocking(a, vec![], vec![], 0).unwrap_err();
+        assert!(err.to_string().contains("j_dim"), "{err}");
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.errors, 2);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn empty_matrix_served_on_cpu() {
+        let coord = Coordinator::start(small_cfg()).unwrap();
+        let a = crate::sparse::Coo::new(8, 8, vec![]).to_csr();
+        let resp = coord.spmm_blocking(a, vec![1.0; 8 * 2], 2).unwrap();
+        assert_eq!(resp.backend, "cpu-serial");
+        assert!(resp.plan.is_none());
+        assert!(resp.c.iter().all(|&v| v == 0.0));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn background_tuner_upgrades_plan() {
+        let coord = Coordinator::start(CoordinatorConfig {
+            workers: 2,
+            background_tune: true,
+            ..CoordinatorConfig::default()
+        })
+        .unwrap();
+        let a = erdos_renyi(48, 48, 250, 7).to_csr();
+        let b = vec![1.0f32; 48 * 4];
+        coord.spmm_blocking(a.clone(), b.clone(), 4).unwrap();
+        let key = ShapeKey::spmm(&MatrixStats::of(&a), 4);
+        let cache = coord.plan_cache.clone();
+        coord.shutdown(); // joins the tuner: the upgrade has landed
+        let plan = cache.get(&key).expect("plan still cached");
+        assert_eq!(plan.origin, PlanOrigin::Tuned);
+        assert!(cache.stats().upgrades >= 1);
+    }
+
+    #[test]
     fn shutdown_is_clean() {
-        let coord = Coordinator::start(None).unwrap();
-        coord.shutdown(); // no panic, worker joined
+        let coord = Coordinator::start(small_cfg()).unwrap();
+        coord.shutdown(); // no panic, workers joined
     }
 }

@@ -17,8 +17,11 @@
 //! * [`algos`] — the four TACO algorithm families plus the dgSPARSE
 //!   kernels, each with numeric and simulated execution paths.
 //! * [`tuner`] — atomic-parallelism space search + input-dynamics selector.
-//! * [`runtime`] — PJRT artifact loading/execution (numeric hot path).
-//! * [`coordinator`] — async SpMM service: batching, routing, metrics.
+//! * [`runtime`] — PJRT artifact loading/execution (numeric hot path;
+//!   gated behind the `pjrt` cargo feature).
+//! * [`coordinator`] — the serving layer: a multi-worker pool with a
+//!   tuner-aware plan cache, SpMM + SDDMM routing, batching, backpressure
+//!   and per-backend metrics.
 
 pub mod algos;
 pub mod compiler;

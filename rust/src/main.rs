@@ -17,7 +17,7 @@ use anyhow::{bail, Context, Result};
 use sgap::compiler::codegen_cuda::{emit_translation_unit, macro_header};
 use sgap::compiler::schedule::{Schedule, SpmmConfig};
 use sgap::compiler::spaces;
-use sgap::coordinator::Coordinator;
+use sgap::coordinator::{Coordinator, CoordinatorConfig};
 use sgap::sim::{HwProfile, Machine};
 use sgap::sparse::{suite, MatrixStats, SplitMix64};
 use sgap::tuner;
@@ -137,19 +137,39 @@ fn cmd_tune(flags: &HashMap<String, String>) -> Result<()> {
 
 fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let dir = sgap::runtime::Runtime::default_dir();
-    let use_artifacts = dir.join("manifest.json").exists() && !flags.contains_key("cpu-only");
+    let use_artifacts = dir.join("manifest.json").exists()
+        && sgap::runtime::Runtime::available()
+        && !flags.contains_key("cpu-only");
+    let cfg = CoordinatorConfig {
+        workers: flag_u32(flags, "workers", 2)? as usize,
+        artifacts_dir: if use_artifacts { Some(dir) } else { None },
+        background_tune: flags.contains_key("tune"),
+        ..CoordinatorConfig::default()
+    };
     println!(
-        "starting coordinator ({})",
-        if use_artifacts { "PJRT artifacts" } else { "cpu fallback" }
+        "starting coordinator: {} workers, {} artifacts, background tune {}",
+        cfg.workers,
+        if use_artifacts { "PJRT" } else { "no" },
+        if cfg.background_tune { "on" } else { "off" },
     );
-    let coord = Coordinator::start(if use_artifacts { Some(dir) } else { None })?;
+    let coord = Coordinator::start(cfg)?;
     let requests = flag_u32(flags, "requests", 32)?;
     let mut rng = SplitMix64::new(123);
     let mut rxs = Vec::new();
+    // a handful of repeated shapes (so the plan cache pays off), mixed
+    // SpMM / SDDMM traffic
     for i in 0..requests {
-        let a = sgap::sparse::erdos_renyi(256, 256, 2000, i as u64).to_csr();
-        let b: Vec<f32> = (0..256 * 4).map(|_| rng.value()).collect();
-        rxs.push(coord.submit(sgap::coordinator::Request { a, b, n: 4 }));
+        let shape_seed = (i % 4) as u64;
+        let a = sgap::sparse::erdos_renyi(256, 256, 2000, shape_seed).to_csr();
+        if i % 5 == 4 {
+            let j = 16usize;
+            let x1: Vec<f32> = (0..a.rows * j).map(|_| rng.value()).collect();
+            let x2: Vec<f32> = (0..j * a.cols).map(|_| rng.value()).collect();
+            rxs.push(coord.submit(sgap::coordinator::Request::Sddmm { a, x1, x2, j_dim: j }));
+        } else {
+            let b: Vec<f32> = (0..256 * 4).map(|_| rng.value()).collect();
+            rxs.push(coord.submit(sgap::coordinator::Request::Spmm { a, b, n: 4 }));
+        }
     }
     for rx in rxs {
         let resp = rx.recv().context("worker gone")?;
@@ -159,6 +179,21 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     println!(
         "served {} requests in {} batches: p50 {} us, p99 {} us, mean {:.1} us",
         s.completed, s.batches, s.p50_us, s.p99_us, s.mean_us
+    );
+    println!(
+        "plan cache: {} hits / {} misses; {} fallbacks",
+        s.cache_hits, s.cache_misses, s.fallbacks
+    );
+    for b in &s.backends {
+        println!(
+            "  {:<24} {:>5} reqs  p50 {:>8} us  p99 {:>8} us  mean {:>10.1} us",
+            b.backend, b.count, b.p50_us, b.p99_us, b.mean_us
+        );
+    }
+    let cs = coord.plan_cache.stats();
+    println!(
+        "plan-cache entries {} (upgrades {}, evictions {})",
+        cs.entries, cs.upgrades, cs.evictions
     );
     coord.shutdown();
     Ok(())
@@ -186,7 +221,7 @@ fn main() -> Result<()> {
             println!("  space    (print the Fig. 7/8 legality map)");
             println!("  stats    (print the evaluation-suite statistics)");
             println!("  tune     --dataset er_1024_d5e-3 --n 4 --hw 3090|2080|v100");
-            println!("  serve    --requests 32 [--cpu-only] (SGAP_ARTIFACTS overrides artifacts dir)");
+            println!("  serve    --requests 32 --workers 2 [--tune] [--cpu-only] (SGAP_ARTIFACTS overrides artifacts dir)");
             println!("  macros   (print the §5.3 macro-instruction header)");
             Ok(())
         }

@@ -1,0 +1,150 @@
+//! The PJRT-backed executor (requires the `pjrt` feature and the in-house
+//! `xla` bindings).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::sparse::Csr;
+
+use super::artifact::{pad_coo, pad_dense, pad_ell, ArtifactKind, Registry};
+
+/// The PJRT-backed executor.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub registry: Registry,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Whether this build can execute PJRT artifacts.
+    pub const fn available() -> bool {
+        true
+    }
+
+    /// Load the registry and create the CPU PJRT client.
+    pub fn load(artifacts_dir: &Path) -> Result<Runtime> {
+        let registry = Registry::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt: {e:?}"))?;
+        Ok(Runtime { client, registry, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) executable for a named artifact.
+    pub fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let spec = self.registry.get(name)?.clone();
+            let proto = xla::HloModuleProto::from_text_file(&spec.file)
+                .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", spec.file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(self.cache.get(name).unwrap())
+    }
+
+    pub fn is_cached(&self, name: &str) -> bool {
+        self.cache.contains_key(name)
+    }
+
+    fn execute(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<f32>> {
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("sync {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple
+        let out = result.to_tuple1().map_err(|e| anyhow::anyhow!("tuple {name}: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec {name}: {e:?}"))
+    }
+
+    /// Run the segment-reduction SpMM artifact: `C = A · B`.
+    /// Returns row-major `[a.rows × n]`.
+    pub fn run_spmm_nnz(&mut self, name: &str, a: &Csr, b: &[f32]) -> Result<Vec<f32>> {
+        let spec = self.registry.get(name)?.clone();
+        anyhow::ensure!(spec.kind == ArtifactKind::SpmmNnzSr, "{name} is not spmm_nnz_sr");
+        let n = spec.n;
+        anyhow::ensure!(b.len() == a.cols * n, "B must be cols x n");
+        let coo = pad_coo(a, &spec)?;
+        let bp = pad_dense(b, a.cols, n, spec.cols);
+        let inputs = [
+            xla::Literal::vec1(&coo.row_idx),
+            xla::Literal::vec1(&coo.col_idx),
+            xla::Literal::vec1(&coo.vals),
+            xla::Literal::vec1(&bp)
+                .reshape(&[spec.cols as i64, n as i64])
+                .map_err(|e| anyhow::anyhow!("reshape B: {e:?}"))?,
+        ];
+        let mut out = self.execute(name, &inputs)?;
+        out.truncate(a.rows * n);
+        Ok(out)
+    }
+
+    /// Run the parallel-reduction (ELL) SpMM artifact.
+    pub fn run_spmm_ell(&mut self, name: &str, a: &Csr, b: &[f32]) -> Result<Vec<f32>> {
+        let spec = self.registry.get(name)?.clone();
+        anyhow::ensure!(spec.kind == ArtifactKind::SpmmRowPr, "{name} is not spmm_row_pr");
+        let n = spec.n;
+        anyhow::ensure!(b.len() == a.cols * n, "B must be cols x n");
+        let ell = pad_ell(a, &spec)?;
+        let bp = pad_dense(b, a.cols, n, spec.cols);
+        let shape2 = |v: xla::Literal, r: usize, c: usize| {
+            v.reshape(&[r as i64, c as i64]).map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+        };
+        let inputs = [
+            shape2(xla::Literal::vec1(&ell.cols), spec.rows, spec.slots)?,
+            shape2(xla::Literal::vec1(&ell.vals), spec.rows, spec.slots)?,
+            shape2(xla::Literal::vec1(&bp), spec.cols, n)?,
+        ];
+        let mut out = self.execute(name, &inputs)?;
+        out.truncate(a.rows * n);
+        Ok(out)
+    }
+
+    /// Run the 2-layer GCN forward artifact. `h` is `[a.rows × in_feat]`,
+    /// `w1` `[in_feat × hidden]`, `w2` `[hidden × out_feat]`.
+    pub fn run_gcn2(
+        &mut self,
+        name: &str,
+        a: &Csr,
+        h: &[f32],
+        w1: &[f32],
+        w2: &[f32],
+    ) -> Result<Vec<f32>> {
+        let spec = self.registry.get(name)?.clone();
+        anyhow::ensure!(spec.kind == ArtifactKind::Gcn2, "{name} is not gcn2");
+        anyhow::ensure!(a.rows == a.cols, "gcn adjacency must be square");
+        let (fi, hd, fo) = (spec.in_feat, spec.hidden, spec.out_feat);
+        anyhow::ensure!(h.len() == a.rows * fi, "H must be rows x in_feat");
+        anyhow::ensure!(w1.len() == fi * hd && w2.len() == hd * fo, "weight shapes");
+        let coo = pad_coo(a, &spec)?;
+        let hp = pad_dense(h, a.rows, fi, spec.rows);
+        let shape2 = |v: xla::Literal, r: usize, c: usize| {
+            v.reshape(&[r as i64, c as i64]).map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+        };
+        let inputs = [
+            xla::Literal::vec1(&coo.row_idx),
+            xla::Literal::vec1(&coo.col_idx),
+            xla::Literal::vec1(&coo.vals),
+            shape2(xla::Literal::vec1(&hp), spec.rows, fi)?,
+            shape2(xla::Literal::vec1(w1), fi, hd)?,
+            shape2(xla::Literal::vec1(w2), hd, fo)?,
+        ];
+        let mut out = self.execute(name, &inputs)?;
+        out.truncate(a.rows * fo);
+        Ok(out)
+    }
+
+    /// Artifacts directory: `$SGAP_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> std::path::PathBuf {
+        super::default_artifacts_dir()
+    }
+}

@@ -1,0 +1,72 @@
+//! Same-API stand-in for the PJRT executor when the `pjrt` feature is off
+//! (the default: the `xla` bindings are not in the offline dependency set).
+//!
+//! `load` always fails with an actionable message, so nothing in the
+//! serving path can silently pretend to run an artifact; callers that can
+//! degrade gracefully (the coordinator) check [`Runtime::available`] first
+//! and use the simulator / CPU backends instead.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::sparse::Csr;
+
+use super::artifact::Registry;
+
+const UNAVAILABLE: &str =
+    "PJRT runtime unavailable: this build has the `pjrt` feature disabled \
+     (the xla bindings are not in the offline dependency set); on a host \
+     that has them, add the vendored `xla` dependency to rust/Cargo.toml \
+     and rebuild with `--features pjrt`";
+
+/// Stub executor: carries the (pure-rust) artifact registry but cannot run.
+pub struct Runtime {
+    pub registry: Registry,
+}
+
+impl Runtime {
+    /// Whether this build can execute PJRT artifacts.
+    pub const fn available() -> bool {
+        false
+    }
+
+    /// Always fails. The registry is still parsed first so manifest errors
+    /// surface with their own message.
+    pub fn load(artifacts_dir: &Path) -> Result<Runtime> {
+        let _registry = Registry::load(artifacts_dir)?;
+        bail!(UNAVAILABLE)
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable (pjrt feature off)".to_string()
+    }
+
+    pub fn is_cached(&self, _name: &str) -> bool {
+        false
+    }
+
+    pub fn run_spmm_nnz(&mut self, _name: &str, _a: &Csr, _b: &[f32]) -> Result<Vec<f32>> {
+        bail!(UNAVAILABLE)
+    }
+
+    pub fn run_spmm_ell(&mut self, _name: &str, _a: &Csr, _b: &[f32]) -> Result<Vec<f32>> {
+        bail!(UNAVAILABLE)
+    }
+
+    pub fn run_gcn2(
+        &mut self,
+        _name: &str,
+        _a: &Csr,
+        _h: &[f32],
+        _w1: &[f32],
+        _w2: &[f32],
+    ) -> Result<Vec<f32>> {
+        bail!(UNAVAILABLE)
+    }
+
+    /// Artifacts directory: `$SGAP_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> std::path::PathBuf {
+        super::default_artifacts_dir()
+    }
+}

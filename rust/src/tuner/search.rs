@@ -5,6 +5,7 @@
 use anyhow::Result;
 
 use crate::algos::catalog::{Algo, AlgoResult};
+use crate::algos::sddmm::{self, SddmmConfig};
 use crate::sim::Machine;
 use crate::sparse::Csr;
 
@@ -59,12 +60,35 @@ pub fn tune(machine: &Machine, candidates: &[Algo], a: &Csr, b: &[f32], n: u32) 
     Ok(TuneOutcome { ranked })
 }
 
+/// Sweep SDDMM candidates on `(a, x1, x2)`; returns the fastest config and
+/// its simulated time. Serial on purpose: this runs on the coordinator's
+/// single background-refinement thread, where stealing cores from the
+/// serving workers would defeat the point.
+pub fn tune_sddmm(
+    machine: &Machine,
+    candidates: &[SddmmConfig],
+    a: &Csr,
+    x1: &[f32],
+    x2: &[f32],
+) -> Result<(SddmmConfig, f64)> {
+    anyhow::ensure!(!candidates.is_empty(), "no candidates supplied");
+    let mut best: Option<(SddmmConfig, f64)> = None;
+    for cfg in candidates {
+        let run = sddmm::run(machine, cfg, a, x1, x2)?;
+        let t = run.report.time_s;
+        if best.map_or(true, |(_, bt)| t < bt) {
+            best = Some((*cfg, t));
+        }
+    }
+    Ok(best.expect("non-empty candidate list"))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::sim::HwProfile;
     use crate::sparse::{erdos_renyi, SplitMix64};
-    use crate::tuner::space::sgap_candidates;
+    use crate::tuner::space::{sddmm_candidates, sgap_candidates};
 
     #[test]
     fn tune_ranks_candidates() {
@@ -83,5 +107,22 @@ mod tests {
         let (best, t) = out.best();
         assert!(t > 0.0);
         assert!(out.time_of(&best).unwrap() <= out.ranked.last().unwrap().1);
+    }
+
+    #[test]
+    fn tune_sddmm_finds_a_valid_fastest_config() {
+        let a = erdos_renyi(96, 96, 700, 5).to_csr();
+        let j = 16usize;
+        let mut rng = SplitMix64::new(4);
+        let x1: Vec<f32> = (0..a.rows * j).map(|_| rng.value()).collect();
+        let x2: Vec<f32> = (0..j * a.cols).map(|_| rng.value()).collect();
+        let m = Machine::new(HwProfile::rtx3090());
+        let cands = sddmm_candidates(j as u32);
+        let (best, t) = tune_sddmm(&m, &cands, &a, &x1, &x2).unwrap();
+        best.validate().unwrap();
+        assert!(t > 0.0);
+        // the winner is no slower than the stock-est config in the grid
+        let wide = sddmm::run(&m, &SddmmConfig::new(j as u32, 32, 32), &a, &x1, &x2).unwrap();
+        assert!(t <= wide.report.time_s + 1e-15);
     }
 }

@@ -9,6 +9,7 @@
 //! suite with [`Selector::fit`].
 
 use crate::algos::catalog::{c_values, Algo};
+use crate::algos::sddmm::SddmmConfig;
 use crate::sim::Machine;
 use crate::sparse::{Csr, MatrixStats};
 
@@ -45,14 +46,32 @@ impl Selector {
             Algo::SgapNnzGroup { c, r }
         } else {
             // balanced: row-split with grouped parallel reduction;
-            // g tracks the mean degree (enough lanes to cover a row pass)
-            let g = [2u32, 4, 8, 16, 32]
+            // g tracks the mean degree (enough lanes to cover a row pass).
+            // The divisibility filter also bounds g·(N/c) <= 256 (at least
+            // one row per block); when no g satisfies it — wide N with
+            // small c — the nnz-balanced kernel is the safe choice.
+            match [2u32, 4, 8, 16, 32]
                 .into_iter()
                 .filter(|&g| r <= g && 256 % (g * (n / c)) == 0)
                 .min_by_key(|&g| (g as f64 - stats.row_degree_mean).abs() as u64)
-                .unwrap_or(32);
-            Algo::SgapRowGroup { g, c, r }
+            {
+                Some(g) => Algo::SgapRowGroup { g, c, r },
+                None => Algo::SgapNnzGroup { c, r },
+            }
         }
+    }
+
+    /// Pick an SDDMM configuration from the matrix statistics (§4.3: the
+    /// same GroupSize trade-off applies to SDDMM's dense-`j` reduction).
+    ///
+    /// `g` lanes cooperate per non-zero, so `g` tracks `J` (idle lanes are
+    /// exactly Fig. 1(b)'s waste); the reduction width `r` follows the same
+    /// short-row rule as SpMM, capped at `g`.
+    pub fn select_sddmm(&self, stats: &MatrixStats, j_dim: u32) -> SddmmConfig {
+        let g = j_dim.next_power_of_two().clamp(2, 32);
+        let r_cap =
+            if stats.row_degree_mean < self.short_row_degree { self.r_short } else { self.r_long };
+        SddmmConfig::new(j_dim, g, r_cap.min(g))
     }
 
     /// Re-fit `cv_eb_threshold` on a training set by minimizing total
@@ -145,6 +164,23 @@ mod tests {
             let b = b_for(&a, 4, 9);
             algo.run(&m, &a, &b, 4).unwrap();
         }
+    }
+
+    #[test]
+    fn sddmm_config_is_valid_and_tracks_j() {
+        let s = Selector::default();
+        let short = erdos_renyi(512, 512, 1024, 3).to_csr(); // mean degree 2
+        let long = crate::sparse::banded(512, 33, 2).to_csr(); // mean degree 33
+        for j in [1u32, 8, 16, 50, 64] {
+            for m in [&short, &long] {
+                let cfg = s.select_sddmm(&MatrixStats::of(m), j);
+                cfg.validate().unwrap();
+                assert_eq!(cfg.j_dim, j);
+                assert!(cfg.g >= j.next_power_of_two().min(32).max(2) || cfg.g == 32);
+            }
+        }
+        let cfg = s.select_sddmm(&MatrixStats::of(&short), 64);
+        assert_eq!((cfg.g, cfg.r), (32, 4), "short rows get the narrow reduction");
     }
 
     #[test]

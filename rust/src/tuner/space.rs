@@ -6,6 +6,7 @@
 
 use crate::algos::catalog::{c_values, Algo};
 use crate::algos::dgsparse::DgConfig;
+use crate::algos::sddmm::SddmmConfig;
 
 const P: u32 = 256;
 
@@ -82,6 +83,20 @@ pub fn dg_candidates_small(n: u32) -> Vec<Algo> {
     out
 }
 
+/// SDDMM candidate grid (§4.3): lanes-per-nnz `g` × reduction width `r`,
+/// with the writeback-uniformity rule `r <= g`.
+pub fn sddmm_candidates(j_dim: u32) -> Vec<SddmmConfig> {
+    let mut out = Vec::new();
+    for g in [2u32, 4, 8, 16, 32] {
+        for r in [2u32, 4, 8, 16, 32] {
+            if r <= g {
+                out.push(SddmmConfig::new(j_dim, g, r));
+            }
+        }
+    }
+    out
+}
+
 /// dgSPARSE tuning grid (§7.2): `<groupSz, blockSz, tileSz, workerDimR>`.
 pub fn dg_candidates(n: u32) -> Vec<Algo> {
     let stock = DgConfig::stock(n);
@@ -140,6 +155,16 @@ mod tests {
                 c.validate().unwrap();
             }
         }
+    }
+
+    #[test]
+    fn sddmm_grid_valid_and_covers_widths() {
+        let cands = sddmm_candidates(64);
+        assert_eq!(cands.len(), 15); // pairs with r <= g over 5x5
+        for c in &cands {
+            c.validate().unwrap();
+        }
+        assert!(cands.iter().any(|c| c.g == 32 && c.r == 2));
     }
 
     #[test]

@@ -1,0 +1,87 @@
+//! Codegen golden tests: `emit_kernel` output for the canonical Sgap
+//! schedules is pinned against committed golden text, covering
+//! `segReduceGroup<float,r>` (SegmentReduction) and `atomicAddGroup
+//! <float,r>` (ParallelReduction) emission plus the zero-extension
+//! predicate; the §5.3 macro-instruction header is pinned too.
+//!
+//! Regenerate after an intentional codegen change with
+//! `SGAP_BLESS=1 cargo test --test codegen_golden`.
+
+use sgap::compiler::codegen_cuda::{emit_kernel, macro_header};
+use sgap::compiler::schedule::{Schedule, SpmmConfig};
+
+fn check_golden(name: &str, got: &str) {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden").join(name);
+    if std::env::var_os("SGAP_BLESS").is_some() {
+        std::fs::write(&path, got).unwrap_or_else(|e| panic!("bless {}: {e}", path.display()));
+        return;
+    }
+    let want = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+        panic!(
+            "missing golden {}: {e}\n(run `SGAP_BLESS=1 cargo test --test codegen_golden`)",
+            path.display()
+        )
+    });
+    if got == want {
+        return;
+    }
+    for (i, (g, w)) in got.lines().zip(want.lines()).enumerate() {
+        assert_eq!(
+            g,
+            w,
+            "golden `{name}` differs at line {} (SGAP_BLESS=1 regenerates)",
+            i + 1
+        );
+    }
+    panic!(
+        "golden `{name}` differs in length: got {} lines, want {} (SGAP_BLESS=1 regenerates)",
+        got.lines().count(),
+        want.lines().count()
+    );
+}
+
+/// Listing 6 shape: `{<1 nnz, 4 col>, r}` — SegmentReduction strategy.
+/// Pins the `segReduceGroup<float,r>` macro call and the §5.2
+/// zero-extension predicate for both a wide and a narrow group.
+#[test]
+fn nnz_group_segment_reduction_golden() {
+    for r in [32u32, 8] {
+        let sched = Schedule::sgap_nnz_group(SpmmConfig::default(), r);
+        let kernel = sgap::compiler::lower(&sched).unwrap();
+        let src = emit_kernel(&kernel);
+        assert!(
+            src.contains(&format!("segReduceGroup<float,{r}>(C_vals, kC, val);")),
+            "{src}"
+        );
+        assert!(
+            src.contains("if ((fposA >= A2_pos[A1_dimension])) {"),
+            "zero-extension predicate missing:\n{src}"
+        );
+        assert!(!src.contains("atomicAdd(&"), "segment reduction must not use plain atomics");
+        check_golden(&format!("spmm_nnz_group_c4_r{r}.cu"), &src);
+    }
+}
+
+/// Listing 5 shape: `{<1/32 row, 4 col>, r}` — ParallelReduction strategy.
+/// Pins the `atomicAddGroup<float,r>` macro call.
+#[test]
+fn row_group_parallel_reduction_golden() {
+    for r in [8u32, 2] {
+        let sched = Schedule::sgap_row_group(SpmmConfig::default(), r);
+        let kernel = sgap::compiler::lower(&sched).unwrap();
+        let src = emit_kernel(&kernel);
+        assert!(src.contains(&format!("atomicAddGroup<float,{r}>(C_vals,")), "{src}");
+        assert!(!src.contains("segReduceGroup"), "row-group must not segment-reduce");
+        check_golden(&format!("spmm_row_group_g32_c4_r{r}.cu"), &src);
+    }
+}
+
+/// The §5.3 macro-instruction header (the device functions both goldens
+/// call into) is itself pinned.
+#[test]
+fn macro_header_golden() {
+    let h = macro_header();
+    assert!(h.contains("template <typename T, int G>"));
+    assert!(h.contains("__shfl_down_sync") && h.contains("__shfl_up_sync"));
+    check_golden("macro_header.cu", h);
+}

@@ -1,8 +1,14 @@
-//! Property tests for the coordinator's batcher invariants plus a
-//! concurrency stress test of the full service (CPU fallback path).
+//! Property tests for the coordinator's batcher invariants plus
+//! concurrency stress tests of the full multi-worker service: mixed
+//! SpMM/SDDMM traffic, plan-cache behaviour under repetition, the metrics
+//! accounting identity, and graceful shutdown under in-flight load.
 
-use sgap::coordinator::{Batcher, Coordinator, Request};
-use sgap::sparse::{erdos_renyi, SplitMix64};
+use std::sync::Arc;
+
+use sgap::algos::cpu_ref::{max_rel_err, spmm_serial};
+use sgap::algos::sddmm::sddmm_serial;
+use sgap::coordinator::{Batcher, Coordinator, CoordinatorConfig, Request};
+use sgap::sparse::{erdos_renyi, power_law, Csr, SplitMix64};
 
 /// Random push/drain interleavings: FIFO per key, no loss, batch bound.
 #[test]
@@ -52,41 +58,188 @@ fn prop_batcher_invariants() {
     }
 }
 
-/// Many threads submitting concurrently: every request is answered and
-/// the metrics agree.
+/// The six repeated request shapes of the stress mix (four SpMM, two
+/// SDDMM). Matrices are deterministic, so repeats across all submitter
+/// threads share plan-cache fingerprints.
+fn shape_matrix(shape: usize) -> Csr {
+    match shape {
+        0 => erdos_renyi(32, 32, 100, 1).to_csr(),
+        1 => erdos_renyi(48, 40, 220, 2).to_csr(),
+        2 => power_law(40, 40, 260, 2.0, 3).to_csr(),
+        3 => erdos_renyi(24, 24, 60, 4).to_csr(),
+        4 => erdos_renyi(32, 32, 120, 5).to_csr(),
+        _ => power_law(36, 36, 200, 1.8, 6).to_csr(),
+    }
+}
+
+fn build_request(shape: usize, rng: &mut SplitMix64) -> Request {
+    let a = shape_matrix(shape);
+    if shape < 4 {
+        let n = if shape % 2 == 0 { 4 } else { 2 };
+        let b: Vec<f32> = (0..a.cols * n).map(|_| rng.value()).collect();
+        Request::Spmm { a, b, n }
+    } else {
+        let j = if shape == 4 { 8 } else { 16 };
+        let x1: Vec<f32> = (0..a.rows * j).map(|_| rng.value()).collect();
+        let x2: Vec<f32> = (0..j * a.cols).map(|_| rng.value()).collect();
+        Request::Sddmm { a, x1, x2, j_dim: j }
+    }
+}
+
+/// Serial oracle for a request (to prove responses are not cross-wired).
+fn oracle(req: &Request) -> Vec<f32> {
+    match req {
+        Request::Spmm { a, b, n } => spmm_serial(a, b, *n),
+        Request::Sddmm { a, x1, x2, j_dim } => sddmm_serial(a, x1, x2, *j_dim),
+    }
+}
+
+/// 8 submitter threads × 100 mixed SpMM/SDDMM jobs through the pooled
+/// coordinator: every request is answered exactly once with *its own*
+/// result, the metrics identity `completed + errors == submitted` holds,
+/// and repeated shapes are served via plan-cache hits with a
+/// selector-chosen plan.
 #[test]
-fn coordinator_stress_concurrent_clients() {
-    let coord = std::sync::Arc::new(Coordinator::start(None).unwrap());
-    let clients = 8;
-    let per_client = 12;
+fn coordinator_stress_mixed_traffic() {
+    let coord = Arc::new(
+        Coordinator::start(CoordinatorConfig { workers: 4, ..CoordinatorConfig::default() })
+            .unwrap(),
+    );
+    let clients = 8usize;
+    let per_client = 100usize;
     let mut handles = Vec::new();
     for t in 0..clients {
         let c = coord.clone();
         handles.push(std::thread::spawn(move || {
-            let mut rng = SplitMix64::new(t as u64);
+            let mut rng = SplitMix64::new(0x57E55 + t as u64);
+            let mut answered = 0usize;
+            let mut hits = 0usize;
             for i in 0..per_client {
-                let a = erdos_renyi(48, 48, 200, t * 100 + i).to_csr();
-                let b: Vec<f32> = (0..48 * 2).map(|_| rng.value()).collect();
-                let rx = c.submit(Request { a, b, n: 2 });
-                let resp = rx.recv().unwrap().unwrap();
-                assert_eq!(resp.c.len(), 48 * 2);
+                let req = build_request((t + i) % 6, &mut rng);
+                let want = oracle(&req);
+                let is_spmm = matches!(req, Request::Spmm { .. });
+                let rx = c.submit(req);
+                let resp = rx.recv().expect("worker gone").expect("request failed");
+                assert_eq!(resp.c.len(), want.len(), "client {t} job {i}: wrong shape");
+                assert!(
+                    max_rel_err(&resp.c, &want) < 5e-4,
+                    "client {t} job {i}: response is not this request's result"
+                );
+                // exactly-once: the one-shot channel has nothing further
+                assert!(rx.try_recv().is_err(), "client {t} job {i}: duplicate response");
+                if resp.cache_hit {
+                    hits += 1;
+                    assert!(resp.plan.is_some(), "cache hit must carry its plan");
+                }
+                if is_spmm {
+                    assert!(
+                        resp.backend.starts_with("sim:") || resp.backend.starts_with("cpu"),
+                        "unexpected backend {}",
+                        resp.backend
+                    );
+                }
+                answered += 1;
             }
+            (answered, hits)
         }));
     }
+    let mut answered = 0usize;
+    let mut hits = 0usize;
     for h in handles {
-        h.join().unwrap();
+        let (a, hi) = h.join().unwrap();
+        answered += a;
+        hits += hi;
     }
+    assert_eq!(answered, clients * per_client, "lost responses");
+    assert!(hits > 0, "repeated shapes must hit the plan cache");
+
     let s = coord.metrics.snapshot();
     assert_eq!(s.submitted, (clients * per_client) as u64);
-    assert_eq!(s.completed, (clients * per_client) as u64);
+    assert_eq!(s.completed + s.errors, s.submitted, "metrics identity");
     assert_eq!(s.errors, 0);
     assert!(s.batches >= 1);
+    assert!(s.cache_hits > 0, "metrics must see plan-cache hits");
+    assert_eq!(s.cache_hits + s.cache_misses, s.submitted, "every job consulted the cache");
+    // six shapes, each (shape, width) pair fingerprints once — misses stay
+    // bounded by the number of distinct shapes (not the request count)
+    assert!(s.cache_misses <= 6, "cache misses {} exceed distinct shapes", s.cache_misses);
+    // both scenarios flowed through the same pool: sim backends for spmm
+    // families and sddmm must all be present
+    assert!(s.backends.iter().any(|b| b.backend == "sim:sddmm-group"), "{:?}", s.backends);
+    assert!(s.backends.iter().any(|b| b.backend.starts_with("sim:sgap")), "{:?}", s.backends);
+    let served: u64 = s.backends.iter().map(|b| b.count).sum();
+    assert_eq!(served, s.completed, "per-backend counts sum to completed");
+
+    let cache = coord.plan_cache.stats();
+    assert!(cache.hits > 0 && cache.entries >= 2);
+    Arc::try_unwrap(coord).ok().expect("all clients done").shutdown();
 }
 
-/// Metrics quantiles are ordered.
+/// `shutdown()` with jobs still queued joins cleanly (no deadlock) and —
+/// because shutdown drains accepted work — every already-submitted job
+/// still gets its response.
+#[test]
+fn shutdown_under_inflight_load_is_clean_and_lossless() {
+    let coord =
+        Coordinator::start(CoordinatorConfig { workers: 2, ..CoordinatorConfig::default() })
+            .unwrap();
+    let mut rng = SplitMix64::new(0x5D);
+    let mut rxs = Vec::new();
+    for i in 0..120usize {
+        let req = build_request(i % 6, &mut rng);
+        rxs.push((oracle(&req), coord.submit(req)));
+    }
+    // shut down while most of those jobs are still in the queue
+    coord.shutdown();
+    for (i, (want, rx)) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().unwrap_or_else(|_| panic!("job {i} dropped during shutdown")).unwrap();
+        assert!(max_rel_err(&resp.c, &want) < 5e-4, "job {i} wrong result after shutdown");
+    }
+}
+
+/// Submissions racing shutdown never hang: they either get served or see a
+/// disconnected channel.
+#[test]
+fn submit_racing_shutdown_never_deadlocks() {
+    let coord = Arc::new(
+        Coordinator::start(CoordinatorConfig {
+            workers: 2,
+            queue_cap: 4, // small queue: exercises the backpressure path too
+            ..CoordinatorConfig::default()
+        })
+        .unwrap(),
+    );
+    let mut submitters = Vec::new();
+    for t in 0..4u64 {
+        let c = coord.clone();
+        submitters.push(std::thread::spawn(move || {
+            let mut rng = SplitMix64::new(t);
+            let mut served = 0usize;
+            for i in 0..30usize {
+                let rx = c.submit(build_request(i % 6, &mut rng));
+                match rx.recv() {
+                    Ok(Ok(_)) => served += 1,
+                    Ok(Err(e)) => panic!("unexpected serve error: {e}"),
+                    Err(_) => break, // pool shut down mid-stream: fine
+                }
+            }
+            served
+        }));
+    }
+    // let some traffic through, then stop accepting out from under them
+    std::thread::sleep(std::time::Duration::from_millis(30));
+    coord.close();
+    let total: usize = submitters.into_iter().map(|h| h.join().unwrap()).sum();
+    let cache = coord.plan_cache.clone();
+    Arc::try_unwrap(coord).ok().expect("submitters joined").shutdown();
+    assert!(total > 0, "some requests must have been served");
+    assert!(cache.stats().misses > 0);
+}
+
+/// Metrics quantiles are ordered and the global/identity counters agree.
 #[test]
 fn metrics_quantiles_ordered() {
-    let coord = Coordinator::start(None).unwrap();
+    let coord = Coordinator::start(CoordinatorConfig::default()).unwrap();
     for i in 0..30u64 {
         let a = erdos_renyi(32, 32, 64, i).to_csr();
         let b = vec![1.0f32; 32 * 2];
@@ -95,5 +248,8 @@ fn metrics_quantiles_ordered() {
     let s = coord.metrics.snapshot();
     assert!(s.p50_us <= s.p99_us);
     assert!(s.mean_us > 0.0);
+    for b in &s.backends {
+        assert!(b.p50_us <= b.p99_us, "{}: p50 {} > p99 {}", b.backend, b.p50_us, b.p99_us);
+    }
     coord.shutdown();
 }

@@ -1,0 +1,29 @@
+// --- sgap macro instructions (§5.3) ------------------------------------
+// atomicAddGroup<T,G>: tree-reduce `value` over each aligned G-lane group
+// with __shfl_down_sync, then lane 0 of the group issues one atomicAdd.
+template <typename T, int G>
+__device__ __forceinline__ void atomicAddGroup(T* array, int idx, T value) {
+  unsigned mask = __activemask();
+  #pragma unroll
+  for (int offset = G / 2; offset > 0; offset /= 2)
+    value += __shfl_down_sync(mask, value, offset, G);
+  if ((threadIdx.x % G) == 0) atomicAdd(&array[idx], value);
+}
+
+// segReduceGroup<T,G>: segmented inclusive scan over each aligned G-lane
+// group keyed by `idx`; segment-end lanes write back (runtime-decided
+// writeback threads — segment reduction).
+template <typename T, int G>
+__device__ __forceinline__ void segReduceGroup(T* array, int idx, T value) {
+  unsigned mask = __activemask();
+  int lane = threadIdx.x % G;
+  #pragma unroll
+  for (int offset = 1; offset < G; offset *= 2) {
+    T up = __shfl_up_sync(mask, value, offset, G);
+    int upIdx = __shfl_up_sync(mask, idx, offset, G);
+    if (lane >= offset && upIdx == idx) value += up;
+  }
+  int dnIdx = __shfl_down_sync(mask, idx, 1, G);
+  if (lane == G - 1 || dnIdx != idx) atomicAdd(&array[idx], value);
+}
+// ------------------------------------------------------------------------

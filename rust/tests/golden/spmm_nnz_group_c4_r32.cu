@@ -1,0 +1,27 @@
+__global__ void spmm_nnz_group_c4_r32(int* __restrict__ i_blockStarts, int* __restrict__ A2_pos, int* __restrict__ A2_crd, float* __restrict__ A_vals, float* __restrict__ B_vals, float* __restrict__ C_vals, int A1_dimension, int B2_dimension) {
+  // {<1 nnz, 4 col>, 32} — grouped segment reduction
+  int fpos1 = (threadIdx.x % 256);
+  int ko = (threadIdx.x / 256);
+  int fposA = ((blockIdx.x * 256) + fpos1);
+  int pA2_begin = i_blockStarts[blockIdx.x];
+  int pA2_end = i_blockStarts[(blockIdx.x + 1)];
+  int i_pos = taco_binarySearchBefore(A2_pos, pA2_begin, pA2_end, fposA);
+  int i = i_pos;
+  for (int ki = 0; ki < 4; ki += 1) {
+    int k = ((ko * 4) + ki);
+    float val = 0.0f;
+    if ((fposA >= A2_pos[A1_dimension])) {
+      val = 0.0f;
+    } else {
+      int f = A2_crd[fposA];
+      int kB = ((f * B2_dimension) + k);
+      while ((fposA == A2_pos[(i_pos + 1)])) {
+        i_pos = (i_pos + 1);
+        i = i_pos;
+      }
+      val = (A_vals[fposA] * B_vals[kB]);
+    }
+    int kC = ((i * B2_dimension) + k);
+    segReduceGroup<float,32>(C_vals, kC, val);
+  }
+}

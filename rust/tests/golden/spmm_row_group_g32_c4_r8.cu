@@ -1,0 +1,19 @@
+__global__ void spmm_row_group_g32_c4_r8(int* __restrict__ A2_pos, int* __restrict__ A2_crd, float* __restrict__ A_vals, float* __restrict__ B_vals, float* __restrict__ C_vals, int A1_dimension, int B2_dimension) {
+  // {<1/32 row, 4 col>, 8} — grouped parallel reduction
+  int jpos1 = (threadIdx.x % 32);
+  int ko = ((threadIdx.x / 32) % 1);
+  int rowb = (threadIdx.x / 32);
+  int i = ((blockIdx.x * 8) + rowb);
+  if ((i < A1_dimension)) {
+    for (int ki = 0; ki < 4; ki += 1) {
+      int k = ((ko * 4) + ki);
+      float tjpos1C = 0.0f;
+      int jpos = (A2_pos[i] + jpos1);
+      while ((jpos < A2_pos[(i + 1)])) {
+        tjpos1C = (tjpos1C + (A_vals[jpos] * B_vals[((A2_crd[jpos] * B2_dimension) + k)]));
+        jpos = (jpos + 32);
+      }
+      atomicAddGroup<float,8>(C_vals, ((i * B2_dimension) + k), tjpos1C);
+    }
+  }
+}

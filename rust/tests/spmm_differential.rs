@@ -1,0 +1,108 @@
+//! Differential property tests: every simulated compiler-family kernel in
+//! `algos::catalog` (TACO + Sgap) matches the serial CPU oracle within
+//! 5e-4, across the reduction-width sweep r ∈ {2,4,8,16,32}, the matrix
+//! families the selector keys on (uniform ER, power-law skew, banded,
+//! empty-row corner cases), and dense widths n ∈ {1, 4, 32} — plus the
+//! plan-cache path: a cached plan must reproduce the fresh-selection
+//! result bit-for-bit.
+
+use sgap::algos::catalog::compiler_family_sweep;
+use sgap::algos::cpu_ref::{max_rel_err, spmm_serial};
+use sgap::coordinator::{PlanCache, PlanKind, ShapeKey};
+use sgap::sim::{HwProfile, Machine};
+use sgap::sparse::{banded, erdos_renyi, power_law, Coo, Csr, MatrixStats, SplitMix64};
+use sgap::tuner::Selector;
+
+const TOL: f32 = 5e-4;
+const RS: [u32; 5] = [2, 4, 8, 16, 32];
+const NS: [usize; 3] = [1, 4, 32];
+
+fn b_for(a: &Csr, n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = SplitMix64::new(seed);
+    (0..a.cols * n).map(|_| rng.value()).collect()
+}
+
+/// One matrix per family the selector distinguishes, plus the empty-row
+/// corners that stress zero extension and the row-advance loops.
+fn families(seed: u64) -> Vec<(&'static str, Csr)> {
+    // hub: one full row, everything else empty except a tail entry
+    let mut hub: Vec<(u32, u32, f32)> = (0..64u32).map(|c| (0u32, c, 1.0 - c as f32)).collect();
+    hub.push((63, 0, 2.5));
+    // comb: only every fourth row populated (interior + trailing empties)
+    let comb: Vec<(u32, u32, f32)> =
+        (0..96u32).step_by(4).flat_map(|r| [(r, r % 37, 1.5), (r, 40 + r % 23, -0.5)]).collect();
+    vec![
+        ("erdos_renyi", erdos_renyi(96, 80, 900, seed).to_csr()),
+        ("power_law", power_law(96, 96, 1100, 1.8, seed).to_csr()),
+        ("banded", banded(96, 7, seed).to_csr()),
+        ("corner_hub", Coo::new(64, 64, hub).to_csr()),
+        ("corner_empty_rows", Coo::new(96, 64, comb).to_csr()),
+    ]
+}
+
+#[test]
+fn every_catalog_kernel_matches_oracle_across_r_families_n() {
+    let machine = Machine::new(HwProfile::rtx3090());
+    for &n in &NS {
+        for (fam, a) in families(0xD1FF ^ n as u64) {
+            let b = b_for(&a, n, 7 + n as u64);
+            let want = spmm_serial(&a, &b, n);
+            for r in RS {
+                for alg in compiler_family_sweep(n as u32, r) {
+                    let res = alg.run(&machine, &a, &b, n as u32).unwrap_or_else(|e| {
+                        panic!("{fam} n={n} r={r}: {} failed: {e}", alg.name())
+                    });
+                    let err = max_rel_err(&res.run.c, &want);
+                    assert!(
+                        err < TOL,
+                        "{fam} n={n} r={r}: {} err {err} (matrix {}x{} nnz {})",
+                        alg.name(),
+                        a.rows,
+                        a.cols,
+                        a.nnz()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The plan-cache path is result-identical to fresh selection: a cache hit
+/// hands back the same `Algo`, and running it reproduces the miss-path
+/// output bit-for-bit (and both match the oracle).
+#[test]
+fn plan_cache_path_equals_fresh_selection() {
+    let machine = Machine::new(HwProfile::rtx3090());
+    let selector = Selector::default();
+    let cache = PlanCache::new(64);
+    for &n in &NS {
+        for (fam, a) in families(0xCAC4E ^ n as u64) {
+            let stats = MatrixStats::of(&a);
+            let key = ShapeKey::spmm(&stats, n as u32);
+            let fresh = selector.select(&stats, n as u32);
+            let (plan, hit) = cache.get_or_insert_with(key, || PlanKind::Spmm(fresh));
+            assert!(!hit, "{fam} n={n}: first sight must miss");
+            let (plan2, hit2) = cache.get_or_insert_with(key, || unreachable!("hit expected"));
+            assert!(hit2, "{fam} n={n}: repeat must hit");
+            assert_eq!(plan2, plan);
+            let PlanKind::Spmm(cached) = plan2.kind else {
+                panic!("{fam} n={n}: spmm key yielded non-spmm plan")
+            };
+            assert_eq!(cached, fresh, "cached plan must be the selector's choice");
+
+            let b = b_for(&a, n, 21 + n as u64);
+            let via_cache = cached.run(&machine, &a, &b, n as u32).unwrap();
+            let via_fresh = fresh.run(&machine, &a, &b, n as u32).unwrap();
+            assert_eq!(
+                via_cache.run.c, via_fresh.run.c,
+                "{fam} n={n}: cache path diverged from fresh selection"
+            );
+            let want = spmm_serial(&a, &b, n);
+            let err = max_rel_err(&via_cache.run.c, &want);
+            assert!(err < TOL, "{fam} n={n}: selected {} err {err}", cached.name());
+        }
+    }
+    let s = cache.stats();
+    assert_eq!(s.misses as usize, NS.len() * 5);
+    assert_eq!(s.hits, s.misses);
+}

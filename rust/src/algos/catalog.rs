@@ -1,5 +1,11 @@
-//! Named algorithm points — the vocabulary shared by the tuner, the
-//! benches, and the coordinator's kernel selector.
+//! The compiled-plan catalog — the one vocabulary shared by the tuner,
+//! the benches, the CLI, and the coordinator's plan cache.
+//!
+//! An [`Algo`] names an executable kernel point of *any* kind the system
+//! serves: the four SpMM schedule families, the dgSPARSE RB+PR library
+//! shape, and the grouped SDDMM of §4.3. Every variant resolves to a
+//! [`Schedule`] and lowers through `compiler::lower` — there are no
+//! bespoke kernel constructions behind the catalog.
 
 use anyhow::Result;
 
@@ -11,8 +17,9 @@ use crate::sparse::Csr;
 use super::cpu_ref::spmm_flops;
 use super::dgsparse::{self, DgConfig};
 use super::runner::{run_schedule, SpmmRun};
+use super::sddmm::{self, sddmm_flops, SddmmConfig};
 
-/// An executable SpMM algorithm point.
+/// An executable compiled-plan point.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Algo {
     /// `{<g nnz, c col>, 1}` — original TACO (Listing 3).
@@ -23,8 +30,11 @@ pub enum Algo {
     SgapRowGroup { g: u32, c: u32, r: u32 },
     /// `{<1 nnz, c col>, r}` — Sgap grouped segment reduction.
     SgapNnzGroup { c: u32, r: u32 },
-    /// dgSPARSE RB+PR+RM library kernel.
+    /// dgSPARSE RB+PR+RM — schedule-generated row-balanced shape.
     Dg(DgConfig),
+    /// Grouped SDDMM `{<1/g nnz>, r}` (§4.3) — the dense-`j` dot
+    /// reduction per non-zero; runs via [`Algo::run_sddmm`].
+    Sddmm(SddmmConfig),
 }
 
 /// Outcome of running an algorithm on a matrix.
@@ -46,6 +56,7 @@ impl Algo {
                 "dg<{},{},{},{}>",
                 d.group_sz, d.block_sz, d.tile_sz, d.worker_dim_r_frac
             ),
+            Algo::Sddmm(s) => format!("sddmm{{<1/{} nnz>,{}}}", s.g, s.r),
         }
     }
 
@@ -59,11 +70,20 @@ impl Algo {
             Algo::SgapRowGroup { .. } => "sgap-row-group",
             Algo::SgapNnzGroup { .. } => "sgap-nnz-group",
             Algo::Dg(_) => "dgsparse",
+            Algo::Sddmm(_) => "sddmm-group",
         }
     }
 
-    /// The atomic-parallelism point this algorithm occupies (None for the
-    /// dgSPARSE entries, which carry more launch detail than the model).
+    /// Whether this plan serves SDDMM traffic (vs SpMM).
+    pub fn is_sddmm(&self) -> bool {
+        matches!(self, Algo::Sddmm(_))
+    }
+
+    /// The atomic-parallelism point this algorithm occupies. The dgSPARSE
+    /// shape maps to `{<1/workerSz row, coarsenSz col>, groupSz}` (legal
+    /// under the Atomics race strategy, which lifts Rule 2). `None` for
+    /// SDDMM, whose reduction runs over the *dense* `j` — the §3 space
+    /// models the sparse-axis decomposition only.
     pub fn to_point(&self) -> Option<AtomicPoint> {
         match *self {
             Algo::TacoNnzSerial { g, c } => Some(AtomicPoint::new(
@@ -84,44 +104,72 @@ impl Algo {
             )),
             Algo::SgapRowGroup { g, c, r } => Some(AtomicPoint::sgap_row(g, c, r)),
             Algo::SgapNnzGroup { c, r } => Some(AtomicPoint::sgap_nnz(c, r)),
-            Algo::Dg(_) => None,
+            Algo::Dg(d) => Some(AtomicPoint::dg_rb_pr(d.worker_sz, d.coarsen_sz, d.group_sz)),
+            Algo::Sddmm(_) => None,
         }
     }
 
-    /// Build the schedule for compiler-generated families.
-    pub fn schedule(&self, n: u32, p: u32) -> Option<Schedule> {
+    /// Build the schedule this plan lowers from. `n`/`p` parameterize the
+    /// SpMM schedule families; the dgSPARSE and SDDMM variants carry
+    /// their full launch shape in their configs.
+    pub fn schedule(&self, n: u32, p: u32) -> Schedule {
         let base = SpmmConfig { n, c: 1, p, g: 32, r: 32, x: 1 };
         match *self {
             Algo::TacoNnzSerial { g, c } => {
-                Some(Schedule::taco_nnz_serial(SpmmConfig { c, g, ..base }))
+                Schedule::taco_nnz_serial(SpmmConfig { c, g, ..base })
             }
             Algo::TacoRowSerial { x, c } => {
-                Some(Schedule::taco_row_serial(SpmmConfig { c, x, ..base }))
+                Schedule::taco_row_serial(SpmmConfig { c, x, ..base })
             }
             Algo::SgapRowGroup { g, c, r } => {
-                Some(Schedule::sgap_row_group(SpmmConfig { c, g, ..base }, r))
+                Schedule::sgap_row_group(SpmmConfig { c, g, ..base }, r)
             }
             Algo::SgapNnzGroup { c, r } => {
-                Some(Schedule::sgap_nnz_group(SpmmConfig { c, ..base }, r))
+                Schedule::sgap_nnz_group(SpmmConfig { c, ..base }, r)
             }
-            Algo::Dg(_) => None,
+            Algo::Dg(cfg) => Schedule::dgsparse_rb_pr(cfg),
+            Algo::Sddmm(cfg) => Schedule::sddmm_group(cfg),
         }
     }
 
-    /// Execute on the simulator. `b` must be `a.cols * n` row-major.
+    /// Execute an SpMM plan on the simulator. `b` must be `a.cols * n`
+    /// row-major. Errors for [`Algo::Sddmm`] plans, which need the dense
+    /// factor pair — use [`Algo::run_sddmm`].
     pub fn run(&self, machine: &Machine, a: &Csr, b: &[f32], n: u32) -> Result<AlgoResult> {
         let run = match self {
             Algo::Dg(cfg) => {
                 anyhow::ensure!(cfg.n == n, "DgConfig.n {} != n {}", cfg.n, n);
                 dgsparse::run(machine, cfg, a, b)?
             }
+            Algo::Sddmm(_) => {
+                anyhow::bail!("{} is an SDDMM plan; use run_sddmm", self.name())
+            }
             _ => {
-                let sched = self.schedule(n, 256).expect("compiler family");
+                let sched = self.schedule(n, 256);
                 run_schedule(machine, &sched, a, b)?
             }
         };
         let time_s = run.report.time_s;
         let gflops = run.report.gflops(spmm_flops(a, n as usize));
+        Ok(AlgoResult { run, time_s, gflops })
+    }
+
+    /// Execute an SDDMM plan on the simulator. `x1` is row-major
+    /// `[a.rows × j]`, `x2` row-major `[j × a.cols]`. Errors for SpMM
+    /// plans.
+    pub fn run_sddmm(
+        &self,
+        machine: &Machine,
+        a: &Csr,
+        x1: &[f32],
+        x2: &[f32],
+    ) -> Result<AlgoResult> {
+        let Algo::Sddmm(cfg) = self else {
+            anyhow::bail!("{} is an SpMM plan; use run", self.name())
+        };
+        let run = sddmm::run(machine, cfg, a, x1, x2)?;
+        let time_s = run.report.time_s;
+        let gflops = run.report.gflops(sddmm_flops(a, cfg.j_dim as usize));
         Ok(AlgoResult { run, time_s, gflops })
     }
 }
@@ -173,8 +221,33 @@ mod tests {
         assert_eq!(a.name(), "sgap{<1 nnz,4 col>,8}");
         assert!(a.to_point().unwrap().is_legal());
         let d = Algo::Dg(DgConfig::stock(4));
-        assert!(d.to_point().is_none());
+        let p = d.to_point().unwrap();
+        assert!(p.is_legal_with_atomics(), "dg point {p} illegal under atomics");
         assert!(d.name().starts_with("dg<32,256,32,1>"));
+        let s = Algo::Sddmm(SddmmConfig::new(64, 16, 8));
+        assert_eq!(s.name(), "sddmm{<1/16 nnz>,8}");
+        assert_eq!(s.family_label(), "sddmm-group");
+        assert!(s.is_sddmm() && s.to_point().is_none());
+    }
+
+    #[test]
+    fn every_variant_resolves_to_a_schedule() {
+        use crate::compiler::schedule::Family;
+        let cases = [
+            (Algo::TacoNnzSerial { g: 16, c: 4 }, Family::NnzSerial),
+            (Algo::TacoRowSerial { x: 1, c: 4 }, Family::RowSerial),
+            (Algo::SgapRowGroup { g: 32, c: 4, r: 8 }, Family::RowGroup),
+            (Algo::SgapNnzGroup { c: 4, r: 32 }, Family::NnzGroup),
+            (Algo::Dg(DgConfig::stock(4)), Family::DgRowBalanced),
+            (Algo::Sddmm(SddmmConfig::new(16, 8, 8)), Family::SddmmGroup),
+        ];
+        for (alg, family) in cases {
+            let sched = alg.schedule(4, 256);
+            assert_eq!(sched.classify().unwrap(), family, "{}", alg.name());
+            crate::compiler::lower(&sched).unwrap_or_else(|e| {
+                panic!("{} failed to lower: {e}", alg.name())
+            });
+        }
     }
 
     #[test]
@@ -198,6 +271,24 @@ mod tests {
             assert!(err < 1e-4, "{}: err {err}", alg.name());
             assert!(res.time_s > 0.0 && res.gflops > 0.0);
         }
+    }
+
+    #[test]
+    fn sddmm_plans_run_through_run_sddmm_only() {
+        let a = erdos_renyi(48, 40, 300, 9).to_csr();
+        let m = Machine::new(HwProfile::rtx3090());
+        let j = 16usize;
+        let mut rng = SplitMix64::new(2);
+        let x1: Vec<f32> = (0..a.rows * j).map(|_| rng.value()).collect();
+        let x2: Vec<f32> = (0..j * a.cols).map(|_| rng.value()).collect();
+        let plan = Algo::Sddmm(SddmmConfig::new(j as u32, 8, 4));
+        let res = plan.run_sddmm(&m, &a, &x1, &x2).unwrap();
+        let want = sddmm::sddmm_serial(&a, &x1, &x2, j);
+        assert!(crate::algos::cpu_ref::max_rel_err(&res.run.c, &want) < 5e-4);
+        assert!(res.gflops > 0.0);
+        // kind mismatches error instead of guessing a kernel
+        assert!(plan.run(&m, &a, &x1, 4).is_err());
+        assert!(Algo::TacoRowSerial { x: 1, c: 4 }.run_sddmm(&m, &a, &x1, &x2).is_err());
     }
 
     #[test]

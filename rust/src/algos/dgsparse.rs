@@ -1,7 +1,12 @@
 //! dgSPARSE re-implementation: the `RB+PR+RM` SpMM kernel family with the
-//! full §7.2 parameter space, as hand-authored LLIR (a "library kernel",
-//! not schedule-generated — mirroring how dgSPARSE is a hand-written CUDA
-//! library). Priced by the same simulator as the compiler output.
+//! full §7.2 parameter space. Historically this was hand-authored LLIR (a
+//! "library kernel"); it is now **schedule-generated** — the row-balanced
+//! /partial-result discipline is a first-class
+//! [`ReductionStrategy::RowBalancedPartial`] and the kernel is produced by
+//! [`crate::compiler::lower`] from [`Schedule::dgsparse_rb_pr`]. This
+//! module only binds buffers (including the launch-time `workerDimR`
+//! scalar), picks the grid, and launches; it is priced by the same
+//! simulator as every other compiler output.
 //!
 //! Parameters (§7.2): a block processes `tileSz` real columns; `workerSz`
 //! threads process one vectorized column (of `coarsenSz` real columns) of
@@ -12,253 +17,29 @@
 //!
 //! Stock dgSPARSE configuration: `tileSz = workerSz = groupSz = 32`,
 //! `blockSz = 256`, `workerDimR = #rows`, `coarsenSz` from N's divisibility.
+//!
+//! [`ReductionStrategy::RowBalancedPartial`]: crate::compiler::cin::ReductionStrategy::RowBalancedPartial
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
-use crate::compiler::llir::{Kernel, Param, Stmt, Val};
+use crate::compiler::schedule::Schedule;
 use crate::sim::{DeviceMemory, Machine};
 use crate::sparse::Csr;
 
 use super::runner::{bind_spmm, SpmmRun};
 
-/// One point in the dgSPARSE tuning space.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub struct DgConfig {
-    pub n: u32,
-    pub group_sz: u32,
-    pub block_sz: u32,
-    pub tile_sz: u32,
-    /// Row parallelism as a fraction of #rows: `workerDimR = frac * rows`
-    /// (the paper tunes powers/reciprocal-powers of 2 of the original).
-    pub worker_dim_r_frac: f64,
-    pub worker_sz: u32,
-    pub coarsen_sz: u32,
-}
+pub use crate::compiler::schedule::DgConfig;
 
-impl DgConfig {
-    /// The library's default configuration for a given N (§7.2).
-    pub fn stock(n: u32) -> Self {
-        DgConfig {
-            n,
-            group_sz: 32,
-            block_sz: 256,
-            tile_sz: 32,
-            worker_dim_r_frac: 1.0,
-            worker_sz: 32,
-            coarsen_sz: if n % 4 == 0 { 4 } else if n % 2 == 0 { 2 } else { 1 },
-        }
-    }
-
-    /// Vectorized columns per block.
-    pub fn vcols(&self) -> u32 {
-        self.n.min(self.tile_sz) / self.coarsen_sz
-    }
-
-    /// blockDim.x = min(N, tileSz)/coarsenSz * workerSz (§7.2).
-    pub fn block_dim_x(&self) -> u32 {
-        self.vcols() * self.worker_sz
-    }
-
-    pub fn rows_per_block(&self) -> u32 {
-        (self.block_sz / self.block_dim_x()).max(1)
-    }
-
-    pub fn col_tiles(&self) -> u32 {
-        self.n.div_ceil(self.tile_sz)
-    }
-
-    pub fn validate(&self) -> Result<()> {
-        if !self.group_sz.is_power_of_two() || self.group_sz > 32 {
-            bail!("groupSz must be a power of 2 <= 32");
-        }
-        if self.group_sz > self.worker_sz {
-            bail!("groupSz must be <= workerSz (a group must not straddle rows)");
-        }
-        if !self.tile_sz.is_power_of_two() || self.tile_sz < self.group_sz {
-            bail!("tileSz must be a power of 2 >= groupSz");
-        }
-        if self.n.min(self.tile_sz) % self.coarsen_sz != 0 {
-            bail!("coarsenSz must divide min(N, tileSz)");
-        }
-        if self.block_dim_x() > self.block_sz {
-            bail!(
-                "blockDim.x {} exceeds blockSz {}",
-                self.block_dim_x(),
-                self.block_sz
-            );
-        }
-        if self.block_sz > 1024 {
-            bail!("blockSz must be <= 1024");
-        }
-        if self.worker_dim_r_frac <= 0.0 {
-            bail!("workerDimR fraction must be positive");
-        }
-        Ok(())
-    }
-
-    /// Total row-worker parallelism for a matrix with `rows` rows,
-    /// rounded **up to whole blocks** — the row-loop stride must equal the
-    /// number of actually-spawned workers or trailing workers would
-    /// double-count rows.
-    pub fn worker_dim_r(&self, rows: usize) -> u32 {
-        let rpb = self.rows_per_block();
-        let want = ((rows as f64 * self.worker_dim_r_frac).round() as u32).max(rpb);
-        want.div_ceil(rpb) * rpb
-    }
-
-    /// Launch grid: row blocks × column tiles.
-    pub fn grid(&self, rows: usize) -> u32 {
-        let row_blocks = self.worker_dim_r(rows) / self.rows_per_block();
-        row_blocks * self.col_tiles()
-    }
-}
-
-/// Build the RB+PR+RM kernel for a config.
-///
-/// Thread decomposition (within a block of `blockSz` threads):
-/// `lane = tid % workerSz`, `vcol = (tid / workerSz) % vcols`,
-/// `rowb = tid / blockDim.x`. Block decomposition:
-/// `col_block = blockIdx % colTiles`, `row_block = blockIdx / colTiles`.
-/// Each worker strides its rows by `workerDimR` (RB = row balance) and its
-/// nnz by `workerSz`; writeback is a grouped parallel reduction of width
-/// `groupSz` (PR); B/C are row-major (RM).
-pub fn build_kernel(cfg: &DgConfig, rows: usize) -> Kernel {
-    let i = Val::ConstI;
-    let worker_dim_r = cfg.worker_dim_r(rows) as i64;
-    let vcols = cfg.vcols() as i64;
-    let worker_sz = cfg.worker_sz as i64;
-    let rpb = cfg.rows_per_block() as i64;
-    let col_tiles = cfg.col_tiles() as i64;
-    let coarsen = cfg.coarsen_sz as i64;
-    let tile = cfg.tile_sz as i64;
-
-    let body = vec![
-        Stmt::Comment(format!(
-            "dgSPARSE RB+PR+RM <groupSz={}, blockSz={}, tileSz={}, workerDimR={}x{}>",
-            cfg.group_sz, cfg.block_sz, cfg.tile_sz, cfg.worker_dim_r_frac, rows
-        )),
-        Stmt::Decl { var: "lane".into(), init: Val::rem(Val::ThreadIdx, i(worker_sz)), float: false },
-        Stmt::Decl {
-            var: "vcol".into(),
-            init: Val::rem(Val::div(Val::ThreadIdx, i(worker_sz)), i(vcols)),
-            float: false,
-        },
-        Stmt::Decl {
-            var: "rowb".into(),
-            init: Val::div(Val::ThreadIdx, i(worker_sz * vcols)),
-            float: false,
-        },
-        Stmt::Decl { var: "col_block".into(), init: Val::rem(Val::BlockIdx, i(col_tiles)), float: false },
-        Stmt::Decl { var: "row_block".into(), init: Val::div(Val::BlockIdx, i(col_tiles)), float: false },
-        Stmt::Decl {
-            var: "i".into(),
-            init: Val::add(Val::mul(Val::var("row_block"), i(rpb)), Val::var("rowb")),
-            float: false,
-        },
-        // RB: loop rows with stride workerDimR until exhausted
-        Stmt::While {
-            cond: Val::lt(Val::var("i"), Val::param("A1_dimension")),
-            body: vec![
-                Stmt::For {
-                    var: "cc".into(),
-                    lo: i(0),
-                    hi: i(coarsen),
-                    step: i(1),
-                    body: vec![
-                        Stmt::Decl {
-                            var: "k".into(),
-                            init: Val::add(
-                                Val::mul(Val::var("col_block"), i(tile)),
-                                Val::add(Val::mul(Val::var("vcol"), i(coarsen)), Val::var("cc")),
-                            ),
-                            float: false,
-                        },
-                        Stmt::If {
-                            cond: Val::lt(Val::var("k"), Val::param("B2_dimension")),
-                            then: vec![
-                                Stmt::Decl { var: "val".into(), init: Val::ConstF(0.0), float: true },
-                                Stmt::Decl {
-                                    var: "jpos".into(),
-                                    init: Val::add(Val::load("A2_pos", Val::var("i")), Val::var("lane")),
-                                    float: false,
-                                },
-                                Stmt::While {
-                                    cond: Val::lt(
-                                        Val::var("jpos"),
-                                        Val::load("A2_pos", Val::add(Val::var("i"), i(1))),
-                                    ),
-                                    body: vec![
-                                        Stmt::Assign {
-                                            var: "val".into(),
-                                            val: Val::add(
-                                                Val::var("val"),
-                                                Val::mul(
-                                                    Val::load("A_vals", Val::var("jpos")),
-                                                    Val::load(
-                                                        "B_vals",
-                                                        Val::add(
-                                                            Val::mul(
-                                                                Val::load("A2_crd", Val::var("jpos")),
-                                                                Val::param("B2_dimension"),
-                                                            ),
-                                                            Val::var("k"),
-                                                        ),
-                                                    ),
-                                                ),
-                                            ),
-                                        },
-                                        Stmt::Assign {
-                                            var: "jpos".into(),
-                                            val: Val::add(Val::var("jpos"), i(worker_sz)),
-                                        },
-                                    ],
-                                },
-                                Stmt::AtomicAddGroup {
-                                    array: "C_vals".into(),
-                                    idx: Val::add(
-                                        Val::mul(Val::var("i"), Val::param("B2_dimension")),
-                                        Val::var("k"),
-                                    ),
-                                    val: Val::var("val"),
-                                    group: cfg.group_sz,
-                                },
-                            ],
-                            els: vec![],
-                        },
-                    ],
-                },
-                Stmt::Assign { var: "i".into(), val: Val::add(Val::var("i"), i(worker_dim_r)) },
-            ],
-        },
-    ];
-
-    Kernel {
-        name: format!(
-            "dg_rb_pr_rm_g{}_b{}_t{}_w{}",
-            cfg.group_sz, cfg.block_sz, cfg.tile_sz, cfg.worker_dim_r_frac
-        ),
-        params: vec![
-            Param::i32_array("A2_pos"),
-            Param::i32_array("A2_crd"),
-            Param::f32_array("A_vals"),
-            Param::f32_array("B_vals"),
-            Param::f32_array("C_vals"),
-            Param::i32_scalar("A1_dimension"),
-            Param::i32_scalar("B2_dimension"),
-        ],
-        body,
-        block_dim: cfg.block_sz,
-    }
-}
-
-/// Run the dgSPARSE kernel on the simulator.
+/// Run the dgSPARSE kernel on the simulator. The kernel comes from the
+/// shared compile pipeline; `workerDimR` is resolved here from the
+/// matrix's row count and bound as a scalar parameter.
 pub fn run(machine: &Machine, cfg: &DgConfig, a: &Csr, b: &[f32]) -> Result<SpmmRun> {
-    cfg.validate()?;
     let n = cfg.n as usize;
-    let kernel = build_kernel(cfg, a.rows);
+    let kernel = crate::compiler::lower(&Schedule::dgsparse_rb_pr(*cfg))?;
     let grid = cfg.grid(a.rows);
     let mut mem = DeviceMemory::new();
     bind_spmm(&mut mem, a, b, n);
+    mem.bind_scalar("workerDimR", cfg.worker_dim_r(a.rows) as i64);
     let report = machine.launch(&kernel, grid, &mut mem)?;
     let mut c = mem.take_f32("C_vals").expect("C_vals");
     c.truncate(a.rows * n);

@@ -1,12 +1,14 @@
-//! SpMM algorithm implementations.
+//! Executable kernel implementations behind the compiled-plan catalog.
 //!
 //! * [`cpu_ref`] — the serial golden oracle every kernel is checked against.
 //! * [`runner`] — binds a CSR matrix + dense B into simulator memory,
 //!   computes the launch grid for each compiler family, launches, and
 //!   extracts C with the cost report.
-//! * [`dgsparse`] — the dgSPARSE-library re-implementation (hand-authored
-//!   LLIR, not schedule-generated) with the full §7.2 parameter space.
-//! * [`catalog`] — named algorithm points used by the tuner and benches.
+//! * [`dgsparse`] — the dgSPARSE-library RB+PR shape, schedule-generated
+//!   through `compiler::lower` with the full §7.2 parameter space.
+//! * [`sddmm`] — the §4.3 grouped SDDMM, schedule-generated likewise.
+//! * [`catalog`] — the unified plan vocabulary ([`Algo`]) used by the
+//!   tuner, the benches, the CLI, and the coordinator's plan cache.
 
 pub mod catalog;
 pub mod cpu_ref;
@@ -19,3 +21,4 @@ pub use catalog::{Algo, AlgoResult};
 pub use cpu_ref::{spmm_flops, spmm_serial};
 pub use dgsparse::DgConfig;
 pub use runner::{run_schedule, SpmmRun};
+pub use sddmm::SddmmConfig;

@@ -31,9 +31,11 @@ pub fn bind_spmm(mem: &mut DeviceMemory, a: &Csr, b: &[f32], n: usize) {
     mem.bind_scalar("B2_dimension", n as i64);
 }
 
-/// Grid size + required `i_blockStarts` for a schedule family.
+/// Grid size + required `i_blockStarts` for an SpMM schedule family.
+/// (SDDMM and dgSPARSE schedules bind different buffers and compute their
+/// grids in their own run paths.)
 pub fn launch_shape(schedule: &Schedule, a: &Csr) -> (u32, Option<Vec<i32>>) {
-    let cfg = schedule.config;
+    let cfg = schedule.spmm_config().expect("launch_shape serves the SpMM families");
     let kchunks = cfg.kchunks();
     match schedule.classify().expect("classified") {
         Family::NnzGroup => {
@@ -56,12 +58,15 @@ pub fn launch_shape(schedule: &Schedule, a: &Csr) -> (u32, Option<Vec<i32>>) {
             let rpb = (cfg.p / (cfg.g * kchunks)) as usize;
             (a.rows.div_ceil(rpb.max(1)).max(1) as u32, None)
         }
+        Family::SddmmGroup | Family::DgRowBalanced => {
+            unreachable!("spmm_config() above rejects non-SpMM schedules")
+        }
     }
 }
 
 /// Lower the schedule, launch it on `machine`, return C + report.
 pub fn run_schedule(machine: &Machine, schedule: &Schedule, a: &Csr, b: &[f32]) -> Result<SpmmRun> {
-    let n = schedule.config.n as usize;
+    let n = schedule.spmm_config().expect("run_schedule serves the SpMM families").n as usize;
     let kernel = lower(schedule)?;
     run_kernel(machine, &kernel, schedule, a, b, n)
 }
@@ -96,7 +101,7 @@ mod tests {
     use crate::sparse::{erdos_renyi, power_law, SplitMix64};
 
     fn check(schedule: Schedule, a: &Csr) {
-        let n = schedule.config.n as usize;
+        let n = schedule.spmm_config().unwrap().n as usize;
         let mut rng = SplitMix64::new(99);
         let b: Vec<f32> = (0..a.cols * n).map(|_| rng.value()).collect();
         let want = spmm_serial(a, &b, n);

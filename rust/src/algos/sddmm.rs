@@ -3,9 +3,11 @@
 //! SDDMM (Eq. 2c): `Y(i,k) = A(i,k) · Σ_j X1(i,j) · X2(j,k)` with `Y`
 //! sharing `A`'s sparsity. Its reduction (over the dense `j`) "behaves the
 //! same" as SpMM's (§2.1, Fig. 4/5) — so the *same* `atomicAddGroup`
-//! macro instruction and the same GroupSize tuning apply. This module
-//! builds the `{<1/g nnz, ·>, r}`-style SDDMM kernel as LLIR and runs it
-//! on the same simulator, demonstrating that segment group is not
+//! macro instruction and the same GroupSize tuning apply. The kernel is
+//! **schedule-generated**: [`Schedule::sddmm_group`] describes the
+//! `{<1/g nnz>, r}` shape and [`crate::compiler::lower`] emits it through
+//! the same reduction pipeline as SpMM — this module only binds buffers,
+//! picks the grid, and launches, demonstrating that segment group is not
 //! SpMM-specific.
 //!
 //! Layout: `g` lanes cooperate on one non-zero; each lane strides the
@@ -15,11 +17,13 @@
 
 use anyhow::Result;
 
-use crate::compiler::llir::{Kernel, Param, Stmt, Val};
+use crate::compiler::schedule::Schedule;
 use crate::sim::{DeviceMemory, Machine};
 use crate::sparse::Csr;
 
 use super::runner::SpmmRun;
+
+pub use crate::compiler::schedule::SddmmConfig;
 
 /// Serial oracle: `y[pos] = a.data[pos] * dot(X1[i,:], X2[:,k])`.
 ///
@@ -47,126 +51,13 @@ pub fn sddmm_flops(a: &Csr, j_dim: usize) -> u64 {
     (2 * j_dim as u64 + 1) * a.nnz() as u64
 }
 
-/// Tunable SDDMM configuration: `g` lanes per nnz, reduction width `r`.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct SddmmConfig {
-    pub j_dim: u32,
-    /// Lanes cooperating per non-zero (power of 2, ≤ 32).
-    pub g: u32,
-    /// Reduction parallelism (GroupSize), `r <= g`.
-    pub r: u32,
-    /// Threads per block.
-    pub p: u32,
-}
-
-impl SddmmConfig {
-    pub fn new(j_dim: u32, g: u32, r: u32) -> Self {
-        SddmmConfig { j_dim, g, r, p: 256 }
-    }
-
-    pub fn validate(&self) -> Result<()> {
-        anyhow::ensure!(self.g.is_power_of_two() && self.g <= 32, "g must be a power of 2 <= 32");
-        anyhow::ensure!(self.r.is_power_of_two() && self.r <= self.g, "r must be a power of 2 <= g");
-        anyhow::ensure!(self.p % self.g == 0, "p must be divisible by g");
-        Ok(())
-    }
-
-    /// Non-zeros per block.
-    pub fn npb(&self) -> u32 {
-        self.p / self.g
-    }
-}
-
-/// Build the grouped SDDMM kernel.
-///
-/// Buffers: `A2_pos/A2_crd/A_vals` (CSR), `A_rowidx` (COO row per nnz),
-/// `X1_vals`, `X2_vals`, `Y_vals` (one slot per nnz); scalars
-/// `A1_dimension` (rows), `A2_dimension` (cols), `J_dimension`, `A_nnz`.
-pub fn build_kernel(cfg: &SddmmConfig) -> Kernel {
-    let i = Val::ConstI;
-    let g = cfg.g as i64;
-    let npb = cfg.npb() as i64;
-    let body = vec![
-        Stmt::Comment(format!("sddmm {{<1/{g} nnz>, {}}} — grouped dot-product reduction", cfg.r)),
-        Stmt::Decl { var: "lane".into(), init: Val::rem(Val::ThreadIdx, i(g)), float: false },
-        Stmt::Decl { var: "e".into(), init: Val::div(Val::ThreadIdx, i(g)), float: false },
-        Stmt::Decl {
-            var: "pos".into(),
-            init: Val::add(Val::mul(Val::BlockIdx, i(npb)), Val::var("e")),
-            float: false,
-        },
-        Stmt::If {
-            cond: Val::lt(Val::var("pos"), Val::param("A_nnz")),
-            then: vec![
-                Stmt::Decl { var: "i".into(), init: Val::load("A_rowidx", Val::var("pos")), float: false },
-                Stmt::Decl { var: "k".into(), init: Val::load("A2_crd", Val::var("pos")), float: false },
-                Stmt::Decl { var: "val".into(), init: Val::ConstF(0.0), float: true },
-                Stmt::Decl { var: "j".into(), init: Val::var("lane"), float: false },
-                Stmt::While {
-                    cond: Val::lt(Val::var("j"), Val::param("J_dimension")),
-                    body: vec![
-                        Stmt::Assign {
-                            var: "val".into(),
-                            val: Val::add(
-                                Val::var("val"),
-                                Val::mul(
-                                    Val::load(
-                                        "X1_vals",
-                                        Val::add(
-                                            Val::mul(Val::var("i"), Val::param("J_dimension")),
-                                            Val::var("j"),
-                                        ),
-                                    ),
-                                    Val::load(
-                                        "X2_vals",
-                                        Val::add(
-                                            Val::mul(Val::var("j"), Val::param("A2_dimension")),
-                                            Val::var("k"),
-                                        ),
-                                    ),
-                                ),
-                            ),
-                        },
-                        Stmt::Assign { var: "j".into(), val: Val::add(Val::var("j"), i(g)) },
-                    ],
-                },
-                // scale the partial by A's value up front (distributes over +)
-                Stmt::Assign {
-                    var: "val".into(),
-                    val: Val::mul(Val::var("val"), Val::load("A_vals", Val::var("pos"))),
-                },
-                // the same macro instruction as SpMM's row kernel (§4.3):
-                Stmt::AtomicAddGroup {
-                    array: "Y_vals".into(),
-                    idx: Val::var("pos"),
-                    val: Val::var("val"),
-                    group: cfg.r,
-                },
-            ],
-            els: vec![],
-        },
-    ];
-    Kernel {
-        name: format!("sddmm_g{}_r{}", cfg.g, cfg.r),
-        params: vec![
-            Param::i32_array("A2_pos"),
-            Param::i32_array("A2_crd"),
-            Param::i32_array("A_rowidx"),
-            Param::f32_array("A_vals"),
-            Param::f32_array("X1_vals"),
-            Param::f32_array("X2_vals"),
-            Param::f32_array("Y_vals"),
-            Param::i32_scalar("A1_dimension"),
-            Param::i32_scalar("A2_dimension"),
-            Param::i32_scalar("J_dimension"),
-            Param::i32_scalar("A_nnz"),
-        ],
-        body,
-        block_dim: cfg.p,
-    }
-}
-
 /// Run SDDMM on the simulator; returns per-nnz outputs + the report.
+///
+/// The kernel is produced by `compiler::lower` from
+/// [`Schedule::sddmm_group`]; this function binds the buffers
+/// (`A2_pos/A2_crd/A_vals` CSR, `A_rowidx` COO row per nnz, `X1_vals`,
+/// `X2_vals`, `Y_vals` one slot per nnz; scalars `A1_dimension`,
+/// `A2_dimension`, `J_dimension`, `A_nnz`), picks the grid, and launches.
 pub fn run(
     machine: &Machine,
     cfg: &SddmmConfig,
@@ -174,10 +65,9 @@ pub fn run(
     x1: &[f32],
     x2: &[f32],
 ) -> Result<SpmmRun> {
-    cfg.validate()?;
     assert_eq!(x1.len(), a.rows * cfg.j_dim as usize);
     assert_eq!(x2.len(), cfg.j_dim as usize * a.cols);
-    let kernel = build_kernel(cfg);
+    let kernel = crate::compiler::lower(&Schedule::sddmm_group(*cfg))?;
     let grid = (a.nnz() as u32).div_ceil(cfg.npb()).max(1);
     let rowidx: Vec<i32> = a.to_coo().row_idx.iter().map(|&x| x as i32).collect();
     let mut mem = DeviceMemory::new();

@@ -58,7 +58,57 @@ impl fmt::Display for OutputRaceStrategy {
     }
 }
 
+/// The writeback discipline of a reduction: how a reduced value reaches
+/// global memory. This is the axis of a [`ReductionPlan`] the lowerer
+/// actually consumes — every kernel family, compiler-scheduled or
+/// library-shaped, ends in exactly one of these four instructions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Writeback {
+    /// Plain store — the lane owns the output exclusively (NoRaces).
+    Store,
+    /// Plain per-lane `atomicAdd` (serial reduction over shared outputs).
+    Atomic,
+    /// `atomicAddGroup<T,G>`: tree reduction across the group, lane 0
+    /// writes back once (compile-time-decided writeback thread).
+    LaneZeroAtomic,
+    /// `segReduceGroup<T,G>`: segmented scan keyed by the output index,
+    /// segment-boundary lanes write back (runtime-decided writeback
+    /// threads).
+    SegmentBoundary,
+}
+
+impl Writeback {
+    /// Whether this discipline synchronizes a lane group (the two macro
+    /// instructions) as opposed to a single-lane store/atomic.
+    pub fn is_grouped(self) -> bool {
+        matches!(self, Writeback::LaneZeroAtomic | Writeback::SegmentBoundary)
+    }
+}
+
+impl fmt::Display for Writeback {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Writeback::Store => "Store",
+            Writeback::Atomic => "Atomic",
+            Writeback::LaneZeroAtomic => "LaneZeroAtomic",
+            Writeback::SegmentBoundary => "SegmentBoundary",
+        };
+        write!(f, "{s}")
+    }
+}
+
 /// How a GPUGroup synchronizes its lanes (§4.2, §5.1).
+///
+/// The paper's claim is that the strategy is *user-defined* — segment
+/// group fixes the synchronization width but not the reduction discipline.
+/// Beyond the two built-in strategies of §5.1, [`RowBalancedPartial`]
+/// captures dgSPARSE's RB+PR kernel (partial results per row visit under a
+/// strided row loop), and [`Custom`] admits any caller-defined strategy by
+/// naming its writeback discipline — new strategies need no lowerer edits
+/// because [`crate::compiler::lower`] consumes only the [`Writeback`].
+///
+/// [`RowBalancedPartial`]: ReductionStrategy::RowBalancedPartial
+/// [`Custom`]: ReductionStrategy::Custom
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ReductionStrategy {
     /// Tree reduction; exactly one writeback thread per group
@@ -67,13 +117,38 @@ pub enum ReductionStrategy {
     /// Segmented reduction; writeback threads decided at runtime by
     /// segment boundaries (`segReduceGroup<T,G>`).
     SegmentReduction,
+    /// dgSPARSE's RB+PR discipline: a grouped tree reduction whose
+    /// owning loop strides *rows* (row balance), writing back a partial
+    /// result per row visit — same macro instruction as
+    /// [`ParallelReduction`](ReductionStrategy::ParallelReduction), but a
+    /// different loop structure above it.
+    RowBalancedPartial,
+    /// A user-defined strategy: a display name plus the writeback
+    /// discipline it reduces to.
+    Custom { name: &'static str, writeback: Writeback },
+}
+
+impl ReductionStrategy {
+    /// The writeback discipline this strategy lowers to — the single
+    /// point the emission pipeline consults.
+    pub fn writeback(self) -> Writeback {
+        match self {
+            ReductionStrategy::ParallelReduction | ReductionStrategy::RowBalancedPartial => {
+                Writeback::LaneZeroAtomic
+            }
+            ReductionStrategy::SegmentReduction => Writeback::SegmentBoundary,
+            ReductionStrategy::Custom { writeback, .. } => writeback,
+        }
+    }
 }
 
 impl fmt::Display for ReductionStrategy {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        let s = match self {
+        let s = match *self {
             ReductionStrategy::ParallelReduction => "ParallelReduction",
             ReductionStrategy::SegmentReduction => "Segment",
+            ReductionStrategy::RowBalancedPartial => "RowBalancedPartial",
+            ReductionStrategy::Custom { name, .. } => name,
         };
         write!(f, "{s}")
     }
@@ -91,6 +166,62 @@ impl GroupSpec {
     pub fn new(size: u32, strategy: ReductionStrategy) -> Self {
         assert!(size.is_power_of_two() && size <= 32, "group size must be a power of 2 ≤ 32");
         GroupSpec { size, strategy }
+    }
+
+    /// The reduction recipe this binding implies.
+    pub fn plan(self) -> ReductionPlan {
+        ReductionPlan::grouped(self)
+    }
+}
+
+/// The complete reduction recipe threaded from scheduling into lowering:
+/// strategy × group size × writeback discipline. Constructed from a
+/// [`GroupSpec`] (grouped families) or [`ReductionPlan::serial`] (the
+/// stock TACO families); consumed by the family-agnostic emission
+/// pipeline in [`crate::compiler::lower`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReductionPlan {
+    /// Reduction parallelism (the paper's `r`); 1 for serial reductions.
+    pub group: u32,
+    /// `None` for serial (ungrouped) reductions.
+    pub strategy: Option<ReductionStrategy>,
+    /// The instruction the reduction's writeback lowers to.
+    pub writeback: Writeback,
+}
+
+impl ReductionPlan {
+    /// A serial reduction: one lane accumulates, writing back with a
+    /// plain store ([`Writeback::Store`]) or per-lane atomics
+    /// ([`Writeback::Atomic`]).
+    pub fn serial(writeback: Writeback) -> ReductionPlan {
+        assert!(
+            matches!(writeback, Writeback::Store | Writeback::Atomic),
+            "serial reductions write back with Store or Atomic, got {writeback}"
+        );
+        ReductionPlan { group: 1, strategy: None, writeback }
+    }
+
+    /// The grouped reduction a [`GroupSpec`] describes.
+    pub fn grouped(spec: GroupSpec) -> ReductionPlan {
+        ReductionPlan {
+            group: spec.size,
+            strategy: Some(spec.strategy),
+            writeback: spec.strategy.writeback(),
+        }
+    }
+
+    /// Whether the plan synchronizes lanes (any grouped strategy).
+    pub fn is_grouped(&self) -> bool {
+        self.strategy.is_some()
+    }
+}
+
+impl fmt::Display for ReductionPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.strategy {
+            Some(s) => write!(f, "{{r={}, {s}, {}}}", self.group, self.writeback),
+            None => write!(f, "{{serial, {}}}", self.writeback),
+        }
     }
 }
 
@@ -266,6 +397,37 @@ mod tests {
     #[should_panic(expected = "power of 2")]
     fn group_size_must_be_pow2() {
         GroupSpec::new(6, ReductionStrategy::ParallelReduction);
+    }
+
+    #[test]
+    fn strategies_map_to_writebacks() {
+        assert_eq!(ReductionStrategy::ParallelReduction.writeback(), Writeback::LaneZeroAtomic);
+        assert_eq!(ReductionStrategy::SegmentReduction.writeback(), Writeback::SegmentBoundary);
+        assert_eq!(ReductionStrategy::RowBalancedPartial.writeback(), Writeback::LaneZeroAtomic);
+        let custom =
+            ReductionStrategy::Custom { name: "maxPool", writeback: Writeback::SegmentBoundary };
+        assert_eq!(custom.writeback(), Writeback::SegmentBoundary);
+        assert_eq!(custom.to_string(), "maxPool");
+    }
+
+    #[test]
+    fn reduction_plans_from_specs_and_serial() {
+        let p = GroupSpec::new(8, ReductionStrategy::SegmentReduction).plan();
+        assert_eq!(p.group, 8);
+        assert!(p.is_grouped());
+        assert_eq!(p.writeback, Writeback::SegmentBoundary);
+        let rb = GroupSpec::new(4, ReductionStrategy::RowBalancedPartial).plan();
+        assert_eq!(rb.writeback, Writeback::LaneZeroAtomic);
+        let s = ReductionPlan::serial(Writeback::Atomic);
+        assert_eq!((s.group, s.strategy, s.writeback), (1, None, Writeback::Atomic));
+        assert!(!s.is_grouped());
+        assert!(s.to_string().contains("serial"));
+    }
+
+    #[test]
+    #[should_panic(expected = "serial reductions")]
+    fn serial_plan_rejects_grouped_writeback() {
+        ReductionPlan::serial(Writeback::LaneZeroAtomic);
     }
 
     #[test]

@@ -1,10 +1,12 @@
 //! CUDA-like text emission from LLIR (§2.4.3 back-end).
 //!
 //! Produces compilable-looking CUDA C for inspection, docs, and the golden
-//! tests that check the Listing 1 → Listing 2 transformation. The two
-//! macro instructions are emitted as calls to the §5.3 template device
-//! functions `atomicAddGroup<T,G>` / `segReduceGroup<T,G>`, whose
-//! definitions are emitted in a header prologue.
+//! tests that check the Listing 1 → Listing 2 transformation (and, since
+//! SDDMM/dgSPARSE lower through the shared pipeline, their generated
+//! kernels too — see `rust/tests/golden/`). The two macro instructions
+//! are emitted as calls to the §5.3 template device functions
+//! `atomicAddGroup<T,G>` / `segReduceGroup<T,G>`, whose definitions are
+//! emitted in a header prologue.
 
 use std::fmt::Write;
 

@@ -3,7 +3,10 @@
 //! loads/stores, atomics, and the two segment-group **macro instructions**
 //! of §5.3 (`atomicAddGroup<T,G>` and `segReduceGroup<T,G>`).
 //!
-//! Two consumers:
+//! One producer: [`crate::compiler::lower`]'s emission pipeline — every
+//! kernel the catalog serves (SpMM families, SDDMM, dgSPARSE) arrives
+//! here from a `Schedule`, with each reduction writeback chosen by a
+//! [`crate::compiler::cin::ReductionPlan`]. Two consumers:
 //! * [`crate::compiler::codegen_cuda`] pretty-prints it as CUDA-like text
 //!   (for inspection + golden tests against the paper's Listings 1/2),
 //! * [`crate::sim`] executes it warp-by-warp with lane masks and charges

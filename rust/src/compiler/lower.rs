@@ -1,12 +1,22 @@
-//! CIN → LLIR lowering (§5.2–5.3).
+//! CIN → LLIR lowering (§5.2–5.3): the composable emission pipeline.
 //!
-//! The lowerer emits one GPU kernel per scheduled SpMM. It implements the
-//! paper's two lowering changes:
+//! One entry point, [`lower`], serves every kernel family the catalog
+//! exposes — the four SpMM families of §6, the grouped SDDMM of §4.3, and
+//! the dgSPARSE RB+PR library shape. Each family emitter is assembled
+//! from shared, family-agnostic loop-structure builders (thread-tile
+//! decomposition, column coarsening, row search, strided row dots) and a
+//! single reusable reduction emitter, [`emit_reduction`], which consumes
+//! the [`ReductionPlan`] threaded in from the schedule — strategy × group
+//! size × writeback discipline. Adding a reduction strategy (even a
+//! user-defined [`ReductionStrategy::Custom`]) requires no emitter edits:
+//! the plan's [`Writeback`] picks the instruction.
 //!
-//! * **Zero extension** (§5.2): for the nnz-group family, out-of-bound
-//!   lanes are *not* guarded out of the reduction — they compute
-//!   `val = 0` and flow through `segReduceGroup` branch-free, exactly the
-//!   Listing 1 → Listing 2 transformation.
+//! The paper's two lowering changes live here:
+//!
+//! * **Zero extension** (§5.2): for the segment-reduction families,
+//!   out-of-bound lanes are *not* guarded out of the reduction — they
+//!   compute `val = 0` and flow through `segReduceGroup` branch-free,
+//!   exactly the Listing 1 → Listing 2 transformation.
 //! * **Relaxed scalar workspace** (§5.3): the workspace `val` is declared
 //!   in the loop scope but assigned inside an `else` basic block —
 //!   the pattern stock TACO's one-basic-block assumption cannot express.
@@ -23,8 +33,10 @@
 
 use thiserror::Error;
 
+#[allow(unused_imports)] // ReductionStrategy referenced by the module docs
+use super::cin::{ReductionPlan, ReductionStrategy, Writeback};
 use super::llir::{Kernel, Param, Stmt, Val};
-use super::schedule::{Family, Schedule};
+use super::schedule::{DgConfig, Family, KernelConfig, Schedule, SddmmConfig};
 
 #[derive(Debug, Error)]
 pub enum LowerError {
@@ -34,34 +46,183 @@ pub enum LowerError {
     InvalidConfig(String),
 }
 
-/// Lower a scheduled SpMM to an LLIR kernel.
+/// Lower a schedule to an LLIR kernel.
+///
+/// Classification picks the family, [`Schedule::reduction_plan`] supplies
+/// the reduction recipe, and the family emitter builds the loop structure
+/// around it.
 pub fn lower(schedule: &Schedule) -> Result<Kernel, LowerError> {
     schedule.config.validate().map_err(LowerError::InvalidConfig)?;
     let family = schedule.classify().map_err(LowerError::Unsupported)?;
-    let cfg = schedule.config;
-    match family {
-        Family::NnzGroup => {
-            if cfg.r > cfg.p {
+    let plan = schedule.reduction_plan().map_err(LowerError::Unsupported)?;
+    match (family, schedule.config) {
+        (Family::NnzGroup, KernelConfig::Spmm(cfg)) => {
+            if plan.group > cfg.p {
                 return Err(LowerError::InvalidConfig("r must be <= threads per block".into()));
             }
-            Ok(lower_nnz_group(cfg.n, cfg.c, cfg.p, cfg.r))
+            Ok(lower_nnz_group(cfg.n, cfg.c, cfg.p, &plan))
         }
-        Family::NnzSerial => Ok(lower_nnz_serial(cfg.n, cfg.c, cfg.p, cfg.g)),
-        Family::RowSerial => Ok(lower_row_serial(cfg.n, cfg.c, cfg.p, cfg.x)),
-        Family::RowGroup => {
-            if cfg.r > cfg.g {
+        (Family::NnzSerial, KernelConfig::Spmm(cfg)) => {
+            Ok(lower_nnz_serial(cfg.n, cfg.c, cfg.p, cfg.g, &plan))
+        }
+        (Family::RowSerial, KernelConfig::Spmm(cfg)) => {
+            Ok(lower_row_serial(cfg.n, cfg.c, cfg.p, cfg.x, &plan))
+        }
+        (Family::RowGroup, KernelConfig::Spmm(cfg)) => {
+            if plan.group > cfg.g {
                 return Err(LowerError::InvalidConfig(format!(
                     "row-group family needs r <= g (got r={}, g={}): an r-subgroup must not straddle rows",
-                    cfg.r, cfg.g
+                    plan.group, cfg.g
                 )));
             }
-            Ok(lower_row_group(cfg.n, cfg.c, cfg.p, cfg.g, cfg.r))
+            Ok(lower_row_group(cfg.n, cfg.c, cfg.p, cfg.g, &plan))
         }
+        (Family::SddmmGroup, KernelConfig::Sddmm(cfg)) => Ok(lower_sddmm_group(&cfg, &plan)),
+        (Family::DgRowBalanced, KernelConfig::Dg(cfg)) => Ok(lower_dg_row_balanced(&cfg, &plan)),
+        (family, _) => Err(LowerError::Unsupported(format!(
+            "family {family:?} does not match the schedule's kernel config"
+        ))),
     }
 }
 
 fn i(v: i64) -> Val {
     Val::ConstI(v)
+}
+
+// ---------------------------------------------------------------------------
+// the reduction emitter — the single writeback point of every family
+// ---------------------------------------------------------------------------
+
+/// Emit the writeback a [`ReductionPlan`] prescribes for `array[idx] ⊕= val`.
+///
+/// This is the one place reduction strategies meet instructions; every
+/// family emitter funnels its reduction through here, so a new strategy
+/// (or a [`ReductionStrategy::Custom`] writeback) lands in every kernel
+/// family at once.
+fn emit_reduction(plan: &ReductionPlan, array: &str, idx: Val, val: Val) -> Stmt {
+    match plan.writeback {
+        Writeback::Store => Stmt::Store { array: array.into(), idx, val },
+        Writeback::Atomic => Stmt::AtomicAdd { array: array.into(), idx, val },
+        Writeback::LaneZeroAtomic => {
+            Stmt::AtomicAddGroup { array: array.into(), idx, val, group: plan.group }
+        }
+        Writeback::SegmentBoundary => {
+            Stmt::SegReduceGroup { array: array.into(), idx, val, group: plan.group }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// family-agnostic loop-structure builders
+// ---------------------------------------------------------------------------
+
+/// Split `threadIdx.x` into an inner tile position and an outer chunk id:
+/// `inner = tid % width; outer = tid / width`.
+fn tile_decomp(inner: &str, outer: &str, width: i64) -> [Stmt; 2] {
+    [
+        Stmt::Decl { var: inner.into(), init: Val::rem(Val::ThreadIdx, i(width)), float: false },
+        Stmt::Decl { var: outer.into(), init: Val::div(Val::ThreadIdx, i(width)), float: false },
+    ]
+}
+
+/// The per-block row-search window `[pA2_begin, pA2_end]` read from the
+/// precomputed `i_blockStarts` array.
+fn block_window() -> [Stmt; 2] {
+    [
+        Stmt::Decl {
+            var: "pA2_begin".into(),
+            init: Val::load("i_blockStarts", Val::BlockIdx),
+            float: false,
+        },
+        Stmt::Decl {
+            var: "pA2_end".into(),
+            init: Val::load("i_blockStarts", Val::add(Val::BlockIdx, i(1))),
+            float: false,
+        },
+    ]
+}
+
+/// Binary-search the CSR `A2_pos` for the row owning position `target`
+/// within the block window (Listing 1's row search).
+fn row_search(var: &str, target: &str) -> Stmt {
+    Stmt::Decl {
+        var: var.into(),
+        init: Val::BinarySearchBefore {
+            array: "A2_pos".into(),
+            lo: Box::new(Val::var("pA2_begin")),
+            hi: Box::new(Val::var("pA2_end")),
+            target: Box::new(Val::var(target)),
+        },
+        float: false,
+    }
+}
+
+/// The column-coarsening loop `for (ki = 0; ki < c; ki++)` every family
+/// tiles its dense columns with.
+fn coarsen_loop(c: u32, body: Vec<Stmt>) -> Stmt {
+    Stmt::For { var: "ki".into(), lo: i(0), hi: i(c as i64), step: i(1), body }
+}
+
+/// The coarsened column index `k = ko * c + ki`.
+fn col_index(c: u32) -> Stmt {
+    Stmt::Decl {
+        var: "k".into(),
+        init: Val::add(Val::mul(Val::var("ko"), i(c as i64)), Val::var("ki")),
+        float: false,
+    }
+}
+
+/// The SpMM product at sparse position `pos` and dense column `k`:
+/// `A_vals[pos] * B_vals[A2_crd[pos] * B2_dimension + k]`.
+fn spmm_product(pos: Val) -> Val {
+    Val::mul(
+        Val::load("A_vals", pos.clone()),
+        Val::load(
+            "B_vals",
+            Val::add(
+                Val::mul(Val::load("A2_crd", pos), Val::param("B2_dimension")),
+                Val::var("k"),
+            ),
+        ),
+    )
+}
+
+/// `acc += product` on a scalar workspace.
+fn accumulate(acc: &str, product: Val) -> Stmt {
+    Stmt::Assign { var: acc.into(), val: Val::add(Val::var(acc), product) }
+}
+
+/// Cooperative row dot: `while (pos < end) { acc += A·B; pos += stride }`
+/// — `stride` lanes interleave over one row's non-zeros. Shared by the
+/// row-group family and the dgSPARSE row-balanced shape.
+fn strided_row_dot(acc: &str, pos_var: &str, end: Val, stride: i64) -> Stmt {
+    Stmt::While {
+        cond: Val::lt(Val::var(pos_var), end),
+        body: vec![
+            accumulate(acc, spmm_product(Val::var(pos_var))),
+            Stmt::Assign {
+                var: pos_var.into(),
+                val: Val::add(Val::var(pos_var), i(stride)),
+            },
+        ],
+    }
+}
+
+/// `while (target == A2_pos[i_pos + 1]) { body }` — the row-boundary scan
+/// the nnz-split families run to advance (or flush) across row starts.
+fn row_boundary_scan(i_pos: &str, target: &str, body: Vec<Stmt>) -> Stmt {
+    Stmt::While {
+        cond: Val::eq(
+            Val::var(target),
+            Val::load("A2_pos", Val::add(Val::var(i_pos), i(1))),
+        ),
+        body,
+    }
+}
+
+/// The output index `row * B2_dimension + k`.
+fn c_index(row: &str) -> Val {
+    Val::add(Val::mul(Val::var(row), Val::param("B2_dimension")), Val::var("k"))
 }
 
 fn spmm_params(with_block_starts: bool) -> Vec<Param> {
@@ -86,202 +247,154 @@ fn nnz_total() -> Val {
     Val::load("A2_pos", Val::param("A1_dimension"))
 }
 
+// ---------------------------------------------------------------------------
+// family emitters
+// ---------------------------------------------------------------------------
+
 /// Listing 6 / Listing 2: `{<1 nnz, c col>, r}` with segment reduction.
 ///
 /// Layout: `nnzb = p / (N/c)` non-zeros per block; thread covers
 /// `(ko, fpos1)` with `fpos1 = tid % nnzb` (consecutive lanes own
 /// consecutive non-zeros, so an r-lane group sees a contiguous nnz range —
 /// the precondition for segmented scan).
-fn lower_nnz_group(n: u32, c: u32, p: u32, r: u32) -> Kernel {
+fn lower_nnz_group(n: u32, c: u32, p: u32, plan: &ReductionPlan) -> Kernel {
     let kchunks = (n / c) as i64;
     let nnzb = p as i64 / kchunks;
-    let body = vec![
-        Stmt::Comment(format!("{{<1 nnz, {c} col>, {r}}} — grouped segment reduction")),
-        Stmt::Decl { var: "fpos1".into(), init: Val::rem(Val::ThreadIdx, i(nnzb)), float: false },
-        Stmt::Decl { var: "ko".into(), init: Val::div(Val::ThreadIdx, i(nnzb)), float: false },
-        Stmt::Decl {
-            var: "fposA".into(),
-            init: Val::add(Val::mul(Val::BlockIdx, i(nnzb)), Val::var("fpos1")),
-            float: false,
-        },
-        Stmt::Decl { var: "pA2_begin".into(), init: Val::load("i_blockStarts", Val::BlockIdx), float: false },
-        Stmt::Decl {
-            var: "pA2_end".into(),
-            init: Val::load("i_blockStarts", Val::add(Val::BlockIdx, i(1))),
-            float: false,
-        },
-        Stmt::Decl {
-            var: "i_pos".into(),
-            init: Val::BinarySearchBefore {
-                array: "A2_pos".into(),
-                lo: Box::new(Val::var("pA2_begin")),
-                hi: Box::new(Val::var("pA2_end")),
-                target: Box::new(Val::var("fposA")),
+    let r = plan.group;
+    let mut body = vec![Stmt::Comment(format!(
+        "{{<1 nnz, {c} col>, {r}}} — grouped segment reduction"
+    ))];
+    body.extend(tile_decomp("fpos1", "ko", nnzb));
+    body.push(Stmt::Decl {
+        var: "fposA".into(),
+        init: Val::add(Val::mul(Val::BlockIdx, i(nnzb)), Val::var("fpos1")),
+        float: false,
+    });
+    body.extend(block_window());
+    body.push(row_search("i_pos", "fposA"));
+    body.push(Stmt::Decl { var: "i".into(), init: Val::var("i_pos"), float: false });
+    body.push(coarsen_loop(
+        c,
+        vec![
+            col_index(c),
+            // relaxed scalar workspace: declared here, assigned in the
+            // else branch below (§5.3)
+            Stmt::Decl { var: "val".into(), init: Val::ConstF(0.0), float: true },
+            Stmt::If {
+                // zero extension (§5.2): out-of-bound lanes keep val = 0
+                // (and skip the row advance — exactly Listing 2's shape)
+                cond: Val::ge(Val::var("fposA"), nnz_total()),
+                then: vec![Stmt::Assign { var: "val".into(), val: Val::ConstF(0.0) }],
+                els: vec![
+                    Stmt::Decl {
+                        var: "f".into(),
+                        init: Val::load("A2_crd", Val::var("fposA")),
+                        float: false,
+                    },
+                    Stmt::Decl {
+                        var: "kB".into(),
+                        init: Val::add(
+                            Val::mul(Val::var("f"), Val::param("B2_dimension")),
+                            Val::var("k"),
+                        ),
+                        float: false,
+                    },
+                    // row advance: skip row starts equal to fposA
+                    // (handles empty rows; idempotent across ki)
+                    row_boundary_scan(
+                        "i_pos",
+                        "fposA",
+                        vec![
+                            Stmt::Assign {
+                                var: "i_pos".into(),
+                                val: Val::add(Val::var("i_pos"), i(1)),
+                            },
+                            Stmt::Assign { var: "i".into(), val: Val::var("i_pos") },
+                        ],
+                    ),
+                    Stmt::Assign {
+                        var: "val".into(),
+                        val: Val::mul(
+                            Val::load("A_vals", Val::var("fposA")),
+                            Val::load("B_vals", Val::var("kB")),
+                        ),
+                    },
+                ],
             },
-            float: false,
-        },
-        Stmt::Decl { var: "i".into(), init: Val::var("i_pos"), float: false },
-        Stmt::For {
-            var: "ki".into(),
-            lo: i(0),
-            hi: i(c as i64),
-            step: i(1),
-            body: vec![
-                Stmt::Decl {
-                    var: "k".into(),
-                    init: Val::add(Val::mul(Val::var("ko"), i(c as i64)), Val::var("ki")),
-                    float: false,
-                },
-                // relaxed scalar workspace: declared here, assigned in the
-                // else branch below (§5.3)
-                Stmt::Decl { var: "val".into(), init: Val::ConstF(0.0), float: true },
-                Stmt::If {
-                    // zero extension (§5.2): out-of-bound lanes keep val = 0
-                    // (and skip the row advance — exactly Listing 2's shape)
-                    cond: Val::ge(Val::var("fposA"), nnz_total()),
-                    then: vec![Stmt::Assign { var: "val".into(), val: Val::ConstF(0.0) }],
-                    els: vec![
-                        Stmt::Decl { var: "f".into(), init: Val::load("A2_crd", Val::var("fposA")), float: false },
-                        Stmt::Decl {
-                            var: "kB".into(),
-                            init: Val::add(Val::mul(Val::var("f"), Val::param("B2_dimension")), Val::var("k")),
-                            float: false,
-                        },
-                        // row advance: skip row starts equal to fposA
-                        // (handles empty rows; idempotent across ki)
-                        Stmt::While {
-                            cond: Val::eq(
-                                Val::var("fposA"),
-                                Val::load("A2_pos", Val::add(Val::var("i_pos"), i(1))),
-                            ),
-                            body: vec![
-                                Stmt::Assign { var: "i_pos".into(), val: Val::add(Val::var("i_pos"), i(1)) },
-                                Stmt::Assign { var: "i".into(), val: Val::var("i_pos") },
-                            ],
-                        },
-                        Stmt::Assign {
-                            var: "val".into(),
-                            val: Val::mul(Val::load("A_vals", Val::var("fposA")), Val::load("B_vals", Val::var("kB"))),
-                        },
-                    ],
-                },
-                Stmt::Decl {
-                    var: "kC".into(),
-                    init: Val::add(Val::mul(Val::var("i"), Val::param("B2_dimension")), Val::var("k")),
-                    float: false,
-                },
-                Stmt::SegReduceGroup { array: "C_vals".into(), idx: Val::var("kC"), val: Val::var("val"), group: r },
-            ],
-        },
-    ];
-    Kernel { name: format!("spmm_nnz_group_c{c}_r{r}"), params: spmm_params(true), body, block_dim: p }
+            Stmt::Decl { var: "kC".into(), init: c_index("i"), float: false },
+            emit_reduction(plan, "C_vals", Val::var("kC"), Val::var("val")),
+        ],
+    ));
+    Kernel {
+        name: format!("spmm_nnz_group_c{c}_r{r}"),
+        params: spmm_params(true),
+        body,
+        block_dim: p,
+    }
 }
 
 /// Listing 3 / Listing 1: `{<g nnz, c col>, 1}` — serial accumulation over
 /// `g` consecutive non-zeros per thread, `atomicAdd` at row boundaries.
-fn lower_nnz_serial(n: u32, c: u32, p: u32, g: u32) -> Kernel {
+fn lower_nnz_serial(n: u32, c: u32, p: u32, g: u32, plan: &ReductionPlan) -> Kernel {
     let kchunks = (n / c) as i64;
     let nnzt = p as i64 / kchunks; // nnz-owning threads per block
     let g = g as i64;
-    let flush = |ip: &str, k: &str| Stmt::AtomicAdd {
-        array: "C_vals".into(),
-        idx: Val::add(Val::mul(Val::var(ip), Val::param("B2_dimension")), Val::var(k)),
-        val: Val::var("val"),
-    };
-    let body = vec![
-        Stmt::Comment(format!("{{<{g} nnz, {c} col>, 1}} — serial reduction (stock TACO)")),
-        Stmt::Decl { var: "fpos1".into(), init: Val::rem(Val::ThreadIdx, i(nnzt)), float: false },
-        Stmt::Decl { var: "ko".into(), init: Val::div(Val::ThreadIdx, i(nnzt)), float: false },
-        Stmt::Decl {
-            var: "fposStart".into(),
-            init: Val::add(
-                Val::mul(Val::BlockIdx, i(g * nnzt)),
-                Val::mul(Val::var("fpos1"), i(g)),
-            ),
-            float: false,
-        },
-        Stmt::Decl { var: "pA2_begin".into(), init: Val::load("i_blockStarts", Val::BlockIdx), float: false },
-        Stmt::Decl {
-            var: "pA2_end".into(),
-            init: Val::load("i_blockStarts", Val::add(Val::BlockIdx, i(1))),
-            float: false,
-        },
-        Stmt::Decl {
-            var: "i_pos0".into(),
-            init: Val::BinarySearchBefore {
-                array: "A2_pos".into(),
-                lo: Box::new(Val::var("pA2_begin")),
-                hi: Box::new(Val::var("pA2_end")),
-                target: Box::new(Val::var("fposStart")),
+    let flush = |ip: &str| emit_reduction(plan, "C_vals", c_index(ip), Val::var("val"));
+    let mut body = vec![Stmt::Comment(format!(
+        "{{<{g} nnz, {c} col>, 1}} — serial reduction (stock TACO)"
+    ))];
+    body.extend(tile_decomp("fpos1", "ko", nnzt));
+    body.push(Stmt::Decl {
+        var: "fposStart".into(),
+        init: Val::add(
+            Val::mul(Val::BlockIdx, i(g * nnzt)),
+            Val::mul(Val::var("fpos1"), i(g)),
+        ),
+        float: false,
+    });
+    body.extend(block_window());
+    body.push(row_search("i_pos0", "fposStart"));
+    body.push(coarsen_loop(
+        c,
+        vec![
+            col_index(c),
+            Stmt::Decl { var: "i_pos".into(), init: Val::var("i_pos0"), float: false },
+            Stmt::Decl { var: "val".into(), init: Val::ConstF(0.0), float: true },
+            Stmt::For {
+                var: "fi".into(),
+                lo: i(0),
+                hi: i(g),
+                step: i(1),
+                body: vec![
+                    Stmt::Decl {
+                        var: "fposA".into(),
+                        init: Val::add(Val::var("fposStart"), Val::var("fi")),
+                        float: false,
+                    },
+                    Stmt::If {
+                        cond: Val::ge(Val::var("fposA"), nnz_total()),
+                        then: vec![Stmt::Break],
+                        els: vec![],
+                    },
+                    // flush accumulated value at each row boundary
+                    row_boundary_scan(
+                        "i_pos",
+                        "fposA",
+                        vec![
+                            flush("i_pos"),
+                            Stmt::Assign { var: "val".into(), val: Val::ConstF(0.0) },
+                            Stmt::Assign {
+                                var: "i_pos".into(),
+                                val: Val::add(Val::var("i_pos"), i(1)),
+                            },
+                        ],
+                    ),
+                    accumulate("val", spmm_product(Val::var("fposA"))),
+                ],
             },
-            float: false,
-        },
-        Stmt::For {
-            var: "ki".into(),
-            lo: i(0),
-            hi: i(c as i64),
-            step: i(1),
-            body: vec![
-                Stmt::Decl {
-                    var: "k".into(),
-                    init: Val::add(Val::mul(Val::var("ko"), i(c as i64)), Val::var("ki")),
-                    float: false,
-                },
-                Stmt::Decl { var: "i_pos".into(), init: Val::var("i_pos0"), float: false },
-                Stmt::Decl { var: "val".into(), init: Val::ConstF(0.0), float: true },
-                Stmt::For {
-                    var: "fi".into(),
-                    lo: i(0),
-                    hi: i(g),
-                    step: i(1),
-                    body: vec![
-                        Stmt::Decl {
-                            var: "fposA".into(),
-                            init: Val::add(Val::var("fposStart"), Val::var("fi")),
-                            float: false,
-                        },
-                        Stmt::If {
-                            cond: Val::ge(Val::var("fposA"), nnz_total()),
-                            then: vec![Stmt::Break],
-                            els: vec![],
-                        },
-                        // flush accumulated value at each row boundary
-                        Stmt::While {
-                            cond: Val::eq(
-                                Val::var("fposA"),
-                                Val::load("A2_pos", Val::add(Val::var("i_pos"), i(1))),
-                            ),
-                            body: vec![
-                                flush("i_pos", "k"),
-                                Stmt::Assign { var: "val".into(), val: Val::ConstF(0.0) },
-                                Stmt::Assign { var: "i_pos".into(), val: Val::add(Val::var("i_pos"), i(1)) },
-                            ],
-                        },
-                        Stmt::Assign {
-                            var: "val".into(),
-                            val: Val::add(
-                                Val::var("val"),
-                                Val::mul(
-                                    Val::load("A_vals", Val::var("fposA")),
-                                    Val::load(
-                                        "B_vals",
-                                        Val::add(
-                                            Val::mul(
-                                                Val::load("A2_crd", Val::var("fposA")),
-                                                Val::param("B2_dimension"),
-                                            ),
-                                            Val::var("k"),
-                                        ),
-                                    ),
-                                ),
-                            ),
-                        },
-                    ],
-                },
-                flush("i_pos", "k"),
-            ],
-        },
-    ];
+            flush("i_pos"),
+        ],
+    ));
     Kernel {
         name: format!("spmm_nnz_serial_g{g}_c{c}"),
         params: spmm_params(true),
@@ -292,86 +405,62 @@ fn lower_nnz_serial(n: u32, c: u32, p: u32, g: u32) -> Kernel {
 
 /// Listing 4: `{<x row, c col>, 1}` — one thread per row (×x), serial over
 /// the row's non-zeros, plain store (no races).
-fn lower_row_serial(n: u32, c: u32, p: u32, x: u32) -> Kernel {
+fn lower_row_serial(n: u32, c: u32, p: u32, x: u32, plan: &ReductionPlan) -> Kernel {
     let kchunks = (n / c) as i64;
     let rowt = p as i64 / kchunks; // row-owning thread slots per block
-    let body = vec![
-        Stmt::Comment(format!("{{<{x} row, {c} col>, 1}} — row split, serial reduction (stock TACO)")),
-        Stmt::Decl { var: "rowslot".into(), init: Val::rem(Val::ThreadIdx, i(rowt)), float: false },
-        Stmt::Decl { var: "ko".into(), init: Val::div(Val::ThreadIdx, i(rowt)), float: false },
-        Stmt::For {
-            var: "xi".into(),
-            lo: i(0),
-            hi: i(x as i64),
-            step: i(1),
-            body: vec![
-                Stmt::Decl {
-                    var: "i".into(),
-                    init: Val::add(
-                        Val::mul(Val::BlockIdx, i(x as i64 * rowt)),
-                        Val::add(Val::mul(Val::var("xi"), i(rowt)), Val::var("rowslot")),
-                    ),
-                    float: false,
-                },
-                Stmt::If {
-                    cond: Val::lt(Val::var("i"), Val::param("A1_dimension")),
-                    then: vec![Stmt::For {
-                        var: "ki".into(),
-                        lo: i(0),
-                        hi: i(c as i64),
-                        step: i(1),
-                        body: vec![
-                            Stmt::Decl {
-                                var: "k".into(),
-                                init: Val::add(Val::mul(Val::var("ko"), i(c as i64)), Val::var("ki")),
-                                float: false,
-                            },
-                            Stmt::Decl { var: "val".into(), init: Val::ConstF(0.0), float: true },
-                            Stmt::For {
-                                var: "jj".into(),
-                                lo: Val::load("A2_pos", Val::var("i")),
-                                hi: Val::load("A2_pos", Val::add(Val::var("i"), i(1))),
-                                step: i(1),
-                                body: vec![Stmt::Assign {
-                                    var: "val".into(),
-                                    val: Val::add(
-                                        Val::var("val"),
-                                        Val::mul(
-                                            Val::load("A_vals", Val::var("jj")),
-                                            Val::load(
-                                                "B_vals",
-                                                Val::add(
-                                                    Val::mul(
-                                                        Val::load("A2_crd", Val::var("jj")),
-                                                        Val::param("B2_dimension"),
-                                                    ),
-                                                    Val::var("k"),
-                                                ),
-                                            ),
-                                        ),
-                                    ),
-                                }],
-                            },
-                            Stmt::Store {
-                                array: "C_vals".into(),
-                                idx: Val::add(Val::mul(Val::var("i"), Val::param("B2_dimension")), Val::var("k")),
-                                val: Val::var("val"),
-                            },
-                        ],
-                    }],
-                    els: vec![],
-                },
-            ],
-        },
-    ];
-    Kernel { name: format!("spmm_row_serial_x{x}_c{c}"), params: spmm_params(false), body, block_dim: p }
+    let mut body = vec![Stmt::Comment(format!(
+        "{{<{x} row, {c} col>, 1}} — row split, serial reduction (stock TACO)"
+    ))];
+    body.extend(tile_decomp("rowslot", "ko", rowt));
+    body.push(Stmt::For {
+        var: "xi".into(),
+        lo: i(0),
+        hi: i(x as i64),
+        step: i(1),
+        body: vec![
+            Stmt::Decl {
+                var: "i".into(),
+                init: Val::add(
+                    Val::mul(Val::BlockIdx, i(x as i64 * rowt)),
+                    Val::add(Val::mul(Val::var("xi"), i(rowt)), Val::var("rowslot")),
+                ),
+                float: false,
+            },
+            Stmt::If {
+                cond: Val::lt(Val::var("i"), Val::param("A1_dimension")),
+                then: vec![coarsen_loop(
+                    c,
+                    vec![
+                        col_index(c),
+                        Stmt::Decl { var: "val".into(), init: Val::ConstF(0.0), float: true },
+                        Stmt::For {
+                            var: "jj".into(),
+                            lo: Val::load("A2_pos", Val::var("i")),
+                            hi: Val::load("A2_pos", Val::add(Val::var("i"), i(1))),
+                            step: i(1),
+                            body: vec![accumulate("val", spmm_product(Val::var("jj")))],
+                        },
+                        emit_reduction(plan, "C_vals", c_index("i"), Val::var("val")),
+                    ],
+                )],
+                els: vec![],
+            },
+        ],
+    });
+    Kernel {
+        name: format!("spmm_row_serial_x{x}_c{c}"),
+        params: spmm_params(false),
+        body,
+        block_dim: p,
+    }
 }
 
 /// Listing 5: `{<1/g row, c col>, r}` — `g` threads cooperate per row,
 /// grouped parallel reduction with `atomicAddGroup<float, r>`.
-fn lower_row_group(n: u32, c: u32, p: u32, g: u32, r: u32) -> Kernel {
+fn lower_row_group(n: u32, c: u32, p: u32, g: u32, plan: &ReductionPlan) -> Kernel {
     let kchunks = (n / c) as i64;
     let g64 = g as i64;
+    let r = plan.group;
     let rpb = p as i64 / (g64 * kchunks); // rows per block
     assert!(rpb >= 1, "p too small for g and N/c");
     let body = vec![
@@ -394,56 +483,25 @@ fn lower_row_group(n: u32, c: u32, p: u32, g: u32, r: u32) -> Kernel {
         },
         Stmt::If {
             cond: Val::lt(Val::var("i"), Val::param("A1_dimension")),
-            then: vec![Stmt::For {
-                var: "ki".into(),
-                lo: i(0),
-                hi: i(c as i64),
-                step: i(1),
-                body: vec![
-                    Stmt::Decl {
-                        var: "k".into(),
-                        init: Val::add(Val::mul(Val::var("ko"), i(c as i64)), Val::var("ki")),
-                        float: false,
-                    },
+            then: vec![coarsen_loop(
+                c,
+                vec![
+                    col_index(c),
                     Stmt::Decl { var: "tjpos1C".into(), init: Val::ConstF(0.0), float: true },
                     Stmt::Decl {
                         var: "jpos".into(),
                         init: Val::add(Val::load("A2_pos", Val::var("i")), Val::var("jpos1")),
                         float: false,
                     },
-                    Stmt::While {
-                        cond: Val::lt(Val::var("jpos"), Val::load("A2_pos", Val::add(Val::var("i"), i(1)))),
-                        body: vec![
-                            Stmt::Assign {
-                                var: "tjpos1C".into(),
-                                val: Val::add(
-                                    Val::var("tjpos1C"),
-                                    Val::mul(
-                                        Val::load("A_vals", Val::var("jpos")),
-                                        Val::load(
-                                            "B_vals",
-                                            Val::add(
-                                                Val::mul(
-                                                    Val::load("A2_crd", Val::var("jpos")),
-                                                    Val::param("B2_dimension"),
-                                                ),
-                                                Val::var("k"),
-                                            ),
-                                        ),
-                                    ),
-                                ),
-                            },
-                            Stmt::Assign { var: "jpos".into(), val: Val::add(Val::var("jpos"), i(g64)) },
-                        ],
-                    },
-                    Stmt::AtomicAddGroup {
-                        array: "C_vals".into(),
-                        idx: Val::add(Val::mul(Val::var("i"), Val::param("B2_dimension")), Val::var("k")),
-                        val: Val::var("tjpos1C"),
-                        group: r,
-                    },
+                    strided_row_dot(
+                        "tjpos1C",
+                        "jpos",
+                        Val::load("A2_pos", Val::add(Val::var("i"), i(1))),
+                        g64,
+                    ),
+                    emit_reduction(plan, "C_vals", c_index("i"), Val::var("tjpos1C")),
                 ],
-            }],
+            )],
             els: vec![],
         },
     ];
@@ -452,6 +510,211 @@ fn lower_row_group(n: u32, c: u32, p: u32, g: u32, r: u32) -> Kernel {
         params: spmm_params(false),
         body,
         block_dim: p,
+    }
+}
+
+/// §4.3 SDDMM `{<1/g nnz>, r}` — grouped dot-product reduction.
+///
+/// `g` lanes cooperate on one non-zero; each lane strides the dense `j`
+/// dimension by `g`; the plan's grouped reduction combines the partial
+/// dot products (one output slot per nnz, group-uniform index).
+///
+/// Buffers: `A2_pos/A2_crd/A_vals` (CSR), `A_rowidx` (COO row per nnz),
+/// `X1_vals`, `X2_vals`, `Y_vals` (one slot per nnz); scalars
+/// `A1_dimension` (rows), `A2_dimension` (cols), `J_dimension`, `A_nnz`.
+fn lower_sddmm_group(cfg: &SddmmConfig, plan: &ReductionPlan) -> Kernel {
+    let g = cfg.g as i64;
+    let npb = cfg.npb() as i64;
+    let mut body = vec![Stmt::Comment(format!(
+        "sddmm {{<1/{g} nnz>, {}}} — grouped dot-product reduction",
+        plan.group
+    ))];
+    body.extend(tile_decomp("lane", "e", g));
+    body.push(Stmt::Decl {
+        var: "pos".into(),
+        init: Val::add(Val::mul(Val::BlockIdx, i(npb)), Val::var("e")),
+        float: false,
+    });
+    body.push(Stmt::If {
+        cond: Val::lt(Val::var("pos"), Val::param("A_nnz")),
+        then: vec![
+            Stmt::Decl { var: "i".into(), init: Val::load("A_rowidx", Val::var("pos")), float: false },
+            Stmt::Decl { var: "k".into(), init: Val::load("A2_crd", Val::var("pos")), float: false },
+            Stmt::Decl { var: "val".into(), init: Val::ConstF(0.0), float: true },
+            Stmt::Decl { var: "j".into(), init: Val::var("lane"), float: false },
+            Stmt::While {
+                cond: Val::lt(Val::var("j"), Val::param("J_dimension")),
+                body: vec![
+                    accumulate(
+                        "val",
+                        Val::mul(
+                            Val::load(
+                                "X1_vals",
+                                Val::add(
+                                    Val::mul(Val::var("i"), Val::param("J_dimension")),
+                                    Val::var("j"),
+                                ),
+                            ),
+                            Val::load(
+                                "X2_vals",
+                                Val::add(
+                                    Val::mul(Val::var("j"), Val::param("A2_dimension")),
+                                    Val::var("k"),
+                                ),
+                            ),
+                        ),
+                    ),
+                    Stmt::Assign { var: "j".into(), val: Val::add(Val::var("j"), i(g)) },
+                ],
+            },
+            // scale the partial by A's value up front (distributes over +)
+            Stmt::Assign {
+                var: "val".into(),
+                val: Val::mul(Val::var("val"), Val::load("A_vals", Val::var("pos"))),
+            },
+            // the same macro instruction as SpMM's row kernel (§4.3):
+            emit_reduction(plan, "Y_vals", Val::var("pos"), Val::var("val")),
+        ],
+        els: vec![],
+    });
+    Kernel {
+        name: format!("sddmm_g{}_r{}", cfg.g, plan.group),
+        params: vec![
+            Param::i32_array("A2_pos"),
+            Param::i32_array("A2_crd"),
+            Param::i32_array("A_rowidx"),
+            Param::f32_array("A_vals"),
+            Param::f32_array("X1_vals"),
+            Param::f32_array("X2_vals"),
+            Param::f32_array("Y_vals"),
+            Param::i32_scalar("A1_dimension"),
+            Param::i32_scalar("A2_dimension"),
+            Param::i32_scalar("J_dimension"),
+            Param::i32_scalar("A_nnz"),
+        ],
+        body,
+        block_dim: cfg.p,
+    }
+}
+
+/// dgSPARSE RB+PR+RM — the row-balanced/partial-result shape.
+///
+/// Thread decomposition (within a block of `blockSz` threads):
+/// `lane = tid % workerSz`, `vcol = (tid / workerSz) % vcols`,
+/// `rowb = tid / blockDim.x`. Block decomposition:
+/// `col_block = blockIdx % colTiles`, `row_block = blockIdx / colTiles`.
+/// Each worker strides its rows by the launch-bound `workerDimR` scalar
+/// (RB = row balance) and its nnz by `workerSz`; writeback is the plan's
+/// grouped parallel reduction of width `groupSz` (PR); B/C are row-major
+/// (RM).
+fn lower_dg_row_balanced(cfg: &DgConfig, plan: &ReductionPlan) -> Kernel {
+    let vcols = cfg.vcols() as i64;
+    let worker_sz = cfg.worker_sz as i64;
+    let rpb = cfg.rows_per_block() as i64;
+    let col_tiles = cfg.col_tiles() as i64;
+    let coarsen = cfg.coarsen_sz as i64;
+    let tile = cfg.tile_sz as i64;
+
+    let mut body = vec![Stmt::Comment(format!(
+        "dgSPARSE RB+PR+RM <groupSz={}, blockSz={}, tileSz={}, workerDimR={}x rows>",
+        plan.group, cfg.block_sz, cfg.tile_sz, cfg.worker_dim_r_frac
+    ))];
+    body.push(Stmt::Decl {
+        var: "lane".into(),
+        init: Val::rem(Val::ThreadIdx, i(worker_sz)),
+        float: false,
+    });
+    body.push(Stmt::Decl {
+        var: "vcol".into(),
+        init: Val::rem(Val::div(Val::ThreadIdx, i(worker_sz)), i(vcols)),
+        float: false,
+    });
+    body.push(Stmt::Decl {
+        var: "rowb".into(),
+        init: Val::div(Val::ThreadIdx, i(worker_sz * vcols)),
+        float: false,
+    });
+    body.push(Stmt::Decl {
+        var: "col_block".into(),
+        init: Val::rem(Val::BlockIdx, i(col_tiles)),
+        float: false,
+    });
+    body.push(Stmt::Decl {
+        var: "row_block".into(),
+        init: Val::div(Val::BlockIdx, i(col_tiles)),
+        float: false,
+    });
+    body.push(Stmt::Decl {
+        var: "i".into(),
+        init: Val::add(Val::mul(Val::var("row_block"), i(rpb)), Val::var("rowb")),
+        float: false,
+    });
+    // RB: loop rows with stride workerDimR until exhausted
+    body.push(Stmt::While {
+        cond: Val::lt(Val::var("i"), Val::param("A1_dimension")),
+        body: vec![
+            Stmt::For {
+                var: "cc".into(),
+                lo: i(0),
+                hi: i(coarsen),
+                step: i(1),
+                body: vec![
+                    Stmt::Decl {
+                        var: "k".into(),
+                        init: Val::add(
+                            Val::mul(Val::var("col_block"), i(tile)),
+                            Val::add(Val::mul(Val::var("vcol"), i(coarsen)), Val::var("cc")),
+                        ),
+                        float: false,
+                    },
+                    Stmt::If {
+                        cond: Val::lt(Val::var("k"), Val::param("B2_dimension")),
+                        then: vec![
+                            Stmt::Decl { var: "val".into(), init: Val::ConstF(0.0), float: true },
+                            Stmt::Decl {
+                                var: "jpos".into(),
+                                init: Val::add(
+                                    Val::load("A2_pos", Val::var("i")),
+                                    Val::var("lane"),
+                                ),
+                                float: false,
+                            },
+                            strided_row_dot(
+                                "val",
+                                "jpos",
+                                Val::load("A2_pos", Val::add(Val::var("i"), i(1))),
+                                worker_sz,
+                            ),
+                            emit_reduction(plan, "C_vals", c_index("i"), Val::var("val")),
+                        ],
+                        els: vec![],
+                    },
+                ],
+            },
+            Stmt::Assign {
+                var: "i".into(),
+                val: Val::add(Val::var("i"), Val::param("workerDimR")),
+            },
+        ],
+    });
+
+    // encode the fraction's decimal point as `p` (0.5 → 0p5): the kernel
+    // name becomes a C identifier in the emitted `__global__` signature
+    let frac = cfg.worker_dim_r_frac.to_string().replace('.', "p");
+    Kernel {
+        name: format!("dg_rb_pr_rm_g{}_b{}_t{}_w{frac}", plan.group, cfg.block_sz, cfg.tile_sz),
+        params: vec![
+            Param::i32_array("A2_pos"),
+            Param::i32_array("A2_crd"),
+            Param::f32_array("A_vals"),
+            Param::f32_array("B_vals"),
+            Param::f32_array("C_vals"),
+            Param::i32_scalar("A1_dimension"),
+            Param::i32_scalar("B2_dimension"),
+            Param::i32_scalar("workerDimR"),
+        ],
+        body,
+        block_dim: cfg.block_sz,
     }
 }
 
@@ -470,6 +733,8 @@ mod tests {
         lower(&Schedule::taco_row_serial(cfg())).unwrap();
         lower(&Schedule::sgap_row_group(cfg(), 8)).unwrap();
         lower(&Schedule::sgap_nnz_group(cfg(), 32)).unwrap();
+        lower(&Schedule::sddmm_group(SddmmConfig::new(64, 16, 8))).unwrap();
+        lower(&Schedule::dgsparse_rb_pr(DgConfig::stock(16))).unwrap();
     }
 
     #[test]
@@ -522,5 +787,77 @@ mod tests {
         let mut c = cfg();
         c.c = 3; // does not divide N=4
         assert!(lower(&Schedule::taco_row_serial(c)).is_err());
+    }
+
+    #[test]
+    fn sddmm_lowers_through_the_shared_emitter() {
+        let k = lower(&Schedule::sddmm_group(SddmmConfig::new(64, 32, 8))).unwrap();
+        assert_eq!(k.name, "sddmm_g32_r8");
+        assert_eq!(k.count_matching(|s| matches!(s, Stmt::AtomicAddGroup { group: 8, .. })), 1);
+        assert_eq!(k.count_matching(|s| matches!(s, Stmt::SegReduceGroup { .. })), 0);
+        assert_eq!(k.block_dim, 256);
+    }
+
+    #[test]
+    fn dgsparse_lowers_with_row_balanced_strategy() {
+        let dg = DgConfig { group_sz: 8, tile_sz: 8, ..DgConfig::stock(16) };
+        let k = lower(&Schedule::dgsparse_rb_pr(dg)).unwrap();
+        assert_eq!(k.count_matching(|s| matches!(s, Stmt::AtomicAddGroup { group: 8, .. })), 1);
+        // the row-balance loop strides by the launch-bound workerDimR param
+        let strided = k.count_matching(|s| {
+            matches!(s, Stmt::Assign { var, val }
+                if var == "i"
+                    && matches!(val, Val::Bin(_, _, b) if **b == Val::Param("workerDimR".into())))
+        });
+        assert_eq!(strided, 1, "workerDimR stride missing");
+        assert!(k.params.iter().any(|p| p.name == "workerDimR"));
+    }
+
+    #[test]
+    fn custom_strategy_reaches_every_family_through_the_plan() {
+        // a user-defined strategy only has to name its writeback; the
+        // shared emitter routes it without family-specific code
+        use crate::compiler::cin::{GroupSpec, ReductionStrategy, Writeback};
+        let spec = GroupSpec::new(
+            4,
+            ReductionStrategy::Custom { name: "userSeg", writeback: Writeback::SegmentBoundary },
+        );
+        let stmt = emit_reduction(&spec.plan(), "C_vals", Val::var("kC"), Val::var("val"));
+        assert!(matches!(stmt, Stmt::SegReduceGroup { group: 4, .. }));
+    }
+
+    /// A user-defined strategy lowers through the *whole* pipeline —
+    /// classification routes it by writeback, no emitter edits needed.
+    #[test]
+    fn custom_strategy_lowers_end_to_end() {
+        use crate::compiler::cin::{ReductionStrategy, Writeback};
+        use crate::compiler::schedule::ScheduleCmd;
+        let swap_strategy = |sched: &mut Schedule, strategy: ReductionStrategy| {
+            for cmd in &mut sched.cmds {
+                if let ScheduleCmd::ParallelizeGroup { spec, .. } = cmd {
+                    spec.strategy = strategy;
+                }
+            }
+        };
+
+        let mut sddmm = Schedule::sddmm_group(SddmmConfig::new(64, 16, 8));
+        swap_strategy(
+            &mut sddmm,
+            ReductionStrategy::Custom { name: "userLane", writeback: Writeback::LaneZeroAtomic },
+        );
+        assert_eq!(sddmm.classify().unwrap(), Family::SddmmGroup);
+        let k = lower(&sddmm).unwrap();
+        assert_eq!(k.count_matching(|s| matches!(s, Stmt::AtomicAddGroup { group: 8, .. })), 1);
+
+        // an SpMM schedule with a custom segment-boundary strategy routes
+        // to the nnz-group family purely by its writeback
+        let mut spmm = Schedule::sgap_nnz_group(SpmmConfig::default(), 16);
+        swap_strategy(
+            &mut spmm,
+            ReductionStrategy::Custom { name: "userSeg", writeback: Writeback::SegmentBoundary },
+        );
+        assert_eq!(spmm.classify().unwrap(), Family::NnzGroup);
+        let k = lower(&spmm).unwrap();
+        assert_eq!(k.count_matching(|s| matches!(s, Stmt::SegReduceGroup { group: 16, .. })), 1);
     }
 }

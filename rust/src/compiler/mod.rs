@@ -26,9 +26,13 @@ pub mod lower;
 pub mod schedule;
 pub mod spaces;
 
-pub use cin::{Cin, GroupSpec, OutputRaceStrategy, ParallelUnit, ReductionStrategy};
+pub use cin::{
+    Cin, GroupSpec, OutputRaceStrategy, ParallelUnit, ReductionPlan, ReductionStrategy, Writeback,
+};
 pub use expr::{Access, Expr, IndexVar, LevelFormat, TensorAlgebra, TensorVar};
 pub use llir::{Kernel, LaunchConfig, Stmt, Val};
 pub use lower::{lower, LowerError};
-pub use schedule::{Schedule, ScheduleCmd};
+pub use schedule::{
+    DgConfig, Family, KernelConfig, Schedule, ScheduleCmd, SddmmConfig, SpmmConfig,
+};
 pub use spaces::{AtomicPoint, DataKind, Factor};

@@ -3,14 +3,24 @@
 //! [`GroupSpec`], and `GPUWarp` keeps only tiling semantics.
 //!
 //! A [`Schedule`] is an ordered command list applied to a tensor algebra
-//! statement. [`Schedule::to_cin`] produces the concrete index notation
-//! (the paper's Listings 3–6); [`Schedule::classify`] recognizes which of
-//! the four SpMM algorithm families the command list describes so the
-//! lowerer can emit the corresponding LLIR.
+//! statement, paired with the kernel-kind config ([`KernelConfig`]) whose
+//! tuning parameters the commands were instantiated from.
+//! [`Schedule::to_cin`] produces the concrete index notation (the paper's
+//! Listings 3–6 and the §4.3 generalizations); [`Schedule::classify`]
+//! recognizes which algorithm [`Family`] the command list describes, and
+//! [`Schedule::reduction_plan`] extracts the [`ReductionPlan`] the
+//! lowerer's family-agnostic emission pipeline consumes.
+//!
+//! Every kernel the catalog exposes — the four SpMM families, the grouped
+//! SDDMM of §4.3, and the dgSPARSE RB+PR library shape — is described
+//! here and lowered through [`crate::compiler::lower`]; there are no
+//! hand-assembled LLIR kernels outside the compiler.
 
 use std::fmt;
 
-use super::cin::{Cin, GroupSpec, OutputRaceStrategy, ParallelUnit, ReductionStrategy};
+use super::cin::{
+    Cin, GroupSpec, OutputRaceStrategy, ParallelUnit, ReductionPlan, ReductionStrategy, Writeback,
+};
 use super::expr::{Access, Expr, IndexVar};
 
 /// One scheduling command (subset of TACO's API used by the paper).
@@ -106,7 +116,184 @@ impl SpmmConfig {
     }
 }
 
-/// The four SpMM algorithm families of §6, identified from a command list.
+/// Tunable SDDMM configuration (§4.3): `Y = A ⊙ (X1 · X2)` with `g` lanes
+/// cooperating per non-zero over the dense `j` reduction, grouped tree
+/// reduction of width `r`, `p` threads per block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SddmmConfig {
+    pub j_dim: u32,
+    /// Lanes cooperating per non-zero (power of 2, ≤ 32).
+    pub g: u32,
+    /// Reduction parallelism (GroupSize), `r <= g`.
+    pub r: u32,
+    /// Threads per block.
+    pub p: u32,
+}
+
+impl SddmmConfig {
+    pub fn new(j_dim: u32, g: u32, r: u32) -> Self {
+        SddmmConfig { j_dim, g, r, p: 256 }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.g.is_power_of_two() || self.g > 32 {
+            return Err(format!("g={} must be a power of 2 <= 32", self.g));
+        }
+        if !self.r.is_power_of_two() || self.r > self.g {
+            return Err(format!("r={} must be a power of 2 <= g={}", self.r, self.g));
+        }
+        if self.p == 0 || self.p % self.g != 0 {
+            return Err(format!("p={} must be a positive multiple of g={}", self.p, self.g));
+        }
+        Ok(())
+    }
+
+    /// Non-zeros per block. (The `.max(1)` keeps schedule construction
+    /// total for configs `validate()` rejects, e.g. `g = 0`.)
+    pub fn npb(&self) -> u32 {
+        self.p / self.g.max(1)
+    }
+}
+
+/// One point in the dgSPARSE tuning space (§7.2): a block processes
+/// `tile_sz` real columns; `worker_sz` threads process one vectorized
+/// column (of `coarsen_sz` real columns) of one sparse row; `group_sz`
+/// threads synchronize (the atomic-parallelism tuning axis);
+/// `worker_dim_r_frac` scales the total row parallelism — when it is less
+/// than the number of rows, each worker loops rows with that stride
+/// (row balance, the `RowBalancedPartial` strategy).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DgConfig {
+    pub n: u32,
+    pub group_sz: u32,
+    pub block_sz: u32,
+    pub tile_sz: u32,
+    /// Row parallelism as a fraction of #rows: `workerDimR = frac * rows`
+    /// (the paper tunes powers/reciprocal-powers of 2 of the original).
+    pub worker_dim_r_frac: f64,
+    pub worker_sz: u32,
+    pub coarsen_sz: u32,
+}
+
+impl DgConfig {
+    /// The library's default configuration for a given N (§7.2).
+    pub fn stock(n: u32) -> Self {
+        DgConfig {
+            n,
+            group_sz: 32,
+            block_sz: 256,
+            tile_sz: 32,
+            worker_dim_r_frac: 1.0,
+            worker_sz: 32,
+            coarsen_sz: if n % 4 == 0 {
+                4
+            } else if n % 2 == 0 {
+                2
+            } else {
+                1
+            },
+        }
+    }
+
+    /// Vectorized columns per block. (The `.max(1)` keeps schedule
+    /// construction total for configs `validate()` rejects.)
+    pub fn vcols(&self) -> u32 {
+        self.n.min(self.tile_sz) / self.coarsen_sz.max(1)
+    }
+
+    /// blockDim.x = min(N, tileSz)/coarsenSz * workerSz (§7.2).
+    pub fn block_dim_x(&self) -> u32 {
+        self.vcols() * self.worker_sz
+    }
+
+    pub fn rows_per_block(&self) -> u32 {
+        // the .max(1) on blockDim.x keeps schedule *construction* total
+        // for configs validate() rejects (e.g. coarsenSz > min(N, tileSz))
+        (self.block_sz / self.block_dim_x().max(1)).max(1)
+    }
+
+    pub fn col_tiles(&self) -> u32 {
+        self.n.div_ceil(self.tile_sz)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.group_sz.is_power_of_two() || self.group_sz > 32 {
+            return Err("groupSz must be a power of 2 <= 32".into());
+        }
+        if self.group_sz > self.worker_sz {
+            return Err("groupSz must be <= workerSz (a group must not straddle rows)".into());
+        }
+        if !self.tile_sz.is_power_of_two() || self.tile_sz < self.group_sz {
+            return Err("tileSz must be a power of 2 >= groupSz".into());
+        }
+        if self.coarsen_sz == 0 || self.n.min(self.tile_sz) % self.coarsen_sz != 0 {
+            return Err("coarsenSz must be >= 1 and divide min(N, tileSz)".into());
+        }
+        if self.block_dim_x() > self.block_sz {
+            return Err(format!(
+                "blockDim.x {} exceeds blockSz {}",
+                self.block_dim_x(),
+                self.block_sz
+            ));
+        }
+        if self.block_sz % self.block_dim_x().max(1) != 0 {
+            // trailing threads would compute rowb == rows_per_block and
+            // double-count the next block's first row
+            return Err(format!(
+                "blockSz {} must be a multiple of blockDim.x {}",
+                self.block_sz,
+                self.block_dim_x()
+            ));
+        }
+        if self.block_sz > 1024 {
+            return Err("blockSz must be <= 1024".into());
+        }
+        if self.worker_dim_r_frac <= 0.0 {
+            return Err("workerDimR fraction must be positive".into());
+        }
+        Ok(())
+    }
+
+    /// Total row-worker parallelism for a matrix with `rows` rows,
+    /// rounded **up to whole blocks** — the row-loop stride must equal the
+    /// number of actually-spawned workers or trailing workers would
+    /// double-count rows.
+    pub fn worker_dim_r(&self, rows: usize) -> u32 {
+        let rpb = self.rows_per_block();
+        let want = ((rows as f64 * self.worker_dim_r_frac).round() as u32).max(rpb);
+        want.div_ceil(rpb) * rpb
+    }
+
+    /// Launch grid: row blocks × column tiles.
+    pub fn grid(&self, rows: usize) -> u32 {
+        let row_blocks = self.worker_dim_r(rows) / self.rows_per_block();
+        row_blocks * self.col_tiles()
+    }
+}
+
+/// The kernel-kind payload of a [`Schedule`] — one compiled-plan
+/// vocabulary across SpMM, SDDMM, and the dgSPARSE library shape.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum KernelConfig {
+    Spmm(SpmmConfig),
+    Sddmm(SddmmConfig),
+    /// dgSPARSE RB+PR point; `workerDimR` is resolved at launch from the
+    /// matrix's row count and bound as a scalar kernel parameter.
+    Dg(DgConfig),
+}
+
+impl KernelConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        match self {
+            KernelConfig::Spmm(c) => c.validate(),
+            KernelConfig::Sddmm(c) => c.validate(),
+            KernelConfig::Dg(c) => c.validate(),
+        }
+    }
+}
+
+/// The algorithm families the lowerer emits: the four SpMM families of
+/// §6, the grouped SDDMM of §4.3, and the dgSPARSE RB+PR library shape.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Family {
     /// `{<g nnz, c col>, 1}` — Listing 3 (EB + serial reduction).
@@ -117,13 +304,18 @@ pub enum Family {
     RowGroup,
     /// `{<1 nnz, c col>, r}` — Listing 6 (EB + grouped segment reduction).
     NnzGroup,
+    /// SDDMM `{<1/g nnz>, r}` — §4.3's grouped dot-product reduction.
+    SddmmGroup,
+    /// dgSPARSE RB+PR+RM — row-balanced strided rows, grouped parallel
+    /// reduction with partial results per row visit.
+    DgRowBalanced,
 }
 
 /// A complete schedule: the commands plus resolved tuning parameters.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Schedule {
     pub cmds: Vec<ScheduleCmd>,
-    pub config: SpmmConfig,
+    pub config: KernelConfig,
 }
 
 impl Schedule {
@@ -146,7 +338,7 @@ impl Schedule {
                 ScheduleCmd::Parallelize { var: v("warp"), unit: ParallelUnit::GPUWarp, race: OutputRaceStrategy::NoRaces },
                 ScheduleCmd::Parallelize { var: v("fpos2"), unit: ParallelUnit::GPUThread, race: OutputRaceStrategy::Atomics },
             ],
-            config,
+            config: KernelConfig::Spmm(config),
         }
     }
 
@@ -163,7 +355,7 @@ impl Schedule {
                 ScheduleCmd::Parallelize { var: v("block"), unit: ParallelUnit::GPUBlock, race: OutputRaceStrategy::NoRaces },
                 ScheduleCmd::Parallelize { var: v("ii"), unit: ParallelUnit::GPUThread, race: OutputRaceStrategy::NoRaces },
             ],
-            config,
+            config: KernelConfig::Spmm(config),
         }
     }
 
@@ -188,7 +380,7 @@ impl Schedule {
                     race: OutputRaceStrategy::Atomics,
                 },
             ],
-            config,
+            config: KernelConfig::Spmm(config),
         }
     }
 
@@ -216,24 +408,122 @@ impl Schedule {
                     race: OutputRaceStrategy::Atomics,
                 },
             ],
-            config,
+            config: KernelConfig::Spmm(config),
+        }
+    }
+
+    /// §4.3 SDDMM `{<1/g nnz>, r}`: `g` lanes cooperate on one non-zero,
+    /// each striding the dense `j` reduction by `g`; a grouped tree
+    /// reduction of width `r` combines the partial dot products — the
+    /// *same* `atomicAddGroup` macro instruction as SpMM's row kernel,
+    /// demonstrating that segment group is not SpMM-specific.
+    pub fn sddmm_group(config: SddmmConfig) -> Schedule {
+        let v = |s: &str| IndexVar::new(s);
+        Schedule {
+            cmds: vec![
+                ScheduleCmd::Fuse { a: v("i"), b: v("k"), into: v("f") },
+                ScheduleCmd::Pos { var: v("f"), pos_var: v("fpos"), access: Access::new("A", &["i", "k"]) },
+                ScheduleCmd::Split { var: v("fpos"), outer: v("block"), inner: v("e"), factor: config.npb() },
+                ScheduleCmd::Split { var: v("j"), outer: v("jo"), inner: v("lane"), factor: config.g },
+                ScheduleCmd::Reorder { order: vec![v("block"), v("e"), v("lane"), v("jo")] },
+                ScheduleCmd::Parallelize { var: v("block"), unit: ParallelUnit::GPUBlock, race: OutputRaceStrategy::NoRaces },
+                ScheduleCmd::Parallelize { var: v("e"), unit: ParallelUnit::GPUThread, race: OutputRaceStrategy::NoRaces },
+                ScheduleCmd::ParallelizeGroup {
+                    var: v("lane"),
+                    // literal spec: invalid sizes are reported by
+                    // KernelConfig::validate at lowering, not asserted here
+                    spec: GroupSpec {
+                        size: config.r,
+                        strategy: ReductionStrategy::ParallelReduction,
+                    },
+                    race: OutputRaceStrategy::Atomics,
+                },
+            ],
+            config: KernelConfig::Sddmm(config),
+        }
+    }
+
+    /// dgSPARSE's RB+PR+RM kernel as a schedule: rows strided by
+    /// `workerDimR` (row balance), `worker_sz` lanes striding each row's
+    /// non-zeros, grouped parallel reduction writing a partial result per
+    /// row visit ([`ReductionStrategy::RowBalancedPartial`]).
+    pub fn dgsparse_rb_pr(config: DgConfig) -> Schedule {
+        let v = |s: &str| IndexVar::new(s);
+        Schedule {
+            cmds: vec![
+                ScheduleCmd::Split { var: v("i"), outer: v("row_block"), inner: v("rowb"), factor: config.rows_per_block() },
+                ScheduleCmd::Split { var: v("k"), outer: v("col_block"), inner: v("kt"), factor: config.tile_sz },
+                ScheduleCmd::Split { var: v("kt"), outer: v("vcol"), inner: v("cc"), factor: config.coarsen_sz },
+                ScheduleCmd::Pos { var: v("j"), pos_var: v("jpos"), access: Access::new("A", &["i", "j"]) },
+                ScheduleCmd::Split { var: v("jpos"), outer: v("jo"), inner: v("lane"), factor: config.worker_sz },
+                ScheduleCmd::Reorder { order: vec![v("row_block"), v("col_block"), v("rowb"), v("vcol"), v("cc"), v("lane"), v("jo")] },
+                ScheduleCmd::Parallelize { var: v("row_block"), unit: ParallelUnit::GPUBlock, race: OutputRaceStrategy::NoRaces },
+                ScheduleCmd::Parallelize { var: v("vcol"), unit: ParallelUnit::GPUWarp, race: OutputRaceStrategy::NoRaces },
+                ScheduleCmd::ParallelizeGroup {
+                    var: v("lane"),
+                    // literal spec: invalid sizes are reported by
+                    // KernelConfig::validate at lowering, not asserted here
+                    spec: GroupSpec {
+                        size: config.group_sz,
+                        strategy: ReductionStrategy::RowBalancedPartial,
+                    },
+                    race: OutputRaceStrategy::Atomics,
+                },
+            ],
+            config: KernelConfig::Dg(config),
         }
     }
 
     // ---- analysis --------------------------------------------------------
 
+    /// The SpMM tuning parameters, if this schedule describes one of the
+    /// four SpMM families.
+    pub fn spmm_config(&self) -> Option<SpmmConfig> {
+        match self.config {
+            KernelConfig::Spmm(c) => Some(c),
+            _ => None,
+        }
+    }
+
     /// Identify which algorithm family the command list describes.
     ///
     /// Stock TACO (before Sgap) rejects anything with `GPUGroup`; here it
-    /// is a first-class citizen. Unrecognized command shapes are an error
-    /// — the lowerer supports exactly the shapes the paper exercises.
+    /// is a first-class citizen. Grouped strategies classify by their
+    /// **writeback discipline**, so a user-defined
+    /// [`ReductionStrategy::Custom`] routes through the same families as
+    /// the built-ins — the pipeline needs no edits per strategy.
+    /// Unrecognized command shapes are an error — the lowerer supports
+    /// exactly the shapes the paper exercises.
     pub fn classify(&self) -> Result<Family, String> {
+        match self.config {
+            KernelConfig::Spmm(_) => self.classify_spmm(),
+            KernelConfig::Sddmm(_) => match self.group_cmd() {
+                // both grouped writebacks are sound here: an aligned
+                // r-subgroup sees one group-uniform output slot per nnz
+                Some(spec) if spec.strategy.writeback().is_grouped() => Ok(Family::SddmmGroup),
+                Some(spec) => Err(format!(
+                    "SDDMM's dense-j reduction needs a grouped writeback, got {}",
+                    spec.strategy.writeback()
+                )),
+                None => Err("SDDMM schedules require a GPUGroup parallelize".into()),
+            },
+            KernelConfig::Dg(_) => match self.group_cmd() {
+                Some(spec) if spec.strategy.writeback().is_grouped() => {
+                    Ok(Family::DgRowBalanced)
+                }
+                _ => Err("dgSPARSE schedules require a grouped GPUGroup reduction".into()),
+            },
+        }
+    }
+
+    fn classify_spmm(&self) -> Result<Family, String> {
         let has_pos = self.cmds.iter().any(|c| matches!(c, ScheduleCmd::Pos { .. }));
         let group = self.group_cmd();
         match (has_pos, group) {
-            (true, Some(spec)) => match spec.strategy {
-                ReductionStrategy::SegmentReduction => Ok(Family::NnzGroup),
-                ReductionStrategy::ParallelReduction => Ok(Family::RowGroup),
+            (true, Some(spec)) => match spec.strategy.writeback() {
+                Writeback::SegmentBoundary => Ok(Family::NnzGroup),
+                Writeback::LaneZeroAtomic => Ok(Family::RowGroup),
+                wb => Err(format!("grouped SpMM schedules need a grouped writeback, got {wb}")),
             },
             (true, None) => {
                 // pos without a group: nnz-split serial (Listing 3) unless the
@@ -250,6 +540,22 @@ impl Schedule {
         }
     }
 
+    /// The reduction recipe this schedule's classification implies — the
+    /// object every writeback in [`crate::compiler::lower`] is emitted
+    /// from. Grouped families inherit strategy, group size, and writeback
+    /// from their [`GroupSpec`]; the serial families reduce in-register
+    /// and write back with atomics (nnz split, shared outputs) or plain
+    /// stores (row split, exclusive outputs).
+    pub fn reduction_plan(&self) -> Result<ReductionPlan, String> {
+        Ok(match self.classify()? {
+            Family::RowSerial => ReductionPlan::serial(Writeback::Store),
+            Family::NnzSerial => ReductionPlan::serial(Writeback::Atomic),
+            Family::RowGroup | Family::NnzGroup | Family::SddmmGroup | Family::DgRowBalanced => {
+                self.group_cmd().expect("grouped families carry a GroupSpec").plan()
+            }
+        })
+    }
+
     fn group_cmd(&self) -> Option<GroupSpec> {
         self.cmds.iter().find_map(|c| match c {
             ScheduleCmd::ParallelizeGroup { spec, .. } => Some(*spec),
@@ -257,13 +563,59 @@ impl Schedule {
         })
     }
 
-    /// Build the concrete index notation (Listings 3–6 shapes).
+    /// Build the concrete index notation (Listings 3–6 shapes plus the
+    /// §4.3 SDDMM and dgSPARSE RB+PR generalizations).
     pub fn to_cin(&self) -> Cin {
         let mul = Expr::Mul(
             Box::new(Expr::Access(Access::new("A", &["i", "j"]))),
             Box::new(Expr::Access(Access::new("B", &["j", "k"]))),
         );
         match self.classify().expect("unsupported schedule") {
+            Family::SddmmGroup => {
+                let spec = self.group_cmd().unwrap();
+                let dot = Expr::Mul(
+                    Box::new(Expr::Access(Access::new("X1", &["i", "j"]))),
+                    Box::new(Expr::Access(Access::new("X2", &["j", "k"]))),
+                );
+                let producer = Cin::Assign {
+                    lhs: Access::new("tlaneY", &[]),
+                    reduce: true,
+                    rhs: dot,
+                };
+                let jo = Cin::forall("jo", ParallelUnit::Serial, OutputRaceStrategy::NoRaces, producer);
+                let consumer = Cin::Assign {
+                    lhs: Access::new("Y", &["i", "k"]),
+                    reduce: true,
+                    rhs: Expr::Mul(
+                        Box::new(Expr::Access(Access::new("A", &["i", "k"]))),
+                        Box::new(Expr::Access(Access::new("tlaneY", &[]))),
+                    ),
+                };
+                let wh = Cin::Where { consumer: Box::new(consumer), producer: Box::new(jo) };
+                let lane = Cin::forall_group("lane", spec, OutputRaceStrategy::Atomics, wh);
+                let e = Cin::forall("e", ParallelUnit::GPUThread, OutputRaceStrategy::NoRaces, lane);
+                Cin::forall("block", ParallelUnit::GPUBlock, OutputRaceStrategy::NoRaces, e)
+            }
+            Family::DgRowBalanced => {
+                let spec = self.group_cmd().unwrap();
+                let producer = Cin::Assign {
+                    lhs: Access::new("tlaneC", &[]),
+                    reduce: true,
+                    rhs: mul,
+                };
+                let jo = Cin::forall("jo", ParallelUnit::Serial, OutputRaceStrategy::NoRaces, producer);
+                let consumer = Cin::Assign {
+                    lhs: Access::new("C", &["i", "k"]),
+                    reduce: true,
+                    rhs: Expr::Access(Access::new("tlaneC", &[])),
+                };
+                let wh = Cin::Where { consumer: Box::new(consumer), producer: Box::new(jo) };
+                let lane = Cin::forall_group("lane", spec, OutputRaceStrategy::Atomics, wh);
+                let cc = Cin::forall("cc", ParallelUnit::Serial, OutputRaceStrategy::NoRaces, lane);
+                let vcol = Cin::forall("vcol", ParallelUnit::GPUWarp, OutputRaceStrategy::NoRaces, cc);
+                let rowb = Cin::forall("rowb", ParallelUnit::Serial, OutputRaceStrategy::NoRaces, vcol);
+                Cin::forall("row_block", ParallelUnit::GPUBlock, OutputRaceStrategy::NoRaces, rowb)
+            }
             Family::NnzSerial | Family::NnzGroup => {
                 let strategy = self.group_cmd();
                 let consumer = Cin::Assign {
@@ -373,5 +725,53 @@ mod tests {
         assert!(all.contains("fuse(i,k,io)"));
         assert!(all.contains("pos(j,jpos,A(i,j))"));
         assert!(all.contains("parallelize(jpos1,GPUGroup,4,ParallelReduction,Atomics)"));
+    }
+
+    #[test]
+    fn sddmm_schedule_classifies_and_plans() {
+        let s = Schedule::sddmm_group(SddmmConfig::new(64, 16, 8));
+        assert_eq!(s.classify().unwrap(), Family::SddmmGroup);
+        let plan = s.reduction_plan().unwrap();
+        assert_eq!(plan.group, 8);
+        assert_eq!(plan.strategy, Some(ReductionStrategy::ParallelReduction));
+        assert_eq!(plan.writeback, Writeback::LaneZeroAtomic);
+        let txt = s.to_cin().to_string();
+        assert!(txt.contains("GPUGroup[8,ParallelReduction]"), "{txt}");
+        assert!(txt.contains("tlaneY+=X1(i,j)*X2(j,k)"), "{txt}");
+        assert!(s.spmm_config().is_none());
+    }
+
+    #[test]
+    fn dgsparse_schedule_classifies_and_plans() {
+        let s = Schedule::dgsparse_rb_pr(DgConfig::stock(16));
+        assert_eq!(s.classify().unwrap(), Family::DgRowBalanced);
+        let plan = s.reduction_plan().unwrap();
+        assert_eq!(plan.group, 32);
+        assert_eq!(plan.strategy, Some(ReductionStrategy::RowBalancedPartial));
+        assert_eq!(plan.writeback, Writeback::LaneZeroAtomic);
+        let txt = s.to_cin().to_string();
+        assert!(txt.contains("GPUGroup[32,RowBalancedPartial]"), "{txt}");
+    }
+
+    #[test]
+    fn reduction_plans_of_the_spmm_families() {
+        let cfg = SpmmConfig::default();
+        let serial_row = Schedule::taco_row_serial(cfg).reduction_plan().unwrap();
+        assert_eq!((serial_row.group, serial_row.writeback), (1, Writeback::Store));
+        let serial_nnz = Schedule::taco_nnz_serial(cfg).reduction_plan().unwrap();
+        assert_eq!((serial_nnz.group, serial_nnz.writeback), (1, Writeback::Atomic));
+        let grouped = Schedule::sgap_nnz_group(cfg, 16).reduction_plan().unwrap();
+        assert_eq!((grouped.group, grouped.writeback), (16, Writeback::SegmentBoundary));
+        let row_grouped = Schedule::sgap_row_group(cfg, 8).reduction_plan().unwrap();
+        assert_eq!((row_grouped.group, row_grouped.writeback), (8, Writeback::LaneZeroAtomic));
+    }
+
+    #[test]
+    fn kernel_config_validates_each_kind() {
+        assert!(KernelConfig::Spmm(SpmmConfig::default()).validate().is_ok());
+        assert!(KernelConfig::Sddmm(SddmmConfig::new(64, 12, 4)).validate().is_err());
+        let mut dg = DgConfig::stock(4);
+        dg.group_sz = 12;
+        assert!(KernelConfig::Dg(dg).validate().is_err());
     }
 }

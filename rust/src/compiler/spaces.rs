@@ -163,6 +163,17 @@ impl AtomicPoint {
     pub fn sgap_nnz(c: u32, r: u32) -> Self {
         AtomicPoint::new(DataKind::Nnz, Factor::One, Factor::Times(c), r)
     }
+
+    /// dgSPARSE's RB+PR kernel as an atomic-parallelism point:
+    /// `{<1/workerSz row, coarsenSz col>, groupSz}` — `workerSz` lanes
+    /// cooperate per row, each covering `coarsenSz` dense columns, with a
+    /// `groupSz`-wide parallel reduction. Legal under the Atomics race
+    /// strategy (Rule 2 lifted), which is how the library writes back.
+    pub fn dg_rb_pr(worker_sz: u32, coarsen_sz: u32, group_sz: u32) -> Self {
+        let x = if worker_sz > 1 { Factor::Inv(worker_sz) } else { Factor::One };
+        let col = if coarsen_sz > 1 { Factor::Times(coarsen_sz) } else { Factor::One };
+        AtomicPoint::new(DataKind::Row, x, col, group_sz)
+    }
 }
 
 impl fmt::Display for AtomicPoint {
@@ -262,6 +273,19 @@ mod tests {
         for p in &legal {
             assert!(p.is_legal());
         }
+    }
+
+    #[test]
+    fn dg_rb_pr_point_legal_under_atomics() {
+        // stock dgSPARSE: 32 lanes/row, coarsen 4, group 32 → Rule 2 holds
+        assert!(AtomicPoint::dg_rb_pr(32, 4, 32).is_legal());
+        // tuned groupSz < workerSz needs the Atomics lift (Rule 2)
+        let tuned = AtomicPoint::dg_rb_pr(32, 4, 8);
+        assert_eq!(tuned.legality(), Err(Illegality::Rule2ParallelReductionWriteback));
+        assert!(tuned.is_legal_with_atomics());
+        // degenerate factors collapse to One instead of Inv(1)/Times(1)
+        let p = AtomicPoint::dg_rb_pr(1, 1, 1);
+        assert_eq!((p.x, p.col), (Factor::One, Factor::One));
     }
 
     #[test]

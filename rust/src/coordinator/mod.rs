@@ -24,6 +24,6 @@ pub mod server;
 
 pub use batcher::Batcher;
 pub use metrics::{BackendSnapshot, Metrics, MetricsSnapshot};
-pub use plan_cache::{Plan, PlanCache, PlanCacheStats, PlanKind, PlanOrigin, Scenario, ShapeKey};
+pub use plan_cache::{Plan, PlanCache, PlanCacheStats, PlanOrigin, Scenario, ShapeKey};
 pub use pool::JobQueue;
 pub use server::{Coordinator, CoordinatorConfig, Request, Response};

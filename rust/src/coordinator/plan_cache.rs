@@ -20,7 +20,6 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::algos::catalog::Algo;
-use crate::algos::sddmm::SddmmConfig;
 use crate::sparse::MatrixStats;
 
 /// Which kernel scenario a plan serves.
@@ -72,31 +71,6 @@ impl ShapeKey {
     }
 }
 
-/// The executable choice a plan resolves to.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub enum PlanKind {
-    Spmm(Algo),
-    Sddmm(SddmmConfig),
-}
-
-impl PlanKind {
-    /// Full plan description (tuning parameters included).
-    pub fn describe(&self) -> String {
-        match self {
-            PlanKind::Spmm(algo) => algo.name(),
-            PlanKind::Sddmm(cfg) => format!("sddmm{{<1/{} nnz>,{}}}", cfg.g, cfg.r),
-        }
-    }
-
-    /// Coarse label for metrics aggregation (one histogram per family).
-    pub fn family_label(&self) -> &'static str {
-        match self {
-            PlanKind::Spmm(algo) => algo.family_label(),
-            PlanKind::Sddmm(_) => "sddmm-group",
-        }
-    }
-}
-
 /// How the cached plan was chosen.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PlanOrigin {
@@ -106,10 +80,12 @@ pub enum PlanOrigin {
     Tuned,
 }
 
-/// A cached serving plan.
+/// A cached serving plan: a compiled-plan point from the unified catalog
+/// vocabulary ([`Algo`] — SpMM families, dgSPARSE, SDDMM alike) plus how
+/// it was chosen.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Plan {
-    pub kind: PlanKind,
+    pub kind: Algo,
     pub origin: PlanOrigin,
 }
 
@@ -158,7 +134,7 @@ impl PlanCache {
     pub fn get_or_insert_with(
         &self,
         key: ShapeKey,
-        select: impl FnOnce() -> PlanKind,
+        select: impl FnOnce() -> Algo,
     ) -> (Plan, bool) {
         let mut inner = self.inner.lock().unwrap();
         if let Some(plan) = inner.map.get(&key) {
@@ -191,7 +167,7 @@ impl PlanCache {
     /// Replace an existing entry with a tuner-chosen plan. Returns false if
     /// the entry was evicted in the meantime (the upgrade is dropped — the
     /// next miss re-selects and may be re-tuned).
-    pub fn upgrade(&self, key: ShapeKey, kind: PlanKind) -> bool {
+    pub fn upgrade(&self, key: ShapeKey, kind: Algo) -> bool {
         let mut inner = self.inner.lock().unwrap();
         match inner.map.get_mut(&key) {
             Some(plan) => {
@@ -252,7 +228,7 @@ mod tests {
         let stats = MatrixStats::of(&a);
         let key = ShapeKey::spmm(&stats, 4);
         let sel = Selector::default();
-        let (p1, hit1) = cache.get_or_insert_with(key, || PlanKind::Spmm(sel.select(&stats, 4)));
+        let (p1, hit1) = cache.get_or_insert_with(key, || sel.select(&stats, 4));
         let (p2, hit2) =
             cache.get_or_insert_with(key, || panic!("selector must not run on a hit"));
         assert!(!hit1 && hit2);
@@ -269,8 +245,8 @@ mod tests {
         let stats = MatrixStats::of(&a);
         let key = ShapeKey::spmm(&stats, 4);
         let sel = Selector::default();
-        cache.get_or_insert_with(key, || PlanKind::Spmm(sel.select(&stats, 4)));
-        let tuned = PlanKind::Spmm(Algo::SgapNnzGroup { c: 4, r: 8 });
+        cache.get_or_insert_with(key, || sel.select(&stats, 4));
+        let tuned = Algo::SgapNnzGroup { c: 4, r: 8 };
         assert!(cache.upgrade(key, tuned));
         let (p, hit) = cache.get_or_insert_with(key, || panic!("must hit"));
         assert!(hit);
@@ -286,13 +262,13 @@ mod tests {
             .map(|i| key_of(&erdos_renyi(32 + i, 32, 64, i as u64).to_csr(), 4))
             .collect();
         for k in &keys {
-            cache.get_or_insert_with(*k, || PlanKind::Spmm(Algo::TacoRowSerial { x: 1, c: 1 }));
+            cache.get_or_insert_with(*k, || Algo::TacoRowSerial { x: 1, c: 1 });
         }
         assert_eq!(cache.len(), 2);
         assert_eq!(cache.stats().evictions, 1);
         assert!(cache.get(&keys[0]).is_none(), "oldest entry evicted");
         assert!(cache.get(&keys[2]).is_some());
         // upgrading an evicted key is a no-op
-        assert!(!cache.upgrade(keys[0], PlanKind::Spmm(Algo::SgapNnzGroup { c: 1, r: 2 })));
+        assert!(!cache.upgrade(keys[0], Algo::SgapNnzGroup { c: 1, r: 2 }));
     }
 }

@@ -9,7 +9,7 @@
 //!                                                              │
 //!                 ┌────────────────────────────────────────────┤
 //!                 ▼                                            ▼
-//!          PlanCache (ShapeKey → Algo/SddmmConfig)      Batcher per worker
+//!          PlanCache (ShapeKey → Algo, any kernel kind) Batcher per worker
 //!                 │ miss: Selector::select (fast)              │
 //!                 │ async: tuner::tune upgrades the plan       ▼
 //!                 ▼                                   PJRT / simulator /
@@ -37,8 +37,9 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::algos::catalog::Algo;
 use crate::algos::cpu_ref::spmm_serial;
-use crate::algos::sddmm::{self, sddmm_serial};
+use crate::algos::sddmm::sddmm_serial;
 use crate::runtime::{ArtifactKind, Registry, Runtime};
 use crate::sim::{HwProfile, Machine};
 use crate::sparse::{Csr, MatrixStats, SplitMix64};
@@ -46,7 +47,7 @@ use crate::tuner::{self, Selector};
 
 use super::batcher::Batcher;
 use super::metrics::Metrics;
-use super::plan_cache::{Plan, PlanCache, PlanKind, Scenario, ShapeKey};
+use super::plan_cache::{Plan, PlanCache, Scenario, ShapeKey};
 use super::pool::JobQueue;
 
 /// A serving job: SpMM (`C = A · B`) or SDDMM
@@ -413,7 +414,7 @@ fn route(req: &Request, ctx: &WorkerCtx, runtime: &Option<Runtime>) -> Backend {
             let key = ShapeKey::spmm(&stats, *n as u32);
             let (plan, hit) = ctx
                 .plan_cache
-                .get_or_insert_with(key, || PlanKind::Spmm(ctx.selector.select(&stats, *n as u32)));
+                .get_or_insert_with(key, || ctx.selector.select(&stats, *n as u32));
             note_cache(ctx, hit);
             if !hit {
                 request_tune(ctx, key, a, *n as u32);
@@ -423,9 +424,9 @@ fn route(req: &Request, ctx: &WorkerCtx, runtime: &Option<Runtime>) -> Backend {
         Request::Sddmm { a, j_dim, .. } => {
             let stats = MatrixStats::of(a);
             let key = ShapeKey::sddmm(&stats, *j_dim as u32);
-            let (plan, hit) = ctx.plan_cache.get_or_insert_with(key, || {
-                PlanKind::Sddmm(ctx.selector.select_sddmm(&stats, *j_dim as u32))
-            });
+            let (plan, hit) = ctx
+                .plan_cache
+                .get_or_insert_with(key, || ctx.selector.select_sddmm(&stats, *j_dim as u32));
             note_cache(ctx, hit);
             if !hit {
                 request_tune(ctx, key, a, *j_dim as u32);
@@ -456,7 +457,7 @@ fn request_tune(ctx: &WorkerCtx, key: ShapeKey, a: &Csr, width: u32) {
 fn serve_one(label: &str, routed: Routed, runtime: &mut Option<Runtime>, ctx: &WorkerCtx) {
     let Routed { job, backend } = routed;
     let (plan_desc, cache_hit) = match &backend {
-        Backend::Sim(plan, hit) => (Some(plan.kind.describe()), *hit),
+        Backend::Sim(plan, hit) => (Some(plan.kind.name()), *hit),
         _ => (None, false),
     };
     // (result, backend label actually used)
@@ -472,29 +473,29 @@ fn serve_one(label: &str, routed: Routed, runtime: &mut Option<Runtime>, ctx: &W
             }
         }
         (Backend::Sim(plan, _), Request::Spmm { a, b, n }) => match plan.kind {
-            PlanKind::Spmm(algo) => match algo.run(&ctx.machine, a, b, *n as u32) {
+            // a colliding fingerprint can hand an SpMM job an SDDMM plan;
+            // serve it correctly on the CPU rather than guessing a kernel
+            Algo::Sddmm(_) => {
+                ctx.metrics.on_fallback();
+                (Ok(spmm_serial(a, b, *n)), "cpu-fallback".to_string())
+            }
+            algo => match algo.run(&ctx.machine, a, b, *n as u32) {
                 Ok(res) => (Ok(res.run.c), label.to_string()),
                 Err(_) => {
                     ctx.metrics.on_fallback();
                     (Ok(spmm_serial(a, b, *n)), "cpu-fallback".to_string())
                 }
             },
-            // a colliding fingerprint can hand an SpMM job an SDDMM plan;
-            // serve it correctly on the CPU rather than guessing a kernel
-            PlanKind::Sddmm(_) => {
-                ctx.metrics.on_fallback();
-                (Ok(spmm_serial(a, b, *n)), "cpu-fallback".to_string())
-            }
         },
         (Backend::Sim(plan, _), Request::Sddmm { a, x1, x2, j_dim }) => match plan.kind {
-            PlanKind::Sddmm(cfg) => match sddmm::run(&ctx.machine, &cfg, a, x1, x2) {
-                Ok(res) => (Ok(res.c), label.to_string()),
+            algo @ Algo::Sddmm(_) => match algo.run_sddmm(&ctx.machine, a, x1, x2) {
+                Ok(res) => (Ok(res.run.c), label.to_string()),
                 Err(_) => {
                     ctx.metrics.on_fallback();
                     (Ok(sddmm_serial(a, x1, x2, *j_dim)), "cpu-fallback".to_string())
                 }
             },
-            PlanKind::Spmm(_) => {
+            _ => {
                 ctx.metrics.on_fallback();
                 (Ok(sddmm_serial(a, x1, x2, *j_dim)), "cpu-fallback".to_string())
             }
@@ -558,7 +559,7 @@ fn tuner_loop(rx: std::sync::mpsc::Receiver<TuneTask>, machine: &Machine, cache:
                     (0..task.a.cols * task.width as usize).map(|_| rng.value()).collect();
                 if let Ok(out) = tuner::tune(machine, &cands, &task.a, &b, task.width) {
                     let (best, _) = out.best();
-                    cache.upgrade(task.key, PlanKind::Spmm(best));
+                    cache.upgrade(task.key, best);
                 }
             }
             Scenario::Sddmm => {
@@ -569,7 +570,7 @@ fn tuner_loop(rx: std::sync::mpsc::Receiver<TuneTask>, machine: &Machine, cache:
                 if let Ok((best, _)) =
                     tuner::search::tune_sddmm(machine, &cands, &task.a, &x1, &x2)
                 {
-                    cache.upgrade(task.key, PlanKind::Sddmm(best));
+                    cache.upgrade(task.key, best);
                 }
             }
         }

@@ -1,10 +1,11 @@
 //! `sgap` — CLI for the Sgap reproduction.
 //!
 //! Subcommands:
-//!   codegen   — lower a scheduled SpMM and print the CUDA-like kernel
+//!   codegen   — lower a scheduled kernel and print the CUDA-like source
 //!   space     — print the atomic-parallelism legality map (Fig. 7/8)
 //!   stats     — print the evaluation-suite matrix statistics
-//!   tune      — grid-search one suite matrix on the simulator
+//!   tune      — grid-search one suite matrix on the simulator (SpMM)
+//!   sddmm     — grid-search the scheduled SDDMM candidates likewise
 //!   serve     — start the coordinator and push a demo workload
 //!
 //! Argument parsing is hand-rolled (`--key value` pairs) — the offline
@@ -15,7 +16,7 @@ use std::collections::HashMap;
 use anyhow::{bail, Context, Result};
 
 use sgap::compiler::codegen_cuda::{emit_translation_unit, macro_header};
-use sgap::compiler::schedule::{Schedule, SpmmConfig};
+use sgap::compiler::schedule::{DgConfig, Schedule, SddmmConfig, SpmmConfig};
 use sgap::compiler::spaces;
 use sgap::coordinator::{Coordinator, CoordinatorConfig};
 use sgap::sim::{HwProfile, Machine};
@@ -60,11 +61,25 @@ fn cmd_codegen(flags: &HashMap<String, String>) -> Result<()> {
     let g = flag_u32(flags, "g", 32)?;
     let cfg = SpmmConfig { n, c, p: 256, g, r, x: 1 };
     let family = flags.get("family").map(String::as_str).unwrap_or("nnz-group");
+    // flags map 1:1 onto each family's config — invalid combinations are
+    // rejected by `lower` (KernelConfig::validate), never silently clamped
     let schedule = match family {
         "nnz-group" => Schedule::sgap_nnz_group(cfg, r),
         "row-group" => Schedule::sgap_row_group(cfg, r),
         "nnz-serial" => Schedule::taco_nnz_serial(cfg),
         "row-serial" => Schedule::taco_row_serial(cfg),
+        // --n is the dense reduction width J here
+        "sddmm" => Schedule::sddmm_group(SddmmConfig::new(n, g, r)),
+        // --g maps to workerSz, --r to groupSz, --c (if given) to coarsenSz
+        "dgsparse" => {
+            let stock = DgConfig::stock(n);
+            Schedule::dgsparse_rb_pr(DgConfig {
+                group_sz: r,
+                worker_sz: g,
+                coarsen_sz: if flags.contains_key("c") { c } else { stock.coarsen_sz },
+                ..stock
+            })
+        }
         other => bail!("unknown family `{other}`"),
     };
     println!(
@@ -132,6 +147,42 @@ fn cmd_tune(flags: &HashMap<String, String>) -> Result<()> {
     }
     let (best, t) = out.best();
     println!("\nbest: {} at {:.2} us", best.name(), t * 1e6);
+    Ok(())
+}
+
+fn cmd_sddmm(flags: &HashMap<String, String>) -> Result<()> {
+    let j = flag_u32(flags, "j", 16)?;
+    let hw = hw_by_name(flags.get("hw").map(String::as_str).unwrap_or("3090"))?;
+    let name = flags.get("dataset").cloned().unwrap_or_else(|| "er_1024_d5e-3".into());
+    let ds = suite()
+        .into_iter()
+        .find(|d| d.name == name)
+        .with_context(|| format!("dataset `{name}` not in suite (try `sgap stats` for names)"))?;
+    let a = ds.matrix.to_csr();
+    let mut rng = SplitMix64::new(7);
+    let x1: Vec<f32> = (0..a.rows * j as usize).map(|_| rng.value()).collect();
+    let x2: Vec<f32> = (0..j as usize * a.cols).map(|_| rng.value()).collect();
+    let machine = Machine::new(hw);
+
+    let cands = tuner::space::sddmm_candidates(j);
+    println!("sddmm-tuning {} on {} ({} candidates, J={j})", name, hw.name, cands.len());
+    let out = tuner::tune_sddmm_ranked(&machine, &cands, &a, &x1, &x2)?;
+    println!("{:<34} {:>12} {:>10}", "plan", "time (us)", "GFLOP/s");
+    for (alg, t, gf) in out.ranked.iter().take(12) {
+        println!("{:<34} {:>12.2} {:>10.2}", alg.name(), t * 1e6, gf);
+    }
+    let (best, t) = out.best();
+    println!("\nbest: {} at {:.2} us", best.name(), t * 1e6);
+    let selected = tuner::Selector::default().select_sddmm(&MatrixStats::of(&a), j);
+    match out.time_of(&selected) {
+        Some(ts) => println!(
+            "selector fast path: {} at {:.2} us ({:.2}x of best)",
+            selected.name(),
+            ts * 1e6,
+            ts / t
+        ),
+        None => println!("selector fast path: {} (outside the sweep grid)", selected.name()),
+    }
     Ok(())
 }
 
@@ -208,6 +259,7 @@ fn main() -> Result<()> {
         "space" => cmd_space(),
         "stats" => cmd_stats(),
         "tune" => cmd_tune(&flags),
+        "sddmm" => cmd_sddmm(&flags),
         "serve" => cmd_serve(&flags),
         "macros" => {
             print!("{}", macro_header());
@@ -217,10 +269,12 @@ fn main() -> Result<()> {
             println!("sgap — segment group & atomic parallelism (Sgap reproduction)");
             println!();
             println!("usage: sgap <command> [--flag value ...]");
-            println!("  codegen  --family nnz-group|row-group|nnz-serial|row-serial --n 4 --c 4 --g 32 --r 32");
+            println!("  codegen  --family nnz-group|row-group|nnz-serial|row-serial|sddmm|dgsparse --n 4 --c 4 --g 32 --r 32");
+            println!("           (sddmm: --n is J; dgsparse: --g=workerSz --r=groupSz --c=coarsenSz)");
             println!("  space    (print the Fig. 7/8 legality map)");
             println!("  stats    (print the evaluation-suite statistics)");
             println!("  tune     --dataset er_1024_d5e-3 --n 4 --hw 3090|2080|v100");
+            println!("  sddmm    --dataset er_1024_d5e-3 --j 16 --hw 3090|2080|v100");
             println!("  serve    --requests 32 --workers 2 [--tune] [--cpu-only] (SGAP_ARTIFACTS overrides artifacts dir)");
             println!("  macros   (print the §5.3 macro-instruction header)");
             Ok(())

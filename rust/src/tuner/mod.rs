@@ -5,6 +5,6 @@ pub mod search;
 pub mod selector;
 pub mod space;
 
-pub use search::{tune, TuneOutcome};
+pub use search::{tune, tune_sddmm, tune_sddmm_ranked, TuneOutcome};
 pub use selector::Selector;
-pub use space::{dg_candidates, sgap_candidates, taco_candidates};
+pub use space::{dg_candidates, sddmm_candidates, sgap_candidates, taco_candidates};

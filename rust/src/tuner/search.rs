@@ -5,7 +5,6 @@
 use anyhow::Result;
 
 use crate::algos::catalog::{Algo, AlgoResult};
-use crate::algos::sddmm::{self, SddmmConfig};
 use crate::sim::Machine;
 use crate::sparse::Csr;
 
@@ -60,27 +59,37 @@ pub fn tune(machine: &Machine, candidates: &[Algo], a: &Csr, b: &[f32], n: u32) 
     Ok(TuneOutcome { ranked })
 }
 
-/// Sweep SDDMM candidates on `(a, x1, x2)`; returns the fastest config and
-/// its simulated time. Serial on purpose: this runs on the coordinator's
-/// single background-refinement thread, where stealing cores from the
-/// serving workers would defeat the point.
-pub fn tune_sddmm(
+/// Sweep SDDMM plans (unified [`Algo::Sddmm`] vocabulary) on
+/// `(a, x1, x2)`; returns all results sorted fastest-first. Serial on
+/// purpose: this runs on the coordinator's single background-refinement
+/// thread, where stealing cores from the serving workers would defeat the
+/// point.
+pub fn tune_sddmm_ranked(
     machine: &Machine,
-    candidates: &[SddmmConfig],
+    candidates: &[Algo],
     a: &Csr,
     x1: &[f32],
     x2: &[f32],
-) -> Result<(SddmmConfig, f64)> {
+) -> Result<TuneOutcome> {
     anyhow::ensure!(!candidates.is_empty(), "no candidates supplied");
-    let mut best: Option<(SddmmConfig, f64)> = None;
-    for cfg in candidates {
-        let run = sddmm::run(machine, cfg, a, x1, x2)?;
-        let t = run.report.time_s;
-        if best.map_or(true, |(_, bt)| t < bt) {
-            best = Some((*cfg, t));
-        }
+    let mut ranked = Vec::with_capacity(candidates.len());
+    for alg in candidates {
+        let res = alg.run_sddmm(machine, a, x1, x2)?;
+        ranked.push((*alg, res.time_s, res.gflops));
     }
-    Ok(best.expect("non-empty candidate list"))
+    ranked.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    Ok(TuneOutcome { ranked })
+}
+
+/// The fastest SDDMM plan and its simulated time.
+pub fn tune_sddmm(
+    machine: &Machine,
+    candidates: &[Algo],
+    a: &Csr,
+    x1: &[f32],
+    x2: &[f32],
+) -> Result<(Algo, f64)> {
+    tune_sddmm_ranked(machine, candidates, a, x1, x2).map(|out| out.best())
 }
 
 #[cfg(test)]
@@ -119,10 +128,19 @@ mod tests {
         let m = Machine::new(HwProfile::rtx3090());
         let cands = sddmm_candidates(j as u32);
         let (best, t) = tune_sddmm(&m, &cands, &a, &x1, &x2).unwrap();
-        best.validate().unwrap();
+        let Algo::Sddmm(cfg) = best else { panic!("winner {} not an SDDMM plan", best.name()) };
+        cfg.validate().unwrap();
         assert!(t > 0.0);
         // the winner is no slower than the stock-est config in the grid
-        let wide = sddmm::run(&m, &SddmmConfig::new(j as u32, 32, 32), &a, &x1, &x2).unwrap();
-        assert!(t <= wide.report.time_s + 1e-15);
+        let wide = Algo::Sddmm(crate::algos::sddmm::SddmmConfig::new(j as u32, 32, 32))
+            .run_sddmm(&m, &a, &x1, &x2)
+            .unwrap();
+        assert!(t <= wide.time_s + 1e-15);
+        // the ranked sweep is sorted ascending
+        let out = tune_sddmm_ranked(&m, &cands, &a, &x1, &x2).unwrap();
+        assert_eq!(out.ranked.len(), cands.len());
+        for w in out.ranked.windows(2) {
+            assert!(w[0].1 <= w[1].1);
+        }
     }
 }

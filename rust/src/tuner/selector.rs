@@ -61,17 +61,19 @@ impl Selector {
         }
     }
 
-    /// Pick an SDDMM configuration from the matrix statistics (§4.3: the
-    /// same GroupSize trade-off applies to SDDMM's dense-`j` reduction).
+    /// Pick an SDDMM plan from the matrix statistics (§4.3: the same
+    /// GroupSize trade-off applies to SDDMM's dense-`j` reduction).
+    /// Returns the unified catalog vocabulary ([`Algo::Sddmm`]) so the
+    /// plan cache stores SDDMM choices like any other kernel kind.
     ///
     /// `g` lanes cooperate per non-zero, so `g` tracks `J` (idle lanes are
     /// exactly Fig. 1(b)'s waste); the reduction width `r` follows the same
     /// short-row rule as SpMM, capped at `g`.
-    pub fn select_sddmm(&self, stats: &MatrixStats, j_dim: u32) -> SddmmConfig {
+    pub fn select_sddmm(&self, stats: &MatrixStats, j_dim: u32) -> Algo {
         let g = j_dim.next_power_of_two().clamp(2, 32);
         let r_cap =
             if stats.row_degree_mean < self.short_row_degree { self.r_short } else { self.r_long };
-        SddmmConfig::new(j_dim, g, r_cap.min(g))
+        Algo::Sddmm(SddmmConfig::new(j_dim, g, r_cap.min(g)))
     }
 
     /// Re-fit `cv_eb_threshold` on a training set by minimizing total
@@ -166,6 +168,13 @@ mod tests {
         }
     }
 
+    fn sddmm_cfg(algo: Algo) -> SddmmConfig {
+        match algo {
+            Algo::Sddmm(cfg) => cfg,
+            other => panic!("selector returned non-SDDMM plan {}", other.name()),
+        }
+    }
+
     #[test]
     fn sddmm_config_is_valid_and_tracks_j() {
         let s = Selector::default();
@@ -173,13 +182,13 @@ mod tests {
         let long = crate::sparse::banded(512, 33, 2).to_csr(); // mean degree 33
         for j in [1u32, 8, 16, 50, 64] {
             for m in [&short, &long] {
-                let cfg = s.select_sddmm(&MatrixStats::of(m), j);
+                let cfg = sddmm_cfg(s.select_sddmm(&MatrixStats::of(m), j));
                 cfg.validate().unwrap();
                 assert_eq!(cfg.j_dim, j);
                 assert!(cfg.g >= j.next_power_of_two().min(32).max(2) || cfg.g == 32);
             }
         }
-        let cfg = s.select_sddmm(&MatrixStats::of(&short), 64);
+        let cfg = sddmm_cfg(s.select_sddmm(&MatrixStats::of(&short), 64));
         assert_eq!((cfg.g, cfg.r), (32, 4), "short rows get the narrow reduction");
     }
 

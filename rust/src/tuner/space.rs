@@ -84,13 +84,15 @@ pub fn dg_candidates_small(n: u32) -> Vec<Algo> {
 }
 
 /// SDDMM candidate grid (§4.3): lanes-per-nnz `g` × reduction width `r`,
-/// with the writeback-uniformity rule `r <= g`.
-pub fn sddmm_candidates(j_dim: u32) -> Vec<SddmmConfig> {
+/// with the writeback-uniformity rule `r <= g`. Returns unified catalog
+/// plans ([`Algo::Sddmm`]) so the tuner, selector, and plan cache handle
+/// SDDMM points exactly like every other kernel kind.
+pub fn sddmm_candidates(j_dim: u32) -> Vec<Algo> {
     let mut out = Vec::new();
     for g in [2u32, 4, 8, 16, 32] {
         for r in [2u32, 4, 8, 16, 32] {
             if r <= g {
-                out.push(SddmmConfig::new(j_dim, g, r));
+                out.push(Algo::Sddmm(SddmmConfig::new(j_dim, g, r)));
             }
         }
     }
@@ -162,9 +164,12 @@ mod tests {
         let cands = sddmm_candidates(64);
         assert_eq!(cands.len(), 15); // pairs with r <= g over 5x5
         for c in &cands {
-            c.validate().unwrap();
+            let Algo::Sddmm(cfg) = c else { panic!("{} not an SDDMM plan", c.name()) };
+            cfg.validate().unwrap();
         }
-        assert!(cands.iter().any(|c| c.g == 32 && c.r == 2));
+        assert!(cands
+            .iter()
+            .any(|c| matches!(c, Algo::Sddmm(cfg) if cfg.g == 32 && cfg.r == 2)));
     }
 
     #[test]

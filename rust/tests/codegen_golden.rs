@@ -8,7 +8,7 @@
 //! `SGAP_BLESS=1 cargo test --test codegen_golden`.
 
 use sgap::compiler::codegen_cuda::{emit_kernel, macro_header};
-use sgap::compiler::schedule::{Schedule, SpmmConfig};
+use sgap::compiler::schedule::{DgConfig, Schedule, SddmmConfig, SpmmConfig};
 
 fn check_golden(name: &str, got: &str) {
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden").join(name);
@@ -84,4 +84,41 @@ fn macro_header_golden() {
     assert!(h.contains("template <typename T, int G>"));
     assert!(h.contains("__shfl_down_sync") && h.contains("__shfl_up_sync"));
     check_golden("macro_header.cu", h);
+}
+
+/// §4.3 SDDMM `{<1/g nnz>, r}` — now schedule-lowered, so its CUDA text
+/// is pinned like every SpMM family. Covers the `atomicAddGroup<float,r>`
+/// writeback over the per-nnz output slots.
+#[test]
+fn sddmm_group_golden() {
+    let sched = Schedule::sddmm_group(SddmmConfig::new(64, 16, 8));
+    let kernel = sgap::compiler::lower(&sched).unwrap();
+    let src = emit_kernel(&kernel);
+    assert!(src.contains("__global__ void sddmm_g16_r8"), "{src}");
+    assert!(src.contains("atomicAddGroup<float,8>(Y_vals, pos, val);"), "{src}");
+    assert!(!src.contains("segReduceGroup"), "sddmm reduces over the dense j: no segments");
+    check_golden("sddmm_g16_r8.cu", &src);
+}
+
+/// dgSPARSE's RB+PR point `<8, 256, 8, 1/2>` (a paper best-static shape)
+/// — the row-balanced strategy strides rows by the launch-bound
+/// `workerDimR` scalar and writes back with `atomicAddGroup<float,g>`.
+#[test]
+fn dgsparse_rb_pr_golden() {
+    let cfg = DgConfig {
+        n: 16,
+        group_sz: 8,
+        block_sz: 256,
+        tile_sz: 8,
+        worker_dim_r_frac: 0.5,
+        worker_sz: 32,
+        coarsen_sz: 4,
+    };
+    let kernel = sgap::compiler::lower(&Schedule::dgsparse_rb_pr(cfg)).unwrap();
+    let src = emit_kernel(&kernel);
+    // the fraction is encoded `0p5` so the kernel name is a C identifier
+    assert!(src.contains("__global__ void dg_rb_pr_rm_g8_b256_t8_w0p5("), "{src}");
+    assert!(src.contains("atomicAddGroup<float,8>(C_vals,"), "{src}");
+    assert!(src.contains("i = (i + workerDimR);"), "row-balance stride missing:\n{src}");
+    check_golden("dg_rb_pr_rm_g8_b256_t8_w0p5.cu", &src);
 }

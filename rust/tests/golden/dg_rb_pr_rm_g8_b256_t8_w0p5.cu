@@ -1,0 +1,24 @@
+__global__ void dg_rb_pr_rm_g8_b256_t8_w0p5(int* __restrict__ A2_pos, int* __restrict__ A2_crd, float* __restrict__ A_vals, float* __restrict__ B_vals, float* __restrict__ C_vals, int A1_dimension, int B2_dimension, int workerDimR) {
+  // dgSPARSE RB+PR+RM <groupSz=8, blockSz=256, tileSz=8, workerDimR=0.5x rows>
+  int lane = (threadIdx.x % 32);
+  int vcol = ((threadIdx.x / 32) % 2);
+  int rowb = (threadIdx.x / 64);
+  int col_block = (blockIdx.x % 2);
+  int row_block = (blockIdx.x / 2);
+  int i = ((row_block * 4) + rowb);
+  while ((i < A1_dimension)) {
+    for (int cc = 0; cc < 4; cc += 1) {
+      int k = ((col_block * 8) + ((vcol * 4) + cc));
+      if ((k < B2_dimension)) {
+        float val = 0.0f;
+        int jpos = (A2_pos[i] + lane);
+        while ((jpos < A2_pos[(i + 1)])) {
+          val = (val + (A_vals[jpos] * B_vals[((A2_crd[jpos] * B2_dimension) + k)]));
+          jpos = (jpos + 32);
+        }
+        atomicAddGroup<float,8>(C_vals, ((i * B2_dimension) + k), val);
+      }
+    }
+    i = (i + workerDimR);
+  }
+}

@@ -1,0 +1,18 @@
+__global__ void sddmm_g16_r8(int* __restrict__ A2_pos, int* __restrict__ A2_crd, int* __restrict__ A_rowidx, float* __restrict__ A_vals, float* __restrict__ X1_vals, float* __restrict__ X2_vals, float* __restrict__ Y_vals, int A1_dimension, int A2_dimension, int J_dimension, int A_nnz) {
+  // sddmm {<1/16 nnz>, 8} — grouped dot-product reduction
+  int lane = (threadIdx.x % 16);
+  int e = (threadIdx.x / 16);
+  int pos = ((blockIdx.x * 16) + e);
+  if ((pos < A_nnz)) {
+    int i = A_rowidx[pos];
+    int k = A2_crd[pos];
+    float val = 0.0f;
+    int j = lane;
+    while ((j < J_dimension)) {
+      val = (val + (X1_vals[((i * J_dimension) + j)] * X2_vals[((j * A2_dimension) + k)]));
+      j = (j + 16);
+    }
+    val = (val * A_vals[pos]);
+    atomicAddGroup<float,8>(Y_vals, pos, val);
+  }
+}

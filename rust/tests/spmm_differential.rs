@@ -1,17 +1,22 @@
-//! Differential property tests: every simulated compiler-family kernel in
-//! `algos::catalog` (TACO + Sgap) matches the serial CPU oracle within
-//! 5e-4, across the reduction-width sweep r ∈ {2,4,8,16,32}, the matrix
-//! families the selector keys on (uniform ER, power-law skew, banded,
-//! empty-row corner cases), and dense widths n ∈ {1, 4, 32} — plus the
-//! plan-cache path: a cached plan must reproduce the fresh-selection
-//! result bit-for-bit.
+//! Differential property tests: every simulated kernel the unified
+//! catalog exposes matches the serial CPU oracle within 5e-4.
+//!
+//! * SpMM: the compiler-family sweep (TACO + Sgap) across the
+//!   reduction-width grid r ∈ {2,4,8,16,32}, the matrix families the
+//!   selector keys on (uniform ER, power-law skew, banded, empty-row
+//!   corner cases), and dense widths n ∈ {1, 4, 32}.
+//! * SDDMM: every scheduled candidate in `tuner::space::sddmm_candidates`
+//!   against `sddmm_serial` over the matrix-family × j_dim grid.
+//! * The plan-cache path for both scenarios: a cached plan must reproduce
+//!   the fresh-selection result bit-for-bit.
 
 use sgap::algos::catalog::compiler_family_sweep;
 use sgap::algos::cpu_ref::{max_rel_err, spmm_serial};
-use sgap::coordinator::{PlanCache, PlanKind, ShapeKey};
+use sgap::algos::sddmm::sddmm_serial;
+use sgap::coordinator::{PlanCache, ShapeKey};
 use sgap::sim::{HwProfile, Machine};
 use sgap::sparse::{banded, erdos_renyi, power_law, Coo, Csr, MatrixStats, SplitMix64};
-use sgap::tuner::Selector;
+use sgap::tuner::{sddmm_candidates, Selector};
 
 const TOL: f32 = 5e-4;
 const RS: [u32; 5] = [2, 4, 8, 16, 32];
@@ -80,14 +85,13 @@ fn plan_cache_path_equals_fresh_selection() {
             let stats = MatrixStats::of(&a);
             let key = ShapeKey::spmm(&stats, n as u32);
             let fresh = selector.select(&stats, n as u32);
-            let (plan, hit) = cache.get_or_insert_with(key, || PlanKind::Spmm(fresh));
+            let (plan, hit) = cache.get_or_insert_with(key, || fresh);
             assert!(!hit, "{fam} n={n}: first sight must miss");
             let (plan2, hit2) = cache.get_or_insert_with(key, || unreachable!("hit expected"));
             assert!(hit2, "{fam} n={n}: repeat must hit");
             assert_eq!(plan2, plan);
-            let PlanKind::Spmm(cached) = plan2.kind else {
-                panic!("{fam} n={n}: spmm key yielded non-spmm plan")
-            };
+            let cached = plan2.kind;
+            assert!(!cached.is_sddmm(), "{fam} n={n}: spmm key yielded an SDDMM plan");
             assert_eq!(cached, fresh, "cached plan must be the selector's choice");
 
             let b = b_for(&a, n, 21 + n as u64);
@@ -104,5 +108,87 @@ fn plan_cache_path_equals_fresh_selection() {
     }
     let s = cache.stats();
     assert_eq!(s.misses as usize, NS.len() * 5);
+    assert_eq!(s.hits, s.misses);
+}
+
+/// Dense factor pair for an SDDMM differential run.
+fn x_for(a: &Csr, j: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = SplitMix64::new(seed);
+    let x1 = (0..a.rows * j).map(|_| rng.value()).collect();
+    let x2 = (0..j * a.cols).map(|_| rng.value()).collect();
+    (x1, x2)
+}
+
+/// j = 20 exercises the non-power-of-two tail (idle lanes in the last
+/// stride); 1 and 32 bracket the grouped reduction widths.
+const JS: [usize; 3] = [1, 20, 32];
+
+/// Every scheduled SDDMM candidate matches the serial oracle over the
+/// matrix-family × j_dim grid — the §4.3 differential sweep, now
+/// reachable because SDDMM lowers through the shared compile pipeline.
+#[test]
+fn every_sddmm_candidate_matches_oracle_across_families_j() {
+    let machine = Machine::new(HwProfile::rtx3090());
+    for &j in &JS {
+        for (fam, a) in families(0x5DD ^ j as u64) {
+            let (x1, x2) = x_for(&a, j, 31 + j as u64);
+            let want = sddmm_serial(&a, &x1, &x2, j);
+            for alg in sddmm_candidates(j as u32) {
+                let res = alg.run_sddmm(&machine, &a, &x1, &x2).unwrap_or_else(|e| {
+                    panic!("{fam} j={j}: {} failed: {e}", alg.name())
+                });
+                let err = max_rel_err(&res.run.c, &want);
+                assert!(
+                    err < TOL,
+                    "{fam} j={j}: {} err {err} (matrix {}x{} nnz {})",
+                    alg.name(),
+                    a.rows,
+                    a.cols,
+                    a.nnz()
+                );
+            }
+        }
+    }
+}
+
+/// The SDDMM plan-cache path is result-identical to fresh selection, and
+/// SpMM/SDDMM keys for the same matrix never collide into each other's
+/// scenario.
+#[test]
+fn sddmm_plan_cache_path_equals_fresh_selection() {
+    let machine = Machine::new(HwProfile::rtx3090());
+    let selector = Selector::default();
+    let cache = PlanCache::new(64);
+    for &j in &JS {
+        for (fam, a) in families(0xCA5E ^ j as u64) {
+            let stats = MatrixStats::of(&a);
+            let key = ShapeKey::sddmm(&stats, j as u32);
+            assert_ne!(
+                key,
+                ShapeKey::spmm(&stats, j as u32),
+                "{fam} j={j}: scenario must separate the keys"
+            );
+            let fresh = selector.select_sddmm(&stats, j as u32);
+            assert!(fresh.is_sddmm(), "{fam} j={j}: selector returned {}", fresh.name());
+            let (plan, hit) = cache.get_or_insert_with(key, || fresh);
+            assert!(!hit, "{fam} j={j}: first sight must miss");
+            let (plan2, hit2) = cache.get_or_insert_with(key, || unreachable!("hit expected"));
+            assert!(hit2 && plan2 == plan, "{fam} j={j}: repeat must hit the same plan");
+            assert_eq!(plan2.kind, fresh, "cached plan must be the selector's choice");
+
+            let (x1, x2) = x_for(&a, j, 57 + j as u64);
+            let via_cache = plan2.kind.run_sddmm(&machine, &a, &x1, &x2).unwrap();
+            let via_fresh = fresh.run_sddmm(&machine, &a, &x1, &x2).unwrap();
+            assert_eq!(
+                via_cache.run.c, via_fresh.run.c,
+                "{fam} j={j}: cache path diverged from fresh selection"
+            );
+            let want = sddmm_serial(&a, &x1, &x2, j);
+            let err = max_rel_err(&via_cache.run.c, &want);
+            assert!(err < TOL, "{fam} j={j}: selected {} err {err}", fresh.name());
+        }
+    }
+    let s = cache.stats();
+    assert_eq!(s.misses as usize, JS.len() * 5);
     assert_eq!(s.hits, s.misses);
 }

@@ -3,19 +3,23 @@
 //!
 //! An [`Algo`] names an executable kernel point of *any* kind the system
 //! serves: the four SpMM schedule families, the dgSPARSE RB+PR library
-//! shape, and the grouped SDDMM of §4.3. Every variant resolves to a
-//! [`Schedule`] and lowers through `compiler::lower` — there are no
-//! bespoke kernel constructions behind the catalog.
+//! shape, the grouped SDDMM of §4.3, and the COO-3 MTTKRP/TTM segment
+//! kernels that complete the §2.1 quartet. Every variant resolves to a
+//! [`Schedule`] and compiles through `compiler::compile` against its
+//! stated algebra — there are no bespoke kernel constructions behind the
+//! catalog.
 
 use anyhow::Result;
 
 use crate::compiler::schedule::{Schedule, SpmmConfig};
 use crate::compiler::spaces::AtomicPoint;
 use crate::sim::Machine;
+use crate::sparse::coo3::Coo3;
 use crate::sparse::Csr;
 
 use super::cpu_ref::spmm_flops;
 use super::dgsparse::{self, DgConfig};
+use super::mttkrp::{self, mttkrp_flops, ttm_flops, MttkrpConfig, TtmConfig};
 use super::runner::{run_schedule, SpmmRun};
 use super::sddmm::{self, sddmm_flops, SddmmConfig};
 
@@ -35,6 +39,12 @@ pub enum Algo {
     /// Grouped SDDMM `{<1/g nnz>, r}` (§4.3) — the dense-`j` dot
     /// reduction per non-zero; runs via [`Algo::run_sddmm`].
     Sddmm(SddmmConfig),
+    /// Grouped MTTKRP `{<1 nnz, c col>, r}` (Eq. 2a) — COO-3 segment
+    /// reduction keyed by output row; runs via [`Algo::run_mttkrp`].
+    Mttkrp(MttkrpConfig),
+    /// Grouped TTM `{<1 nnz, c col>, r}` (Eq. 2b) — COO-3 segment
+    /// reduction keyed by the leading fiber; runs via [`Algo::run_ttm`].
+    Ttm(TtmConfig),
 }
 
 /// Outcome of running an algorithm on a matrix.
@@ -57,6 +67,8 @@ impl Algo {
                 d.group_sz, d.block_sz, d.tile_sz, d.worker_dim_r_frac
             ),
             Algo::Sddmm(s) => format!("sddmm{{<1/{} nnz>,{}}}", s.g, s.r),
+            Algo::Mttkrp(m) => format!("mttkrp{{<1 nnz,{} col>,{}}}", m.c, m.r),
+            Algo::Ttm(t) => format!("ttm{{<1 nnz,{} col>,{}}}", t.c, t.r),
         }
     }
 
@@ -71,12 +83,24 @@ impl Algo {
             Algo::SgapNnzGroup { .. } => "sgap-nnz-group",
             Algo::Dg(_) => "dgsparse",
             Algo::Sddmm(_) => "sddmm-group",
+            Algo::Mttkrp(_) => "mttkrp-group",
+            Algo::Ttm(_) => "ttm-group",
         }
     }
 
     /// Whether this plan serves SDDMM traffic (vs SpMM).
     pub fn is_sddmm(&self) -> bool {
         matches!(self, Algo::Sddmm(_))
+    }
+
+    /// Whether this plan serves MTTKRP traffic.
+    pub fn is_mttkrp(&self) -> bool {
+        matches!(self, Algo::Mttkrp(_))
+    }
+
+    /// Whether this plan serves TTM traffic.
+    pub fn is_ttm(&self) -> bool {
+        matches!(self, Algo::Ttm(_))
     }
 
     /// The atomic-parallelism point this algorithm occupies. The dgSPARSE
@@ -106,6 +130,11 @@ impl Algo {
             Algo::SgapNnzGroup { c, r } => Some(AtomicPoint::sgap_nnz(c, r)),
             Algo::Dg(d) => Some(AtomicPoint::dg_rb_pr(d.worker_sz, d.coarsen_sz, d.group_sz)),
             Algo::Sddmm(_) => None,
+            // the COO-3 kernels occupy the same `{<1 nnz, c col>, r}`
+            // point as SpMM's segment-reduction family — §2.1's claim made
+            // literal
+            Algo::Mttkrp(m) => Some(AtomicPoint::sgap_nnz(m.c, m.r)),
+            Algo::Ttm(t) => Some(AtomicPoint::sgap_nnz(t.c, t.r)),
         }
     }
 
@@ -129,12 +158,15 @@ impl Algo {
             }
             Algo::Dg(cfg) => Schedule::dgsparse_rb_pr(cfg),
             Algo::Sddmm(cfg) => Schedule::sddmm_group(cfg),
+            Algo::Mttkrp(cfg) => Schedule::mttkrp_group(cfg),
+            Algo::Ttm(cfg) => Schedule::ttm_group(cfg),
         }
     }
 
     /// Execute an SpMM plan on the simulator. `b` must be `a.cols * n`
-    /// row-major. Errors for [`Algo::Sddmm`] plans, which need the dense
-    /// factor pair — use [`Algo::run_sddmm`].
+    /// row-major. Errors for [`Algo::Sddmm`], [`Algo::Mttkrp`], and
+    /// [`Algo::Ttm`] plans, which carry different operands — use
+    /// [`Algo::run_sddmm`] / [`Algo::run_mttkrp`] / [`Algo::run_ttm`].
     pub fn run(&self, machine: &Machine, a: &Csr, b: &[f32], n: u32) -> Result<AlgoResult> {
         let run = match self {
             Algo::Dg(cfg) => {
@@ -144,6 +176,12 @@ impl Algo {
             Algo::Sddmm(_) => {
                 anyhow::bail!("{} is an SDDMM plan; use run_sddmm", self.name())
             }
+            Algo::Mttkrp(_) => {
+                anyhow::bail!("{} is an MTTKRP plan; use run_mttkrp", self.name())
+            }
+            Algo::Ttm(_) => {
+                anyhow::bail!("{} is a TTM plan; use run_ttm", self.name())
+            }
             _ => {
                 let sched = self.schedule(n, 256);
                 run_schedule(machine, &sched, a, b)?
@@ -151,6 +189,37 @@ impl Algo {
         };
         let time_s = run.report.time_s;
         let gflops = run.report.gflops(spmm_flops(a, n as usize));
+        Ok(AlgoResult { run, time_s, gflops })
+    }
+
+    /// Execute an MTTKRP plan on the simulator. `x1` is row-major
+    /// `[a.dim1 × j]`, `x2` row-major `[a.dim2 × j]`. Errors for every
+    /// other plan kind.
+    pub fn run_mttkrp(
+        &self,
+        machine: &Machine,
+        a: &Coo3,
+        x1: &[f32],
+        x2: &[f32],
+    ) -> Result<AlgoResult> {
+        let Algo::Mttkrp(cfg) = self else {
+            anyhow::bail!("{} is not an MTTKRP plan", self.name())
+        };
+        let run = mttkrp::run_mttkrp(machine, a, x1, x2, cfg)?;
+        let time_s = run.report.time_s;
+        let gflops = run.report.gflops(mttkrp_flops(a, cfg.j_dim as usize));
+        Ok(AlgoResult { run, time_s, gflops })
+    }
+
+    /// Execute a TTM plan on the simulator. `x1` is row-major
+    /// `[a.dim2 × l]`. Errors for every other plan kind.
+    pub fn run_ttm(&self, machine: &Machine, a: &Coo3, x1: &[f32]) -> Result<AlgoResult> {
+        let Algo::Ttm(cfg) = self else {
+            anyhow::bail!("{} is not a TTM plan", self.name())
+        };
+        let run = mttkrp::run_ttm(machine, a, x1, cfg)?;
+        let time_s = run.report.time_s;
+        let gflops = run.report.gflops(ttm_flops(a, cfg.l_dim as usize));
         Ok(AlgoResult { run, time_s, gflops })
     }
 
@@ -240,14 +309,53 @@ mod tests {
             (Algo::SgapNnzGroup { c: 4, r: 32 }, Family::NnzGroup),
             (Algo::Dg(DgConfig::stock(4)), Family::DgRowBalanced),
             (Algo::Sddmm(SddmmConfig::new(16, 8, 8)), Family::SddmmGroup),
+            (Algo::Mttkrp(MttkrpConfig::new(8, 4, 16)), Family::MttkrpGroup),
+            (Algo::Ttm(TtmConfig::new(4, 4, 8)), Family::TtmGroup),
         ];
         for (alg, family) in cases {
             let sched = alg.schedule(4, 256);
             assert_eq!(sched.classify().unwrap(), family, "{}", alg.name());
-            crate::compiler::lower(&sched).unwrap_or_else(|e| {
-                panic!("{} failed to lower: {e}", alg.name())
+            // every catalog plan is a lowering of its stated algebra —
+            // the front-door contract
+            crate::compiler::compile(&sched.algebra(), &sched).unwrap_or_else(|e| {
+                panic!("{} failed to compile: {e}", alg.name())
             });
         }
+    }
+
+    #[test]
+    fn tensor_plans_run_through_their_own_paths_only() {
+        let m = Machine::new(HwProfile::rtx3090());
+        let a = Coo3::random((24, 20, 16), 400, 3);
+        let mut rng = SplitMix64::new(7);
+        let j = 8usize;
+        let x1: Vec<f32> = (0..a.dim1 * j).map(|_| rng.value()).collect();
+        let x2: Vec<f32> = (0..a.dim2 * j).map(|_| rng.value()).collect();
+        let plan = Algo::Mttkrp(MttkrpConfig::new(j as u32, 4, 8));
+        assert_eq!(plan.name(), "mttkrp{<1 nnz,4 col>,8}");
+        assert_eq!(plan.family_label(), "mttkrp-group");
+        assert!(plan.is_mttkrp() && !plan.is_ttm() && !plan.is_sddmm());
+        assert!(plan.to_point().unwrap().is_legal());
+        let res = plan.run_mttkrp(&m, &a, &x1, &x2).unwrap();
+        let want = crate::algos::mttkrp::mttkrp_serial(&a, &x1, &x2, j);
+        assert!(crate::algos::cpu_ref::max_rel_err(&res.run.c, &want) < 5e-4);
+        assert!(res.gflops > 0.0);
+
+        let lx1: Vec<f32> = (0..a.dim2 * 4).map(|_| rng.value()).collect();
+        let tplan = Algo::Ttm(TtmConfig::new(4, 4, 8));
+        assert!(tplan.is_ttm());
+        let res = tplan.run_ttm(&m, &a, &lx1).unwrap();
+        let want = crate::algos::mttkrp::ttm_serial(&a, &lx1, 4);
+        assert!(crate::algos::cpu_ref::max_rel_err(&res.run.c, &want) < 5e-4);
+
+        // kind mismatches error instead of guessing a kernel
+        let csr = erdos_renyi(16, 16, 40, 1).to_csr();
+        let zeros = vec![0.0f32; 16 * 4];
+        assert!(plan.run(&m, &csr, &zeros, 4).is_err());
+        assert!(tplan.run(&m, &csr, &zeros, 4).is_err());
+        assert!(plan.run_ttm(&m, &a, &lx1).is_err());
+        assert!(tplan.run_mttkrp(&m, &a, &x1, &x2).is_err());
+        assert!(Algo::TacoRowSerial { x: 1, c: 4 }.run_mttkrp(&m, &a, &x1, &x2).is_err());
     }
 
     #[test]

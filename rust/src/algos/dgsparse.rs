@@ -3,7 +3,7 @@
 //! "library kernel"); it is now **schedule-generated** — the row-balanced
 //! /partial-result discipline is a first-class
 //! [`ReductionStrategy::RowBalancedPartial`] and the kernel is produced by
-//! [`crate::compiler::lower`] from [`Schedule::dgsparse_rb_pr`]. This
+//! [`crate::compiler::lower`](mod@crate::compiler::lower) from [`Schedule::dgsparse_rb_pr`]. This
 //! module only binds buffers (including the launch-time `workerDimR`
 //! scalar), picks the grid, and launches; it is priced by the same
 //! simulator as every other compiler output.
@@ -35,7 +35,8 @@ pub use crate::compiler::schedule::DgConfig;
 /// matrix's row count and bound as a scalar parameter.
 pub fn run(machine: &Machine, cfg: &DgConfig, a: &Csr, b: &[f32]) -> Result<SpmmRun> {
     let n = cfg.n as usize;
-    let kernel = crate::compiler::lower(&Schedule::dgsparse_rb_pr(*cfg))?;
+    let sched = Schedule::dgsparse_rb_pr(*cfg);
+    let kernel = crate::compiler::compile(&sched.algebra(), &sched)?;
     let grid = cfg.grid(a.rows);
     let mut mem = DeviceMemory::new();
     bind_spmm(&mut mem, a, b, n);

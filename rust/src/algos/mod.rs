@@ -5,8 +5,10 @@
 //!   computes the launch grid for each compiler family, launches, and
 //!   extracts C with the cost report.
 //! * [`dgsparse`] — the dgSPARSE-library RB+PR shape, schedule-generated
-//!   through `compiler::lower` with the full §7.2 parameter space.
+//!   through `compiler::compile` with the full §7.2 parameter space.
 //! * [`sddmm`] — the §4.3 grouped SDDMM, schedule-generated likewise.
+//! * [`mttkrp`] — the COO-3 MTTKRP/TTM segment kernels (Eq. 2a/2b), also
+//!   schedule-generated: the §2.1 quartet is complete.
 //! * [`catalog`] — the unified plan vocabulary ([`Algo`]) used by the
 //!   tuner, the benches, the CLI, and the coordinator's plan cache.
 
@@ -20,5 +22,6 @@ pub mod sddmm;
 pub use catalog::{Algo, AlgoResult};
 pub use cpu_ref::{spmm_flops, spmm_serial};
 pub use dgsparse::DgConfig;
+pub use mttkrp::{MttkrpConfig, TtmConfig};
 pub use runner::{run_schedule, SpmmRun};
 pub use sddmm::SddmmConfig;

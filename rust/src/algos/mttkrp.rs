@@ -2,9 +2,13 @@
 //!
 //! The paper's key observation (Figs. 4/5): the reductions inside MTTKRP,
 //! TTM, SDDMM and SpMM *behave the same*, so one grouped-reduction
-//! abstraction serves them all. Both kernels here are nnz-split grouped
+//! abstraction serves them all. Both kernels are nnz-split grouped
 //! **segment reductions** keyed by output coordinate — literally the same
-//! `segReduceGroup` macro instruction as the SpMM Listing-6 kernel:
+//! `segReduceGroup` macro instruction as the SpMM Listing-6 kernel — and
+//! both are **schedule-generated**: `Schedule::{mttkrp_group, ttm_group}`
+//! describe the COO-3 shape and `compiler::compile` checks each schedule
+//! against its stated `TensorAlgebra` before lowering. This module only
+//! binds buffers, picks the grid, and launches.
 //!
 //! * **MTTKRP** (Eq. 2a) `Y(i,j) = Σ_{k,l} A(i,k,l)·X1(k,j)·X2(l,j)` —
 //!   each non-zero contributes the elementwise product row
@@ -15,11 +19,14 @@
 
 use anyhow::Result;
 
-use crate::compiler::llir::{Kernel, Param, Stmt, Val};
+use crate::compiler::schedule::Schedule;
+use crate::compiler::{compile, TensorAlgebra};
 use crate::sim::{DeviceMemory, Machine};
 use crate::sparse::coo3::Coo3;
 
 use super::runner::SpmmRun;
+
+pub use crate::compiler::schedule::{MttkrpConfig, TtmConfig};
 
 // ---------------------------------------------------------------------------
 // serial oracles
@@ -57,130 +64,35 @@ pub fn ttm_serial(a: &Coo3, x1: &[f32], l_dim: usize) -> Vec<f32> {
     y
 }
 
-// ---------------------------------------------------------------------------
-// grouped segment-reduction kernels (shared shape)
-// ---------------------------------------------------------------------------
-
-/// Build the nnz-split grouped segment-reduction kernel shared by MTTKRP
-/// and TTM. Buffers: `seg_ids[p]` (output segment per nnz), `f1_idx[p]` /
-/// `f2_idx[p]` (factor-row gathers; `f2` unused for TTM), `A_vals`,
-/// `X1_vals`, `X2_vals`, `Y_vals`; scalars `N_dimension` (dense cols),
-/// `A_nnz`. Each thread owns one non-zero × `c` columns.
-fn build_seg_kernel(name: &str, with_x2: bool, n: u32, c: u32, p: u32, r: u32) -> Kernel {
-    let i = Val::ConstI;
-    let kchunks = (n / c) as i64;
-    let npb = p as i64 / kchunks;
-    let mut inner = vec![
-        Stmt::Decl {
-            var: "jcol".into(),
-            init: Val::add(Val::mul(Val::var("ko"), i(c as i64)), Val::var("ki")),
-            float: false,
-        },
-        Stmt::Decl { var: "val".into(), init: Val::ConstF(0.0), float: true },
-        Stmt::If {
-            // zero extension: out-of-range lanes keep val = 0
-            cond: Val::ge(Val::var("pos"), Val::param("A_nnz")),
-            then: vec![Stmt::Assign { var: "val".into(), val: Val::ConstF(0.0) }],
-            els: {
-                let x1 = Val::load(
-                    "X1_vals",
-                    Val::add(
-                        Val::mul(Val::load("f1_idx", Val::var("pos")), Val::param("N_dimension")),
-                        Val::var("jcol"),
-                    ),
-                );
-                let base = Val::mul(Val::load("A_vals", Val::var("pos")), x1);
-                let product = if with_x2 {
-                    Val::mul(
-                        base,
-                        Val::load(
-                            "X2_vals",
-                            Val::add(
-                                Val::mul(
-                                    Val::load("f2_idx", Val::var("pos")),
-                                    Val::param("N_dimension"),
-                                ),
-                                Val::var("jcol"),
-                            ),
-                        ),
-                    )
-                } else {
-                    base
-                };
-                vec![Stmt::Assign { var: "val".into(), val: product }]
-            },
-        },
-        Stmt::Decl {
-            var: "out".into(),
-            init: Val::add(
-                Val::mul(Val::var("seg"), Val::param("N_dimension")),
-                Val::var("jcol"),
-            ),
-            float: false,
-        },
-        // the same macro instruction as SpMM's Listing-6 kernel (§2.1)
-        Stmt::SegReduceGroup { array: "Y_vals".into(), idx: Val::var("out"), val: Val::var("val"), group: r },
-    ];
-    let body = vec![
-        Stmt::Comment(format!("{name}: nnz-split grouped segment reduction (r={r})")),
-        Stmt::Decl { var: "e".into(), init: Val::rem(Val::ThreadIdx, i(npb)), float: false },
-        Stmt::Decl { var: "ko".into(), init: Val::div(Val::ThreadIdx, i(npb)), float: false },
-        Stmt::Decl {
-            var: "pos".into(),
-            init: Val::add(Val::mul(Val::BlockIdx, i(npb)), Val::var("e")),
-            float: false,
-        },
-        Stmt::Decl {
-            var: "seg".into(),
-            init: Val::load("seg_ids", Val::min(Val::var("pos"), Val::sub(Val::param("A_nnz_pad"), i(1)))),
-            float: false,
-        },
-        Stmt::For { var: "ki".into(), lo: i(0), hi: i(c as i64), step: i(1), body: std::mem::take(&mut inner) },
-    ];
-    let mut params = vec![
-        Param::i32_array("seg_ids"),
-        Param::i32_array("f1_idx"),
-        Param::f32_array("A_vals"),
-        Param::f32_array("X1_vals"),
-        Param::f32_array("Y_vals"),
-        Param::i32_scalar("N_dimension"),
-        Param::i32_scalar("A_nnz"),
-        Param::i32_scalar("A_nnz_pad"),
-    ];
-    if with_x2 {
-        params.insert(2, Param::i32_array("f2_idx"));
-        params.insert(5, Param::f32_array("X2_vals"));
-    }
-    Kernel { name: format!("{name}_c{c}_r{r}"), params, body, block_dim: p }
+/// FLOPs per MTTKRP: each non-zero × column does `v·x1·x2` plus the
+/// accumulate — 3 flops.
+pub fn mttkrp_flops(a: &Coo3, j_dim: usize) -> u64 {
+    3 * a.nnz() as u64 * j_dim as u64
 }
 
-fn launch_seg(
-    machine: &Machine,
-    kernel: &Kernel,
-    mem: &mut DeviceMemory,
-    nnz: usize,
-    n: u32,
-    c: u32,
-    p: u32,
-) -> Result<crate::sim::KernelReport> {
-    let npb = (p / (n / c)) as usize;
-    let grid = nnz.div_ceil(npb).max(1) as u32;
-    machine.launch(kernel, grid, mem)
+/// FLOPs per TTM: multiply + accumulate per non-zero × column.
+pub fn ttm_flops(a: &Coo3, l_dim: usize) -> u64 {
+    2 * a.nnz() as u64 * l_dim as u64
 }
 
-/// Run grouped MTTKRP on the simulator. `n` = factor columns (J).
+// ---------------------------------------------------------------------------
+// launch glue for the schedule-generated COO-3 segment kernels
+// ---------------------------------------------------------------------------
+
+/// Run grouped MTTKRP on the simulator. `x1` is row-major
+/// `[a.dim1 × j_dim]`, `x2` row-major `[a.dim2 × j_dim]`; returns
+/// row-major `[a.dim0 × j_dim]`.
 pub fn run_mttkrp(
     machine: &Machine,
     a: &Coo3,
     x1: &[f32],
     x2: &[f32],
-    n: u32,
-    c: u32,
-    r: u32,
+    cfg: &MttkrpConfig,
 ) -> Result<SpmmRun> {
-    anyhow::ensure!(n % c == 0 && 256 % (n / c) == 0, "c must divide N with 256 % (N/c) == 0");
-    let p = 256u32;
-    let kernel = build_seg_kernel("mttkrp", true, n, c, p, r);
+    let n = cfg.j_dim;
+    anyhow::ensure!(x1.len() == a.dim1 * n as usize, "X1 must be dim1 x J");
+    anyhow::ensure!(x2.len() == a.dim2 * n as usize, "X2 must be dim2 x J");
+    let kernel = compile(&TensorAlgebra::mttkrp(), &Schedule::mttkrp_group(*cfg))?;
     let seg: Vec<i32> = a.idx0.iter().map(|&x| x as i32).collect();
     let mut mem = DeviceMemory::new();
     bind_seg_common(&mut mem, &seg, a, n, a.dim0);
@@ -188,23 +100,26 @@ pub fn run_mttkrp(
     mem.bind_i32("f2_idx", a.idx2.iter().map(|&x| x as i32).collect());
     mem.bind_f32("X1_vals", x1.to_vec());
     mem.bind_f32("X2_vals", x2.to_vec());
-    let report = launch_seg(machine, &kernel, &mut mem, a.nnz(), n, c, p)?;
+    let grid = a.nnz().div_ceil(cfg.npb() as usize).max(1) as u32;
+    let report = machine.launch(&kernel, grid, &mut mem)?;
     let mut y = mem.take_f32("Y_vals").expect("Y_vals");
     y.truncate(a.dim0 * n as usize);
     Ok(SpmmRun { c: y, report, kernel_name: kernel.name })
 }
 
-/// Run grouped TTM on the simulator. `n` = dense output columns (L).
-pub fn run_ttm(machine: &Machine, a: &Coo3, x1: &[f32], n: u32, c: u32, r: u32) -> Result<SpmmRun> {
-    anyhow::ensure!(n % c == 0 && 256 % (n / c) == 0, "c must divide N with 256 % (N/c) == 0");
-    let p = 256u32;
-    let kernel = build_seg_kernel("ttm", false, n, c, p, r);
+/// Run grouped TTM on the simulator. `x1` is row-major
+/// `[a.dim2 × l_dim]`; returns row-major `[(a.dim0·a.dim1) × l_dim]`.
+pub fn run_ttm(machine: &Machine, a: &Coo3, x1: &[f32], cfg: &TtmConfig) -> Result<SpmmRun> {
+    let n = cfg.l_dim;
+    anyhow::ensure!(x1.len() == a.dim2 * n as usize, "X1 must be dim2 x L");
+    let kernel = compile(&TensorAlgebra::ttm(), &Schedule::ttm_group(*cfg))?;
     let seg: Vec<i32> = a.leading_fiber_ids().iter().map(|&x| x as i32).collect();
     let mut mem = DeviceMemory::new();
     bind_seg_common(&mut mem, &seg, a, n, a.dim0 * a.dim1);
     mem.bind_i32("f1_idx", a.idx2.iter().map(|&x| x as i32).collect());
     mem.bind_f32("X1_vals", x1.to_vec());
-    let report = launch_seg(machine, &kernel, &mut mem, a.nnz(), n, c, p)?;
+    let grid = a.nnz().div_ceil(cfg.npb() as usize).max(1) as u32;
+    let report = machine.launch(&kernel, grid, &mut mem)?;
     let mut y = mem.take_f32("Y_vals").expect("Y_vals");
     y.truncate(a.dim0 * a.dim1 * n as usize);
     Ok(SpmmRun { c: y, report, kernel_name: kernel.name })
@@ -237,13 +152,12 @@ mod tests {
     #[test]
     fn mttkrp_matches_oracle_group_sweep() {
         let a = Coo3::random((40, 30, 20), 600, 5);
-        let n = 8u32;
         let x1 = dense(30 * 8, 1);
         let x2 = dense(20 * 8, 2);
         let want = mttkrp_serial(&a, &x1, &x2, 8);
         let m = Machine::new(HwProfile::rtx3090());
         for r in [2u32, 8, 32] {
-            let run = run_mttkrp(&m, &a, &x1, &x2, n, 4, r).unwrap();
+            let run = run_mttkrp(&m, &a, &x1, &x2, &MttkrpConfig::new(8, 4, r)).unwrap();
             let err = max_rel_err(&run.c, &want);
             assert!(err < 5e-4, "r={r}: err {err}");
         }
@@ -252,12 +166,11 @@ mod tests {
     #[test]
     fn ttm_matches_oracle_group_sweep() {
         let a = Coo3::random((16, 24, 32), 800, 9);
-        let n = 4u32;
         let x1 = dense(32 * 4, 3);
         let want = ttm_serial(&a, &x1, 4);
         let m = Machine::new(HwProfile::v100());
         for r in [4u32, 16, 32] {
-            let run = run_ttm(&m, &a, &x1, n, 4, r).unwrap();
+            let run = run_ttm(&m, &a, &x1, &TtmConfig::new(4, 4, r)).unwrap();
             let err = max_rel_err(&run.c, &want);
             assert!(err < 5e-4, "r={r}: err {err}");
         }
@@ -265,9 +178,12 @@ mod tests {
 
     #[test]
     fn mttkrp_reduction_reuses_spmm_macro() {
-        // structural check of the §2.1 claim: the MTTKRP kernel's reduction
-        // is the same SegReduceGroup instruction as SpMM's Listing 6
-        let k = build_seg_kernel("mttkrp", true, 4, 4, 256, 16);
+        // structural check of the §2.1 claim: the compiled MTTKRP kernel's
+        // reduction is the same SegReduceGroup instruction as SpMM's
+        // Listing 6 — and it now arrives through compiler::compile from a
+        // stated algebra, not from a hand-assembled kernel
+        let k = compile(&TensorAlgebra::mttkrp(), &Schedule::mttkrp_group(MttkrpConfig::new(4, 4, 16)))
+            .unwrap();
         assert_eq!(
             k.count_matching(|s| matches!(s, crate::compiler::llir::Stmt::SegReduceGroup { group: 16, .. })),
             1
@@ -278,7 +194,16 @@ mod tests {
     fn empty_tensor_ok() {
         let a = Coo3::new((4, 4, 4), vec![]);
         let m = Machine::new(HwProfile::rtx2080());
-        let run = run_ttm(&m, &a, &dense(4 * 4, 1), 4, 4, 8).unwrap();
+        let run = run_ttm(&m, &a, &dense(4 * 4, 1), &TtmConfig::new(4, 4, 8)).unwrap();
         assert!(run.c.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn invalid_width_is_an_error_not_a_panic() {
+        let a = Coo3::random((8, 8, 8), 50, 1);
+        let m = Machine::new(HwProfile::rtx3090());
+        // J = 20: no coarsening makes the chunks divide the block
+        let err = run_mttkrp(&m, &a, &dense(8 * 20, 1), &dense(8 * 20, 2), &MttkrpConfig::new(20, 4, 8));
+        assert!(err.is_err());
     }
 }

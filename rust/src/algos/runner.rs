@@ -3,8 +3,8 @@
 
 use anyhow::Result;
 
+use crate::compiler::compile;
 use crate::compiler::llir::Kernel;
-use crate::compiler::lower;
 use crate::compiler::schedule::{Family, Schedule};
 use crate::sim::{DeviceMemory, KernelReport, Machine};
 use crate::sparse::Csr;
@@ -58,16 +58,17 @@ pub fn launch_shape(schedule: &Schedule, a: &Csr) -> (u32, Option<Vec<i32>>) {
             let rpb = (cfg.p / (cfg.g * kchunks)) as usize;
             (a.rows.div_ceil(rpb.max(1)).max(1) as u32, None)
         }
-        Family::SddmmGroup | Family::DgRowBalanced => {
+        Family::SddmmGroup | Family::DgRowBalanced | Family::MttkrpGroup | Family::TtmGroup => {
             unreachable!("spmm_config() above rejects non-SpMM schedules")
         }
     }
 }
 
-/// Lower the schedule, launch it on `machine`, return C + report.
+/// Compile the schedule against its stated algebra, launch it on
+/// `machine`, return C + report.
 pub fn run_schedule(machine: &Machine, schedule: &Schedule, a: &Csr, b: &[f32]) -> Result<SpmmRun> {
     let n = schedule.spmm_config().expect("run_schedule serves the SpMM families").n as usize;
-    let kernel = lower(schedule)?;
+    let kernel = compile(&schedule.algebra(), schedule)?;
     run_kernel(machine, &kernel, schedule, a, b, n)
 }
 

@@ -5,7 +5,7 @@
 //! same" as SpMM's (§2.1, Fig. 4/5) — so the *same* `atomicAddGroup`
 //! macro instruction and the same GroupSize tuning apply. The kernel is
 //! **schedule-generated**: [`Schedule::sddmm_group`] describes the
-//! `{<1/g nnz>, r}` shape and [`crate::compiler::lower`] emits it through
+//! `{<1/g nnz>, r}` shape and [`crate::compiler::lower`](mod@crate::compiler::lower) emits it through
 //! the same reduction pipeline as SpMM — this module only binds buffers,
 //! picks the grid, and launches, demonstrating that segment group is not
 //! SpMM-specific.
@@ -67,7 +67,8 @@ pub fn run(
 ) -> Result<SpmmRun> {
     assert_eq!(x1.len(), a.rows * cfg.j_dim as usize);
     assert_eq!(x2.len(), cfg.j_dim as usize * a.cols);
-    let kernel = crate::compiler::lower(&Schedule::sddmm_group(*cfg))?;
+    let sched = Schedule::sddmm_group(*cfg);
+    let kernel = crate::compiler::compile(&sched.algebra(), &sched)?;
     let grid = (a.nnz() as u32).div_ceil(cfg.npb()).max(1);
     let rowidx: Vec<i32> = a.to_coo().row_idx.iter().map(|&x| x as i32).collect();
     let mut mem = DeviceMemory::new();

@@ -105,7 +105,7 @@ impl fmt::Display for Writeback {
 /// captures dgSPARSE's RB+PR kernel (partial results per row visit under a
 /// strided row loop), and [`Custom`] admits any caller-defined strategy by
 /// naming its writeback discipline — new strategies need no lowerer edits
-/// because [`crate::compiler::lower`] consumes only the [`Writeback`].
+/// because [`crate::compiler::lower`](mod@crate::compiler::lower) consumes only the [`Writeback`].
 ///
 /// [`RowBalancedPartial`]: ReductionStrategy::RowBalancedPartial
 /// [`Custom`]: ReductionStrategy::Custom
@@ -178,7 +178,7 @@ impl GroupSpec {
 /// strategy × group size × writeback discipline. Constructed from a
 /// [`GroupSpec`] (grouped families) or [`ReductionPlan::serial`] (the
 /// stock TACO families); consumed by the family-agnostic emission
-/// pipeline in [`crate::compiler::lower`].
+/// pipeline in [`crate::compiler::lower`](mod@crate::compiler::lower).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ReductionPlan {
     /// Reduction parallelism (the paper's `r`); 1 for serial reductions.

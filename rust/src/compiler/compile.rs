@@ -1,0 +1,325 @@
+//! The compiler's front door: `compile(&TensorAlgebra, &Schedule)`.
+//!
+//! Every kernel the system serves is a lowering of a *stated* tensor
+//! algebra (§2.1's quartet — SpMM, SDDMM, MTTKRP, TTM). This module makes
+//! that provable at the API boundary: [`compile`] takes the algebra
+//! expression **and** the schedule, checks that they agree, and only then
+//! hands the schedule to [`lower`]. Mismatches — a schedule built for a
+//! different algebra, or a grouped reduction bound to a dimension that is
+//! not one of the expression's `reduction_dims()` — are typed
+//! [`CompileError`]s, not silent miscompiles.
+//!
+//! [`ScheduleBuilder`] is the discovery side of the same contract: given
+//! an algebra it names the legal schedule [`Family`]s and constructs
+//! validated schedules from a [`KernelConfig`], so callers start from the
+//! expression rather than from per-family constructor functions.
+
+use thiserror::Error;
+
+use super::expr::{IndexVar, TensorAlgebra};
+use super::llir::Kernel;
+use super::lower::{lower, LowerError};
+use super::schedule::{Family, KernelConfig, Schedule};
+
+/// Typed front-door failures: the schedule/expression contract violations
+/// [`compile`] rejects before any lowering happens.
+#[derive(Debug, Error)]
+pub enum CompileError {
+    /// The schedule was built for a different algebra than the one the
+    /// caller asked to compile.
+    #[error("schedule compiles `{scheduled}`, not the requested `{requested}`")]
+    AlgebraMismatch { requested: String, scheduled: String },
+    /// The grouped reduction is bound to a schedule variable none of whose
+    /// source dimensions is a reduction dimension of the expression — the
+    /// group would "optimize" a dimension that is never reduced.
+    #[error(
+        "grouped reduction bound to `{var}` (derived from [{roots}]), but the \
+         reduction dims of `{algebra}` are [{reduction}]"
+    )]
+    GroupOnNonReductionDim { var: String, roots: String, algebra: String, reduction: String },
+    /// The expression is not a sparse-dense hybrid (Eq. 1: exactly one
+    /// sparse operand) — nothing in the §3 space applies to it.
+    #[error("`{algebra}` is not a sparse-dense hybrid (exactly one sparse operand required)")]
+    NotHybrid { algebra: String },
+    /// The requested family does not lower the given algebra.
+    #[error("family `{family}` is not a legal schedule family for `{algebra}`")]
+    IllegalFamily { family: Family, algebra: String },
+    /// The family and the config kind disagree (e.g. an SpMM family with
+    /// an SDDMM config).
+    #[error("family `{family}` cannot be built from a {config} config")]
+    ConfigMismatch { family: Family, config: &'static str },
+    /// The schedule agreed with its algebra but failed to lower
+    /// (unsupported shape or invalid tuning config).
+    #[error(transparent)]
+    Lower(#[from] LowerError),
+}
+
+/// Compile a tensor algebra expression under a schedule.
+///
+/// The single public entry point of the middle-end: validates that
+/// `schedule` actually lowers `algebra` (same statement, grouped
+/// reduction on a genuine reduction dimension), then runs the
+/// classification → [`Schedule::reduction_plan`] → emission pipeline of
+/// [`lower`]. Returns the LLIR kernel, or a typed [`CompileError`].
+pub fn compile(algebra: &TensorAlgebra, schedule: &Schedule) -> Result<Kernel, CompileError> {
+    let scheduled = schedule.algebra();
+    if &scheduled != algebra {
+        return Err(CompileError::AlgebraMismatch {
+            requested: algebra.to_string(),
+            scheduled: scheduled.to_string(),
+        });
+    }
+    check_group_dims(algebra, schedule)?;
+    Ok(lower(schedule)?)
+}
+
+/// The schedule/expression agreement check on the reduction axis: the
+/// grouped variable's provenance roots must intersect the expression's
+/// reduction dimensions.
+fn check_group_dims(algebra: &TensorAlgebra, schedule: &Schedule) -> Result<(), CompileError> {
+    if let Some((var, _)) = schedule.group_binding() {
+        let roots = schedule.roots_of(&var);
+        let reduction = algebra.reduction_dims();
+        if !roots.iter().any(|r| reduction.contains(r)) {
+            return Err(CompileError::GroupOnNonReductionDim {
+                var: var.to_string(),
+                roots: join(&roots),
+                algebra: algebra.to_string(),
+                reduction: join(&reduction),
+            });
+        }
+    }
+    Ok(())
+}
+
+fn join(vars: &[IndexVar]) -> String {
+    vars.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(",")
+}
+
+/// Expression-first schedule construction: derives the legal schedule
+/// families of a tensor algebra and builds validated [`Schedule`]s from a
+/// [`KernelConfig`], so group sizes are always checked against the
+/// expression's `reduction_dims()` before anything lowers.
+pub struct ScheduleBuilder {
+    algebra: TensorAlgebra,
+}
+
+impl ScheduleBuilder {
+    /// Start from an algebra. Rejects expressions outside Eq. 1's
+    /// sparse-dense hybrid class — the only inputs the §3 space covers.
+    pub fn new(algebra: &TensorAlgebra) -> Result<ScheduleBuilder, CompileError> {
+        if !algebra.is_sparse_dense_hybrid() {
+            return Err(CompileError::NotHybrid { algebra: algebra.to_string() });
+        }
+        Ok(ScheduleBuilder { algebra: algebra.clone() })
+    }
+
+    pub fn algebra(&self) -> &TensorAlgebra {
+        &self.algebra
+    }
+
+    /// The schedule families that lower this algebra. The quartet maps to:
+    /// SpMM → the four §6 families plus the dgSPARSE RB+PR library shape;
+    /// SDDMM → the §4.3 grouped dot reduction; MTTKRP/TTM → the COO-3
+    /// nnz-split segment reductions. Unknown (but hybrid) algebras have no
+    /// families yet — an empty list, not a guess.
+    pub fn legal_families(&self) -> Vec<Family> {
+        if self.algebra == TensorAlgebra::spmm() {
+            vec![
+                Family::NnzSerial,
+                Family::RowSerial,
+                Family::RowGroup,
+                Family::NnzGroup,
+                Family::DgRowBalanced,
+            ]
+        } else if self.algebra == TensorAlgebra::sddmm() {
+            vec![Family::SddmmGroup]
+        } else if self.algebra == TensorAlgebra::mttkrp() {
+            vec![Family::MttkrpGroup]
+        } else if self.algebra == TensorAlgebra::ttm() {
+            vec![Family::TtmGroup]
+        } else {
+            vec![]
+        }
+    }
+
+    /// Build the schedule of `family` from `config`, validated against
+    /// this builder's algebra (family legality, config kind, and the
+    /// grouped-reduction dimension check).
+    pub fn schedule(&self, family: Family, config: KernelConfig) -> Result<Schedule, CompileError> {
+        if !self.legal_families().contains(&family) {
+            return Err(CompileError::IllegalFamily { family, algebra: self.algebra.to_string() });
+        }
+        let schedule = match (family, config) {
+            (Family::NnzSerial, KernelConfig::Spmm(c)) => Schedule::taco_nnz_serial(c),
+            (Family::RowSerial, KernelConfig::Spmm(c)) => Schedule::taco_row_serial(c),
+            (Family::RowGroup, KernelConfig::Spmm(c)) => Schedule::sgap_row_group(c, c.r),
+            (Family::NnzGroup, KernelConfig::Spmm(c)) => Schedule::sgap_nnz_group(c, c.r),
+            (Family::SddmmGroup, KernelConfig::Sddmm(c)) => Schedule::sddmm_group(c),
+            (Family::DgRowBalanced, KernelConfig::Dg(c)) => Schedule::dgsparse_rb_pr(c),
+            (Family::MttkrpGroup, KernelConfig::Mttkrp(c)) => Schedule::mttkrp_group(c),
+            (Family::TtmGroup, KernelConfig::Ttm(c)) => Schedule::ttm_group(c),
+            (family, config) => {
+                return Err(CompileError::ConfigMismatch { family, config: config.kind() })
+            }
+        };
+        check_group_dims(&self.algebra, &schedule)?;
+        Ok(schedule)
+    }
+
+    /// Convenience: build the schedule and compile it in one step.
+    pub fn compile(&self, family: Family, config: KernelConfig) -> Result<Kernel, CompileError> {
+        let schedule = self.schedule(family, config)?;
+        compile(&self.algebra, &schedule)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::expr::{Access, Expr, TensorVar};
+    use crate::compiler::schedule::{
+        DgConfig, MttkrpConfig, ScheduleCmd, SddmmConfig, SpmmConfig, TtmConfig,
+    };
+
+    #[test]
+    fn the_quartet_compiles_through_the_front_door() {
+        let cases: Vec<(TensorAlgebra, Schedule)> = vec![
+            (TensorAlgebra::spmm(), Schedule::sgap_nnz_group(SpmmConfig::default(), 32)),
+            (TensorAlgebra::spmm(), Schedule::taco_row_serial(SpmmConfig::default())),
+            (TensorAlgebra::spmm(), Schedule::dgsparse_rb_pr(DgConfig::stock(16))),
+            (TensorAlgebra::sddmm(), Schedule::sddmm_group(SddmmConfig::new(64, 16, 8))),
+            (TensorAlgebra::mttkrp(), Schedule::mttkrp_group(MttkrpConfig::new(8, 4, 16))),
+            (TensorAlgebra::ttm(), Schedule::ttm_group(TtmConfig::new(4, 4, 8))),
+        ];
+        for (algebra, schedule) in cases {
+            compile(&algebra, &schedule)
+                .unwrap_or_else(|e| panic!("`{algebra}` failed to compile: {e}"));
+        }
+    }
+
+    #[test]
+    fn algebra_mismatch_is_a_typed_error() {
+        // an SDDMM schedule cannot claim to compile SpMM
+        let err = compile(
+            &TensorAlgebra::spmm(),
+            &Schedule::sddmm_group(SddmmConfig::new(64, 16, 8)),
+        )
+        .unwrap_err();
+        assert!(matches!(err, CompileError::AlgebraMismatch { .. }), "{err}");
+        // ... nor can a TTM schedule compile MTTKRP, even though both
+        // lower the same COO-3 segment shape
+        let err = compile(
+            &TensorAlgebra::mttkrp(),
+            &Schedule::ttm_group(TtmConfig::new(4, 4, 8)),
+        )
+        .unwrap_err();
+        assert!(matches!(err, CompileError::AlgebraMismatch { .. }), "{err}");
+        let msg = err.to_string();
+        assert!(msg.contains("Y(i,j,l)") && msg.contains("Y(i,j)"), "{msg}");
+    }
+
+    #[test]
+    fn group_on_a_non_reduction_dim_is_a_typed_error() {
+        // sabotage Listing 5: move the grouped reduction from jpos1 (roots
+        // to j, the reduction dim) onto kii (roots to the fused output
+        // dims i,k) — stock lowering would silently emit the RowGroup
+        // kernel anyway; compile refuses
+        let mut s = Schedule::sgap_row_group(SpmmConfig::default(), 8);
+        for cmd in &mut s.cmds {
+            if let ScheduleCmd::ParallelizeGroup { var, .. } = cmd {
+                *var = IndexVar::new("kii");
+            }
+        }
+        let err = compile(&TensorAlgebra::spmm(), &s).unwrap_err();
+        assert!(matches!(err, CompileError::GroupOnNonReductionDim { .. }), "{err}");
+        let msg = err.to_string();
+        assert!(msg.contains("kii") && msg.contains('j'), "{msg}");
+    }
+
+    #[test]
+    fn builder_derives_legal_families_per_algebra() {
+        let spmm = ScheduleBuilder::new(&TensorAlgebra::spmm()).unwrap();
+        let fams = spmm.legal_families();
+        assert_eq!(fams.len(), 5);
+        assert!(fams.contains(&Family::NnzGroup) && fams.contains(&Family::DgRowBalanced));
+        assert_eq!(
+            ScheduleBuilder::new(&TensorAlgebra::mttkrp()).unwrap().legal_families(),
+            vec![Family::MttkrpGroup]
+        );
+        assert_eq!(
+            ScheduleBuilder::new(&TensorAlgebra::ttm()).unwrap().legal_families(),
+            vec![Family::TtmGroup]
+        );
+        assert_eq!(
+            ScheduleBuilder::new(&TensorAlgebra::sddmm()).unwrap().legal_families(),
+            vec![Family::SddmmGroup]
+        );
+    }
+
+    #[test]
+    fn builder_compiles_every_family_it_names() {
+        let quartet = [
+            TensorAlgebra::spmm(),
+            TensorAlgebra::sddmm(),
+            TensorAlgebra::mttkrp(),
+            TensorAlgebra::ttm(),
+        ];
+        for algebra in quartet {
+            let b = ScheduleBuilder::new(&algebra).unwrap();
+            for family in b.legal_families() {
+                let config = match family {
+                    Family::NnzSerial | Family::RowSerial | Family::RowGroup | Family::NnzGroup => {
+                        KernelConfig::Spmm(SpmmConfig { r: 8, ..SpmmConfig::default() })
+                    }
+                    Family::DgRowBalanced => KernelConfig::Dg(DgConfig::stock(16)),
+                    Family::SddmmGroup => KernelConfig::Sddmm(SddmmConfig::new(32, 16, 8)),
+                    Family::MttkrpGroup => KernelConfig::Mttkrp(MttkrpConfig::new(8, 4, 16)),
+                    Family::TtmGroup => KernelConfig::Ttm(TtmConfig::new(4, 4, 8)),
+                };
+                b.compile(family, config)
+                    .unwrap_or_else(|e| panic!("`{algebra}` family {family}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn builder_rejects_illegal_family_and_mismatched_config() {
+        let b = ScheduleBuilder::new(&TensorAlgebra::mttkrp()).unwrap();
+        let err = b
+            .schedule(Family::NnzGroup, KernelConfig::Spmm(SpmmConfig::default()))
+            .unwrap_err();
+        assert!(matches!(err, CompileError::IllegalFamily { .. }), "{err}");
+        let spmm = ScheduleBuilder::new(&TensorAlgebra::spmm()).unwrap();
+        let err = spmm
+            .schedule(Family::NnzGroup, KernelConfig::Sddmm(SddmmConfig::new(16, 8, 4)))
+            .unwrap_err();
+        assert!(matches!(err, CompileError::ConfigMismatch { .. }), "{err}");
+    }
+
+    #[test]
+    fn non_hybrid_expressions_are_rejected() {
+        // two sparse operands: outside Eq. 1's class
+        let alg = TensorAlgebra {
+            lhs: Access::new("C", &["i", "k"]),
+            rhs: Expr::Mul(
+                Box::new(Expr::Access(Access::new("A", &["i", "j"]))),
+                Box::new(Expr::Access(Access::new("B", &["j", "k"]))),
+            ),
+            tensors: vec![TensorVar::csr("A", 2), TensorVar::csr("B", 2)],
+        };
+        let err = ScheduleBuilder::new(&alg).unwrap_err();
+        assert!(matches!(err, CompileError::NotHybrid { .. }), "{err}");
+    }
+
+    #[test]
+    fn invalid_configs_surface_as_lower_errors() {
+        // the front door forwards config validation as a typed Lower error
+        let err = compile(
+            &TensorAlgebra::mttkrp(),
+            &Schedule::mttkrp_group(MttkrpConfig::new(8, 3, 16)),
+        )
+        .unwrap_err();
+        assert!(matches!(err, CompileError::Lower(LowerError::InvalidConfig(_))), "{err}");
+    }
+}

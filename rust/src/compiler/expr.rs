@@ -29,6 +29,16 @@ impl fmt::Display for IndexVar {
 pub enum LevelFormat {
     Dense,
     Compressed,
+    /// One coordinate stored per parent position (COO trailing levels).
+    Singleton,
+}
+
+impl LevelFormat {
+    /// Whether the level stores coordinates (vs a dense range) — any such
+    /// level makes the tensor sparse.
+    pub fn is_sparse(self) -> bool {
+        matches!(self, LevelFormat::Compressed | LevelFormat::Singleton)
+    }
 }
 
 /// A tensor variable with its per-level formats.
@@ -50,12 +60,22 @@ impl TensorVar {
         TensorVar { name: name.into(), formats }
     }
 
+    /// Coordinate format: a compressed leading level with singleton
+    /// trailing levels — what the runtime's `Coo3` actually stores for the
+    /// MTTKRP/TTM operand (every level holds coordinates; no level is a
+    /// dense range).
+    pub fn coo(name: &str, order: usize) -> Self {
+        let mut formats = vec![LevelFormat::Singleton; order];
+        formats[0] = LevelFormat::Compressed;
+        TensorVar { name: name.into(), formats }
+    }
+
     pub fn order(&self) -> usize {
         self.formats.len()
     }
 
     pub fn is_sparse(&self) -> bool {
-        self.formats.contains(&LevelFormat::Compressed)
+        self.formats.iter().any(|f| f.is_sparse())
     }
 }
 
@@ -191,7 +211,8 @@ impl TensorAlgebra {
         }
     }
 
-    /// MTTKRP (Eq. 2a): `Y(i,j) = A(i,k,l) * X1(k,j) * X2(l,j)`.
+    /// MTTKRP (Eq. 2a): `Y(i,j) = A(i,k,l) * X1(k,j) * X2(l,j)`, A in
+    /// coordinate format (the runtime stores it as `sparse::coo3::Coo3`).
     pub fn mttkrp() -> Self {
         TensorAlgebra {
             lhs: Access::new("Y", &["i", "j"]),
@@ -203,7 +224,7 @@ impl TensorAlgebra {
                 Box::new(Expr::Access(Access::new("X2", &["l", "j"]))),
             ),
             tensors: vec![
-                TensorVar::csr("A", 3),
+                TensorVar::coo("A", 3),
                 TensorVar::dense("X1", 2),
                 TensorVar::dense("X2", 2),
                 TensorVar::dense("Y", 2),
@@ -211,7 +232,8 @@ impl TensorAlgebra {
         }
     }
 
-    /// TTM (Eq. 2b): `Y(i,j,l) = A(i,j,k) * X1(k,l)`.
+    /// TTM (Eq. 2b): `Y(i,j,l) = A(i,j,k) * X1(k,l)`, A in coordinate
+    /// format (the runtime stores it as `sparse::coo3::Coo3`).
     pub fn ttm() -> Self {
         TensorAlgebra {
             lhs: Access::new("Y", &["i", "j", "l"]),
@@ -219,7 +241,7 @@ impl TensorAlgebra {
                 Box::new(Expr::Access(Access::new("A", &["i", "j", "k"]))),
                 Box::new(Expr::Access(Access::new("X1", &["k", "l"]))),
             ),
-            tensors: vec![TensorVar::csr("A", 3), TensorVar::dense("X1", 2), TensorVar::dense("Y", 3)],
+            tensors: vec![TensorVar::coo("A", 3), TensorVar::dense("X1", 2), TensorVar::dense("Y", 3)],
         }
     }
 }
@@ -267,5 +289,23 @@ mod tests {
     fn csr_format_is_sparse() {
         assert!(TensorVar::csr("A", 2).is_sparse());
         assert!(!TensorVar::dense("B", 2).is_sparse());
+    }
+
+    #[test]
+    fn coo_format_matches_the_runtime_storage() {
+        // the MTTKRP/TTM operand is stored as Coo3: every level holds
+        // coordinates, so no level may claim to be a dense range
+        let a = TensorVar::coo("A", 3);
+        assert_eq!(
+            a.formats,
+            vec![LevelFormat::Compressed, LevelFormat::Singleton, LevelFormat::Singleton]
+        );
+        assert!(a.is_sparse());
+        assert!(!a.formats.contains(&LevelFormat::Dense));
+        for alg in [TensorAlgebra::mttkrp(), TensorAlgebra::ttm()] {
+            let t = alg.tensor("A").unwrap();
+            assert_eq!(t.formats, TensorVar::coo("A", 3).formats, "{alg}");
+            assert!(alg.is_sparse_dense_hybrid(), "{alg}");
+        }
     }
 }

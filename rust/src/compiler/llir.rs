@@ -3,7 +3,7 @@
 //! loads/stores, atomics, and the two segment-group **macro instructions**
 //! of §5.3 (`atomicAddGroup<T,G>` and `segReduceGroup<T,G>`).
 //!
-//! One producer: [`crate::compiler::lower`]'s emission pipeline — every
+//! One producer: [`crate::compiler::lower`](mod@crate::compiler::lower)'s emission pipeline — every
 //! kernel the catalog serves (SpMM families, SDDMM, dgSPARSE) arrives
 //! here from a `Schedule`, with each reduction writeback chosen by a
 //! [`crate::compiler::cin::ReductionPlan`]. Two consumers:

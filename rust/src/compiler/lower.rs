@@ -79,6 +79,12 @@ pub fn lower(schedule: &Schedule) -> Result<Kernel, LowerError> {
         }
         (Family::SddmmGroup, KernelConfig::Sddmm(cfg)) => Ok(lower_sddmm_group(&cfg, &plan)),
         (Family::DgRowBalanced, KernelConfig::Dg(cfg)) => Ok(lower_dg_row_balanced(&cfg, &plan)),
+        (Family::MttkrpGroup, KernelConfig::Mttkrp(cfg)) => {
+            Ok(lower_coo3_seg("mttkrp", true, cfg.j_dim, cfg.c, cfg.p, &plan))
+        }
+        (Family::TtmGroup, KernelConfig::Ttm(cfg)) => {
+            Ok(lower_coo3_seg("ttm", false, cfg.l_dim, cfg.c, cfg.p, &plan))
+        }
         (family, _) => Err(LowerError::Unsupported(format!(
             "family {family:?} does not match the schedule's kernel config"
         ))),
@@ -718,6 +724,112 @@ fn lower_dg_row_balanced(cfg: &DgConfig, plan: &ReductionPlan) -> Kernel {
     }
 }
 
+/// COO-3 nnz-split grouped segment reduction — the shared MTTKRP/TTM
+/// shape (Eq. 2a/2b) that completes the §2.1 quartet.
+///
+/// Each thread owns one non-zero × `c` dense columns; an r-wide
+/// `segReduceGroup` keyed by the output segment (row for MTTKRP, leading
+/// `(i,j)` fiber for TTM) combines contributions exactly like SpMM's
+/// Listing-6 kernel. Out-of-range lanes flow through with `val = 0`
+/// (zero extension, §5.2) and read the padded segment id, so the
+/// reduction stays branch-free.
+///
+/// Buffers: `seg_ids[p]` (output segment per nnz, one pad entry),
+/// `f1_idx[p]` / `f2_idx[p]` (factor-row gathers; `f2` only when
+/// `with_x2`), `A_vals`, `X1_vals`, `X2_vals`, `Y_vals`; scalars
+/// `N_dimension` (dense columns), `A_nnz`, `A_nnz_pad`.
+fn lower_coo3_seg(name: &str, with_x2: bool, n: u32, c: u32, p: u32, plan: &ReductionPlan) -> Kernel {
+    let kchunks = (n / c) as i64;
+    let npb = p as i64 / kchunks;
+    let r = plan.group;
+    let mut inner = vec![
+        Stmt::Decl {
+            var: "jcol".into(),
+            init: Val::add(Val::mul(Val::var("ko"), i(c as i64)), Val::var("ki")),
+            float: false,
+        },
+        // relaxed scalar workspace, assigned in the else branch (§5.3)
+        Stmt::Decl { var: "val".into(), init: Val::ConstF(0.0), float: true },
+        Stmt::If {
+            // zero extension: out-of-range lanes keep val = 0
+            cond: Val::ge(Val::var("pos"), Val::param("A_nnz")),
+            then: vec![Stmt::Assign { var: "val".into(), val: Val::ConstF(0.0) }],
+            els: {
+                let x1 = Val::load(
+                    "X1_vals",
+                    Val::add(
+                        Val::mul(Val::load("f1_idx", Val::var("pos")), Val::param("N_dimension")),
+                        Val::var("jcol"),
+                    ),
+                );
+                let base = Val::mul(Val::load("A_vals", Val::var("pos")), x1);
+                let product = if with_x2 {
+                    Val::mul(
+                        base,
+                        Val::load(
+                            "X2_vals",
+                            Val::add(
+                                Val::mul(
+                                    Val::load("f2_idx", Val::var("pos")),
+                                    Val::param("N_dimension"),
+                                ),
+                                Val::var("jcol"),
+                            ),
+                        ),
+                    )
+                } else {
+                    base
+                };
+                vec![Stmt::Assign { var: "val".into(), val: product }]
+            },
+        },
+        Stmt::Decl {
+            var: "out".into(),
+            init: Val::add(
+                Val::mul(Val::var("seg"), Val::param("N_dimension")),
+                Val::var("jcol"),
+            ),
+            float: false,
+        },
+        // the same macro instruction as SpMM's Listing-6 kernel (§2.1)
+        emit_reduction(plan, "Y_vals", Val::var("out"), Val::var("val")),
+    ];
+    let body = vec![
+        Stmt::Comment(format!("{name} {{<1 nnz, {c} col>, {r}}} — COO-3 grouped segment reduction")),
+        Stmt::Decl { var: "e".into(), init: Val::rem(Val::ThreadIdx, i(npb)), float: false },
+        Stmt::Decl { var: "ko".into(), init: Val::div(Val::ThreadIdx, i(npb)), float: false },
+        Stmt::Decl {
+            var: "pos".into(),
+            init: Val::add(Val::mul(Val::BlockIdx, i(npb)), Val::var("e")),
+            float: false,
+        },
+        Stmt::Decl {
+            var: "seg".into(),
+            init: Val::load(
+                "seg_ids",
+                Val::min(Val::var("pos"), Val::sub(Val::param("A_nnz_pad"), i(1))),
+            ),
+            float: false,
+        },
+        Stmt::For { var: "ki".into(), lo: i(0), hi: i(c as i64), step: i(1), body: std::mem::take(&mut inner) },
+    ];
+    let mut params = vec![
+        Param::i32_array("seg_ids"),
+        Param::i32_array("f1_idx"),
+        Param::f32_array("A_vals"),
+        Param::f32_array("X1_vals"),
+        Param::f32_array("Y_vals"),
+        Param::i32_scalar("N_dimension"),
+        Param::i32_scalar("A_nnz"),
+        Param::i32_scalar("A_nnz_pad"),
+    ];
+    if with_x2 {
+        params.insert(2, Param::i32_array("f2_idx"));
+        params.insert(5, Param::f32_array("X2_vals"));
+    }
+    Kernel { name: format!("{name}_c{c}_r{r}"), params, body, block_dim: p }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -729,12 +841,58 @@ mod tests {
 
     #[test]
     fn lowers_all_families() {
+        use crate::compiler::schedule::{MttkrpConfig, TtmConfig};
         lower(&Schedule::taco_nnz_serial(cfg())).unwrap();
         lower(&Schedule::taco_row_serial(cfg())).unwrap();
         lower(&Schedule::sgap_row_group(cfg(), 8)).unwrap();
         lower(&Schedule::sgap_nnz_group(cfg(), 32)).unwrap();
         lower(&Schedule::sddmm_group(SddmmConfig::new(64, 16, 8))).unwrap();
         lower(&Schedule::dgsparse_rb_pr(DgConfig::stock(16))).unwrap();
+        lower(&Schedule::mttkrp_group(MttkrpConfig::new(8, 4, 16))).unwrap();
+        lower(&Schedule::ttm_group(TtmConfig::new(4, 4, 8))).unwrap();
+    }
+
+    #[test]
+    fn mttkrp_lowers_to_the_segment_macro_with_zero_extension() {
+        use crate::compiler::schedule::MttkrpConfig;
+        let k = lower(&Schedule::mttkrp_group(MttkrpConfig::new(8, 4, 16))).unwrap();
+        assert_eq!(k.name, "mttkrp_c4_r16");
+        assert_eq!(k.count_matching(|s| matches!(s, Stmt::SegReduceGroup { group: 16, .. })), 1);
+        assert_eq!(k.count_matching(|s| matches!(s, Stmt::AtomicAdd { .. })), 0);
+        // zero extension: the then-branch zeroes the workspace
+        let zero_ext = k.count_matching(|s| {
+            matches!(s, Stmt::If { then, .. }
+                if matches!(then.first(), Some(Stmt::Assign { var, val: Val::ConstF(f) })
+                    if var == "val" && *f == 0.0))
+        });
+        assert_eq!(zero_ext, 1, "zero-extension branch missing");
+        // the Khatri-Rao gather reads both factor matrices
+        assert!(k.params.iter().any(|p| p.name == "X2_vals"));
+    }
+
+    #[test]
+    fn ttm_lowers_without_the_second_factor() {
+        use crate::compiler::schedule::TtmConfig;
+        let k = lower(&Schedule::ttm_group(TtmConfig::new(4, 4, 8))).unwrap();
+        assert_eq!(k.name, "ttm_c4_r8");
+        assert_eq!(k.count_matching(|s| matches!(s, Stmt::SegReduceGroup { group: 8, .. })), 1);
+        assert!(!k.params.iter().any(|p| p.name == "X2_vals" || p.name == "f2_idx"));
+    }
+
+    #[test]
+    fn coo3_invalid_configs_rejected() {
+        use crate::compiler::schedule::{MttkrpConfig, TtmConfig};
+        // c does not divide J
+        assert!(matches!(
+            lower(&Schedule::mttkrp_group(MttkrpConfig::new(8, 3, 16))),
+            Err(LowerError::InvalidConfig(_))
+        ));
+        // r wider than the contiguous nnz range per block (J/c = 64 chunks
+        // leave only 4 nnz lanes)
+        assert!(matches!(
+            lower(&Schedule::ttm_group(TtmConfig::new(64, 1, 8))),
+            Err(LowerError::InvalidConfig(_))
+        ));
     }
 
     #[test]

@@ -4,22 +4,31 @@
 //!
 //! ```text
 //! tensor algebra expression (expr)         — front-end input
-//!   └─ concretize → concrete index notation (cin)
-//!        └─ schedule commands transform the CIN (schedule)
-//!             fuse / split / pos / bound / reorder / parallelize
-//!             — parallelize now accepts GPUGroup{size, strategy} and
-//!               GPUWarp carries *tiling-only* semantics (§5.1)
-//!        └─ lower → imperative LLIR (lower, llir)
-//!             — segment-reduction lowering + zero extension (§5.2–5.3)
-//!        └─ codegen → CUDA-like text (codegen_cuda)
-//!                   → simulator launch (the LLIR itself runs on `sim`)
+//!   └─ compile(&TensorAlgebra, &Schedule)  — the front door (compile)
+//!        │  ScheduleBuilder derives legal families per algebra and
+//!        │  rejects schedule/expression mismatches with typed errors
+//!        └─ concretize → concrete index notation (cin)
+//!             └─ schedule commands transform the CIN (schedule)
+//!                  fuse / split / pos / bound / reorder / parallelize
+//!                  — parallelize now accepts GPUGroup{size, strategy} and
+//!                    GPUWarp carries *tiling-only* semantics (§5.1)
+//!             └─ lower → imperative LLIR (lower, llir)
+//!                  — segment-reduction lowering + zero extension (§5.2–5.3)
+//!             └─ codegen → CUDA-like text (codegen_cuda)
+//!                        → simulator launch (the LLIR itself runs on `sim`)
 //! ```
+//!
+//! Every served kernel — the four SpMM families, SDDMM, the dgSPARSE
+//! RB+PR shape, MTTKRP, and TTM (the full §2.1 quartet) — enters through
+//! [`compile()`]: an algebra in, a kernel out, with the grouped reduction
+//! provably bound to one of the expression's `reduction_dims()`.
 //!
 //! The optimization space the schedules draw from is formalized in
 //! [`spaces`] (atomic parallelism, §3).
 
 pub mod cin;
 pub mod codegen_cuda;
+pub mod compile;
 pub mod expr;
 pub mod llir;
 pub mod lower;
@@ -29,10 +38,12 @@ pub mod spaces;
 pub use cin::{
     Cin, GroupSpec, OutputRaceStrategy, ParallelUnit, ReductionPlan, ReductionStrategy, Writeback,
 };
+pub use compile::{compile, CompileError, ScheduleBuilder};
 pub use expr::{Access, Expr, IndexVar, LevelFormat, TensorAlgebra, TensorVar};
 pub use llir::{Kernel, LaunchConfig, Stmt, Val};
 pub use lower::{lower, LowerError};
 pub use schedule::{
-    DgConfig, Family, KernelConfig, Schedule, ScheduleCmd, SddmmConfig, SpmmConfig,
+    DgConfig, Family, KernelConfig, MttkrpConfig, Schedule, ScheduleCmd, SddmmConfig, SpmmConfig,
+    TtmConfig,
 };
 pub use spaces::{AtomicPoint, DataKind, Factor};

@@ -12,16 +12,18 @@
 //! lowerer's family-agnostic emission pipeline consumes.
 //!
 //! Every kernel the catalog exposes — the four SpMM families, the grouped
-//! SDDMM of §4.3, and the dgSPARSE RB+PR library shape — is described
-//! here and lowered through [`crate::compiler::lower`]; there are no
-//! hand-assembled LLIR kernels outside the compiler.
+//! SDDMM of §4.3, the dgSPARSE RB+PR library shape, and the COO-3
+//! MTTKRP/TTM segment families — is described here and lowered through
+//! [`crate::compiler::lower`](mod@crate::compiler::lower) (entered via `compiler::compile`, which
+//! checks each schedule against its stated [`TensorAlgebra`]); there are
+//! no hand-assembled LLIR kernels outside the compiler.
 
 use std::fmt;
 
 use super::cin::{
     Cin, GroupSpec, OutputRaceStrategy, ParallelUnit, ReductionPlan, ReductionStrategy, Writeback,
 };
-use super::expr::{Access, Expr, IndexVar};
+use super::expr::{Access, Expr, IndexVar, TensorAlgebra};
 
 /// One scheduling command (subset of TACO's API used by the paper).
 #[derive(Debug, Clone, PartialEq)]
@@ -271,8 +273,107 @@ impl DgConfig {
     }
 }
 
+/// Tunable MTTKRP configuration (Eq. 2a): `Y(i,j) = Σ A(i,k,l)·X1(k,j)·
+/// X2(l,j)` as a COO-3 nnz-split grouped **segment reduction** keyed by
+/// the output row `i` — the same `segReduceGroup` macro instruction as
+/// SpMM's Listing-6 kernel (§2.1's "the reductions behave the same").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MttkrpConfig {
+    /// Dense factor columns J (`Y` is `[dim0 × J]`).
+    pub j_dim: u32,
+    /// Column coarsening: factor columns per thread.
+    pub c: u32,
+    /// Threads per block.
+    pub p: u32,
+    /// Reduction parallelism (GroupSize).
+    pub r: u32,
+}
+
+impl MttkrpConfig {
+    pub fn new(j_dim: u32, c: u32, r: u32) -> Self {
+        MttkrpConfig { j_dim, c, p: 256, r }
+    }
+
+    /// Column-chunks per tile: how many thread-columns cover J. (The
+    /// guards keep schedule construction total for configs `validate()`
+    /// rejects.)
+    pub fn kchunks(&self) -> u32 {
+        (self.j_dim / self.c.max(1)).max(1)
+    }
+
+    /// Non-zeros per block: the nnz-owning lanes of each column chunk.
+    pub fn npb(&self) -> u32 {
+        (self.p / self.kchunks()).max(1)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        validate_coo3_shape("J", self.j_dim, self.c, self.p, self.r)
+    }
+}
+
+/// Tunable TTM configuration (Eq. 2b): `Y(i,j,l) = Σ A(i,j,k)·X1(k,l)` as
+/// a COO-3 nnz-split grouped segment reduction keyed by the leading
+/// `(i,j)` fiber.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TtmConfig {
+    /// Dense output columns L (`Y` is `[(dim0·dim1) × L]`).
+    pub l_dim: u32,
+    /// Column coarsening: output columns per thread.
+    pub c: u32,
+    /// Threads per block.
+    pub p: u32,
+    /// Reduction parallelism (GroupSize).
+    pub r: u32,
+}
+
+impl TtmConfig {
+    pub fn new(l_dim: u32, c: u32, r: u32) -> Self {
+        TtmConfig { l_dim, c, p: 256, r }
+    }
+
+    /// Column-chunks per tile (guarded like [`MttkrpConfig::kchunks`]).
+    pub fn kchunks(&self) -> u32 {
+        (self.l_dim / self.c.max(1)).max(1)
+    }
+
+    /// Non-zeros per block.
+    pub fn npb(&self) -> u32 {
+        (self.p / self.kchunks()).max(1)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        validate_coo3_shape("L", self.l_dim, self.c, self.p, self.r)
+    }
+}
+
+/// The shared launch-shape rules of the COO-3 nnz-split families: `c`
+/// divides the dense width, the column chunks divide the block, and the
+/// group is a power of two no wider than the contiguous nnz range a
+/// block's lanes own (`r <= npb`, the segmented-scan precondition).
+fn validate_coo3_shape(axis: &str, width: u32, c: u32, p: u32, r: u32) -> Result<(), String> {
+    if width == 0 || c == 0 || width % c != 0 {
+        return Err(format!("c={c} must be >= 1 and divide {axis}={width}"));
+    }
+    let kchunks = width / c;
+    if p == 0 || p % kchunks != 0 {
+        return Err(format!("p={p} must be a positive multiple of {axis}/c={kchunks}"));
+    }
+    if !r.is_power_of_two() || r > 32 {
+        return Err(format!("r={r} must be a power of 2 <= 32"));
+    }
+    let npb = p / kchunks;
+    if r > npb {
+        return Err(format!(
+            "r={r} exceeds the {npb} consecutive non-zeros a block's lanes own \
+             (an aligned r-group must see a contiguous nnz range)"
+        ));
+    }
+    Ok(())
+}
+
 /// The kernel-kind payload of a [`Schedule`] — one compiled-plan
-/// vocabulary across SpMM, SDDMM, and the dgSPARSE library shape.
+/// vocabulary across SpMM, SDDMM, MTTKRP, TTM, and the dgSPARSE library
+/// shape.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum KernelConfig {
     Spmm(SpmmConfig),
@@ -280,6 +381,8 @@ pub enum KernelConfig {
     /// dgSPARSE RB+PR point; `workerDimR` is resolved at launch from the
     /// matrix's row count and bound as a scalar kernel parameter.
     Dg(DgConfig),
+    Mttkrp(MttkrpConfig),
+    Ttm(TtmConfig),
 }
 
 impl KernelConfig {
@@ -288,12 +391,26 @@ impl KernelConfig {
             KernelConfig::Spmm(c) => c.validate(),
             KernelConfig::Sddmm(c) => c.validate(),
             KernelConfig::Dg(c) => c.validate(),
+            KernelConfig::Mttkrp(c) => c.validate(),
+            KernelConfig::Ttm(c) => c.validate(),
+        }
+    }
+
+    /// Short kind label for diagnostics.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            KernelConfig::Spmm(_) => "Spmm",
+            KernelConfig::Sddmm(_) => "Sddmm",
+            KernelConfig::Dg(_) => "Dg",
+            KernelConfig::Mttkrp(_) => "Mttkrp",
+            KernelConfig::Ttm(_) => "Ttm",
         }
     }
 }
 
 /// The algorithm families the lowerer emits: the four SpMM families of
-/// §6, the grouped SDDMM of §4.3, and the dgSPARSE RB+PR library shape.
+/// §6, the grouped SDDMM of §4.3, the dgSPARSE RB+PR library shape, and
+/// the COO-3 MTTKRP/TTM segment families (Eq. 2a/2b).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Family {
     /// `{<g nnz, c col>, 1}` — Listing 3 (EB + serial reduction).
@@ -309,6 +426,28 @@ pub enum Family {
     /// dgSPARSE RB+PR+RM — row-balanced strided rows, grouped parallel
     /// reduction with partial results per row visit.
     DgRowBalanced,
+    /// MTTKRP `{<1 nnz, c col>, r}` — COO-3 nnz split, grouped segment
+    /// reduction keyed by the output row.
+    MttkrpGroup,
+    /// TTM `{<1 nnz, c col>, r}` — COO-3 nnz split, grouped segment
+    /// reduction keyed by the leading `(i,j)` fiber.
+    TtmGroup,
+}
+
+impl fmt::Display for Family {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Family::NnzSerial => "nnz-serial {<g nnz, c col>, 1}",
+            Family::RowSerial => "row-serial {<x row, c col>, 1}",
+            Family::RowGroup => "row-group {<1/g row, c col>, r}",
+            Family::NnzGroup => "nnz-group {<1 nnz, c col>, r}",
+            Family::SddmmGroup => "sddmm-group {<1/g nnz>, r}",
+            Family::DgRowBalanced => "dgsparse-rb-pr",
+            Family::MttkrpGroup => "mttkrp-group {<1 nnz, c col>, r}",
+            Family::TtmGroup => "ttm-group {<1 nnz, c col>, r}",
+        };
+        write!(f, "{s}")
+    }
 }
 
 /// A complete schedule: the commands plus resolved tuning parameters.
@@ -474,7 +613,125 @@ impl Schedule {
         }
     }
 
+    /// MTTKRP (Eq. 2a) as a schedule: fuse the three sparse coordinates
+    /// into the COO position space, one non-zero per thread × `c` factor
+    /// columns, grouped **segment reduction** keyed by the output row `i`
+    /// — the same `segReduceGroup` macro instruction as Listing 6.
+    pub fn mttkrp_group(config: MttkrpConfig) -> Schedule {
+        let v = |s: &str| IndexVar::new(s);
+        Schedule {
+            cmds: vec![
+                ScheduleCmd::Fuse { a: v("i"), b: v("k"), into: v("ik") },
+                ScheduleCmd::Fuse { a: v("ik"), b: v("l"), into: v("f") },
+                ScheduleCmd::Pos { var: v("f"), pos_var: v("fpos"), access: Access::new("A", &["i", "k", "l"]) },
+                ScheduleCmd::Split { var: v("fpos"), outer: v("block"), inner: v("fpos1"), factor: config.npb() },
+                ScheduleCmd::Split { var: v("j"), outer: v("ko"), inner: v("ki"), factor: config.c },
+                ScheduleCmd::Bound { var: v("ko"), bound_var: v("ko"), extent: config.kchunks() },
+                ScheduleCmd::Precompute { workspace: "val".into() },
+                ScheduleCmd::Parallelize { var: v("block"), unit: ParallelUnit::GPUBlock, race: OutputRaceStrategy::IgnoreRaces },
+                ScheduleCmd::Parallelize { var: v("ko"), unit: ParallelUnit::GPUWarp, race: OutputRaceStrategy::NoRaces },
+                ScheduleCmd::ParallelizeGroup {
+                    var: v("fpos1"),
+                    // literal spec: invalid sizes are reported by
+                    // KernelConfig::validate at lowering, not asserted here
+                    spec: GroupSpec {
+                        size: config.r,
+                        strategy: ReductionStrategy::SegmentReduction,
+                    },
+                    race: OutputRaceStrategy::Atomics,
+                },
+            ],
+            config: KernelConfig::Mttkrp(config),
+        }
+    }
+
+    /// TTM (Eq. 2b) as a schedule: same COO-3 nnz-split shape as MTTKRP,
+    /// segment-reduced over the leading `(i,j)` fiber.
+    pub fn ttm_group(config: TtmConfig) -> Schedule {
+        let v = |s: &str| IndexVar::new(s);
+        Schedule {
+            cmds: vec![
+                ScheduleCmd::Fuse { a: v("i"), b: v("j"), into: v("ij") },
+                ScheduleCmd::Fuse { a: v("ij"), b: v("k"), into: v("f") },
+                ScheduleCmd::Pos { var: v("f"), pos_var: v("fpos"), access: Access::new("A", &["i", "j", "k"]) },
+                ScheduleCmd::Split { var: v("fpos"), outer: v("block"), inner: v("fpos1"), factor: config.npb() },
+                ScheduleCmd::Split { var: v("l"), outer: v("ko"), inner: v("ki"), factor: config.c },
+                ScheduleCmd::Bound { var: v("ko"), bound_var: v("ko"), extent: config.kchunks() },
+                ScheduleCmd::Precompute { workspace: "val".into() },
+                ScheduleCmd::Parallelize { var: v("block"), unit: ParallelUnit::GPUBlock, race: OutputRaceStrategy::IgnoreRaces },
+                ScheduleCmd::Parallelize { var: v("ko"), unit: ParallelUnit::GPUWarp, race: OutputRaceStrategy::NoRaces },
+                ScheduleCmd::ParallelizeGroup {
+                    var: v("fpos1"),
+                    // literal spec: see mttkrp_group
+                    spec: GroupSpec {
+                        size: config.r,
+                        strategy: ReductionStrategy::SegmentReduction,
+                    },
+                    race: OutputRaceStrategy::Atomics,
+                },
+            ],
+            config: KernelConfig::Ttm(config),
+        }
+    }
+
     // ---- analysis --------------------------------------------------------
+
+    /// The tensor algebra statement this schedule lowers — derived from
+    /// the kernel-kind config, so every `Schedule` names its algebra and
+    /// `compiler::compile` can reject schedule/expression mismatches.
+    pub fn algebra(&self) -> TensorAlgebra {
+        match self.config {
+            KernelConfig::Spmm(_) | KernelConfig::Dg(_) => TensorAlgebra::spmm(),
+            KernelConfig::Sddmm(_) => TensorAlgebra::sddmm(),
+            KernelConfig::Mttkrp(_) => TensorAlgebra::mttkrp(),
+            KernelConfig::Ttm(_) => TensorAlgebra::ttm(),
+        }
+    }
+
+    /// The grouped parallelize binding, if any: the scheduled index var
+    /// and its [`GroupSpec`].
+    pub fn group_binding(&self) -> Option<(IndexVar, GroupSpec)> {
+        self.cmds.iter().find_map(|c| match c {
+            ScheduleCmd::ParallelizeGroup { var, spec, .. } => Some((var.clone(), *spec)),
+            _ => None,
+        })
+    }
+
+    /// The source index variables a (possibly derived) schedule variable
+    /// traces back to, walking the command list backwards through
+    /// `split`/`fuse`/`pos`/`bound` provenance. A grouped reduction is
+    /// only meaningful when its variable's roots intersect the algebra's
+    /// `reduction_dims()` — the check `compiler::compile` enforces.
+    pub fn roots_of(&self, var: &IndexVar) -> Vec<IndexVar> {
+        fn replace(frontier: &mut Vec<IndexVar>, from: &IndexVar, to: &[&IndexVar]) {
+            if let Some(pos) = frontier.iter().position(|v| v == from) {
+                frontier.remove(pos);
+                for t in to {
+                    if !frontier.contains(*t) {
+                        frontier.push((*t).clone());
+                    }
+                }
+            }
+        }
+        let mut frontier = vec![var.clone()];
+        for cmd in self.cmds.iter().rev() {
+            match cmd {
+                ScheduleCmd::Split { var: src, outer, inner, .. } => {
+                    replace(&mut frontier, outer, &[src]);
+                    replace(&mut frontier, inner, &[src]);
+                }
+                ScheduleCmd::Fuse { a, b, into } => replace(&mut frontier, into, &[a, b]),
+                ScheduleCmd::Pos { var: src, pos_var, .. } => {
+                    replace(&mut frontier, pos_var, &[src])
+                }
+                ScheduleCmd::Bound { var: src, bound_var, .. } => {
+                    replace(&mut frontier, bound_var, &[src])
+                }
+                _ => {}
+            }
+        }
+        frontier
+    }
 
     /// The SpMM tuning parameters, if this schedule describes one of the
     /// four SpMM families.
@@ -513,6 +770,26 @@ impl Schedule {
                 }
                 _ => Err("dgSPARSE schedules require a grouped GPUGroup reduction".into()),
             },
+            KernelConfig::Mttkrp(_) => {
+                self.classify_coo3_seg("MTTKRP").map(|()| Family::MttkrpGroup)
+            }
+            KernelConfig::Ttm(_) => self.classify_coo3_seg("TTM").map(|()| Family::TtmGroup),
+        }
+    }
+
+    /// The COO-3 nnz-split families share one requirement: a grouped
+    /// reduction with a **segment-boundary** writeback. The output index
+    /// (one slot per output segment) is not group-uniform across an
+    /// nnz-split lane group, so a lane-zero writeback would silently drop
+    /// every segment but the first.
+    fn classify_coo3_seg(&self, what: &str) -> Result<(), String> {
+        match self.group_cmd() {
+            Some(spec) if spec.strategy.writeback() == Writeback::SegmentBoundary => Ok(()),
+            Some(spec) => Err(format!(
+                "{what}'s nnz-split reduction needs a segment-boundary writeback, got {}",
+                spec.strategy.writeback()
+            )),
+            None => Err(format!("{what} schedules require a GPUGroup parallelize")),
         }
     }
 
@@ -541,7 +818,7 @@ impl Schedule {
     }
 
     /// The reduction recipe this schedule's classification implies — the
-    /// object every writeback in [`crate::compiler::lower`] is emitted
+    /// object every writeback in [`crate::compiler::lower`](mod@crate::compiler::lower) is emitted
     /// from. Grouped families inherit strategy, group size, and writeback
     /// from their [`GroupSpec`]; the serial families reduce in-register
     /// and write back with atomics (nnz split, shared outputs) or plain
@@ -550,7 +827,12 @@ impl Schedule {
         Ok(match self.classify()? {
             Family::RowSerial => ReductionPlan::serial(Writeback::Store),
             Family::NnzSerial => ReductionPlan::serial(Writeback::Atomic),
-            Family::RowGroup | Family::NnzGroup | Family::SddmmGroup | Family::DgRowBalanced => {
+            Family::RowGroup
+            | Family::NnzGroup
+            | Family::SddmmGroup
+            | Family::DgRowBalanced
+            | Family::MttkrpGroup
+            | Family::TtmGroup => {
                 self.group_cmd().expect("grouped families carry a GroupSpec").plan()
             }
         })
@@ -643,6 +925,42 @@ impl Schedule {
                 let ki = Cin::forall("ki", ParallelUnit::Serial, OutputRaceStrategy::NoRaces, j);
                 let ii = Cin::forall("ii", ParallelUnit::GPUThread, OutputRaceStrategy::NoRaces, ki);
                 Cin::forall("block", ParallelUnit::GPUBlock, OutputRaceStrategy::NoRaces, ii)
+            }
+            family @ (Family::MttkrpGroup | Family::TtmGroup) => {
+                let spec = self.group_cmd().unwrap();
+                // the two Eq. 2a/2b products over the COO position space
+                let (lhs, rhs) = if family == Family::MttkrpGroup {
+                    (
+                        Access::new("Y", &["i", "j"]),
+                        Expr::Mul(
+                            Box::new(Expr::Mul(
+                                Box::new(Expr::Access(Access::new("A", &["i", "k", "l"]))),
+                                Box::new(Expr::Access(Access::new("X1", &["k", "j"]))),
+                            )),
+                            Box::new(Expr::Access(Access::new("X2", &["l", "j"]))),
+                        ),
+                    )
+                } else {
+                    (
+                        Access::new("Y", &["i", "j", "l"]),
+                        Expr::Mul(
+                            Box::new(Expr::Access(Access::new("A", &["i", "j", "k"]))),
+                            Box::new(Expr::Access(Access::new("X1", &["k", "l"]))),
+                        ),
+                    )
+                };
+                let producer =
+                    Cin::Assign { lhs: Access::new("val", &[]), reduce: false, rhs };
+                let consumer = Cin::Assign {
+                    lhs,
+                    reduce: true,
+                    rhs: Expr::Access(Access::new("val", &[])),
+                };
+                let wh = Cin::Where { consumer: Box::new(consumer), producer: Box::new(producer) };
+                let fpos1 = Cin::forall_group("fpos1", spec, OutputRaceStrategy::Atomics, wh);
+                let ki = Cin::forall("ki", ParallelUnit::Serial, OutputRaceStrategy::NoRaces, fpos1);
+                let ko = Cin::forall("ko", ParallelUnit::GPUWarp, OutputRaceStrategy::NoRaces, ki);
+                Cin::forall("block", ParallelUnit::GPUBlock, OutputRaceStrategy::IgnoreRaces, ko)
             }
             Family::RowGroup => {
                 let spec = self.group_cmd().unwrap();
@@ -773,5 +1091,78 @@ mod tests {
         let mut dg = DgConfig::stock(4);
         dg.group_sz = 12;
         assert!(KernelConfig::Dg(dg).validate().is_err());
+        assert!(KernelConfig::Mttkrp(MttkrpConfig::new(8, 4, 16)).validate().is_ok());
+        assert!(KernelConfig::Mttkrp(MttkrpConfig::new(8, 3, 16)).validate().is_err());
+        assert!(KernelConfig::Ttm(TtmConfig::new(4, 4, 8)).validate().is_ok());
+        assert!(KernelConfig::Ttm(TtmConfig::new(4, 4, 12)).validate().is_err());
+    }
+
+    #[test]
+    fn mttkrp_ttm_schedules_classify_and_plan() {
+        let m = Schedule::mttkrp_group(MttkrpConfig::new(8, 4, 16));
+        assert_eq!(m.classify().unwrap(), Family::MttkrpGroup);
+        let plan = m.reduction_plan().unwrap();
+        assert_eq!(plan.group, 16);
+        assert_eq!(plan.strategy, Some(ReductionStrategy::SegmentReduction));
+        assert_eq!(plan.writeback, Writeback::SegmentBoundary);
+        let txt = m.to_cin().to_string();
+        assert!(txt.contains("GPUGroup[16,Segment]"), "{txt}");
+        assert!(txt.contains("val=A(i,k,l)*X1(k,j)*X2(l,j)"), "{txt}");
+
+        let t = Schedule::ttm_group(TtmConfig::new(4, 4, 8));
+        assert_eq!(t.classify().unwrap(), Family::TtmGroup);
+        let txt = t.to_cin().to_string();
+        assert!(txt.contains("GPUGroup[8,Segment]"), "{txt}");
+        assert!(txt.contains("val=A(i,j,k)*X1(k,l)"), "{txt}");
+        assert!(txt.contains("Y(i,j,l)+=val"), "{txt}");
+    }
+
+    #[test]
+    fn coo3_families_reject_non_segment_writebacks() {
+        // a lane-zero writeback would drop every segment but the first:
+        // classification refuses it with a typed message
+        let mut m = Schedule::mttkrp_group(MttkrpConfig::new(8, 4, 16));
+        for cmd in &mut m.cmds {
+            if let ScheduleCmd::ParallelizeGroup { spec, .. } = cmd {
+                spec.strategy = ReductionStrategy::ParallelReduction;
+            }
+        }
+        let err = m.classify().unwrap_err();
+        assert!(err.contains("segment-boundary"), "{err}");
+    }
+
+    #[test]
+    fn every_config_kind_derives_its_algebra() {
+        use crate::compiler::expr::TensorAlgebra;
+        assert_eq!(Schedule::taco_row_serial(SpmmConfig::default()).algebra(), TensorAlgebra::spmm());
+        assert_eq!(Schedule::dgsparse_rb_pr(DgConfig::stock(4)).algebra(), TensorAlgebra::spmm());
+        assert_eq!(Schedule::sddmm_group(SddmmConfig::new(16, 8, 4)).algebra(), TensorAlgebra::sddmm());
+        assert_eq!(Schedule::mttkrp_group(MttkrpConfig::new(8, 4, 8)).algebra(), TensorAlgebra::mttkrp());
+        assert_eq!(Schedule::ttm_group(TtmConfig::new(4, 4, 4)).algebra(), TensorAlgebra::ttm());
+    }
+
+    #[test]
+    fn roots_trace_derived_vars_to_source_dims() {
+        let v = IndexVar::new;
+        // Listing 5: jpos1 ← jpos ← j (the reduction dim)
+        let s = Schedule::sgap_row_group(SpmmConfig::default(), 8);
+        assert_eq!(s.roots_of(&v("jpos1")), vec![v("j")]);
+        // Listing 6: fpos1 ← fpos ← f ← fuse(i, j)
+        let s = Schedule::sgap_nnz_group(SpmmConfig::default(), 8);
+        let roots = s.roots_of(&v("fpos1"));
+        assert!(roots.contains(&v("i")) && roots.contains(&v("j")), "{roots:?}");
+        // MTTKRP: fpos1 ← f ← fuse(fuse(i, k), l)
+        let s = Schedule::mttkrp_group(MttkrpConfig::new(8, 4, 16));
+        let roots = s.roots_of(&v("fpos1"));
+        assert_eq!(roots.len(), 3, "{roots:?}");
+        for d in ["i", "k", "l"] {
+            assert!(roots.contains(&v(d)), "{roots:?} missing {d}");
+        }
+        // a var that is never derived roots to itself
+        assert_eq!(s.roots_of(&v("zz")), vec![v("zz")]);
+        // group_binding exposes the scheduled var + spec
+        let (var, spec) = s.group_binding().unwrap();
+        assert_eq!(var, v("fpos1"));
+        assert_eq!(spec.size, 16);
     }
 }

@@ -2,8 +2,8 @@
 //!
 //! A production-shaped front end over the paper's machinery: a **pool** of
 //! worker threads ([`pool`]) drains a bounded job queue (backpressure on
-//! submit), micro-batches by backend ([`batcher`]), and serves both SpMM
-//! and SDDMM requests. Kernel choice is **tuner-aware**: each matrix shape
+//! submit), micro-batches by backend ([`batcher`]), and serves the full
+//! §2.1 quartet — SpMM, SDDMM, MTTKRP, and TTM requests. Kernel choice is **tuner-aware**: each matrix shape
 //! is fingerprinted and looked up in the [`plan_cache`] — a miss runs the
 //! DA-SpMM-style [`Selector`](crate::tuner::Selector) fast path, and an
 //! optional background thread refines hot shapes with the full

@@ -20,6 +20,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::algos::catalog::Algo;
+use crate::sparse::coo3::Coo3;
 use crate::sparse::MatrixStats;
 
 /// Which kernel scenario a plan serves.
@@ -27,6 +28,8 @@ use crate::sparse::MatrixStats;
 pub enum Scenario {
     Spmm,
     Sddmm,
+    Mttkrp,
+    Ttm,
 }
 
 /// Fingerprint of a request's input dynamics: exact shape plus quantized
@@ -68,6 +71,64 @@ impl ShapeKey {
 
     pub fn sddmm(stats: &MatrixStats, j_dim: u32) -> ShapeKey {
         Self::quantized(Scenario::Sddmm, stats, j_dim)
+    }
+
+    /// Fingerprint of an order-3 tensor request: exact output-segment
+    /// count (`rows`) / trailing extent / nnz plus the same quantized skew
+    /// features as the matrix keys, computed over the scenario's output
+    /// segments (rows for MTTKRP, leading `(i,j)` fibers for TTM) — the
+    /// dynamics the COO-3 group-size choice keys on. `seg_at` maps a
+    /// non-zero position to its segment id (positions are sorted, so
+    /// segments are contiguous runs); no per-request allocation.
+    fn tensor_quantized(
+        scenario: Scenario,
+        rows: usize,
+        cols: usize,
+        nnz: usize,
+        width: u32,
+        seg_at: impl Fn(usize) -> u64,
+    ) -> ShapeKey {
+        let segs = rows.max(1);
+        let mut used = 0usize;
+        let mut sumsq = 0f64;
+        let mut i = 0;
+        while i < nnz {
+            let seg = seg_at(i);
+            let mut j = i + 1;
+            while j < nnz && seg_at(j) == seg {
+                j += 1;
+            }
+            let len = (j - i) as f64;
+            sumsq += len * len;
+            used += 1;
+            i = j;
+        }
+        let mean = nnz as f64 / segs as f64;
+        let var = (sumsq / segs as f64 - mean * mean).max(0.0);
+        let cv = if mean > 0.0 { var.sqrt() / mean } else { 0.0 };
+        let empty = 1.0 - used as f64 / segs as f64;
+        ShapeKey {
+            scenario,
+            rows,
+            cols,
+            nnz,
+            width,
+            cv_q: (cv.clamp(0.0, 8.0) * 8.0).round() as u16,
+            mean_q: (mean + 1.0).log2().floor().clamp(0.0, 64.0) as u16,
+            empty_q: (empty.clamp(0.0, 1.0) * 16.0).round() as u16,
+        }
+    }
+
+    pub fn mttkrp(a: &Coo3, j_dim: u32) -> ShapeKey {
+        Self::tensor_quantized(Scenario::Mttkrp, a.dim0, a.dim1 * a.dim2, a.nnz(), j_dim, |p| {
+            a.idx0[p] as u64
+        })
+    }
+
+    pub fn ttm(a: &Coo3, l_dim: u32) -> ShapeKey {
+        Self::tensor_quantized(Scenario::Ttm, a.dim0 * a.dim1, a.dim2, a.nnz(), l_dim, |p| {
+            a.idx0[p] as u64 * a.dim1 as u64 + a.idx1[p] as u64
+        })
     }
 }
 
@@ -219,6 +280,23 @@ mod tests {
         assert_ne!(key_of(&er, 4), key_of(&pl, 4), "skew separates ER from power-law");
         let stats = MatrixStats::of(&er);
         assert_ne!(ShapeKey::spmm(&stats, 4), ShapeKey::sddmm(&stats, 4));
+    }
+
+    #[test]
+    fn tensor_keys_separate_scenarios_and_structures() {
+        use crate::sparse::coo3::Coo3;
+        let t = Coo3::random((32, 24, 16), 400, 1);
+        let t2 = Coo3::random((32, 24, 16), 400, 1);
+        // deterministic + width/scenario separation
+        assert_eq!(ShapeKey::mttkrp(&t, 8), ShapeKey::mttkrp(&t2, 8));
+        assert_ne!(ShapeKey::mttkrp(&t, 8), ShapeKey::mttkrp(&t, 16));
+        assert_ne!(ShapeKey::mttkrp(&t, 8), ShapeKey::ttm(&t, 8));
+        // a hub tensor (every nnz in one row) is separated from uniform
+        let hub = Coo3::new(
+            (32, 24, 16),
+            (0..200u32).map(|p| (0, p % 24, (p * 7) % 16, 1.0f32)).collect(),
+        );
+        assert_ne!(ShapeKey::mttkrp(&hub, 8), ShapeKey::mttkrp(&t, 8), "skew must separate");
     }
 
     #[test]

@@ -1,6 +1,6 @@
-//! The coordinator service: a pool of worker threads serving SpMM and
-//! SDDMM jobs, with tuner-aware kernel selection through a shared
-//! [`PlanCache`].
+//! The coordinator service: a pool of worker threads serving the full
+//! §2.1 quartet — SpMM, SDDMM, MTTKRP, and TTM jobs — with tuner-aware
+//! kernel selection through a shared [`PlanCache`].
 //!
 //! Architecture (see DESIGN.md §serving):
 //!
@@ -39,9 +39,11 @@ use anyhow::Result;
 
 use crate::algos::catalog::Algo;
 use crate::algos::cpu_ref::spmm_serial;
+use crate::algos::mttkrp::{mttkrp_serial, ttm_serial};
 use crate::algos::sddmm::sddmm_serial;
 use crate::runtime::{ArtifactKind, Registry, Runtime};
 use crate::sim::{HwProfile, Machine};
+use crate::sparse::coo3::Coo3;
 use crate::sparse::{Csr, MatrixStats, SplitMix64};
 use crate::tuner::{self, Selector};
 
@@ -50,8 +52,9 @@ use super::metrics::Metrics;
 use super::plan_cache::{Plan, PlanCache, Scenario, ShapeKey};
 use super::pool::JobQueue;
 
-/// A serving job: SpMM (`C = A · B`) or SDDMM
-/// (`Y = A ⊙ (X1 · X2)`, one output per non-zero of `A`).
+/// A serving job — one variant per algebra of the §2.1 quartet: SpMM,
+/// SDDMM (`Y = A ⊙ (X1 · X2)`, one output per non-zero of `A`), MTTKRP,
+/// and TTM (order-3 COO tensor contractions).
 #[derive(Debug, Clone)]
 pub enum Request {
     /// `C = A · B` with `B` row-major `[a.cols × n]`.
@@ -59,6 +62,14 @@ pub enum Request {
     /// `Y(pos) = A_vals(pos) · dot(X1[i,:], X2[:,k])` with `x1` row-major
     /// `[a.rows × j_dim]` and `x2` row-major `[j_dim × a.cols]`.
     Sddmm { a: Csr, x1: Vec<f32>, x2: Vec<f32>, j_dim: usize },
+    /// `Y(i,j) = Σ A(i,k,l)·X1(k,j)·X2(l,j)` with `x1` row-major
+    /// `[a.dim1 × j_dim]`, `x2` row-major `[a.dim2 × j_dim]`; the response
+    /// is row-major `[a.dim0 × j_dim]`.
+    Mttkrp { a: Coo3, x1: Vec<f32>, x2: Vec<f32>, j_dim: usize },
+    /// `Y(i,j,l) = Σ A(i,j,k)·X1(k,l)` with `x1` row-major
+    /// `[a.dim2 × l_dim]`; the response is row-major
+    /// `[(a.dim0·a.dim1) × l_dim]`.
+    Ttm { a: Coo3, x1: Vec<f32>, l_dim: usize },
 }
 
 impl Request {
@@ -100,12 +111,50 @@ impl Request {
                 }
                 Ok(())
             }
+            Request::Mttkrp { a, x1, x2, j_dim } => {
+                if *j_dim == 0 {
+                    return Err("mttkrp: j_dim must be >= 1".into());
+                }
+                if x1.len() != a.dim1 * j_dim {
+                    return Err(format!(
+                        "mttkrp: X1 has {} elements, want dim1 x j = {} x {}",
+                        x1.len(),
+                        a.dim1,
+                        j_dim
+                    ));
+                }
+                if x2.len() != a.dim2 * j_dim {
+                    return Err(format!(
+                        "mttkrp: X2 has {} elements, want dim2 x j = {} x {}",
+                        x2.len(),
+                        a.dim2,
+                        j_dim
+                    ));
+                }
+                Ok(())
+            }
+            Request::Ttm { a, x1, l_dim } => {
+                if *l_dim == 0 {
+                    return Err("ttm: l_dim must be >= 1".into());
+                }
+                if x1.len() != a.dim2 * l_dim {
+                    return Err(format!(
+                        "ttm: X1 has {} elements, want dim2 x l = {} x {}",
+                        x1.len(),
+                        a.dim2,
+                        l_dim
+                    ));
+                }
+                Ok(())
+            }
         }
     }
 
-    fn matrix(&self) -> &Csr {
+    /// Inputs the kernels do not cover (served straight on the CPU path).
+    fn degenerate(&self) -> bool {
         match self {
-            Request::Spmm { a, .. } | Request::Sddmm { a, .. } => a,
+            Request::Spmm { a, .. } | Request::Sddmm { a, .. } => a.nnz() == 0 || a.rows == 0,
+            Request::Mttkrp { a, .. } | Request::Ttm { a, .. } => a.nnz() == 0 || a.dim0 == 0,
         }
     }
 }
@@ -113,7 +162,8 @@ impl Request {
 /// The served result.
 #[derive(Debug, Clone)]
 pub struct Response {
-    /// SpMM: row-major `[rows × n]`; SDDMM: one value per non-zero.
+    /// SpMM: row-major `[rows × n]`; SDDMM: one value per non-zero;
+    /// MTTKRP: row-major `[dim0 × j]`; TTM: row-major `[(dim0·dim1) × l]`.
     pub c: Vec<f32>,
     /// Which path served it: `pjrt:<artifact>`, `sim:<family>`,
     /// `cpu-serial`, or `cpu-fallback`.
@@ -185,9 +235,15 @@ impl Default for CoordinatorConfig {
     }
 }
 
+/// What the background tuner sweeps over: the request's sparse operand.
+enum TuneInput {
+    Matrix(Csr),
+    Tensor(Coo3),
+}
+
 struct TuneTask {
     key: ShapeKey,
-    a: Csr,
+    input: TuneInput,
     width: u32,
 }
 
@@ -301,6 +357,49 @@ impl Coordinator {
             .map_err(|e| anyhow::anyhow!(e))
     }
 
+    /// Submit an MTTKRP job; the returned channel yields the response.
+    pub fn submit_mttkrp(
+        &self,
+        a: Coo3,
+        x1: Vec<f32>,
+        x2: Vec<f32>,
+        j_dim: usize,
+    ) -> Receiver<Result<Response, String>> {
+        self.submit(Request::Mttkrp { a, x1, x2, j_dim })
+    }
+
+    /// Convenience: submit an MTTKRP job and wait.
+    pub fn mttkrp_blocking(
+        &self,
+        a: Coo3,
+        x1: Vec<f32>,
+        x2: Vec<f32>,
+        j_dim: usize,
+    ) -> Result<Response> {
+        let rx = self.submit_mttkrp(a, x1, x2, j_dim);
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("coordinator worker gone"))?
+            .map_err(|e| anyhow::anyhow!(e))
+    }
+
+    /// Submit a TTM job; the returned channel yields the response.
+    pub fn submit_ttm(
+        &self,
+        a: Coo3,
+        x1: Vec<f32>,
+        l_dim: usize,
+    ) -> Receiver<Result<Response, String>> {
+        self.submit(Request::Ttm { a, x1, l_dim })
+    }
+
+    /// Convenience: submit a TTM job and wait.
+    pub fn ttm_blocking(&self, a: Coo3, x1: Vec<f32>, l_dim: usize) -> Result<Response> {
+        let rx = self.submit_ttm(a, x1, l_dim);
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("coordinator worker gone"))?
+            .map_err(|e| anyhow::anyhow!(e))
+    }
+
     /// Stop accepting new work without joining: in-flight and queued jobs
     /// are still served. Subsequent `submit` calls yield a disconnected
     /// receiver. Call [`Coordinator::shutdown`] (or drop) to join.
@@ -394,9 +493,10 @@ fn enqueue(job: Job, ctx: &WorkerCtx, runtime: &Option<Runtime>, batcher: &mut B
 
 /// Pick the backend for a request. PJRT admission wins (it is the numeric
 /// hot path); otherwise the plan cache decides which kernel the simulator
-/// runs; degenerate inputs go straight to the serial CPU path.
+/// runs; degenerate inputs — and tensor widths no kernel launch shape
+/// covers — go straight to the serial CPU path.
 fn route(req: &Request, ctx: &WorkerCtx, runtime: &Option<Runtime>) -> Backend {
-    if req.matrix().nnz() == 0 || req.matrix().rows == 0 {
+    if req.degenerate() {
         return Backend::Cpu;
     }
     match req {
@@ -417,7 +517,7 @@ fn route(req: &Request, ctx: &WorkerCtx, runtime: &Option<Runtime>) -> Backend {
                 .get_or_insert_with(key, || ctx.selector.select(&stats, *n as u32));
             note_cache(ctx, hit);
             if !hit {
-                request_tune(ctx, key, a, *n as u32);
+                request_tune(ctx, key, || TuneInput::Matrix(a.clone()), *n as u32);
             }
             Backend::Sim(plan, hit)
         }
@@ -429,10 +529,36 @@ fn route(req: &Request, ctx: &WorkerCtx, runtime: &Option<Runtime>) -> Backend {
                 .get_or_insert_with(key, || ctx.selector.select_sddmm(&stats, *j_dim as u32));
             note_cache(ctx, hit);
             if !hit {
-                request_tune(ctx, key, a, *j_dim as u32);
+                request_tune(ctx, key, || TuneInput::Matrix(a.clone()), *j_dim as u32);
             }
             Backend::Sim(plan, hit)
         }
+        Request::Mttkrp { a, j_dim, .. } => {
+            match ctx.selector.select_mttkrp(a, *j_dim as u32) {
+                Some(fresh) => {
+                    let key = ShapeKey::mttkrp(a, *j_dim as u32);
+                    let (plan, hit) = ctx.plan_cache.get_or_insert_with(key, || fresh);
+                    note_cache(ctx, hit);
+                    if !hit {
+                        request_tune(ctx, key, || TuneInput::Tensor(a.clone()), *j_dim as u32);
+                    }
+                    Backend::Sim(plan, hit)
+                }
+                None => Backend::Cpu,
+            }
+        }
+        Request::Ttm { a, l_dim, .. } => match ctx.selector.select_ttm(a, *l_dim as u32) {
+            Some(fresh) => {
+                let key = ShapeKey::ttm(a, *l_dim as u32);
+                let (plan, hit) = ctx.plan_cache.get_or_insert_with(key, || fresh);
+                note_cache(ctx, hit);
+                if !hit {
+                    request_tune(ctx, key, || TuneInput::Tensor(a.clone()), *l_dim as u32);
+                }
+                Backend::Sim(plan, hit)
+            }
+            None => Backend::Cpu,
+        },
     }
 }
 
@@ -446,9 +572,10 @@ fn note_cache(ctx: &WorkerCtx, hit: bool) {
 
 /// Hand a cache miss to the background tuner (best-effort: a full refine
 /// queue just means this shape keeps its selector plan a little longer).
-fn request_tune(ctx: &WorkerCtx, key: ShapeKey, a: &Csr, width: u32) {
+/// The operand clone happens lazily, only when a tuner thread exists.
+fn request_tune(ctx: &WorkerCtx, key: ShapeKey, input: impl FnOnce() -> TuneInput, width: u32) {
     if let Some(tx) = &ctx.tune_tx {
-        match tx.try_send(TuneTask { key, a: a.clone(), width }) {
+        match tx.try_send(TuneTask { key, input: input(), width }) {
             Ok(()) | Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {}
         }
     }
@@ -500,15 +627,53 @@ fn serve_one(label: &str, routed: Routed, runtime: &mut Option<Runtime>, ctx: &W
                 (Ok(sddmm_serial(a, x1, x2, *j_dim)), "cpu-fallback".to_string())
             }
         },
+        (Backend::Sim(plan, _), Request::Mttkrp { a, x1, x2, j_dim }) => match plan.kind {
+            algo @ Algo::Mttkrp(_) => match algo.run_mttkrp(&ctx.machine, a, x1, x2) {
+                Ok(res) => (Ok(res.run.c), label.to_string()),
+                Err(_) => {
+                    ctx.metrics.on_fallback();
+                    (Ok(mttkrp_serial(a, x1, x2, *j_dim)), "cpu-fallback".to_string())
+                }
+            },
+            _ => {
+                ctx.metrics.on_fallback();
+                (Ok(mttkrp_serial(a, x1, x2, *j_dim)), "cpu-fallback".to_string())
+            }
+        },
+        (Backend::Sim(plan, _), Request::Ttm { a, x1, l_dim }) => match plan.kind {
+            algo @ Algo::Ttm(_) => match algo.run_ttm(&ctx.machine, a, x1) {
+                Ok(res) => (Ok(res.run.c), label.to_string()),
+                Err(_) => {
+                    ctx.metrics.on_fallback();
+                    (Ok(ttm_serial(a, x1, *l_dim)), "cpu-fallback".to_string())
+                }
+            },
+            _ => {
+                ctx.metrics.on_fallback();
+                (Ok(ttm_serial(a, x1, *l_dim)), "cpu-fallback".to_string())
+            }
+        },
         (Backend::Cpu, Request::Spmm { a, b, n }) => {
             (Ok(spmm_serial(a, b, *n)), "cpu-serial".to_string())
         }
         (Backend::Cpu, Request::Sddmm { a, x1, x2, j_dim }) => {
             (Ok(sddmm_serial(a, x1, x2, *j_dim)), "cpu-serial".to_string())
         }
-        // route() never pairs Pjrt with Sddmm
+        (Backend::Cpu, Request::Mttkrp { a, x1, x2, j_dim }) => {
+            (Ok(mttkrp_serial(a, x1, x2, *j_dim)), "cpu-serial".to_string())
+        }
+        (Backend::Cpu, Request::Ttm { a, x1, l_dim }) => {
+            (Ok(ttm_serial(a, x1, *l_dim)), "cpu-serial".to_string())
+        }
+        // route() never pairs Pjrt with the non-SpMM scenarios
         (Backend::Pjrt(_), Request::Sddmm { a, x1, x2, j_dim }) => {
             (Ok(sddmm_serial(a, x1, x2, *j_dim)), "cpu-fallback".to_string())
+        }
+        (Backend::Pjrt(_), Request::Mttkrp { a, x1, x2, j_dim }) => {
+            (Ok(mttkrp_serial(a, x1, x2, *j_dim)), "cpu-fallback".to_string())
+        }
+        (Backend::Pjrt(_), Request::Ttm { a, x1, l_dim }) => {
+            (Ok(ttm_serial(a, x1, *l_dim)), "cpu-fallback".to_string())
         }
     };
     let latency = job.submitted.elapsed();
@@ -547,32 +712,58 @@ fn tuner_loop(rx: std::sync::mpsc::Receiver<TuneTask>, machine: &Machine, cache:
             None => continue,
         }
         // deterministic dense operands: only the timing matters
-        let seed = (task.a.rows as u64) ^ ((task.a.nnz() as u64) << 20) ^ task.width as u64;
+        let seed = (task.key.rows as u64) ^ ((task.key.nnz as u64) << 20) ^ task.width as u64;
         let mut rng = SplitMix64::new(seed);
-        match task.key.scenario {
-            Scenario::Spmm => {
+        match (task.key.scenario, &task.input) {
+            (Scenario::Spmm, TuneInput::Matrix(a)) => {
                 let cands = tuner::space::sgap_candidates(task.width);
                 if cands.is_empty() {
                     continue;
                 }
                 let b: Vec<f32> =
-                    (0..task.a.cols * task.width as usize).map(|_| rng.value()).collect();
-                if let Ok(out) = tuner::tune(machine, &cands, &task.a, &b, task.width) {
+                    (0..a.cols * task.width as usize).map(|_| rng.value()).collect();
+                if let Ok(out) = tuner::tune(machine, &cands, a, &b, task.width) {
                     let (best, _) = out.best();
                     cache.upgrade(task.key, best);
                 }
             }
-            Scenario::Sddmm => {
+            (Scenario::Sddmm, TuneInput::Matrix(a)) => {
                 let j = task.width as usize;
-                let x1: Vec<f32> = (0..task.a.rows * j).map(|_| rng.value()).collect();
-                let x2: Vec<f32> = (0..j * task.a.cols).map(|_| rng.value()).collect();
+                let x1: Vec<f32> = (0..a.rows * j).map(|_| rng.value()).collect();
+                let x2: Vec<f32> = (0..j * a.cols).map(|_| rng.value()).collect();
                 let cands = tuner::space::sddmm_candidates(task.width);
+                if let Ok((best, _)) = tuner::search::tune_sddmm(machine, &cands, a, &x1, &x2) {
+                    cache.upgrade(task.key, best);
+                }
+            }
+            (Scenario::Mttkrp, TuneInput::Tensor(a)) => {
+                let cands = tuner::space::mttkrp_candidates(task.width);
+                if cands.is_empty() {
+                    continue;
+                }
+                let j = task.width as usize;
+                let x1: Vec<f32> = (0..a.dim1 * j).map(|_| rng.value()).collect();
+                let x2: Vec<f32> = (0..a.dim2 * j).map(|_| rng.value()).collect();
                 if let Ok((best, _)) =
-                    tuner::search::tune_sddmm(machine, &cands, &task.a, &x1, &x2)
+                    tuner::search::tune_mttkrp(machine, &cands, a, &x1, &x2)
                 {
                     cache.upgrade(task.key, best);
                 }
             }
+            (Scenario::Ttm, TuneInput::Tensor(a)) => {
+                let cands = tuner::space::ttm_candidates(task.width);
+                if cands.is_empty() {
+                    continue;
+                }
+                let l = task.width as usize;
+                let x1: Vec<f32> = (0..a.dim2 * l).map(|_| rng.value()).collect();
+                if let Ok((best, _)) = tuner::search::tune_ttm(machine, &cands, a, &x1) {
+                    cache.upgrade(task.key, best);
+                }
+            }
+            // a scenario/operand mismatch cannot be produced by route();
+            // drop rather than guess
+            _ => {}
         }
     }
 }
@@ -625,6 +816,63 @@ mod tests {
         assert!(max_rel_err(&resp.c, &want) < 5e-4);
         assert!(resp.backend.starts_with("sim:sddmm"), "backend {}", resp.backend);
         coord.shutdown();
+    }
+
+    #[test]
+    fn serves_mttkrp_and_ttm_through_plan_cache() {
+        let coord = Coordinator::start(small_cfg()).unwrap();
+        let a = Coo3::random((32, 24, 16), 500, 3);
+        let mut rng = SplitMix64::new(8);
+        let j = 8usize;
+        let x1: Vec<f32> = (0..a.dim1 * j).map(|_| rng.value()).collect();
+        let x2: Vec<f32> = (0..a.dim2 * j).map(|_| rng.value()).collect();
+        let want = mttkrp_serial(&a, &x1, &x2, j);
+        let resp = coord.mttkrp_blocking(a.clone(), x1.clone(), x2.clone(), j).unwrap();
+        assert!(resp.backend.starts_with("sim:mttkrp"), "backend {}", resp.backend);
+        assert!(!resp.cache_hit && resp.plan.is_some());
+        assert!(max_rel_err(&resp.c, &want) < 5e-4);
+        // repeat: identical tensor hits the cache and reproduces exactly
+        let resp2 = coord.mttkrp_blocking(a.clone(), x1, x2, j).unwrap();
+        assert!(resp2.cache_hit);
+        assert_eq!(resp2.c, resp.c);
+
+        let lx1: Vec<f32> = (0..a.dim2 * 4).map(|_| rng.value()).collect();
+        let want = ttm_serial(&a, &lx1, 4);
+        let resp = coord.ttm_blocking(a.clone(), lx1.clone(), 4).unwrap();
+        assert!(resp.backend.starts_with("sim:ttm"), "backend {}", resp.backend);
+        assert!(max_rel_err(&resp.c, &want) < 5e-4);
+
+        // a width no kernel launch shape covers is served on the CPU,
+        // correctly, without touching the plan cache
+        let jx1: Vec<f32> = (0..a.dim1 * 20).map(|_| rng.value()).collect();
+        let jx2: Vec<f32> = (0..a.dim2 * 20).map(|_| rng.value()).collect();
+        let want = mttkrp_serial(&a, &jx1, &jx2, 20);
+        let resp = coord.mttkrp_blocking(a, jx1, jx2, 20).unwrap();
+        assert_eq!(resp.backend, "cpu-serial");
+        assert!(resp.plan.is_none());
+        assert!(max_rel_err(&resp.c, &want) < 5e-4);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn background_tuner_upgrades_tensor_plans() {
+        let coord = Coordinator::start(CoordinatorConfig {
+            workers: 2,
+            background_tune: true,
+            ..CoordinatorConfig::default()
+        })
+        .unwrap();
+        let a = Coo3::random((24, 16, 12), 300, 5);
+        let j = 4usize;
+        let x1 = vec![1.0f32; a.dim1 * j];
+        let x2 = vec![0.5f32; a.dim2 * j];
+        coord.mttkrp_blocking(a.clone(), x1, x2, j).unwrap();
+        let key = ShapeKey::mttkrp(&a, j as u32);
+        let cache = coord.plan_cache.clone();
+        coord.shutdown(); // joins the tuner: the upgrade has landed
+        let plan = cache.get(&key).expect("plan still cached");
+        assert_eq!(plan.origin, PlanOrigin::Tuned);
+        assert!(plan.kind.is_mttkrp(), "tuned plan {} changed scenario", plan.kind.name());
     }
 
     #[test]

@@ -9,19 +9,22 @@
 //!
 //! * [`sparse`] — sparse formats (COO/CSR/ELL), MatrixMarket IO, seeded
 //!   synthetic generators and the evaluation dataset suite.
-//! * [`compiler`] — the mini-TACO: tensor algebra expressions, concrete
-//!   index notation (CIN), schedule transformations (including the new
+//! * [`compiler`] — the mini-TACO: tensor algebra expressions, the
+//!   `compile(&TensorAlgebra, &Schedule)` front door (typed
+//!   schedule/expression agreement errors), concrete index notation
+//!   (CIN), schedule transformations (including the new
 //!   `parallelize(.., GPUGroup, r, strategy)`), lowering with segment
 //!   reduction + zero extension, LLIR, and CUDA-text / simulator codegen.
 //! * [`sim`] — the SIMT cost simulator standing in for the paper's GPUs.
-//! * [`algos`] — the four TACO algorithm families plus the dgSPARSE
-//!   kernels, each with numeric and simulated execution paths.
+//! * [`algos`] — the §2.1 quartet behind the catalog: the four TACO SpMM
+//!   families, SDDMM, the dgSPARSE kernels, and the COO-3 MTTKRP/TTM
+//!   segment kernels, each with numeric and simulated execution paths.
 //! * [`tuner`] — atomic-parallelism space search + input-dynamics selector.
 //! * [`runtime`] — PJRT artifact loading/execution (numeric hot path;
 //!   gated behind the `pjrt` cargo feature).
 //! * [`coordinator`] — the serving layer: a multi-worker pool with a
-//!   tuner-aware plan cache, SpMM + SDDMM routing, batching, backpressure
-//!   and per-backend metrics.
+//!   tuner-aware plan cache, SpMM/SDDMM/MTTKRP/TTM routing, batching,
+//!   backpressure and per-backend metrics.
 
 pub mod algos;
 pub mod compiler;

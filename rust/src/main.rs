@@ -1,11 +1,15 @@
 //! `sgap` — CLI for the Sgap reproduction.
 //!
 //! Subcommands:
+//!   expr      — print each §2.1 algebra, its reduction dims, and the
+//!               legal schedule families (the compile-API smoke test)
 //!   codegen   — lower a scheduled kernel and print the CUDA-like source
 //!   space     — print the atomic-parallelism legality map (Fig. 7/8)
 //!   stats     — print the evaluation-suite matrix statistics
 //!   tune      — grid-search one suite matrix on the simulator (SpMM)
 //!   sddmm     — grid-search the scheduled SDDMM candidates likewise
+//!   mttkrp    — grid-search the COO-3 MTTKRP candidates on a seeded tensor
+//!   ttm       — grid-search the COO-3 TTM candidates likewise
 //!   serve     — start the coordinator and push a demo workload
 //!
 //! Argument parsing is hand-rolled (`--key value` pairs) — the offline
@@ -16,11 +20,13 @@ use std::collections::HashMap;
 use anyhow::{bail, Context, Result};
 
 use sgap::compiler::codegen_cuda::{emit_translation_unit, macro_header};
-use sgap::compiler::schedule::{DgConfig, Schedule, SddmmConfig, SpmmConfig};
-use sgap::compiler::spaces;
+use sgap::compiler::schedule::{
+    DgConfig, MttkrpConfig, Schedule, SddmmConfig, SpmmConfig, TtmConfig,
+};
+use sgap::compiler::{spaces, ScheduleBuilder, TensorAlgebra};
 use sgap::coordinator::{Coordinator, CoordinatorConfig};
 use sgap::sim::{HwProfile, Machine};
-use sgap::sparse::{suite, MatrixStats, SplitMix64};
+use sgap::sparse::{suite, Coo3, MatrixStats, SplitMix64};
 use sgap::tuner;
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
@@ -70,6 +76,9 @@ fn cmd_codegen(flags: &HashMap<String, String>) -> Result<()> {
         "row-serial" => Schedule::taco_row_serial(cfg),
         // --n is the dense reduction width J here
         "sddmm" => Schedule::sddmm_group(SddmmConfig::new(n, g, r)),
+        // --n is the dense factor/output width for the COO-3 kernels
+        "mttkrp" => Schedule::mttkrp_group(MttkrpConfig::new(n, c, r)),
+        "ttm" => Schedule::ttm_group(TtmConfig::new(n, c, r)),
         // --g maps to workerSz, --r to groupSz, --c (if given) to coarsenSz
         "dgsparse" => {
             let stock = DgConfig::stock(n);
@@ -86,9 +95,10 @@ fn cmd_codegen(flags: &HashMap<String, String>) -> Result<()> {
         "// schedule: {}",
         schedule.cmds.iter().map(|c| c.to_string()).collect::<Vec<_>>().join(" and ")
     );
+    println!("// algebra: {}", schedule.algebra());
     println!("// CIN: {}", schedule.to_cin());
     println!();
-    let kernel = sgap::compiler::lower(&schedule)?;
+    let kernel = sgap::compiler::compile(&schedule.algebra(), &schedule)?;
     print!("{}", emit_translation_unit(&kernel));
     Ok(())
 }
@@ -186,6 +196,113 @@ fn cmd_sddmm(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// The compile-API smoke test: every quartet algebra in, its reduction
+/// dims and legal schedule families out — all through the public
+/// `ScheduleBuilder` front door.
+fn cmd_expr() -> Result<()> {
+    let quartet = [
+        ("spmm", TensorAlgebra::spmm()),
+        ("sddmm", TensorAlgebra::sddmm()),
+        ("mttkrp", TensorAlgebra::mttkrp()),
+        ("ttm", TensorAlgebra::ttm()),
+    ];
+    for (name, algebra) in quartet {
+        let builder = ScheduleBuilder::new(&algebra)?;
+        let dims: Vec<String> =
+            algebra.reduction_dims().iter().map(|d| d.to_string()).collect();
+        println!("{name:<8} {algebra}");
+        println!("         reduction dims: {{{}}}", dims.join(", "));
+        println!("         legal schedule families:");
+        for family in builder.legal_families() {
+            println!("           {family}");
+        }
+        println!();
+    }
+    Ok(())
+}
+
+/// Seeded random COO-3 tensor from the --d0/--d1/--d2/--nnz flags.
+fn tensor_from_flags(flags: &HashMap<String, String>) -> Result<Coo3> {
+    let d0 = flag_u32(flags, "d0", 128)? as usize;
+    let d1 = flag_u32(flags, "d1", 96)? as usize;
+    let d2 = flag_u32(flags, "d2", 64)? as usize;
+    let nnz = flag_u32(flags, "nnz", 4000)? as usize;
+    let seed = flag_u32(flags, "seed", 7)? as u64;
+    Ok(Coo3::random((d0, d1, d2), nnz, seed))
+}
+
+fn print_ranked(out: &tuner::TuneOutcome) {
+    println!("{:<34} {:>12} {:>10}", "plan", "time (us)", "GFLOP/s");
+    for (alg, t, gf) in out.ranked.iter().take(12) {
+        println!("{:<34} {:>12.2} {:>10.2}", alg.name(), t * 1e6, gf);
+    }
+    let (best, t) = out.best();
+    println!("\nbest: {} at {:.2} us", best.name(), t * 1e6);
+}
+
+fn cmd_mttkrp(flags: &HashMap<String, String>) -> Result<()> {
+    let j = flag_u32(flags, "j", 16)?;
+    let hw = hw_by_name(flags.get("hw").map(String::as_str).unwrap_or("3090"))?;
+    let a = tensor_from_flags(flags)?;
+    let mut rng = SplitMix64::new(11);
+    let x1: Vec<f32> = (0..a.dim1 * j as usize).map(|_| rng.value()).collect();
+    let x2: Vec<f32> = (0..a.dim2 * j as usize).map(|_| rng.value()).collect();
+    let machine = Machine::new(hw);
+    let cands = tuner::mttkrp_candidates(j);
+    anyhow::ensure!(!cands.is_empty(), "no legal MTTKRP launch shape for J={j}");
+    println!(
+        "mttkrp-tuning {}x{}x{} nnz={} on {} ({} candidates, J={j})",
+        a.dim0, a.dim1, a.dim2, a.nnz(), hw.name, cands.len()
+    );
+    let out = tuner::tune_mttkrp_ranked(&machine, &cands, &a, &x1, &x2)?;
+    print_ranked(&out);
+    let (_, t) = out.best();
+    match tuner::Selector::default().select_mttkrp(&a, j) {
+        Some(selected) => match out.time_of(&selected) {
+            Some(ts) => println!(
+                "selector fast path: {} at {:.2} us ({:.2}x of best)",
+                selected.name(),
+                ts * 1e6,
+                ts / t
+            ),
+            None => println!("selector fast path: {} (outside the sweep grid)", selected.name()),
+        },
+        None => println!("selector fast path: none (width {j} served on the CPU)"),
+    }
+    Ok(())
+}
+
+fn cmd_ttm(flags: &HashMap<String, String>) -> Result<()> {
+    let l = flag_u32(flags, "l", 16)?;
+    let hw = hw_by_name(flags.get("hw").map(String::as_str).unwrap_or("3090"))?;
+    let a = tensor_from_flags(flags)?;
+    let mut rng = SplitMix64::new(13);
+    let x1: Vec<f32> = (0..a.dim2 * l as usize).map(|_| rng.value()).collect();
+    let machine = Machine::new(hw);
+    let cands = tuner::ttm_candidates(l);
+    anyhow::ensure!(!cands.is_empty(), "no legal TTM launch shape for L={l}");
+    println!(
+        "ttm-tuning {}x{}x{} nnz={} on {} ({} candidates, L={l})",
+        a.dim0, a.dim1, a.dim2, a.nnz(), hw.name, cands.len()
+    );
+    let out = tuner::tune_ttm_ranked(&machine, &cands, &a, &x1)?;
+    print_ranked(&out);
+    let (_, t) = out.best();
+    match tuner::Selector::default().select_ttm(&a, l) {
+        Some(selected) => match out.time_of(&selected) {
+            Some(ts) => println!(
+                "selector fast path: {} at {:.2} us ({:.2}x of best)",
+                selected.name(),
+                ts * 1e6,
+                ts / t
+            ),
+            None => println!("selector fast path: {} (outside the sweep grid)", selected.name()),
+        },
+        None => println!("selector fast path: none (width {l} served on the CPU)"),
+    }
+    Ok(())
+}
+
 fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let dir = sgap::runtime::Runtime::default_dir();
     let use_artifacts = dir.join("manifest.json").exists()
@@ -255,11 +372,14 @@ fn main() -> Result<()> {
     let cmd = args.first().map(String::as_str).unwrap_or("help");
     let flags = parse_flags(&args[1.min(args.len())..]);
     match cmd {
+        "expr" => cmd_expr(),
         "codegen" => cmd_codegen(&flags),
         "space" => cmd_space(),
         "stats" => cmd_stats(),
         "tune" => cmd_tune(&flags),
         "sddmm" => cmd_sddmm(&flags),
+        "mttkrp" => cmd_mttkrp(&flags),
+        "ttm" => cmd_ttm(&flags),
         "serve" => cmd_serve(&flags),
         "macros" => {
             print!("{}", macro_header());
@@ -269,12 +389,15 @@ fn main() -> Result<()> {
             println!("sgap — segment group & atomic parallelism (Sgap reproduction)");
             println!();
             println!("usage: sgap <command> [--flag value ...]");
-            println!("  codegen  --family nnz-group|row-group|nnz-serial|row-serial|sddmm|dgsparse --n 4 --c 4 --g 32 --r 32");
-            println!("           (sddmm: --n is J; dgsparse: --g=workerSz --r=groupSz --c=coarsenSz)");
+            println!("  expr     (print the §2.1 quartet: algebra, reduction dims, legal families)");
+            println!("  codegen  --family nnz-group|row-group|nnz-serial|row-serial|sddmm|dgsparse|mttkrp|ttm --n 4 --c 4 --g 32 --r 32");
+            println!("           (sddmm/mttkrp/ttm: --n is the dense width; dgsparse: --g=workerSz --r=groupSz --c=coarsenSz)");
             println!("  space    (print the Fig. 7/8 legality map)");
             println!("  stats    (print the evaluation-suite statistics)");
             println!("  tune     --dataset er_1024_d5e-3 --n 4 --hw 3090|2080|v100");
             println!("  sddmm    --dataset er_1024_d5e-3 --j 16 --hw 3090|2080|v100");
+            println!("  mttkrp   --d0 128 --d1 96 --d2 64 --nnz 4000 --j 16 --hw 3090|2080|v100");
+            println!("  ttm      --d0 128 --d1 96 --d2 64 --nnz 4000 --l 16 --hw 3090|2080|v100");
             println!("  serve    --requests 32 --workers 2 [--tune] [--cpu-only] (SGAP_ARTIFACTS overrides artifacts dir)");
             println!("  macros   (print the §5.3 macro-instruction header)");
             Ok(())

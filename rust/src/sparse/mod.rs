@@ -16,6 +16,7 @@ pub mod rng;
 pub mod stats;
 
 pub use coo::Coo;
+pub use coo3::Coo3;
 pub use csr::Csr;
 pub use dataset::{suite, DatasetSpec};
 pub use ell::Ell;

@@ -5,6 +5,12 @@ pub mod search;
 pub mod selector;
 pub mod space;
 
-pub use search::{tune, tune_sddmm, tune_sddmm_ranked, TuneOutcome};
+pub use search::{
+    tune, tune_mttkrp, tune_mttkrp_ranked, tune_sddmm, tune_sddmm_ranked, tune_ttm,
+    tune_ttm_ranked, TuneOutcome,
+};
 pub use selector::Selector;
-pub use space::{dg_candidates, sddmm_candidates, sgap_candidates, taco_candidates};
+pub use space::{
+    dg_candidates, mttkrp_candidates, sddmm_candidates, sgap_candidates, taco_candidates,
+    ttm_candidates,
+};

@@ -6,6 +6,7 @@ use anyhow::Result;
 
 use crate::algos::catalog::{Algo, AlgoResult};
 use crate::sim::Machine;
+use crate::sparse::coo3::Coo3;
 use crate::sparse::Csr;
 
 /// Outcome of tuning one matrix: all results, sorted fastest-first.
@@ -92,6 +93,65 @@ pub fn tune_sddmm(
     tune_sddmm_ranked(machine, candidates, a, x1, x2).map(|out| out.best())
 }
 
+/// Sweep MTTKRP plans ([`Algo::Mttkrp`]) on `(a, x1, x2)`; returns all
+/// results sorted fastest-first. Serial for the same reason as
+/// [`tune_sddmm_ranked`]: it runs on the coordinator's single
+/// background-refinement thread.
+pub fn tune_mttkrp_ranked(
+    machine: &Machine,
+    candidates: &[Algo],
+    a: &Coo3,
+    x1: &[f32],
+    x2: &[f32],
+) -> Result<TuneOutcome> {
+    anyhow::ensure!(!candidates.is_empty(), "no candidates supplied");
+    let mut ranked = Vec::with_capacity(candidates.len());
+    for alg in candidates {
+        let res = alg.run_mttkrp(machine, a, x1, x2)?;
+        ranked.push((*alg, res.time_s, res.gflops));
+    }
+    ranked.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    Ok(TuneOutcome { ranked })
+}
+
+/// The fastest MTTKRP plan and its simulated time.
+pub fn tune_mttkrp(
+    machine: &Machine,
+    candidates: &[Algo],
+    a: &Coo3,
+    x1: &[f32],
+    x2: &[f32],
+) -> Result<(Algo, f64)> {
+    tune_mttkrp_ranked(machine, candidates, a, x1, x2).map(|out| out.best())
+}
+
+/// Sweep TTM plans ([`Algo::Ttm`]) on `(a, x1)`; fastest-first.
+pub fn tune_ttm_ranked(
+    machine: &Machine,
+    candidates: &[Algo],
+    a: &Coo3,
+    x1: &[f32],
+) -> Result<TuneOutcome> {
+    anyhow::ensure!(!candidates.is_empty(), "no candidates supplied");
+    let mut ranked = Vec::with_capacity(candidates.len());
+    for alg in candidates {
+        let res = alg.run_ttm(machine, a, x1)?;
+        ranked.push((*alg, res.time_s, res.gflops));
+    }
+    ranked.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    Ok(TuneOutcome { ranked })
+}
+
+/// The fastest TTM plan and its simulated time.
+pub fn tune_ttm(
+    machine: &Machine,
+    candidates: &[Algo],
+    a: &Coo3,
+    x1: &[f32],
+) -> Result<(Algo, f64)> {
+    tune_ttm_ranked(machine, candidates, a, x1).map(|out| out.best())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -142,5 +202,31 @@ mod tests {
         for w in out.ranked.windows(2) {
             assert!(w[0].1 <= w[1].1);
         }
+    }
+
+    #[test]
+    fn tune_mttkrp_and_ttm_rank_the_coo3_grids() {
+        use crate::tuner::space::{mttkrp_candidates, ttm_candidates};
+        let a = Coo3::random((32, 24, 16), 500, 11);
+        let j = 8usize;
+        let mut rng = SplitMix64::new(6);
+        let x1: Vec<f32> = (0..a.dim1 * j).map(|_| rng.value()).collect();
+        let x2: Vec<f32> = (0..a.dim2 * j).map(|_| rng.value()).collect();
+        let m = Machine::new(HwProfile::rtx3090());
+        let cands = mttkrp_candidates(j as u32);
+        let out = tune_mttkrp_ranked(&m, &cands, &a, &x1, &x2).unwrap();
+        assert_eq!(out.ranked.len(), cands.len());
+        for w in out.ranked.windows(2) {
+            assert!(w[0].1 <= w[1].1);
+        }
+        let (best, t) = tune_mttkrp(&m, &cands, &a, &x1, &x2).unwrap();
+        assert!(best.is_mttkrp() && t > 0.0);
+
+        let lx1: Vec<f32> = (0..a.dim2 * 4).map(|_| rng.value()).collect();
+        let tcands = ttm_candidates(4);
+        let (tbest, tt) = tune_ttm(&m, &tcands, &a, &lx1).unwrap();
+        assert!(tbest.is_ttm() && tt > 0.0);
+        let out = tune_ttm_ranked(&m, &tcands, &a, &lx1).unwrap();
+        assert_eq!(out.ranked.len(), tcands.len());
     }
 }

@@ -9,8 +9,10 @@
 //! suite with [`Selector::fit`].
 
 use crate::algos::catalog::{c_values, Algo};
+use crate::algos::mttkrp::{MttkrpConfig, TtmConfig};
 use crate::algos::sddmm::SddmmConfig;
 use crate::sim::Machine;
+use crate::sparse::coo3::Coo3;
 use crate::sparse::{Csr, MatrixStats};
 
 use super::search::tune;
@@ -74,6 +76,38 @@ impl Selector {
         let r_cap =
             if stats.row_degree_mean < self.short_row_degree { self.r_short } else { self.r_long };
         Algo::Sddmm(SddmmConfig::new(j_dim, g, r_cap.min(g)))
+    }
+
+    /// Pick an MTTKRP plan from the tensor's segment dynamics: the widest
+    /// coarsening that keeps the launch shape legal, reduction width by
+    /// the mean segment length (short segments — few non-zeros per output
+    /// row — want narrow groups, the Fig. 1(b) trade-off). Returns `None`
+    /// when no coarsening satisfies the divisibility for `j_dim`; the
+    /// serving layer routes such widths to the CPU path.
+    pub fn select_mttkrp(&self, a: &Coo3, j_dim: u32) -> Option<Algo> {
+        let c = *c_values(j_dim).last()?;
+        let mean_seg = a.nnz() as f64 / a.dim0.max(1) as f64;
+        let mut cfg = MttkrpConfig::new(j_dim, c, 2);
+        cfg.r = self.coo3_r(mean_seg, cfg.npb());
+        cfg.validate().ok()?;
+        Some(Algo::Mttkrp(cfg))
+    }
+
+    /// Pick a TTM plan; segments are the leading `(i,j)` fibers.
+    pub fn select_ttm(&self, a: &Coo3, l_dim: u32) -> Option<Algo> {
+        let c = *c_values(l_dim).last()?;
+        let mean_seg = a.nnz() as f64 / (a.dim0 * a.dim1).max(1) as f64;
+        let mut cfg = TtmConfig::new(l_dim, c, 2);
+        cfg.r = self.coo3_r(mean_seg, cfg.npb());
+        cfg.validate().ok()?;
+        Some(Algo::Ttm(cfg))
+    }
+
+    /// The shared reduction-width rule of the COO-3 families, capped at
+    /// the contiguous nnz range a block's lanes own.
+    fn coo3_r(&self, mean_seg: f64, npb: u32) -> u32 {
+        let r = if mean_seg < self.short_row_degree { self.r_short } else { self.r_long };
+        r.min(npb)
     }
 
     /// Re-fit `cv_eb_threshold` on a training set by minimizing total
@@ -190,6 +224,33 @@ mod tests {
         }
         let cfg = sddmm_cfg(s.select_sddmm(&MatrixStats::of(&short), 64));
         assert_eq!((cfg.g, cfg.r), (32, 4), "short rows get the narrow reduction");
+    }
+
+    #[test]
+    fn coo3_selection_tracks_segment_length_and_width() {
+        let s = Selector::default();
+        // 8000 nnz over 64 rows: long segments → wide reduction
+        let dense_rows = Coo3::random((64, 32, 32), 8000, 1);
+        let Some(Algo::Mttkrp(cfg)) = s.select_mttkrp(&dense_rows, 8) else {
+            panic!("expected an MTTKRP plan")
+        };
+        assert_eq!((cfg.j_dim, cfg.r), (8, 32));
+        cfg.validate().unwrap();
+        // 100 nnz over 64 rows: short segments → narrow reduction
+        let sparse_rows = Coo3::random((64, 32, 32), 100, 2);
+        let Some(Algo::Mttkrp(cfg)) = s.select_mttkrp(&sparse_rows, 8) else {
+            panic!("expected an MTTKRP plan")
+        };
+        assert_eq!(cfg.r, 4);
+        // TTM segments are fibers: 8000 nnz over 64·32 fibers is short
+        let Some(Algo::Ttm(cfg)) = s.select_ttm(&dense_rows, 8) else {
+            panic!("expected a TTM plan")
+        };
+        assert_eq!(cfg.r, 4);
+        cfg.validate().unwrap();
+        // widths with no legal coarsening are declined, not mis-served
+        assert!(s.select_mttkrp(&dense_rows, 20).is_none());
+        assert!(s.select_ttm(&dense_rows, 20).is_none());
     }
 
     #[test]

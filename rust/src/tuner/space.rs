@@ -6,6 +6,7 @@
 
 use crate::algos::catalog::{c_values, Algo};
 use crate::algos::dgsparse::DgConfig;
+use crate::algos::mttkrp::{MttkrpConfig, TtmConfig};
 use crate::algos::sddmm::SddmmConfig;
 
 const P: u32 = 256;
@@ -99,6 +100,37 @@ pub fn sddmm_candidates(j_dim: u32) -> Vec<Algo> {
     out
 }
 
+/// MTTKRP candidate grid (Eq. 2a): coarsening `c` × reduction width `r`
+/// over the COO-3 nnz-split segment family. Empty when no coarsening
+/// satisfies the launch divisibility for `j_dim` — callers fall back to
+/// the CPU path for such widths.
+pub fn mttkrp_candidates(j_dim: u32) -> Vec<Algo> {
+    let mut out = Vec::new();
+    for c in c_values(j_dim) {
+        for r in [2u32, 4, 8, 16, 32] {
+            let cfg = MttkrpConfig::new(j_dim, c, r);
+            if cfg.validate().is_ok() {
+                out.push(Algo::Mttkrp(cfg));
+            }
+        }
+    }
+    out
+}
+
+/// TTM candidate grid (Eq. 2b), same shape as [`mttkrp_candidates`].
+pub fn ttm_candidates(l_dim: u32) -> Vec<Algo> {
+    let mut out = Vec::new();
+    for c in c_values(l_dim) {
+        for r in [2u32, 4, 8, 16, 32] {
+            let cfg = TtmConfig::new(l_dim, c, r);
+            if cfg.validate().is_ok() {
+                out.push(Algo::Ttm(cfg));
+            }
+        }
+    }
+    out
+}
+
 /// dgSPARSE tuning grid (§7.2): `<groupSz, blockSz, tileSz, workerDimR>`.
 pub fn dg_candidates(n: u32) -> Vec<Algo> {
     let stock = DgConfig::stock(n);
@@ -177,5 +209,28 @@ mod tests {
         let c = taco_candidates(4);
         assert!(c.iter().any(|a| matches!(a, Algo::TacoNnzSerial { .. })));
         assert!(c.iter().any(|a| matches!(a, Algo::TacoRowSerial { .. })));
+    }
+
+    #[test]
+    fn coo3_grids_valid_and_empty_only_for_illegal_widths() {
+        for j in [1u32, 4, 8, 32] {
+            let cands = mttkrp_candidates(j);
+            assert!(!cands.is_empty(), "no MTTKRP candidates for J={j}");
+            for a in &cands {
+                let Algo::Mttkrp(cfg) = a else { panic!("{} not an MTTKRP plan", a.name()) };
+                cfg.validate().unwrap();
+                assert_eq!(cfg.j_dim, j);
+            }
+            let tcands = ttm_candidates(j);
+            assert!(!tcands.is_empty(), "no TTM candidates for L={j}");
+            for a in &tcands {
+                let Algo::Ttm(cfg) = a else { panic!("{} not a TTM plan", a.name()) };
+                cfg.validate().unwrap();
+            }
+        }
+        // J = 20: no coarsening makes the chunks divide the block — the
+        // grid is empty and the serving layer routes to the CPU
+        assert!(mttkrp_candidates(20).is_empty());
+        assert!(ttm_candidates(20).is_empty());
     }
 }

@@ -8,7 +8,10 @@
 //! `SGAP_BLESS=1 cargo test --test codegen_golden`.
 
 use sgap::compiler::codegen_cuda::{emit_kernel, macro_header};
-use sgap::compiler::schedule::{DgConfig, Schedule, SddmmConfig, SpmmConfig};
+use sgap::compiler::schedule::{
+    DgConfig, MttkrpConfig, Schedule, SddmmConfig, SpmmConfig, TtmConfig,
+};
+use sgap::compiler::{compile, TensorAlgebra};
 
 fn check_golden(name: &str, got: &str) {
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden").join(name);
@@ -98,6 +101,36 @@ fn sddmm_group_golden() {
     assert!(src.contains("atomicAddGroup<float,8>(Y_vals, pos, val);"), "{src}");
     assert!(!src.contains("segReduceGroup"), "sddmm reduces over the dense j: no segments");
     check_golden("sddmm_g16_r8.cu", &src);
+}
+
+/// MTTKRP (Eq. 2a) — the COO-3 nnz-split segment kernel, compiled through
+/// the `compiler::compile` front door from its stated algebra. Pins the
+/// `segReduceGroup<float,r>` writeback (the same macro instruction as
+/// SpMM's Listing 6 — §2.1's claim in generated text) and the
+/// zero-extension predicate over `A_nnz`.
+#[test]
+fn mttkrp_group_golden() {
+    let sched = Schedule::mttkrp_group(MttkrpConfig::new(8, 4, 16));
+    let kernel = compile(&TensorAlgebra::mttkrp(), &sched).unwrap();
+    let src = emit_kernel(&kernel);
+    assert!(src.contains("__global__ void mttkrp_c4_r16"), "{src}");
+    assert!(src.contains("segReduceGroup<float,16>(Y_vals, out, val);"), "{src}");
+    assert!(src.contains("if ((pos >= A_nnz)) {"), "zero-extension predicate missing:\n{src}");
+    assert!(src.contains("X2_vals"), "Khatri-Rao gather missing:\n{src}");
+    assert!(!src.contains("atomicAdd(&"), "segment reduction must not use plain atomics");
+    check_golden("mttkrp_c4_r16.cu", &src);
+}
+
+/// TTM (Eq. 2b) — same COO-3 shape without the second factor gather.
+#[test]
+fn ttm_group_golden() {
+    let sched = Schedule::ttm_group(TtmConfig::new(4, 4, 8));
+    let kernel = compile(&TensorAlgebra::ttm(), &sched).unwrap();
+    let src = emit_kernel(&kernel);
+    assert!(src.contains("__global__ void ttm_c4_r8"), "{src}");
+    assert!(src.contains("segReduceGroup<float,8>(Y_vals, out, val);"), "{src}");
+    assert!(!src.contains("X2_vals") && !src.contains("f2_idx"), "{src}");
+    check_golden("ttm_c4_r8.cu", &src);
 }
 
 /// dgSPARSE's RB+PR point `<8, 256, 8, 1/2>` (a paper best-static shape)

@@ -1,14 +1,16 @@
 //! Property tests for the coordinator's batcher invariants plus
 //! concurrency stress tests of the full multi-worker service: mixed
-//! SpMM/SDDMM traffic, plan-cache behaviour under repetition, the metrics
-//! accounting identity, and graceful shutdown under in-flight load.
+//! SpMM/SDDMM/MTTKRP/TTM traffic (the full §2.1 quartet), plan-cache
+//! behaviour under repetition, the metrics accounting identity, and
+//! graceful shutdown under in-flight load.
 
 use std::sync::Arc;
 
 use sgap::algos::cpu_ref::{max_rel_err, spmm_serial};
+use sgap::algos::mttkrp::{mttkrp_serial, ttm_serial};
 use sgap::algos::sddmm::sddmm_serial;
 use sgap::coordinator::{Batcher, Coordinator, CoordinatorConfig, Request};
-use sgap::sparse::{erdos_renyi, power_law, Csr, SplitMix64};
+use sgap::sparse::{erdos_renyi, power_law, Coo3, Csr, SplitMix64};
 
 /// Random push/drain interleavings: FIFO per key, no loss, batch bound.
 #[test]
@@ -58,9 +60,13 @@ fn prop_batcher_invariants() {
     }
 }
 
-/// The six repeated request shapes of the stress mix (four SpMM, two
-/// SDDMM). Matrices are deterministic, so repeats across all submitter
-/// threads share plan-cache fingerprints.
+/// The number of repeated request shapes in the stress mix.
+const SHAPES: usize = 8;
+
+/// The eight repeated request shapes of the stress mix (four SpMM, two
+/// SDDMM, one MTTKRP, one TTM — the full quartet through one pool).
+/// Matrices are deterministic, so repeats across all submitter threads
+/// share plan-cache fingerprints.
 fn shape_matrix(shape: usize) -> Csr {
     match shape {
         0 => erdos_renyi(32, 32, 100, 1).to_csr(),
@@ -73,6 +79,19 @@ fn shape_matrix(shape: usize) -> Csr {
 }
 
 fn build_request(shape: usize, rng: &mut SplitMix64) -> Request {
+    if shape == 6 {
+        let a = Coo3::random((24, 16, 12), 250, 7);
+        let j = 8usize;
+        let x1: Vec<f32> = (0..a.dim1 * j).map(|_| rng.value()).collect();
+        let x2: Vec<f32> = (0..a.dim2 * j).map(|_| rng.value()).collect();
+        return Request::Mttkrp { a, x1, x2, j_dim: j };
+    }
+    if shape == 7 {
+        let a = Coo3::random((20, 12, 16), 300, 8);
+        let l = 4usize;
+        let x1: Vec<f32> = (0..a.dim2 * l).map(|_| rng.value()).collect();
+        return Request::Ttm { a, x1, l_dim: l };
+    }
     let a = shape_matrix(shape);
     if shape < 4 {
         let n = if shape % 2 == 0 { 4 } else { 2 };
@@ -91,10 +110,12 @@ fn oracle(req: &Request) -> Vec<f32> {
     match req {
         Request::Spmm { a, b, n } => spmm_serial(a, b, *n),
         Request::Sddmm { a, x1, x2, j_dim } => sddmm_serial(a, x1, x2, *j_dim),
+        Request::Mttkrp { a, x1, x2, j_dim } => mttkrp_serial(a, x1, x2, *j_dim),
+        Request::Ttm { a, x1, l_dim } => ttm_serial(a, x1, *l_dim),
     }
 }
 
-/// 8 submitter threads × 100 mixed SpMM/SDDMM jobs through the pooled
+/// 8 submitter threads × 100 mixed quartet jobs through the pooled
 /// coordinator: every request is answered exactly once with *its own*
 /// result, the metrics identity `completed + errors == submitted` holds,
 /// and repeated shapes are served via plan-cache hits with a
@@ -115,7 +136,7 @@ fn coordinator_stress_mixed_traffic() {
             let mut answered = 0usize;
             let mut hits = 0usize;
             for i in 0..per_client {
-                let req = build_request((t + i) % 6, &mut rng);
+                let req = build_request((t + i) % SHAPES, &mut rng);
                 let want = oracle(&req);
                 let is_spmm = matches!(req, Request::Spmm { .. });
                 let rx = c.submit(req);
@@ -160,13 +181,19 @@ fn coordinator_stress_mixed_traffic() {
     assert!(s.batches >= 1);
     assert!(s.cache_hits > 0, "metrics must see plan-cache hits");
     assert_eq!(s.cache_hits + s.cache_misses, s.submitted, "every job consulted the cache");
-    // six shapes, each (shape, width) pair fingerprints once — misses stay
+    // each distinct (shape, width) pair fingerprints once — misses stay
     // bounded by the number of distinct shapes (not the request count)
-    assert!(s.cache_misses <= 6, "cache misses {} exceed distinct shapes", s.cache_misses);
+    assert!(
+        s.cache_misses <= SHAPES as u64,
+        "cache misses {} exceed distinct shapes",
+        s.cache_misses
+    );
     // both scenarios flowed through the same pool: sim backends for spmm
     // families and sddmm must all be present
     assert!(s.backends.iter().any(|b| b.backend == "sim:sddmm-group"), "{:?}", s.backends);
     assert!(s.backends.iter().any(|b| b.backend.starts_with("sim:sgap")), "{:?}", s.backends);
+    assert!(s.backends.iter().any(|b| b.backend == "sim:mttkrp-group"), "{:?}", s.backends);
+    assert!(s.backends.iter().any(|b| b.backend == "sim:ttm-group"), "{:?}", s.backends);
     let served: u64 = s.backends.iter().map(|b| b.count).sum();
     assert_eq!(served, s.completed, "per-backend counts sum to completed");
 
@@ -186,7 +213,7 @@ fn shutdown_under_inflight_load_is_clean_and_lossless() {
     let mut rng = SplitMix64::new(0x5D);
     let mut rxs = Vec::new();
     for i in 0..120usize {
-        let req = build_request(i % 6, &mut rng);
+        let req = build_request(i % SHAPES, &mut rng);
         rxs.push((oracle(&req), coord.submit(req)));
     }
     // shut down while most of those jobs are still in the queue
@@ -216,7 +243,7 @@ fn submit_racing_shutdown_never_deadlocks() {
             let mut rng = SplitMix64::new(t);
             let mut served = 0usize;
             for i in 0..30usize {
-                let rx = c.submit(build_request(i % 6, &mut rng));
+                let rx = c.submit(build_request(i % SHAPES, &mut rng));
                 match rx.recv() {
                     Ok(Ok(_)) => served += 1,
                     Ok(Err(e)) => panic!("unexpected serve error: {e}"),

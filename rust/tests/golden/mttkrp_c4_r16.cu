@@ -1,0 +1,18 @@
+__global__ void mttkrp_c4_r16(int* __restrict__ seg_ids, int* __restrict__ f1_idx, int* __restrict__ f2_idx, float* __restrict__ A_vals, float* __restrict__ X1_vals, float* __restrict__ X2_vals, float* __restrict__ Y_vals, int N_dimension, int A_nnz, int A_nnz_pad) {
+  // mttkrp {<1 nnz, 4 col>, 16} — COO-3 grouped segment reduction
+  int e = (threadIdx.x % 128);
+  int ko = (threadIdx.x / 128);
+  int pos = ((blockIdx.x * 128) + e);
+  int seg = seg_ids[min(pos, (A_nnz_pad - 1))];
+  for (int ki = 0; ki < 4; ki += 1) {
+    int jcol = ((ko * 4) + ki);
+    float val = 0.0f;
+    if ((pos >= A_nnz)) {
+      val = 0.0f;
+    } else {
+      val = ((A_vals[pos] * X1_vals[((f1_idx[pos] * N_dimension) + jcol)]) * X2_vals[((f2_idx[pos] * N_dimension) + jcol)]);
+    }
+    int out = ((seg * N_dimension) + jcol);
+    segReduceGroup<float,16>(Y_vals, out, val);
+  }
+}

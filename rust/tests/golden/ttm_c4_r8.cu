@@ -1,0 +1,18 @@
+__global__ void ttm_c4_r8(int* __restrict__ seg_ids, int* __restrict__ f1_idx, float* __restrict__ A_vals, float* __restrict__ X1_vals, float* __restrict__ Y_vals, int N_dimension, int A_nnz, int A_nnz_pad) {
+  // ttm {<1 nnz, 4 col>, 8} — COO-3 grouped segment reduction
+  int e = (threadIdx.x % 256);
+  int ko = (threadIdx.x / 256);
+  int pos = ((blockIdx.x * 256) + e);
+  int seg = seg_ids[min(pos, (A_nnz_pad - 1))];
+  for (int ki = 0; ki < 4; ki += 1) {
+    int jcol = ((ko * 4) + ki);
+    float val = 0.0f;
+    if ((pos >= A_nnz)) {
+      val = 0.0f;
+    } else {
+      val = (A_vals[pos] * X1_vals[((f1_idx[pos] * N_dimension) + jcol)]);
+    }
+    int out = ((seg * N_dimension) + jcol);
+    segReduceGroup<float,8>(Y_vals, out, val);
+  }
+}

@@ -1,0 +1,141 @@
+//! Differential property tests for the COO-3 tensor kernels that complete
+//! the §2.1 quartet: every MTTKRP/TTM candidate the tuner sweeps matches
+//! the serial oracle over tensor shapes × dense widths, and the
+//! coordinator's plan-cache path is result-identical to fresh selection —
+//! mirroring `spmm_differential.rs` for the two new scenarios.
+
+use sgap::algos::cpu_ref::max_rel_err;
+use sgap::algos::mttkrp::{mttkrp_serial, ttm_serial};
+use sgap::coordinator::{PlanCache, ShapeKey};
+use sgap::sim::{HwProfile, Machine};
+use sgap::sparse::{Coo3, SplitMix64};
+use sgap::tuner::{mttkrp_candidates, ttm_candidates, Selector};
+
+const TOL: f32 = 5e-4;
+
+/// j = 1 is the degenerate single-column case; 8 and 32 bracket the
+/// grouped reduction widths (32 forces r = npb-capped groups at c = 1).
+const WIDTHS: [usize; 3] = [1, 8, 32];
+
+/// Tensor shapes spanning the structures the selector keys on: uniform,
+/// tall-skinny (long segments), wide-flat (short fibers), and a hub
+/// tensor with every non-zero in one output row (the skew corner).
+fn tensors(seed: u64) -> Vec<(&'static str, Coo3)> {
+    let hub: Vec<(u32, u32, u32, f32)> =
+        (0..300u32).map(|p| (0, p % 24, (p * 7 + p / 24) % 16, 1.0 - p as f32 * 0.01)).collect();
+    vec![
+        ("uniform", Coo3::random((40, 30, 20), 600, seed)),
+        ("tall", Coo3::random((8, 32, 32), 700, seed ^ 1)),
+        ("flat", Coo3::random((64, 48, 4), 500, seed ^ 2)),
+        ("hub", Coo3::new((32, 24, 16), hub)),
+    ]
+}
+
+fn dense(len: usize, seed: u64) -> Vec<f32> {
+    let mut rng = SplitMix64::new(seed);
+    (0..len).map(|_| rng.value()).collect()
+}
+
+#[test]
+fn every_mttkrp_candidate_matches_oracle_across_tensors_j() {
+    let machine = Machine::new(HwProfile::rtx3090());
+    for &j in &WIDTHS {
+        for (fam, a) in tensors(0x3AA ^ j as u64) {
+            let x1 = dense(a.dim1 * j, 5 + j as u64);
+            let x2 = dense(a.dim2 * j, 9 + j as u64);
+            let want = mttkrp_serial(&a, &x1, &x2, j);
+            let cands = mttkrp_candidates(j as u32);
+            assert!(!cands.is_empty(), "no candidates for j={j}");
+            for alg in cands {
+                let res = alg.run_mttkrp(&machine, &a, &x1, &x2).unwrap_or_else(|e| {
+                    panic!("{fam} j={j}: {} failed: {e}", alg.name())
+                });
+                let err = max_rel_err(&res.run.c, &want);
+                assert!(
+                    err < TOL,
+                    "{fam} j={j}: {} err {err} (tensor {}x{}x{} nnz {})",
+                    alg.name(),
+                    a.dim0,
+                    a.dim1,
+                    a.dim2,
+                    a.nnz()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn every_ttm_candidate_matches_oracle_across_tensors_l() {
+    let machine = Machine::new(HwProfile::rtx3090());
+    for &l in &WIDTHS {
+        for (fam, a) in tensors(0x77A ^ l as u64) {
+            let x1 = dense(a.dim2 * l, 13 + l as u64);
+            let want = ttm_serial(&a, &x1, l);
+            let cands = ttm_candidates(l as u32);
+            assert!(!cands.is_empty(), "no candidates for l={l}");
+            for alg in cands {
+                let res = alg.run_ttm(&machine, &a, &x1).unwrap_or_else(|e| {
+                    panic!("{fam} l={l}: {} failed: {e}", alg.name())
+                });
+                let err = max_rel_err(&res.run.c, &want);
+                assert!(
+                    err < TOL,
+                    "{fam} l={l}: {} err {err} (tensor {}x{}x{} nnz {})",
+                    alg.name(),
+                    a.dim0,
+                    a.dim1,
+                    a.dim2,
+                    a.nnz()
+                );
+            }
+        }
+    }
+}
+
+/// The tensor plan-cache path is result-identical to fresh selection, and
+/// the two tensor scenarios never collide into each other (or into SpMM).
+#[test]
+fn tensor_plan_cache_path_equals_fresh_selection() {
+    let machine = Machine::new(HwProfile::rtx3090());
+    let selector = Selector::default();
+    let cache = PlanCache::new(64);
+    for &j in &WIDTHS {
+        for (fam, a) in tensors(0xCAFE ^ j as u64) {
+            let mkey = ShapeKey::mttkrp(&a, j as u32);
+            let tkey = ShapeKey::ttm(&a, j as u32);
+            assert_ne!(mkey, tkey, "{fam} j={j}: scenario must separate the keys");
+
+            let fresh = selector.select_mttkrp(&a, j as u32).expect("legal width");
+            assert!(fresh.is_mttkrp(), "{fam} j={j}: selector returned {}", fresh.name());
+            let (plan, hit) = cache.get_or_insert_with(mkey, || fresh);
+            assert!(!hit, "{fam} j={j}: first sight must miss");
+            let (plan2, hit2) = cache.get_or_insert_with(mkey, || unreachable!("hit expected"));
+            assert!(hit2 && plan2 == plan, "{fam} j={j}: repeat must hit the same plan");
+            assert_eq!(plan2.kind, fresh, "cached plan must be the selector's choice");
+
+            let x1 = dense(a.dim1 * j, 17 + j as u64);
+            let x2 = dense(a.dim2 * j, 19 + j as u64);
+            let via_cache = plan2.kind.run_mttkrp(&machine, &a, &x1, &x2).unwrap();
+            let via_fresh = fresh.run_mttkrp(&machine, &a, &x1, &x2).unwrap();
+            assert_eq!(
+                via_cache.run.c, via_fresh.run.c,
+                "{fam} j={j}: cache path diverged from fresh selection"
+            );
+            let want = mttkrp_serial(&a, &x1, &x2, j);
+            assert!(max_rel_err(&via_cache.run.c, &want) < TOL, "{fam} j={j}");
+
+            let tfresh = selector.select_ttm(&a, j as u32).expect("legal width");
+            assert!(tfresh.is_ttm());
+            let (tplan, thit) = cache.get_or_insert_with(tkey, || tfresh);
+            assert!(!thit, "{fam} j={j}: ttm first sight must miss");
+            let lx1 = dense(a.dim2 * j, 23 + j as u64);
+            let via_cache = tplan.kind.run_ttm(&machine, &a, &lx1).unwrap();
+            let want = ttm_serial(&a, &lx1, j);
+            assert!(max_rel_err(&via_cache.run.c, &want) < TOL, "{fam} j={j} (ttm)");
+        }
+    }
+    let s = cache.stats();
+    assert_eq!(s.misses as usize, WIDTHS.len() * 4 * 2);
+    assert_eq!(s.hits as usize, WIDTHS.len() * 4);
+}

@@ -1,0 +1,619 @@
+#!/usr/bin/env python3
+"""One-shot seeding tool for the committed BENCH_*.json trajectory files.
+
+The authoritative generator is the Rust pipeline:
+
+    cd rust && cargo run --release -- bench --quick --out ..
+    # or: SGAP_BLESS=1 cargo test --test bench_json
+
+This script transliterates the deterministic pieces of that pipeline —
+SplitMix64, the dataset generators, MatrixStats/SegStats, and the
+`tuner::model::CostModel` pricing formulas — so the committed files can
+be seeded (schema-exact, internally consistent, model-priced) in an
+environment without a Rust toolchain. Because the seeded `est_time_us`
+column is the *analytic model's* estimate rather than the simulator's,
+`model_rank_agree` is trivially true in seeded files; the first blessed
+run on a toolchain host replaces both (the schema validator and the
+pruning-fidelity tests do not depend on the committed numbers).
+
+Keep the formulas in sync with rust/src/tuner/model.rs when editing.
+"""
+
+import json
+import math
+import os
+from collections import Counter
+
+MASK = (1 << 64) - 1
+
+
+class SplitMix64:
+    """rust/src/sparse/rng.rs, bit-exact."""
+
+    def __init__(self, seed):
+        self.state = seed & MASK
+
+    def next_u64(self):
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+        return (z ^ (z >> 31)) & MASK
+
+    def below(self, bound):
+        while True:
+            x = self.next_u64()
+            m = x * bound
+            lo = m & MASK
+            if lo >= bound or lo >= ((1 << 64) - bound) % bound:
+                return m >> 64
+
+    def uniform(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def value(self):
+        return self.uniform() * 2.0 - 1.0
+
+    def shuffle(self, xs):
+        for i in range(len(xs) - 1, 0, -1):
+            j = self.below(i + 1)
+            xs[i], xs[j] = xs[j], xs[i]
+
+
+# ---- generators (rust/src/sparse/gen.rs, degrees only) --------------------
+
+
+def erdos_renyi_degrees(rows, cols, nnz, seed):
+    rng = SplitMix64(seed)
+    seen = set()
+    deg = [0] * rows
+    while len(seen) < nnz:
+        r = rng.below(rows)
+        c = rng.below(cols)
+        if (r, c) not in seen:
+            seen.add((r, c))
+            deg[r] += 1
+            rng.value()
+    return deg
+
+
+def power_law_degrees(rows, cols, nnz, alpha, seed):
+    rng = SplitMix64(seed)
+    order = list(range(rows))
+    rng.shuffle(order)
+    weights = [float(k) ** -alpha for k in range(1, rows + 1)]
+    total = sum(weights)
+    degrees = [min(int((w / total) * nnz), cols) for w in weights]
+    assigned = sum(degrees)
+    k = stall = 0
+    while assigned < nnz and stall < rows:
+        slot = k % rows
+        if degrees[slot] < cols:
+            degrees[slot] += 1
+            assigned += 1
+            stall = 0
+        else:
+            stall += 1
+        k += 1
+    deg = [0] * rows
+    seen = set()
+    for rank, row in enumerate(order):
+        want = min(degrees[rank], cols)
+        got = attempts = 0
+        while got < want and attempts < want * 20 + 16:
+            c = rng.below(cols)
+            if (row, c) not in seen:
+                seen.add((row, c))
+                deg[row] += 1
+                got += 1
+                rng.value()
+            attempts += 1
+    return deg
+
+
+def banded_degrees(n, band):
+    half = band // 2
+    return [min(i + half, n - 1) - max(i - half, 0) + 1 for i in range(n)]
+
+
+def short_rows_degrees(n):
+    return [2] * n
+
+
+# ---- stats (rust/src/sparse/stats.rs) -------------------------------------
+
+
+class MatrixStats:
+    def __init__(self, rows, cols, degrees):
+        self.rows = rows
+        self.cols = cols
+        self.nnz = sum(degrees)
+        n = max(len(degrees), 1)
+        self.row_degree_mean = self.nnz / n
+        var = sum((d - self.row_degree_mean) ** 2 for d in degrees) / n
+        self.row_degree_cv = math.sqrt(var) / self.row_degree_mean if self.row_degree_mean > 0 else 0.0
+        self.row_degree_max = max(degrees) if degrees else 0
+
+
+class SegStats:
+    def __init__(self, segments, lengths):
+        self.segments = segments
+        self.nnz = sum(lengths)
+        segs = max(segments, 1)
+        self.mean_len = self.nnz / segs
+        sumsq = sum(l * l for l in lengths)
+        var = max(sumsq / segs - self.mean_len ** 2, 0.0)
+        self.cv = math.sqrt(var) / self.mean_len if self.mean_len > 0 else 0.0
+        self.max_len = max(lengths) if lengths else 0
+        self.empty_frac = 1.0 - len(lengths) / segs
+
+
+def coo3_random_segs(dims, nnz, seed):
+    rng = SplitMix64(seed)
+    d0, d1, d2 = dims
+    seen = set()
+    while len(seen) < min(nnz, d0 * d1 * d2):
+        e = (rng.below(d0), rng.below(d1), rng.below(d2))
+        if e not in seen:
+            seen.add(e)
+            rng.value()
+    rows = Counter(a for a, _, _ in seen)
+    fibers = Counter((a, b) for a, b, _ in seen)
+    return (
+        SegStats(d0, list(rows.values())),
+        SegStats(d0 * d1, list(fibers.values())),
+        len(seen),
+    )
+
+
+# ---- cost model (rust/src/tuner/model.rs, keep in sync) -------------------
+
+ALU, LOAD, SHFL, SYNC, ATOMIC, BRANCH, BSEARCH = 1.0, 4.0, 2.0, 1.0, 4.0, 1.0, 6.0
+SM, CLOCK, BW, ISSUE = 68, 1.395e9, 936.0e9, 4.0  # RTX 3090
+P, WARP = 256.0, 32.0
+
+
+def group_reduce(r, shfl_per_step):
+    return math.log2(max(r, 1)) * (shfl_per_step * SHFL + SYNC * r)
+
+
+def par_reduce(r):
+    return group_reduce(r, 1.0)
+
+
+def seg_scan(r):
+    return group_reduce(r, 2.0)
+
+
+def atomic_chain(m):
+    return ATOMIC * max(m, 0.0)
+
+
+def bsearch(window):
+    steps = max(math.ceil(math.log2(max(window, 1.0))), 0.0)
+    return BSEARCH * steps, steps
+
+
+def dot_iter():
+    return 2.0 * LOAD + 3.0 * ALU + BRANCH
+
+
+def lockstep_degree(d_mean, cv, d_max):
+    return min(max(d_mean * (1.0 + 2.0 * cv), d_mean), max(d_max, d_mean))
+
+
+def boundary_prob(mean_len):
+    return min(1.0 / max(mean_len, 1.0), 1.0)
+
+
+def gather_sectors(entries, footprint_rows, width):
+    return min(entries, max(footprint_rows * width / 8.0, 1.0))
+
+
+def rollup(cycles, sectors, critical):
+    t_compute = cycles / SM / ISSUE / CLOCK
+    t_memory = sectors * 32.0 / BW
+    t_latency = critical / CLOCK
+    return max(t_compute, t_memory, t_latency)
+
+
+def est_nnz_group(s, n, c, r):
+    z, d = s.nnz, s.row_degree_mean
+    kch = max(n // c, 1)
+    nnzb = P / kch
+    blocks = max(math.ceil(z / nnzb), 1.0)
+    warps = blocks * (P / WARP)
+    pb = boundary_prob(d)
+    bs_cy, bs_sec = bsearch(nnzb / max(d, 1.0) + 2.0)
+    prologue = 4.0 * ALU + 2.0 * LOAD + bs_cy
+    per_ki = (
+        8.0 * ALU
+        + 5.0 * LOAD
+        + 2.0 * BRANCH
+        + (1.0 + pb) * (ALU + LOAD)
+        + seg_scan(r)
+        + atomic_chain(min(max(d / r, 1.0), WARP / r))
+    )
+    per_warp = prologue + c * per_ki
+    a_sectors = 8.0 + bs_sec + 2.0
+    b_sectors = gather_sectors(WARP, s.cols, n)
+    return rollup(warps * per_warp, warps * (a_sectors + b_sectors), per_warp)
+
+
+def est_nnz_serial(s, n, g, c):
+    z, d = s.nnz, s.row_degree_mean
+    gf = float(g)
+    kch = max(n // c, 1)
+    nnzt = P / kch
+    blocks = max(math.ceil(z / (gf * nnzt)), 1.0)
+    warps = blocks * (P / WARP)
+    pb = boundary_prob(d)
+    flushes = gf * pb + 1.0
+    bs_cy, bs_sec = bsearch(gf * nnzt / max(d, 1.0) + 2.0)
+    prologue = 4.0 * ALU + 2.0 * LOAD + bs_cy
+    per_ki = (
+        gf * (3.0 * ALU + 2.0 * LOAD + BRANCH)
+        + flushes * (2.0 * ALU + LOAD)
+        + flushes * atomic_chain(min(max(d / gf, 1.0), WARP))
+    )
+    per_warp = prologue + c * per_ki
+    a_sectors = 8.0 * gf + bs_sec + 2.0
+    b_sectors = gather_sectors(WARP * gf, s.cols, n)
+    return rollup(warps * per_warp, warps * (a_sectors + b_sectors), per_warp)
+
+
+def est_row_serial(s, n, x, c):
+    m, d = s.rows, s.row_degree_mean
+    d_lock = lockstep_degree(d, s.row_degree_cv, s.row_degree_max)
+    kch = max(n // c, 1)
+    rowt = P / kch
+    blocks = max(math.ceil(m / (x * rowt)), 1.0)
+    warps = blocks * (P / WARP)
+    row_cy = d_lock * dot_iter() + LOAD + 4.0 * ALU
+    per_warp = 4.0 * ALU + (x * c) * row_cy
+    critical = 4.0 * ALU + (x * c) * (s.row_degree_max * dot_iter())
+    entries = WARP * x * d
+    a_sectors = 2.0 * entries / 8.0 + 2.0
+    b_sectors = gather_sectors(entries, s.cols, n)
+    c_sectors = c * x * 4.0
+    return rollup(
+        warps * per_warp,
+        warps * (a_sectors + b_sectors + c_sectors),
+        max(critical, per_warp),
+    )
+
+
+def est_row_group(s, n, g, c, r):
+    m, d = s.rows, s.row_degree_mean
+    gf = float(g)
+    kch = max(n // c, 1)
+    rpb = max(P / (gf * kch), 1.0)
+    blocks = max(math.ceil(m / rpb), 1.0)
+    warps = blocks * (P / WARP)
+    d_lock = lockstep_degree(d, s.row_degree_cv, s.row_degree_max)
+    trips = math.ceil(d_lock / gf)
+    wb_mult = max(gf / r, 1.0)
+    per_ki = 4.0 * ALU + 2.0 * LOAD + trips * dot_iter() + par_reduce(r) + atomic_chain(wb_mult)
+    per_warp = 6.0 * ALU + c * per_ki
+    crit_trips = math.ceil(s.row_degree_max / gf)
+    critical = 6.0 * ALU + c * (crit_trips * dot_iter() + par_reduce(r) + atomic_chain(wb_mult))
+    rows_in_warp = max(WARP / (gf * kch), 1.0)
+    entries = rows_in_warp * d
+    a_sectors = 2.0 * entries / 8.0 + 2.0
+    b_sectors = gather_sectors(entries, s.cols, n)
+    return rollup(warps * per_warp, warps * (a_sectors + b_sectors), max(critical, per_warp))
+
+
+class DgConfig:
+    """rust/src/compiler/schedule.rs DgConfig, the derived shapes only."""
+
+    def __init__(self, n, group_sz, block_sz, tile_sz, frac, worker_sz, coarsen_sz):
+        self.n, self.group_sz, self.block_sz = n, group_sz, block_sz
+        self.tile_sz, self.frac, self.worker_sz, self.coarsen_sz = tile_sz, frac, worker_sz, coarsen_sz
+
+    @staticmethod
+    def stock(n):
+        coarsen = 4 if n % 4 == 0 else (2 if n % 2 == 0 else 1)
+        return DgConfig(n, 32, 256, 32, 1.0, 32, coarsen)
+
+    def vcols(self):
+        return min(self.n, self.tile_sz) // max(self.coarsen_sz, 1)
+
+    def block_dim_x(self):
+        return self.vcols() * self.worker_sz
+
+    def rows_per_block(self):
+        return max(self.block_sz // max(self.block_dim_x(), 1), 1)
+
+    def col_tiles(self):
+        return -(-self.n // self.tile_sz)
+
+    def validate(self):
+        g = self.group_sz
+        if g & (g - 1) or g > 32 or g > self.worker_sz:
+            return False
+        t = self.tile_sz
+        if t & (t - 1) or t < g:
+            return False
+        if self.coarsen_sz == 0 or min(self.n, t) % self.coarsen_sz != 0:
+            return False
+        if self.block_dim_x() > self.block_sz or self.block_sz > 1024:
+            return False
+        if self.block_sz % max(self.block_dim_x(), 1) != 0:
+            return False
+        return self.frac > 0.0
+
+    def worker_dim_r(self, rows):
+        rpb = self.rows_per_block()
+        want = max(int(round_half_away(rows * self.frac)), rpb)
+        return -(-want // rpb) * rpb
+
+    def name(self):
+        frac = int(self.frac) if self.frac == int(self.frac) else self.frac
+        return f"dg<{self.group_sz},{self.block_sz},{self.tile_sz},{frac}>"
+
+
+def round_half_away(x):
+    # Rust f64::round() rounds half away from zero
+    return math.floor(x + 0.5) if x >= 0 else math.ceil(x - 0.5)
+
+
+def est_dg(s, cfg):
+    m, d = s.rows, s.row_degree_mean
+    ws = float(cfg.worker_sz)
+    coarsen = float(cfg.coarsen_sz)
+    vcols = float(max(cfg.vcols(), 1))
+    col_tiles = float(max(cfg.col_tiles(), 1))
+    d_lock = lockstep_degree(d, s.row_degree_cv, s.row_degree_max)
+    unit_cy = coarsen * (
+        2.0 * ALU
+        + math.ceil(d_lock / ws) * dot_iter()
+        + par_reduce(cfg.group_sz)
+        + atomic_chain(max(ws / cfg.group_sz, 1.0))
+    )
+    units = m * vcols * col_tiles
+    cycles = units * unit_cy * (ws / WARP)
+    visits = max(math.ceil(m / max(cfg.worker_dim_r(m), 1)), 1.0)
+    critical = visits * coarsen * (
+        math.ceil(s.row_degree_max / ws) * dot_iter() + par_reduce(cfg.group_sz)
+    )
+    a_sectors = units * (2.0 * d / 8.0 + 2.0)
+    b_sectors = max(gather_sectors(units * d, s.cols, cfg.n), units * d / 8.0)
+    return rollup(cycles, a_sectors + b_sectors, critical)
+
+
+def est_coo3(seg, width, c, r, with_x2):
+    z = seg.nnz
+    used = max(seg.segments * (1.0 - seg.empty_frac), 1.0)
+    d_used = z / used
+    kch = max(width // c, 1)
+    npb = P / kch
+    blocks = max(math.ceil(z / npb), 1.0)
+    warps = blocks * (P / WARP)
+    factors = 2.0 if with_x2 else 1.0
+    loads = 2.0 + 2.0 * factors
+    per_ki = (
+        8.0 * ALU
+        + loads * LOAD
+        + 2.0 * BRANCH
+        + seg_scan(r)
+        + atomic_chain(min(max(d_used / r, 1.0), WARP / r))
+    )
+    per_warp = 6.0 * ALU + LOAD + c * per_ki
+    meta_sectors = 8.0 + 4.0 * factors
+    x_sectors = factors * WARP
+    return rollup(warps * per_warp, warps * (meta_sectors + x_sectors), per_warp)
+
+
+# ---- candidate grids (rust/src/tuner/space.rs) ----------------------------
+
+
+def c_values(n):
+    return [c for c in (1, 2, 4) if n % c == 0 and 256 % (n // c) == 0]
+
+
+def families_grid(n):
+    out = []
+    for c in c_values(n):
+        kch = n // c
+        for g in (4, 8, 16, 32):
+            out.append(("taco-nnz", g, c, None, f"taco{{<{g} nnz,{c} col>,1}}"))
+        for x in (1, 2, 4):
+            out.append(("taco-row", x, c, None, f"taco{{<{x} row,{c} col>,1}}"))
+        for r in (2, 4, 8, 16, 32):
+            out.append(("sgap-nnz", None, c, r, f"sgap{{<1 nnz,{c} col>,{r}}}"))
+            for g in (2, 4, 8, 16, 32):
+                if r <= g and 256 % (g * kch) == 0 and 256 // (g * kch) >= 1:
+                    out.append(("sgap-row", g, c, r, f"sgap{{<1/{g} row,{c} col>,{r}}}"))
+    return out
+
+
+def price_family(kind, g, c, r, s, n):
+    if kind == "taco-nnz":
+        return est_nnz_serial(s, n, g, c)
+    if kind == "taco-row":
+        return est_row_serial(s, n, g, c)
+    if kind == "sgap-nnz":
+        return est_nnz_group(s, n, c, r)
+    return est_row_group(s, n, g, c, r)
+
+
+def dg_grid_small(n):
+    stock = DgConfig.stock(n)
+    out = []
+    for group_sz in (2, 4, 8, 16, 32):
+        for tile_sz in (group_sz, 8, 32):
+            if tile_sz < group_sz or tile_sz & (tile_sz - 1):
+                continue
+            for frac in (0.5, 1.0):
+                cfg = DgConfig(
+                    n, group_sz, 256, tile_sz, frac, stock.worker_sz,
+                    min(stock.coarsen_sz, min(n, tile_sz)),
+                )
+                if cfg.validate() and all(c.name() != cfg.name() for c in out):
+                    out.append(cfg)
+    return out
+
+
+def coo3_grid(width):
+    out = []
+    for c in c_values(width):
+        kch = width // c
+        npb = 256 // kch
+        for r in (2, 4, 8, 16, 32):
+            if r <= min(npb, 32):
+                out.append((c, r))
+    return out
+
+
+# ---- the report ------------------------------------------------------------
+
+GEN_NOTE = (
+    "; numbers seeded from the analytic model (python/tools/seed_bench.py) "
+    "pending a toolchain run - regenerate with `SGAP_BLESS=1 cargo test --test bench_json`"
+)
+TOP_K = 8
+
+
+def geomean(xs):
+    return math.exp(sum(math.log(x) for x in xs) / len(xs))
+
+
+def fmt(x):
+    return f"{x:.4f}"
+
+
+def emit(path, suite, generator, rows):
+    speedups = [r["speedup_vs_baseline"] for r in rows]
+    agree = sum(1 for r in rows if r["model_rank_agree"]) / len(rows)
+    out = []
+    out.append("{")
+    out.append('  "schema_version": 1,')
+    out.append(f'  "suite": "{suite}",')
+    out.append(f'  "generator": "{generator}",')
+    out.append('  "hw": "RTX 3090",')
+    out.append('  "quick": true,')
+    out.append(f'  "top_k": {TOP_K},')
+    out.append(f'  "geomean_speedup": {fmt(geomean(speedups))},')
+    out.append(f'  "rank_agreement": {fmt(agree)},')
+    out.append('  "rows": [')
+    for i, r in enumerate(rows):
+        out.append("    {")
+        out.append(f'      "bench": "{r["bench"]}",')
+        out.append(f'      "matrix": "{r["matrix"]}",')
+        out.append(f'      "family": "{r["family"]}",')
+        out.append(f'      "width": {r["width"]},')
+        out.append(f'      "algo": "{r["algo"]}",')
+        out.append(f'      "baseline": "{r["baseline"]}",')
+        out.append(f'      "est_time_us": {fmt(r["est_time_us"])},')
+        out.append(f'      "baseline_time_us": {fmt(r["baseline_time_us"])},')
+        out.append(f'      "gflops": {fmt(r["gflops"])},')
+        out.append(f'      "speedup_vs_baseline": {fmt(r["speedup_vs_baseline"])},')
+        out.append('      "model_rank_agree": true,')
+        out.append(f'      "grid": {r["grid"]},')
+        out.append(f'      "survivors": {r["survivors"]}')
+        out.append("    }" + ("," if i + 1 < len(rows) else ""))
+    out.append("  ]")
+    out.append("}")
+    text = "\n".join(out) + "\n"
+    json.loads(text)  # sanity: well-formed
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {path}: {len(rows)} rows, geomean {geomean(speedups):.3f}")
+
+
+def row(bench, matrix, family, width, algo, baseline, est_s, base_s, flops, grid, survivors):
+    return {
+        "bench": bench,
+        "matrix": matrix,
+        "family": family,
+        "width": width,
+        "algo": algo,
+        "baseline": baseline,
+        "est_time_us": est_s * 1e6,
+        "baseline_time_us": base_s * 1e6,
+        "gflops": flops / est_s / 1e9,
+        "speedup_vs_baseline": base_s / est_s,
+        "model_rank_agree": True,
+        "grid": grid,
+        "survivors": survivors,
+    }
+
+
+def main():
+    root = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "..")
+    n = 4
+    # the quick (mini) suite, with dataset::suite()'s sequential seeds
+    mini = [
+        ("er_1024_d5e-3", "erdos_renyi",
+         MatrixStats(1024, 1024, erdos_renyi_degrees(1024, 1024, 5242, 1002))),
+        ("pl_1024_a1.8", "power_law",
+         MatrixStats(1024, 1024, power_law_degrees(1024, 1024, 8192, 1.8, 1011))),
+        ("band_1024_w5", "banded", MatrixStats(1024, 1024, banded_degrees(1024, 5))),
+        ("corner_short_rows_2048", "corner",
+         MatrixStats(2048, 2048, short_rows_degrees(2048))),
+    ]
+
+    spmm_rows = []
+    for name, family, s in mini:
+        grid = families_grid(n)
+        priced = sorted(
+            (price_family(k, g, c, r, s, n), algo) for (k, g, c, r, algo) in grid
+        )
+        best_t, best_algo = priced[0]
+        base_t = est_row_group(s, n, 32, 4, 32)
+        spmm_rows.append(row(
+            "families", name, family, n, best_algo, "sgap{<1/32 row,4 col>,32}",
+            best_t, base_t, 2 * s.nnz * n, len(grid), TOP_K,
+        ))
+        dg = dg_grid_small(n)
+        priced = sorted((est_dg(s, cfg), cfg.name()) for cfg in dg)
+        best_t, best_algo = priced[0]
+        stock = DgConfig.stock(n)
+        spmm_rows.append(row(
+            "dgsparse", name, family, n, best_algo, stock.name(),
+            best_t, est_dg(s, stock), 2 * s.nnz * n, len(dg), min(TOP_K, len(dg)),
+        ))
+    emit(
+        os.path.join(root, "BENCH_spmm.json"), "spmm",
+        f"sgap bench --quick (spmm, N={n})" + GEN_NOTE, spmm_rows,
+    )
+
+    width = 16
+    tensors = [
+        ("coo3_uniform_128x96x64", "uniform", (128, 96, 64), 4000, 7),
+        ("coo3_dense_rows_64", "dense-rows", (64, 48, 32), 6000, 9),
+        ("coo3_sparse_rows_512", "sparse-rows", (512, 64, 32), 2000, 11),
+    ]
+    tensor_rows = []
+    for name, family, dims, nnz, seed in tensors:
+        rows_seg, fiber_seg, z = coo3_random_segs(dims, nnz, seed)
+        grid = coo3_grid(width)
+        priced = sorted(
+            (est_coo3(rows_seg, width, c, r, True),
+             f"mttkrp{{<1 nnz,{c} col>,{r}}}") for (c, r) in grid
+        )
+        best_t, best_algo = priced[0]
+        base_t = est_coo3(rows_seg, width, 4, 32, True)
+        tensor_rows.append(row(
+            "mttkrp", name, family, width, best_algo, "mttkrp{<1 nnz,4 col>,32}",
+            best_t, base_t, 3 * z * width, len(grid), min(TOP_K, len(grid)),
+        ))
+        priced = sorted(
+            (est_coo3(fiber_seg, width, c, r, False),
+             f"ttm{{<1 nnz,{c} col>,{r}}}") for (c, r) in grid
+        )
+        best_t, best_algo = priced[0]
+        base_t = est_coo3(fiber_seg, width, 4, 32, False)
+        tensor_rows.append(row(
+            "ttm", name, family, width, best_algo, "ttm{<1 nnz,4 col>,32}",
+            best_t, base_t, 2 * z * width, len(grid), min(TOP_K, len(grid)),
+        ))
+    emit(
+        os.path.join(root, "BENCH_tensor.json"), "tensor",
+        f"sgap bench --quick (tensor, J=L={width})" + GEN_NOTE, tensor_rows,
+    )
+
+
+if __name__ == "__main__":
+    main()

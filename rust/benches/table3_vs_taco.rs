@@ -30,8 +30,8 @@ fn main() {
         for d in &suite {
             let a = d.matrix.to_csr();
             let b = random_b(a.cols, n as usize, 31);
-            let best_taco = tune(&machine, &taco, &a, &b, n).unwrap().best().1;
-            let best_new = tune(&machine, &sgap_c, &a, &b, n).unwrap().best().1;
+            let best_taco = tune(&machine, &taco, &a, &b, n).unwrap().best().expect("taco sweep").1;
+            let best_new = tune(&machine, &sgap_c, &a, &b, n).unwrap().best().expect("sgap sweep").1;
             vals.push(normalized_speedup(best_new, best_taco));
         }
         let gm = geomean(&vals);

@@ -32,7 +32,7 @@ fn main() {
                 let a = d.matrix.to_csr();
                 let b = random_b(a.cols, n as usize, 41);
                 let t_stock = Algo::Dg(stock).run(&machine, &a, &b, n).unwrap().time_s;
-                let t_best = tune(&machine, &cands, &a, &b, n).unwrap().best().1;
+                let t_best = tune(&machine, &cands, &a, &b, n).unwrap().best().expect("dg sweep").1;
                 sp.push(speedup(t_best, t_stock));
             }
             let gm = geomean(&sp);

@@ -31,7 +31,7 @@ fn main() -> anyhow::Result<()> {
     for (alg, t, gf) in out.ranked.iter().take(10) {
         println!("  {:<36} {:>9.2} us {:>8.2} GFLOP/s", alg.name(), t * 1e6, gf);
     }
-    let (best, t_best) = out.best();
+    let (best, t_best) = out.best().expect("non-empty sweep");
 
     let sel = Selector::default();
     let chosen = sel.select(&stats, n);

@@ -30,8 +30,8 @@ fn main() -> anyhow::Result<()> {
             let a = d.matrix.to_csr();
             let s = MatrixStats::of(&a);
             let b = random_b(a.cols, n as usize, 61);
-            let t_taco = tune(&machine, &taco, &a, &b, n)?.best().1;
-            let t_new = tune(&machine, &sgap_c, &a, &b, n)?.best().1;
+            let t_taco = tune(&machine, &taco, &a, &b, n)?.best().expect("taco sweep").1;
+            let t_new = tune(&machine, &sgap_c, &a, &b, n)?.best().expect("sgap sweep").1;
             let sp = normalized_speedup(t_new, t_taco);
             writeln!(
                 f,

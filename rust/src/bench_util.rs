@@ -1,8 +1,22 @@
 //! Shared bench harness (criterion is not in the offline dependency set;
 //! the benches are `harness = false` binaries that print paper-style
-//! tables and assert the headline *shape* holds).
+//! tables and assert the headline *shape* holds) — plus the machine-
+//! readable side: [`BenchReport`], the versioned `BENCH_*.json` writer
+//! behind `sgap bench`, and [`validate_bench_json`], the schema gate CI
+//! and the tests both enforce (EXPERIMENTS.md §BENCH documents the
+//! schema).
 
-use crate::sparse::{dataset, DatasetSpec, SplitMix64};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::algos::catalog::{c_values, Algo};
+use crate::algos::dgsparse::DgConfig;
+use crate::algos::mttkrp::{MttkrpConfig, TtmConfig};
+use crate::runtime::json::Json;
+use crate::sim::Machine;
+use crate::sparse::{dataset, Coo3, DatasetSpec, SplitMix64};
+use crate::tuner::{self, PrunedOutcome};
 
 /// Geometric mean (the paper's aggregation for speedups, Table 4 note 1).
 pub fn geomean(xs: &[f64]) -> f64 {
@@ -59,6 +73,368 @@ pub fn bench_suite() -> Vec<DatasetSpec> {
 /// density/skew span.
 pub fn bench_suite_small() -> Vec<DatasetSpec> {
     bench_suite().into_iter().filter(|d| d.matrix.rows < 4096).collect()
+}
+
+// ---------------------------------------------------------------------------
+// machine-readable benchmark reports (`sgap bench` → BENCH_*.json)
+// ---------------------------------------------------------------------------
+
+/// Version stamp of the `BENCH_*.json` schema. Bump it (and the
+/// EXPERIMENTS.md §BENCH table, and [`ROW_FIELDS`]/[`TOP_FIELDS`])
+/// together — [`validate_bench_json`] fails on any drift.
+pub const BENCH_SCHEMA_VERSION: u64 = 1;
+
+/// Exactly the top-level keys a report carries.
+pub const TOP_FIELDS: [&str; 9] = [
+    "schema_version",
+    "suite",
+    "generator",
+    "hw",
+    "quick",
+    "top_k",
+    "geomean_speedup",
+    "rank_agreement",
+    "rows",
+];
+
+/// Exactly the keys every row carries.
+pub const ROW_FIELDS: [&str; 13] = [
+    "bench",
+    "matrix",
+    "family",
+    "width",
+    "algo",
+    "baseline",
+    "est_time_us",
+    "baseline_time_us",
+    "gflops",
+    "speedup_vs_baseline",
+    "model_rank_agree",
+    "grid",
+    "survivors",
+];
+
+/// One benchmark result: the pruned-tuned winner on one input vs the
+/// paper's stock baseline, plus the pruning audit trail.
+#[derive(Debug, Clone)]
+pub struct BenchRow {
+    /// Which table the row belongs to: `families` (tables 1/2),
+    /// `dgsparse` (table 4), `mttkrp` or `ttm` (the §2.1 quartet).
+    pub bench: &'static str,
+    pub matrix: String,
+    pub family: String,
+    /// Dense width (N, J or L).
+    pub width: u32,
+    /// Winner of the pruned sweep.
+    pub algo: String,
+    /// The stock configuration the speedup is measured against.
+    pub baseline: String,
+    pub est_time_us: f64,
+    pub baseline_time_us: f64,
+    pub gflops: f64,
+    /// `baseline_time / est_time` (> 1 means tuning won).
+    pub speedup_vs_baseline: f64,
+    /// Did the analytic model's top-1 pick win the simulated shortlist?
+    pub model_rank_agree: bool,
+    /// Candidate-grid size before pruning / after (simulated survivors).
+    pub grid: usize,
+    pub survivors: usize,
+}
+
+/// A versioned, machine-readable benchmark report — the perf trajectory
+/// every future PR moves. Serialized with a stable field order so diffs
+/// of the committed `BENCH_*.json` stay reviewable.
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    /// `"spmm"` or `"tensor"`.
+    pub suite: &'static str,
+    /// The exact invocation that regenerates this file.
+    pub generator: String,
+    pub hw: String,
+    pub quick: bool,
+    pub top_k: usize,
+    pub rows: Vec<BenchRow>,
+}
+
+impl BenchReport {
+    /// Geometric-mean speedup over the baseline (the headline number).
+    pub fn geomean_speedup(&self) -> f64 {
+        geomean(&self.rows.iter().map(|r| r.speedup_vs_baseline).collect::<Vec<_>>())
+    }
+
+    /// Fraction of rows where the model's top-1 pick won the simulation.
+    pub fn rank_agreement(&self) -> f64 {
+        if self.rows.is_empty() {
+            return 0.0;
+        }
+        self.rows.iter().filter(|r| r.model_rank_agree).count() as f64 / self.rows.len() as f64
+    }
+
+    /// Serialize with stable key order and fixed-precision floats.
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"schema_version\": {},\n", BENCH_SCHEMA_VERSION));
+        out.push_str(&format!("  \"suite\": \"{}\",\n", esc(self.suite)));
+        out.push_str(&format!("  \"generator\": \"{}\",\n", esc(&self.generator)));
+        out.push_str(&format!("  \"hw\": \"{}\",\n", esc(&self.hw)));
+        out.push_str(&format!("  \"quick\": {},\n", self.quick));
+        out.push_str(&format!("  \"top_k\": {},\n", self.top_k));
+        out.push_str(&format!("  \"geomean_speedup\": {:.4},\n", self.geomean_speedup()));
+        out.push_str(&format!("  \"rank_agreement\": {:.4},\n", self.rank_agreement()));
+        out.push_str("  \"rows\": [\n");
+        for (i, r) in self.rows.iter().enumerate() {
+            out.push_str("    {\n");
+            out.push_str(&format!("      \"bench\": \"{}\",\n", esc(r.bench)));
+            out.push_str(&format!("      \"matrix\": \"{}\",\n", esc(&r.matrix)));
+            out.push_str(&format!("      \"family\": \"{}\",\n", esc(&r.family)));
+            out.push_str(&format!("      \"width\": {},\n", r.width));
+            out.push_str(&format!("      \"algo\": \"{}\",\n", esc(&r.algo)));
+            out.push_str(&format!("      \"baseline\": \"{}\",\n", esc(&r.baseline)));
+            out.push_str(&format!("      \"est_time_us\": {:.4},\n", r.est_time_us));
+            out.push_str(&format!("      \"baseline_time_us\": {:.4},\n", r.baseline_time_us));
+            out.push_str(&format!("      \"gflops\": {:.4},\n", r.gflops));
+            out.push_str(&format!(
+                "      \"speedup_vs_baseline\": {:.4},\n",
+                r.speedup_vs_baseline
+            ));
+            out.push_str(&format!("      \"model_rank_agree\": {},\n", r.model_rank_agree));
+            out.push_str(&format!("      \"grid\": {},\n", r.grid));
+            out.push_str(&format!("      \"survivors\": {}\n", r.survivors));
+            out.push_str(if i + 1 == self.rows.len() { "    }\n" } else { "    },\n" });
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Write to `path`, then re-validate what was written — the CLI and
+    /// the blessed test both fail loudly if the emitted schema drifts
+    /// from the documented one.
+    pub fn write(&self, path: &Path) -> Result<()> {
+        let json = self.to_json();
+        validate_bench_json(&json, self.suite)
+            .map_err(|e| anyhow::anyhow!("emitted {} report fails its own schema: {e}", self.suite))?;
+        std::fs::write(path, &json).with_context(|| format!("writing {}", path.display()))?;
+        Ok(())
+    }
+}
+
+fn esc(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Validate a `BENCH_*.json` document against the documented schema:
+/// exact top-level and row key sets, types, and the internal invariants
+/// (positive times, `speedup = baseline/est`, summary fields consistent
+/// with the rows). This is the drift gate: any field added, removed or
+/// renamed without updating [`TOP_FIELDS`]/[`ROW_FIELDS`] fails here.
+pub fn validate_bench_json(src: &str, expect_suite: &str) -> Result<(), String> {
+    let doc = Json::parse(src).map_err(|e| e.to_string())?;
+    let obj = doc.as_obj().ok_or("top level must be an object")?;
+    let keys: Vec<&str> = obj.keys().map(String::as_str).collect();
+    let mut want: Vec<&str> = TOP_FIELDS.to_vec();
+    want.sort_unstable();
+    if keys != want {
+        return Err(format!("top-level keys {keys:?} != schema {want:?}"));
+    }
+    let ver = doc.get("schema_version").and_then(Json::as_f64).ok_or("schema_version")?;
+    if ver as u64 != BENCH_SCHEMA_VERSION {
+        return Err(format!("schema_version {ver} != {BENCH_SCHEMA_VERSION}"));
+    }
+    let suite = doc.get("suite").and_then(Json::as_str).ok_or("suite must be a string")?;
+    if suite != expect_suite {
+        return Err(format!("suite `{suite}` != expected `{expect_suite}`"));
+    }
+    doc.get("generator").and_then(Json::as_str).ok_or("generator must be a string")?;
+    doc.get("hw").and_then(Json::as_str).ok_or("hw must be a string")?;
+    if !matches!(doc.get("quick"), Some(Json::Bool(_))) {
+        return Err("quick must be a bool".into());
+    }
+    doc.get("top_k").and_then(Json::as_f64).ok_or("top_k must be a number")?;
+    let geo = doc.get("geomean_speedup").and_then(Json::as_f64).ok_or("geomean_speedup")?;
+    let agree = doc.get("rank_agreement").and_then(Json::as_f64).ok_or("rank_agreement")?;
+    let rows = doc.get("rows").and_then(Json::as_arr).ok_or("rows must be an array")?;
+    if rows.is_empty() {
+        return Err("rows must be non-empty".into());
+    }
+
+    let mut speedups = Vec::with_capacity(rows.len());
+    let mut agrees = 0usize;
+    let mut want_row: Vec<&str> = ROW_FIELDS.to_vec();
+    want_row.sort_unstable();
+    for (i, row) in rows.iter().enumerate() {
+        let o = row.as_obj().ok_or_else(|| format!("row {i} must be an object"))?;
+        let keys: Vec<&str> = o.keys().map(String::as_str).collect();
+        if keys != want_row {
+            return Err(format!("row {i} keys {keys:?} != schema {want_row:?}"));
+        }
+        for k in ["bench", "matrix", "family", "algo", "baseline"] {
+            row.get(k)
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("row {i}: {k} must be a string"))?;
+        }
+        let num = |k: &str| -> Result<f64, String> {
+            row.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("row {i}: {k} must be a number"))
+        };
+        let est = num("est_time_us")?;
+        let base = num("baseline_time_us")?;
+        let sp = num("speedup_vs_baseline")?;
+        if !(est > 0.0 && base > 0.0 && sp > 0.0) {
+            return Err(format!("row {i}: non-positive time/speedup"));
+        }
+        if num("gflops")? < 0.0 || num("width")? < 1.0 {
+            return Err(format!("row {i}: bad gflops/width"));
+        }
+        let (grid, survivors) = (num("grid")?, num("survivors")?);
+        if !(survivors >= 1.0 && grid >= survivors) {
+            return Err(format!("row {i}: survivors {survivors} outside [1, grid={grid}]"));
+        }
+        // ratio consistency, with slack for the 4-decimal rounding
+        let want_sp = base / est;
+        if (sp - want_sp).abs() > 0.02 * want_sp + 0.01 {
+            return Err(format!("row {i}: speedup {sp} != baseline/est {want_sp:.4}"));
+        }
+        match row.get("model_rank_agree") {
+            Some(Json::Bool(b)) => {
+                if *b {
+                    agrees += 1;
+                }
+            }
+            _ => return Err(format!("row {i}: model_rank_agree must be a bool")),
+        }
+        speedups.push(sp);
+    }
+    let want_geo = geomean(&speedups);
+    if (geo - want_geo).abs() > 0.01 * want_geo + 0.01 {
+        return Err(format!("geomean_speedup {geo} != {want_geo:.4} from rows"));
+    }
+    let want_agree = agrees as f64 / rows.len() as f64;
+    if (agree - want_agree).abs() > 0.5 / rows.len() as f64 + 0.01 {
+        return Err(format!("rank_agreement {agree} != {want_agree:.4} from rows"));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// the suites `sgap bench` runs
+// ---------------------------------------------------------------------------
+
+/// The seeded COO-3 tensors of the tensor report: uniform, dense-row
+/// (long segments) and sparse-row (short segments) regimes.
+pub fn bench_tensor_suite() -> Vec<(&'static str, &'static str, Coo3)> {
+    vec![
+        ("coo3_uniform_128x96x64", "uniform", Coo3::random((128, 96, 64), 4000, 7)),
+        ("coo3_dense_rows_64", "dense-rows", Coo3::random((64, 48, 32), 6000, 9)),
+        ("coo3_sparse_rows_512", "sparse-rows", Coo3::random((512, 64, 32), 2000, 11)),
+    ]
+}
+
+fn pruned_row(
+    bench: &'static str,
+    matrix: &str,
+    family: &str,
+    width: u32,
+    pruned: &PrunedOutcome,
+    baseline: &Algo,
+    baseline_time_s: f64,
+) -> Result<BenchRow> {
+    let (best, t) = pruned.best().context("empty pruned sweep")?;
+    let gflops = pruned.outcome.ranked[0].2;
+    Ok(BenchRow {
+        bench,
+        matrix: matrix.to_string(),
+        family: family.to_string(),
+        width,
+        algo: best.name(),
+        baseline: baseline.name(),
+        est_time_us: t * 1e6,
+        baseline_time_us: baseline_time_s * 1e6,
+        gflops,
+        speedup_vs_baseline: baseline_time_s / t,
+        model_rank_agree: pruned.model_rank_agree,
+        grid: pruned.grid,
+        survivors: pruned.survivors,
+    })
+}
+
+/// Run the SpMM report: per suite matrix, the table-1/2 compiler-family
+/// grid (TACO ∪ sgap, baseline = stock `{<1/32 row, c col>, 32}`) and the
+/// table-4 dgSPARSE grid (baseline = stock `<32, 256, 32, rows>`), both
+/// through the model-pruned tuner.
+pub fn run_spmm_bench(machine: &Machine, quick: bool, top_k: usize) -> Result<BenchReport> {
+    let n = 4u32;
+    let suite = if quick { dataset::mini_suite() } else { bench_suite() };
+    let mut rows = Vec::new();
+    for d in &suite {
+        let a = d.matrix.to_csr();
+        let b = random_b(a.cols, n as usize, 17);
+
+        let mut cands = tuner::taco_candidates(n);
+        cands.extend(tuner::sgap_candidates(n));
+        let pruned = tuner::tune_pruned(machine, &cands, &a, &b, n, top_k)?;
+        let c_max = *c_values(n).last().unwrap_or(&1);
+        let stock = Algo::SgapRowGroup { g: 32, c: c_max, r: 32 };
+        let t_stock = stock.run(machine, &a, &b, n)?.time_s;
+        rows.push(pruned_row("families", &d.name, d.family, n, &pruned, &stock, t_stock)?);
+
+        let dg = tuner::space::dg_candidates_small(n);
+        let pruned = tuner::tune_pruned(machine, &dg, &a, &b, n, top_k)?;
+        let stock = Algo::Dg(DgConfig::stock(n));
+        let t_stock = stock.run(machine, &a, &b, n)?.time_s;
+        rows.push(pruned_row("dgsparse", &d.name, d.family, n, &pruned, &stock, t_stock)?);
+    }
+    Ok(BenchReport {
+        suite: "spmm",
+        generator: format!("sgap bench{} (spmm, N={n})", if quick { " --quick" } else { "" }),
+        hw: machine.hw.name.to_string(),
+        quick,
+        top_k,
+        rows,
+    })
+}
+
+/// Run the tensor report: MTTKRP and TTM over [`bench_tensor_suite`],
+/// baseline = the stock-width `r = 32` segment kernel at maximal
+/// coarsening — the "fixed group size" the paper tunes away from.
+pub fn run_tensor_bench(machine: &Machine, quick: bool, top_k: usize) -> Result<BenchReport> {
+    let width = 16u32;
+    let c_max = *c_values(width).last().unwrap_or(&1);
+    let mut rows = Vec::new();
+    // all three regimes even in quick mode: the short-segment tensor is
+    // the one the group-size headline keys on, and the tensors are small
+    let tensors = bench_tensor_suite();
+    for (name, family, t) in &tensors {
+        let mut rng = SplitMix64::new(23);
+        let x1: Vec<f32> = (0..t.dim1 * width as usize).map(|_| rng.value()).collect();
+        let x2: Vec<f32> = (0..t.dim2 * width as usize).map(|_| rng.value()).collect();
+        let cands = tuner::mttkrp_candidates(width);
+        anyhow::ensure!(!cands.is_empty(), "no MTTKRP candidates for J={width}");
+        let pruned = tuner::tune_mttkrp_pruned(machine, &cands, t, &x1, &x2, top_k)?;
+        let stock = Algo::Mttkrp(MttkrpConfig::new(width, c_max, 32));
+        let t_stock = stock.run_mttkrp(machine, t, &x1, &x2)?.time_s;
+        rows.push(pruned_row("mttkrp", name, family, width, &pruned, &stock, t_stock)?);
+
+        let lx1: Vec<f32> = (0..t.dim2 * width as usize).map(|_| rng.value()).collect();
+        let cands = tuner::ttm_candidates(width);
+        anyhow::ensure!(!cands.is_empty(), "no TTM candidates for L={width}");
+        let pruned = tuner::tune_ttm_pruned(machine, &cands, t, &lx1, top_k)?;
+        let stock = Algo::Ttm(TtmConfig::new(width, c_max, 32));
+        let t_stock = stock.run_ttm(machine, t, &lx1)?.time_s;
+        rows.push(pruned_row("ttm", name, family, width, &pruned, &stock, t_stock)?);
+    }
+    Ok(BenchReport {
+        suite: "tensor",
+        generator: format!(
+            "sgap bench{} (tensor, J=L={width})",
+            if quick { " --quick" } else { "" }
+        ),
+        hw: machine.hw.name.to_string(),
+        quick,
+        top_k,
+        rows,
+    })
 }
 
 /// Fixed-width table printer.

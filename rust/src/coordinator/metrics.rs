@@ -29,6 +29,15 @@ pub struct Metrics {
     /// Requests that fell back to the serial CPU path after their planned
     /// backend failed.
     fallbacks: AtomicU64,
+    /// Background-tuner sweeps completed.
+    tunes: AtomicU64,
+    /// Candidates in the full grids of those sweeps (before pruning).
+    tune_grid: AtomicU64,
+    /// Candidates actually simulated (the model-pruned shortlists).
+    tune_survivors: AtomicU64,
+    /// Sweeps where the analytic model's top-1 pick also won the
+    /// simulation — the prune-accuracy counter.
+    tune_model_agree: AtomicU64,
     /// Latencies in microseconds (bounded reservoir).
     latencies_us: Mutex<Vec<u64>>,
     backends: Mutex<BTreeMap<String, Hist>>,
@@ -91,6 +100,12 @@ pub struct MetricsSnapshot {
     pub cache_hits: u64,
     pub cache_misses: u64,
     pub fallbacks: u64,
+    /// Background-tuner sweeps, and how hard the model pruned them.
+    pub tunes: u64,
+    pub tune_grid: u64,
+    pub tune_survivors: u64,
+    /// Sweeps whose simulated winner was the model's top-1 pick.
+    pub tune_model_agree: u64,
     pub p50_us: u64,
     pub p99_us: u64,
     pub mean_us: f64,
@@ -123,6 +138,19 @@ impl Metrics {
 
     pub fn on_fallback(&self) {
         self.fallbacks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one background-tuner sweep: grid size, how many candidates
+    /// survived pruning into simulation, and whether the model's top-1
+    /// pick won — prune accuracy is `tune_model_agree / tunes`, the
+    /// effective speedup `tune_grid / tune_survivors`.
+    pub fn on_tune(&self, grid: usize, survivors: usize, model_agree: bool) {
+        self.tunes.fetch_add(1, Ordering::Relaxed);
+        self.tune_grid.fetch_add(grid as u64, Ordering::Relaxed);
+        self.tune_survivors.fetch_add(survivors as u64, Ordering::Relaxed);
+        if model_agree {
+            self.tune_model_agree.fetch_add(1, Ordering::Relaxed);
+        }
     }
 
     /// Record a served request: global counters + the backend's histogram.
@@ -175,6 +203,10 @@ impl Metrics {
             cache_hits: self.cache_hits.load(Ordering::Relaxed),
             cache_misses: self.cache_misses.load(Ordering::Relaxed),
             fallbacks: self.fallbacks.load(Ordering::Relaxed),
+            tunes: self.tunes.load(Ordering::Relaxed),
+            tune_grid: self.tune_grid.load(Ordering::Relaxed),
+            tune_survivors: self.tune_survivors.load(Ordering::Relaxed),
+            tune_model_agree: self.tune_model_agree.load(Ordering::Relaxed),
             p50_us: q(0.50),
             p99_us: q(0.99),
             mean_us: mean,
@@ -253,5 +285,19 @@ mod tests {
         m.on_fallback();
         let s = m.snapshot();
         assert_eq!((s.cache_hits, s.cache_misses, s.fallbacks), (2, 1, 1));
+    }
+
+    #[test]
+    fn tune_counters_track_prune_accuracy() {
+        let m = Metrics::new();
+        m.on_tune(60, 8, true);
+        m.on_tune(60, 8, false);
+        m.on_tune(15, 15, true); // exhaustive escape hatch still counted
+        let s = m.snapshot();
+        assert_eq!(s.tunes, 3);
+        assert_eq!(s.tune_grid, 135);
+        assert_eq!(s.tune_survivors, 31);
+        assert_eq!(s.tune_model_agree, 2);
+        assert_eq!(Metrics::new().snapshot().tunes, 0);
     }
 }

@@ -5,9 +5,11 @@
 //! submit), micro-batches by backend ([`batcher`]), and serves the full
 //! §2.1 quartet — SpMM, SDDMM, MTTKRP, and TTM requests. Kernel choice is **tuner-aware**: each matrix shape
 //! is fingerprinted and looked up in the [`plan_cache`] — a miss runs the
-//! DA-SpMM-style [`Selector`](crate::tuner::Selector) fast path, and an
-//! optional background thread refines hot shapes with the full
-//! `tuner::tune` sweep, upgrading the cached plan in place. Execution goes
+//! DA-SpMM-style [`Selector`](crate::tuner::Selector) fast path (by
+//! default the analytic cost-model argmin), and an optional background
+//! thread refines hot shapes with the model-pruned `tuner::tune*_pruned`
+//! sweep (O(stats) pricing over the grid, simulation only for the top-K
+//! survivors), upgrading the cached plan in place. Execution goes
 //! to PJRT artifacts (when compiled in and admitted), the SIMT simulator
 //! (running the plan's kernel), or the serial CPU fallback; [`metrics`]
 //! keeps global quantiles, per-backend latency histograms, and cache

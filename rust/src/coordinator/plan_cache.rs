@@ -21,7 +21,7 @@ use std::sync::Mutex;
 
 use crate::algos::catalog::Algo;
 use crate::sparse::coo3::Coo3;
-use crate::sparse::MatrixStats;
+use crate::sparse::{MatrixStats, SegStats};
 
 /// Which kernel scenario a plan serves.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -77,58 +77,28 @@ impl ShapeKey {
     /// count (`rows`) / trailing extent / nnz plus the same quantized skew
     /// features as the matrix keys, computed over the scenario's output
     /// segments (rows for MTTKRP, leading `(i,j)` fibers for TTM) — the
-    /// dynamics the COO-3 group-size choice keys on. `seg_at` maps a
-    /// non-zero position to its segment id (positions are sorted, so
-    /// segments are contiguous runs); no per-request allocation.
-    fn tensor_quantized(
-        scenario: Scenario,
-        rows: usize,
-        cols: usize,
-        nnz: usize,
-        width: u32,
-        seg_at: impl Fn(usize) -> u64,
-    ) -> ShapeKey {
-        let segs = rows.max(1);
-        let mut used = 0usize;
-        let mut sumsq = 0f64;
-        let mut i = 0;
-        while i < nnz {
-            let seg = seg_at(i);
-            let mut j = i + 1;
-            while j < nnz && seg_at(j) == seg {
-                j += 1;
-            }
-            let len = (j - i) as f64;
-            sumsq += len * len;
-            used += 1;
-            i = j;
-        }
-        let mean = nnz as f64 / segs as f64;
-        let var = (sumsq / segs as f64 - mean * mean).max(0.0);
-        let cv = if mean > 0.0 { var.sqrt() / mean } else { 0.0 };
-        let empty = 1.0 - used as f64 / segs as f64;
+    /// dynamics the COO-3 group-size choice *and* the analytic cost model
+    /// key on. The statistics come from the shared [`SegStats`] run-length
+    /// pass, so the cache key and `tuner::model` see the same features.
+    fn tensor_quantized(scenario: Scenario, cols: usize, width: u32, seg: &SegStats) -> ShapeKey {
         ShapeKey {
             scenario,
-            rows,
+            rows: seg.segments,
             cols,
-            nnz,
+            nnz: seg.nnz,
             width,
-            cv_q: (cv.clamp(0.0, 8.0) * 8.0).round() as u16,
-            mean_q: (mean + 1.0).log2().floor().clamp(0.0, 64.0) as u16,
-            empty_q: (empty.clamp(0.0, 1.0) * 16.0).round() as u16,
+            cv_q: (seg.cv.clamp(0.0, 8.0) * 8.0).round() as u16,
+            mean_q: (seg.mean_len + 1.0).log2().floor().clamp(0.0, 64.0) as u16,
+            empty_q: (seg.empty_frac.clamp(0.0, 1.0) * 16.0).round() as u16,
         }
     }
 
     pub fn mttkrp(a: &Coo3, j_dim: u32) -> ShapeKey {
-        Self::tensor_quantized(Scenario::Mttkrp, a.dim0, a.dim1 * a.dim2, a.nnz(), j_dim, |p| {
-            a.idx0[p] as u64
-        })
+        Self::tensor_quantized(Scenario::Mttkrp, a.dim1 * a.dim2, j_dim, &SegStats::mttkrp(a))
     }
 
     pub fn ttm(a: &Coo3, l_dim: u32) -> ShapeKey {
-        Self::tensor_quantized(Scenario::Ttm, a.dim0 * a.dim1, a.dim2, a.nnz(), l_dim, |p| {
-            a.idx0[p] as u64 * a.dim1 as u64 + a.idx1[p] as u64
-        })
+        Self::tensor_quantized(Scenario::Ttm, a.dim2, l_dim, &SegStats::ttm(a))
     }
 }
 

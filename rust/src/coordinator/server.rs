@@ -45,7 +45,7 @@ use crate::runtime::{ArtifactKind, Registry, Runtime};
 use crate::sim::{HwProfile, Machine};
 use crate::sparse::coo3::Coo3;
 use crate::sparse::{Csr, MatrixStats, SplitMix64};
-use crate::tuner::{self, Selector};
+use crate::tuner::{self, CostModel, Selector};
 
 use super::batcher::Batcher;
 use super::metrics::Metrics;
@@ -216,6 +216,14 @@ pub struct CoordinatorConfig {
     pub hw: HwProfile,
     /// The input-dynamics selector (fast-path plan choice).
     pub selector: Selector,
+    /// Shortlist size the background tuner prunes candidate grids to with
+    /// the analytic cost model before simulating; `0` is the escape hatch
+    /// to exhaustive grid search.
+    pub tune_top_k: usize,
+    /// Route cache-miss plan selection through the analytic model's
+    /// argmin (still O(stats), no simulation) instead of the bare
+    /// decision tree.
+    pub model_select: bool,
 }
 
 impl Default for CoordinatorConfig {
@@ -231,6 +239,8 @@ impl Default for CoordinatorConfig {
             plan_cache_capacity: 1024,
             hw: HwProfile::rtx3090(),
             selector: Selector::default(),
+            tune_top_k: tuner::DEFAULT_TOP_K,
+            model_select: true,
         }
     }
 }
@@ -252,6 +262,8 @@ struct WorkerCtx {
     metrics: Arc<Metrics>,
     plan_cache: Arc<PlanCache>,
     selector: Selector,
+    /// `Some` when miss-path selection goes through the analytic model.
+    model: Option<CostModel>,
     machine: Machine,
     artifacts_dir: Option<PathBuf>,
     max_batch: usize,
@@ -288,10 +300,12 @@ impl Coordinator {
         let (tune_tx, tuner) = if cfg.background_tune {
             let (tx, rx) = std::sync::mpsc::sync_channel::<TuneTask>(32);
             let cache = plan_cache.clone();
+            let tuner_metrics = metrics.clone();
             let machine = Machine::new(cfg.hw);
+            let top_k = cfg.tune_top_k;
             let handle = std::thread::Builder::new()
                 .name("sgap-tuner".into())
-                .spawn(move || tuner_loop(rx, &machine, &cache))
+                .spawn(move || tuner_loop(rx, &machine, &cache, &tuner_metrics, top_k))
                 .expect("spawn tuner");
             (Some(tx), Some(handle))
         } else {
@@ -300,12 +314,14 @@ impl Coordinator {
 
         let mut workers = Vec::with_capacity(cfg.workers);
         for i in 0..cfg.workers {
+            let machine = Machine::new(cfg.hw);
             let ctx = WorkerCtx {
                 queue: queue.clone(),
                 metrics: metrics.clone(),
                 plan_cache: plan_cache.clone(),
                 selector: cfg.selector,
-                machine: Machine::new(cfg.hw),
+                model: cfg.model_select.then(|| CostModel::new(&machine)),
+                machine,
                 artifacts_dir: cfg.artifacts_dir.clone(),
                 max_batch: cfg.max_batch,
                 tune_tx: tune_tx.clone(),
@@ -512,9 +528,10 @@ fn route(req: &Request, ctx: &WorkerCtx, runtime: &Option<Runtime>) -> Backend {
             }
             let stats = MatrixStats::of(a);
             let key = ShapeKey::spmm(&stats, *n as u32);
-            let (plan, hit) = ctx
-                .plan_cache
-                .get_or_insert_with(key, || ctx.selector.select(&stats, *n as u32));
+            let (plan, hit) = ctx.plan_cache.get_or_insert_with(key, || match &ctx.model {
+                Some(model) => ctx.selector.select_model(model, &stats, *n as u32),
+                None => ctx.selector.select(&stats, *n as u32),
+            });
             note_cache(ctx, hit);
             if !hit {
                 request_tune(ctx, key, || TuneInput::Matrix(a.clone()), *n as u32);
@@ -524,9 +541,10 @@ fn route(req: &Request, ctx: &WorkerCtx, runtime: &Option<Runtime>) -> Backend {
         Request::Sddmm { a, j_dim, .. } => {
             let stats = MatrixStats::of(a);
             let key = ShapeKey::sddmm(&stats, *j_dim as u32);
-            let (plan, hit) = ctx
-                .plan_cache
-                .get_or_insert_with(key, || ctx.selector.select_sddmm(&stats, *j_dim as u32));
+            let (plan, hit) = ctx.plan_cache.get_or_insert_with(key, || match &ctx.model {
+                Some(model) => ctx.selector.select_sddmm_model(model, &stats, *j_dim as u32),
+                None => ctx.selector.select_sddmm(&stats, *j_dim as u32),
+            });
             note_cache(ctx, hit);
             if !hit {
                 request_tune(ctx, key, || TuneInput::Matrix(a.clone()), *j_dim as u32);
@@ -534,7 +552,11 @@ fn route(req: &Request, ctx: &WorkerCtx, runtime: &Option<Runtime>) -> Backend {
             Backend::Sim(plan, hit)
         }
         Request::Mttkrp { a, j_dim, .. } => {
-            match ctx.selector.select_mttkrp(a, *j_dim as u32) {
+            let fresh = match &ctx.model {
+                Some(model) => ctx.selector.select_mttkrp_model(model, a, *j_dim as u32),
+                None => ctx.selector.select_mttkrp(a, *j_dim as u32),
+            };
+            match fresh {
                 Some(fresh) => {
                     let key = ShapeKey::mttkrp(a, *j_dim as u32);
                     let (plan, hit) = ctx.plan_cache.get_or_insert_with(key, || fresh);
@@ -547,18 +569,24 @@ fn route(req: &Request, ctx: &WorkerCtx, runtime: &Option<Runtime>) -> Backend {
                 None => Backend::Cpu,
             }
         }
-        Request::Ttm { a, l_dim, .. } => match ctx.selector.select_ttm(a, *l_dim as u32) {
-            Some(fresh) => {
-                let key = ShapeKey::ttm(a, *l_dim as u32);
-                let (plan, hit) = ctx.plan_cache.get_or_insert_with(key, || fresh);
-                note_cache(ctx, hit);
-                if !hit {
-                    request_tune(ctx, key, || TuneInput::Tensor(a.clone()), *l_dim as u32);
+        Request::Ttm { a, l_dim, .. } => {
+            let fresh = match &ctx.model {
+                Some(model) => ctx.selector.select_ttm_model(model, a, *l_dim as u32),
+                None => ctx.selector.select_ttm(a, *l_dim as u32),
+            };
+            match fresh {
+                Some(fresh) => {
+                    let key = ShapeKey::ttm(a, *l_dim as u32);
+                    let (plan, hit) = ctx.plan_cache.get_or_insert_with(key, || fresh);
+                    note_cache(ctx, hit);
+                    if !hit {
+                        request_tune(ctx, key, || TuneInput::Tensor(a.clone()), *l_dim as u32);
+                    }
+                    Backend::Sim(plan, hit)
                 }
-                Backend::Sim(plan, hit)
+                None => Backend::Cpu,
             }
-            None => Backend::Cpu,
-        },
+        }
     }
 }
 
@@ -699,7 +727,21 @@ fn serve_one(label: &str, routed: Routed, runtime: &mut Option<Runtime>, ctx: &W
 
 /// Drain refinement tasks; each winning sweep upgrades the cached plan.
 /// Exits when every sender (the workers) is gone.
-fn tuner_loop(rx: std::sync::mpsc::Receiver<TuneTask>, machine: &Machine, cache: &PlanCache) {
+///
+/// Sweeps go through the model-pruned entry points
+/// (`tuner::search::tune*_pruned`): the analytic model prices the whole
+/// grid in O(stats) and only `top_k` survivors are interpreted warp-by-
+/// warp — the dominant cost of this hot path before the model existed.
+/// `top_k = 0` is the exhaustive escape hatch. Every sweep records its
+/// grid/survivor sizes and whether the model's top-1 pick won
+/// ([`Metrics::on_tune`]), so prune accuracy is observable in production.
+fn tuner_loop(
+    rx: std::sync::mpsc::Receiver<TuneTask>,
+    machine: &Machine,
+    cache: &PlanCache,
+    metrics: &Metrics,
+    top_k: usize,
+) {
     use super::plan_cache::PlanOrigin;
     while let Ok(task) = rx.recv() {
         // The cache itself is the dedupe state: skip shapes already tuned
@@ -714,7 +756,7 @@ fn tuner_loop(rx: std::sync::mpsc::Receiver<TuneTask>, machine: &Machine, cache:
         // deterministic dense operands: only the timing matters
         let seed = (task.key.rows as u64) ^ ((task.key.nnz as u64) << 20) ^ task.width as u64;
         let mut rng = SplitMix64::new(seed);
-        match (task.key.scenario, &task.input) {
+        let pruned = match (task.key.scenario, &task.input) {
             (Scenario::Spmm, TuneInput::Matrix(a)) => {
                 let cands = tuner::space::sgap_candidates(task.width);
                 if cands.is_empty() {
@@ -722,19 +764,14 @@ fn tuner_loop(rx: std::sync::mpsc::Receiver<TuneTask>, machine: &Machine, cache:
                 }
                 let b: Vec<f32> =
                     (0..a.cols * task.width as usize).map(|_| rng.value()).collect();
-                if let Ok(out) = tuner::tune(machine, &cands, a, &b, task.width) {
-                    let (best, _) = out.best();
-                    cache.upgrade(task.key, best);
-                }
+                tuner::search::tune_pruned(machine, &cands, a, &b, task.width, top_k)
             }
             (Scenario::Sddmm, TuneInput::Matrix(a)) => {
                 let j = task.width as usize;
                 let x1: Vec<f32> = (0..a.rows * j).map(|_| rng.value()).collect();
                 let x2: Vec<f32> = (0..j * a.cols).map(|_| rng.value()).collect();
                 let cands = tuner::space::sddmm_candidates(task.width);
-                if let Ok((best, _)) = tuner::search::tune_sddmm(machine, &cands, a, &x1, &x2) {
-                    cache.upgrade(task.key, best);
-                }
+                tuner::search::tune_sddmm_pruned(machine, &cands, a, &x1, &x2, top_k)
             }
             (Scenario::Mttkrp, TuneInput::Tensor(a)) => {
                 let cands = tuner::space::mttkrp_candidates(task.width);
@@ -744,11 +781,7 @@ fn tuner_loop(rx: std::sync::mpsc::Receiver<TuneTask>, machine: &Machine, cache:
                 let j = task.width as usize;
                 let x1: Vec<f32> = (0..a.dim1 * j).map(|_| rng.value()).collect();
                 let x2: Vec<f32> = (0..a.dim2 * j).map(|_| rng.value()).collect();
-                if let Ok((best, _)) =
-                    tuner::search::tune_mttkrp(machine, &cands, a, &x1, &x2)
-                {
-                    cache.upgrade(task.key, best);
-                }
+                tuner::search::tune_mttkrp_pruned(machine, &cands, a, &x1, &x2, top_k)
             }
             (Scenario::Ttm, TuneInput::Tensor(a)) => {
                 let cands = tuner::space::ttm_candidates(task.width);
@@ -757,13 +790,17 @@ fn tuner_loop(rx: std::sync::mpsc::Receiver<TuneTask>, machine: &Machine, cache:
                 }
                 let l = task.width as usize;
                 let x1: Vec<f32> = (0..a.dim2 * l).map(|_| rng.value()).collect();
-                if let Ok((best, _)) = tuner::search::tune_ttm(machine, &cands, a, &x1) {
-                    cache.upgrade(task.key, best);
-                }
+                tuner::search::tune_ttm_pruned(machine, &cands, a, &x1, top_k)
             }
             // a scenario/operand mismatch cannot be produced by route();
             // drop rather than guess
-            _ => {}
+            _ => continue,
+        };
+        if let Ok(out) = pruned {
+            if let Some((best, _)) = out.best() {
+                metrics.on_tune(out.grid, out.survivors, out.model_rank_agree);
+                cache.upgrade(task.key, best);
+            }
         }
     }
 }
@@ -930,10 +967,21 @@ mod tests {
         coord.spmm_blocking(a.clone(), b.clone(), 4).unwrap();
         let key = ShapeKey::spmm(&MatrixStats::of(&a), 4);
         let cache = coord.plan_cache.clone();
+        let metrics = coord.metrics.clone();
         coord.shutdown(); // joins the tuner: the upgrade has landed
         let plan = cache.get(&key).expect("plan still cached");
         assert_eq!(plan.origin, PlanOrigin::Tuned);
         assert!(cache.stats().upgrades >= 1);
+        // the sweep went through the model-pruned path and was recorded
+        let s = metrics.snapshot();
+        assert!(s.tunes >= 1, "no tune recorded");
+        assert!(s.tune_survivors <= s.tune_grid);
+        assert!(
+            s.tune_survivors <= s.tunes * crate::tuner::DEFAULT_TOP_K as u64,
+            "pruning did not bound the simulated candidates: {} sweeps, {} survivors",
+            s.tunes,
+            s.tune_survivors
+        );
     }
 
     #[test]

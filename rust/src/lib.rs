@@ -19,7 +19,9 @@
 //! * [`algos`] — the §2.1 quartet behind the catalog: the four TACO SpMM
 //!   families, SDDMM, the dgSPARSE kernels, and the COO-3 MTTKRP/TTM
 //!   segment kernels, each with numeric and simulated execution paths.
-//! * [`tuner`] — atomic-parallelism space search + input-dynamics selector.
+//! * [`tuner`] — atomic-parallelism space search (analytic cost-model
+//!   pricing + model-pruned or exhaustive grid search) and the
+//!   input-dynamics selector.
 //! * [`runtime`] — PJRT artifact loading/execution (numeric hot path;
 //!   gated behind the `pjrt` cargo feature).
 //! * [`coordinator`] — the serving layer: a multi-worker pool with a

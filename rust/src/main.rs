@@ -6,10 +6,12 @@
 //!   codegen   — lower a scheduled kernel and print the CUDA-like source
 //!   space     — print the atomic-parallelism legality map (Fig. 7/8)
 //!   stats     — print the evaluation-suite matrix statistics
-//!   tune      — grid-search one suite matrix on the simulator (SpMM)
+//!   spmm      — grid-search one suite matrix on the simulator (alias: tune)
 //!   sddmm     — grid-search the scheduled SDDMM candidates likewise
 //!   mttkrp    — grid-search the COO-3 MTTKRP candidates on a seeded tensor
 //!   ttm       — grid-search the COO-3 TTM candidates likewise
+//!   bench     — run the table-1/2/4 suites through the model-pruned
+//!               tuner and emit versioned BENCH_spmm.json / BENCH_tensor.json
 //!   serve     — start the coordinator and push a demo workload
 //!
 //! Argument parsing is hand-rolled (`--key value` pairs) — the offline
@@ -19,6 +21,7 @@ use std::collections::HashMap;
 
 use anyhow::{bail, Context, Result};
 
+use sgap::bench_util::Table;
 use sgap::compiler::codegen_cuda::{emit_translation_unit, macro_header};
 use sgap::compiler::schedule::{
     DgConfig, MttkrpConfig, Schedule, SddmmConfig, SpmmConfig, TtmConfig,
@@ -155,7 +158,7 @@ fn cmd_tune(flags: &HashMap<String, String>) -> Result<()> {
     for (alg, t, gf) in out.ranked.iter().take(12) {
         println!("{:<34} {:>12.2} {:>10.2}", alg.name(), t * 1e6, gf);
     }
-    let (best, t) = out.best();
+    let (best, t) = out.best().context("empty sweep")?;
     println!("\nbest: {} at {:.2} us", best.name(), t * 1e6);
     Ok(())
 }
@@ -181,7 +184,7 @@ fn cmd_sddmm(flags: &HashMap<String, String>) -> Result<()> {
     for (alg, t, gf) in out.ranked.iter().take(12) {
         println!("{:<34} {:>12.2} {:>10.2}", alg.name(), t * 1e6, gf);
     }
-    let (best, t) = out.best();
+    let (best, t) = out.best().context("empty sweep")?;
     println!("\nbest: {} at {:.2} us", best.name(), t * 1e6);
     let selected = tuner::Selector::default().select_sddmm(&MatrixStats::of(&a), j);
     match out.time_of(&selected) {
@@ -231,13 +234,14 @@ fn tensor_from_flags(flags: &HashMap<String, String>) -> Result<Coo3> {
     Ok(Coo3::random((d0, d1, d2), nnz, seed))
 }
 
-fn print_ranked(out: &tuner::TuneOutcome) {
+fn print_ranked(out: &tuner::TuneOutcome) -> Result<()> {
     println!("{:<34} {:>12} {:>10}", "plan", "time (us)", "GFLOP/s");
     for (alg, t, gf) in out.ranked.iter().take(12) {
         println!("{:<34} {:>12.2} {:>10.2}", alg.name(), t * 1e6, gf);
     }
-    let (best, t) = out.best();
+    let (best, t) = out.best().context("empty sweep")?;
     println!("\nbest: {} at {:.2} us", best.name(), t * 1e6);
+    Ok(())
 }
 
 fn cmd_mttkrp(flags: &HashMap<String, String>) -> Result<()> {
@@ -255,8 +259,8 @@ fn cmd_mttkrp(flags: &HashMap<String, String>) -> Result<()> {
         a.dim0, a.dim1, a.dim2, a.nnz(), hw.name, cands.len()
     );
     let out = tuner::tune_mttkrp_ranked(&machine, &cands, &a, &x1, &x2)?;
-    print_ranked(&out);
-    let (_, t) = out.best();
+    print_ranked(&out)?;
+    let (_, t) = out.best().context("empty sweep")?;
     match tuner::Selector::default().select_mttkrp(&a, j) {
         Some(selected) => match out.time_of(&selected) {
             Some(ts) => println!(
@@ -286,8 +290,8 @@ fn cmd_ttm(flags: &HashMap<String, String>) -> Result<()> {
         a.dim0, a.dim1, a.dim2, a.nnz(), hw.name, cands.len()
     );
     let out = tuner::tune_ttm_ranked(&machine, &cands, &a, &x1)?;
-    print_ranked(&out);
-    let (_, t) = out.best();
+    print_ranked(&out)?;
+    let (_, t) = out.best().context("empty sweep")?;
     match tuner::Selector::default().select_ttm(&a, l) {
         Some(selected) => match out.time_of(&selected) {
             Some(ts) => println!(
@@ -300,6 +304,54 @@ fn cmd_ttm(flags: &HashMap<String, String>) -> Result<()> {
         },
         None => println!("selector fast path: none (width {l} served on the CPU)"),
     }
+    Ok(())
+}
+
+/// `sgap bench` — the reproducible benchmark pipeline: run the table-1/2
+/// compiler-family grid and the table-4 dgSPARSE grid (SpMM report) plus
+/// the MTTKRP/TTM tensor report through the model-pruned tuner, and emit
+/// versioned `BENCH_spmm.json` / `BENCH_tensor.json` (schema: see
+/// EXPERIMENTS.md §BENCH; each emitted file is validated against it
+/// before being written).
+fn cmd_bench(flags: &HashMap<String, String>) -> Result<()> {
+    let quick = flags.contains_key("quick");
+    let top_k = flag_u32(flags, "k", sgap::tuner::DEFAULT_TOP_K as u32)? as usize;
+    let hw = hw_by_name(flags.get("hw").map(String::as_str).unwrap_or("3090"))?;
+    let out_dir = std::path::PathBuf::from(
+        flags.get("out").cloned().unwrap_or_else(|| ".".to_string()),
+    );
+    std::fs::create_dir_all(&out_dir)
+        .with_context(|| format!("creating {}", out_dir.display()))?;
+    let machine = Machine::new(hw);
+
+    println!(
+        "sgap bench: {} suites on {}, top-K {} ({})",
+        if quick { "quick" } else { "full" },
+        hw.name,
+        top_k,
+        if top_k == 0 { "exhaustive escape hatch" } else { "model-pruned" },
+    );
+    let mut table = Table::new(&["report", "rows", "geomean speedup", "rank agree", "prune"]);
+    for report in [
+        sgap::bench_util::run_spmm_bench(&machine, quick, top_k)?,
+        sgap::bench_util::run_tensor_bench(&machine, quick, top_k)?,
+    ] {
+        let path = out_dir.join(format!("BENCH_{}.json", report.suite));
+        report.write(&path)?;
+        let (grid, survivors) = report
+            .rows
+            .iter()
+            .fold((0usize, 0usize), |(g, s), r| (g + r.grid, s + r.survivors));
+        table.row(&[
+            path.display().to_string(),
+            report.rows.len().to_string(),
+            format!("{:.3}", report.geomean_speedup()),
+            format!("{:.0}%", report.rank_agreement() * 100.0),
+            format!("{grid} -> {survivors}"),
+        ]);
+    }
+    table.print();
+    println!("\nschema v{} validated on both files", sgap::bench_util::BENCH_SCHEMA_VERSION);
     Ok(())
 }
 
@@ -376,10 +428,12 @@ fn main() -> Result<()> {
         "codegen" => cmd_codegen(&flags),
         "space" => cmd_space(),
         "stats" => cmd_stats(),
-        "tune" => cmd_tune(&flags),
+        // `spmm` is the quartet-consistent name; `tune` the historical one
+        "tune" | "spmm" => cmd_tune(&flags),
         "sddmm" => cmd_sddmm(&flags),
         "mttkrp" => cmd_mttkrp(&flags),
         "ttm" => cmd_ttm(&flags),
+        "bench" => cmd_bench(&flags),
         "serve" => cmd_serve(&flags),
         "macros" => {
             print!("{}", macro_header());
@@ -394,10 +448,12 @@ fn main() -> Result<()> {
             println!("           (sddmm/mttkrp/ttm: --n is the dense width; dgsparse: --g=workerSz --r=groupSz --c=coarsenSz)");
             println!("  space    (print the Fig. 7/8 legality map)");
             println!("  stats    (print the evaluation-suite statistics)");
-            println!("  tune     --dataset er_1024_d5e-3 --n 4 --hw 3090|2080|v100");
+            println!("  spmm     --dataset er_1024_d5e-3 --n 4 --hw 3090|2080|v100 (alias: tune)");
             println!("  sddmm    --dataset er_1024_d5e-3 --j 16 --hw 3090|2080|v100");
             println!("  mttkrp   --d0 128 --d1 96 --d2 64 --nnz 4000 --j 16 --hw 3090|2080|v100");
             println!("  ttm      --d0 128 --d1 96 --d2 64 --nnz 4000 --l 16 --hw 3090|2080|v100");
+            println!("  bench    [--quick] [--out DIR] [--k 8] [--hw 3090|2080|v100]");
+            println!("           (emits BENCH_spmm.json + BENCH_tensor.json; --k 0 = exhaustive)");
             println!("  serve    --requests 32 --workers 2 [--tune] [--cpu-only] (SGAP_ARTIFACTS overrides artifacts dir)");
             println!("  macros   (print the §5.3 macro-instruction header)");
             Ok(())

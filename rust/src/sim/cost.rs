@@ -49,6 +49,37 @@ impl CostParams {
         let steps = (r.max(1) as f64).log2();
         steps * (shfl_per_step * self.shfl + self.sync_per_lane * r as f64)
     }
+
+    /// `atomicAddGroup<float, r>`: tree reduction, 1 shuffle per step.
+    /// The closed form the analytic model (`tuner::model`) prices with —
+    /// identical to what [`WarpCost::add_group_reduce`] charges in
+    /// `sim::exec::WarpExecutor::group_atomic_add`.
+    pub fn par_reduce(&self, r: u32) -> f64 {
+        self.group_reduce(r, 1.0)
+    }
+
+    /// `segReduceGroup<float, r>`: segmented scan, the shuffles carry
+    /// value + key — 2 shuffles per step (mirrors
+    /// `sim::exec::WarpExecutor::group_seg_reduce`).
+    pub fn seg_scan(&self, r: u32) -> f64 {
+        self.group_reduce(r, 2.0)
+    }
+
+    /// Serialized-atomic cycles for a writeback whose worst address is hit
+    /// `multiplicity` times (the interpreter charges
+    /// `atomic × max_multiplicity`; the model passes an expectation).
+    pub fn atomic_chain(&self, multiplicity: f64) -> f64 {
+        self.atomic * multiplicity.max(0.0)
+    }
+
+    /// Cycles of a lockstep binary search over a window of `window`
+    /// positions: `ceil(log2 window)` compare + dependent-load steps
+    /// (mirrors the `BinarySearchBefore` charge in `sim::exec`). Returns
+    /// `(cycles, dependent_sectors)`.
+    pub fn bsearch(&self, window: f64) -> (f64, f64) {
+        let steps = window.max(1.0).log2().ceil().max(0.0);
+        (self.bsearch_step * steps, steps)
+    }
 }
 
 /// Accumulated cost of one warp's execution.
@@ -133,6 +164,20 @@ mod tests {
         assert_eq!(distinct_sectors((0..32).map(|i| i * 16), 4), 32);
         // all lanes same address = 1 sector
         assert_eq!(distinct_sectors(std::iter::repeat_n(7usize, 32), 4), 1);
+    }
+
+    #[test]
+    fn analytic_helpers_mirror_the_interpreter_charges() {
+        let p = CostParams::default();
+        assert_eq!(p.par_reduce(8), p.group_reduce(8, 1.0));
+        assert_eq!(p.seg_scan(8), p.group_reduce(8, 2.0));
+        assert!(p.seg_scan(8) > p.par_reduce(8), "scan carries key + value");
+        assert_eq!(p.atomic_chain(3.0), p.atomic * 3.0);
+        assert_eq!(p.atomic_chain(-1.0), 0.0);
+        let (cy, sec) = p.bsearch(64.0);
+        assert_eq!(sec, 6.0);
+        assert_eq!(cy, p.bsearch_step * 6.0);
+        assert_eq!(p.bsearch(1.0).1, 0.0);
     }
 
     #[test]

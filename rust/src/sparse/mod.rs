@@ -22,4 +22,4 @@ pub use dataset::{suite, DatasetSpec};
 pub use ell::Ell;
 pub use gen::{banded, block_community, erdos_renyi, power_law};
 pub use rng::SplitMix64;
-pub use stats::MatrixStats;
+pub use stats::{MatrixStats, SegStats};

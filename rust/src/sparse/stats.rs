@@ -1,6 +1,9 @@
 //! Matrix statistics — the *input dynamics* features the DA-SpMM-style
-//! selector keys on (density, mean/CV of row degree, Gini imbalance).
+//! selector keys on (density, mean/CV of row degree, Gini imbalance) —
+//! plus [`SegStats`], the segment-length summary the COO-3 kernels and
+//! the analytic cost model (`tuner::model`) key on.
 
+use super::coo3::Coo3;
 use super::csr::Csr;
 
 /// Summary statistics of a sparse matrix's structure.
@@ -54,6 +57,80 @@ impl MatrixStats {
     }
 }
 
+/// Summary statistics of a *segmented* reduction input: the distribution
+/// of output-segment lengths (nnz per output row for MTTKRP, per leading
+/// `(i,j)` fiber for TTM). The empty segments count toward the
+/// mean/variance — an empty segment still costs a writeback slot in
+/// row-balanced kernels, exactly like an empty CSR row (whose statistics
+/// live in [`MatrixStats`]).
+///
+/// One definition shared by the coordinator's `ShapeKey` fingerprints and
+/// the `tuner::model` pricing formulas, so the cache key and the cost
+/// model see the same dynamics.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SegStats {
+    /// Total output segments, including empty ones.
+    pub segments: usize,
+    pub nnz: usize,
+    /// Mean segment length `nnz / segments` (0 when there are no segments).
+    pub mean_len: f64,
+    /// Coefficient of variation of segment lengths: std/mean over *all*
+    /// segments (empties included).
+    pub cv: f64,
+    /// Longest segment (the critical path of a segment-split kernel).
+    pub max_len: usize,
+    /// Fraction of segments with no non-zeros.
+    pub empty_frac: f64,
+}
+
+impl SegStats {
+    /// Build from a run-length view: positions `0..nnz` are sorted by
+    /// segment, `seg_at(p)` maps a position to its segment id (contiguous
+    /// runs). O(nnz), no allocation.
+    pub fn from_runs(segments: usize, nnz: usize, seg_at: impl Fn(usize) -> u64) -> SegStats {
+        let segs = segments.max(1);
+        let mut used = 0usize;
+        let mut sumsq = 0f64;
+        let mut max_len = 0usize;
+        let mut i = 0;
+        while i < nnz {
+            let seg = seg_at(i);
+            let mut j = i + 1;
+            while j < nnz && seg_at(j) == seg {
+                j += 1;
+            }
+            let len = j - i;
+            sumsq += (len as f64) * (len as f64);
+            max_len = max_len.max(len);
+            used += 1;
+            i = j;
+        }
+        let mean = nnz as f64 / segs as f64;
+        let var = (sumsq / segs as f64 - mean * mean).max(0.0);
+        let cv = if mean > 0.0 { var.sqrt() / mean } else { 0.0 };
+        SegStats {
+            segments,
+            nnz,
+            mean_len: mean,
+            cv,
+            max_len,
+            empty_frac: 1.0 - used as f64 / segs as f64,
+        }
+    }
+
+    /// MTTKRP segments: output rows (`idx0` runs).
+    pub fn mttkrp(a: &Coo3) -> SegStats {
+        SegStats::from_runs(a.dim0, a.nnz(), |p| a.idx0[p] as u64)
+    }
+
+    /// TTM segments: leading `(i, j)` fibers.
+    pub fn ttm(a: &Coo3) -> SegStats {
+        SegStats::from_runs(a.dim0 * a.dim1, a.nnz(), |p| {
+            a.idx0[p] as u64 * a.dim1 as u64 + a.idx1[p] as u64
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -88,5 +165,50 @@ mod tests {
         let coo = Coo::new(10, 10, vec![(0, 0, 1.0), (5, 5, 1.0)]);
         let s = MatrixStats::of(&coo.to_csr());
         assert!((s.density - 0.02).abs() < 1e-12);
+    }
+
+    #[test]
+    fn seg_stats_from_runs_counts_empties() {
+        // 4 segments, nnz in segments 0 (3x) and 2 (1x): mean = 1, two empty
+        let ids = [0u64, 0, 0, 2];
+        let s = SegStats::from_runs(4, 4, |p| ids[p]);
+        assert_eq!(s.segments, 4);
+        assert_eq!(s.nnz, 4);
+        assert!((s.mean_len - 1.0).abs() < 1e-12);
+        assert_eq!(s.max_len, 3);
+        assert!((s.empty_frac - 0.5).abs() < 1e-12);
+        // var = (9 + 1)/4 - 1 = 1.5; cv = sqrt(1.5)
+        assert!((s.cv - 1.5f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn seg_stats_tensor_views_match_their_keys() {
+        let t = Coo3::random((16, 8, 4), 100, 3);
+        let m = SegStats::mttkrp(&t);
+        assert_eq!(m.segments, 16);
+        assert_eq!(m.nnz, 100);
+        assert!((m.mean_len - 100.0 / 16.0).abs() < 1e-12);
+        let f = SegStats::ttm(&t);
+        assert_eq!(f.segments, 16 * 8);
+        assert!(f.mean_len < m.mean_len, "fibers are shorter than rows");
+        assert!(f.max_len <= m.max_len);
+    }
+
+    #[test]
+    fn seg_stats_from_runs_agrees_with_matrix_stats_on_a_row_view() {
+        // the two statistic families share definitions: feeding a CSR's
+        // rows through from_runs reproduces MatrixStats' skew features
+        let coo = Coo::new(4, 8, (0..8).map(|c| (0u32, c as u32, 1.0f32)).collect());
+        let csr = coo.to_csr();
+        let ms = MatrixStats::of(&csr);
+        let rows: Vec<u64> = (0..csr.rows as u32)
+            .flat_map(|i| std::iter::repeat_n(i as u64, csr.row_degree(i as usize)))
+            .collect();
+        let ss = SegStats::from_runs(csr.rows, csr.nnz(), |p| rows[p]);
+        assert_eq!(ss.segments, ms.rows);
+        assert!((ss.mean_len - ms.row_degree_mean).abs() < 1e-12);
+        assert!((ss.cv - ms.row_degree_cv).abs() < 1e-12);
+        assert!((ss.empty_frac - ms.empty_row_frac).abs() < 1e-12);
+        assert_eq!(ss.max_len, ms.row_degree_max);
     }
 }

@@ -1,13 +1,21 @@
 //! Auto-tuning over the atomic-parallelism space (§7) and the
 //! input-dynamics selector (the DA-SpMM-style "dynamic choice" of Table 5).
+//!
+//! Two pricing tiers: [`model`] is the analytic cost model (O(stats) per
+//! candidate, no warp interpretation) used to prune grids and drive the
+//! selector's model-argmin fast path; [`search`] simulates — exhaustively
+//! via `tune*`, or over a model-pruned shortlist via `tune*_pruned`.
 
+pub mod model;
 pub mod search;
 pub mod selector;
 pub mod space;
 
+pub use model::{CostModel, Workload};
 pub use search::{
-    tune, tune_mttkrp, tune_mttkrp_ranked, tune_sddmm, tune_sddmm_ranked, tune_ttm,
-    tune_ttm_ranked, TuneOutcome,
+    tune, tune_mttkrp, tune_mttkrp_pruned, tune_mttkrp_ranked, tune_pruned, tune_sddmm,
+    tune_sddmm_pruned, tune_sddmm_ranked, tune_ttm, tune_ttm_pruned, tune_ttm_ranked,
+    PrunedOutcome, TuneOutcome, DEFAULT_TOP_K,
 };
 pub use selector::Selector;
 pub use space::{

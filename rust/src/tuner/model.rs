@@ -1,0 +1,549 @@
+//! Analytic cost model — O(stats) pricing of every [`Algo`] candidate,
+//! no warp interpretation.
+//!
+//! `sim::exec` interprets a candidate kernel warp-by-warp: exact, but the
+//! dominant cost of the coordinator's background-tuning hot path. This
+//! module prices the *same* candidates in closed form from structure
+//! statistics ([`MatrixStats`] / [`SegStats`]) and the *same*
+//! [`CostParams`] constants the interpreter charges — sectors touched,
+//! `log2(r)` shuffle steps, the width-proportional `sync_per_lane`
+//! convergence overhead of Fig. 1(b), atomic serialization by address
+//! multiplicity — then applies the same roofline roll-up as
+//! [`Machine::launch`](crate::sim::Machine::launch):
+//! `max(compute, DRAM, critical warp)`.
+//!
+//! The model is a leading-order *expectation* of the interpreter's
+//! account, not a replica: DESIGN.md §cost-model-vs-analytic documents
+//! exactly where the two diverge. Its contract is **ranking**, not
+//! absolute time — [`CostModel::shortlist`] prunes a candidate grid to a
+//! top-K shortlist which `tuner::search::tune_pruned` then simulates, so
+//! serving-time tuning pays O(stats) per candidate over the grid and full
+//! interpretation only for K survivors. The pruning-fidelity invariant
+//! (shortlist contains the exhaustive winner, or the pruned winner is
+//! within the documented time ratio) is enforced by
+//! `rust/tests/tuner_pruning.rs`.
+
+use crate::algos::catalog::Algo;
+use crate::algos::dgsparse::DgConfig;
+use crate::algos::mttkrp::{MttkrpConfig, TtmConfig};
+use crate::algos::sddmm::SddmmConfig;
+use crate::sim::{CostParams, HwProfile, Machine};
+use crate::sparse::{MatrixStats, SegStats};
+
+/// What a candidate would run on — the statistics the pricing formulas
+/// key on, one variant per scenario of the §2.1 quartet.
+#[derive(Debug, Clone, Copy)]
+pub enum Workload<'a> {
+    /// SpMM `C = A·B` with dense width `n`.
+    Spmm { stats: &'a MatrixStats, n: u32 },
+    /// SDDMM with inner dense width `j`.
+    Sddmm { stats: &'a MatrixStats, j: u32 },
+    /// MTTKRP over row segments with factor width `j`.
+    Mttkrp { seg: &'a SegStats, j: u32 },
+    /// TTM over leading-fiber segments with output width `l`.
+    Ttm { seg: &'a SegStats, l: u32 },
+}
+
+/// Intermediate estimate in [`Machine::launch`]'s own units.
+#[derive(Debug, Clone, Copy)]
+struct Estimate {
+    /// Total compute cycles across all warps.
+    cycles: f64,
+    /// Total distinct 32-byte DRAM sectors.
+    sectors: f64,
+    /// The most expensive single warp (cycles) — the latency bound.
+    critical: f64,
+}
+
+/// The analytic pricer: hardware profile + the shared cost constants.
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    pub hw: HwProfile,
+    pub params: CostParams,
+}
+
+const P: f64 = 256.0; // threads per block of every compiler family
+const WARP: f64 = 32.0;
+
+impl CostModel {
+    /// Price with the same profile and constants a [`Machine`] charges.
+    pub fn new(machine: &Machine) -> CostModel {
+        CostModel { hw: machine.hw, params: machine.params }
+    }
+
+    /// Estimated execution time in seconds for `algo` on `workload`.
+    /// `None` when the plan kind does not serve the workload's scenario
+    /// (an SpMM plan priced against an SDDMM workload, …).
+    pub fn price(&self, algo: &Algo, workload: &Workload) -> Option<f64> {
+        let est = match (workload, *algo) {
+            (Workload::Spmm { stats, n }, Algo::SgapNnzGroup { c, r }) => {
+                self.est_nnz_group(stats, *n, c, r)
+            }
+            (Workload::Spmm { stats, n }, Algo::TacoNnzSerial { g, c }) => {
+                self.est_nnz_serial(stats, *n, g, c)
+            }
+            (Workload::Spmm { stats, n }, Algo::TacoRowSerial { x, c }) => {
+                self.est_row_serial(stats, *n, x, c)
+            }
+            (Workload::Spmm { stats, n }, Algo::SgapRowGroup { g, c, r }) => {
+                self.est_row_group(stats, *n, g, c, r)
+            }
+            (Workload::Spmm { stats, n }, Algo::Dg(cfg)) => self.est_dg(stats, *n, &cfg),
+            (Workload::Sddmm { stats, .. }, Algo::Sddmm(cfg)) => self.est_sddmm(stats, &cfg),
+            (Workload::Mttkrp { seg, .. }, Algo::Mttkrp(cfg)) => self.est_coo3(seg, &cfg_m(&cfg)),
+            (Workload::Ttm { seg, .. }, Algo::Ttm(cfg)) => self.est_coo3(seg, &cfg_t(&cfg)),
+            _ => return None,
+        };
+        Some(self.rollup(est))
+    }
+
+    /// Prune `candidates` to the `k` cheapest under the model, cheapest
+    /// first (so `shortlist[0]` is the model's top-1 pick). Candidates
+    /// the model cannot price (kind mismatch) sort last; `k >= len`
+    /// returns the whole grid ranked — the exhaustive escape hatch.
+    pub fn shortlist(&self, candidates: &[Algo], workload: &Workload, k: usize) -> Vec<Algo> {
+        let mut priced: Vec<(f64, usize, Algo)> = candidates
+            .iter()
+            .enumerate()
+            .map(|(i, a)| (self.price(a, workload).unwrap_or(f64::INFINITY), i, *a))
+            .collect();
+        // stable, total order: ties broken by grid position
+        priced.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        priced.truncate(k.max(1));
+        priced.into_iter().map(|(_, _, a)| a).collect()
+    }
+
+    /// The [`Machine::launch`] roll-up with balanced SMs:
+    /// `max(cycles/SMs/issue, sectors·32B/BW, critical warp)`.
+    fn rollup(&self, e: Estimate) -> f64 {
+        let clock = self.hw.clock_ghz * 1e9;
+        let t_compute = e.cycles / self.hw.sm_count as f64 / self.hw.issue_width / clock;
+        let t_memory = e.sectors * 32.0 / (self.hw.dram_gbps * 1e9);
+        let t_latency = e.critical / clock;
+        t_compute.max(t_memory).max(t_latency) + self.hw.launch_overhead_s
+    }
+
+    // ---- shared sub-formulas (expectations of the exec.rs charges) ----
+
+    /// Serial-dot iteration: loop bookkeeping + `A·B` product
+    /// (2 loads, 2 ALU, 1 branch per iteration, as `strided_row_dot` and
+    /// the row/nnz-serial inner loops charge).
+    fn dot_iter(&self) -> f64 {
+        let p = &self.params;
+        2.0 * p.load_issue + 3.0 * p.alu + p.branch
+    }
+
+    /// Expected lockstep row degree across a warp's rows: the warp pays
+    /// the slowest lane, so skew (CV) inflates the mean; bounded by the
+    /// true maximum.
+    fn lockstep_degree(d_mean: f64, cv: f64, d_max: f64) -> f64 {
+        (d_mean * (1.0 + 2.0 * cv)).clamp(d_mean, d_max.max(d_mean))
+    }
+
+    /// Segment-boundary probability between adjacent non-zeros.
+    fn boundary_prob(mean_seg_len: f64) -> f64 {
+        (1.0 / mean_seg_len.max(1.0)).min(1.0)
+    }
+
+    /// Fresh B-gather sectors for `entries` scattered row reads, capped by
+    /// the dense operand's total footprint (`rows·width` f32 = /8 sectors).
+    fn gather_sectors(entries: f64, footprint_rows: f64, width: f64) -> f64 {
+        entries.min((footprint_rows * width / 8.0).max(1.0))
+    }
+
+    // ---- family estimates ----
+
+    /// `{<1 nnz, c col>, r}` — Listing 6, grouped segment reduction.
+    fn est_nnz_group(&self, s: &MatrixStats, n: u32, c: u32, r: u32) -> Estimate {
+        let p = &self.params;
+        let z = s.nnz as f64;
+        let d = s.row_degree_mean;
+        let kch = (n / c).max(1) as f64;
+        let nnzb = P / kch;
+        let blocks = (z / nnzb).ceil().max(1.0);
+        let warps = blocks * (P / WARP);
+        let pb = Self::boundary_prob(d);
+
+        let (bs_cy, bs_sec) = p.bsearch(nnzb / d.max(1.0) + 2.0);
+        let prologue = 4.0 * p.alu + 2.0 * p.load_issue + bs_cy;
+        // per coarsening step: bound check + crd/pos/vals/B loads + scan
+        let per_ki = 8.0 * p.alu
+            + 5.0 * p.load_issue
+            + 2.0 * p.branch
+            + (1.0 + pb) * (p.alu + p.load_issue) // row-boundary scan
+            + p.seg_scan(r)
+            + p.atomic_chain((d / r as f64).clamp(1.0, WARP / r as f64));
+        let per_warp = prologue + c as f64 * per_ki;
+
+        let a_sectors = 8.0 + bs_sec + 2.0; // crd+vals coalesced, search, window
+        let b_sectors = Self::gather_sectors(WARP, s.cols as f64, n as f64);
+        Estimate {
+            cycles: warps * per_warp,
+            sectors: warps * (a_sectors + b_sectors),
+            critical: per_warp,
+        }
+    }
+
+    /// `{<g nnz, c col>, 1}` — Listing 3, serial with atomic flushes.
+    fn est_nnz_serial(&self, s: &MatrixStats, n: u32, g: u32, c: u32) -> Estimate {
+        let p = &self.params;
+        let z = s.nnz as f64;
+        let d = s.row_degree_mean;
+        let gf = g as f64;
+        let kch = (n / c).max(1) as f64;
+        let nnzt = P / kch;
+        let blocks = (z / (gf * nnzt)).ceil().max(1.0);
+        let warps = blocks * (P / WARP);
+        let pb = Self::boundary_prob(d);
+        let flushes = gf * pb + 1.0; // row crossings + final flush
+
+        let (bs_cy, bs_sec) = p.bsearch(gf * nnzt / d.max(1.0) + 2.0);
+        let prologue = 4.0 * p.alu + 2.0 * p.load_issue + bs_cy;
+        let per_ki = gf * (3.0 * p.alu + 2.0 * p.load_issue + p.branch)
+            + flushes * (2.0 * p.alu + p.load_issue)
+            + flushes * p.atomic_chain((d / gf).clamp(1.0, WARP));
+        let per_warp = prologue + c as f64 * per_ki;
+
+        let a_sectors = 8.0 * gf + bs_sec + 2.0;
+        let b_sectors = Self::gather_sectors(WARP * gf, s.cols as f64, n as f64);
+        Estimate {
+            cycles: warps * per_warp,
+            sectors: warps * (a_sectors + b_sectors),
+            critical: per_warp,
+        }
+    }
+
+    /// `{<x row, c col>, 1}` — Listing 4, one thread per row, plain store.
+    fn est_row_serial(&self, s: &MatrixStats, n: u32, x: u32, c: u32) -> Estimate {
+        let p = &self.params;
+        let m = s.rows as f64;
+        let d = s.row_degree_mean;
+        let d_lock = Self::lockstep_degree(d, s.row_degree_cv, s.row_degree_max as f64);
+        let kch = (n / c).max(1) as f64;
+        let rowt = P / kch;
+        let blocks = (m / (x as f64 * rowt)).ceil().max(1.0);
+        let warps = blocks * (P / WARP);
+
+        // per (xi, ki): the whole row serially (lockstep max) + store
+        let row_cy = d_lock * self.dot_iter() + p.load_issue + 4.0 * p.alu;
+        let per_warp = 4.0 * p.alu + (x as f64 * c as f64) * row_cy;
+        let critical =
+            4.0 * p.alu + (x as f64 * c as f64) * (s.row_degree_max as f64 * self.dot_iter());
+
+        // A entries of the warp's 32·x rows + scattered B + C stores
+        let entries = WARP * x as f64 * d;
+        let a_sectors = 2.0 * entries / 8.0 + 2.0;
+        let b_sectors = Self::gather_sectors(entries, s.cols as f64, n as f64);
+        let c_sectors = c as f64 * x as f64 * 4.0;
+        Estimate {
+            cycles: warps * per_warp,
+            sectors: warps * (a_sectors + b_sectors + c_sectors),
+            critical: critical.max(per_warp),
+        }
+    }
+
+    /// `{<1/g row, c col>, r}` — Listing 5, grouped parallel reduction.
+    fn est_row_group(&self, s: &MatrixStats, n: u32, g: u32, c: u32, r: u32) -> Estimate {
+        let p = &self.params;
+        let m = s.rows as f64;
+        let d = s.row_degree_mean;
+        let gf = g as f64;
+        let kch = (n / c).max(1) as f64;
+        let rpb = (P / (gf * kch)).max(1.0);
+        let blocks = (m / rpb).ceil().max(1.0);
+        let warps = blocks * (P / WARP);
+        let d_lock = Self::lockstep_degree(d, s.row_degree_cv, s.row_degree_max as f64);
+        let trips = (d_lock / gf).ceil();
+        // g/r aligned subgroups share one output address — the partial
+        // results serialize on it (max multiplicity in the interpreter)
+        let wb_mult = (gf / r as f64).max(1.0);
+
+        let per_ki = 4.0 * p.alu
+            + 2.0 * p.load_issue // row window
+            + trips * self.dot_iter()
+            + p.par_reduce(r)
+            + p.atomic_chain(wb_mult);
+        let per_warp = 6.0 * p.alu + c as f64 * per_ki;
+        let crit_trips = (s.row_degree_max as f64 / gf).ceil();
+        let critical = 6.0 * p.alu
+            + c as f64
+                * (crit_trips * self.dot_iter() + p.par_reduce(r) + p.atomic_chain(wb_mult));
+
+        let rows_in_warp = (WARP / (gf * kch)).max(1.0);
+        let entries = rows_in_warp * d;
+        let a_sectors = 2.0 * entries / 8.0 + 2.0;
+        let b_sectors = Self::gather_sectors(entries, s.cols as f64, n as f64);
+        Estimate {
+            cycles: warps * per_warp,
+            sectors: warps * (a_sectors + b_sectors),
+            critical: critical.max(per_warp),
+        }
+    }
+
+    /// dgSPARSE RB+PR+RM `<groupSz, blockSz, tileSz, workerDimR>`.
+    fn est_dg(&self, s: &MatrixStats, _n: u32, cfg: &DgConfig) -> Estimate {
+        let p = &self.params;
+        let m = s.rows as f64;
+        let d = s.row_degree_mean;
+        let ws = cfg.worker_sz as f64;
+        let coarsen = cfg.coarsen_sz as f64;
+        let vcols = cfg.vcols().max(1) as f64;
+        let col_tiles = cfg.col_tiles().max(1) as f64;
+        let d_lock = Self::lockstep_degree(d, s.row_degree_cv, s.row_degree_max as f64);
+
+        // one unit = one (row, vcol, col-tile) strided dot; the dot and the
+        // grouped writeback repeat per coarsened column
+        let unit_cy = coarsen
+            * (2.0 * p.alu
+                + (d_lock / ws).ceil() * self.dot_iter()
+                + p.par_reduce(cfg.group_sz)
+                + p.atomic_chain((ws / cfg.group_sz as f64).max(1.0)));
+        let units = m * vcols * col_tiles;
+        let cycles = units * unit_cy * (ws / WARP);
+
+        // RB latency: a worker owning ceil(rows / workerDimR) visits of the
+        // worst row is the critical path
+        let visits = (m / cfg.worker_dim_r(s.rows).max(1) as f64).ceil().max(1.0);
+        let critical = visits
+            * coarsen
+            * ((s.row_degree_max as f64 / ws).ceil() * self.dot_iter()
+                + p.par_reduce(cfg.group_sz));
+
+        // every (vcol, col-tile) warp re-reads its row's A entries; B is a
+        // scattered gather per entry visit
+        let a_sectors = units * (2.0 * d / 8.0 + 2.0);
+        let b_sectors =
+            Self::gather_sectors(units * d, s.cols as f64, cfg.n as f64).max(units * d / 8.0);
+        Estimate { cycles, sectors: a_sectors + b_sectors, critical }
+    }
+
+    /// SDDMM `{<1/g nnz>, r}` — grouped dense-`j` dot per non-zero.
+    fn est_sddmm(&self, s: &MatrixStats, cfg: &SddmmConfig) -> Estimate {
+        let p = &self.params;
+        let z = s.nnz as f64;
+        let j = cfg.j_dim as f64;
+        let gf = cfg.g as f64;
+        let npb = cfg.npb() as f64;
+        let blocks = (z / npb).ceil().max(1.0);
+        let warps = blocks * (cfg.p as f64 / WARP);
+        let iters = (j / gf).ceil().max(1.0);
+
+        let per_warp = 6.0 * p.alu
+            + 3.0 * p.load_issue // rowidx, crd, vals
+            + iters * (2.0 * p.load_issue + 3.0 * p.alu + p.branch)
+            + p.alu // scale by A
+            + p.par_reduce(cfg.r)
+            + p.atomic_chain((gf / cfg.r as f64).max(1.0));
+
+        let groups = WARP / gf; // non-zeros per warp
+        // rowidx/crd/vals: 32/g consecutive positions per warp, coalesced
+        let meta_sectors = 3.0 * (groups / 8.0).max(1.0);
+        // X1 row read coalesced across the group's lanes; X2 column reads
+        // stride the row dimension — one sector per (j, k) touch
+        let x1_sectors = groups * (j / 8.0).max(1.0);
+        let x2_sectors = Self::gather_sectors(groups * j, j, s.cols as f64);
+        Estimate {
+            cycles: warps * per_warp,
+            sectors: warps * (meta_sectors + x1_sectors + x2_sectors),
+            critical: per_warp,
+        }
+    }
+
+    /// COO-3 `{<1 nnz, c col>, r}` — the shared MTTKRP/TTM segment shape.
+    fn est_coo3(&self, seg: &SegStats, cfg: &Coo3Shape) -> Estimate {
+        let p = &self.params;
+        let z = seg.nnz as f64;
+        // the atomic-serialization key is the *used*-segment mean: empty
+        // segments never separate two adjacent stored non-zeros
+        let used = (seg.segments as f64 * (1.0 - seg.empty_frac)).max(1.0);
+        let d_used = z / used;
+        let kch = (cfg.width / cfg.c).max(1) as f64;
+        let npb = P / kch;
+        let blocks = (z / npb).ceil().max(1.0);
+        let warps = blocks * (P / WARP);
+        let r = cfg.r;
+
+        let factors = if cfg.with_x2 { 2.0 } else { 1.0 };
+        let loads = 2.0 + 2.0 * factors; // bound check + vals + idx/X per factor
+        let per_ki = 8.0 * p.alu
+            + loads * p.load_issue
+            + 2.0 * p.branch
+            + p.seg_scan(r)
+            + p.atomic_chain((d_used / r as f64).clamp(1.0, WARP / r as f64));
+        let per_warp = 6.0 * p.alu + p.load_issue + cfg.c as f64 * per_ki;
+
+        let meta_sectors = 8.0 + 4.0 * factors; // seg_ids/A_vals + f-idx, coalesced
+        let x_sectors = factors * WARP; // factor-row gathers, scattered
+        Estimate {
+            cycles: warps * per_warp,
+            sectors: warps * (meta_sectors + x_sectors),
+            critical: per_warp,
+        }
+    }
+}
+
+/// The shared shape of the two COO-3 families.
+struct Coo3Shape {
+    width: u32,
+    c: u32,
+    r: u32,
+    with_x2: bool,
+}
+
+fn cfg_m(cfg: &MttkrpConfig) -> Coo3Shape {
+    Coo3Shape { width: cfg.j_dim, c: cfg.c, r: cfg.r, with_x2: true }
+}
+
+fn cfg_t(cfg: &TtmConfig) -> Coo3Shape {
+    Coo3Shape { width: cfg.l_dim, c: cfg.c, r: cfg.r, with_x2: false }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::HwProfile;
+    use crate::sparse::{banded, erdos_renyi, power_law, Coo3};
+    use crate::tuner::space::{mttkrp_candidates, sddmm_candidates, sgap_candidates, taco_candidates};
+
+    fn model() -> CostModel {
+        CostModel::new(&Machine::new(HwProfile::rtx3090()))
+    }
+
+    #[test]
+    fn prices_every_spmm_candidate_finite_and_positive() {
+        let m = model();
+        for a in [
+            erdos_renyi(256, 256, 2000, 1).to_csr(),
+            power_law(256, 256, 4000, 1.8, 2).to_csr(),
+        ] {
+            let stats = MatrixStats::of(&a);
+            let w = Workload::Spmm { stats: &stats, n: 4 };
+            let mut cands = taco_candidates(4);
+            cands.extend(sgap_candidates(4));
+            cands.extend(crate::tuner::space::dg_candidates_small(4));
+            for c in &cands {
+                let t = m.price(c, &w).unwrap();
+                assert!(t.is_finite() && t > 0.0, "{}: {t}", c.name());
+            }
+        }
+    }
+
+    #[test]
+    fn kind_mismatch_prices_none() {
+        let m = model();
+        let a = erdos_renyi(64, 64, 300, 1).to_csr();
+        let stats = MatrixStats::of(&a);
+        let spmm = Workload::Spmm { stats: &stats, n: 4 };
+        let sddmm = Workload::Sddmm { stats: &stats, j: 16 };
+        let plan = Algo::Sddmm(crate::algos::sddmm::SddmmConfig::new(16, 8, 4));
+        assert!(m.price(&plan, &spmm).is_none());
+        assert!(m.price(&plan, &sddmm).is_some());
+        assert!(m.price(&Algo::SgapNnzGroup { c: 4, r: 8 }, &sddmm).is_none());
+    }
+
+    #[test]
+    fn short_rows_prefer_narrow_groups() {
+        // mean degree 2: the Fig. 1(b) trade-off — r=4 must price below
+        // r=32 in both grouped families (the term is the shared
+        // group_reduce, so this mirrors the simulator by construction)
+        let m = model();
+        let a = erdos_renyi(512, 512, 1024, 3).to_csr();
+        let stats = MatrixStats::of(&a);
+        let w = Workload::Spmm { stats: &stats, n: 4 };
+        let t4 = m.price(&Algo::SgapNnzGroup { c: 4, r: 4 }, &w).unwrap();
+        let t32 = m.price(&Algo::SgapNnzGroup { c: 4, r: 32 }, &w).unwrap();
+        assert!(t4 < t32, "nnz-group: r=4 {t4} !< r=32 {t32}");
+        let g4 = m.price(&Algo::SgapRowGroup { g: 32, c: 4, r: 4 }, &w).unwrap();
+        let g32 = m.price(&Algo::SgapRowGroup { g: 32, c: 4, r: 32 }, &w).unwrap();
+        assert!(g4 < g32, "row-group: r=4 {g4} !< r=32 {g32}");
+    }
+
+    #[test]
+    fn skew_penalizes_row_split() {
+        // same size/nnz, one uniform and one hub-heavy: the row-split
+        // lockstep/critical terms must price the skewed input worse
+        // relative to the nnz-balanced kernel
+        let m = model();
+        let uni = banded(1024, 9, 1).to_csr();
+        let skew = power_law(1024, 1024, 9 * 1024, 2.2, 1).to_csr();
+        let (su, ss) = (MatrixStats::of(&uni), MatrixStats::of(&skew));
+        let wu = Workload::Spmm { stats: &su, n: 4 };
+        let ws = Workload::Spmm { stats: &ss, n: 4 };
+        let row = Algo::SgapRowGroup { g: 32, c: 4, r: 8 };
+        let nnz = Algo::SgapNnzGroup { c: 4, r: 8 };
+        let ratio_uni = m.price(&row, &wu).unwrap() / m.price(&nnz, &wu).unwrap();
+        let ratio_skew = m.price(&row, &ws).unwrap() / m.price(&nnz, &ws).unwrap();
+        assert!(
+            ratio_skew > ratio_uni,
+            "skew must hurt row-split: uniform {ratio_uni} vs skewed {ratio_skew}"
+        );
+    }
+
+    #[test]
+    fn shortlist_is_sorted_truncated_and_keeps_model_top1_first() {
+        let m = model();
+        let a = erdos_renyi(256, 256, 2000, 5).to_csr();
+        let stats = MatrixStats::of(&a);
+        let w = Workload::Spmm { stats: &stats, n: 4 };
+        let cands = sgap_candidates(4);
+        let k = 6;
+        let short = m.shortlist(&cands, &w, k);
+        assert_eq!(short.len(), k.min(cands.len()));
+        let prices: Vec<f64> = short.iter().map(|c| m.price(c, &w).unwrap()).collect();
+        for p in prices.windows(2) {
+            assert!(p[0] <= p[1], "shortlist not sorted: {p:?}");
+        }
+        // escape hatch: k >= grid returns everything, still ranked
+        let all = m.shortlist(&cands, &w, cands.len() + 10);
+        assert_eq!(all.len(), cands.len());
+        assert_eq!(all[0], short[0], "top-1 stable across k");
+        // every survivor is cheaper (or equal) than every pruned candidate
+        let cutoff = prices.last().copied().unwrap();
+        for c in cands.iter().filter(|c| !short.contains(c)) {
+            assert!(m.price(c, &w).unwrap() >= cutoff, "{} pruned but cheap", c.name());
+        }
+    }
+
+    #[test]
+    fn sddmm_narrow_reduction_prices_below_wide() {
+        // at fixed g in the compute-bound regime (small j), the
+        // reduction-width axis mirrors the simulator's own par_reduce
+        // charge: r=2 must price below r=32 (at wide j the X2 gather
+        // makes every r memory-bound — ties, not inversions)
+        let m = model();
+        let a = erdos_renyi(128, 128, 1000, 7).to_csr();
+        let stats = MatrixStats::of(&a);
+        let w = Workload::Sddmm { stats: &stats, j: 4 };
+        let narrow = m.price(&Algo::Sddmm(SddmmConfig::new(4, 32, 2)), &w).unwrap();
+        let wide = m.price(&Algo::Sddmm(SddmmConfig::new(4, 32, 32)), &w).unwrap();
+        assert!(narrow < wide, "j=4 g=32: r=2 {narrow} !< r=32 {wide}");
+        let short = m.shortlist(&sddmm_candidates(4), &w, 4);
+        assert_eq!(short.len(), 4);
+        assert!(short.iter().all(|c| matches!(c, Algo::Sddmm(_))));
+    }
+
+    #[test]
+    fn coo3_pricing_keys_on_segment_length() {
+        let m = model();
+        // long segments (dense rows): wide r amortizes; short segments:
+        // narrow r wins — same trade-off the sim shows in tuner tests
+        let dense = Coo3::random((16, 32, 32), 8000, 1);
+        let sparse = Coo3::random((512, 32, 32), 600, 2);
+        let (sd, ss) = (crate::sparse::SegStats::mttkrp(&dense), crate::sparse::SegStats::mttkrp(&sparse));
+        let wd = Workload::Mttkrp { seg: &sd, j: 8 };
+        let wsp = Workload::Mttkrp { seg: &ss, j: 8 };
+        let narrow = Algo::Mttkrp(MttkrpConfig::new(8, 4, 2));
+        let wide = Algo::Mttkrp(MttkrpConfig::new(8, 4, 32));
+        let gain_dense =
+            m.price(&narrow, &wd).unwrap() / m.price(&wide, &wd).unwrap();
+        let gain_sparse =
+            m.price(&narrow, &wsp).unwrap() / m.price(&wide, &wsp).unwrap();
+        assert!(
+            gain_sparse < gain_dense,
+            "short segments must favor narrow r more: dense {gain_dense} sparse {gain_sparse}"
+        );
+        let short = m.shortlist(&mttkrp_candidates(8), &wsp, 5);
+        assert_eq!(short.len(), 5);
+        assert!(short.iter().all(|c| c.is_mttkrp()));
+    }
+}

@@ -1,13 +1,24 @@
 //! Grid-search driver: run a candidate list on a matrix, rank by simulated
 //! time. Candidates are independent, so the sweep fans out across OS
 //! threads (numerics stay deterministic — each run owns its memory).
+//!
+//! The `*_pruned` entry points are the cheap path: the analytic
+//! [`CostModel`] prices the whole grid in O(stats) per candidate and only
+//! the top-K shortlist is simulated. `top_k = 0` (or `>= grid`) is the
+//! escape hatch back to exhaustive search.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::algos::catalog::{Algo, AlgoResult};
 use crate::sim::Machine;
 use crate::sparse::coo3::Coo3;
-use crate::sparse::Csr;
+use crate::sparse::{Csr, MatrixStats, SegStats};
+
+use super::model::{CostModel, Workload};
+
+/// Shortlist size the serving layer prunes candidate grids to by default
+/// (the SpMM grid is ~4–8× larger; see DESIGN.md §cost-model-vs-analytic).
+pub const DEFAULT_TOP_K: usize = 8;
 
 /// Outcome of tuning one matrix: all results, sorted fastest-first.
 #[derive(Debug)]
@@ -17,15 +28,61 @@ pub struct TuneOutcome {
 }
 
 impl TuneOutcome {
-    pub fn best(&self) -> (Algo, f64) {
-        let (a, t, _) = self.ranked[0];
-        (a, t)
+    /// The fastest plan and its simulated time; `None` for an empty sweep
+    /// (every `tune*` constructor rejects empty candidate lists, so a
+    /// `TuneOutcome` built by this module always has a winner — the
+    /// `Option` guards hand-built or filtered outcomes).
+    pub fn best(&self) -> Option<(Algo, f64)> {
+        self.ranked.first().map(|&(a, t, _)| (a, t))
     }
 
     /// Time of a specific algorithm in this sweep, if present.
     pub fn time_of(&self, algo: &Algo) -> Option<f64> {
         self.ranked.iter().find(|(a, _, _)| a == algo).map(|&(_, t, _)| t)
     }
+}
+
+/// Outcome of a model-pruned sweep: the simulated ranking of the
+/// survivors plus the pruning audit trail the metrics layer exposes.
+#[derive(Debug)]
+pub struct PrunedOutcome {
+    /// Simulated results over the shortlist, fastest-first.
+    pub outcome: TuneOutcome,
+    /// Full grid size before pruning.
+    pub grid: usize,
+    /// Candidates actually simulated (`== grid` on the escape hatch).
+    pub survivors: usize,
+    /// Whether the model's top-1 pick also won the simulated shortlist —
+    /// the prune-accuracy signal the coordinator's `Metrics::on_tune`
+    /// counts.
+    pub model_rank_agree: bool,
+}
+
+impl PrunedOutcome {
+    pub fn best(&self) -> Option<(Algo, f64)> {
+        self.outcome.best()
+    }
+}
+
+/// Resolve the shortlist for a grid: `top_k == 0` or `top_k >= len` means
+/// exhaustive (but still model-ranked, so `shortlist[0]` is the model's
+/// pick and rank agreement stays meaningful).
+fn shortlist_for(
+    model: &CostModel,
+    candidates: &[Algo],
+    workload: &Workload,
+    top_k: usize,
+) -> Vec<Algo> {
+    let k = if top_k == 0 { candidates.len() } else { top_k.min(candidates.len()) };
+    model.shortlist(candidates, workload, k)
+}
+
+fn pruned_outcome(outcome: TuneOutcome, grid: usize, shortlist: &[Algo]) -> PrunedOutcome {
+    let model_rank_agree = match (outcome.best(), shortlist.first()) {
+        (Some((winner, _)), Some(top)) => winner == *top,
+        _ => false,
+    };
+    PrunedOutcome { outcome, grid, survivors: shortlist.len(), model_rank_agree }
 }
 
 /// Number of worker threads for sweeps (bounded; sweeps are CPU-heavy).
@@ -60,6 +117,24 @@ pub fn tune(machine: &Machine, candidates: &[Algo], a: &Csr, b: &[f32], n: u32) 
     Ok(TuneOutcome { ranked })
 }
 
+/// Model-pruned SpMM sweep: price the grid analytically, simulate only
+/// the `top_k` cheapest (see [`DEFAULT_TOP_K`]; `0` = exhaustive).
+pub fn tune_pruned(
+    machine: &Machine,
+    candidates: &[Algo],
+    a: &Csr,
+    b: &[f32],
+    n: u32,
+    top_k: usize,
+) -> Result<PrunedOutcome> {
+    anyhow::ensure!(!candidates.is_empty(), "no candidates supplied");
+    let stats = MatrixStats::of(a);
+    let model = CostModel::new(machine);
+    let short = shortlist_for(&model, candidates, &Workload::Spmm { stats: &stats, n }, top_k);
+    let outcome = tune(machine, &short, a, b, n)?;
+    Ok(pruned_outcome(outcome, candidates.len(), &short))
+}
+
 /// Sweep SDDMM plans (unified [`Algo::Sddmm`] vocabulary) on
 /// `(a, x1, x2)`; returns all results sorted fastest-first. Serial on
 /// purpose: this runs on the coordinator's single background-refinement
@@ -90,7 +165,33 @@ pub fn tune_sddmm(
     x1: &[f32],
     x2: &[f32],
 ) -> Result<(Algo, f64)> {
-    tune_sddmm_ranked(machine, candidates, a, x1, x2).map(|out| out.best())
+    tune_sddmm_ranked(machine, candidates, a, x1, x2)?
+        .best()
+        .context("empty SDDMM sweep")
+}
+
+/// Model-pruned SDDMM sweep (serial, like [`tune_sddmm_ranked`]).
+pub fn tune_sddmm_pruned(
+    machine: &Machine,
+    candidates: &[Algo],
+    a: &Csr,
+    x1: &[f32],
+    x2: &[f32],
+    top_k: usize,
+) -> Result<PrunedOutcome> {
+    anyhow::ensure!(!candidates.is_empty(), "no candidates supplied");
+    let stats = MatrixStats::of(a);
+    let j = candidates
+        .iter()
+        .find_map(|c| match c {
+            Algo::Sddmm(cfg) => Some(cfg.j_dim),
+            _ => None,
+        })
+        .unwrap_or(1);
+    let model = CostModel::new(machine);
+    let short = shortlist_for(&model, candidates, &Workload::Sddmm { stats: &stats, j }, top_k);
+    let outcome = tune_sddmm_ranked(machine, &short, a, x1, x2)?;
+    Ok(pruned_outcome(outcome, candidates.len(), &short))
 }
 
 /// Sweep MTTKRP plans ([`Algo::Mttkrp`]) on `(a, x1, x2)`; returns all
@@ -122,7 +223,33 @@ pub fn tune_mttkrp(
     x1: &[f32],
     x2: &[f32],
 ) -> Result<(Algo, f64)> {
-    tune_mttkrp_ranked(machine, candidates, a, x1, x2).map(|out| out.best())
+    tune_mttkrp_ranked(machine, candidates, a, x1, x2)?
+        .best()
+        .context("empty MTTKRP sweep")
+}
+
+/// Model-pruned MTTKRP sweep over the COO-3 segment grid.
+pub fn tune_mttkrp_pruned(
+    machine: &Machine,
+    candidates: &[Algo],
+    a: &Coo3,
+    x1: &[f32],
+    x2: &[f32],
+    top_k: usize,
+) -> Result<PrunedOutcome> {
+    anyhow::ensure!(!candidates.is_empty(), "no candidates supplied");
+    let seg = SegStats::mttkrp(a);
+    let j = candidates
+        .iter()
+        .find_map(|c| match c {
+            Algo::Mttkrp(cfg) => Some(cfg.j_dim),
+            _ => None,
+        })
+        .unwrap_or(1);
+    let model = CostModel::new(machine);
+    let short = shortlist_for(&model, candidates, &Workload::Mttkrp { seg: &seg, j }, top_k);
+    let outcome = tune_mttkrp_ranked(machine, &short, a, x1, x2)?;
+    Ok(pruned_outcome(outcome, candidates.len(), &short))
 }
 
 /// Sweep TTM plans ([`Algo::Ttm`]) on `(a, x1)`; fastest-first.
@@ -149,7 +276,30 @@ pub fn tune_ttm(
     a: &Coo3,
     x1: &[f32],
 ) -> Result<(Algo, f64)> {
-    tune_ttm_ranked(machine, candidates, a, x1).map(|out| out.best())
+    tune_ttm_ranked(machine, candidates, a, x1)?.best().context("empty TTM sweep")
+}
+
+/// Model-pruned TTM sweep over the COO-3 fiber grid.
+pub fn tune_ttm_pruned(
+    machine: &Machine,
+    candidates: &[Algo],
+    a: &Coo3,
+    x1: &[f32],
+    top_k: usize,
+) -> Result<PrunedOutcome> {
+    anyhow::ensure!(!candidates.is_empty(), "no candidates supplied");
+    let seg = SegStats::ttm(a);
+    let l = candidates
+        .iter()
+        .find_map(|c| match c {
+            Algo::Ttm(cfg) => Some(cfg.l_dim),
+            _ => None,
+        })
+        .unwrap_or(1);
+    let model = CostModel::new(machine);
+    let short = shortlist_for(&model, candidates, &Workload::Ttm { seg: &seg, l }, top_k);
+    let outcome = tune_ttm_ranked(machine, &short, a, x1)?;
+    Ok(pruned_outcome(outcome, candidates.len(), &short))
 }
 
 #[cfg(test)]
@@ -173,9 +323,63 @@ mod tests {
         for w in out.ranked.windows(2) {
             assert!(w[0].1 <= w[1].1);
         }
-        let (best, t) = out.best();
+        let (best, t) = out.best().unwrap();
         assert!(t > 0.0);
         assert!(out.time_of(&best).unwrap() <= out.ranked.last().unwrap().1);
+        // the Option contract: a drained outcome has no winner
+        assert!(TuneOutcome { ranked: vec![] }.best().is_none());
+    }
+
+    #[test]
+    fn pruned_sweep_simulates_only_the_shortlist() {
+        let a = erdos_renyi(128, 128, 1024, 3).to_csr();
+        let n = 4u32;
+        let mut rng = SplitMix64::new(2);
+        let b: Vec<f32> = (0..a.cols * n as usize).map(|_| rng.value()).collect();
+        let m = Machine::new(HwProfile::rtx3090());
+        let cands = sgap_candidates(n);
+        let pruned = tune_pruned(&m, &cands, &a, &b, n, 5).unwrap();
+        assert_eq!(pruned.grid, cands.len());
+        assert_eq!(pruned.survivors, 5);
+        assert_eq!(pruned.outcome.ranked.len(), 5);
+        let (best, t) = pruned.best().unwrap();
+        assert!(t > 0.0);
+        assert!(cands.contains(&best));
+        // escape hatch: top_k = 0 simulates everything
+        let full = tune_pruned(&m, &cands, &a, &b, n, 0).unwrap();
+        assert_eq!(full.survivors, cands.len());
+        // the pruned winner can never beat the exhaustive winner
+        let (_, t_full) = full.best().unwrap();
+        assert!(t >= t_full - 1e-18);
+    }
+
+    #[test]
+    fn pruned_tensor_sweeps_cover_all_scenarios() {
+        use crate::tuner::space::{mttkrp_candidates, ttm_candidates};
+        let a = Coo3::random((32, 24, 16), 500, 11);
+        let m = Machine::new(HwProfile::rtx3090());
+        let mut rng = SplitMix64::new(6);
+        let j = 8usize;
+        let x1: Vec<f32> = (0..a.dim1 * j).map(|_| rng.value()).collect();
+        let x2: Vec<f32> = (0..a.dim2 * j).map(|_| rng.value()).collect();
+        let cands = mttkrp_candidates(j as u32);
+        let pr = tune_mttkrp_pruned(&m, &cands, &a, &x1, &x2, 4).unwrap();
+        assert_eq!(pr.survivors, 4.min(cands.len()));
+        assert!(pr.best().unwrap().0.is_mttkrp());
+
+        let lx1: Vec<f32> = (0..a.dim2 * 4).map(|_| rng.value()).collect();
+        let tcands = ttm_candidates(4);
+        let pt = tune_ttm_pruned(&m, &tcands, &a, &lx1, 4).unwrap();
+        assert!(pt.survivors <= 4 && pt.best().unwrap().0.is_ttm());
+
+        let csr = erdos_renyi(96, 96, 700, 5).to_csr();
+        let sj = 16usize;
+        let sx1: Vec<f32> = (0..csr.rows * sj).map(|_| rng.value()).collect();
+        let sx2: Vec<f32> = (0..sj * csr.cols).map(|_| rng.value()).collect();
+        let scands = crate::tuner::space::sddmm_candidates(sj as u32);
+        let ps = tune_sddmm_pruned(&m, &scands, &csr, &sx1, &sx2, 4).unwrap();
+        assert_eq!(ps.grid, scands.len());
+        assert!(ps.best().unwrap().0.is_sddmm());
     }
 
     #[test]

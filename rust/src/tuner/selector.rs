@@ -8,6 +8,8 @@
 //! decides the coarsening. Thresholds can be re-fit against a training
 //! suite with [`Selector::fit`].
 
+use anyhow::Context;
+
 use crate::algos::catalog::{c_values, Algo};
 use crate::algos::mttkrp::{MttkrpConfig, TtmConfig};
 use crate::algos::sddmm::SddmmConfig;
@@ -15,6 +17,7 @@ use crate::sim::Machine;
 use crate::sparse::coo3::Coo3;
 use crate::sparse::{Csr, MatrixStats};
 
+use super::model::{CostModel, Workload};
 use super::search::tune;
 use super::space::sgap_candidates;
 
@@ -61,6 +64,54 @@ impl Selector {
                 None => Algo::SgapNnzGroup { c, r },
             }
         }
+    }
+
+    /// Pick an SpMM plan by *pricing the whole sgap grid* with the
+    /// analytic [`CostModel`] and taking the argmin — still zero
+    /// simulation (O(stats) per candidate), strictly better informed than
+    /// the hand decision tree. Falls back to [`Selector::select`] when the
+    /// width admits no sgap candidates. This is the coordinator's default
+    /// fast path; the tree remains the model-free escape hatch.
+    pub fn select_model(&self, model: &CostModel, stats: &MatrixStats, n: u32) -> Algo {
+        let grid = sgap_candidates(n);
+        if grid.is_empty() {
+            return self.select(stats, n);
+        }
+        model.shortlist(&grid, &Workload::Spmm { stats, n }, 1)[0]
+    }
+
+    /// SDDMM analogue of [`Selector::select_model`]: model-argmin over the
+    /// §4.3 grid, tree fallback when the grid is empty.
+    pub fn select_sddmm_model(&self, model: &CostModel, stats: &MatrixStats, j_dim: u32) -> Algo {
+        let grid = super::space::sddmm_candidates(j_dim);
+        if grid.is_empty() {
+            return self.select_sddmm(stats, j_dim);
+        }
+        model.shortlist(&grid, &Workload::Sddmm { stats, j: j_dim }, 1)[0]
+    }
+
+    /// MTTKRP analogue of [`Selector::select_model`]: model-argmin over
+    /// the COO-3 grid from the tensor's segment statistics. Like
+    /// [`Selector::select_mttkrp`], `None` means no legal launch shape —
+    /// the serving layer routes such widths to the CPU.
+    pub fn select_mttkrp_model(&self, model: &CostModel, a: &Coo3, j_dim: u32) -> Option<Algo> {
+        let grid = super::space::mttkrp_candidates(j_dim);
+        if grid.is_empty() {
+            return self.select_mttkrp(a, j_dim);
+        }
+        let seg = crate::sparse::SegStats::mttkrp(a);
+        Some(model.shortlist(&grid, &Workload::Mttkrp { seg: &seg, j: j_dim }, 1)[0])
+    }
+
+    /// TTM analogue of [`Selector::select_mttkrp_model`] over the
+    /// leading-fiber segments.
+    pub fn select_ttm_model(&self, model: &CostModel, a: &Coo3, l_dim: u32) -> Option<Algo> {
+        let grid = super::space::ttm_candidates(l_dim);
+        if grid.is_empty() {
+            return self.select_ttm(a, l_dim);
+        }
+        let seg = crate::sparse::SegStats::ttm(a);
+        Some(model.shortlist(&grid, &Workload::Ttm { seg: &seg, l: l_dim }, 1)[0])
     }
 
     /// Pick an SDDMM plan from the matrix statistics (§4.3: the same
@@ -145,7 +196,7 @@ impl Selector {
         let chosen = self.select(&stats, n);
         let t_chosen = chosen.run(machine, a, b, n)?.time_s;
         let sweep = tune(machine, &sgap_candidates(n), a, b, n)?;
-        let (_, t_best) = sweep.best();
+        let (_, t_best) = sweep.best().context("empty sgap grid")?;
         Ok(t_chosen / t_best)
     }
 }
@@ -251,6 +302,47 @@ mod tests {
         // widths with no legal coarsening are declined, not mis-served
         assert!(s.select_mttkrp(&dense_rows, 20).is_none());
         assert!(s.select_ttm(&dense_rows, 20).is_none());
+    }
+
+    #[test]
+    fn model_selection_returns_runnable_sgap_plans() {
+        let machine = Machine::new(HwProfile::rtx3090());
+        let model = CostModel::new(&machine);
+        let s = Selector::default();
+        for a in [
+            erdos_renyi(128, 128, 512, 5).to_csr(),
+            power_law(128, 128, 2000, 1.8, 6).to_csr(),
+        ] {
+            let stats = MatrixStats::of(&a);
+            let algo = s.select_model(&model, &stats, 4);
+            assert!(
+                matches!(algo, Algo::SgapNnzGroup { .. } | Algo::SgapRowGroup { .. }),
+                "model pick {} outside the sgap grid",
+                algo.name()
+            );
+            let b = b_for(&a, 4, 3);
+            algo.run(&machine, &a, &b, 4).unwrap();
+            // SDDMM pick stays in vocabulary and validates
+            let Algo::Sddmm(cfg) = s.select_sddmm_model(&model, &stats, 16) else {
+                panic!("expected an SDDMM plan")
+            };
+            cfg.validate().unwrap();
+            assert_eq!(cfg.j_dim, 16);
+        }
+        // the tensor scenarios route through the model too, with the same
+        // None contract for widths no launch shape covers
+        let t = Coo3::random((32, 24, 16), 400, 3);
+        let Some(Algo::Mttkrp(cfg)) = s.select_mttkrp_model(&model, &t, 8) else {
+            panic!("expected an MTTKRP plan")
+        };
+        cfg.validate().unwrap();
+        assert_eq!(cfg.j_dim, 8);
+        let Some(Algo::Ttm(cfg)) = s.select_ttm_model(&model, &t, 8) else {
+            panic!("expected a TTM plan")
+        };
+        cfg.validate().unwrap();
+        assert!(s.select_mttkrp_model(&model, &t, 20).is_none());
+        assert!(s.select_ttm_model(&model, &t, 20).is_none());
     }
 
     #[test]

@@ -1,0 +1,133 @@
+//! The `BENCH_*.json` perf trajectory: schema validation of the committed
+//! files (repo root) and of a live `sgap bench --quick` run, plus the
+//! blessed regeneration flow.
+//!
+//! The committed files pin the *schema and invariants*, not the exact
+//! simulated numbers — cost-model calibration legitimately moves the
+//! times, so refreshing them is a blessed operation:
+//! `SGAP_BLESS=1 cargo test --test bench_json` (equivalently
+//! `cargo run --release -- bench --quick --out ..` from `rust/`).
+
+use std::path::PathBuf;
+
+use sgap::bench_util::{
+    run_spmm_bench, run_tensor_bench, validate_bench_json, BENCH_SCHEMA_VERSION,
+};
+use sgap::sim::{HwProfile, Machine};
+use sgap::tuner::DEFAULT_TOP_K;
+
+fn committed(name: &str) -> PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join(name)
+}
+
+/// With `SGAP_BLESS=1`, regenerate the committed file from a live quick
+/// run; otherwise validate what is committed.
+fn check_or_bless(suite: &'static str) {
+    let path = committed(&format!("BENCH_{suite}.json"));
+    let machine = Machine::new(HwProfile::rtx3090());
+    if std::env::var_os("SGAP_BLESS").is_some() {
+        let report = match suite {
+            "spmm" => run_spmm_bench(&machine, true, DEFAULT_TOP_K).unwrap(),
+            "tensor" => run_tensor_bench(&machine, true, DEFAULT_TOP_K).unwrap(),
+            other => panic!("unknown suite {other}"),
+        };
+        report.write(&path).unwrap_or_else(|e| panic!("bless {}: {e}", path.display()));
+        return;
+    }
+    let src = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+        panic!(
+            "missing committed {}: {e}\n(regenerate with `SGAP_BLESS=1 cargo test --test \
+             bench_json` or `sgap bench --quick`)",
+            path.display()
+        )
+    });
+    validate_bench_json(&src, suite).unwrap_or_else(|e| {
+        panic!("committed {} fails the documented schema: {e}", path.display())
+    });
+}
+
+#[test]
+fn committed_spmm_report_matches_schema() {
+    check_or_bless("spmm");
+}
+
+#[test]
+fn committed_tensor_report_matches_schema() {
+    check_or_bless("tensor");
+}
+
+#[test]
+fn committed_reports_cover_the_quick_suites() {
+    if std::env::var_os("SGAP_BLESS").is_some() {
+        return; // the blessing tests above rewrite the files this run
+    }
+    let spmm = std::fs::read_to_string(committed("BENCH_spmm.json")).unwrap();
+    // every quick-suite matrix appears, in both the families and the
+    // dgsparse tables
+    for d in sgap::sparse::dataset::mini_suite() {
+        assert_eq!(
+            spmm.matches(&format!("\"{}\"", d.name)).count(),
+            2,
+            "{} must appear once per spmm table",
+            d.name
+        );
+    }
+    for bench in ["\"families\"", "\"dgsparse\""] {
+        assert!(spmm.contains(bench), "missing {bench} rows");
+    }
+    let tensor = std::fs::read_to_string(committed("BENCH_tensor.json")).unwrap();
+    for bench in ["\"mttkrp\"", "\"ttm\""] {
+        assert!(tensor.contains(bench), "missing {bench} rows");
+    }
+}
+
+#[test]
+fn live_quick_bench_round_trips_through_the_schema_gate() {
+    let machine = Machine::new(HwProfile::rtx3090());
+    let report = run_spmm_bench(&machine, true, DEFAULT_TOP_K).unwrap();
+    // two tables per quick-suite matrix
+    assert_eq!(report.rows.len(), 2 * sgap::sparse::dataset::mini_suite().len());
+    let json = report.to_json();
+    validate_bench_json(&json, "spmm").unwrap();
+    assert!(json.contains(&format!("\"schema_version\": {BENCH_SCHEMA_VERSION}")));
+    // pruning really happened: every families row simulated at most K of
+    // its grid
+    for row in report.rows.iter().filter(|r| r.bench == "families") {
+        assert!(row.survivors <= DEFAULT_TOP_K && row.grid > row.survivors, "{row:?}");
+    }
+    // the tuned winner never loses to the stock baseline by definition of
+    // a sweep that contains near-stock points — allow the documented
+    // prune ratio of slack
+    for row in &report.rows {
+        assert!(
+            row.speedup_vs_baseline > 1.0 / 1.5,
+            "{}: tuned kernel {}x slower than stock",
+            row.matrix,
+            1.0 / row.speedup_vs_baseline
+        );
+    }
+
+    let tensor = run_tensor_bench(&machine, true, DEFAULT_TOP_K).unwrap();
+    validate_bench_json(&tensor.to_json(), "tensor").unwrap();
+    assert!(tensor.rows.iter().any(|r| r.bench == "mttkrp"));
+    assert!(tensor.rows.iter().any(|r| r.bench == "ttm"));
+}
+
+#[test]
+fn validator_rejects_drift() {
+    let machine = Machine::new(HwProfile::rtx3090());
+    let report = run_tensor_bench(&machine, true, 4).unwrap();
+    let json = report.to_json();
+    validate_bench_json(&json, "tensor").unwrap();
+    // wrong suite name
+    assert!(validate_bench_json(&json, "spmm").is_err());
+    // dropped field
+    let dropped = json.replacen("      \"gflops\"", "      \"gflopz\"", 1);
+    assert!(validate_bench_json(&dropped, "tensor").is_err(), "renamed row field accepted");
+    // injected top-level field
+    let injected = json.replacen("  \"suite\"", "  \"extra\": 1,\n  \"suite\"", 1);
+    assert!(validate_bench_json(&injected, "tensor").is_err(), "extra top-level field accepted");
+    // corrupted speedup ratio
+    let bad = json.replacen("\"speedup_vs_baseline\": ", "\"speedup_vs_baseline\": 99", 1);
+    assert!(validate_bench_json(&bad, "tensor").is_err(), "inconsistent speedup accepted");
+}

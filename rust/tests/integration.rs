@@ -59,7 +59,7 @@ fn tuner_beats_or_matches_any_fixed_choice() {
     let b: Vec<f32> = (0..a.cols * n as usize).map(|_| rng.value()).collect();
     let cands = tuner::space::sgap_candidates(n);
     let out = tuner::tune(&machine, &cands, &a, &b, n).unwrap();
-    let (_, best_t) = out.best();
+    let (_, best_t) = out.best().unwrap();
     for (_, t, _) in &out.ranked {
         assert!(best_t <= *t + 1e-15);
     }

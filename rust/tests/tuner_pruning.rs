@@ -1,0 +1,196 @@
+//! Pruning-fidelity properties of the analytic cost model
+//! (`tuner::model`) — the invariants DESIGN.md §cost-model-vs-analytic
+//! documents:
+//!
+//! 1. **Containment-or-ratio**: over the dataset suite, the model-pruned
+//!    top-K shortlist (K = `DEFAULT_TOP_K`) either contains the
+//!    exhaustive-search winner, or the pruned winner's simulated time is
+//!    within `PRUNE_RATIO` of the exhaustive winner's.
+//! 2. **Rank correlation**: the model's candidate ranking correlates
+//!    positively with the simulator's (mean Spearman ρ over the suite at
+//!    least `MIN_MEAN_SPEARMAN`).
+
+use sgap::sim::{HwProfile, Machine};
+use sgap::sparse::{dataset, Coo3, MatrixStats, SplitMix64};
+use sgap::tuner::{self, CostModel, Workload, DEFAULT_TOP_K};
+
+/// The stated time ratio of invariant 1 (conservative bound; the
+/// coordinator's `tune_model_agree / tunes` counter tracks the typical
+/// case, which is exact agreement).
+const PRUNE_RATIO: f64 = 1.5;
+
+/// The stated rank-correlation floor of invariant 2.
+const MIN_MEAN_SPEARMAN: f64 = 0.2;
+
+fn b_for(cols: usize, n: u32, seed: u64) -> Vec<f32> {
+    let mut rng = SplitMix64::new(seed);
+    (0..cols * n as usize).map(|_| rng.value()).collect()
+}
+
+#[test]
+fn pruned_spmm_winner_matches_or_stays_within_ratio() {
+    let machine = Machine::new(HwProfile::rtx3090());
+    let n = 4u32;
+    let mut cands = tuner::taco_candidates(n);
+    cands.extend(tuner::sgap_candidates(n));
+    for d in dataset::mini_suite() {
+        let a = d.matrix.to_csr();
+        let b = b_for(a.cols, n, 17);
+        let full = tuner::tune(&machine, &cands, &a, &b, n).unwrap();
+        let (winner, t_full) = full.best().unwrap();
+        let pruned = tuner::tune_pruned(&machine, &cands, &a, &b, n, DEFAULT_TOP_K).unwrap();
+        assert_eq!(pruned.grid, cands.len(), "{}", d.name);
+        assert!(pruned.survivors <= DEFAULT_TOP_K, "{}", d.name);
+        let (_, t_pruned) = pruned.best().unwrap();
+        let contained = pruned.outcome.ranked.iter().any(|(a, _, _)| *a == winner);
+        assert!(
+            contained || t_pruned <= PRUNE_RATIO * t_full + 1e-15,
+            "{}: winner {} pruned away and shortlist best {:.3}us > {PRUNE_RATIO}x \
+             exhaustive best {:.3}us",
+            d.name,
+            winner.name(),
+            t_pruned * 1e6,
+            t_full * 1e6,
+        );
+    }
+}
+
+#[test]
+fn pruned_dg_winner_matches_or_stays_within_ratio() {
+    let machine = Machine::new(HwProfile::rtx3090());
+    let n = 4u32;
+    let cands = tuner::space::dg_candidates_small(n);
+    for d in dataset::mini_suite().into_iter().take(2) {
+        let a = d.matrix.to_csr();
+        let b = b_for(a.cols, n, 41);
+        let full = tuner::tune(&machine, &cands, &a, &b, n).unwrap();
+        let (winner, t_full) = full.best().unwrap();
+        let pruned = tuner::tune_pruned(&machine, &cands, &a, &b, n, DEFAULT_TOP_K).unwrap();
+        let (_, t_pruned) = pruned.best().unwrap();
+        let contained = pruned.outcome.ranked.iter().any(|(a, _, _)| *a == winner);
+        assert!(
+            contained || t_pruned <= PRUNE_RATIO * t_full + 1e-15,
+            "{}: dg winner {} pruned away ({:.3}us vs {:.3}us)",
+            d.name,
+            winner.name(),
+            t_pruned * 1e6,
+            t_full * 1e6,
+        );
+    }
+}
+
+#[test]
+fn pruned_tensor_winners_match_or_stay_within_ratio() {
+    let machine = Machine::new(HwProfile::rtx3090());
+    let j = 8u32;
+    let mut rng = SplitMix64::new(5);
+    for (name, t) in [
+        ("uniform", Coo3::random((64, 48, 32), 2000, 1)),
+        ("sparse-rows", Coo3::random((256, 32, 32), 600, 2)),
+    ] {
+        let x1: Vec<f32> = (0..t.dim1 * j as usize).map(|_| rng.value()).collect();
+        let x2: Vec<f32> = (0..t.dim2 * j as usize).map(|_| rng.value()).collect();
+        let cands = tuner::mttkrp_candidates(j);
+        let full = tuner::tune_mttkrp_ranked(&machine, &cands, &t, &x1, &x2).unwrap();
+        let (winner, t_full) = full.best().unwrap();
+        let pruned =
+            tuner::tune_mttkrp_pruned(&machine, &cands, &t, &x1, &x2, DEFAULT_TOP_K).unwrap();
+        let (_, t_pruned) = pruned.best().unwrap();
+        let contained = pruned.outcome.ranked.iter().any(|(a, _, _)| *a == winner);
+        assert!(
+            contained || t_pruned <= PRUNE_RATIO * t_full + 1e-15,
+            "mttkrp {name}: winner {} pruned away",
+            winner.name()
+        );
+
+        let lx1: Vec<f32> = (0..t.dim2 * j as usize).map(|_| rng.value()).collect();
+        let cands = tuner::ttm_candidates(j);
+        let full = tuner::tune_ttm_ranked(&machine, &cands, &t, &lx1).unwrap();
+        let (winner, t_full) = full.best().unwrap();
+        let pruned = tuner::tune_ttm_pruned(&machine, &cands, &t, &lx1, DEFAULT_TOP_K).unwrap();
+        let (_, t_pruned) = pruned.best().unwrap();
+        let contained = pruned.outcome.ranked.iter().any(|(a, _, _)| *a == winner);
+        assert!(
+            contained || t_pruned <= PRUNE_RATIO * t_full + 1e-15,
+            "ttm {name}: winner {} pruned away",
+            winner.name()
+        );
+    }
+}
+
+#[test]
+fn pruned_sddmm_winner_matches_or_stays_within_ratio() {
+    let machine = Machine::new(HwProfile::rtx3090());
+    let j = 16usize;
+    let a = sgap::sparse::erdos_renyi(96, 96, 700, 5).to_csr();
+    let mut rng = SplitMix64::new(4);
+    let x1: Vec<f32> = (0..a.rows * j).map(|_| rng.value()).collect();
+    let x2: Vec<f32> = (0..j * a.cols).map(|_| rng.value()).collect();
+    let cands = tuner::sddmm_candidates(j as u32);
+    let full = tuner::tune_sddmm_ranked(&machine, &cands, &a, &x1, &x2).unwrap();
+    let (winner, t_full) = full.best().unwrap();
+    let pruned =
+        tuner::tune_sddmm_pruned(&machine, &cands, &a, &x1, &x2, DEFAULT_TOP_K).unwrap();
+    let (_, t_pruned) = pruned.best().unwrap();
+    let contained = pruned.outcome.ranked.iter().any(|(c, _, _)| *c == winner);
+    assert!(
+        contained || t_pruned <= PRUNE_RATIO * t_full + 1e-15,
+        "sddmm winner {} pruned away",
+        winner.name()
+    );
+}
+
+/// Spearman rank correlation between two equally-long samples.
+fn spearman(xs: &[f64], ys: &[f64]) -> f64 {
+    fn ranks(v: &[f64]) -> Vec<f64> {
+        let mut idx: Vec<usize> = (0..v.len()).collect();
+        idx.sort_by(|&a, &b| v[a].partial_cmp(&v[b]).unwrap());
+        let mut r = vec![0.0; v.len()];
+        for (rank, &i) in idx.iter().enumerate() {
+            r[i] = rank as f64;
+        }
+        r
+    }
+    let (rx, ry) = (ranks(xs), ranks(ys));
+    let n = xs.len() as f64;
+    let mean = (n - 1.0) / 2.0;
+    let mut cov = 0.0;
+    let mut vx = 0.0;
+    let mut vy = 0.0;
+    for i in 0..xs.len() {
+        cov += (rx[i] - mean) * (ry[i] - mean);
+        vx += (rx[i] - mean).powi(2);
+        vy += (ry[i] - mean).powi(2);
+    }
+    cov / (vx.sqrt() * vy.sqrt()).max(1e-12)
+}
+
+#[test]
+fn model_ranking_correlates_with_the_simulator() {
+    let machine = Machine::new(HwProfile::rtx3090());
+    let model = CostModel::new(&machine);
+    let n = 4u32;
+    let mut cands = tuner::taco_candidates(n);
+    cands.extend(tuner::sgap_candidates(n));
+    let mut rhos = Vec::new();
+    for d in dataset::mini_suite() {
+        let a = d.matrix.to_csr();
+        let stats = MatrixStats::of(&a);
+        let b = b_for(a.cols, n, 17);
+        let sim = tuner::tune(&machine, &cands, &a, &b, n).unwrap();
+        let workload = Workload::Spmm { stats: &stats, n };
+        let (mut model_t, mut sim_t) = (Vec::new(), Vec::new());
+        for c in &cands {
+            model_t.push(model.price(c, &workload).unwrap());
+            sim_t.push(sim.time_of(c).unwrap());
+        }
+        let rho = spearman(&model_t, &sim_t);
+        println!("{:<26} spearman {:.3}", d.name, rho);
+        rhos.push(rho);
+    }
+    let mean = rhos.iter().sum::<f64>() / rhos.len() as f64;
+    assert!(
+        mean >= MIN_MEAN_SPEARMAN,
+        "mean Spearman {mean:.3} below the documented floor {MIN_MEAN_SPEARMAN} ({rhos:?})"
+    );
+}

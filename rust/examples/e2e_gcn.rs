@@ -114,7 +114,7 @@ fn main() -> anyhow::Result<()> {
     let mut pjrt_served = 0;
     for rx in rxs {
         let resp = rx.recv().unwrap().map_err(|e| anyhow::anyhow!(e))?;
-        if resp.backend.starts_with("pjrt:") {
+        if resp.backend.is_pjrt() {
             pjrt_served += 1;
         }
     }

@@ -1,17 +1,19 @@
-//! Serving-layer walkthrough: the multi-worker coordinator with its
-//! tuner-aware plan cache, on mixed SpMM + SDDMM traffic.
+//! Serving-layer walkthrough: the `Session` facade over the multi-worker
+//! coordinator, on mixed SpMM + SDDMM traffic with **shared operand
+//! handles**.
 //!
-//! Eight client threads push repeated matrix shapes; the first sight of
-//! each shape pays one selector decision (plan-cache miss) and enqueues a
-//! background grid-search refinement; every repeat is a cache hit served
-//! with the (eventually tuned) plan. The run ends with the service
-//! metrics: per-backend latency histograms and cache counters.
+//! Each repeated shape is registered exactly once — the fingerprint pass
+//! runs at registration, and every one of the eight client threads then
+//! submits zero-copy `Op`s against the same `Arc`-backed handles. The
+//! first sight of each shape pays one selector decision (plan-cache miss)
+//! and enqueues a background grid-search refinement; every repeat is a
+//! cache hit served with the (eventually tuned) plan. The run ends with
+//! the service metrics — and the handles' reference counts, back to
+//! baseline: the proof that serving never cloned an operand.
 //!
 //! Run: `cargo run --release --example serving [-- --requests 200]`
 
-use std::sync::Arc;
-
-use sgap::coordinator::{Coordinator, CoordinatorConfig, Request};
+use sgap::coordinator::{CoordinatorConfig, Op, Session};
 use sgap::sparse::{erdos_renyi, power_law, SplitMix64};
 
 fn main() -> anyhow::Result<()> {
@@ -21,51 +23,53 @@ fn main() -> anyhow::Result<()> {
         .and_then(|v| v.parse().ok())
         .unwrap_or(50);
 
-    let coord = Arc::new(Coordinator::start(CoordinatorConfig {
+    let session = Session::start(CoordinatorConfig {
         workers: 4,
         background_tune: true,
         ..CoordinatorConfig::default()
-    })?);
-    println!("coordinator up: 4 workers, background tuner on");
+    })?;
+    println!("session up: 4 workers, background tuner on");
+
+    // Register the four repeated shapes once: two uniform SpMM operand
+    // sets, one skewed, one SDDMM. Registration runs the fingerprint
+    // pass; everything after is Arc bumps.
+    let mut rng = SplitMix64::new(99);
+    let mut dense = |len: usize| -> Vec<f32> { (0..len).map(|_| rng.value()).collect() };
+
+    let a0 = session.register_matrix(erdos_renyi(192, 192, 1800, 11).to_csr());
+    let b0 = session.register_dense(dense(192 * 4));
+    let a1 = session.register_matrix(erdos_renyi(128, 128, 500, 12).to_csr());
+    let b1 = session.register_dense(dense(128 * 8));
+    let a2 = session.register_matrix(power_law(192, 192, 2500, 1.9, 13).to_csr());
+    let b2 = session.register_dense(dense(192 * 4));
+    let a3 = session.register_matrix(erdos_renyi(96, 96, 700, 14).to_csr());
+    let (j, rows, cols) = (16usize, 96usize, 96usize);
+    let x1 = session.register_dense(dense(rows * j));
+    let x2 = session.register_dense(dense(j * cols));
+
+    let ops = [
+        Op::spmm(&a0, &b0, 4),
+        Op::spmm(&a1, &b1, 8),
+        Op::spmm(&a2, &b2, 4),
+        Op::sddmm(&a3, &x1, &x2, j),
+    ];
 
     let clients = 8usize;
     let mut handles = Vec::new();
     for t in 0..clients {
-        let coord = coord.clone();
+        let session = session.clone();
+        let ops = ops.clone();
         handles.push(std::thread::spawn(move || {
-            let mut rng = SplitMix64::new(t as u64);
             for i in 0..per_client {
-                // four repeated shapes: two uniform, one skewed, one SDDMM
-                let shape = (t + i) % 4;
-                let resp = match shape {
-                    0 => {
-                        let a = erdos_renyi(192, 192, 1800, 11).to_csr();
-                        let b: Vec<f32> = (0..a.cols * 4).map(|_| rng.value()).collect();
-                        coord.spmm_blocking(a, b, 4)
-                    }
-                    1 => {
-                        let a = erdos_renyi(128, 128, 500, 12).to_csr();
-                        let b: Vec<f32> = (0..a.cols * 8).map(|_| rng.value()).collect();
-                        coord.spmm_blocking(a, b, 8)
-                    }
-                    2 => {
-                        let a = power_law(192, 192, 2500, 1.9, 13).to_csr();
-                        let b: Vec<f32> = (0..a.cols * 4).map(|_| rng.value()).collect();
-                        coord.spmm_blocking(a, b, 4)
-                    }
-                    _ => {
-                        let a = erdos_renyi(96, 96, 700, 14).to_csr();
-                        let j = 16usize;
-                        let x1: Vec<f32> = (0..a.rows * j).map(|_| rng.value()).collect();
-                        let x2: Vec<f32> = (0..j * a.cols).map(|_| rng.value()).collect();
-                        coord.sddmm_blocking(a, x1, x2, j)
-                    }
-                };
-                let resp = resp.expect("request failed");
+                // cloning an Op clones handles, not operands
+                let op = ops[(t + i) % ops.len()].clone();
+                let resp = session.submit(op).wait().expect("request failed");
                 if i == 0 {
                     println!(
                         "client {t}: first response via {} (plan {:?}, cache hit {})",
-                        resp.backend, resp.plan, resp.cache_hit
+                        resp.backend,
+                        resp.plan_label(),
+                        resp.cache_hit
                     );
                 }
             }
@@ -74,7 +78,9 @@ fn main() -> anyhow::Result<()> {
     for h in handles {
         h.join().unwrap();
     }
+    drop(ops);
 
+    let coord = session.coordinator();
     let snap = coord.metrics.snapshot();
     println!(
         "\nserved {} requests, {} batches, p50 {} us p99 {} us",
@@ -89,7 +95,12 @@ fn main() -> anyhow::Result<()> {
     }
 
     let cache = coord.plan_cache.clone();
-    Arc::try_unwrap(coord).ok().expect("all clients joined").shutdown();
+    session.shutdown();
+    println!(
+        "operand refcounts after shutdown: a0 {}, b0 {} (1 = no clone ever escaped)",
+        a0.strong_count(),
+        b0.strong_count()
+    );
     let cs = cache.stats();
     println!(
         "plan cache after shutdown: {} entries, {} tuned upgrades, {} evictions",

@@ -1,6 +1,7 @@
 //! Shape-bucket batcher: groups queued requests by routing key (the
-//! backend label a plan resolves to) so a worker amortizes executable
-//! lookup/dispatch over a batch.
+//! typed [`BackendKind`](super::BackendKind) an executor admission
+//! resolves to) so a worker amortizes executable lookup/dispatch over a
+//! batch.
 //!
 //! Invariants (property-tested in `rust/tests/coordinator_props.rs`):
 //! * FIFO within a bucket — requests to the same key keep arrival order;

@@ -1,0 +1,433 @@
+//! Pluggable execution backends — the `Executor` trait and registry that
+//! replace the coordinator's hardcoded `Backend::{Pjrt, Sim, Cpu}` enum.
+//!
+//! Each worker thread builds its own executor stack from the registry's
+//! factories (the PJRT client is `!Send`, so executors cannot be shared
+//! across workers). Admission is a priority scan: for every validated
+//! [`Op`] the worker asks each executor in order, and the first
+//! [`Executor::admit`] that returns an [`Admission`] claims the op —
+//! which also yields the typed [`BackendKind`] used as the batching key
+//! and metrics label. If [`Executor::execute`] later fails, the worker
+//! serves the op on the serial CPU oracle and labels it
+//! [`BackendKind::CpuFallback`], so an executor error can cost latency
+//! but never a wrong (or lost) response.
+//!
+//! The standard stack mirrors the old routing exactly:
+//!
+//! 1. [`PjrtExecutor`] — admits SpMM ops whose shape matches a loaded
+//!    artifact (the numeric hot path; absent without artifacts).
+//! 2. [`SimExecutor`] — consults the [`PlanCache`] (selector/model on a
+//!    miss, background-tune enqueue) and runs the plan's kernel on the
+//!    SIMT simulator.
+//! 3. [`CpuExecutor`] — admits everything; the serial last resort that
+//!    serves degenerate inputs and widths no launch shape covers.
+
+use std::fmt;
+use std::path::PathBuf;
+use std::sync::mpsc::SyncSender;
+use std::sync::Arc;
+
+use crate::runtime::{ArtifactKind, Runtime};
+use crate::sim::{HwProfile, Machine};
+use crate::tuner::{CostModel, Selector};
+
+use super::metrics::Metrics;
+use super::op::{Op, OpKind, SparseHandle};
+use super::plan_cache::{Plan, PlanCache, ShapeKey};
+
+/// Typed backend tag of a served response. Its `Display` form is the
+/// stable metrics/batching label (`pjrt:<artifact>`, `sim:<family>`,
+/// `cpu-serial`, `cpu-fallback`), unchanged from the stringly-typed API
+/// so logs, dashboards, and scrape targets keep working.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum BackendKind {
+    /// PJRT artifact by name (the numeric hot path).
+    Pjrt { artifact: String },
+    /// A plan-cache kernel on the SIMT simulator, by family label.
+    Sim { family: &'static str },
+    /// Serial CPU path (degenerate inputs / uncovered widths).
+    CpuSerial,
+    /// Serial CPU path after the admitted backend failed.
+    CpuFallback,
+    /// A user-registered [`Executor`]'s own label.
+    Custom(String),
+}
+
+impl BackendKind {
+    pub fn is_pjrt(&self) -> bool {
+        matches!(self, BackendKind::Pjrt { .. })
+    }
+
+    pub fn is_sim(&self) -> bool {
+        matches!(self, BackendKind::Sim { .. })
+    }
+
+    /// Either CPU path (serial or fallback).
+    pub fn is_cpu(&self) -> bool {
+        matches!(self, BackendKind::CpuSerial | BackendKind::CpuFallback)
+    }
+
+    pub fn is_fallback(&self) -> bool {
+        matches!(self, BackendKind::CpuFallback)
+    }
+}
+
+impl fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            BackendKind::Pjrt { artifact } => write!(f, "pjrt:{artifact}"),
+            BackendKind::Sim { family } => write!(f, "sim:{family}"),
+            BackendKind::CpuSerial => f.write_str("cpu-serial"),
+            BackendKind::CpuFallback => f.write_str("cpu-fallback"),
+            BackendKind::Custom(label) => f.write_str(label),
+        }
+    }
+}
+
+/// An executor's claim on an op: the typed backend tag (batching key and
+/// metrics label) plus the plan-cache outcome, which the response echoes.
+#[derive(Debug, Clone)]
+pub struct Admission {
+    pub backend: BackendKind,
+    /// The plan-cache choice that routed this op (`None` for executors
+    /// that bypass the cache, e.g. PJRT and the CPU paths).
+    pub plan: Option<Plan>,
+    /// Whether `plan` came from a cache hit (vs a fresh selection).
+    pub cache_hit: bool,
+}
+
+/// A pluggable execution backend. Workers own a stack of executors in
+/// priority order; the first [`Executor::admit`] wins and
+/// [`Executor::execute`] serves the op. An `Err` from `execute` drops the
+/// op to the serial CPU fallback — executors can fail without losing or
+/// corrupting a response.
+pub trait Executor {
+    /// Diagnostic name (not the metrics label — that is the admission's
+    /// [`BackendKind`]).
+    fn name(&self) -> &'static str;
+
+    /// Admission predicate: `Some` to claim `op` (already validated and
+    /// non-null), `None` to pass it down the stack.
+    fn admit(&mut self, op: &Op) -> Option<Admission>;
+
+    /// Run an admitted op, returning the flat output values.
+    fn execute(&mut self, op: &Op, adm: &Admission) -> Result<Vec<f32>, String>;
+}
+
+/// A queued background-tune request: the shape to refine and a zero-copy
+/// handle on its sparse operand.
+pub(crate) struct TuneTask {
+    pub(crate) key: ShapeKey,
+    pub(crate) handle: SparseHandle,
+    pub(crate) width: u32,
+}
+
+/// Everything a worker offers its executors at construction time.
+/// Factories receive `&ExecutorEnv` and may keep (cheap, `Arc`-backed)
+/// clones of whatever they need.
+#[derive(Clone)]
+pub struct ExecutorEnv {
+    pub(crate) hw: HwProfile,
+    pub(crate) selector: Selector,
+    pub(crate) model_select: bool,
+    pub(crate) plan_cache: Arc<PlanCache>,
+    pub(crate) metrics: Arc<Metrics>,
+    pub(crate) artifacts_dir: Option<PathBuf>,
+    pub(crate) tune_tx: Option<SyncSender<TuneTask>>,
+}
+
+impl ExecutorEnv {
+    pub fn hw(&self) -> HwProfile {
+        self.hw
+    }
+
+    pub fn selector(&self) -> Selector {
+        self.selector
+    }
+
+    pub fn plan_cache(&self) -> &Arc<PlanCache> {
+        &self.plan_cache
+    }
+
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    pub fn artifacts_dir(&self) -> Option<&PathBuf> {
+        self.artifacts_dir.as_ref()
+    }
+
+    /// Hand a shape to the background tuner (best-effort: a full refine
+    /// queue just means the shape keeps its selector plan a little
+    /// longer). The handle is an `Arc` bump — no operand clone.
+    pub fn request_tune(&self, key: ShapeKey, handle: SparseHandle, width: u32) {
+        if let Some(tx) = &self.tune_tx {
+            let _ = tx.try_send(TuneTask { key, handle, width });
+        }
+    }
+}
+
+/// Builds one executor for a worker, or `None` when the backend is
+/// unavailable in this environment (e.g. PJRT without artifacts).
+pub type ExecutorFactory = Arc<dyn Fn(&ExecutorEnv) -> Option<Box<dyn Executor>> + Send + Sync>;
+
+/// Wrap a closure as an [`ExecutorFactory`] (saves the `Arc`/`dyn`
+/// annotations at call sites).
+pub fn factory(
+    f: impl Fn(&ExecutorEnv) -> Option<Box<dyn Executor>> + Send + Sync + 'static,
+) -> ExecutorFactory {
+    Arc::new(f)
+}
+
+/// An ordered set of executor factories — the coordinator's pluggable
+/// backend configuration. Earlier entries have admission priority.
+#[derive(Clone)]
+pub struct ExecutorRegistry {
+    factories: Vec<ExecutorFactory>,
+}
+
+impl ExecutorRegistry {
+    /// The standard stack: PJRT (when artifacts are configured), the
+    /// plan-cache simulator, then the serial CPU catch-all.
+    pub fn standard() -> ExecutorRegistry {
+        ExecutorRegistry { factories: vec![pjrt_factory(), sim_factory(), cpu_factory()] }
+    }
+
+    /// No backends at all — for fully custom stacks. An op no executor
+    /// admits is answered with an error, so most stacks should end with
+    /// [`cpu_factory`].
+    pub fn empty() -> ExecutorRegistry {
+        ExecutorRegistry { factories: Vec::new() }
+    }
+
+    /// Append a factory at the lowest priority.
+    pub fn push(&mut self, f: ExecutorFactory) {
+        self.factories.push(f);
+    }
+
+    /// A copy of this registry with `f` at the *highest* priority — how a
+    /// custom backend outbids the standard stack.
+    pub fn with_front(mut self, f: ExecutorFactory) -> ExecutorRegistry {
+        self.factories.insert(0, f);
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.factories.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.factories.is_empty()
+    }
+
+    /// Instantiate the stack for one worker.
+    pub(crate) fn build(&self, env: &ExecutorEnv) -> Vec<Box<dyn Executor>> {
+        self.factories.iter().filter_map(|f| f(env)).collect()
+    }
+}
+
+impl Default for ExecutorRegistry {
+    fn default() -> ExecutorRegistry {
+        ExecutorRegistry::standard()
+    }
+}
+
+impl fmt::Debug for ExecutorRegistry {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "ExecutorRegistry({} factories)", self.factories.len())
+    }
+}
+
+/// Factory for [`PjrtExecutor`] — yields `None` (worker degrades to the
+/// rest of the stack) when the `pjrt` feature is off, no artifacts
+/// directory is configured, or the runtime fails to come up.
+pub fn pjrt_factory() -> ExecutorFactory {
+    factory(|env| {
+        if !Runtime::available() {
+            return None;
+        }
+        let dir = env.artifacts_dir.as_ref()?;
+        let rt = Runtime::load(dir).ok()?;
+        Some(Box::new(PjrtExecutor { rt }) as Box<dyn Executor>)
+    })
+}
+
+/// Factory for [`SimExecutor`].
+pub fn sim_factory() -> ExecutorFactory {
+    factory(|env| Some(Box::new(SimExecutor::new(env)) as Box<dyn Executor>))
+}
+
+/// Factory for [`CpuExecutor`].
+pub fn cpu_factory() -> ExecutorFactory {
+    factory(|_| Some(Box::new(CpuExecutor) as Box<dyn Executor>))
+}
+
+/// PJRT artifact execution (the numeric hot path). Each worker owns its
+/// own [`Runtime`] — the client is `!Send` and the executable cache
+/// stays hot per worker.
+pub struct PjrtExecutor {
+    rt: Runtime,
+}
+
+impl Executor for PjrtExecutor {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn admit(&mut self, op: &Op) -> Option<Admission> {
+        if op.kind != OpKind::Spmm || op.degenerate() {
+            return None;
+        }
+        let a = op.a.as_matrix()?;
+        let spec = self.rt.registry.route(ArtifactKind::SpmmNnzSr, a.rows, a.cols, a.nnz())?;
+        if spec.n != op.width {
+            return None;
+        }
+        Some(Admission {
+            backend: BackendKind::Pjrt { artifact: spec.name.clone() },
+            plan: None,
+            cache_hit: false,
+        })
+    }
+
+    fn execute(&mut self, op: &Op, adm: &Admission) -> Result<Vec<f32>, String> {
+        let BackendKind::Pjrt { artifact } = &adm.backend else {
+            return Err("pjrt executor given a non-pjrt admission".into());
+        };
+        let a = op.a.as_matrix().ok_or("pjrt admitted a non-matrix op")?;
+        self.rt.run_spmm_nnz(artifact, a, &op.dense[0]).map_err(|e| e.to_string())
+    }
+}
+
+/// Plan-cache + SIMT-simulator execution: the tuner-aware default path.
+/// Admission consults the cache — a miss runs the selector (the analytic
+/// model argmin when configured) and enqueues a background refinement; a
+/// hit reuses the cached plan at zero selection cost.
+pub struct SimExecutor {
+    machine: Machine,
+    model: Option<CostModel>,
+    env: ExecutorEnv,
+}
+
+impl SimExecutor {
+    pub fn new(env: &ExecutorEnv) -> SimExecutor {
+        let machine = Machine::new(env.hw);
+        let model = if env.model_select { Some(CostModel::new(&machine)) } else { None };
+        SimExecutor { machine, model, env: env.clone() }
+    }
+}
+
+impl Executor for SimExecutor {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn admit(&mut self, op: &Op) -> Option<Admission> {
+        if op.degenerate() {
+            return None;
+        }
+        let key = op.shape_key()?;
+        // One generic cache consult for the whole quartet. The selector
+        // closure only runs on a miss (repeats cost a hash lookup); a
+        // `None` selection means no legal launch shape covers the width —
+        // the op is declined, untouched by cache statistics, and falls to
+        // the CPU executor.
+        let (plan, hit) = self
+            .env
+            .plan_cache
+            .try_get_or_insert_with(key, || op.select(&self.env.selector, self.model.as_ref()))?;
+        if hit {
+            self.env.metrics.on_cache_hit();
+        } else {
+            self.env.metrics.on_cache_miss();
+            self.env.request_tune(key, op.a.clone(), op.width as u32);
+        }
+        Some(Admission {
+            backend: BackendKind::Sim { family: plan.kind.family_label() },
+            plan: Some(plan),
+            cache_hit: hit,
+        })
+    }
+
+    fn execute(&mut self, op: &Op, adm: &Admission) -> Result<Vec<f32>, String> {
+        let plan = adm.plan.ok_or("sim executor needs an admitted plan")?;
+        let algo = plan.kind;
+        // A colliding fingerprint could hand an op a plan from another
+        // algebra; decline (→ CPU fallback) rather than guess a kernel.
+        if !op.kind.compatible(&algo) {
+            return Err(format!("plan {} cannot serve a {} op", algo.name(), op.kind));
+        }
+        let res = match op.kind {
+            OpKind::Spmm => {
+                let a = op.a.as_matrix().ok_or("sim admitted a non-matrix spmm op")?;
+                algo.run(&self.machine, a, &op.dense[0], op.width as u32)
+            }
+            OpKind::Sddmm => {
+                let a = op.a.as_matrix().ok_or("sim admitted a non-matrix sddmm op")?;
+                algo.run_sddmm(&self.machine, a, &op.dense[0], &op.dense[1])
+            }
+            OpKind::Mttkrp => {
+                let a = op.a.as_tensor().ok_or("sim admitted a non-tensor mttkrp op")?;
+                algo.run_mttkrp(&self.machine, a, &op.dense[0], &op.dense[1])
+            }
+            OpKind::Ttm => {
+                let a = op.a.as_tensor().ok_or("sim admitted a non-tensor ttm op")?;
+                algo.run_ttm(&self.machine, a, &op.dense[0])
+            }
+        };
+        res.map(|r| r.run.c).map_err(|e| e.to_string())
+    }
+}
+
+/// The serial last resort: admits every op and runs the CPU oracle.
+/// Degenerate inputs and widths no kernel launch shape covers land here
+/// — correctly, without touching the plan cache.
+pub struct CpuExecutor;
+
+impl Executor for CpuExecutor {
+    fn name(&self) -> &'static str {
+        "cpu"
+    }
+
+    fn admit(&mut self, _op: &Op) -> Option<Admission> {
+        Some(Admission { backend: BackendKind::CpuSerial, plan: None, cache_hit: false })
+    }
+
+    fn execute(&mut self, op: &Op, _adm: &Admission) -> Result<Vec<f32>, String> {
+        Ok(op.run_serial())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_labels_are_stable() {
+        assert_eq!(BackendKind::Pjrt { artifact: "spmm_a".into() }.to_string(), "pjrt:spmm_a");
+        assert_eq!(BackendKind::Sim { family: "sgap-nnz-group" }.to_string(), "sim:sgap-nnz-group");
+        assert_eq!(BackendKind::CpuSerial.to_string(), "cpu-serial");
+        assert_eq!(BackendKind::CpuFallback.to_string(), "cpu-fallback");
+        assert_eq!(BackendKind::Custom("fpga:v1".into()).to_string(), "fpga:v1");
+    }
+
+    #[test]
+    fn backend_predicates() {
+        let sim = BackendKind::Sim { family: "sddmm-group" };
+        assert!(sim.is_sim() && !sim.is_cpu() && !sim.is_pjrt());
+        assert!(BackendKind::CpuSerial.is_cpu() && !BackendKind::CpuSerial.is_fallback());
+        assert!(BackendKind::CpuFallback.is_cpu() && BackendKind::CpuFallback.is_fallback());
+        assert!(BackendKind::Pjrt { artifact: "x".into() }.is_pjrt());
+    }
+
+    #[test]
+    fn registry_default_is_the_standard_stack() {
+        let reg = ExecutorRegistry::default();
+        assert_eq!(reg.len(), 3);
+        assert!(!reg.is_empty());
+        let reg = reg.with_front(cpu_factory());
+        assert_eq!(reg.len(), 4);
+        assert!(ExecutorRegistry::empty().is_empty());
+        assert_eq!(format!("{:?}", ExecutorRegistry::standard()), "ExecutorRegistry(3 factories)");
+    }
+}

@@ -4,9 +4,11 @@
 //! The global quantiles come from a bounded reservoir (exact for the first
 //! 64k requests); the per-backend histograms are log2-bucketed so they are
 //! O(1) per sample and never grow — the shape a production scrape target
-//! wants. Backends are keyed by coarse labels (`sim:sgap-nnz-group`,
-//! `pjrt:<artifact>`, `cpu-serial`, `cpu-fallback`, …) so the map stays
-//! small under diverse traffic.
+//! wants. Backends are keyed by coarse labels — the `Display` form of the
+//! typed [`BackendKind`](super::BackendKind) (`sim:sgap-nnz-group`,
+//! `pjrt:<artifact>`, `cpu-serial`, `cpu-fallback`, …) — so the map stays
+//! small under diverse traffic and the scrape surface survived the typed
+//! API redesign unchanged.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};

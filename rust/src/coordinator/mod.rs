@@ -1,31 +1,58 @@
 //! The serving coordinator — L3's request path.
 //!
-//! A production-shaped front end over the paper's machinery: a **pool** of
-//! worker threads ([`pool`]) drains a bounded job queue (backpressure on
-//! submit), micro-batches by backend ([`batcher`]), and serves the full
-//! §2.1 quartet — SpMM, SDDMM, MTTKRP, and TTM requests. Kernel choice is **tuner-aware**: each matrix shape
-//! is fingerprinted and looked up in the [`plan_cache`] — a miss runs the
-//! DA-SpMM-style [`Selector`](crate::tuner::Selector) fast path (by
-//! default the analytic cost-model argmin), and an optional background
-//! thread refines hot shapes with the model-pruned `tuner::tune*_pruned`
-//! sweep (O(stats) pricing over the grid, simulation only for the top-K
-//! survivors), upgrading the cached plan in place. Execution goes
-//! to PJRT artifacts (when compiled in and admitted), the SIMT simulator
-//! (running the plan's kernel), or the serial CPU fallback; [`metrics`]
-//! keeps global quantiles, per-backend latency histograms, and cache
-//! hit/miss counters.
+//! A production-shaped front end over the paper's machinery, built from
+//! three concepts ([`op`], [`executor`], [`session`]):
+//!
+//! * **Operand handles** ([`SparseHandle`], [`DenseHandle`]): callers
+//!   register sparse and dense operands once; registration runs the
+//!   `MatrixStats`/`SegStats` fingerprint pass a single time and caches
+//!   it, so repeat submits are zero-copy (`Arc` bumps) and derive their
+//!   plan-cache keys in O(1).
+//! * **One generic op** ([`Op`], [`OpKind`]): a single typed descriptor
+//!   replaces the per-algebra request variants — validation (overflow-
+//!   checked), degeneracy, cache keys, selector dispatch, batching, and
+//!   the serial oracle are each one `match` over [`OpKind`], so a new
+//!   algebra is data, not a parallel plumbing stack. `submit(Op)` returns
+//!   a [`Ticket`] future; the legacy `Request`/`*_blocking` surface
+//!   remains as thin shims.
+//! * **Pluggable executors** ([`Executor`], [`ExecutorRegistry`]): the
+//!   execution backends are a priority-ordered trait-object stack
+//!   (admission predicate + execute) built per worker — PJRT artifacts,
+//!   the plan-cache SIMT simulator, and the serial CPU by default; custom
+//!   backends plug in through the registry.
+//!
+//! Mechanically: a **pool** of worker threads ([`pool`]) drains a bounded
+//! job queue (backpressure on submit), micro-batches by backend
+//! ([`batcher`]), and serves the full §2.1 quartet. Kernel choice is
+//! **tuner-aware**: each operand fingerprint is looked up in the
+//! [`plan_cache`] — a miss runs the DA-SpMM-style
+//! [`Selector`](crate::tuner::Selector) fast path (by default the
+//! analytic cost-model argmin), and an optional background thread refines
+//! hot shapes with the model-pruned `tuner::tune*_pruned` sweep,
+//! upgrading the cached plan in place. [`metrics`] keeps global
+//! quantiles, per-backend latency histograms, and cache hit/miss
+//! counters.
 //!
 //! Thread-based throughout (the offline dependency set has no async
-//! runtime); callers get a channel future per request.
+//! runtime); callers get a [`Ticket`] future per op.
 
 pub mod batcher;
+pub mod executor;
 pub mod metrics;
+pub mod op;
 pub mod plan_cache;
 pub mod pool;
 pub mod server;
+pub mod session;
 
 pub use batcher::Batcher;
+pub use executor::{
+    cpu_factory, factory, pjrt_factory, sim_factory, Admission, BackendKind, CpuExecutor,
+    Executor, ExecutorEnv, ExecutorFactory, ExecutorRegistry, PjrtExecutor, SimExecutor,
+};
 pub use metrics::{BackendSnapshot, Metrics, MetricsSnapshot};
+pub use op::{DenseHandle, Op, OpError, OpKind, Request, SparseData, SparseHandle};
 pub use plan_cache::{Plan, PlanCache, PlanCacheStats, PlanOrigin, Scenario, ShapeKey};
 pub use pool::JobQueue;
-pub use server::{Coordinator, CoordinatorConfig, Request, Response};
+pub use server::{Coordinator, CoordinatorConfig, Response};
+pub use session::{Session, SgapClient, Ticket};

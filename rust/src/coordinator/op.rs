@@ -1,0 +1,688 @@
+//! The typed serving vocabulary: operand **handles** and the generic
+//! [`Op`] descriptor — one value for every §2.1 algebra.
+//!
+//! The previous API took a `Request` variant per algebra, each owning its
+//! sparse and dense operands by value: serving the same matrix twice —
+//! the exact case the plan cache exists for — re-cloned the whole operand
+//! set into the job queue, and every new algebra needed its own variant,
+//! validator, submit pair, batching key, and routing arm. This module
+//! replaces that with three ideas (Senanayake et al.'s argument at the
+//! compiler level, applied to the serving level — one generic vocabulary
+//! over algebras beats N parallel special cases):
+//!
+//! * [`SparseHandle`] / [`DenseHandle`] — `Arc`-backed operand handles.
+//!   Registering an operand runs the [`MatrixStats`]/[`SegStats`]
+//!   fingerprint pass **once** per operand and caches it inside the
+//!   handle, so repeat submits are zero-copy (an `Arc` bump) and skip
+//!   re-fingerprinting entirely.
+//! * [`Op`] — `{ kind, sparse operand, dense operands, width }`.
+//!   Validation (with `checked_mul` on every extent × width product),
+//!   degeneracy checks, [`ShapeKey`] derivation, selector dispatch, and
+//!   the serial oracle are all generic over [`OpKind`]: algebra #5 is a
+//!   new `OpKind` row in each small `match` below, not a parallel
+//!   plumbing stack.
+//! * [`Request`] — the legacy per-algebra enum, kept as a deprecated shim
+//!   that converts into an [`Op`] (moving its operands into fresh
+//!   handles, never cloning them).
+
+use std::fmt;
+use std::sync::{Arc, OnceLock};
+
+use crate::algos::catalog::Algo;
+use crate::algos::cpu_ref::spmm_serial;
+use crate::algos::mttkrp::{mttkrp_serial, ttm_serial};
+use crate::algos::sddmm::sddmm_serial;
+use crate::sparse::coo3::Coo3;
+use crate::sparse::{Csr, MatrixStats, SegStats};
+use crate::tuner::{CostModel, Selector};
+
+use super::plan_cache::ShapeKey;
+
+/// The served algebra of an [`Op`] — one tag per §2.1 quartet member.
+///
+/// This is also the plan cache's scenario tag
+/// ([`Scenario`](super::Scenario) is an alias), so ops, cache keys, and
+/// the background tuner all speak the same vocabulary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    /// `C = A · B` (CSR × row-major dense `[cols × n]`).
+    Spmm,
+    /// `Y(pos) = A_vals(pos) · dot(X1[i,:], X2[:,k])`.
+    Sddmm,
+    /// `Y(i,j) = Σ A(i,k,l)·X1(k,j)·X2(l,j)` over an order-3 COO tensor.
+    Mttkrp,
+    /// `Y(i,j,l) = Σ A(i,j,k)·X1(k,l)` over an order-3 COO tensor.
+    Ttm,
+}
+
+impl OpKind {
+    /// Every algebra the serving layer knows, in quartet order.
+    pub const ALL: [OpKind; 4] = [OpKind::Spmm, OpKind::Sddmm, OpKind::Mttkrp, OpKind::Ttm];
+
+    /// Stable lowercase label (log/error prefix).
+    pub fn label(self) -> &'static str {
+        match self {
+            OpKind::Spmm => "spmm",
+            OpKind::Sddmm => "sddmm",
+            OpKind::Mttkrp => "mttkrp",
+            OpKind::Ttm => "ttm",
+        }
+    }
+
+    /// The name of the dense-width dimension in this algebra's signature.
+    pub fn width_name(self) -> &'static str {
+        match self {
+            OpKind::Spmm => "n",
+            OpKind::Sddmm | OpKind::Mttkrp => "j_dim",
+            OpKind::Ttm => "l_dim",
+        }
+    }
+
+    /// How many dense operands the algebra takes.
+    pub fn dense_arity(self) -> usize {
+        match self {
+            OpKind::Spmm | OpKind::Ttm => 1,
+            OpKind::Sddmm | OpKind::Mttkrp => 2,
+        }
+    }
+
+    /// Whether the sparse operand is an order-3 tensor (vs a CSR matrix).
+    pub fn wants_tensor(self) -> bool {
+        matches!(self, OpKind::Mttkrp | OpKind::Ttm)
+    }
+
+    /// Whether `plan` is a kernel of this algebra. Guards fingerprint
+    /// collisions: an incompatible cached plan is served on the CPU
+    /// fallback rather than guessing a kernel.
+    pub fn compatible(self, plan: &Algo) -> bool {
+        match self {
+            OpKind::Spmm => !(plan.is_sddmm() || plan.is_mttkrp() || plan.is_ttm()),
+            OpKind::Sddmm => plan.is_sddmm(),
+            OpKind::Mttkrp => plan.is_mttkrp(),
+            OpKind::Ttm => plan.is_ttm(),
+        }
+    }
+}
+
+impl fmt::Display for OpKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// The sparse payload behind a [`SparseHandle`].
+#[derive(Debug, Clone)]
+pub enum SparseData {
+    Matrix(Csr),
+    Tensor(Coo3),
+}
+
+impl SparseData {
+    /// Lowercase tag for error messages.
+    pub fn label(&self) -> &'static str {
+        match self {
+            SparseData::Matrix(_) => "matrix",
+            SparseData::Tensor(_) => "tensor",
+        }
+    }
+}
+
+#[derive(Debug)]
+struct SparseInner {
+    data: SparseData,
+    /// Matrix fingerprint — computed on first use (primed eagerly by
+    /// `Session::register_matrix`), then cached for the handle's life.
+    stats: OnceLock<MatrixStats>,
+    /// Tensor segment fingerprints, one per segmentation (row segments
+    /// for MTTKRP, leading `(i,j)` fibers for TTM) — computed on first
+    /// use, then cached for the handle's lifetime.
+    seg_mttkrp: OnceLock<SegStats>,
+    seg_ttm: OnceLock<SegStats>,
+}
+
+/// A registered sparse operand: a cheap, clonable `Arc`-backed handle.
+///
+/// The fingerprint pass ([`MatrixStats`] for matrices, [`SegStats`] for
+/// tensors) runs once per handle and is cached, so every [`Op`] built
+/// from the handle derives its plan-cache [`ShapeKey`] in O(1) and every
+/// submit moves only the `Arc` — never the operand data.
+#[derive(Debug, Clone)]
+pub struct SparseHandle {
+    inner: Arc<SparseInner>,
+}
+
+impl SparseHandle {
+    /// Wrap a CSR matrix in a handle. The [`MatrixStats`] fingerprint
+    /// pass runs lazily on first use and is then cached — so the legacy
+    /// `Request` shim pays it only on the paths that actually consult the
+    /// plan cache (exactly like the pre-handle API), while
+    /// [`Session::register_matrix`](super::Session::register_matrix)
+    /// primes it eagerly at registration time.
+    pub fn matrix(a: Csr) -> SparseHandle {
+        SparseHandle {
+            inner: Arc::new(SparseInner {
+                data: SparseData::Matrix(a),
+                stats: OnceLock::new(),
+                seg_mttkrp: OnceLock::new(),
+                seg_ttm: OnceLock::new(),
+            }),
+        }
+    }
+
+    /// Register an order-3 COO tensor. The per-scenario [`SegStats`]
+    /// passes run lazily, on the first MTTKRP/TTM op using the handle.
+    pub fn tensor(a: Coo3) -> SparseHandle {
+        SparseHandle {
+            inner: Arc::new(SparseInner {
+                data: SparseData::Tensor(a),
+                stats: OnceLock::new(),
+                seg_mttkrp: OnceLock::new(),
+                seg_ttm: OnceLock::new(),
+            }),
+        }
+    }
+
+    pub fn data(&self) -> &SparseData {
+        &self.inner.data
+    }
+
+    pub fn as_matrix(&self) -> Option<&Csr> {
+        match &self.inner.data {
+            SparseData::Matrix(m) => Some(m),
+            SparseData::Tensor(_) => None,
+        }
+    }
+
+    pub fn as_tensor(&self) -> Option<&Coo3> {
+        match &self.inner.data {
+            SparseData::Matrix(_) => None,
+            SparseData::Tensor(t) => Some(t),
+        }
+    }
+
+    /// Cached matrix fingerprint (`None` when the handle holds a tensor).
+    pub fn matrix_stats(&self) -> Option<&MatrixStats> {
+        match &self.inner.data {
+            SparseData::Matrix(m) => Some(self.inner.stats.get_or_init(|| MatrixStats::of(m))),
+            SparseData::Tensor(_) => None,
+        }
+    }
+
+    /// Cached segment fingerprint for a tensor algebra (`None` when the
+    /// handle holds a matrix or `kind` is a matrix algebra).
+    pub fn seg_stats(&self, kind: OpKind) -> Option<&SegStats> {
+        let t = self.as_tensor()?;
+        match kind {
+            OpKind::Mttkrp => Some(self.inner.seg_mttkrp.get_or_init(|| SegStats::mttkrp(t))),
+            OpKind::Ttm => Some(self.inner.seg_ttm.get_or_init(|| SegStats::ttm(t))),
+            OpKind::Spmm | OpKind::Sddmm => None,
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        match &self.inner.data {
+            SparseData::Matrix(m) => m.nnz(),
+            SparseData::Tensor(t) => t.nnz(),
+        }
+    }
+
+    /// Whether two handles share the same registration (pointer identity,
+    /// not structural equality).
+    pub fn ptr_eq(&self, other: &SparseHandle) -> bool {
+        Arc::ptr_eq(&self.inner, &other.inner)
+    }
+
+    /// Live references to this registration — observability for the
+    /// zero-copy contract (each in-flight op holds exactly one).
+    pub fn strong_count(&self) -> usize {
+        Arc::strong_count(&self.inner)
+    }
+}
+
+impl From<Csr> for SparseHandle {
+    fn from(a: Csr) -> SparseHandle {
+        SparseHandle::matrix(a)
+    }
+}
+
+impl From<Coo3> for SparseHandle {
+    fn from(a: Coo3) -> SparseHandle {
+        SparseHandle::tensor(a)
+    }
+}
+
+/// A registered dense operand: a cheap, clonable `Arc<[f32]>`-style
+/// handle (derefs to the slice).
+#[derive(Debug, Clone)]
+pub struct DenseHandle {
+    data: Arc<Vec<f32>>,
+}
+
+impl DenseHandle {
+    pub fn new(v: Vec<f32>) -> DenseHandle {
+        DenseHandle { data: Arc::new(v) }
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// See [`SparseHandle::ptr_eq`].
+    pub fn ptr_eq(&self, other: &DenseHandle) -> bool {
+        Arc::ptr_eq(&self.data, &other.data)
+    }
+
+    /// See [`SparseHandle::strong_count`].
+    pub fn strong_count(&self) -> usize {
+        Arc::strong_count(&self.data)
+    }
+}
+
+impl std::ops::Deref for DenseHandle {
+    type Target = [f32];
+
+    fn deref(&self) -> &[f32] {
+        &self.data
+    }
+}
+
+impl From<Vec<f32>> for DenseHandle {
+    fn from(v: Vec<f32>) -> DenseHandle {
+        DenseHandle::new(v)
+    }
+}
+
+/// Typed validation error of an [`Op`] — what the serving layer reports
+/// (as its `Display` string) instead of executing a malformed request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum OpError {
+    /// The dense width (`n`/`j_dim`/`l_dim`) is zero.
+    ZeroWidth { kind: OpKind },
+    /// The sparse handle holds the wrong operand class for the algebra
+    /// (e.g. a tensor handed to SpMM).
+    OperandKind { kind: OpKind, got: &'static str },
+    /// Wrong number of dense operands.
+    DenseArity { kind: OpKind, want: usize, got: usize },
+    /// A dense operand's length disagrees with `extent × width`.
+    DenseShape { kind: OpKind, operand: &'static str, got: usize, extent: usize, width: usize },
+    /// `extent × width` overflows `usize` — absurd dims are rejected here
+    /// instead of overflowing (and panicking) in debug builds.
+    DimOverflow { kind: OpKind, operand: &'static str, extent: usize, width: usize },
+}
+
+impl fmt::Display for OpError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            OpError::ZeroWidth { kind } => {
+                write!(f, "{kind}: {} must be >= 1", kind.width_name())
+            }
+            OpError::OperandKind { kind, got } => {
+                let want = if kind.wants_tensor() { "tensor" } else { "matrix" };
+                write!(f, "{kind}: expects a {want} operand, the handle holds a {got}")
+            }
+            OpError::DenseArity { kind, want, got } => {
+                write!(f, "{kind}: takes {want} dense operand(s), got {got}")
+            }
+            OpError::DenseShape { kind, operand, got, extent, width } => {
+                write!(
+                    f,
+                    "{kind}: {operand} has {got} elements, want extent x {} = {extent} x {width}",
+                    kind.width_name()
+                )
+            }
+            OpError::DimOverflow { kind, operand, extent, width } => {
+                write!(
+                    f,
+                    "{kind}: {operand} extent {extent} x {} {width} overflows usize",
+                    kind.width_name(),
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for OpError {}
+
+/// A serving job: one generic descriptor for every algebra of the §2.1
+/// quartet. Built from registered handles, so constructing and
+/// submitting an `Op` never copies operand data.
+#[derive(Debug, Clone)]
+pub struct Op {
+    pub kind: OpKind,
+    /// The sparse operand (matrix for SpMM/SDDMM, tensor for MTTKRP/TTM).
+    pub a: SparseHandle,
+    /// Dense operands in kernel order (`B`; `X1, X2`; `X1, X2`; `X1`).
+    pub dense: Vec<DenseHandle>,
+    /// Dense width: `n` (SpMM), `j_dim` (SDDMM/MTTKRP), `l_dim` (TTM).
+    pub width: usize,
+}
+
+impl Op {
+    /// `C = A · B` with `b` row-major `[a.cols × n]`.
+    pub fn spmm(a: &SparseHandle, b: &DenseHandle, n: usize) -> Op {
+        Op { kind: OpKind::Spmm, a: a.clone(), dense: vec![b.clone()], width: n }
+    }
+
+    /// `Y(pos) = A_vals(pos) · dot(X1[i,:], X2[:,k])` with `x1` row-major
+    /// `[a.rows × j_dim]` and `x2` row-major `[j_dim × a.cols]`.
+    pub fn sddmm(a: &SparseHandle, x1: &DenseHandle, x2: &DenseHandle, j_dim: usize) -> Op {
+        Op { kind: OpKind::Sddmm, a: a.clone(), dense: vec![x1.clone(), x2.clone()], width: j_dim }
+    }
+
+    /// `Y(i,j) = Σ A(i,k,l)·X1(k,j)·X2(l,j)` with `x1` row-major
+    /// `[a.dim1 × j_dim]` and `x2` row-major `[a.dim2 × j_dim]`.
+    pub fn mttkrp(a: &SparseHandle, x1: &DenseHandle, x2: &DenseHandle, j_dim: usize) -> Op {
+        Op { kind: OpKind::Mttkrp, a: a.clone(), dense: vec![x1.clone(), x2.clone()], width: j_dim }
+    }
+
+    /// `Y(i,j,l) = Σ A(i,j,k)·X1(k,l)` with `x1` row-major
+    /// `[a.dim2 × l_dim]`.
+    pub fn ttm(a: &SparseHandle, x1: &DenseHandle, l_dim: usize) -> Op {
+        Op { kind: OpKind::Ttm, a: a.clone(), dense: vec![x1.clone()], width: l_dim }
+    }
+
+    /// Expected dense operands: `(name, sparse-side extent)` pairs, i.e.
+    /// operand `i` must hold `extent_i × width` elements. Errs when the
+    /// handle's operand class doesn't match the algebra.
+    fn dense_specs(&self) -> Result<Vec<(&'static str, usize)>, OpError> {
+        match (self.kind, self.a.data()) {
+            (OpKind::Spmm, SparseData::Matrix(a)) => Ok(vec![("B", a.cols)]),
+            (OpKind::Sddmm, SparseData::Matrix(a)) => Ok(vec![("X1", a.rows), ("X2", a.cols)]),
+            (OpKind::Mttkrp, SparseData::Tensor(a)) => Ok(vec![("X1", a.dim1), ("X2", a.dim2)]),
+            (OpKind::Ttm, SparseData::Tensor(a)) => Ok(vec![("X1", a.dim2)]),
+            (kind, data) => Err(OpError::OperandKind { kind, got: data.label() }),
+        }
+    }
+
+    /// The single generic validator: width, operand class, dense arity,
+    /// and every dense length against `extent × width` (with
+    /// `checked_mul`, so absurd dims are a typed error, not a debug-build
+    /// overflow panic).
+    pub fn validate(&self) -> Result<(), OpError> {
+        let kind = self.kind;
+        if self.width == 0 {
+            return Err(OpError::ZeroWidth { kind });
+        }
+        let specs = self.dense_specs()?;
+        if self.dense.len() != specs.len() {
+            return Err(OpError::DenseArity { kind, want: specs.len(), got: self.dense.len() });
+        }
+        for (&(operand, extent), d) in specs.iter().zip(&self.dense) {
+            let want = extent.checked_mul(self.width).ok_or_else(|| OpError::DimOverflow {
+                kind,
+                operand,
+                extent,
+                width: self.width,
+            })?;
+            if d.len() != want {
+                return Err(OpError::DenseShape {
+                    kind,
+                    operand,
+                    got: d.len(),
+                    extent,
+                    width: self.width,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Inputs the kernels do not cover (served straight on the CPU path).
+    pub fn degenerate(&self) -> bool {
+        match self.a.data() {
+            SparseData::Matrix(a) => a.nnz() == 0 || a.rows == 0,
+            SparseData::Tensor(a) => a.nnz() == 0 || a.dim0 == 0,
+        }
+    }
+
+    /// Output element count (`None` on an operand-class mismatch or
+    /// overflow — [`Op::validate`] reports those as typed errors).
+    pub fn output_len(&self) -> Option<usize> {
+        match (self.kind, self.a.data()) {
+            (OpKind::Spmm, SparseData::Matrix(a)) => a.rows.checked_mul(self.width),
+            (OpKind::Sddmm, SparseData::Matrix(a)) => Some(a.nnz()),
+            (OpKind::Mttkrp, SparseData::Tensor(a)) => a.dim0.checked_mul(self.width),
+            (OpKind::Ttm, SparseData::Tensor(a)) => {
+                a.dim0.checked_mul(a.dim1)?.checked_mul(self.width)
+            }
+            _ => None,
+        }
+    }
+
+    /// Plan-cache fingerprint, derived from the handle's **cached** stats
+    /// — repeat submits of a registered operand never re-run the
+    /// fingerprint pass. `None` on an operand-class mismatch.
+    pub fn shape_key(&self) -> Option<ShapeKey> {
+        let w = self.width as u32;
+        match self.kind {
+            OpKind::Spmm => Some(ShapeKey::spmm(self.a.matrix_stats()?, w)),
+            OpKind::Sddmm => Some(ShapeKey::sddmm(self.a.matrix_stats()?, w)),
+            OpKind::Mttkrp => {
+                let t = self.a.as_tensor()?;
+                let seg = self.a.seg_stats(OpKind::Mttkrp)?;
+                Some(ShapeKey::mttkrp_stats(seg, t.dim1.saturating_mul(t.dim2), w))
+            }
+            OpKind::Ttm => {
+                let t = self.a.as_tensor()?;
+                Some(ShapeKey::ttm_stats(self.a.seg_stats(OpKind::Ttm)?, t.dim2, w))
+            }
+        }
+    }
+
+    /// The selector's fast-path plan for this op — through the analytic
+    /// model's argmin when `model` is given, the decision tree otherwise.
+    /// `None` when no legal launch shape covers the width (the serving
+    /// layer routes such ops to the CPU) or on an operand-class mismatch.
+    pub fn select(&self, selector: &Selector, model: Option<&CostModel>) -> Option<Algo> {
+        let w = self.width as u32;
+        match self.kind {
+            OpKind::Spmm => {
+                let stats = self.a.matrix_stats()?;
+                Some(match model {
+                    Some(m) => selector.select_model(m, stats, w),
+                    None => selector.select(stats, w),
+                })
+            }
+            OpKind::Sddmm => {
+                let stats = self.a.matrix_stats()?;
+                Some(match model {
+                    Some(m) => selector.select_sddmm_model(m, stats, w),
+                    None => selector.select_sddmm(stats, w),
+                })
+            }
+            OpKind::Mttkrp => {
+                let seg = self.a.seg_stats(OpKind::Mttkrp)?;
+                match model {
+                    Some(m) => selector.select_mttkrp_model_stats(m, seg, w),
+                    None => selector.select_mttkrp_stats(seg, w),
+                }
+            }
+            OpKind::Ttm => {
+                let seg = self.a.seg_stats(OpKind::Ttm)?;
+                match model {
+                    Some(m) => selector.select_ttm_model_stats(m, seg, w),
+                    None => selector.select_ttm_stats(seg, w),
+                }
+            }
+        }
+    }
+
+    /// Serve the op on the serial CPU oracle — the reference the
+    /// differential tests compare against, and every backend's fallback.
+    ///
+    /// # Panics
+    /// On an operand-class mismatch; the serving path runs
+    /// [`Op::validate`] first.
+    pub fn run_serial(&self) -> Vec<f32> {
+        match (self.kind, self.a.data()) {
+            (OpKind::Spmm, SparseData::Matrix(a)) => spmm_serial(a, &self.dense[0], self.width),
+            (OpKind::Sddmm, SparseData::Matrix(a)) => {
+                sddmm_serial(a, &self.dense[0], &self.dense[1], self.width)
+            }
+            (OpKind::Mttkrp, SparseData::Tensor(a)) => {
+                mttkrp_serial(a, &self.dense[0], &self.dense[1], self.width)
+            }
+            (OpKind::Ttm, SparseData::Tensor(a)) => ttm_serial(a, &self.dense[0], self.width),
+            (kind, data) => panic!("{kind} op holds a {} operand: validate() first", data.label()),
+        }
+    }
+}
+
+/// The legacy per-algebra request enum — a deprecated shim kept so
+/// existing callers compile: it converts into the generic [`Op`]
+/// (operands are *moved* into fresh handles, never cloned). New code
+/// should register operands once ([`Session`](super::Session)) and build
+/// [`Op`]s, which makes repeat submits zero-copy.
+#[derive(Debug, Clone)]
+pub enum Request {
+    /// `C = A · B` with `B` row-major `[a.cols × n]`.
+    Spmm { a: Csr, b: Vec<f32>, n: usize },
+    /// `Y(pos) = A_vals(pos) · dot(X1[i,:], X2[:,k])` with `x1` row-major
+    /// `[a.rows × j_dim]` and `x2` row-major `[j_dim × a.cols]`.
+    Sddmm { a: Csr, x1: Vec<f32>, x2: Vec<f32>, j_dim: usize },
+    /// `Y(i,j) = Σ A(i,k,l)·X1(k,j)·X2(l,j)` with `x1` row-major
+    /// `[a.dim1 × j_dim]`, `x2` row-major `[a.dim2 × j_dim]`.
+    Mttkrp { a: Coo3, x1: Vec<f32>, x2: Vec<f32>, j_dim: usize },
+    /// `Y(i,j,l) = Σ A(i,j,k)·X1(k,l)` with `x1` row-major
+    /// `[a.dim2 × l_dim]`.
+    Ttm { a: Coo3, x1: Vec<f32>, l_dim: usize },
+}
+
+impl From<Request> for Op {
+    fn from(req: Request) -> Op {
+        match req {
+            Request::Spmm { a, b, n } => {
+                Op::spmm(&SparseHandle::matrix(a), &DenseHandle::new(b), n)
+            }
+            Request::Sddmm { a, x1, x2, j_dim } => Op::sddmm(
+                &SparseHandle::matrix(a),
+                &DenseHandle::new(x1),
+                &DenseHandle::new(x2),
+                j_dim,
+            ),
+            Request::Mttkrp { a, x1, x2, j_dim } => Op::mttkrp(
+                &SparseHandle::tensor(a),
+                &DenseHandle::new(x1),
+                &DenseHandle::new(x2),
+                j_dim,
+            ),
+            Request::Ttm { a, x1, l_dim } => {
+                Op::ttm(&SparseHandle::tensor(a), &DenseHandle::new(x1), l_dim)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::erdos_renyi;
+
+    fn mat_handle() -> SparseHandle {
+        SparseHandle::matrix(erdos_renyi(16, 12, 40, 1).to_csr())
+    }
+
+    #[test]
+    fn handles_are_zero_copy_and_fingerprint_once() {
+        let h = mat_handle();
+        assert_eq!(h.strong_count(), 1);
+        let stats = h.matrix_stats().expect("matrix handle has stats").clone();
+        let b = DenseHandle::new(vec![0.0; 12 * 4]);
+        let op = Op::spmm(&h, &b, 4);
+        // the op shares the registration: pointer-identical, no copy
+        assert!(op.a.ptr_eq(&h));
+        assert!(op.dense[0].ptr_eq(&b));
+        assert_eq!(h.strong_count(), 2);
+        assert_eq!(b.strong_count(), 2);
+        // fingerprints are cached: the same &MatrixStats is handed back
+        assert_eq!(*op.a.matrix_stats().unwrap(), stats);
+        drop(op);
+        assert_eq!(h.strong_count(), 1);
+    }
+
+    #[test]
+    fn tensor_handles_cache_both_segmentations() {
+        let t = SparseHandle::tensor(Coo3::random((8, 6, 5), 40, 3));
+        let m1 = t.seg_stats(OpKind::Mttkrp).unwrap() as *const SegStats;
+        let m2 = t.seg_stats(OpKind::Mttkrp).unwrap() as *const SegStats;
+        assert_eq!(m1, m2, "segment stats computed once per handle");
+        assert!(t.seg_stats(OpKind::Ttm).is_some());
+        assert!(t.seg_stats(OpKind::Spmm).is_none());
+        assert!(t.matrix_stats().is_none());
+    }
+
+    #[test]
+    fn validation_is_generic_and_typed() {
+        let h = mat_handle();
+        let good = Op::spmm(&h, &DenseHandle::new(vec![0.0; 12 * 4]), 4);
+        good.validate().unwrap();
+        assert_eq!(good.output_len(), Some(16 * 4));
+
+        let zero = Op::spmm(&h, &DenseHandle::new(vec![]), 0);
+        assert_eq!(zero.validate(), Err(OpError::ZeroWidth { kind: OpKind::Spmm }));
+        assert!(zero.validate().unwrap_err().to_string().contains("n must be >= 1"));
+
+        let short = Op::spmm(&h, &DenseHandle::new(vec![0.0; 3]), 4);
+        let err = short.validate().unwrap_err();
+        assert!(matches!(err, OpError::DenseShape { operand: "B", got: 3, .. }), "{err}");
+        assert!(err.to_string().starts_with("spmm:"), "{err}");
+
+        // absurd dims: typed overflow error, not a debug-build panic
+        let huge = Op::spmm(&h, &DenseHandle::new(vec![0.0; 8]), usize::MAX / 2);
+        assert!(matches!(huge.validate(), Err(OpError::DimOverflow { operand: "B", .. })));
+        assert!(huge.validate().unwrap_err().to_string().contains("overflows"));
+
+        // operand-class mismatch is typed too
+        let t = SparseHandle::tensor(Coo3::random((8, 6, 5), 30, 2));
+        let cross = Op { kind: OpKind::Spmm, a: t, dense: vec![], width: 4 };
+        assert!(matches!(cross.validate(), Err(OpError::OperandKind { got: "tensor", .. })));
+        assert!(cross.shape_key().is_none());
+    }
+
+    #[test]
+    fn quartet_arity_and_width_names() {
+        for kind in OpKind::ALL {
+            assert!(!kind.label().is_empty());
+            assert!(kind.dense_arity() >= 1 && kind.dense_arity() <= 2);
+        }
+        assert_eq!(OpKind::Sddmm.width_name(), "j_dim");
+        assert_eq!(OpKind::Ttm.to_string(), "ttm");
+        assert!(OpKind::Mttkrp.wants_tensor() && !OpKind::Spmm.wants_tensor());
+    }
+
+    #[test]
+    fn legacy_request_converts_without_cloning_payloads() {
+        let a = erdos_renyi(10, 10, 20, 2).to_csr();
+        let nnz = a.nnz();
+        let op: Op = Request::Spmm { a, b: vec![1.0; 10 * 2], n: 2 }.into();
+        assert_eq!(op.kind, OpKind::Spmm);
+        assert_eq!(op.a.nnz(), nnz);
+        assert_eq!(op.a.strong_count(), 1, "conversion moves the operand into one handle");
+        op.validate().unwrap();
+        // oracle agrees with the serial SpMM on the same data
+        let want = spmm_serial(op.a.as_matrix().unwrap(), &op.dense[0], 2);
+        assert_eq!(op.run_serial(), want);
+    }
+
+    #[test]
+    fn shape_keys_match_the_legacy_constructors() {
+        let a = erdos_renyi(32, 24, 90, 5).to_csr();
+        let stats = MatrixStats::of(&a);
+        let h = SparseHandle::matrix(a);
+        assert_eq!(
+            Op::spmm(&h, &DenseHandle::new(vec![0.0; 24 * 4]), 4).shape_key(),
+            Some(ShapeKey::spmm(&stats, 4))
+        );
+        let t = Coo3::random((16, 12, 10), 120, 7);
+        let th = SparseHandle::tensor(t.clone());
+        let x1 = DenseHandle::new(vec![0.0; 12 * 8]);
+        let x2 = DenseHandle::new(vec![0.0; 10 * 8]);
+        assert_eq!(
+            Op::mttkrp(&th, &x1, &x2, 8).shape_key(),
+            Some(ShapeKey::mttkrp(&t, 8)),
+            "handle-derived tensor keys agree with the Coo3 constructors"
+        );
+        let lx = DenseHandle::new(vec![0.0; 10 * 4]);
+        assert_eq!(Op::ttm(&th, &lx, 4).shape_key(), Some(ShapeKey::ttm(&t, 4)));
+    }
+}

@@ -23,14 +23,12 @@ use crate::algos::catalog::Algo;
 use crate::sparse::coo3::Coo3;
 use crate::sparse::{MatrixStats, SegStats};
 
-/// Which kernel scenario a plan serves.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum Scenario {
-    Spmm,
-    Sddmm,
-    Mttkrp,
-    Ttm,
-}
+use super::op::OpKind;
+
+/// Which kernel scenario a plan serves — the same vocabulary the serving
+/// API tags its ops with, so cache keys and [`Op`](super::Op)s never
+/// disagree about the algebra.
+pub type Scenario = OpKind;
 
 /// Fingerprint of a request's input dynamics: exact shape plus quantized
 /// structure statistics (skew, mean degree, empty rows) — the features the
@@ -93,12 +91,25 @@ impl ShapeKey {
         }
     }
 
+    /// MTTKRP key from an already-computed segment fingerprint (the
+    /// handle path: registration ran the [`SegStats`] pass once).
+    /// `inner_cols` is the tensor's `dim1 · dim2`.
+    pub fn mttkrp_stats(seg: &SegStats, inner_cols: usize, j_dim: u32) -> ShapeKey {
+        Self::tensor_quantized(Scenario::Mttkrp, inner_cols, j_dim, seg)
+    }
+
+    /// TTM key from an already-computed fiber fingerprint; `cols` is the
+    /// tensor's `dim2`.
+    pub fn ttm_stats(seg: &SegStats, cols: usize, l_dim: u32) -> ShapeKey {
+        Self::tensor_quantized(Scenario::Ttm, cols, l_dim, seg)
+    }
+
     pub fn mttkrp(a: &Coo3, j_dim: u32) -> ShapeKey {
-        Self::tensor_quantized(Scenario::Mttkrp, a.dim1 * a.dim2, j_dim, &SegStats::mttkrp(a))
+        Self::mttkrp_stats(&SegStats::mttkrp(a), a.dim1 * a.dim2, j_dim)
     }
 
     pub fn ttm(a: &Coo3, l_dim: u32) -> ShapeKey {
-        Self::tensor_quantized(Scenario::Ttm, a.dim2, l_dim, &SegStats::ttm(a))
+        Self::ttm_stats(&SegStats::ttm(a), a.dim2, l_dim)
     }
 }
 
@@ -167,13 +178,28 @@ impl PlanCache {
         key: ShapeKey,
         select: impl FnOnce() -> Algo,
     ) -> (Plan, bool) {
+        self.try_get_or_insert_with(key, || Some(select()))
+            .expect("infallible selector yielded no plan")
+    }
+
+    /// [`PlanCache::get_or_insert_with`] for fallible selection — the
+    /// generic serving path, where `select` returning `None` means no
+    /// legal launch shape covers the op's width. In that case nothing is
+    /// inserted, **no miss is recorded** (the op never consulted a plan),
+    /// and the caller routes the op to the CPU.
+    pub fn try_get_or_insert_with(
+        &self,
+        key: ShapeKey,
+        select: impl FnOnce() -> Option<Algo>,
+    ) -> Option<(Plan, bool)> {
         let mut inner = self.inner.lock().unwrap();
         if let Some(plan) = inner.map.get(&key) {
             let plan = *plan;
             drop(inner);
             self.hits.fetch_add(1, Ordering::Relaxed);
-            return (plan, true);
+            return Some((plan, true));
         }
+        let kind = select()?;
         while inner.map.len() >= self.capacity {
             match inner.order.pop_front() {
                 Some(old) => {
@@ -183,12 +209,12 @@ impl PlanCache {
                 None => break, // map/order drifted; never expected, but don't spin
             }
         }
-        let plan = Plan { kind: select(), origin: PlanOrigin::Selector };
+        let plan = Plan { kind, origin: PlanOrigin::Selector };
         inner.map.insert(key, plan);
         inner.order.push_back(key);
         drop(inner);
         self.misses.fetch_add(1, Ordering::Relaxed);
-        (plan, false)
+        Some((plan, false))
     }
 
     pub fn get(&self, key: &ShapeKey) -> Option<Plan> {
@@ -318,5 +344,25 @@ mod tests {
         assert!(cache.get(&keys[2]).is_some());
         // upgrading an evicted key is a no-op
         assert!(!cache.upgrade(keys[0], Algo::SgapNnzGroup { c: 1, r: 2 }));
+    }
+
+    #[test]
+    fn fallible_selection_leaves_no_trace() {
+        let cache = PlanCache::new(4);
+        let key = key_of(&erdos_renyi(16, 16, 30, 2).to_csr(), 4);
+        // an uncovered width: no insert, no miss recorded
+        assert!(cache.try_get_or_insert_with(key, || None).is_none());
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (0, 0, 0));
+        // a later legal selection for the same key proceeds normally
+        let (p, hit) =
+            cache.try_get_or_insert_with(key, || Some(Algo::SgapNnzGroup { c: 4, r: 8 })).unwrap();
+        assert!(!hit);
+        assert_eq!(p.origin, PlanOrigin::Selector);
+        // and hits do not run the selector at all
+        let (p2, hit2) =
+            cache.try_get_or_insert_with(key, || panic!("selector must not run on a hit")).unwrap();
+        assert!(hit2);
+        assert_eq!(p, p2);
     }
 }

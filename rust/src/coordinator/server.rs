@@ -1,163 +1,59 @@
 //! The coordinator service: a pool of worker threads serving the full
-//! §2.1 quartet — SpMM, SDDMM, MTTKRP, and TTM jobs — with tuner-aware
+//! §2.1 quartet — SpMM, SDDMM, MTTKRP, and TTM ops — with tuner-aware
 //! kernel selection through a shared [`PlanCache`].
 //!
 //! Architecture (see DESIGN.md §serving):
 //!
 //! ```text
-//! callers ── submit() ──▶ bounded JobQueue (backpressure) ──▶ N workers
-//!                                                              │
-//!                 ┌────────────────────────────────────────────┤
-//!                 ▼                                            ▼
-//!          PlanCache (ShapeKey → Algo, any kernel kind) Batcher per worker
-//!                 │ miss: Selector::select (fast)              │
-//!                 │ async: tuner::tune upgrades the plan       ▼
-//!                 ▼                                   PJRT / simulator /
-//!          background tuner thread                    CPU-serial backends
+//! callers ── submit(Op) ──▶ bounded JobQueue (backpressure) ──▶ N workers
+//!                                                                │
+//!                 ┌──────────────────────────────────────────────┤
+//!                 ▼                                              ▼
+//!          PlanCache (ShapeKey → Algo, any kernel kind)  Batcher per worker
+//!                 │ miss: Selector (model argmin)               │
+//!                 │ async: tuner upgrades the plan              ▼
+//!                 ▼                                     Executor stack:
+//!          background tuner thread                      PJRT ▸ sim ▸ CPU
 //! ```
 //!
-//! Callers `submit()` a [`Request`] and receive a one-shot response
-//! channel. Workers drain the shared queue (micro-batching under load via
-//! the [`Batcher`]), fingerprint each matrix, and consult the plan cache:
-//! the first sight of a shape runs the DA-SpMM-style [`Selector`] (a few
-//! float comparisons); repeats are served with the cached plan at zero
+//! Callers `submit()` a generic [`Op`] — built from `Arc`-backed operand
+//! handles, so a submit moves pointers, never operand data — and receive
+//! a [`Ticket`]. Workers drain the shared queue (micro-batching under
+//! load via the [`Batcher`], keyed by the typed [`BackendKind`]), ask
+//! their [`Executor`] stack for admission, and serve. The first sight of
+//! a shape runs the DA-SpMM-style [`Selector`] inside the sim executor's
+//! cache consult; repeats are served with the cached plan at zero
 //! selection cost. When `background_tune` is on, every cache miss also
-//! enqueues a grid-search refinement that later *upgrades* the cached plan
-//! to the sweep's winner, so sustained traffic converges on the tuned
-//! kernel. PJRT artifacts (when compiled in and present) serve admitted
-//! SpMM requests on the numeric hot path; everything else runs the chosen
-//! kernel on the SIMT simulator, with the serial CPU path as the
-//! last-resort fallback.
+//! enqueues a grid-search refinement that later *upgrades* the cached
+//! plan to the sweep's winner, so sustained traffic converges on the
+//! tuned kernel.
+//!
+//! The legacy per-algebra surface (`Request`, `spmm_blocking`,
+//! `submit_mttkrp`, …) is kept as thin shims over the one generic
+//! `submit(Op)` path; prefer [`Session`](super::Session) + handles in
+//! new code.
 
 use std::path::PathBuf;
-use std::sync::mpsc::{channel, Receiver, Sender, SyncSender, TrySendError};
+use std::sync::mpsc::{channel, Sender, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::algos::catalog::Algo;
-use crate::algos::cpu_ref::spmm_serial;
-use crate::algos::mttkrp::{mttkrp_serial, ttm_serial};
-use crate::algos::sddmm::sddmm_serial;
-use crate::runtime::{ArtifactKind, Registry, Runtime};
+use crate::runtime::Registry;
 use crate::sim::{HwProfile, Machine};
 use crate::sparse::coo3::Coo3;
-use crate::sparse::{Csr, MatrixStats, SplitMix64};
-use crate::tuner::{self, CostModel, Selector};
+use crate::sparse::{Csr, SplitMix64};
+use crate::tuner::{self, Selector};
 
 use super::batcher::Batcher;
+use super::executor::{Admission, BackendKind, Executor, ExecutorEnv, ExecutorRegistry, TuneTask};
 use super::metrics::Metrics;
-use super::plan_cache::{Plan, PlanCache, Scenario, ShapeKey};
+use super::op::{Op, OpKind, Request, SparseData};
+use super::plan_cache::{Plan, PlanCache};
 use super::pool::JobQueue;
-
-/// A serving job — one variant per algebra of the §2.1 quartet: SpMM,
-/// SDDMM (`Y = A ⊙ (X1 · X2)`, one output per non-zero of `A`), MTTKRP,
-/// and TTM (order-3 COO tensor contractions).
-#[derive(Debug, Clone)]
-pub enum Request {
-    /// `C = A · B` with `B` row-major `[a.cols × n]`.
-    Spmm { a: Csr, b: Vec<f32>, n: usize },
-    /// `Y(pos) = A_vals(pos) · dot(X1[i,:], X2[:,k])` with `x1` row-major
-    /// `[a.rows × j_dim]` and `x2` row-major `[j_dim × a.cols]`.
-    Sddmm { a: Csr, x1: Vec<f32>, x2: Vec<f32>, j_dim: usize },
-    /// `Y(i,j) = Σ A(i,k,l)·X1(k,j)·X2(l,j)` with `x1` row-major
-    /// `[a.dim1 × j_dim]`, `x2` row-major `[a.dim2 × j_dim]`; the response
-    /// is row-major `[a.dim0 × j_dim]`.
-    Mttkrp { a: Coo3, x1: Vec<f32>, x2: Vec<f32>, j_dim: usize },
-    /// `Y(i,j,l) = Σ A(i,j,k)·X1(k,l)` with `x1` row-major
-    /// `[a.dim2 × l_dim]`; the response is row-major
-    /// `[(a.dim0·a.dim1) × l_dim]`.
-    Ttm { a: Coo3, x1: Vec<f32>, l_dim: usize },
-}
-
-impl Request {
-    fn validate(&self) -> Result<(), String> {
-        match self {
-            Request::Spmm { a, b, n } => {
-                if *n == 0 {
-                    return Err("spmm: n must be >= 1".into());
-                }
-                if b.len() != a.cols * n {
-                    return Err(format!(
-                        "spmm: B has {} elements, want cols x n = {} x {}",
-                        b.len(),
-                        a.cols,
-                        n
-                    ));
-                }
-                Ok(())
-            }
-            Request::Sddmm { a, x1, x2, j_dim } => {
-                if *j_dim == 0 {
-                    return Err("sddmm: j_dim must be >= 1".into());
-                }
-                if x1.len() != a.rows * j_dim {
-                    return Err(format!(
-                        "sddmm: X1 has {} elements, want rows x j = {} x {}",
-                        x1.len(),
-                        a.rows,
-                        j_dim
-                    ));
-                }
-                if x2.len() != j_dim * a.cols {
-                    return Err(format!(
-                        "sddmm: X2 has {} elements, want j x cols = {} x {}",
-                        x2.len(),
-                        j_dim,
-                        a.cols
-                    ));
-                }
-                Ok(())
-            }
-            Request::Mttkrp { a, x1, x2, j_dim } => {
-                if *j_dim == 0 {
-                    return Err("mttkrp: j_dim must be >= 1".into());
-                }
-                if x1.len() != a.dim1 * j_dim {
-                    return Err(format!(
-                        "mttkrp: X1 has {} elements, want dim1 x j = {} x {}",
-                        x1.len(),
-                        a.dim1,
-                        j_dim
-                    ));
-                }
-                if x2.len() != a.dim2 * j_dim {
-                    return Err(format!(
-                        "mttkrp: X2 has {} elements, want dim2 x j = {} x {}",
-                        x2.len(),
-                        a.dim2,
-                        j_dim
-                    ));
-                }
-                Ok(())
-            }
-            Request::Ttm { a, x1, l_dim } => {
-                if *l_dim == 0 {
-                    return Err("ttm: l_dim must be >= 1".into());
-                }
-                if x1.len() != a.dim2 * l_dim {
-                    return Err(format!(
-                        "ttm: X1 has {} elements, want dim2 x l = {} x {}",
-                        x1.len(),
-                        a.dim2,
-                        l_dim
-                    ));
-                }
-                Ok(())
-            }
-        }
-    }
-
-    /// Inputs the kernels do not cover (served straight on the CPU path).
-    fn degenerate(&self) -> bool {
-        match self {
-            Request::Spmm { a, .. } | Request::Sddmm { a, .. } => a.nnz() == 0 || a.rows == 0,
-            Request::Mttkrp { a, .. } | Request::Ttm { a, .. } => a.nnz() == 0 || a.dim0 == 0,
-        }
-    }
-}
+use super::session::Ticket;
 
 /// The served result.
 #[derive(Debug, Clone)]
@@ -165,36 +61,37 @@ pub struct Response {
     /// SpMM: row-major `[rows × n]`; SDDMM: one value per non-zero;
     /// MTTKRP: row-major `[dim0 × j]`; TTM: row-major `[(dim0·dim1) × l]`.
     pub c: Vec<f32>,
-    /// Which path served it: `pjrt:<artifact>`, `sim:<family>`,
-    /// `cpu-serial`, or `cpu-fallback`.
-    pub backend: String,
-    /// The plan-cache choice that routed this request (None on the PJRT
-    /// and degenerate-input paths, which bypass the cache).
-    pub plan: Option<String>,
+    /// Which path served it. `Display` keeps the legacy label strings
+    /// (`pjrt:<artifact>`, `sim:<family>`, `cpu-serial`, `cpu-fallback`),
+    /// so logs and metrics are unchanged.
+    pub backend: BackendKind,
+    /// The plan-cache choice that routed this op (`None` on the PJRT and
+    /// degenerate-input paths, which bypass the cache).
+    pub plan: Option<Plan>,
     /// Whether the plan came from a cache hit (vs a fresh selection).
     pub cache_hit: bool,
     pub latency_us: u64,
 }
 
+impl Response {
+    /// Human-readable label of the routed plan (the `Algo` name), when a
+    /// plan routed this op.
+    pub fn plan_label(&self) -> Option<String> {
+        self.plan.map(|p| p.kind.name())
+    }
+}
+
 struct Job {
-    req: Request,
+    op: Op,
     submitted: Instant,
     resp: Sender<Result<Response, String>>,
 }
 
-/// Where a routed job executes.
-enum Backend {
-    /// PJRT artifact by name (numeric hot path).
-    Pjrt(String),
-    /// Simulator execution of a plan-cache choice.
-    Sim(Plan, bool),
-    /// Serial CPU path (degenerate inputs the kernels don't cover).
-    Cpu,
-}
-
 struct Routed {
     job: Job,
-    backend: Backend,
+    adm: Admission,
+    /// Index of the admitting executor in the worker's stack.
+    exec: usize,
 }
 
 /// Tuning parameters of the serving layer.
@@ -224,6 +121,10 @@ pub struct CoordinatorConfig {
     /// argmin (still O(stats), no simulation) instead of the bare
     /// decision tree.
     pub model_select: bool,
+    /// The execution backends, in admission-priority order. Defaults to
+    /// the standard PJRT ▸ simulator ▸ CPU stack; push a custom
+    /// [`Executor`] factory to plug in a new backend.
+    pub executors: ExecutorRegistry,
 }
 
 impl Default for CoordinatorConfig {
@@ -241,33 +142,18 @@ impl Default for CoordinatorConfig {
             selector: Selector::default(),
             tune_top_k: tuner::DEFAULT_TOP_K,
             model_select: true,
+            executors: ExecutorRegistry::standard(),
         }
     }
 }
 
-/// What the background tuner sweeps over: the request's sparse operand.
-enum TuneInput {
-    Matrix(Csr),
-    Tensor(Coo3),
-}
-
-struct TuneTask {
-    key: ShapeKey,
-    input: TuneInput,
-    width: u32,
-}
-
 struct WorkerCtx {
     queue: Arc<JobQueue<Job>>,
-    metrics: Arc<Metrics>,
-    plan_cache: Arc<PlanCache>,
-    selector: Selector,
-    /// `Some` when miss-path selection goes through the analytic model.
-    model: Option<CostModel>,
-    machine: Machine,
-    artifacts_dir: Option<PathBuf>,
+    /// Shared context the worker hands its executors; the worker's own
+    /// metrics writes go through `env.metrics` too (one sink, one wire).
+    env: ExecutorEnv,
+    registry: ExecutorRegistry,
     max_batch: usize,
-    tune_tx: Option<SyncSender<TuneTask>>,
 }
 
 /// Handle to a running coordinator.
@@ -285,8 +171,9 @@ impl Coordinator {
     ///
     /// The artifacts manifest (if configured) is validated here so a bad
     /// directory fails fast; the PJRT clients themselves are `!Send` and
-    /// are constructed inside each worker thread. A worker whose client
-    /// fails to come up degrades to the simulator/CPU backends.
+    /// are constructed inside each worker thread by the executor
+    /// factories. A worker whose client fails to come up degrades to the
+    /// rest of its executor stack.
     pub fn start(cfg: CoordinatorConfig) -> Result<Coordinator> {
         anyhow::ensure!(cfg.workers >= 1, "need at least one worker");
         anyhow::ensure!(cfg.max_batch >= 1, "max_batch must be >= 1");
@@ -314,17 +201,19 @@ impl Coordinator {
 
         let mut workers = Vec::with_capacity(cfg.workers);
         for i in 0..cfg.workers {
-            let machine = Machine::new(cfg.hw);
             let ctx = WorkerCtx {
                 queue: queue.clone(),
-                metrics: metrics.clone(),
-                plan_cache: plan_cache.clone(),
-                selector: cfg.selector,
-                model: cfg.model_select.then(|| CostModel::new(&machine)),
-                machine,
-                artifacts_dir: cfg.artifacts_dir.clone(),
+                env: ExecutorEnv {
+                    hw: cfg.hw,
+                    selector: cfg.selector,
+                    model_select: cfg.model_select,
+                    plan_cache: plan_cache.clone(),
+                    metrics: metrics.clone(),
+                    artifacts_dir: cfg.artifacts_dir.clone(),
+                    tune_tx: tune_tx.clone(),
+                },
+                registry: cfg.executors.clone(),
                 max_batch: cfg.max_batch,
-                tune_tx: tune_tx.clone(),
             };
             workers.push(
                 std::thread::Builder::new()
@@ -336,30 +225,30 @@ impl Coordinator {
         Ok(Coordinator { queue, workers, tune_tx, tuner, metrics, plan_cache })
     }
 
-    /// Submit a job; the returned channel yields the response. Blocks while
-    /// the job queue is full (backpressure).
-    pub fn submit(&self, req: Request) -> Receiver<Result<Response, String>> {
+    /// Submit through the one generic serving path: any [`Op`] (or a
+    /// legacy [`Request`], which converts by moving its operands into
+    /// fresh handles). Blocks while the job queue is full (backpressure);
+    /// the returned [`Ticket`] yields the response.
+    pub fn submit(&self, op: impl Into<Op>) -> Ticket {
         let (rtx, rrx) = channel();
-        let job = Job { req, submitted: Instant::now(), resp: rtx };
+        let job = Job { op: op.into(), submitted: Instant::now(), resp: rtx };
         // a push error means the pool is shut down; dropping the job drops
-        // its response sender, so the caller sees a disconnected receiver.
+        // its response sender, so the caller sees a disconnected ticket.
         // Only accepted jobs count as submitted — that keeps the metrics
         // identity `completed + errors == submitted` true across close().
         if self.queue.push(job).is_ok() {
             self.metrics.on_submit();
         }
-        rrx
+        Ticket::new(rrx)
     }
 
-    /// Convenience: submit an SpMM job and wait.
+    /// Legacy shim: submit an SpMM job and wait. Prefer
+    /// [`Session::spmm`](super::Session::spmm) with registered handles.
     pub fn spmm_blocking(&self, a: Csr, b: Vec<f32>, n: usize) -> Result<Response> {
-        let rx = self.submit(Request::Spmm { a, b, n });
-        rx.recv()
-            .map_err(|_| anyhow::anyhow!("coordinator worker gone"))?
-            .map_err(|e| anyhow::anyhow!(e))
+        self.submit(Request::Spmm { a, b, n }).wait()
     }
 
-    /// Convenience: submit an SDDMM job and wait.
+    /// Legacy shim: submit an SDDMM job and wait.
     pub fn sddmm_blocking(
         &self,
         a: Csr,
@@ -367,24 +256,15 @@ impl Coordinator {
         x2: Vec<f32>,
         j_dim: usize,
     ) -> Result<Response> {
-        let rx = self.submit(Request::Sddmm { a, x1, x2, j_dim });
-        rx.recv()
-            .map_err(|_| anyhow::anyhow!("coordinator worker gone"))?
-            .map_err(|e| anyhow::anyhow!(e))
+        self.submit(Request::Sddmm { a, x1, x2, j_dim }).wait()
     }
 
-    /// Submit an MTTKRP job; the returned channel yields the response.
-    pub fn submit_mttkrp(
-        &self,
-        a: Coo3,
-        x1: Vec<f32>,
-        x2: Vec<f32>,
-        j_dim: usize,
-    ) -> Receiver<Result<Response, String>> {
+    /// Legacy shim: submit an MTTKRP job; the ticket yields the response.
+    pub fn submit_mttkrp(&self, a: Coo3, x1: Vec<f32>, x2: Vec<f32>, j_dim: usize) -> Ticket {
         self.submit(Request::Mttkrp { a, x1, x2, j_dim })
     }
 
-    /// Convenience: submit an MTTKRP job and wait.
+    /// Legacy shim: submit an MTTKRP job and wait.
     pub fn mttkrp_blocking(
         &self,
         a: Coo3,
@@ -392,33 +272,22 @@ impl Coordinator {
         x2: Vec<f32>,
         j_dim: usize,
     ) -> Result<Response> {
-        let rx = self.submit_mttkrp(a, x1, x2, j_dim);
-        rx.recv()
-            .map_err(|_| anyhow::anyhow!("coordinator worker gone"))?
-            .map_err(|e| anyhow::anyhow!(e))
+        self.submit_mttkrp(a, x1, x2, j_dim).wait()
     }
 
-    /// Submit a TTM job; the returned channel yields the response.
-    pub fn submit_ttm(
-        &self,
-        a: Coo3,
-        x1: Vec<f32>,
-        l_dim: usize,
-    ) -> Receiver<Result<Response, String>> {
+    /// Legacy shim: submit a TTM job; the ticket yields the response.
+    pub fn submit_ttm(&self, a: Coo3, x1: Vec<f32>, l_dim: usize) -> Ticket {
         self.submit(Request::Ttm { a, x1, l_dim })
     }
 
-    /// Convenience: submit a TTM job and wait.
+    /// Legacy shim: submit a TTM job and wait.
     pub fn ttm_blocking(&self, a: Coo3, x1: Vec<f32>, l_dim: usize) -> Result<Response> {
-        let rx = self.submit_ttm(a, x1, l_dim);
-        rx.recv()
-            .map_err(|_| anyhow::anyhow!("coordinator worker gone"))?
-            .map_err(|e| anyhow::anyhow!(e))
+        self.submit_ttm(a, x1, l_dim).wait()
     }
 
     /// Stop accepting new work without joining: in-flight and queued jobs
     /// are still served. Subsequent `submit` calls yield a disconnected
-    /// receiver. Call [`Coordinator::shutdown`] (or drop) to join.
+    /// ticket. Call [`Coordinator::shutdown`] (or drop) to join.
     pub fn close(&self) {
         self.queue.close();
     }
@@ -451,284 +320,89 @@ impl Drop for Coordinator {
 
 // ---- worker ---------------------------------------------------------------
 
-/// Batcher key for a routed job: one bucket per backend family.
-fn batch_label(backend: &Backend) -> String {
-    match backend {
-        Backend::Pjrt(name) => format!("pjrt:{name}"),
-        Backend::Sim(plan, _) => format!("sim:{}", plan.kind.family_label()),
-        Backend::Cpu => "cpu-serial".to_string(),
-    }
-}
-
 fn worker_loop(ctx: WorkerCtx) {
-    // The PJRT client is !Send, so each worker owns its own Runtime (the
-    // executable cache stays hot per worker). In builds without the `pjrt`
-    // feature `Runtime::available()` is false and this stays `None`.
-    let mut runtime: Option<Runtime> = if Runtime::available() {
-        ctx.artifacts_dir.as_ref().and_then(|d| Runtime::load(d).ok())
-    } else {
-        None
-    };
-
-    let mut batcher: Batcher<String, Routed> = Batcher::new(ctx.max_batch);
+    // Each worker instantiates its own executor stack (the PJRT client is
+    // !Send, and per-worker executors keep their caches hot).
+    let mut executors = ctx.registry.build(&ctx.env);
+    let mut batcher: Batcher<BackendKind, Routed> = Batcher::new(ctx.max_batch);
     while let Some(job) = ctx.queue.pop() {
         let mut drained = 1usize;
-        enqueue(job, &ctx, &runtime, &mut batcher);
+        enqueue(job, &mut executors, &ctx, &mut batcher);
         // opportunistic micro-batch: grab whatever else is queued, up to
         // the batch window, without blocking
         while drained < ctx.max_batch {
             match ctx.queue.try_pop() {
                 Some(job) => {
-                    enqueue(job, &ctx, &runtime, &mut batcher);
+                    enqueue(job, &mut executors, &ctx, &mut batcher);
                     drained += 1;
                 }
                 None => break,
             }
         }
-        while let Some((label, jobs)) = batcher.next_batch() {
-            ctx.metrics.on_batch();
+        while let Some((_, jobs)) = batcher.next_batch() {
+            ctx.env.metrics.on_batch();
             for routed in jobs {
-                serve_one(&label, routed, &mut runtime, &ctx);
+                serve_one(routed, &mut executors, &ctx);
             }
         }
     }
 }
 
-/// Validate, route (plan-cache consult), and stage a job for batching.
-/// Invalid requests are answered immediately and never enter a batch.
-fn enqueue(job: Job, ctx: &WorkerCtx, runtime: &Option<Runtime>, batcher: &mut Batcher<String, Routed>) {
-    if let Err(e) = job.req.validate() {
-        ctx.metrics.on_error();
-        let _ = job.resp.send(Err(e));
+/// Validate, admit (priority scan over the executor stack), and stage a
+/// job for batching. Invalid ops — and ops no executor admits — are
+/// answered immediately and never enter a batch.
+fn enqueue(
+    job: Job,
+    executors: &mut [Box<dyn Executor>],
+    ctx: &WorkerCtx,
+    batcher: &mut Batcher<BackendKind, Routed>,
+) {
+    if let Err(e) = job.op.validate() {
+        ctx.env.metrics.on_error();
+        let _ = job.resp.send(Err(e.to_string()));
         return;
     }
-    let backend = route(&job.req, ctx, runtime);
-    let label = batch_label(&backend);
-    batcher.push(label, Routed { job, backend });
-}
-
-/// Pick the backend for a request. PJRT admission wins (it is the numeric
-/// hot path); otherwise the plan cache decides which kernel the simulator
-/// runs; degenerate inputs — and tensor widths no kernel launch shape
-/// covers — go straight to the serial CPU path.
-fn route(req: &Request, ctx: &WorkerCtx, runtime: &Option<Runtime>) -> Backend {
-    if req.degenerate() {
-        return Backend::Cpu;
-    }
-    match req {
-        Request::Spmm { a, n, .. } => {
-            if let Some(rt) = runtime {
-                if let Some(spec) =
-                    rt.registry.route(ArtifactKind::SpmmNnzSr, a.rows, a.cols, a.nnz())
-                {
-                    if spec.n == *n {
-                        return Backend::Pjrt(spec.name.clone());
-                    }
-                }
-            }
-            let stats = MatrixStats::of(a);
-            let key = ShapeKey::spmm(&stats, *n as u32);
-            let (plan, hit) = ctx.plan_cache.get_or_insert_with(key, || match &ctx.model {
-                Some(model) => ctx.selector.select_model(model, &stats, *n as u32),
-                None => ctx.selector.select(&stats, *n as u32),
-            });
-            note_cache(ctx, hit);
-            if !hit {
-                request_tune(ctx, key, || TuneInput::Matrix(a.clone()), *n as u32);
-            }
-            Backend::Sim(plan, hit)
-        }
-        Request::Sddmm { a, j_dim, .. } => {
-            let stats = MatrixStats::of(a);
-            let key = ShapeKey::sddmm(&stats, *j_dim as u32);
-            let (plan, hit) = ctx.plan_cache.get_or_insert_with(key, || match &ctx.model {
-                Some(model) => ctx.selector.select_sddmm_model(model, &stats, *j_dim as u32),
-                None => ctx.selector.select_sddmm(&stats, *j_dim as u32),
-            });
-            note_cache(ctx, hit);
-            if !hit {
-                request_tune(ctx, key, || TuneInput::Matrix(a.clone()), *j_dim as u32);
-            }
-            Backend::Sim(plan, hit)
-        }
-        Request::Mttkrp { a, j_dim, .. } => {
-            let fresh = match &ctx.model {
-                Some(model) => ctx.selector.select_mttkrp_model(model, a, *j_dim as u32),
-                None => ctx.selector.select_mttkrp(a, *j_dim as u32),
-            };
-            match fresh {
-                Some(fresh) => {
-                    let key = ShapeKey::mttkrp(a, *j_dim as u32);
-                    let (plan, hit) = ctx.plan_cache.get_or_insert_with(key, || fresh);
-                    note_cache(ctx, hit);
-                    if !hit {
-                        request_tune(ctx, key, || TuneInput::Tensor(a.clone()), *j_dim as u32);
-                    }
-                    Backend::Sim(plan, hit)
-                }
-                None => Backend::Cpu,
-            }
-        }
-        Request::Ttm { a, l_dim, .. } => {
-            let fresh = match &ctx.model {
-                Some(model) => ctx.selector.select_ttm_model(model, a, *l_dim as u32),
-                None => ctx.selector.select_ttm(a, *l_dim as u32),
-            };
-            match fresh {
-                Some(fresh) => {
-                    let key = ShapeKey::ttm(a, *l_dim as u32);
-                    let (plan, hit) = ctx.plan_cache.get_or_insert_with(key, || fresh);
-                    note_cache(ctx, hit);
-                    if !hit {
-                        request_tune(ctx, key, || TuneInput::Tensor(a.clone()), *l_dim as u32);
-                    }
-                    Backend::Sim(plan, hit)
-                }
-                None => Backend::Cpu,
-            }
+    for (exec, ex) in executors.iter_mut().enumerate() {
+        if let Some(adm) = ex.admit(&job.op) {
+            batcher.push(adm.backend.clone(), Routed { job, adm, exec });
+            return;
         }
     }
+    // unreachable with the standard stack (the CPU executor admits all)
+    ctx.env.metrics.on_error();
+    let _ = job.resp.send(Err(format!("no executor admitted this {} op", job.op.kind)));
 }
 
-fn note_cache(ctx: &WorkerCtx, hit: bool) {
-    if hit {
-        ctx.metrics.on_cache_hit();
-    } else {
-        ctx.metrics.on_cache_miss();
-    }
-}
-
-/// Hand a cache miss to the background tuner (best-effort: a full refine
-/// queue just means this shape keeps its selector plan a little longer).
-/// The operand clone happens lazily, only when a tuner thread exists.
-fn request_tune(ctx: &WorkerCtx, key: ShapeKey, input: impl FnOnce() -> TuneInput, width: u32) {
-    if let Some(tx) = &ctx.tune_tx {
-        match tx.try_send(TuneTask { key, input: input(), width }) {
-            Ok(()) | Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {}
-        }
-    }
-}
-
-fn serve_one(label: &str, routed: Routed, runtime: &mut Option<Runtime>, ctx: &WorkerCtx) {
-    let Routed { job, backend } = routed;
-    let (plan_desc, cache_hit) = match &backend {
-        Backend::Sim(plan, hit) => (Some(plan.kind.name()), *hit),
-        _ => (None, false),
-    };
-    // (result, backend label actually used)
-    let outcome: (Result<Vec<f32>, String>, String) = match (&backend, &job.req) {
-        (Backend::Pjrt(name), Request::Spmm { a, b, n }) => {
-            let rt = runtime.as_mut().expect("routed to artifact without runtime");
-            match rt.run_spmm_nnz(name, a, b) {
-                Ok(c) => (Ok(c), label.to_string()),
-                Err(_) => {
-                    ctx.metrics.on_fallback();
-                    (Ok(spmm_serial(a, b, *n)), "cpu-fallback".to_string())
-                }
-            }
-        }
-        (Backend::Sim(plan, _), Request::Spmm { a, b, n }) => match plan.kind {
-            // a colliding fingerprint can hand an SpMM job an SDDMM plan;
-            // serve it correctly on the CPU rather than guessing a kernel
-            Algo::Sddmm(_) => {
-                ctx.metrics.on_fallback();
-                (Ok(spmm_serial(a, b, *n)), "cpu-fallback".to_string())
-            }
-            algo => match algo.run(&ctx.machine, a, b, *n as u32) {
-                Ok(res) => (Ok(res.run.c), label.to_string()),
-                Err(_) => {
-                    ctx.metrics.on_fallback();
-                    (Ok(spmm_serial(a, b, *n)), "cpu-fallback".to_string())
-                }
-            },
-        },
-        (Backend::Sim(plan, _), Request::Sddmm { a, x1, x2, j_dim }) => match plan.kind {
-            algo @ Algo::Sddmm(_) => match algo.run_sddmm(&ctx.machine, a, x1, x2) {
-                Ok(res) => (Ok(res.run.c), label.to_string()),
-                Err(_) => {
-                    ctx.metrics.on_fallback();
-                    (Ok(sddmm_serial(a, x1, x2, *j_dim)), "cpu-fallback".to_string())
-                }
-            },
-            _ => {
-                ctx.metrics.on_fallback();
-                (Ok(sddmm_serial(a, x1, x2, *j_dim)), "cpu-fallback".to_string())
-            }
-        },
-        (Backend::Sim(plan, _), Request::Mttkrp { a, x1, x2, j_dim }) => match plan.kind {
-            algo @ Algo::Mttkrp(_) => match algo.run_mttkrp(&ctx.machine, a, x1, x2) {
-                Ok(res) => (Ok(res.run.c), label.to_string()),
-                Err(_) => {
-                    ctx.metrics.on_fallback();
-                    (Ok(mttkrp_serial(a, x1, x2, *j_dim)), "cpu-fallback".to_string())
-                }
-            },
-            _ => {
-                ctx.metrics.on_fallback();
-                (Ok(mttkrp_serial(a, x1, x2, *j_dim)), "cpu-fallback".to_string())
-            }
-        },
-        (Backend::Sim(plan, _), Request::Ttm { a, x1, l_dim }) => match plan.kind {
-            algo @ Algo::Ttm(_) => match algo.run_ttm(&ctx.machine, a, x1) {
-                Ok(res) => (Ok(res.run.c), label.to_string()),
-                Err(_) => {
-                    ctx.metrics.on_fallback();
-                    (Ok(ttm_serial(a, x1, *l_dim)), "cpu-fallback".to_string())
-                }
-            },
-            _ => {
-                ctx.metrics.on_fallback();
-                (Ok(ttm_serial(a, x1, *l_dim)), "cpu-fallback".to_string())
-            }
-        },
-        (Backend::Cpu, Request::Spmm { a, b, n }) => {
-            (Ok(spmm_serial(a, b, *n)), "cpu-serial".to_string())
-        }
-        (Backend::Cpu, Request::Sddmm { a, x1, x2, j_dim }) => {
-            (Ok(sddmm_serial(a, x1, x2, *j_dim)), "cpu-serial".to_string())
-        }
-        (Backend::Cpu, Request::Mttkrp { a, x1, x2, j_dim }) => {
-            (Ok(mttkrp_serial(a, x1, x2, *j_dim)), "cpu-serial".to_string())
-        }
-        (Backend::Cpu, Request::Ttm { a, x1, l_dim }) => {
-            (Ok(ttm_serial(a, x1, *l_dim)), "cpu-serial".to_string())
-        }
-        // route() never pairs Pjrt with the non-SpMM scenarios
-        (Backend::Pjrt(_), Request::Sddmm { a, x1, x2, j_dim }) => {
-            (Ok(sddmm_serial(a, x1, x2, *j_dim)), "cpu-fallback".to_string())
-        }
-        (Backend::Pjrt(_), Request::Mttkrp { a, x1, x2, j_dim }) => {
-            (Ok(mttkrp_serial(a, x1, x2, *j_dim)), "cpu-fallback".to_string())
-        }
-        (Backend::Pjrt(_), Request::Ttm { a, x1, l_dim }) => {
-            (Ok(ttm_serial(a, x1, *l_dim)), "cpu-fallback".to_string())
+/// Run one admitted job. An executor failure (or an incompatible cached
+/// plan) drops to the serial CPU oracle — an op can lose latency, never
+/// its response.
+fn serve_one(routed: Routed, executors: &mut [Box<dyn Executor>], ctx: &WorkerCtx) {
+    let Routed { job, adm, exec } = routed;
+    let (c, backend) = match executors[exec].execute(&job.op, &adm) {
+        Ok(c) => (c, adm.backend),
+        Err(_) => {
+            ctx.env.metrics.on_fallback();
+            (job.op.run_serial(), BackendKind::CpuFallback)
         }
     };
     let latency = job.submitted.elapsed();
-    match outcome {
-        (Ok(c), served_by) => {
-            ctx.metrics.on_complete(&served_by, latency);
-            let _ = job.resp.send(Ok(Response {
-                c,
-                backend: served_by,
-                plan: plan_desc,
-                cache_hit,
-                latency_us: latency.as_micros() as u64,
-            }));
-        }
-        (Err(e), _) => {
-            ctx.metrics.on_error();
-            let _ = job.resp.send(Err(e));
-        }
-    }
+    ctx.env.metrics.on_complete(&backend.to_string(), latency);
+    let _ = job.resp.send(Ok(Response {
+        c,
+        backend,
+        plan: adm.plan,
+        cache_hit: adm.cache_hit,
+        latency_us: latency.as_micros() as u64,
+    }));
 }
 
 // ---- background tuner ------------------------------------------------------
 
 /// Drain refinement tasks; each winning sweep upgrades the cached plan.
-/// Exits when every sender (the workers) is gone.
+/// Exits when every sender (the workers' executor envs) is gone.
 ///
-/// Sweeps go through the model-pruned entry points
+/// Tasks carry a zero-copy [`SparseHandle`](super::SparseHandle) on the
+/// operand. Sweeps go through the model-pruned entry points
 /// (`tuner::search::tune*_pruned`): the analytic model prices the whole
 /// grid in O(stats) and only `top_k` survivors are interpreted warp-by-
 /// warp — the dominant cost of this hot path before the model existed.
@@ -756,8 +430,8 @@ fn tuner_loop(
         // deterministic dense operands: only the timing matters
         let seed = (task.key.rows as u64) ^ ((task.key.nnz as u64) << 20) ^ task.width as u64;
         let mut rng = SplitMix64::new(seed);
-        let pruned = match (task.key.scenario, &task.input) {
-            (Scenario::Spmm, TuneInput::Matrix(a)) => {
+        let pruned = match (task.key.scenario, task.handle.data()) {
+            (OpKind::Spmm, SparseData::Matrix(a)) => {
                 let cands = tuner::space::sgap_candidates(task.width);
                 if cands.is_empty() {
                     continue;
@@ -766,14 +440,14 @@ fn tuner_loop(
                     (0..a.cols * task.width as usize).map(|_| rng.value()).collect();
                 tuner::search::tune_pruned(machine, &cands, a, &b, task.width, top_k)
             }
-            (Scenario::Sddmm, TuneInput::Matrix(a)) => {
+            (OpKind::Sddmm, SparseData::Matrix(a)) => {
                 let j = task.width as usize;
                 let x1: Vec<f32> = (0..a.rows * j).map(|_| rng.value()).collect();
                 let x2: Vec<f32> = (0..j * a.cols).map(|_| rng.value()).collect();
                 let cands = tuner::space::sddmm_candidates(task.width);
                 tuner::search::tune_sddmm_pruned(machine, &cands, a, &x1, &x2, top_k)
             }
-            (Scenario::Mttkrp, TuneInput::Tensor(a)) => {
+            (OpKind::Mttkrp, SparseData::Tensor(a)) => {
                 let cands = tuner::space::mttkrp_candidates(task.width);
                 if cands.is_empty() {
                     continue;
@@ -783,7 +457,7 @@ fn tuner_loop(
                 let x2: Vec<f32> = (0..a.dim2 * j).map(|_| rng.value()).collect();
                 tuner::search::tune_mttkrp_pruned(machine, &cands, a, &x1, &x2, top_k)
             }
-            (Scenario::Ttm, TuneInput::Tensor(a)) => {
+            (OpKind::Ttm, SparseData::Tensor(a)) => {
                 let cands = tuner::space::ttm_candidates(task.width);
                 if cands.is_empty() {
                     continue;
@@ -792,7 +466,7 @@ fn tuner_loop(
                 let x1: Vec<f32> = (0..a.dim2 * l).map(|_| rng.value()).collect();
                 tuner::search::tune_ttm_pruned(machine, &cands, a, &x1, top_k)
             }
-            // a scenario/operand mismatch cannot be produced by route();
+            // a scenario/operand mismatch cannot be produced by admission;
             // drop rather than guess
             _ => continue,
         };
@@ -808,9 +482,11 @@ fn tuner_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::algos::cpu_ref::max_rel_err;
-    use crate::coordinator::plan_cache::PlanOrigin;
-    use crate::sparse::{erdos_renyi, SplitMix64};
+    use crate::algos::cpu_ref::{max_rel_err, spmm_serial};
+    use crate::algos::mttkrp::mttkrp_serial;
+    use crate::algos::sddmm::sddmm_serial;
+    use crate::coordinator::plan_cache::{PlanOrigin, ShapeKey};
+    use crate::sparse::{erdos_renyi, MatrixStats};
 
     fn small_cfg() -> CoordinatorConfig {
         CoordinatorConfig { workers: 2, ..CoordinatorConfig::default() }
@@ -824,9 +500,9 @@ mod tests {
         let b: Vec<f32> = (0..64 * 4).map(|_| rng.value()).collect();
         let want = spmm_serial(&a, &b, 4);
         let resp = coord.spmm_blocking(a.clone(), b.clone(), 4).unwrap();
-        assert!(resp.backend.starts_with("sim:"), "backend {}", resp.backend);
+        assert!(resp.backend.is_sim(), "backend {}", resp.backend);
         assert!(!resp.cache_hit, "first sight must be a miss");
-        assert!(resp.plan.is_some());
+        assert!(resp.plan.is_some() && resp.plan_label().is_some());
         assert!(max_rel_err(&resp.c, &want) < 5e-4);
         // repeat: identical shape hits the cache and matches bit-for-bit
         let resp2 = coord.spmm_blocking(a, b, 4).unwrap();
@@ -851,7 +527,12 @@ mod tests {
         let want = sddmm_serial(&a, &x1, &x2, j);
         let resp = coord.sddmm_blocking(a, x1, x2, j).unwrap();
         assert!(max_rel_err(&resp.c, &want) < 5e-4);
-        assert!(resp.backend.starts_with("sim:sddmm"), "backend {}", resp.backend);
+        assert_eq!(
+            resp.backend,
+            BackendKind::Sim { family: "sddmm-group" },
+            "backend {}",
+            resp.backend
+        );
         coord.shutdown();
     }
 
@@ -865,7 +546,12 @@ mod tests {
         let x2: Vec<f32> = (0..a.dim2 * j).map(|_| rng.value()).collect();
         let want = mttkrp_serial(&a, &x1, &x2, j);
         let resp = coord.mttkrp_blocking(a.clone(), x1.clone(), x2.clone(), j).unwrap();
-        assert!(resp.backend.starts_with("sim:mttkrp"), "backend {}", resp.backend);
+        assert_eq!(
+            resp.backend,
+            BackendKind::Sim { family: "mttkrp-group" },
+            "backend {}",
+            resp.backend
+        );
         assert!(!resp.cache_hit && resp.plan.is_some());
         assert!(max_rel_err(&resp.c, &want) < 5e-4);
         // repeat: identical tensor hits the cache and reproduces exactly
@@ -874,9 +560,14 @@ mod tests {
         assert_eq!(resp2.c, resp.c);
 
         let lx1: Vec<f32> = (0..a.dim2 * 4).map(|_| rng.value()).collect();
-        let want = ttm_serial(&a, &lx1, 4);
+        let want = crate::algos::mttkrp::ttm_serial(&a, &lx1, 4);
         let resp = coord.ttm_blocking(a.clone(), lx1.clone(), 4).unwrap();
-        assert!(resp.backend.starts_with("sim:ttm"), "backend {}", resp.backend);
+        assert_eq!(
+            resp.backend,
+            BackendKind::Sim { family: "ttm-group" },
+            "backend {}",
+            resp.backend
+        );
         assert!(max_rel_err(&resp.c, &want) < 5e-4);
 
         // a width no kernel launch shape covers is served on the CPU,
@@ -885,7 +576,7 @@ mod tests {
         let jx2: Vec<f32> = (0..a.dim2 * 20).map(|_| rng.value()).collect();
         let want = mttkrp_serial(&a, &jx1, &jx2, 20);
         let resp = coord.mttkrp_blocking(a, jx1, jx2, 20).unwrap();
-        assert_eq!(resp.backend, "cpu-serial");
+        assert_eq!(resp.backend, BackendKind::CpuSerial);
         assert!(resp.plan.is_none());
         assert!(max_rel_err(&resp.c, &want) < 5e-4);
         coord.shutdown();
@@ -948,8 +639,8 @@ mod tests {
         let coord = Coordinator::start(small_cfg()).unwrap();
         let a = crate::sparse::Coo::new(8, 8, vec![]).to_csr();
         let resp = coord.spmm_blocking(a, vec![1.0; 8 * 2], 2).unwrap();
-        assert_eq!(resp.backend, "cpu-serial");
-        assert!(resp.plan.is_none());
+        assert_eq!(resp.backend, BackendKind::CpuSerial);
+        assert!(resp.plan.is_none() && resp.plan_label().is_none());
         assert!(resp.c.iter().all(|&v| v == 0.0));
         coord.shutdown();
     }

@@ -1,0 +1,170 @@
+//! The serving facade: a clonable [`Session`] (alias [`SgapClient`])
+//! over a running [`Coordinator`], plus the [`Ticket`] response future.
+//!
+//! The intended call pattern for repeat traffic — register once, submit
+//! many times, every submit an `Arc` bump:
+//!
+//! ```no_run
+//! use sgap::coordinator::{CoordinatorConfig, Session};
+//! use sgap::sparse::erdos_renyi;
+//!
+//! let session = Session::start(CoordinatorConfig::default())?;
+//! let a = session.register_matrix(erdos_renyi(256, 256, 2000, 1).to_csr());
+//! let b = session.register_dense(vec![1.0; 256 * 4]);
+//! // first submit: one fingerprint pass + one selector decision …
+//! let c = session.spmm(&a, &b, 4).wait()?.c;
+//! // … every repeat: zero-copy submit, plan-cache hit
+//! let c2 = session.spmm(&a, &b, 4).wait()?.c;
+//! assert_eq!(c, c2);
+//! # anyhow::Ok(())
+//! ```
+
+use std::sync::mpsc::{Receiver, RecvError, TryRecvError};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::sparse::coo3::Coo3;
+use crate::sparse::Csr;
+
+use super::op::{DenseHandle, Op, SparseHandle};
+use super::server::{Coordinator, CoordinatorConfig, Response};
+
+/// A one-shot response future. Exactly one message ever arrives: the
+/// served [`Response`] or the validation/serving error string.
+pub struct Ticket {
+    rx: Receiver<Result<Response, String>>,
+}
+
+impl Ticket {
+    pub(crate) fn new(rx: Receiver<Result<Response, String>>) -> Ticket {
+        Ticket { rx }
+    }
+
+    /// Block until the response arrives. A disconnected channel (pool
+    /// shut down before serving) is reported as an error.
+    pub fn wait(self) -> Result<Response> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("coordinator worker gone"))?
+            .map_err(|e| anyhow::anyhow!(e))
+    }
+
+    /// Blocking receive with the raw channel contract (mirrors
+    /// [`Receiver::recv`]; `Err` means the pool shut down unserved).
+    pub fn recv(&self) -> Result<Result<Response, String>, RecvError> {
+        self.rx.recv()
+    }
+
+    /// Non-blocking poll (mirrors [`Receiver::try_recv`]).
+    pub fn try_recv(&self) -> Result<Result<Response, String>, TryRecvError> {
+        self.rx.try_recv()
+    }
+}
+
+/// A clonable client over a shared [`Coordinator`]: registers operands
+/// into `Arc`-backed handles and submits generic [`Op`]s. Cloning a
+/// `Session` shares the pool; the last one dropped (or explicitly
+/// [`Session::shutdown`]) joins it.
+#[derive(Clone)]
+pub struct Session {
+    coord: Arc<Coordinator>,
+}
+
+/// The client-facing name of [`Session`].
+pub type SgapClient = Session;
+
+impl Session {
+    /// Start a coordinator pool and wrap it.
+    pub fn start(cfg: CoordinatorConfig) -> Result<Session> {
+        Ok(Session { coord: Arc::new(Coordinator::start(cfg)?) })
+    }
+
+    /// Wrap an already-running pool (shared with other owners).
+    pub fn with(coord: Arc<Coordinator>) -> Session {
+        Session { coord }
+    }
+
+    /// The underlying pool (metrics, plan cache, lifecycle).
+    pub fn coordinator(&self) -> &Coordinator {
+        &self.coord
+    }
+
+    /// Register a CSR matrix: runs the fingerprint pass once, here, and
+    /// returns a zero-copy handle for any number of submits.
+    pub fn register_matrix(&self, a: Csr) -> SparseHandle {
+        let h = SparseHandle::matrix(a);
+        let _ = h.matrix_stats(); // prime the fingerprint at registration
+        h
+    }
+
+    /// Register an order-3 COO tensor (see [`SparseHandle::tensor`]).
+    pub fn register_tensor(&self, a: Coo3) -> SparseHandle {
+        SparseHandle::tensor(a)
+    }
+
+    /// Register a dense operand.
+    pub fn register_dense(&self, v: Vec<f32>) -> DenseHandle {
+        DenseHandle::new(v)
+    }
+
+    /// Submit any [`Op`] (or a legacy `Request`) through the one generic
+    /// serving path.
+    pub fn submit(&self, op: impl Into<Op>) -> Ticket {
+        self.coord.submit(op)
+    }
+
+    /// Build and submit an SpMM op against registered handles.
+    pub fn spmm(&self, a: &SparseHandle, b: &DenseHandle, n: usize) -> Ticket {
+        self.submit(Op::spmm(a, b, n))
+    }
+
+    /// Build and submit an SDDMM op against registered handles.
+    pub fn sddmm(
+        &self,
+        a: &SparseHandle,
+        x1: &DenseHandle,
+        x2: &DenseHandle,
+        j_dim: usize,
+    ) -> Ticket {
+        self.submit(Op::sddmm(a, x1, x2, j_dim))
+    }
+
+    /// Build and submit an MTTKRP op against registered handles.
+    pub fn mttkrp(
+        &self,
+        a: &SparseHandle,
+        x1: &DenseHandle,
+        x2: &DenseHandle,
+        j_dim: usize,
+    ) -> Ticket {
+        self.submit(Op::mttkrp(a, x1, x2, j_dim))
+    }
+
+    /// Build and submit a TTM op against registered handles.
+    pub fn ttm(&self, a: &SparseHandle, x1: &DenseHandle, l_dim: usize) -> Ticket {
+        self.submit(Op::ttm(a, x1, l_dim))
+    }
+
+    /// Stop accepting new work; in-flight and queued ops are still served.
+    pub fn close(&self) {
+        self.coord.close();
+    }
+
+    /// Stop accepting new work and — when this is the last handle on the
+    /// pool — drain accepted jobs and join every worker (and the
+    /// background tuner) before returning. Returns `true` when the pool
+    /// was joined; `false` when other `Session` clones (or
+    /// [`Session::with`] sharers) still hold it — the queue is closed
+    /// either way, so the pool stops accepting work deterministically.
+    pub fn shutdown(self) -> bool {
+        self.coord.close();
+        match Arc::try_unwrap(self.coord) {
+            Ok(coord) => {
+                coord.shutdown();
+                true
+            }
+            Err(_) => false,
+        }
+    }
+}

@@ -24,8 +24,11 @@
 //!   input-dynamics selector.
 //! * [`runtime`] — PJRT artifact loading/execution (numeric hot path;
 //!   gated behind the `pjrt` cargo feature).
-//! * [`coordinator`] — the serving layer: a multi-worker pool with a
-//!   tuner-aware plan cache, SpMM/SDDMM/MTTKRP/TTM routing, batching,
+//! * [`coordinator`] — the serving layer: a `Session` facade over a
+//!   multi-worker pool, with `Arc`-backed operand handles (register
+//!   once, fingerprint once, submit zero-copy), one generic `Op` path
+//!   for the whole SpMM/SDDMM/MTTKRP/TTM quartet, a pluggable
+//!   `Executor` backend stack, a tuner-aware plan cache, batching,
 //!   backpressure and per-backend metrics.
 
 pub mod algos;

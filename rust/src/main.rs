@@ -27,7 +27,7 @@ use sgap::compiler::schedule::{
     DgConfig, MttkrpConfig, Schedule, SddmmConfig, SpmmConfig, TtmConfig,
 };
 use sgap::compiler::{spaces, ScheduleBuilder, TensorAlgebra};
-use sgap::coordinator::{Coordinator, CoordinatorConfig};
+use sgap::coordinator::{CoordinatorConfig, Op, Session};
 use sgap::sim::{HwProfile, Machine};
 use sgap::sparse::{suite, Coo3, MatrixStats, SplitMix64};
 use sgap::tuner;
@@ -367,34 +367,36 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         ..CoordinatorConfig::default()
     };
     println!(
-        "starting coordinator: {} workers, {} artifacts, background tune {}",
+        "starting session: {} workers, {} artifacts, background tune {}",
         cfg.workers,
         if use_artifacts { "PJRT" } else { "no" },
         if cfg.background_tune { "on" } else { "off" },
     );
-    let coord = Coordinator::start(cfg)?;
+    let session = Session::start(cfg)?;
     let requests = flag_u32(flags, "requests", 32)?;
     let mut rng = SplitMix64::new(123);
-    let mut rxs = Vec::new();
     // a handful of repeated shapes (so the plan cache pays off), mixed
-    // SpMM / SDDMM traffic
+    // SpMM / SDDMM traffic — each operand registered once, fingerprinted
+    // once, and shared zero-copy across every repeat submit
+    let mats: Vec<_> = (0..4u64)
+        .map(|seed| {
+            session.register_matrix(sgap::sparse::erdos_renyi(256, 256, 2000, seed).to_csr())
+        })
+        .collect();
+    let b = session.register_dense((0..256 * 4).map(|_| rng.value()).collect());
+    let j = 16usize;
+    let x1 = session.register_dense((0..256 * j).map(|_| rng.value()).collect());
+    let x2 = session.register_dense((0..j * 256).map(|_| rng.value()).collect());
+    let mut tickets = Vec::new();
     for i in 0..requests {
-        let shape_seed = (i % 4) as u64;
-        let a = sgap::sparse::erdos_renyi(256, 256, 2000, shape_seed).to_csr();
-        if i % 5 == 4 {
-            let j = 16usize;
-            let x1: Vec<f32> = (0..a.rows * j).map(|_| rng.value()).collect();
-            let x2: Vec<f32> = (0..j * a.cols).map(|_| rng.value()).collect();
-            rxs.push(coord.submit(sgap::coordinator::Request::Sddmm { a, x1, x2, j_dim: j }));
-        } else {
-            let b: Vec<f32> = (0..256 * 4).map(|_| rng.value()).collect();
-            rxs.push(coord.submit(sgap::coordinator::Request::Spmm { a, b, n: 4 }));
-        }
+        let a = &mats[(i % 4) as usize];
+        let op = if i % 5 == 4 { Op::sddmm(a, &x1, &x2, j) } else { Op::spmm(a, &b, 4) };
+        tickets.push(session.submit(op));
     }
-    for rx in rxs {
-        let resp = rx.recv().context("worker gone")?;
-        resp.map_err(|e| anyhow::anyhow!(e))?;
+    for t in tickets {
+        t.wait()?;
     }
+    let coord = session.coordinator();
     let s = coord.metrics.snapshot();
     println!(
         "served {} requests in {} batches: p50 {} us, p99 {} us, mean {:.1} us",
@@ -415,7 +417,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         "plan-cache entries {} (upgrades {}, evictions {})",
         cs.entries, cs.upgrades, cs.evictions
     );
-    coord.shutdown();
+    session.shutdown();
     Ok(())
 }
 

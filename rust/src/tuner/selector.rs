@@ -95,23 +95,45 @@ impl Selector {
     /// [`Selector::select_mttkrp`], `None` means no legal launch shape —
     /// the serving layer routes such widths to the CPU.
     pub fn select_mttkrp_model(&self, model: &CostModel, a: &Coo3, j_dim: u32) -> Option<Algo> {
+        self.select_mttkrp_model_stats(model, &crate::sparse::SegStats::mttkrp(a), j_dim)
+    }
+
+    /// [`Selector::select_mttkrp_model`] from an already-computed segment
+    /// fingerprint — the serving layer's handle path, where registration
+    /// ran the [`SegStats`](crate::sparse::SegStats) pass once and every
+    /// repeat submit reuses it.
+    pub fn select_mttkrp_model_stats(
+        &self,
+        model: &CostModel,
+        seg: &crate::sparse::SegStats,
+        j_dim: u32,
+    ) -> Option<Algo> {
         let grid = super::space::mttkrp_candidates(j_dim);
         if grid.is_empty() {
-            return self.select_mttkrp(a, j_dim);
+            return self.select_mttkrp_stats(seg, j_dim);
         }
-        let seg = crate::sparse::SegStats::mttkrp(a);
-        Some(model.shortlist(&grid, &Workload::Mttkrp { seg: &seg, j: j_dim }, 1)[0])
+        Some(model.shortlist(&grid, &Workload::Mttkrp { seg, j: j_dim }, 1)[0])
     }
 
     /// TTM analogue of [`Selector::select_mttkrp_model`] over the
     /// leading-fiber segments.
     pub fn select_ttm_model(&self, model: &CostModel, a: &Coo3, l_dim: u32) -> Option<Algo> {
+        self.select_ttm_model_stats(model, &crate::sparse::SegStats::ttm(a), l_dim)
+    }
+
+    /// [`Selector::select_ttm_model`] from an already-computed fiber
+    /// fingerprint (see [`Selector::select_mttkrp_model_stats`]).
+    pub fn select_ttm_model_stats(
+        &self,
+        model: &CostModel,
+        seg: &crate::sparse::SegStats,
+        l_dim: u32,
+    ) -> Option<Algo> {
         let grid = super::space::ttm_candidates(l_dim);
         if grid.is_empty() {
-            return self.select_ttm(a, l_dim);
+            return self.select_ttm_stats(seg, l_dim);
         }
-        let seg = crate::sparse::SegStats::ttm(a);
-        Some(model.shortlist(&grid, &Workload::Ttm { seg: &seg, l: l_dim }, 1)[0])
+        Some(model.shortlist(&grid, &Workload::Ttm { seg, l: l_dim }, 1)[0])
     }
 
     /// Pick an SDDMM plan from the matrix statistics (§4.3: the same
@@ -136,8 +158,17 @@ impl Selector {
     /// when no coarsening satisfies the divisibility for `j_dim`; the
     /// serving layer routes such widths to the CPU path.
     pub fn select_mttkrp(&self, a: &Coo3, j_dim: u32) -> Option<Algo> {
+        self.select_mttkrp_mean(a.nnz() as f64 / a.dim0.max(1) as f64, j_dim)
+    }
+
+    /// [`Selector::select_mttkrp`] from a cached segment fingerprint
+    /// (`seg.mean_len` *is* `nnz / dim0`, so the choice is identical).
+    pub fn select_mttkrp_stats(&self, seg: &crate::sparse::SegStats, j_dim: u32) -> Option<Algo> {
+        self.select_mttkrp_mean(seg.mean_len, j_dim)
+    }
+
+    fn select_mttkrp_mean(&self, mean_seg: f64, j_dim: u32) -> Option<Algo> {
         let c = *c_values(j_dim).last()?;
-        let mean_seg = a.nnz() as f64 / a.dim0.max(1) as f64;
         let mut cfg = MttkrpConfig::new(j_dim, c, 2);
         cfg.r = self.coo3_r(mean_seg, cfg.npb());
         cfg.validate().ok()?;
@@ -146,8 +177,16 @@ impl Selector {
 
     /// Pick a TTM plan; segments are the leading `(i,j)` fibers.
     pub fn select_ttm(&self, a: &Coo3, l_dim: u32) -> Option<Algo> {
+        self.select_ttm_mean(a.nnz() as f64 / (a.dim0 * a.dim1).max(1) as f64, l_dim)
+    }
+
+    /// [`Selector::select_ttm`] from a cached fiber fingerprint.
+    pub fn select_ttm_stats(&self, seg: &crate::sparse::SegStats, l_dim: u32) -> Option<Algo> {
+        self.select_ttm_mean(seg.mean_len, l_dim)
+    }
+
+    fn select_ttm_mean(&self, mean_seg: f64, l_dim: u32) -> Option<Algo> {
         let c = *c_values(l_dim).last()?;
-        let mean_seg = a.nnz() as f64 / (a.dim0 * a.dim1).max(1) as f64;
         let mut cfg = TtmConfig::new(l_dim, c, 2);
         cfg.r = self.coo3_r(mean_seg, cfg.npb());
         cfg.validate().ok()?;
@@ -343,6 +382,30 @@ mod tests {
         cfg.validate().unwrap();
         assert!(s.select_mttkrp_model(&model, &t, 20).is_none());
         assert!(s.select_ttm_model(&model, &t, 20).is_none());
+    }
+
+    #[test]
+    fn stats_paths_agree_with_tensor_paths() {
+        use crate::sparse::SegStats;
+        let machine = Machine::new(HwProfile::rtx3090());
+        let model = CostModel::new(&machine);
+        let s = Selector::default();
+        for (dims, nnz, seed) in [((64, 32, 32), 8000, 1), ((64, 32, 32), 100, 2)] {
+            let t = Coo3::random(dims, nnz, seed);
+            let (mseg, tseg) = (SegStats::mttkrp(&t), SegStats::ttm(&t));
+            for w in [4u32, 8, 20] {
+                assert_eq!(s.select_mttkrp(&t, w), s.select_mttkrp_stats(&mseg, w));
+                assert_eq!(s.select_ttm(&t, w), s.select_ttm_stats(&tseg, w));
+                assert_eq!(
+                    s.select_mttkrp_model(&model, &t, w),
+                    s.select_mttkrp_model_stats(&model, &mseg, w)
+                );
+                assert_eq!(
+                    s.select_ttm_model(&model, &t, w),
+                    s.select_ttm_model_stats(&model, &tseg, w)
+                );
+            }
+        }
     }
 
     #[test]

@@ -154,7 +154,7 @@ fn coordinator_stress_mixed_traffic() {
                 }
                 if is_spmm {
                     assert!(
-                        resp.backend.starts_with("sim:") || resp.backend.starts_with("cpu"),
+                        resp.backend.is_sim() || resp.backend.is_cpu(),
                         "unexpected backend {}",
                         resp.backend
                     );

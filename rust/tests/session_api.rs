@@ -1,0 +1,215 @@
+//! Integration tests for the Session/Op serving API:
+//!
+//! * multi-threaded shared-handle stress — N workers submitting against
+//!   one registered matrix, with `Arc::strong_count`-based proof that no
+//!   submit clones the operand;
+//! * handle-path ≡ legacy-path response equivalence across the quartet;
+//! * typed validation errors (including `checked_mul` overflow) through
+//!   the serving path;
+//! * a custom [`Executor`] plugged in through the registry.
+
+use std::sync::Arc;
+
+use sgap::coordinator::{
+    factory, Admission, BackendKind, Coordinator, CoordinatorConfig, Executor, ExecutorRegistry,
+    Op, OpKind, Session,
+};
+use sgap::sparse::{erdos_renyi, power_law, Coo3, SplitMix64};
+
+fn dense(len: usize, seed: u64) -> Vec<f32> {
+    let mut rng = SplitMix64::new(seed);
+    (0..len).map(|_| rng.value()).collect()
+}
+
+/// 8 threads × 60 submits against ONE registered matrix: every response
+/// is correct, every submit moves an `Arc` (pointer-identical operand,
+/// bounded refcount), and after shutdown the registration is the sole
+/// owner again — no per-submit operand clone ever escaped.
+#[test]
+fn shared_handle_stress_is_zero_copy() {
+    let session = Session::start(CoordinatorConfig {
+        workers: 4,
+        background_tune: false,
+        ..CoordinatorConfig::default()
+    })
+    .unwrap();
+    let a = session.register_matrix(power_law(96, 96, 1400, 1.9, 3).to_csr());
+    let b = session.register_dense(dense(96 * 4, 7));
+    assert_eq!((a.strong_count(), b.strong_count()), (1, 1));
+    let want = Op::spmm(&a, &b, 4).run_serial();
+
+    let threads = 8usize;
+    let per_thread = 60usize;
+    let mut handles = Vec::new();
+    for t in 0..threads {
+        let session = session.clone();
+        let (a, b, want) = (a.clone(), b.clone(), want.clone());
+        handles.push(std::thread::spawn(move || {
+            for i in 0..per_thread {
+                let op = Op::spmm(&a, &b, 4);
+                // structural zero-copy: the op shares the registration
+                assert!(op.a.ptr_eq(&a) && op.dense[0].ptr_eq(&b), "thread {t} op {i}");
+                let resp = session.submit(op).wait().expect("serve failed");
+                assert_eq!(resp.c.len(), want.len(), "thread {t} op {i}");
+                // one blocking submit in flight per thread: the live
+                // references are the registration + per-thread clones +
+                // at most two op handles per thread (one being built, one
+                // not yet dropped by its worker) — never O(submits)
+                assert!(
+                    a.strong_count() <= 1 + 3 * threads,
+                    "thread {t} op {i}: refcount {} implies handle leak",
+                    a.strong_count()
+                );
+            }
+            // responses match this thread's own oracle copy
+            let resp = session.submit(Op::spmm(&a, &b, 4)).wait().unwrap();
+            let err = sgap::algos::cpu_ref::max_rel_err(&resp.c, &want);
+            assert!(err < 5e-4, "thread {t}: max rel err {err}");
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let snap = session.coordinator().metrics.snapshot();
+    assert_eq!(snap.completed, (threads * (per_thread + 1)) as u64);
+    assert_eq!(snap.errors, 0);
+    assert!(snap.cache_hits > 0, "repeat submits of one handle must hit the plan cache");
+    assert_eq!(
+        snap.cache_misses, 1,
+        "one registered shape fingerprints once; repeats skip re-fingerprinting"
+    );
+    session.shutdown(); // joins workers: every in-flight op handle dropped
+    assert_eq!((a.strong_count(), b.strong_count()), (1, 1), "serving cloned an operand");
+}
+
+/// The handle path and the legacy value-owning path produce identical
+/// responses for all four algebras of the quartet (same coordinator, so
+/// the second submit of each shape is a plan-cache hit with the same
+/// plan — results must match bit for bit).
+#[test]
+fn handle_path_matches_legacy_path_across_quartet() {
+    let coord = Arc::new(
+        Coordinator::start(CoordinatorConfig { workers: 2, ..CoordinatorConfig::default() })
+            .unwrap(),
+    );
+    let session = Session::with(coord.clone());
+
+    // SpMM
+    let a = erdos_renyi(64, 56, 500, 11).to_csr();
+    let b = dense(56 * 4, 1);
+    let legacy = coord.spmm_blocking(a.clone(), b.clone(), 4).unwrap();
+    let (ha, hb) = (session.register_matrix(a), session.register_dense(b));
+    let handled = session.spmm(&ha, &hb, 4).wait().unwrap();
+    assert_eq!(legacy.c, handled.c, "spmm");
+    assert_eq!(legacy.plan, handled.plan, "spmm plan");
+    assert!(handled.cache_hit, "same shape must hit the legacy submit's plan");
+
+    // SDDMM
+    let a = erdos_renyi(48, 40, 320, 12).to_csr();
+    let (x1, x2) = (dense(48 * 8, 2), dense(8 * 40, 3));
+    let legacy = coord.sddmm_blocking(a.clone(), x1.clone(), x2.clone(), 8).unwrap();
+    let ha = session.register_matrix(a);
+    let (h1, h2) = (session.register_dense(x1), session.register_dense(x2));
+    let handled = session.sddmm(&ha, &h1, &h2, 8).wait().unwrap();
+    assert_eq!(legacy.c, handled.c, "sddmm");
+    assert_eq!(legacy.plan, handled.plan, "sddmm plan");
+
+    // MTTKRP
+    let t = Coo3::random((28, 20, 14), 350, 13);
+    let (x1, x2) = (dense(t.dim1 * 8, 4), dense(t.dim2 * 8, 5));
+    let legacy = coord.mttkrp_blocking(t.clone(), x1.clone(), x2.clone(), 8).unwrap();
+    let ht = session.register_tensor(t.clone());
+    let (h1, h2) = (session.register_dense(x1), session.register_dense(x2));
+    let handled = session.mttkrp(&ht, &h1, &h2, 8).wait().unwrap();
+    assert_eq!(legacy.c, handled.c, "mttkrp");
+    assert_eq!(legacy.plan, handled.plan, "mttkrp plan");
+
+    // TTM (same registered tensor: the fiber fingerprint is cached too)
+    let x1 = dense(t.dim2 * 4, 6);
+    let legacy = coord.ttm_blocking(t, x1.clone(), 4).unwrap();
+    let h1 = session.register_dense(x1);
+    let handled = session.ttm(&ht, &h1, 4).wait().unwrap();
+    assert_eq!(legacy.c, handled.c, "ttm");
+    assert_eq!(legacy.plan, handled.plan, "ttm plan");
+
+    session.shutdown();
+    Arc::try_unwrap(coord).ok().expect("session released the pool").shutdown();
+}
+
+/// Absurd dims are rejected with the typed overflow error (checked_mul),
+/// not a debug-build multiply panic — via both submit surfaces.
+#[test]
+fn absurd_dims_are_typed_errors_not_overflows() {
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers: 2,
+        ..CoordinatorConfig::default()
+    })
+    .unwrap();
+    let a = erdos_renyi(16, 16, 40, 1).to_csr();
+    let err = coord.spmm_blocking(a.clone(), vec![0.0; 4], usize::MAX / 2).unwrap_err();
+    assert!(err.to_string().contains("overflows"), "{err}");
+    let err =
+        coord.sddmm_blocking(a.clone(), vec![0.0; 4], vec![0.0; 4], usize::MAX / 2).unwrap_err();
+    assert!(err.to_string().contains("overflows"), "{err}");
+    // handle path reports the same typed error
+    let session = Session::with(Arc::new(coord));
+    let h = session.register_matrix(a);
+    let d = session.register_dense(vec![0.0; 4]);
+    let err = session.spmm(&h, &d, usize::MAX / 2).wait().unwrap_err();
+    assert!(err.to_string().contains("spmm") && err.to_string().contains("overflows"), "{err}");
+    let snap = session.coordinator().metrics.snapshot();
+    assert_eq!(snap.errors, 3);
+    session.shutdown();
+}
+
+/// A user-defined executor plugs in at the head of the registry: it
+/// outbids the standard stack for the ops it admits, carries its own
+/// typed backend label, and everything it declines flows down unchanged.
+#[test]
+fn custom_executor_plugs_into_the_registry() {
+    struct ConstExecutor;
+    impl Executor for ConstExecutor {
+        fn name(&self) -> &'static str {
+            "const"
+        }
+        fn admit(&mut self, op: &Op) -> Option<Admission> {
+            if op.kind != OpKind::Spmm {
+                return None;
+            }
+            Some(Admission {
+                backend: BackendKind::Custom("const:42".into()),
+                plan: None,
+                cache_hit: false,
+            })
+        }
+        fn execute(&mut self, op: &Op, _adm: &Admission) -> Result<Vec<f32>, String> {
+            Ok(vec![42.0; op.output_len().ok_or("no output size")?])
+        }
+    }
+
+    let session = Session::start(CoordinatorConfig {
+        workers: 2,
+        executors: ExecutorRegistry::standard()
+            .with_front(factory(|_env| Some(Box::new(ConstExecutor) as Box<dyn Executor>))),
+        ..CoordinatorConfig::default()
+    })
+    .unwrap();
+
+    let a = session.register_matrix(erdos_renyi(24, 24, 80, 2).to_csr());
+    let b = session.register_dense(dense(24 * 4, 8));
+    let resp = session.spmm(&a, &b, 4).wait().unwrap();
+    assert_eq!(resp.backend, BackendKind::Custom("const:42".into()));
+    assert_eq!(resp.backend.to_string(), "const:42");
+    assert!(resp.c.iter().all(|&v| v == 42.0) && resp.c.len() == 24 * 4);
+    assert!(resp.plan.is_none());
+
+    // declined kinds fall through to the standard stack
+    let x1 = session.register_dense(dense(24 * 8, 9));
+    let x2 = session.register_dense(dense(8 * 24, 10));
+    let resp = session.sddmm(&a, &x1, &x2, 8).wait().unwrap();
+    assert_eq!(resp.backend, BackendKind::Sim { family: "sddmm-group" });
+
+    let snap = session.coordinator().metrics.snapshot();
+    assert!(snap.backends.iter().any(|b| b.backend == "const:42"), "{:?}", snap.backends);
+    session.shutdown();
+}

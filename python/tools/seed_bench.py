@@ -77,37 +77,72 @@ def erdos_renyi_degrees(rows, cols, nnz, seed):
     return deg
 
 
-def power_law_degrees(rows, cols, nnz, alpha, seed):
-    rng = SplitMix64(seed)
-    order = list(range(rows))
-    rng.shuffle(order)
+def power_law_degrees(rows, cols, nnz, alpha):
+    """Exact-nnz Zipf degrees (gen.rs power_law). The generator's RNG only
+    scatters which row gets which rank and which columns fill it; the
+    degree *multiset* is the deterministic largest-remainder target, so no
+    seed is needed for statistics."""
+    nnz = min(nnz, rows * cols)
     weights = [float(k) ** -alpha for k in range(1, rows + 1)]
     total = sum(weights)
-    degrees = [min(int((w / total) * nnz), cols) for w in weights]
+    exact = [w / total * nnz for w in weights]
+    degrees = [min(int(math.floor(e)), cols) for e in exact]
     assigned = sum(degrees)
-    k = stall = 0
-    while assigned < nnz and stall < rows:
-        slot = k % rows
-        if degrees[slot] < cols:
-            degrees[slot] += 1
+    # largest-remainder: descending fractional part, ties to the lower rank
+    by_frac = sorted(range(rows), key=lambda i: (-(exact[i] - math.floor(exact[i])), i))
+    k = 0
+    while assigned < nnz:
+        rank = by_frac[k % rows]
+        if degrees[rank] < cols:
+            degrees[rank] += 1
             assigned += 1
-            stall = 0
-        else:
-            stall += 1
         k += 1
-    deg = [0] * rows
+    return degrees
+
+
+def block_community_degrees(n, blocks, intra_density, inter_nnz, seed):
+    """gen.rs block_community, degree profile (RNG-faithful)."""
+    rng = SplitMix64(seed)
+    bs = n // blocks
     seen = set()
-    for rank, row in enumerate(order):
-        want = min(degrees[rank], cols)
+    deg = [0] * n
+    for b in range(blocks):
+        base = b * bs
+        size = n - base if b == blocks - 1 else bs
+        want = min(int((size * size) * intra_density), size * size)
         got = attempts = 0
         while got < want and attempts < want * 20 + 16:
-            c = rng.below(cols)
-            if (row, c) not in seen:
-                seen.add((row, c))
-                deg[row] += 1
-                got += 1
+            r = base + rng.below(size)
+            c = base + rng.below(size)
+            if (r, c) not in seen:
+                seen.add((r, c))
+                deg[r] += 1
                 rng.value()
+                got += 1
             attempts += 1
+        if got < want:
+            # near-dense block: fill the remainder from the shuffled free cells
+            free = [
+                (base + r, base + c)
+                for r in range(size)
+                for c in range(size)
+                if (base + r, base + c) not in seen
+            ]
+            rng.shuffle(free)
+            for r, c in free[: want - got]:
+                seen.add((r, c))
+                deg[r] += 1
+                rng.value()
+    inter = min(inter_nnz, n * n - len(seen))
+    got = 0
+    while got < inter:
+        r = rng.below(n)
+        c = rng.below(n)
+        if (r, c) not in seen:
+            seen.add((r, c))
+            deg[r] += 1
+            rng.value()
+            got += 1
     return deg
 
 
@@ -123,6 +158,9 @@ def short_rows_degrees(n):
 # ---- stats (rust/src/sparse/stats.rs) -------------------------------------
 
 
+DEGREE_BUCKETS = 16
+
+
 class MatrixStats:
     def __init__(self, rows, cols, degrees):
         self.rows = rows
@@ -133,6 +171,15 @@ class MatrixStats:
         var = sum((d - self.row_degree_mean) ** 2 for d in degrees) / n
         self.row_degree_cv = math.sqrt(var) / self.row_degree_mean if self.row_degree_mean > 0 else 0.0
         self.row_degree_max = max(degrees) if degrees else 0
+        self.empty_row_frac = sum(1 for d in degrees if d == 0) / n
+        # log2 degree histogram (empty rows excluded) — the partitioner's input
+        self.hist_rows = [0] * DEGREE_BUCKETS
+        self.hist_nnz = [0] * DEGREE_BUCKETS
+        for d in degrees:
+            if d > 0:
+                b = min(d.bit_length() - 1, DEGREE_BUCKETS - 1)
+                self.hist_rows[b] += 1
+                self.hist_nnz[b] += d
 
 
 class SegStats:
@@ -466,6 +513,128 @@ def coo3_grid(width):
     return out
 
 
+def band_grid(n):
+    """tuner::space::band_candidates, in its exact order (taco block then
+    sgap block) — shortlist ties break by grid index, so the order is part
+    of the contract."""
+    out = []
+    for c in c_values(n):
+        for g in (4, 8, 16, 32):
+            out.append(("taco-nnz", g, c, None, f"taco{{<{g} nnz,{c} col>,1}}"))
+        for x in (1, 2, 4):
+            out.append(("taco-row", x, c, None, f"taco{{<{x} row,{c} col>,1}}"))
+    for c in c_values(n):
+        kch = n // c
+        for r in (2, 4, 8, 16, 32):
+            out.append(("sgap-nnz", None, c, r, f"sgap{{<1 nnz,{c} col>,{r}}}"))
+            for g in (2, 4, 8, 16, 32):
+                if r <= g and 256 % (g * kch) == 0 and 256 // (g * kch) >= 1:
+                    out.append(("sgap-row", g, c, r, f"sgap{{<1/{g} row,{c} col>,{r}}}"))
+    return out
+
+
+# ---- band partitioner (rust/src/sparse/partition.rs) -----------------------
+
+CUT_SENTINEL = DEGREE_BUCKETS
+
+
+def choose_cuts(s):
+    total = sum(s.hist_nnz)
+    if total == 0:
+        return None
+    occupied = [b for b in range(DEGREE_BUCKETS) if s.hist_rows[b] > 0]
+    if len(occupied) < 2:
+        return None
+    lowest, top = occupied[0], occupied[-1]
+    max_bucket = max(s.hist_nnz)
+    prefix = [0] * (DEGREE_BUCKETS + 1)
+    for b in range(DEGREE_BUCKETS):
+        prefix[b + 1] = prefix[b] + s.hist_nnz[b]
+
+    def cut_at(k, bands):
+        c = next(
+            (c for c in range(1, DEGREE_BUCKETS + 1) if prefix[c] * bands >= k * total),
+            DEGREE_BUCKETS,
+        )
+        return min(max(c, lowest + 1), top)
+
+    if len(occupied) >= 3:
+        c1, c2 = cut_at(1, 3), cut_at(2, 3)
+        if c1 < c2:
+            widths = [(0, c1), (c1, c2), (c2, DEGREE_BUCKETS)]
+            bound = total // 3 + max_bucket
+            balanced = all(prefix[hi] - prefix[lo] <= bound for lo, hi in widths)
+            populated = all(
+                any(s.hist_rows[b] > 0 for b in range(lo, hi)) for lo, hi in widths
+            )
+            if balanced and populated:
+                return 3, (c1, c2)
+    return 2, (cut_at(1, 2), CUT_SENTINEL)
+
+
+class _BandStats:
+    """Synthetic per-band stats (partition.rs band_stats) — the fields the
+    pricing formulas read."""
+
+    def __init__(self, rows, cols, nnz, mean, cv, max_deg):
+        self.rows, self.cols, self.nnz = rows, cols, nnz
+        self.row_degree_mean, self.row_degree_cv = mean, cv
+        self.row_degree_max = max_deg
+
+
+def band_stats(s, bands, cuts):
+    empty_rows = int(round_half_away(s.empty_row_frac * s.rows))
+    out = []
+    for band in range(bands):
+        lo = 0 if band == 0 else cuts[band - 1]
+        hi = cuts[band] if band + 1 < bands else DEGREE_BUCKETS
+        rows_b = sum(s.hist_rows[b] for b in range(lo, hi))
+        nnz_b = sum(s.hist_nnz[b] for b in range(lo, hi))
+        occ = [b for b in range(lo, hi) if s.hist_rows[b] > 0]
+        empties = empty_rows if band == 0 else 0
+        rows_total = max(rows_b + empties, 1)
+        mean = nnz_b / rows_total
+        var = empties * mean * mean
+        for b in range(lo, hi):
+            rep = 1.5 * (1 << b)
+            var += s.hist_rows[b] * (rep - mean) * (rep - mean)
+        var /= rows_total
+        cv = math.sqrt(var) / mean if mean > 0.0 else 0.0
+        max_deg = min((1 << (occ[-1] + 1)) - 1, s.row_degree_max) if occ else 0
+        out.append(_BandStats(rows_total, s.cols, nnz_b, mean, cv, max_deg))
+    return out
+
+
+def banded_report(s, n):
+    """tuner::selector::Selector::banded_report: the composite candidate
+    (best plan per band, priced on synthetic band stats; composite price =
+    slowest band, launch overhead 0 on the stock profiles) vs the best
+    single plan on the same band grid. Returns
+    (hybrid_name, t_composite, single_name, t_single, bands, grid_len)."""
+    cut = choose_cuts(s)
+    if cut is None:
+        return None
+    bands, cuts = cut
+    grid = band_grid(n)
+    if not grid:
+        return None
+    per = band_stats(s, bands, cuts)
+    names = []
+    t_comp = 0.0
+    for bs in per:
+        price, idx = min(
+            (price_family(k, g, c, r, bs, n), i)
+            for i, (k, g, c, r, _) in enumerate(grid)
+        )
+        names.append(grid[idx][4])
+        t_comp = max(t_comp, price)
+    hybrid = "hybrid{" + " | ".join(names) + f" @cuts[{cuts[0]},{cuts[1]}]" + "}"
+    t_single, best_idx = min(
+        (price_family(k, g, c, r, s, n), i) for i, (k, g, c, r, _) in enumerate(grid)
+    )
+    return hybrid, t_comp, grid[best_idx][4], t_single, bands, len(grid)
+
+
 # ---- the report ------------------------------------------------------------
 
 GEN_NOTE = (
@@ -548,7 +717,7 @@ def main():
         ("er_1024_d5e-3", "erdos_renyi",
          MatrixStats(1024, 1024, erdos_renyi_degrees(1024, 1024, 5242, 1002))),
         ("pl_1024_a1.8", "power_law",
-         MatrixStats(1024, 1024, power_law_degrees(1024, 1024, 8192, 1.8, 1011))),
+         MatrixStats(1024, 1024, power_law_degrees(1024, 1024, 8192, 1.8))),
         ("band_1024_w5", "banded", MatrixStats(1024, 1024, banded_degrees(1024, 5))),
         ("corner_short_rows_2048", "corner",
          MatrixStats(2048, 2048, short_rows_degrees(2048))),
@@ -574,6 +743,32 @@ def main():
             "dgsparse", name, family, n, best_algo, stock.name(),
             best_t, est_dg(s, stock), 2 * s.nnz * n, len(dg), min(TOP_K, len(dg)),
         ))
+
+    # the skew table (bench_util.rs run_spmm_bench): per-band hybrid vs the
+    # best single band-grid plan, both analytic prices — dataset::suite()
+    # seeds 1013 / 1016 / 1021 (the power-law degrees are seed-free)
+    skew = [
+        ("pl_2048_a1.6", "power_law",
+         MatrixStats(2048, 2048, power_law_degrees(2048, 2048, 16384, 1.6))),
+        ("pl_4096_a2", "power_law",
+         MatrixStats(4096, 4096, power_law_degrees(4096, 4096, 32768, 2.0))),
+        ("block_2048_b16", "block_community",
+         MatrixStats(2048, 2048, block_community_degrees(2048, 16, 0.02, 4000, 1021))),
+    ]
+    beat = False
+    for name, family, s in skew:
+        rep = banded_report(s, n)
+        assert rep is not None, f"{name}: skew matrix declined banding"
+        hybrid, t_comp, single, t_single, bands, grid_len = rep
+        assert t_comp <= t_single, (
+            f"{name}: hybrid priced above best single plan ({t_comp:.3e} > {t_single:.3e})"
+        )
+        beat = beat or t_comp < t_single
+        spmm_rows.append(row(
+            "skew", name, family, n, hybrid, single, t_comp, t_single, 0, grid_len, bands,
+        ))
+    assert beat, "no skew row where the hybrid strictly beats the best single plan"
+
     emit(
         os.path.join(root, "BENCH_spmm.json"), "spmm",
         f"sgap bench --quick (spmm, N={n})" + GEN_NOTE, spmm_rows,

@@ -45,6 +45,66 @@ pub enum Algo {
     /// Grouped TTM `{<1 nnz, c col>, r}` (Eq. 2b) — COO-3 segment
     /// reduction keyed by the leading fiber; runs via [`Algo::run_ttm`].
     Ttm(TtmConfig),
+    /// Per-band hybrid SpMM: rows split into nnz-balanced degree bands
+    /// (`sparse::partition`), each band served by its own compiler-family
+    /// point — the non-uniform group-size application §3 implies but a
+    /// single TACO-style plan can't express.
+    Composite(CompositeConfig),
+}
+
+/// One band's plan inside a composite — restricted to the four SpMM
+/// compiler families so [`Algo`] stays `Copy` (no recursive boxing) and a
+/// band can never nest another composite or a non-SpMM kind.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BandAlgo {
+    TacoNnzSerial { g: u32, c: u32 },
+    TacoRowSerial { x: u32, c: u32 },
+    SgapRowGroup { g: u32, c: u32, r: u32 },
+    SgapNnzGroup { c: u32, r: u32 },
+}
+
+impl BandAlgo {
+    pub fn to_algo(self) -> Algo {
+        match self {
+            BandAlgo::TacoNnzSerial { g, c } => Algo::TacoNnzSerial { g, c },
+            BandAlgo::TacoRowSerial { x, c } => Algo::TacoRowSerial { x, c },
+            BandAlgo::SgapRowGroup { g, c, r } => Algo::SgapRowGroup { g, c, r },
+            BandAlgo::SgapNnzGroup { c, r } => Algo::SgapNnzGroup { c, r },
+        }
+    }
+
+    /// Project an [`Algo`] into a band plan; `None` for kinds a band
+    /// cannot carry (dgSPARSE, tensor kernels, nested composites).
+    pub fn from_algo(a: Algo) -> Option<BandAlgo> {
+        match a {
+            Algo::TacoNnzSerial { g, c } => Some(BandAlgo::TacoNnzSerial { g, c }),
+            Algo::TacoRowSerial { x, c } => Some(BandAlgo::TacoRowSerial { x, c }),
+            Algo::SgapRowGroup { g, c, r } => Some(BandAlgo::SgapRowGroup { g, c, r }),
+            Algo::SgapNnzGroup { c, r } => Some(BandAlgo::SgapNnzGroup { c, r }),
+            _ => None,
+        }
+    }
+}
+
+/// A composite (banded) SpMM plan: up to three bands cut on log2
+/// row-degree bucket boundaries, one [`BandAlgo`] per band. Cuts are
+/// bucket indices — matrix-independent, so a cached composite re-derives
+/// a valid partition on any matrix its `ShapeKey` collides with.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CompositeConfig {
+    /// Active band count, `2..=3`.
+    pub bands: u8,
+    /// Cut buckets; `cuts[1]` holds the sentinel when `bands == 2`.
+    pub cuts: [u8; 2],
+    /// Per-band plans; trailing slots of unused bands repeat the last
+    /// active plan (never launched).
+    pub plans: [BandAlgo; 3],
+}
+
+impl CompositeConfig {
+    pub fn plan(&self, band: usize) -> Algo {
+        self.plans[band].to_algo()
+    }
 }
 
 /// Outcome of running an algorithm on a matrix.
@@ -69,6 +129,11 @@ impl Algo {
             Algo::Sddmm(s) => format!("sddmm{{<1/{} nnz>,{}}}", s.g, s.r),
             Algo::Mttkrp(m) => format!("mttkrp{{<1 nnz,{} col>,{}}}", m.c, m.r),
             Algo::Ttm(t) => format!("ttm{{<1 nnz,{} col>,{}}}", t.c, t.r),
+            Algo::Composite(cc) => {
+                let names: Vec<String> =
+                    (0..cc.bands as usize).map(|b| cc.plan(b).name()).collect();
+                format!("hybrid{{{} @cuts[{},{}]}}", names.join(" | "), cc.cuts[0], cc.cuts[1])
+            }
         }
     }
 
@@ -85,7 +150,13 @@ impl Algo {
             Algo::Sddmm(_) => "sddmm-group",
             Algo::Mttkrp(_) => "mttkrp-group",
             Algo::Ttm(_) => "ttm-group",
+            Algo::Composite(_) => "hybrid",
         }
+    }
+
+    /// Whether this is a per-band composite (banded) plan.
+    pub fn is_composite(&self) -> bool {
+        matches!(self, Algo::Composite(_))
     }
 
     /// Whether this plan serves SDDMM traffic (vs SpMM).
@@ -135,6 +206,9 @@ impl Algo {
             // literal
             Algo::Mttkrp(m) => Some(AtomicPoint::sgap_nnz(m.c, m.r)),
             Algo::Ttm(t) => Some(AtomicPoint::sgap_nnz(t.c, t.r)),
+            // a composite occupies one point *per band*; there is no
+            // single point to report
+            Algo::Composite(_) => None,
         }
     }
 
@@ -160,6 +234,9 @@ impl Algo {
             Algo::Sddmm(cfg) => Schedule::sddmm_group(cfg),
             Algo::Mttkrp(cfg) => Schedule::mttkrp_group(cfg),
             Algo::Ttm(cfg) => Schedule::ttm_group(cfg),
+            Algo::Composite(_) => {
+                panic!("composite plans lower one schedule per band; use run()")
+            }
         }
     }
 
@@ -168,6 +245,9 @@ impl Algo {
     /// [`Algo::Ttm`] plans, which carry different operands — use
     /// [`Algo::run_sddmm`] / [`Algo::run_mttkrp`] / [`Algo::run_ttm`].
     pub fn run(&self, machine: &Machine, a: &Csr, b: &[f32], n: u32) -> Result<AlgoResult> {
+        if let Algo::Composite(cc) = self {
+            return run_composite(machine, cc, a, b, n);
+        }
         let run = match self {
             Algo::Dg(cfg) => {
                 anyhow::ensure!(cfg.n == n, "DgConfig.n {} != n {}", cfg.n, n);
@@ -241,6 +321,60 @@ impl Algo {
         let gflops = run.report.gflops(sddmm_flops(a, cfg.j_dim as usize));
         Ok(AlgoResult { run, time_s, gflops })
     }
+}
+
+/// Launch a composite plan: re-derive the band partition from the cuts
+/// (cheap: one degree sweep), gather each band's sub-CSR, run the band's
+/// plan, and scatter band outputs into one merged `C`. The bands of one
+/// logical op launch independently, so the composite's time is the
+/// *slowest band's* — matching `CostModel::price`'s max-over-bands
+/// roll-up — and the merged report is the slowest band's report.
+fn run_composite(
+    machine: &Machine,
+    cc: &CompositeConfig,
+    a: &Csr,
+    b: &[f32],
+    n: u32,
+) -> Result<AlgoResult> {
+    use crate::sparse::partition::{band_csr, partition_rows};
+    anyhow::ensure!(a.rows > 0, "composite plan on an empty matrix");
+    let bands = (cc.bands as usize).clamp(2, 3);
+    let part = partition_rows(a, bands, cc.cuts);
+    let nn = n as usize;
+    let mut c = vec![0f32; a.rows * nn];
+    let mut slowest: Option<SpmmRun> = None;
+    let mut names: Vec<String> = Vec::with_capacity(bands);
+    for band in 0..bands {
+        let rows = part.rows_of(band);
+        if rows.is_empty() {
+            // legal under ShapeKey collisions: a cached cut may leave a
+            // band unpopulated on this matrix — skip its launch
+            continue;
+        }
+        let sub = band_csr(a, rows);
+        let sched = cc.plan(band).schedule(n, 256);
+        let run = run_schedule(machine, &sched, &sub, b)?;
+        for (local, &orig) in rows.iter().enumerate() {
+            c[orig as usize * nn..(orig as usize + 1) * nn]
+                .copy_from_slice(&run.c[local * nn..(local + 1) * nn]);
+        }
+        names.push(run.kernel_name.clone());
+        if slowest.as_ref().is_none_or(|s| run.report.time_s > s.report.time_s) {
+            slowest = Some(run);
+        }
+    }
+    let slowest = slowest.expect("at least one band is populated when rows > 0");
+    let time_s = slowest.report.time_s;
+    let gflops = slowest.report.gflops(spmm_flops(a, nn));
+    Ok(AlgoResult {
+        run: SpmmRun {
+            c,
+            report: slowest.report,
+            kernel_name: format!("hybrid({})", names.join("+")),
+        },
+        time_s,
+        gflops,
+    })
 }
 
 /// Every launch-legal compiler-family point (TACO + Sgap, no dgSPARSE) at
@@ -397,6 +531,61 @@ mod tests {
         // kind mismatches error instead of guessing a kernel
         assert!(plan.run(&m, &a, &x1, 4).is_err());
         assert!(Algo::TacoRowSerial { x: 1, c: 4 }.run_sddmm(&m, &a, &x1, &x2).is_err());
+    }
+
+    #[test]
+    fn composite_matches_oracle_and_merges_metrics() {
+        use crate::sparse::{choose_cuts, power_law, MatrixStats};
+        let a = power_law(192, 192, 2600, 1.8, 13).to_csr();
+        let stats = MatrixStats::of(&a);
+        let (bands, cuts) = choose_cuts(&stats).expect("power-law bands");
+        let short = BandAlgo::TacoRowSerial { x: 1, c: 4 };
+        let hub = BandAlgo::SgapNnzGroup { c: 4, r: 32 };
+        let mid = if bands == 3 { BandAlgo::SgapRowGroup { g: 8, c: 4, r: 8 } } else { hub };
+        let plan = Algo::Composite(CompositeConfig {
+            bands: bands as u8,
+            cuts,
+            plans: [short, mid, hub],
+        });
+        assert!(plan.is_composite());
+        assert_eq!(plan.family_label(), "hybrid");
+        assert!(plan.name().starts_with("hybrid{"));
+        assert!(plan.to_point().is_none());
+
+        let n = 4u32;
+        let mut rng = SplitMix64::new(5);
+        let b: Vec<f32> = (0..a.cols * n as usize).map(|_| rng.value()).collect();
+        let m = Machine::new(HwProfile::rtx3090());
+        let res = plan.run(&m, &a, &b, n).unwrap();
+        // bitwise: each band runs the same compiled kernels over the same
+        // per-row data the single-plan path would, so scattering band
+        // outputs reproduces the serial oracle exactly as well as any
+        // single plan does
+        let want = crate::algos::cpu_ref::spmm_serial(&a, &b, 4);
+        let err = crate::algos::cpu_ref::max_rel_err(&res.run.c, &want);
+        assert!(err < 1e-4, "composite err {err}");
+        assert!(res.time_s > 0.0 && res.gflops > 0.0);
+        assert!(res.run.kernel_name.starts_with("hybrid("));
+
+        // composite time is the max over its bands: strictly less than the
+        // serial sum of band times, never more than running all rows with
+        // the hub plan alone... (sanity: positive, bounded by single-plan)
+        let single = hub.to_algo().run(&m, &a, &b, n).unwrap();
+        assert!(res.time_s <= single.time_s * 1.5, "banding should not blow up runtime");
+    }
+
+    #[test]
+    fn band_algo_round_trips() {
+        for a in [
+            Algo::TacoNnzSerial { g: 16, c: 4 },
+            Algo::TacoRowSerial { x: 2, c: 2 },
+            Algo::SgapRowGroup { g: 32, c: 4, r: 8 },
+            Algo::SgapNnzGroup { c: 4, r: 32 },
+        ] {
+            assert_eq!(BandAlgo::from_algo(a).unwrap().to_algo(), a);
+        }
+        assert!(BandAlgo::from_algo(Algo::Dg(DgConfig::stock(4))).is_none());
+        assert!(BandAlgo::from_algo(Algo::Sddmm(SddmmConfig::new(16, 8, 8))).is_none());
     }
 
     #[test]

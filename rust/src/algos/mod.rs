@@ -19,7 +19,7 @@ pub mod runner;
 pub mod mttkrp;
 pub mod sddmm;
 
-pub use catalog::{Algo, AlgoResult};
+pub use catalog::{Algo, AlgoResult, BandAlgo, CompositeConfig};
 pub use cpu_ref::{spmm_flops, spmm_serial};
 pub use dgsparse::DgConfig;
 pub use mttkrp::{MttkrpConfig, TtmConfig};

@@ -15,8 +15,8 @@ use crate::algos::dgsparse::DgConfig;
 use crate::algos::mttkrp::{MttkrpConfig, TtmConfig};
 use crate::runtime::json::Json;
 use crate::sim::Machine;
-use crate::sparse::{dataset, Coo3, DatasetSpec, SplitMix64};
-use crate::tuner::{self, PrunedOutcome};
+use crate::sparse::{dataset, Coo3, DatasetSpec, MatrixStats, SplitMix64};
+use crate::tuner::{self, CostModel, PrunedOutcome, Selector};
 
 /// Geometric mean (the paper's aggregation for speedups, Table 4 note 1).
 pub fn geomean(xs: &[f64]) -> f64 {
@@ -63,6 +63,18 @@ pub fn bench_suite() -> Vec<DatasetSpec> {
     let out: Vec<DatasetSpec> =
         dataset::suite().into_iter().filter(|d| keep.contains(&d.name.as_str())).collect();
     assert!(out.len() >= 10, "bench suite unexpectedly small: {}", out.len());
+    out
+}
+
+/// The skew suite: the high-CV matrices the band partitioner targets —
+/// power-law at α ∈ {1.6, 2.0} and the block-community graph. Fixed (and
+/// small) enough to run in `--quick` mode too, so the hybrid-vs-single
+/// comparison is always in the committed report.
+pub fn skew_suite() -> Vec<DatasetSpec> {
+    let keep = ["pl_2048_a1.6", "pl_4096_a2", "block_2048_b16"];
+    let out: Vec<DatasetSpec> =
+        dataset::suite().into_iter().filter(|d| keep.contains(&d.name.as_str())).collect();
+    assert_eq!(out.len(), 3, "skew suite drifted: {}", out.len());
     out
 }
 
@@ -385,6 +397,48 @@ pub fn run_spmm_bench(machine: &Machine, quick: bool, top_k: usize) -> Result<Be
         let t_stock = stock.run(machine, &a, &b, n)?.time_s;
         rows.push(pruned_row("dgsparse", &d.name, d.family, n, &pruned, &stock, t_stock)?);
     }
+
+    // The skew table: the per-band hybrid's analytic cost vs the best
+    // single catalog plan's, on the matrices where banding should pay.
+    // Emitted in quick mode too — these are analytic prices (no warp
+    // simulation), so the whole table costs three stats passes.
+    let selector = Selector::default();
+    let model = CostModel::new(machine);
+    for d in &skew_suite() {
+        let a = d.matrix.to_csr();
+        let stats = MatrixStats::of(&a);
+        let (composite, t_comp, single, t_single) = selector
+            .banded_report(&model, &stats, n)
+            .with_context(|| format!("{}: skew matrix declined banding", d.name))?;
+        anyhow::ensure!(
+            t_comp <= t_single,
+            "{}: hybrid priced above best single plan ({t_comp:.3e} > {t_single:.3e})",
+            d.name
+        );
+        let bands = match composite {
+            Algo::Composite(cc) => cc.bands as usize,
+            _ => unreachable!("banded_report returns a composite"),
+        };
+        rows.push(BenchRow {
+            bench: "skew",
+            matrix: d.name.clone(),
+            family: d.family.to_string(),
+            width: n,
+            algo: composite.name(),
+            baseline: single.name(),
+            est_time_us: t_comp * 1e6,
+            baseline_time_us: t_single * 1e6,
+            gflops: 0.0,
+            speedup_vs_baseline: t_single / t_comp,
+            model_rank_agree: true,
+            grid: tuner::band_candidates(n).len(),
+            survivors: bands,
+        });
+    }
+    anyhow::ensure!(
+        rows.iter().any(|r| r.bench == "skew" && r.speedup_vs_baseline > 1.0),
+        "no skew row where the hybrid strictly beats the best single plan"
+    );
     Ok(BenchReport {
         suite: "spmm",
         generator: format!("sgap bench{} (spmm, N={n})", if quick { " --quick" } else { "" }),
@@ -490,6 +544,12 @@ mod tests {
     fn normalized_clamps_at_one() {
         assert_eq!(normalized_speedup(2.0, 1.0), 1.0); // A slower: count 1
         assert_eq!(normalized_speedup(1.0, 2.0), 2.0);
+    }
+
+    #[test]
+    fn skew_suite_is_the_fixed_trio() {
+        let names: Vec<String> = skew_suite().iter().map(|d| d.name.clone()).collect();
+        assert_eq!(names, ["pl_2048_a1.6", "pl_4096_a2", "block_2048_b16"]);
     }
 
     #[test]

@@ -10,31 +10,37 @@
 //! * no loss — every pushed item is drained exactly once;
 //! * batch bound — a batch never exceeds `max_batch`.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
+use std::hash::Hash;
 
-/// A keyed FIFO batcher.
+/// A keyed FIFO batcher. `push` is O(1): a `HashMap` index maps each live
+/// key to its bucket slot, instead of the linear scan the submit path
+/// used to pay per request (a real cost under diverse routing keys).
 #[derive(Debug)]
-pub struct Batcher<K: Eq + Clone, T> {
+pub struct Batcher<K: Eq + Hash + Clone, T> {
     /// (key, queue, arrival counter of head)
     buckets: Vec<(K, VecDeque<(u64, T)>)>,
+    /// key → index into `buckets`; maintained across `swap_remove`.
+    index: HashMap<K, usize>,
     counter: u64,
     max_batch: usize,
 }
 
-impl<K: Eq + Clone, T> Batcher<K, T> {
+impl<K: Eq + Hash + Clone, T> Batcher<K, T> {
     pub fn new(max_batch: usize) -> Self {
         assert!(max_batch > 0);
-        Batcher { buckets: Vec::new(), counter: 0, max_batch }
+        Batcher { buckets: Vec::new(), index: HashMap::new(), counter: 0, max_batch }
     }
 
     pub fn push(&mut self, key: K, item: T) {
         let seq = self.counter;
         self.counter += 1;
-        if let Some((_, q)) = self.buckets.iter_mut().find(|(k, _)| *k == key) {
-            q.push_back((seq, item));
+        if let Some(&i) = self.index.get(&key) {
+            self.buckets[i].1.push_back((seq, item));
         } else {
             let mut q = VecDeque::new();
             q.push_back((seq, item));
+            self.index.insert(key.clone(), self.buckets.len());
             self.buckets.push((key, q));
         }
     }
@@ -62,7 +68,12 @@ impl<K: Eq + Clone, T> Batcher<K, T> {
         let take = q.len().min(self.max_batch);
         let items: Vec<T> = q.drain(..take).map(|(_, t)| t).collect();
         if q.is_empty() {
-            self.buckets.remove(idx);
+            self.buckets.swap_remove(idx);
+            self.index.remove(&key);
+            // the swapped-in bucket (if any) moved to `idx`: re-point it
+            if idx < self.buckets.len() {
+                self.index.insert(self.buckets[idx].0.clone(), idx);
+            }
         }
         Some((key, items))
     }
@@ -104,6 +115,22 @@ mod tests {
         assert_eq!(b.next_batch().unwrap().1, vec![0, 1]);
         assert_eq!(b.next_batch().unwrap().1, vec![2, 3]);
         assert_eq!(b.next_batch().unwrap().1, vec![4]);
+    }
+
+    #[test]
+    fn index_survives_bucket_removal() {
+        let mut b = Batcher::new(10);
+        b.push("a", 1);
+        b.push("b", 2);
+        b.push("c", 3);
+        // draining "a" swap-removes its bucket, moving "c" into its slot
+        assert_eq!(b.next_batch().unwrap(), ("a", vec![1]));
+        b.push("c", 4); // must land in c's moved bucket, FIFO preserved
+        b.push("a", 5); // a reused key gets a fresh bucket
+        assert_eq!(b.next_batch().unwrap(), ("b", vec![2]));
+        assert_eq!(b.next_batch().unwrap(), ("c", vec![3, 4]));
+        assert_eq!(b.next_batch().unwrap(), ("a", vec![5]));
+        assert!(b.next_batch().is_none() && b.is_empty());
     }
 
     #[test]

@@ -342,6 +342,9 @@ impl Executor for SimExecutor {
             self.env.metrics.on_cache_miss();
             self.env.request_tune(key, op.a.clone(), op.width as u32);
         }
+        if plan.kind.is_composite() {
+            self.env.metrics.on_banded();
+        }
         Some(Admission {
             backend: BackendKind::Sim { family: plan.kind.family_label() },
             plan: Some(plan),

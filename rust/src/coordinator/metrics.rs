@@ -40,6 +40,8 @@ pub struct Metrics {
     /// Sweeps where the analytic model's top-1 pick also won the
     /// simulation — the prune-accuracy counter.
     tune_model_agree: AtomicU64,
+    /// Requests admitted with a per-band composite (hybrid) plan.
+    banded: AtomicU64,
     /// Latencies in microseconds (bounded reservoir).
     latencies_us: Mutex<Vec<u64>>,
     backends: Mutex<BTreeMap<String, Hist>>,
@@ -108,6 +110,8 @@ pub struct MetricsSnapshot {
     pub tune_survivors: u64,
     /// Sweeps whose simulated winner was the model's top-1 pick.
     pub tune_model_agree: u64,
+    /// Requests admitted with a per-band composite (hybrid) plan.
+    pub banded: u64,
     pub p50_us: u64,
     pub p99_us: u64,
     pub mean_us: f64,
@@ -153,6 +157,12 @@ impl Metrics {
         if model_agree {
             self.tune_model_agree.fetch_add(1, Ordering::Relaxed);
         }
+    }
+
+    /// Record a request admitted with a per-band composite (hybrid) plan —
+    /// how often the skew path actually engages in production.
+    pub fn on_banded(&self) {
+        self.banded.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record a served request: global counters + the backend's histogram.
@@ -209,6 +219,7 @@ impl Metrics {
             tune_grid: self.tune_grid.load(Ordering::Relaxed),
             tune_survivors: self.tune_survivors.load(Ordering::Relaxed),
             tune_model_agree: self.tune_model_agree.load(Ordering::Relaxed),
+            banded: self.banded.load(Ordering::Relaxed),
             p50_us: q(0.50),
             p99_us: q(0.99),
             mean_us: mean,
@@ -301,5 +312,14 @@ mod tests {
         assert_eq!(s.tune_survivors, 31);
         assert_eq!(s.tune_model_agree, 2);
         assert_eq!(Metrics::new().snapshot().tunes, 0);
+    }
+
+    #[test]
+    fn banded_counter_tracks_hybrid_admissions() {
+        let m = Metrics::new();
+        assert_eq!(m.snapshot().banded, 0);
+        m.on_banded();
+        m.on_banded();
+        assert_eq!(m.snapshot().banded, 2);
     }
 }

@@ -479,7 +479,13 @@ impl Op {
             OpKind::Spmm => {
                 let stats = self.a.matrix_stats()?;
                 Some(match model {
-                    Some(m) => selector.select_model(m, stats, w),
+                    // skewed inputs may warrant a per-band composite; the
+                    // selector returns None (fall through to the single
+                    // plan) when the CV gate or the pricing says banding
+                    // doesn't pay
+                    Some(m) => selector
+                        .select_banded(m, stats, w)
+                        .unwrap_or_else(|| selector.select_model(m, stats, w)),
                     None => selector.select(stats, w),
                 })
             }

@@ -11,7 +11,11 @@
 //! Correctness does not depend on the fingerprint: every plan in the
 //! catalog computes the same SpMM/SDDMM (property-tested in
 //! `rust/tests/spmm_differential.rs`), so a fingerprint collision can only
-//! cost performance, never accuracy.
+//! cost performance, never accuracy. That includes composite (per-band
+//! hybrid) plans: their cuts are log2 degree-bucket indices, not row
+//! boundaries of the matrix they were selected for, so `Algo::run`
+//! re-derives the band partition from whatever matrix actually arrives —
+//! a collision serves a differently-tuned but still-correct hybrid.
 //!
 //! [`Selector`]: crate::tuner::Selector
 

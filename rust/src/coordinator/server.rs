@@ -403,7 +403,9 @@ fn serve_one(routed: Routed, executors: &mut [Box<dyn Executor>], ctx: &WorkerCt
 ///
 /// Tasks carry a zero-copy [`SparseHandle`](super::SparseHandle) on the
 /// operand. Sweeps go through the model-pruned entry points
-/// (`tuner::search::tune*_pruned`): the analytic model prices the whole
+/// (`tuner::search::tune*_pruned`; SpMM via `tune_banded`, which also
+/// competes the selector's per-band composite candidate when the model
+/// gates it in): the analytic model prices the whole
 /// grid in O(stats) and only `top_k` survivors are interpreted warp-by-
 /// warp — the dominant cost of this hot path before the model existed.
 /// `top_k = 0` is the exhaustive escape hatch. Every sweep records its
@@ -438,7 +440,10 @@ fn tuner_loop(
                 }
                 let b: Vec<f32> =
                     (0..a.cols * task.width as usize).map(|_| rng.value()).collect();
-                tuner::search::tune_pruned(machine, &cands, a, &b, task.width, top_k)
+                // banded variant: skewed shapes also get the selector's
+                // composite candidate in the shortlist, so a sweep can
+                // upgrade the key to a per-band hybrid plan
+                tuner::search::tune_banded(machine, &cands, a, &b, task.width, top_k)
             }
             (OpKind::Sddmm, SparseData::Matrix(a)) => {
                 let j = task.width as usize;

@@ -11,7 +11,8 @@
 //!   mttkrp    — grid-search the COO-3 MTTKRP candidates on a seeded tensor
 //!   ttm       — grid-search the COO-3 TTM candidates likewise
 //!   bench     — run the table-1/2/4 suites through the model-pruned
-//!               tuner and emit versioned BENCH_spmm.json / BENCH_tensor.json
+//!               tuner (plus the skew suite's hybrid-vs-single rows) and
+//!               emit versioned BENCH_spmm.json / BENCH_tensor.json
 //!   serve     — start the coordinator and push a demo workload
 //!
 //! Argument parsing is hand-rolled (`--key value` pairs) — the offline
@@ -308,7 +309,8 @@ fn cmd_ttm(flags: &HashMap<String, String>) -> Result<()> {
 }
 
 /// `sgap bench` — the reproducible benchmark pipeline: run the table-1/2
-/// compiler-family grid and the table-4 dgSPARSE grid (SpMM report) plus
+/// compiler-family grid and the table-4 dgSPARSE grid (SpMM report, which
+/// also carries the skew suite's hybrid-vs-single rows) plus
 /// the MTTKRP/TTM tensor report through the model-pruned tuner, and emit
 /// versioned `BENCH_spmm.json` / `BENCH_tensor.json` (schema: see
 /// EXPERIMENTS.md §BENCH; each emitted file is validated against it
@@ -455,7 +457,8 @@ fn main() -> Result<()> {
             println!("  mttkrp   --d0 128 --d1 96 --d2 64 --nnz 4000 --j 16 --hw 3090|2080|v100");
             println!("  ttm      --d0 128 --d1 96 --d2 64 --nnz 4000 --l 16 --hw 3090|2080|v100");
             println!("  bench    [--quick] [--out DIR] [--k 8] [--hw 3090|2080|v100]");
-            println!("           (emits BENCH_spmm.json + BENCH_tensor.json; --k 0 = exhaustive)");
+            println!("           (emits BENCH_spmm.json + BENCH_tensor.json incl. the skew");
+            println!("            hybrid-vs-single rows; --k 0 = exhaustive)");
             println!("  serve    --requests 32 --workers 2 [--tune] [--cpu-only] (SGAP_ARTIFACTS overrides artifacts dir)");
             println!("  macros   (print the §5.3 macro-instruction header)");
             Ok(())

@@ -74,9 +74,13 @@ impl Coo3 {
     }
 
     /// Fiber ids over the leading two modes: `fiber[p] = i*dim1 + j` —
-    /// the segment key for reductions over the trailing mode.
-    pub fn leading_fiber_ids(&self) -> Vec<u32> {
-        (0..self.nnz()).map(|p| self.idx0[p] * self.dim1 as u32 + self.idx1[p]).collect()
+    /// the segment key for reductions over the trailing mode. Computed in
+    /// `u64` so tensors with `dim0 * dim1 > u32::MAX` get the same key as
+    /// [`SegStats::ttm`](super::SegStats::ttm) instead of a wrapped one.
+    pub fn leading_fiber_ids(&self) -> Vec<u64> {
+        (0..self.nnz())
+            .map(|p| self.idx0[p] as u64 * self.dim1 as u64 + self.idx1[p] as u64)
+            .collect()
     }
 }
 
@@ -114,6 +118,30 @@ mod tests {
         let f = t.leading_fiber_ids();
         for w in f.windows(2) {
             assert!(w[0] <= w[1], "fiber ids must be sorted for segment reduction");
+        }
+    }
+
+    #[test]
+    fn fiber_ids_do_not_wrap_past_u32() {
+        // dim0 * dim1 > u32::MAX: the u32 arithmetic this replaced wrapped
+        // here, disagreeing with SegStats::ttm's u64 key on the same entry
+        let dim0 = 1usize << 20;
+        let dim1 = 1usize << 13; // dim0 * dim1 = 2^33 > u32::MAX
+        let t = Coo3::new(
+            (dim0, dim1, 4),
+            vec![
+                (0, 0, 0, 1.0),
+                ((dim0 - 1) as u32, 0, 1, 2.0),
+                ((dim0 - 1) as u32, (dim1 - 1) as u32, 2, 3.0),
+            ],
+        );
+        let f = t.leading_fiber_ids();
+        assert_eq!(f[0], 0);
+        assert_eq!(f[1], (dim0 as u64 - 1) * dim1 as u64);
+        assert_eq!(f[2], dim0 as u64 * dim1 as u64 - 1);
+        assert!(f[2] > u32::MAX as u64, "the boundary case must exceed u32");
+        for w in f.windows(2) {
+            assert!(w[0] < w[1], "distinct fibers must stay ordered");
         }
     }
 }

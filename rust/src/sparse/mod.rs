@@ -12,6 +12,7 @@ pub mod dataset;
 pub mod ell;
 pub mod gen;
 pub mod mtx;
+pub mod partition;
 pub mod rng;
 pub mod stats;
 
@@ -21,5 +22,8 @@ pub use csr::Csr;
 pub use dataset::{suite, DatasetSpec};
 pub use ell::Ell;
 pub use gen::{banded, block_community, erdos_renyi, power_law};
+pub use partition::{
+    band_csr, band_of, band_stats, choose_cuts, partition_rows, BandPartition, CUT_SENTINEL,
+};
 pub use rng::SplitMix64;
 pub use stats::{MatrixStats, SegStats};

@@ -1,0 +1,346 @@
+//! nnz-balanced band partitioning for skewed matrices.
+//!
+//! Power-law inputs defeat any *single* schedule: short rows want a
+//! row-parallel kernel, hub rows want an nnz-split one (§3's adaptive
+//! group-size argument, and Chougule et al.'s load-balanced partitioning
+//! in PAPERS.md). This module classifies rows into up to [`MAX_BANDS`]
+//! bands — short-row, mid, hub — by log2 row-degree bucket, choosing the
+//! cut buckets so each band carries roughly `nnz / bands` non-zeros.
+//!
+//! Key properties:
+//! * **No data copy at plan time.** A [`BandPartition`] is a permutation
+//!   plus band boundaries over the original CSR; sub-CSR gathering
+//!   ([`band_csr`]) happens only when a composite plan actually runs.
+//! * **Matrix-independent cuts.** Cuts are log2-bucket indices, so a
+//!   composite plan cached under a [`ShapeKey`](crate::coordinator) stays
+//!   valid for any matrix that collides into the key: re-deriving the
+//!   bands from the cuts on the colliding matrix is always legal, and a
+//!   collision can only cost performance, never accuracy.
+//! * **Balance bound by construction.** [`choose_cuts`] guarantees every
+//!   band's nnz is at most `total/bands + max_bucket_nnz` (the granularity
+//!   limit of cutting on bucket boundaries); it degrades 3 → 2 bands when
+//!   the 3-way cut cannot meet the bound, and returns `None` when fewer
+//!   than two degree buckets are occupied (nothing to split).
+
+use super::csr::Csr;
+use super::stats::{degree_bucket, MatrixStats, DEGREE_BUCKETS};
+
+/// Maximum number of bands: short-row, mid, hub.
+pub const MAX_BANDS: usize = 3;
+
+/// Sentinel for an unused cut slot (no bucket reaches it).
+pub const CUT_SENTINEL: u8 = DEGREE_BUCKETS as u8;
+
+/// Band of a row with the given degree under `cuts`. Empty rows belong to
+/// band 0 (they cost a thread slot exactly like a short row).
+#[inline]
+pub fn band_of(degree: usize, cuts: [u8; 2]) -> usize {
+    if degree == 0 {
+        return 0;
+    }
+    let b = degree_bucket(degree) as u8;
+    (b >= cuts[0]) as usize + (b >= cuts[1]) as usize
+}
+
+/// Choose nnz-balancing cut buckets from a matrix's degree histogram.
+///
+/// Returns `(bands, cuts)` with `2 <= bands <= MAX_BANDS`; unused cut
+/// slots hold [`CUT_SENTINEL`]. Returns `None` when the histogram has
+/// fewer than two occupied buckets — all rows look alike, banding cannot
+/// help. The result satisfies the balance bound
+/// `band_nnz[b] <= total/bands + max(hist_nnz)` for every band.
+pub fn choose_cuts(stats: &MatrixStats) -> Option<(usize, [u8; 2])> {
+    let total: u64 = stats.hist_nnz.iter().sum();
+    if total == 0 {
+        return None;
+    }
+    let occupied: Vec<usize> =
+        (0..DEGREE_BUCKETS).filter(|&b| stats.hist_rows[b] > 0).collect();
+    if occupied.len() < 2 {
+        return None;
+    }
+    let (lowest, top) = (occupied[0], *occupied.last().unwrap());
+    let max_bucket = *stats.hist_nnz.iter().max().unwrap();
+    // prefix[c] = nnz in buckets < c
+    let mut prefix = [0u64; DEGREE_BUCKETS + 1];
+    for b in 0..DEGREE_BUCKETS {
+        prefix[b + 1] = prefix[b] + stats.hist_nnz[b];
+    }
+    // smallest cut c with prefix[c] * bands >= k * total, clamped so both
+    // sides of the cut keep at least one occupied bucket
+    let cut_at = |k: u64, bands: u64| -> u8 {
+        let c = (1..=DEGREE_BUCKETS)
+            .find(|&c| prefix[c] * bands >= k * total)
+            .unwrap_or(DEGREE_BUCKETS);
+        c.clamp(lowest + 1, top) as u8
+    };
+    let band_nnz_of = |lo: u8, hi: u8| -> u64 { prefix[hi as usize] - prefix[lo as usize] };
+
+    if occupied.len() >= MAX_BANDS {
+        let c1 = cut_at(1, 3);
+        let c2 = cut_at(2, 3);
+        if c1 < c2 {
+            let cuts = [c1, c2];
+            let widths = [(0u8, c1), (c1, c2), (c2, DEGREE_BUCKETS as u8)];
+            let bound = total / 3 + max_bucket;
+            let balanced = widths.iter().all(|&(lo, hi)| band_nnz_of(lo, hi) <= bound);
+            let populated = widths.iter().all(|&(lo, hi)| {
+                (lo as usize..hi as usize).any(|b| stats.hist_rows[b] > 0)
+            });
+            if balanced && populated {
+                return Some((3, cuts));
+            }
+        }
+    }
+    // 2-band fallback always meets the bound: the cut is the smallest
+    // bucket boundary at or past the nnz midpoint, so the low band holds
+    // < total/2 + max_bucket and the high band <= total/2 (or, when one
+    // bucket dominates, exactly that bucket).
+    Some((2, [cut_at(1, 2), CUT_SENTINEL]))
+}
+
+/// A band partition: rows grouped by band, original indices preserved.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BandPartition {
+    pub bands: usize,
+    pub cuts: [u8; 2],
+    /// Row indices grouped by band, ascending within each band.
+    pub perm: Vec<u32>,
+    /// `perm[starts[b]..starts[b+1]]` is band `b`; trailing entries of an
+    /// unused band repeat `rows`.
+    pub starts: [usize; MAX_BANDS + 1],
+    /// Non-zeros per band.
+    pub band_nnz: [usize; MAX_BANDS],
+}
+
+impl BandPartition {
+    /// The original row indices of band `b` (ascending).
+    pub fn rows_of(&self, band: usize) -> &[u32] {
+        &self.perm[self.starts[band]..self.starts[band + 1]]
+    }
+}
+
+/// Partition a CSR's rows into bands under `cuts`. Stable: within a band,
+/// rows keep ascending original order, so a serial sweep over the bands
+/// visits each row exactly once and band outputs scatter back disjointly.
+pub fn partition_rows(a: &Csr, bands: usize, cuts: [u8; 2]) -> BandPartition {
+    debug_assert!((2..=MAX_BANDS).contains(&bands));
+    let mut counts = [0usize; MAX_BANDS];
+    let mut band_nnz = [0usize; MAX_BANDS];
+    for i in 0..a.rows {
+        let d = a.row_degree(i);
+        let b = band_of(d, cuts).min(bands - 1);
+        counts[b] += 1;
+        band_nnz[b] += d;
+    }
+    let mut starts = [0usize; MAX_BANDS + 1];
+    for b in 0..MAX_BANDS {
+        starts[b + 1] = starts[b] + counts[b];
+    }
+    let mut cursor = [starts[0], starts[1], starts[2]];
+    let mut perm = vec![0u32; a.rows];
+    for i in 0..a.rows {
+        let b = band_of(a.row_degree(i), cuts).min(bands - 1);
+        perm[cursor[b]] = i as u32;
+        cursor[b] += 1;
+    }
+    BandPartition { bands, cuts, perm, starts, band_nnz }
+}
+
+/// Gather the sub-CSR of the given rows (renumbered `0..rows.len()`,
+/// same column space). Used by the composite runner right before kernel
+/// launch; plans themselves never hold copied data.
+pub fn band_csr(a: &Csr, rows: &[u32]) -> Csr {
+    let mut indptr = Vec::with_capacity(rows.len() + 1);
+    indptr.push(0u32);
+    let mut indices = Vec::new();
+    let mut data = Vec::new();
+    for &r in rows {
+        let (lo, hi) = (a.indptr[r as usize] as usize, a.indptr[r as usize + 1] as usize);
+        indices.extend_from_slice(&a.indices[lo..hi]);
+        data.extend_from_slice(&a.data[lo..hi]);
+        indptr.push(indices.len() as u32);
+    }
+    Csr { rows: rows.len(), cols: a.cols, indptr, indices, data }
+}
+
+/// Synthetic per-band [`MatrixStats`], derived from the histogram alone —
+/// no matrix walk, so the cost model can price a composite plan from the
+/// same `MatrixStats` the selector already holds (and the Python
+/// transliteration can reproduce it). Bucket `b`'s rows are represented
+/// by degree `1.5 * 2^b` (the bucket midpoint) for the variance estimate;
+/// means and nnz are exact. Empty rows are charged to band 0.
+pub fn band_stats(stats: &MatrixStats, bands: usize, cuts: [u8; 2]) -> Vec<MatrixStats> {
+    let empty_rows = (stats.empty_row_frac * stats.rows as f64).round() as usize;
+    let mut out = Vec::with_capacity(bands);
+    for band in 0..bands {
+        let lo = if band == 0 { 0 } else { cuts[band - 1] as usize };
+        let hi = if band + 1 < bands { cuts[band] as usize } else { DEGREE_BUCKETS };
+        let mut hist_rows = [0u32; DEGREE_BUCKETS];
+        let mut hist_nnz = [0u64; DEGREE_BUCKETS];
+        let mut rows_b = 0usize;
+        let mut nnz_b = 0u64;
+        let mut hi_occ = None;
+        for b in lo..hi {
+            hist_rows[b] = stats.hist_rows[b];
+            hist_nnz[b] = stats.hist_nnz[b];
+            rows_b += stats.hist_rows[b] as usize;
+            nnz_b += stats.hist_nnz[b];
+            if stats.hist_rows[b] > 0 {
+                hi_occ = Some(b);
+            }
+        }
+        let empties = if band == 0 { empty_rows } else { 0 };
+        let rows_total = (rows_b + empties).max(1);
+        let mean = nnz_b as f64 / rows_total as f64;
+        let mut var = (empties as f64) * mean * mean; // degree-0 rows
+        for b in lo..hi {
+            let rep = 1.5 * (1u64 << b) as f64;
+            var += stats.hist_rows[b] as f64 * (rep - mean) * (rep - mean);
+        }
+        var /= rows_total as f64;
+        let cv = if mean > 0.0 { var.sqrt() / mean } else { 0.0 };
+        let max_deg = match hi_occ {
+            Some(b) => ((1u64 << (b + 1)) - 1).min(stats.row_degree_max as u64) as usize,
+            None => 0,
+        };
+        out.push(MatrixStats {
+            rows: rows_total,
+            cols: stats.cols,
+            nnz: nnz_b as usize,
+            density: if stats.cols == 0 {
+                0.0
+            } else {
+                nnz_b as f64 / (rows_total as f64 * stats.cols as f64)
+            },
+            row_degree_mean: mean,
+            row_degree_cv: cv,
+            row_degree_max: max_deg,
+            gini: 0.0,
+            empty_row_frac: empties as f64 / rows_total as f64,
+            hist_rows,
+            hist_nnz,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen::{erdos_renyi, power_law};
+
+    #[test]
+    fn every_row_in_exactly_one_band() {
+        let a = power_law(512, 512, 8192, 1.8, 21).to_csr();
+        let stats = MatrixStats::of(&a);
+        let (bands, cuts) = choose_cuts(&stats).expect("power-law must band");
+        let p = partition_rows(&a, bands, cuts);
+        let mut seen = vec![false; a.rows];
+        for b in 0..bands {
+            for &r in p.rows_of(b) {
+                assert!(!seen[r as usize], "row {r} in two bands");
+                seen[r as usize] = true;
+                assert_eq!(band_of(a.row_degree(r as usize), cuts).min(bands - 1), b);
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "some row missing from all bands");
+        assert_eq!(p.band_nnz.iter().sum::<usize>(), a.nnz());
+    }
+
+    #[test]
+    fn band_nnz_within_balance_bound() {
+        for (alpha, seed) in [(1.6, 5u64), (2.0, 9), (1.2, 13)] {
+            let a = power_law(1024, 1024, 16384, alpha, seed).to_csr();
+            let stats = MatrixStats::of(&a);
+            let (bands, cuts) = choose_cuts(&stats).unwrap();
+            let p = partition_rows(&a, bands, cuts);
+            let total = a.nnz() as u64;
+            let max_bucket = *stats.hist_nnz.iter().max().unwrap();
+            let bound = total / bands as u64 + max_bucket;
+            for b in 0..bands {
+                assert!(
+                    p.band_nnz[b] as u64 <= bound,
+                    "alpha {alpha}: band {b} nnz {} > bound {bound}",
+                    p.band_nnz[b]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_degrees_decline_to_band() {
+        // every row degree 4 → a single occupied bucket → None
+        let coo = crate::sparse::coo::Coo::new(
+            16,
+            16,
+            (0..16u32).flat_map(|r| (0..4u32).map(move |c| (r, c, 1.0f32))).collect(),
+        );
+        let s = MatrixStats::of(&coo.to_csr());
+        assert!(choose_cuts(&s).is_none());
+    }
+
+    #[test]
+    fn er_still_bands_when_buckets_spread() {
+        // choose_cuts is mechanical; the *selector's* CV gate is what
+        // keeps ER on the single-plan path. Here we only require that a
+        // returned partition is well-formed.
+        let a = erdos_renyi(256, 256, 1300, 17).to_csr();
+        let stats = MatrixStats::of(&a);
+        if let Some((bands, cuts)) = choose_cuts(&stats) {
+            let p = partition_rows(&a, bands, cuts);
+            assert_eq!(p.perm.len(), a.rows);
+            assert_eq!(p.starts[bands], a.rows);
+        }
+    }
+
+    #[test]
+    fn band_csr_preserves_rows_and_invariants() {
+        let a = power_law(128, 96, 1500, 1.7, 4).to_csr();
+        let stats = MatrixStats::of(&a);
+        let (bands, cuts) = choose_cuts(&stats).unwrap();
+        let p = partition_rows(&a, bands, cuts);
+        let mut total = 0;
+        for b in 0..bands {
+            let rows = p.rows_of(b);
+            let sub = band_csr(&a, rows);
+            sub.check_invariants().unwrap();
+            assert_eq!(sub.nnz(), p.band_nnz[b]);
+            total += sub.nnz();
+            for (local, &orig) in rows.iter().enumerate() {
+                let (lo, hi) =
+                    (a.indptr[orig as usize] as usize, a.indptr[orig as usize + 1] as usize);
+                let (slo, shi) = (sub.indptr[local] as usize, sub.indptr[local + 1] as usize);
+                assert_eq!(&a.indices[lo..hi], &sub.indices[slo..shi]);
+                assert_eq!(&a.data[lo..hi], &sub.data[slo..shi]);
+            }
+        }
+        assert_eq!(total, a.nnz());
+    }
+
+    #[test]
+    fn band_stats_conserve_rows_and_nnz() {
+        let a = power_law(512, 512, 6000, 1.9, 8).to_csr();
+        let stats = MatrixStats::of(&a);
+        let (bands, cuts) = choose_cuts(&stats).unwrap();
+        let per = band_stats(&stats, bands, cuts);
+        assert_eq!(per.len(), bands);
+        let rows: usize = per.iter().map(|s| s.rows).sum();
+        let nnz: usize = per.iter().map(|s| s.nnz).sum();
+        assert_eq!(rows, stats.rows);
+        assert_eq!(nnz, stats.nnz);
+        // hub band has larger mean degree than short band
+        assert!(per[bands - 1].row_degree_mean > per[0].row_degree_mean);
+        // per-band maxima never exceed the global max
+        for s in &per {
+            assert!(s.row_degree_max <= stats.row_degree_max);
+        }
+    }
+
+    #[test]
+    fn empty_rows_land_in_band_zero() {
+        assert_eq!(band_of(0, [3, 7]), 0);
+        assert_eq!(band_of(1, [1, 7]), 1);
+        assert_eq!(band_of(200, [3, 7]), 2);
+    }
+}

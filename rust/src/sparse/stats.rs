@@ -6,6 +6,19 @@
 use super::coo3::Coo3;
 use super::csr::Csr;
 
+/// Number of log2 row-degree histogram buckets in [`MatrixStats`]:
+/// bucket `b` counts rows with `floor(log2(degree)) == b` (degree >= 1),
+/// saturating at the last bucket. 16 buckets cover degrees up to 2^16-1 —
+/// beyond any row the simulator-scale suite produces.
+pub const DEGREE_BUCKETS: usize = 16;
+
+/// Log2 bucket of a (non-zero) row degree.
+#[inline]
+pub fn degree_bucket(degree: usize) -> usize {
+    debug_assert!(degree > 0);
+    ((usize::BITS - 1 - degree.leading_zeros()) as usize).min(DEGREE_BUCKETS - 1)
+}
+
 /// Summary statistics of a sparse matrix's structure.
 #[derive(Debug, Clone, PartialEq)]
 pub struct MatrixStats {
@@ -22,11 +35,27 @@ pub struct MatrixStats {
     pub gini: f64,
     /// Fraction of empty rows (they still cost a thread in row-balanced kernels).
     pub empty_row_frac: f64,
+    /// Rows per log2 degree bucket ([`degree_bucket`]); empty rows are
+    /// *not* histogrammed (they carry no nnz — the band partitioner
+    /// assigns them to the short-row band separately).
+    pub hist_rows: [u32; DEGREE_BUCKETS],
+    /// Non-zeros per log2 degree bucket — the mass the nnz-balanced
+    /// splitter (`sparse::partition`) cuts into bands.
+    pub hist_nnz: [u64; DEGREE_BUCKETS],
 }
 
 impl MatrixStats {
     pub fn of(m: &Csr) -> Self {
         let degrees: Vec<usize> = (0..m.rows).map(|i| m.row_degree(i)).collect();
+        let mut hist_rows = [0u32; DEGREE_BUCKETS];
+        let mut hist_nnz = [0u64; DEGREE_BUCKETS];
+        for &d in &degrees {
+            if d > 0 {
+                let b = degree_bucket(d);
+                hist_rows[b] += 1;
+                hist_nnz[b] += d as u64;
+            }
+        }
         let n = degrees.len().max(1) as f64;
         let mean = degrees.iter().sum::<usize>() as f64 / n;
         let var = degrees.iter().map(|&d| (d as f64 - mean).powi(2)).sum::<f64>() / n;
@@ -158,6 +187,38 @@ mod tests {
         assert_eq!(s.empty_row_frac, 0.75);
         assert!(s.gini > 0.7, "gini {} should be high", s.gini);
         assert!(s.row_degree_cv > 1.5);
+    }
+
+    #[test]
+    fn histogram_buckets_by_log2_degree() {
+        // rows with degrees 1, 2, 3, 8, 0 → buckets 0, 1, 1, 3; empty row skipped
+        let mut entries = Vec::new();
+        entries.push((0u32, 0u32, 1.0f32)); // deg 1
+        for c in 0..2 {
+            entries.push((1, c, 1.0)); // deg 2
+        }
+        for c in 0..3 {
+            entries.push((2, c, 1.0)); // deg 3
+        }
+        for c in 0..8 {
+            entries.push((3, c, 1.0)); // deg 8
+        }
+        let s = MatrixStats::of(&Coo::new(5, 8, entries).to_csr());
+        assert_eq!(s.hist_rows[0], 1);
+        assert_eq!(s.hist_rows[1], 2);
+        assert_eq!(s.hist_rows[2], 0);
+        assert_eq!(s.hist_rows[3], 1);
+        assert_eq!(s.hist_nnz[0], 1);
+        assert_eq!(s.hist_nnz[1], 5);
+        assert_eq!(s.hist_nnz[3], 8);
+        // conservation: histogram covers exactly the non-empty rows / all nnz
+        let rows: u32 = s.hist_rows.iter().sum();
+        let nnz: u64 = s.hist_nnz.iter().sum();
+        assert_eq!(rows as usize, 4);
+        assert_eq!(nnz as usize, s.nnz);
+        assert_eq!(degree_bucket(1), 0);
+        assert_eq!(degree_bucket(2), 1);
+        assert_eq!(degree_bucket(usize::MAX), DEGREE_BUCKETS - 1);
     }
 
     #[test]

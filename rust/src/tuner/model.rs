@@ -23,7 +23,7 @@
 //! within the documented time ratio) is enforced by
 //! `rust/tests/tuner_pruning.rs`.
 
-use crate::algos::catalog::Algo;
+use crate::algos::catalog::{Algo, CompositeConfig};
 use crate::algos::dgsparse::DgConfig;
 use crate::algos::mttkrp::{MttkrpConfig, TtmConfig};
 use crate::algos::sddmm::SddmmConfig;
@@ -89,12 +89,43 @@ impl CostModel {
                 self.est_row_group(stats, *n, g, c, r)
             }
             (Workload::Spmm { stats, n }, Algo::Dg(cfg)) => self.est_dg(stats, *n, &cfg),
+            // composites price outside the Estimate pipeline: max over
+            // per-band roll-ups, each band already a complete launch
+            (Workload::Spmm { stats, n }, Algo::Composite(cc)) => {
+                return self.price_composite(stats, *n, &cc)
+            }
             (Workload::Sddmm { stats, .. }, Algo::Sddmm(cfg)) => self.est_sddmm(stats, &cfg),
             (Workload::Mttkrp { seg, .. }, Algo::Mttkrp(cfg)) => self.est_coo3(seg, &cfg_m(&cfg)),
             (Workload::Ttm { seg, .. }, Algo::Ttm(cfg)) => self.est_coo3(seg, &cfg_t(&cfg)),
             _ => return None,
         };
         Some(self.rollup(est))
+    }
+
+    /// Price a per-band composite plan. The bands of one logical op
+    /// launch independently, so the composite costs its *slowest band* —
+    /// each band priced on synthetic [`MatrixStats`] derived from the
+    /// full matrix's degree histogram
+    /// ([`band_stats`](crate::sparse::band_stats)) — plus one extra
+    /// launch overhead per additional band. `None` if any band plan
+    /// cannot be priced (never happens for [`BandAlgo`]-backed bands, by
+    /// construction).
+    ///
+    /// [`BandAlgo`]: crate::algos::BandAlgo
+    pub fn price_composite(
+        &self,
+        stats: &MatrixStats,
+        n: u32,
+        cc: &CompositeConfig,
+    ) -> Option<f64> {
+        let bands = (cc.bands as usize).clamp(2, 3);
+        let per = crate::sparse::band_stats(stats, bands, cc.cuts);
+        let mut worst = 0f64;
+        for (band, bs) in per.iter().enumerate() {
+            let w = Workload::Spmm { stats: bs, n };
+            worst = worst.max(self.price(&cc.plan(band), &w)?);
+        }
+        Some(worst + (bands as f64 - 1.0) * self.hw.launch_overhead_s)
     }
 
     /// Prune `candidates` to the `k` cheapest under the model, cheapest
@@ -477,6 +508,35 @@ mod tests {
             ratio_skew > ratio_uni,
             "skew must hurt row-split: uniform {ratio_uni} vs skewed {ratio_skew}"
         );
+    }
+
+    #[test]
+    fn composite_prices_finite_and_only_for_spmm() {
+        use crate::algos::catalog::{BandAlgo, CompositeConfig};
+        use crate::sparse::choose_cuts;
+        let m = model();
+        let a = power_law(512, 512, 8192, 1.8, 3).to_csr();
+        let stats = MatrixStats::of(&a);
+        let (bands, cuts) = choose_cuts(&stats).unwrap();
+        let cc = CompositeConfig {
+            bands: bands as u8,
+            cuts,
+            plans: [
+                BandAlgo::TacoRowSerial { x: 1, c: 4 },
+                BandAlgo::SgapRowGroup { g: 8, c: 4, r: 8 },
+                BandAlgo::SgapNnzGroup { c: 4, r: 32 },
+            ],
+        };
+        let plan = Algo::Composite(cc);
+        let w = Workload::Spmm { stats: &stats, n: 4 };
+        let t = m.price(&plan, &w).unwrap();
+        assert!(t.is_finite() && t > 0.0);
+        // max-over-bands: the composite costs at least one band's price
+        // and at least the extra launch overheads
+        assert!(t > m.hw.launch_overhead_s * bands as f64);
+        // non-SpMM workloads cannot be served by a composite
+        let sddmm = Workload::Sddmm { stats: &stats, j: 16 };
+        assert!(m.price(&plan, &sddmm).is_none());
     }
 
     #[test]

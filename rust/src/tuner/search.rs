@@ -135,6 +135,40 @@ pub fn tune_pruned(
     Ok(pruned_outcome(outcome, candidates.len(), &short))
 }
 
+/// [`tune_pruned`] plus the banded composite candidate: when the
+/// selector's partitioner produces a composite that prices strictly below
+/// the best single plan (`Selector::banded_plan`), it joins the shortlist
+/// and competes in the simulated ranking like any other candidate — the
+/// coordinator's background tuner can therefore *upgrade* a skewed key to
+/// a composite, and low-CV inputs (where banding declines) follow exactly
+/// the [`tune_pruned`] path.
+pub fn tune_banded(
+    machine: &Machine,
+    candidates: &[Algo],
+    a: &Csr,
+    b: &[f32],
+    n: u32,
+    top_k: usize,
+) -> Result<PrunedOutcome> {
+    anyhow::ensure!(!candidates.is_empty(), "no candidates supplied");
+    let stats = MatrixStats::of(a);
+    let model = CostModel::new(machine);
+    let workload = Workload::Spmm { stats: &stats, n };
+    let mut short = shortlist_for(&model, candidates, &workload, top_k);
+    let selector = super::selector::Selector::default();
+    if let Some(composite) = selector.select_banded(&model, &stats, n) {
+        // model says banding pays: the composite leads the shortlist (it
+        // priced below every single plan, so it is the model's top-1);
+        // the worst single survivor drops so the simulated budget is
+        // unchanged (survivors never exceeds the top_k contract)
+        let cap = short.len();
+        short.insert(0, composite);
+        short.truncate(cap.max(1));
+    }
+    let outcome = tune(machine, &short, a, b, n)?;
+    Ok(pruned_outcome(outcome, candidates.len(), &short))
+}
+
 /// Sweep SDDMM plans (unified [`Algo::Sddmm`] vocabulary) on
 /// `(a, x1, x2)`; returns all results sorted fastest-first. Serial on
 /// purpose: this runs on the coordinator's single background-refinement
@@ -351,6 +385,35 @@ mod tests {
         // the pruned winner can never beat the exhaustive winner
         let (_, t_full) = full.best().unwrap();
         assert!(t >= t_full - 1e-18);
+    }
+
+    #[test]
+    fn banded_sweep_adds_composite_only_for_skewed_inputs() {
+        use crate::tuner::space::band_candidates;
+        let m = Machine::new(HwProfile::rtx3090());
+        let n = 4u32;
+        let mut rng = SplitMix64::new(8);
+
+        // low CV: tune_banded must behave exactly like tune_pruned
+        let er = erdos_renyi(128, 128, 1024, 3).to_csr();
+        let b: Vec<f32> = (0..er.cols * n as usize).map(|_| rng.value()).collect();
+        let cands = band_candidates(n);
+        let banded = tune_banded(&m, &cands, &er, &b, n, 5).unwrap();
+        let pruned = tune_pruned(&m, &cands, &er, &b, n, 5).unwrap();
+        assert_eq!(banded.survivors, pruned.survivors);
+        assert!(banded.outcome.ranked.iter().all(|(a, _, _)| !a.is_composite()));
+        assert_eq!(banded.best().unwrap().0, pruned.best().unwrap().0);
+
+        // high CV: if the model gates a composite in, it leads the
+        // shortlist without growing the simulation budget
+        let pl = crate::sparse::power_law(512, 512, 8192, 1.8, 21).to_csr();
+        let bp: Vec<f32> = (0..pl.cols * n as usize).map(|_| rng.value()).collect();
+        let out = tune_banded(&m, &cands, &pl, &bp, n, 5).unwrap();
+        assert!(out.survivors <= 5, "banding must not inflate survivors");
+        assert!(out.best().unwrap().1 > 0.0);
+        for (a, t, _) in &out.outcome.ranked {
+            assert!(*t > 0.0, "{} has nonpositive time", a.name());
+        }
     }
 
     #[test]

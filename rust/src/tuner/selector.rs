@@ -80,6 +80,67 @@ impl Selector {
         model.shortlist(&grid, &Workload::Spmm { stats, n }, 1)[0]
     }
 
+    /// Per-band composite selection: `Some(Algo::Composite)` only when
+    /// (a) the input is skewed enough to gate in (row-degree CV at or
+    /// above `cv_eb_threshold` — the same axis that flips EB/RB in
+    /// [`Selector::select`]), and (b) the model prices the composite
+    /// *strictly below* the best single plan on the band grid. Low-CV
+    /// inputs (ER, banded) return `None` without touching the partitioner,
+    /// keeping the single-plan path byte-identical for them.
+    pub fn select_banded(&self, model: &CostModel, stats: &MatrixStats, n: u32) -> Option<Algo> {
+        if stats.row_degree_cv < self.cv_eb_threshold {
+            return None;
+        }
+        self.banded_plan(model, stats, n)
+    }
+
+    /// Build the composite candidate without the CV gate and price it
+    /// against the best single band-grid plan. Returns
+    /// `(composite, t_composite, best_single, t_single)` whatever the
+    /// comparison says — the bench path reports hybrid-vs-single rows
+    /// from this even for matrices the gate would decline. `None` only
+    /// when the histogram doesn't band
+    /// ([`choose_cuts`](crate::sparse::choose_cuts) declines) or the
+    /// width admits no band candidates.
+    pub fn banded_report(
+        &self,
+        model: &CostModel,
+        stats: &MatrixStats,
+        n: u32,
+    ) -> Option<(Algo, f64, Algo, f64)> {
+        use crate::algos::catalog::{BandAlgo, CompositeConfig};
+        let (bands, cuts) = crate::sparse::choose_cuts(stats)?;
+        let grid = super::space::band_candidates(n);
+        if grid.is_empty() {
+            return None;
+        }
+        // best single plan per band, each priced on its synthetic stats
+        let per = crate::sparse::band_stats(stats, bands, cuts);
+        let mut plans = [BandAlgo::SgapNnzGroup { c: 1, r: 2 }; 3];
+        for (band, bs) in per.iter().enumerate() {
+            let w = Workload::Spmm { stats: bs, n };
+            let top = model.shortlist(&grid, &w, 1)[0];
+            plans[band] = BandAlgo::from_algo(top).expect("band grid is BandAlgo-closed");
+        }
+        if bands == 2 {
+            plans[2] = plans[1]; // unused slot mirrors the last active plan
+        }
+        let composite = Algo::Composite(CompositeConfig { bands: bands as u8, cuts, plans });
+        let full = Workload::Spmm { stats, n };
+        let t_composite = model.price(&composite, &full)?;
+        let best_single = model.shortlist(&grid, &full, 1)[0];
+        let t_single = model.price(&best_single, &full)?;
+        Some((composite, t_composite, best_single, t_single))
+    }
+
+    /// [`Selector::banded_report`] filtered to the serving contract:
+    /// `Some` only when the composite prices *strictly below* the best
+    /// single plan.
+    pub fn banded_plan(&self, model: &CostModel, stats: &MatrixStats, n: u32) -> Option<Algo> {
+        let (composite, t_composite, _, t_single) = self.banded_report(model, stats, n)?;
+        (t_composite < t_single).then_some(composite)
+    }
+
     /// SDDMM analogue of [`Selector::select_model`]: model-argmin over the
     /// §4.3 grid, tree fallback when the grid is empty.
     pub fn select_sddmm_model(&self, model: &CostModel, stats: &MatrixStats, j_dim: u32) -> Algo {
@@ -382,6 +443,57 @@ mod tests {
         cfg.validate().unwrap();
         assert!(s.select_mttkrp_model(&model, &t, 20).is_none());
         assert!(s.select_ttm_model(&model, &t, 20).is_none());
+    }
+
+    #[test]
+    fn low_cv_inputs_decline_banding() {
+        let machine = Machine::new(HwProfile::rtx3090());
+        let model = CostModel::new(&machine);
+        let s = Selector::default();
+        for a in [
+            crate::sparse::banded(512, 9, 2).to_csr(),
+            erdos_renyi(512, 512, 4096, 5).to_csr(),
+        ] {
+            let stats = MatrixStats::of(&a);
+            assert!(stats.row_degree_cv < s.cv_eb_threshold, "fixture must be low-CV");
+            assert!(
+                s.select_banded(&model, &stats, 4).is_none(),
+                "low-CV input must stay on the single-plan path"
+            );
+        }
+    }
+
+    #[test]
+    fn skewed_inputs_band_and_composite_beats_single_under_the_model() {
+        let machine = Machine::new(HwProfile::rtx3090());
+        let model = CostModel::new(&machine);
+        let s = Selector::default();
+        let a = power_law(2048, 2048, 16384, 1.6, 1013).to_csr();
+        let stats = MatrixStats::of(&a);
+        assert!(stats.row_degree_cv >= s.cv_eb_threshold, "fixture must be high-CV");
+        let (composite, t_composite, best_single, t_single) =
+            s.banded_report(&model, &stats, 4).expect("power-law must band");
+        assert!(composite.is_composite());
+        assert!(!best_single.is_composite());
+        assert!(t_composite.is_finite() && t_single.is_finite());
+        assert!(
+            t_composite <= t_single,
+            "composite {t_composite} must not price above best single {t_single}"
+        );
+        // the gated path agrees with the report
+        match s.select_banded(&model, &stats, 4) {
+            Some(p) => {
+                assert_eq!(p, composite);
+                assert!(t_composite < t_single);
+            }
+            None => assert!(t_composite >= t_single),
+        }
+        // a selected composite is runnable and matches the oracle
+        let b = b_for(&a, 4, 77);
+        let res = composite.run(&machine, &a, &b, 4).unwrap();
+        let want = crate::algos::cpu_ref::spmm_serial(&a, &b, 4);
+        let err = crate::algos::cpu_ref::max_rel_err(&res.run.c, &want);
+        assert!(err < 5e-4, "composite err {err}");
     }
 
     #[test]

@@ -53,6 +53,15 @@ pub fn sgap_candidates(n: u32) -> Vec<Algo> {
     out
 }
 
+/// Per-band candidate grid for composite plans: the four compiler
+/// families (TACO ∪ Sgap). dgSPARSE is excluded — its launch shape owns
+/// the whole row space, which a row-subset band view breaks.
+pub fn band_candidates(n: u32) -> Vec<Algo> {
+    let mut out = taco_candidates(n);
+    out.extend(sgap_candidates(n));
+    out
+}
+
 /// Reduced dgSPARSE grid for the CI benches: one blockSz, two workerDimR
 /// fractions, tileSz ∈ {groupSz, 8, 32}. Covers the paper's best-static
 /// shapes (`<4-8, 256, 8, 1/2-1>`) at ~6× less sweep cost; the full grid
@@ -202,6 +211,25 @@ mod tests {
         assert!(cands
             .iter()
             .any(|c| matches!(c, Algo::Sddmm(cfg) if cfg.g == 32 && cfg.r == 2)));
+    }
+
+    #[test]
+    fn band_grid_spans_all_four_families_and_stays_bandable() {
+        use crate::algos::catalog::BandAlgo;
+        for n in [1u32, 4, 32] {
+            let cands = band_candidates(n);
+            assert!(!cands.is_empty(), "no band candidates for N={n}");
+            for a in &cands {
+                assert!(
+                    BandAlgo::from_algo(*a).is_some(),
+                    "{} cannot serve a band",
+                    a.name()
+                );
+            }
+        }
+        let labels: std::collections::HashSet<&str> =
+            band_candidates(4).iter().map(|a| a.family_label()).collect();
+        assert_eq!(labels.len(), 4, "labels {labels:?}");
     }
 
     #[test]

@@ -13,9 +13,12 @@
 use sgap::algos::catalog::compiler_family_sweep;
 use sgap::algos::cpu_ref::{max_rel_err, spmm_serial};
 use sgap::algos::sddmm::sddmm_serial;
+use sgap::algos::{Algo, BandAlgo, CompositeConfig};
 use sgap::coordinator::{PlanCache, ShapeKey};
 use sgap::sim::{HwProfile, Machine};
-use sgap::sparse::{banded, erdos_renyi, power_law, Coo, Csr, MatrixStats, SplitMix64};
+use sgap::sparse::{
+    banded, choose_cuts, erdos_renyi, power_law, Coo, Csr, MatrixStats, SplitMix64, CUT_SENTINEL,
+};
 use sgap::tuner::{sddmm_candidates, Selector};
 
 const TOL: f32 = 5e-4;
@@ -109,6 +112,63 @@ fn plan_cache_path_equals_fresh_selection() {
     let s = cache.stats();
     assert_eq!(s.misses as usize, NS.len() * 5);
     assert_eq!(s.hits, s.misses);
+}
+
+/// Composite (per-band hybrid) plans across the generator families ×
+/// widths. Two properties:
+///
+/// * a mixed-plan composite (a different catalog kernel per band) matches
+///   the serial oracle within the usual tolerance, and
+/// * a composite whose bands all run the *row-serial* kernel is bitwise
+///   identical to that kernel on the unpartitioned matrix — banding is a
+///   pure re-association of independent rows, so with a fixed per-row
+///   reduction order the partition cannot change a single bit.
+///
+/// When the partitioner declines a low-skew family (one occupied degree
+/// bucket), the test still exercises the composite path with a fixed
+/// 2-band cut — `Algo::run` must be correct for *any* cuts, because a
+/// `ShapeKey` collision can hand a composite to a matrix it was not
+/// selected for.
+#[test]
+fn composite_plans_match_oracle_across_families_n() {
+    let machine = Machine::new(HwProfile::rtx3090());
+    for &n in &NS {
+        for (fam, a) in families(0xBA4D ^ n as u64) {
+            let stats = MatrixStats::of(&a);
+            let (bands, cuts) =
+                choose_cuts(&stats).unwrap_or((2, [2, CUT_SENTINEL]));
+            let b = b_for(&a, n, 43 + n as u64);
+            let want = spmm_serial(&a, &b, n);
+
+            let mixed = Algo::Composite(CompositeConfig {
+                bands: bands as u8,
+                cuts,
+                plans: [
+                    BandAlgo::TacoRowSerial { x: 1, c: 1 },
+                    BandAlgo::SgapRowGroup { g: 8, c: 1, r: 4 },
+                    BandAlgo::SgapNnzGroup { c: 1, r: 8 },
+                ],
+            });
+            let res = mixed.run(&machine, &a, &b, n as u32).unwrap_or_else(|e| {
+                panic!("{fam} n={n}: {} failed: {e}", mixed.name())
+            });
+            let err = max_rel_err(&res.run.c, &want);
+            assert!(err < TOL, "{fam} n={n}: {} err {err}", mixed.name());
+
+            let serial = BandAlgo::TacoRowSerial { x: 1, c: 1 };
+            let uniform = Algo::Composite(CompositeConfig {
+                bands: bands as u8,
+                cuts,
+                plans: [serial; 3],
+            });
+            let via_bands = uniform.run(&machine, &a, &b, n as u32).unwrap();
+            let single = serial.to_algo().run(&machine, &a, &b, n as u32).unwrap();
+            assert_eq!(
+                via_bands.run.c, single.run.c,
+                "{fam} n={n}: banding changed the row-serial result bitwise"
+            );
+        }
+    }
 }
 
 /// Dense factor pair for an SDDMM differential run.

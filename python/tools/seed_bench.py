@@ -351,6 +351,68 @@ def est_row_group(s, n, g, c, r):
     return rollup(warps * per_warp, warps * (a_sectors + b_sectors), max(critical, per_warp))
 
 
+def est_sddmm(s, j, g, r):
+    """model.rs est_sddmm: `{<1/g nnz>, r}` grouped dense-j dot per nnz."""
+    z = s.nnz
+    jf, gf = float(j), float(g)
+    npb = 256.0 / g  # SddmmConfig::npb, p = 256
+    blocks = max(math.ceil(z / npb), 1.0)
+    warps = blocks * (P / WARP)
+    iters = max(math.ceil(jf / gf), 1.0)
+    per_warp = (
+        6.0 * ALU
+        + 3.0 * LOAD
+        + iters * (2.0 * LOAD + 3.0 * ALU + BRANCH)
+        + ALU
+        + par_reduce(r)
+        + atomic_chain(max(gf / r, 1.0))
+    )
+    groups = WARP / gf
+    meta_sectors = 3.0 * max(groups / 8.0, 1.0)
+    x1_sectors = groups * max(jf / 8.0, 1.0)
+    x2_sectors = gather_sectors(groups * jf, jf, s.cols)
+    return rollup(warps * per_warp, warps * (meta_sectors + x1_sectors + x2_sectors), per_warp)
+
+
+def est_fused(s, j, n, c, r):
+    """model.rs est_fused: the one-kernel SDDMM→SpMM chain — the
+    nnz-group skeleton with the producer's dot hoisted per nnz and no
+    intermediate write/re-read."""
+    z, d = s.nnz, s.row_degree_mean
+    jf = float(j)
+    kch = max(n // c, 1)
+    nnzb = P / kch
+    blocks = max(math.ceil(z / nnzb), 1.0)
+    warps = blocks * (P / WARP)
+    pb = boundary_prob(d)
+    bs_cy, bs_sec = bsearch(nnzb / max(d, 1.0) + 2.0)
+    prologue = (
+        4.0 * ALU
+        + 2.0 * LOAD
+        + bs_cy
+        + (1.0 + pb) * (ALU + LOAD)
+        + jf * dot_iter()
+        + ALU
+    )
+    per_ki = (
+        8.0 * ALU
+        + 4.0 * LOAD
+        + 2.0 * BRANCH
+        + seg_scan(r)
+        + atomic_chain(min(max(d / r, 1.0), WARP / r))
+    )
+    per_warp = prologue + c * per_ki
+    a_sectors = 8.0 + bs_sec + 2.0
+    b_sectors = gather_sectors(WARP, s.cols, n)
+    x1_sectors = gather_sectors(WARP * max(jf / 8.0, 1.0), s.rows, jf)
+    x2_sectors = gather_sectors(WARP * jf, jf, s.cols)
+    return rollup(
+        warps * per_warp,
+        warps * (a_sectors + b_sectors + x1_sectors + x2_sectors),
+        per_warp,
+    )
+
+
 class DgConfig:
     """rust/src/compiler/schedule.rs DgConfig, the derived shapes only."""
 
@@ -507,6 +569,23 @@ def coo3_grid(width):
     for c in c_values(width):
         kch = width // c
         npb = 256 // kch
+        for r in (2, 4, 8, 16, 32):
+            if r <= min(npb, 32):
+                out.append((c, r))
+    return out
+
+
+def sddmm_grid(j):
+    """tuner::space::sddmm_candidates order: g outer, r inner, r <= g."""
+    return [(g, r) for g in (2, 4, 8, 16, 32) for r in (2, 4, 8, 16, 32) if r <= g]
+
+
+def fused_grid(j, n):
+    """tuner::space::fused_candidates order: c (from c_values) outer, r
+    inner, FusedConfig::validate's `r <= npb` rule."""
+    out = []
+    for c in c_values(n):
+        npb = 256 // max(n // c, 1)
         for r in (2, 4, 8, 16, 32):
             if r <= min(npb, 32):
                 out.append((c, r))
@@ -768,6 +847,53 @@ def main():
             "skew", name, family, n, hybrid, single, t_comp, t_single, 0, grid_len, bands,
         ))
     assert beat, "no skew row where the hybrid strictly beats the best single plan"
+
+    # the fused table (bench_util.rs run_spmm_bench): the one-kernel
+    # SDDMM→SpMM chain vs the best two-stage pipeline, analytic prices at
+    # J=32, N=4 — er_2048_d2e-3 is dataset::suite() seed 1005; the banded
+    # degrees are seed-free; er_128_d2e-1 is fused_suite()'s own spec
+    def cheapest(priced):
+        """bench_util.rs cheapest: strictly-less scan in grid order."""
+        best_t, best_name = priced[0]
+        for t, name in priced[1:]:
+            if t < best_t:
+                best_t, best_name = t, name
+        return best_t, best_name
+
+    j_fused = 32
+    fused = [
+        ("er_2048_d2e-3", "erdos_renyi",
+         MatrixStats(2048, 2048, erdos_renyi_degrees(2048, 2048, 8388, 1005))),
+        ("band_2048_w9", "banded", MatrixStats(2048, 2048, banded_degrees(2048, 9))),
+        ("er_128_d2e-1", "erdos_renyi",
+         MatrixStats(128, 128, erdos_renyi_degrees(128, 128, 3276, 77))),
+    ]
+    fgrid = fused_grid(j_fused, n)
+    headline = False
+    for name, family, s in fused:
+        t_fused, fused_name = cheapest([
+            (est_fused(s, j_fused, n, c, r), f"fused{{<1 nnz,{c} col>,{r}}}")
+            for (c, r) in fgrid
+        ])
+        t_sddmm, sddmm_name = cheapest([
+            (est_sddmm(s, j_fused, g, r), f"sddmm{{<1/{g} nnz>,{r}}}")
+            for (g, r) in sddmm_grid(j_fused)
+        ])
+        t_spmm, spmm_name = cheapest([
+            (price_family(k, g, c, r, s, n), algo)
+            for (k, g, c, r, algo) in band_grid(n)
+        ])
+        t_two = t_sddmm + t_spmm
+        assert t_fused <= t_two, (
+            f"{name}: fused kernel priced above the two-stage pipeline it replaces "
+            f"({t_fused:.3e} > {t_two:.3e})"
+        )
+        headline = headline or t_two / t_fused >= 1.5
+        spmm_rows.append(row(
+            "fused", name, family, n, fused_name, f"{sddmm_name} + {spmm_name}",
+            t_fused, t_two, 0, len(fgrid), 1,
+        ))
+    assert headline, "no fused row at >= 1.5x over the two-stage pipeline"
 
     emit(
         os.path.join(root, "BENCH_spmm.json"), "spmm",

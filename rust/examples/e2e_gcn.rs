@@ -8,20 +8,26 @@
 //! runs here.
 //!
 //! Reports: numeric check vs the rust oracle, per-inference latency and
-//! throughput through the coordinator, and the simulator's kernel-time
-//! estimate for the selected SpMM algorithm on the paper's three GPUs.
+//! throughput through the coordinator, a graph-attention stage served as
+//! **one fused SDDMM→SpMM submit** (with the fused-vs-two-stage simulated
+//! kernel time), and the simulator's kernel-time estimate for the
+//! selected SpMM algorithm on the paper's three GPUs.
 //!
 //! Run: `make artifacts && cargo run --release --example e2e_gcn`
 
 use std::time::Instant;
 
+use anyhow::Context;
+
 use sgap::algos::catalog::Algo;
 use sgap::algos::cpu_ref::{max_rel_err, spmm_serial};
-use sgap::coordinator::{Coordinator, CoordinatorConfig, Request};
+use sgap::algos::fused::fused_serial;
+use sgap::algos::sddmm::sddmm_serial;
+use sgap::coordinator::{Coordinator, CoordinatorConfig, Request, Session};
 use sgap::runtime::Runtime;
 use sgap::sim::{HwProfile, Machine};
-use sgap::sparse::{erdos_renyi, gen, MatrixStats, SplitMix64};
-use sgap::tuner::Selector;
+use sgap::sparse::{erdos_renyi, gen, Csr, MatrixStats, SplitMix64};
+use sgap::tuner::{CostModel, Selector};
 
 fn main() -> anyhow::Result<()> {
     let dir = Runtime::default_dir();
@@ -131,6 +137,60 @@ fn main() -> anyhow::Result<()> {
         snap.p99_us
     );
     coord.shutdown();
+
+    // ---- graph attention: one fused SDDMM→SpMM submit -------------------
+    // Attention scores live only on the graph's sparsity — the classic
+    // SDDMM→SpMM chain. Served as ONE submit: the fused kernel computes
+    // each score in-register and consumes it immediately, so no nnz-sized
+    // intermediate is ever materialized.
+    let (j_att, n_att) = (32usize, 16usize);
+    let q: Vec<f32> = (0..nodes * j_att).map(|_| rng.value() * 0.1).collect();
+    let kt: Vec<f32> = (0..j_att * nodes).map(|_| rng.value() * 0.1).collect();
+    let v: Vec<f32> = (0..nodes * n_att).map(|_| rng.value() * 0.1).collect();
+    let session = Session::start(CoordinatorConfig::default())?;
+    let ah = session.register_matrix(a.clone());
+    let (qh, kh, vh) = (
+        session.register_dense(q.clone()),
+        session.register_dense(kt.clone()),
+        session.register_dense(v.clone()),
+    );
+    let att = session.fused_sddmm_spmm(&ah, &qh, &kh, &vh, j_att, n_att).wait()?;
+    let att_err = max_rel_err(&att.c, &fused_serial(&a, &q, &kt, &v, j_att, n_att));
+    println!(
+        "\nattention (one fused submit): backend {}, plan {}, max rel err {att_err:.2e}",
+        att.backend,
+        att.plan_label().unwrap_or_else(|| "-".into()),
+    );
+    anyhow::ensure!(att_err < 5e-4, "fused attention numerics diverged");
+    session.shutdown();
+
+    // Fused vs two-stage simulated kernel time on the same operands: the
+    // two-stage pipeline materializes the nnz-sized score matrix and pays
+    // a second launch + a second pos/crd traversal.
+    let machine = Machine::new(HwProfile::rtx3090());
+    let model = CostModel::new(&machine);
+    let selector = Selector::default();
+    let fused_plan = selector
+        .select_fused_model(&model, &stats, j_att as u32, n_att as u32)
+        .context("no legal fused launch shape for the attention widths")?;
+    let t_fused = fused_plan.run_fused(&machine, &a, &q, &kt, &v)?.time_s;
+    let sddmm_plan = selector.select_sddmm_model(&model, &stats, j_att as u32);
+    let t_sddmm = sddmm_plan.run_sddmm(&machine, &a, &q, &kt)?.time_s;
+    let scored = Csr { data: sddmm_serial(&a, &q, &kt, j_att), ..a.clone() };
+    let spmm_plan = selector.select_model(&model, &stats, n_att as u32);
+    let t_spmm = spmm_plan.run(&machine, &scored, &v, n_att as u32)?.time_s;
+    println!(
+        "attention kernel time (rtx3090 sim): fused {} {:.2} us vs two-stage {:.2} us \
+         ({} {:.2} + {} {:.2}) — {:.2}x",
+        fused_plan.name(),
+        t_fused * 1e6,
+        (t_sddmm + t_spmm) * 1e6,
+        sddmm_plan.name(),
+        t_sddmm * 1e6,
+        spmm_plan.name(),
+        t_spmm * 1e6,
+        (t_sddmm + t_spmm) / t_fused
+    );
 
     // ---- simulator estimate for the selected kernel ---------------------
     let sel = Selector::default();

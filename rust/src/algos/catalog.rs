@@ -19,6 +19,7 @@ use crate::sparse::Csr;
 
 use super::cpu_ref::spmm_flops;
 use super::dgsparse::{self, DgConfig};
+use super::fused::{self, fused_flops, FusedConfig};
 use super::mttkrp::{self, mttkrp_flops, ttm_flops, MttkrpConfig, TtmConfig};
 use super::runner::{run_schedule, SpmmRun};
 use super::sddmm::{self, sddmm_flops, SddmmConfig};
@@ -45,6 +46,10 @@ pub enum Algo {
     /// Grouped TTM `{<1 nnz, c col>, r}` (Eq. 2b) — COO-3 segment
     /// reduction keyed by the leading fiber; runs via [`Algo::run_ttm`].
     Ttm(TtmConfig),
+    /// Fused SDDMM→SpMM `{<1 nnz, c col>, r}` — the attention chain as
+    /// one kernel: producer dot in-register, consumer segment reduction,
+    /// one pass over `pos/crd`; runs via [`Algo::run_fused`].
+    FusedSddmmSpmm(FusedConfig),
     /// Per-band hybrid SpMM: rows split into nnz-balanced degree bands
     /// (`sparse::partition`), each band served by its own compiler-family
     /// point — the non-uniform group-size application §3 implies but a
@@ -129,6 +134,7 @@ impl Algo {
             Algo::Sddmm(s) => format!("sddmm{{<1/{} nnz>,{}}}", s.g, s.r),
             Algo::Mttkrp(m) => format!("mttkrp{{<1 nnz,{} col>,{}}}", m.c, m.r),
             Algo::Ttm(t) => format!("ttm{{<1 nnz,{} col>,{}}}", t.c, t.r),
+            Algo::FusedSddmmSpmm(f) => format!("fused{{<1 nnz,{} col>,{}}}", f.c, f.r),
             Algo::Composite(cc) => {
                 let names: Vec<String> =
                     (0..cc.bands as usize).map(|b| cc.plan(b).name()).collect();
@@ -150,6 +156,7 @@ impl Algo {
             Algo::Sddmm(_) => "sddmm-group",
             Algo::Mttkrp(_) => "mttkrp-group",
             Algo::Ttm(_) => "ttm-group",
+            Algo::FusedSddmmSpmm(_) => "fused-sddmm-spmm",
             Algo::Composite(_) => "hybrid",
         }
     }
@@ -172,6 +179,11 @@ impl Algo {
     /// Whether this plan serves TTM traffic.
     pub fn is_ttm(&self) -> bool {
         matches!(self, Algo::Ttm(_))
+    }
+
+    /// Whether this plan serves the fused SDDMM→SpMM chain.
+    pub fn is_fused(&self) -> bool {
+        matches!(self, Algo::FusedSddmmSpmm(_))
     }
 
     /// The atomic-parallelism point this algorithm occupies. The dgSPARSE
@@ -206,6 +218,10 @@ impl Algo {
             // literal
             Algo::Mttkrp(m) => Some(AtomicPoint::sgap_nnz(m.c, m.r)),
             Algo::Ttm(t) => Some(AtomicPoint::sgap_nnz(t.c, t.r)),
+            // the fused chain's sparse-axis decomposition is the consumer's
+            // — the same nnz-split segment point; the in-register dot adds
+            // work per lane but no new decomposition axis
+            Algo::FusedSddmmSpmm(f) => Some(AtomicPoint::sgap_nnz(f.c, f.r)),
             // a composite occupies one point *per band*; there is no
             // single point to report
             Algo::Composite(_) => None,
@@ -234,6 +250,7 @@ impl Algo {
             Algo::Sddmm(cfg) => Schedule::sddmm_group(cfg),
             Algo::Mttkrp(cfg) => Schedule::mttkrp_group(cfg),
             Algo::Ttm(cfg) => Schedule::ttm_group(cfg),
+            Algo::FusedSddmmSpmm(cfg) => Schedule::fused_sddmm_spmm(cfg),
             Algo::Composite(_) => {
                 panic!("composite plans lower one schedule per band; use run()")
             }
@@ -261,6 +278,9 @@ impl Algo {
             }
             Algo::Ttm(_) => {
                 anyhow::bail!("{} is a TTM plan; use run_ttm", self.name())
+            }
+            Algo::FusedSddmmSpmm(_) => {
+                anyhow::bail!("{} is a fused SDDMM\u{2192}SpMM plan; use run_fused", self.name())
             }
             _ => {
                 let sched = self.schedule(n, 256);
@@ -300,6 +320,26 @@ impl Algo {
         let run = mttkrp::run_ttm(machine, a, x1, cfg)?;
         let time_s = run.report.time_s;
         let gflops = run.report.gflops(ttm_flops(a, cfg.l_dim as usize));
+        Ok(AlgoResult { run, time_s, gflops })
+    }
+
+    /// Execute a fused SDDMM→SpMM plan on the simulator. `x1` is
+    /// row-major `[a.rows × j]`, `x2` row-major `[j × a.cols]`, `b`
+    /// row-major `[a.cols × n]`. Errors for every other plan kind.
+    pub fn run_fused(
+        &self,
+        machine: &Machine,
+        a: &Csr,
+        x1: &[f32],
+        x2: &[f32],
+        b: &[f32],
+    ) -> Result<AlgoResult> {
+        let Algo::FusedSddmmSpmm(cfg) = self else {
+            anyhow::bail!("{} is not a fused SDDMM\u{2192}SpMM plan", self.name())
+        };
+        let run = fused::run(machine, cfg, a, x1, x2, b)?;
+        let time_s = run.report.time_s;
+        let gflops = run.report.gflops(fused_flops(a, cfg.j_dim as usize, cfg.n as usize));
         Ok(AlgoResult { run, time_s, gflops })
     }
 
@@ -445,6 +485,7 @@ mod tests {
             (Algo::Sddmm(SddmmConfig::new(16, 8, 8)), Family::SddmmGroup),
             (Algo::Mttkrp(MttkrpConfig::new(8, 4, 16)), Family::MttkrpGroup),
             (Algo::Ttm(TtmConfig::new(4, 4, 8)), Family::TtmGroup),
+            (Algo::FusedSddmmSpmm(FusedConfig::new(16, 4, 4, 8)), Family::FusedSddmmSpmm),
         ];
         for (alg, family) in cases {
             let sched = alg.schedule(4, 256);
@@ -531,6 +572,30 @@ mod tests {
         // kind mismatches error instead of guessing a kernel
         assert!(plan.run(&m, &a, &x1, 4).is_err());
         assert!(Algo::TacoRowSerial { x: 1, c: 4 }.run_sddmm(&m, &a, &x1, &x2).is_err());
+    }
+
+    #[test]
+    fn fused_plans_run_through_run_fused_only() {
+        let a = erdos_renyi(48, 40, 300, 9).to_csr();
+        let m = Machine::new(HwProfile::rtx3090());
+        let j = 16usize;
+        let n = 4usize;
+        let mut rng = SplitMix64::new(2);
+        let x1: Vec<f32> = (0..a.rows * j).map(|_| rng.value()).collect();
+        let x2: Vec<f32> = (0..j * a.cols).map(|_| rng.value()).collect();
+        let b: Vec<f32> = (0..a.cols * n).map(|_| rng.value()).collect();
+        let plan = Algo::FusedSddmmSpmm(FusedConfig::new(j as u32, n as u32, 4, 8));
+        assert_eq!(plan.name(), "fused{<1 nnz,4 col>,8}");
+        assert_eq!(plan.family_label(), "fused-sddmm-spmm");
+        assert!(plan.is_fused() && !plan.is_sddmm());
+        assert!(plan.to_point().unwrap().is_legal());
+        let res = plan.run_fused(&m, &a, &x1, &x2, &b).unwrap();
+        let want = fused::fused_serial(&a, &x1, &x2, &b, j, n);
+        assert!(crate::algos::cpu_ref::max_rel_err(&res.run.c, &want) < 5e-4);
+        assert!(res.gflops > 0.0);
+        // kind mismatches error instead of guessing a kernel
+        assert!(plan.run(&m, &a, &b, n as u32).is_err());
+        assert!(Algo::TacoRowSerial { x: 1, c: 4 }.run_fused(&m, &a, &x1, &x2, &b).is_err());
     }
 
     #[test]

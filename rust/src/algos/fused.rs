@@ -1,0 +1,160 @@
+//! Fused SDDMM→SpMM — the graph-attention chain as one kernel.
+//!
+//! Graph attention computes `Y = A ⊙ (X1 · X2ᵀ)` (SDDMM, the attention
+//! scores on `A`'s sparsity) and immediately `C = Y · B` (SpMM, the
+//! aggregation). Run as two kernels, that costs a full materialization of
+//! the nnz-sized `Y` plus a *second* traversal of `pos/crd`. The fused
+//! schedule ([`Schedule::fused_sddmm_spmm`]) lowers the pair to **one**
+//! nnz-split kernel: each nnz-owning lane computes its attention score
+//! in-register and feeds it straight into the SpMM segment-group
+//! reduction — one pass over the sparse structure, zero intermediate
+//! traffic.
+//!
+//! This module is launch glue only (the kernel is schedule-generated
+//! through `compiler::compile`, like every family): a two-stage serial
+//! oracle, a FLOP count, and the simulator run path.
+
+use anyhow::Result;
+
+use crate::compiler::schedule::Schedule;
+use crate::sim::{DeviceMemory, Machine};
+use crate::sparse::Csr;
+
+use super::cpu_ref::spmm_serial;
+use super::runner::SpmmRun;
+use super::sddmm::sddmm_serial;
+
+pub use crate::compiler::schedule::FusedConfig;
+
+/// Two-stage serial oracle: materialize the SDDMM output
+/// `y[pos] = a.data[pos] · dot(X1[i,:], X2[:,f])`, then SpMM the rescaled
+/// matrix against `B`. This is exactly the computation the fused kernel
+/// must reproduce without ever materializing `y`.
+///
+/// `x1` is row-major `[a.rows × j_dim]`, `x2` row-major `[j_dim × a.cols]`,
+/// `b` row-major `[a.cols × n]`; the result is row-major `[a.rows × n]`.
+pub fn fused_serial(a: &Csr, x1: &[f32], x2: &[f32], b: &[f32], j_dim: usize, n: usize) -> Vec<f32> {
+    let y = sddmm_serial(a, x1, x2, j_dim);
+    let scaled = Csr { data: y, ..a.clone() };
+    spmm_serial(&scaled, b, n)
+}
+
+/// FLOPs of the fused chain: the SDDMM dots + scaling `(2J+1)·nnz` plus
+/// the SpMM multiply-adds `2·nnz·n`.
+pub fn fused_flops(a: &Csr, j_dim: usize, n: usize) -> u64 {
+    (2 * j_dim as u64 + 1) * a.nnz() as u64 + 2 * a.nnz() as u64 * n as u64
+}
+
+/// Run the fused kernel on the simulator; returns row-major `[rows × n]`
+/// output plus the report.
+///
+/// Binds the union of the two stages' buffers minus the intermediate:
+/// `i_blockStarts/A2_pos/A2_crd/A_vals` (CSR + search windows),
+/// `X1_vals/X2_vals` (the producer's dense factors), `B_vals/C_vals` (the
+/// consumer's dense operand and padded output); scalars `A1_dimension`,
+/// `A2_dimension`, `B2_dimension`, `J_dimension`. No `Y_vals` exists to
+/// bind — the intermediate never touches memory.
+pub fn run(
+    machine: &Machine,
+    cfg: &FusedConfig,
+    a: &Csr,
+    x1: &[f32],
+    x2: &[f32],
+    b: &[f32],
+) -> Result<SpmmRun> {
+    let j = cfg.j_dim as usize;
+    let n = cfg.n as usize;
+    assert_eq!(x1.len(), a.rows * j, "X1 must be rows x j_dim");
+    assert_eq!(x2.len(), j * a.cols, "X2 must be j_dim x cols");
+    assert_eq!(b.len(), a.cols * n, "B must be cols x n");
+    let sched = Schedule::fused_sddmm_spmm(*cfg);
+    let kernel = crate::compiler::compile(&sched.algebra(), &sched)?;
+    let nnzb = cfg.npb() as usize;
+    let grid = a.nnz().div_ceil(nnzb).max(1) as u32;
+    let starts: Vec<i32> = a.block_starts(nnzb).iter().map(|&x| x as i32).collect();
+    let mut mem = DeviceMemory::new();
+    mem.bind_i32("i_blockStarts", starts);
+    mem.bind_i32("A2_pos", a.indptr.iter().map(|&x| x as i32).collect());
+    mem.bind_i32("A2_crd", a.indices.iter().map(|&x| x as i32).collect());
+    mem.bind_f32("A_vals", a.data.clone());
+    mem.bind_f32("X1_vals", x1.to_vec());
+    mem.bind_f32("X2_vals", x2.to_vec());
+    mem.bind_f32("B_vals", b.to_vec());
+    // one pad row: zero extension can write to row index `rows`
+    mem.bind_f32("C_vals", vec![0.0; (a.rows + 1) * n]);
+    mem.bind_scalar("A1_dimension", a.rows as i64);
+    mem.bind_scalar("A2_dimension", a.cols as i64);
+    mem.bind_scalar("B2_dimension", n as i64);
+    mem.bind_scalar("J_dimension", cfg.j_dim as i64);
+    let report = machine.launch(&kernel, grid, &mut mem)?;
+    let mut c = mem.take_f32("C_vals").expect("C_vals");
+    c.truncate(a.rows * n); // drop the zero-extension pad row
+    Ok(SpmmRun { c, report, kernel_name: kernel.name })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::cpu_ref::max_rel_err;
+    use crate::sim::HwProfile;
+    use crate::sparse::{erdos_renyi, power_law, SplitMix64};
+
+    fn dense(len: usize, seed: u64) -> Vec<f32> {
+        let mut rng = SplitMix64::new(seed);
+        (0..len).map(|_| rng.value()).collect()
+    }
+
+    fn check(cfg: FusedConfig, a: &Csr) -> SpmmRun {
+        let j = cfg.j_dim as usize;
+        let n = cfg.n as usize;
+        let x1 = dense(a.rows * j, 1);
+        let x2 = dense(j * a.cols, 2);
+        let b = dense(a.cols * n, 3);
+        let want = fused_serial(a, &x1, &x2, &b, j, n);
+        let m = Machine::new(HwProfile::rtx3090());
+        let run = run(&m, &cfg, a, &x1, &x2, &b).unwrap();
+        let err = max_rel_err(&run.c, &want);
+        assert!(err < 5e-4, "{}: err {err}", run.kernel_name);
+        run
+    }
+
+    #[test]
+    fn matches_two_stage_oracle_group_sweep() {
+        let a = erdos_renyi(100, 80, 900, 11).to_csr();
+        for r in [2u32, 4, 8, 16, 32] {
+            check(FusedConfig::new(32, 4, 4, r), &a);
+        }
+    }
+
+    #[test]
+    fn matches_oracle_on_skewed_pattern() {
+        let a = power_law(128, 128, 1800, 1.9, 13).to_csr();
+        check(FusedConfig::new(16, 8, 4, 8), &a);
+    }
+
+    #[test]
+    fn empty_rows_and_hubs_handled() {
+        // hub matrix: row 0 has many nnz, most rows empty
+        let mut triplets: Vec<(u32, u32, f32)> = (0..64u32).map(|c| (0u32, c, 1.0f32)).collect();
+        triplets.push((63, 0, 2.0));
+        let a = crate::sparse::Coo::new(64, 64, triplets).to_csr();
+        check(FusedConfig::new(8, 4, 4, 32), &a);
+    }
+
+    #[test]
+    fn empty_matrix_ok() {
+        let a = crate::sparse::Coo::new(8, 8, vec![]).to_csr();
+        let m = Machine::new(HwProfile::v100());
+        let cfg = FusedConfig::new(16, 4, 4, 8);
+        let run =
+            run(&m, &cfg, &a, &dense(8 * 16, 3), &dense(16 * 8, 4), &dense(8 * 4, 5)).unwrap();
+        assert!(run.c.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn flops_count_both_stages() {
+        let a = erdos_renyi(32, 32, 100, 9).to_csr();
+        let z = a.nnz() as u64;
+        assert_eq!(fused_flops(&a, 16, 4), (2 * 16 + 1) * z + 2 * z * 4);
+    }
+}

@@ -9,12 +9,15 @@
 //! * [`sddmm`] — the §4.3 grouped SDDMM, schedule-generated likewise.
 //! * [`mttkrp`] — the COO-3 MTTKRP/TTM segment kernels (Eq. 2a/2b), also
 //!   schedule-generated: the §2.1 quartet is complete.
+//! * [`fused`] — the fused SDDMM→SpMM attention chain: producer dot
+//!   in-register, consumer segment reduction, one pass over `pos/crd`.
 //! * [`catalog`] — the unified plan vocabulary ([`Algo`]) used by the
 //!   tuner, the benches, the CLI, and the coordinator's plan cache.
 
 pub mod catalog;
 pub mod cpu_ref;
 pub mod dgsparse;
+pub mod fused;
 pub mod runner;
 pub mod mttkrp;
 pub mod sddmm;
@@ -22,6 +25,7 @@ pub mod sddmm;
 pub use catalog::{Algo, AlgoResult, BandAlgo, CompositeConfig};
 pub use cpu_ref::{spmm_flops, spmm_serial};
 pub use dgsparse::DgConfig;
+pub use fused::FusedConfig;
 pub use mttkrp::{MttkrpConfig, TtmConfig};
 pub use runner::{run_schedule, SpmmRun};
 pub use sddmm::SddmmConfig;

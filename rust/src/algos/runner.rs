@@ -58,7 +58,11 @@ pub fn launch_shape(schedule: &Schedule, a: &Csr) -> (u32, Option<Vec<i32>>) {
             let rpb = (cfg.p / (cfg.g * kchunks)) as usize;
             (a.rows.div_ceil(rpb.max(1)).max(1) as u32, None)
         }
-        Family::SddmmGroup | Family::DgRowBalanced | Family::MttkrpGroup | Family::TtmGroup => {
+        Family::SddmmGroup
+        | Family::DgRowBalanced
+        | Family::MttkrpGroup
+        | Family::TtmGroup
+        | Family::FusedSddmmSpmm => {
             unreachable!("spmm_config() above rejects non-SpMM schedules")
         }
     }

@@ -16,7 +16,7 @@
 
 use thiserror::Error;
 
-use super::expr::{IndexVar, TensorAlgebra};
+use super::expr::{FusedAlgebra, IndexVar, TensorAlgebra};
 use super::llir::Kernel;
 use super::lower::{lower, LowerError};
 use super::schedule::{Family, KernelConfig, Schedule};
@@ -48,6 +48,13 @@ pub enum CompileError {
     /// an SDDMM config).
     #[error("family `{family}` cannot be built from a {config} config")]
     ConfigMismatch { family: Family, config: &'static str },
+    /// The producer→consumer pair violates the fusion legality rule: the
+    /// consumer must read the producer's output only at the nnz
+    /// coordinates the producer wrote (same index order, same level
+    /// formats), or the fused single-pass traversal would read values the
+    /// producer never stored.
+    #[error("illegal fusion of `{pair}`: {reason}")]
+    IllegalFusion { pair: String, reason: String },
     /// The schedule agreed with its algebra but failed to lower
     /// (unsupported shape or invalid tuning config).
     #[error(transparent)]
@@ -96,6 +103,16 @@ fn join(vars: &[IndexVar]) -> String {
     vars.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(",")
 }
 
+/// Verify a producer→consumer pair's fusion legality and flatten it into
+/// the single statement the fused families lower. This is the typed front
+/// door for fusion: an illegal pair (consumer reading coordinates the
+/// producer never wrote, mismatched level formats, a missing or
+/// double-read intermediate) is a [`CompileError::IllegalFusion`] naming
+/// the broken rule — never a panic, never a silent miscompile.
+pub fn flatten_fused(pair: &FusedAlgebra) -> Result<TensorAlgebra, CompileError> {
+    pair.flatten().map_err(|reason| CompileError::IllegalFusion { pair: pair.to_string(), reason })
+}
+
 /// Expression-first schedule construction: derives the legal schedule
 /// families of a tensor algebra and builds validated [`Schedule`]s from a
 /// [`KernelConfig`], so group sizes are always checked against the
@@ -138,6 +155,8 @@ impl ScheduleBuilder {
             vec![Family::MttkrpGroup]
         } else if self.algebra == TensorAlgebra::ttm() {
             vec![Family::TtmGroup]
+        } else if self.algebra == TensorAlgebra::fused_sddmm_spmm() {
+            vec![Family::FusedSddmmSpmm]
         } else {
             vec![]
         }
@@ -159,6 +178,7 @@ impl ScheduleBuilder {
             (Family::DgRowBalanced, KernelConfig::Dg(c)) => Schedule::dgsparse_rb_pr(c),
             (Family::MttkrpGroup, KernelConfig::Mttkrp(c)) => Schedule::mttkrp_group(c),
             (Family::TtmGroup, KernelConfig::Ttm(c)) => Schedule::ttm_group(c),
+            (Family::FusedSddmmSpmm, KernelConfig::Fused(c)) => Schedule::fused_sddmm_spmm(c),
             (family, config) => {
                 return Err(CompileError::ConfigMismatch { family, config: config.kind() })
             }
@@ -179,7 +199,7 @@ mod tests {
     use super::*;
     use crate::compiler::expr::{Access, Expr, TensorVar};
     use crate::compiler::schedule::{
-        DgConfig, MttkrpConfig, ScheduleCmd, SddmmConfig, SpmmConfig, TtmConfig,
+        DgConfig, FusedConfig, MttkrpConfig, ScheduleCmd, SddmmConfig, SpmmConfig, TtmConfig,
     };
 
     #[test]
@@ -259,13 +279,14 @@ mod tests {
 
     #[test]
     fn builder_compiles_every_family_it_names() {
-        let quartet = [
+        let statements = [
             TensorAlgebra::spmm(),
             TensorAlgebra::sddmm(),
             TensorAlgebra::mttkrp(),
             TensorAlgebra::ttm(),
+            TensorAlgebra::fused_sddmm_spmm(),
         ];
-        for algebra in quartet {
+        for algebra in statements {
             let b = ScheduleBuilder::new(&algebra).unwrap();
             for family in b.legal_families() {
                 let config = match family {
@@ -276,6 +297,7 @@ mod tests {
                     Family::SddmmGroup => KernelConfig::Sddmm(SddmmConfig::new(32, 16, 8)),
                     Family::MttkrpGroup => KernelConfig::Mttkrp(MttkrpConfig::new(8, 4, 16)),
                     Family::TtmGroup => KernelConfig::Ttm(TtmConfig::new(4, 4, 8)),
+                    Family::FusedSddmmSpmm => KernelConfig::Fused(FusedConfig::new(32, 4, 4, 8)),
                 };
                 b.compile(family, config)
                     .unwrap_or_else(|e| panic!("`{algebra}` family {family}: {e}"));
@@ -295,6 +317,33 @@ mod tests {
             .schedule(Family::NnzGroup, KernelConfig::Sddmm(SddmmConfig::new(16, 8, 4)))
             .unwrap_err();
         assert!(matches!(err, CompileError::ConfigMismatch { .. }), "{err}");
+    }
+
+    #[test]
+    fn fused_pair_compiles_through_the_front_door() {
+        let pair = FusedAlgebra::sddmm_spmm();
+        let algebra = flatten_fused(&pair).unwrap();
+        let b = ScheduleBuilder::new(&algebra).unwrap();
+        assert_eq!(b.legal_families(), vec![Family::FusedSddmmSpmm]);
+        let kernel = b
+            .compile(Family::FusedSddmmSpmm, KernelConfig::Fused(FusedConfig::new(32, 4, 4, 16)))
+            .unwrap();
+        assert!(kernel.name.starts_with("fused_sddmm_spmm"), "{}", kernel.name);
+    }
+
+    #[test]
+    fn illegal_fusion_is_a_typed_error() {
+        // sabotage the consumer: read the intermediate transposed, i.e. at
+        // coordinates the producer never wrote
+        let mut pair = FusedAlgebra::sddmm_spmm();
+        pair.consumer.rhs = Expr::Mul(
+            Box::new(Expr::Access(Access::new("Y", &["j", "i"]))),
+            Box::new(Expr::Access(Access::new("B", &["j", "k"]))),
+        );
+        let err = flatten_fused(&pair).unwrap_err();
+        assert!(matches!(err, CompileError::IllegalFusion { .. }), "{err}");
+        let msg = err.to_string();
+        assert!(msg.contains("illegal fusion") && msg.contains("Y(j,i)"), "{msg}");
     }
 
     #[test]

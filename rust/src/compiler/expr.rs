@@ -244,11 +244,213 @@ impl TensorAlgebra {
             tensors: vec![TensorVar::coo("A", 3), TensorVar::dense("X1", 2), TensorVar::dense("Y", 3)],
         }
     }
+
+    /// The flattened fused attention algebra (SDDMM→SpMM, one statement):
+    /// `C(i,k) = A(i,j) * X1(i,l) * X2(l,j) * B(j,k)` — the result of
+    /// [`FusedAlgebra::sddmm_spmm`]'s producer substituted into its
+    /// consumer. One sparse operand (`A`, CSR), reduction dims `[j, l]`.
+    pub fn fused_sddmm_spmm() -> Self {
+        FusedAlgebra::sddmm_spmm()
+            .flatten()
+            .expect("the canonical attention pair is fusion-legal by construction")
+    }
 }
 
 impl fmt::Display for TensorAlgebra {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(f, "{} = {}", self.lhs, self.rhs)
+    }
+}
+
+/// A producer→consumer pair of tensor algebras sharing index variables —
+/// the fusion candidate of SparseLNR-style loop-nest restructuring. The
+/// producer writes an intermediate tensor (e.g. SDDMM's `Y`); the consumer
+/// reads it as its sparse operand (e.g. SpMM over `Y`). When the pair is
+/// [legal](FusedAlgebra::check_legal), [`FusedAlgebra::flatten`]
+/// substitutes the producer's expression into the consumer, yielding one
+/// statement the scheduler can lower as a *single* kernel: the producer's
+/// reduction computed in-register per nonzero and consumed immediately,
+/// with no materialized intermediate.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FusedAlgebra {
+    pub producer: TensorAlgebra,
+    pub consumer: TensorAlgebra,
+}
+
+impl FusedAlgebra {
+    pub fn new(producer: TensorAlgebra, consumer: TensorAlgebra) -> Self {
+        FusedAlgebra { producer, consumer }
+    }
+
+    /// The canonical graph-attention pair: SDDMM producer
+    /// `Y(i,j) = A(i,j) * X1(i,l) * X2(l,j)` feeding SpMM consumer
+    /// `C(i,k) = Y(i,j) * B(j,k)`, with `Y` inheriting `A`'s CSR
+    /// structure (the SDDMM output is written only at `A`'s nonzeros).
+    pub fn sddmm_spmm() -> Self {
+        let producer = TensorAlgebra {
+            lhs: Access::new("Y", &["i", "j"]),
+            rhs: Expr::Mul(
+                Box::new(Expr::Mul(
+                    Box::new(Expr::Access(Access::new("A", &["i", "j"]))),
+                    Box::new(Expr::Access(Access::new("X1", &["i", "l"]))),
+                )),
+                Box::new(Expr::Access(Access::new("X2", &["l", "j"]))),
+            ),
+            tensors: vec![
+                TensorVar::csr("A", 2),
+                TensorVar::dense("X1", 2),
+                TensorVar::dense("X2", 2),
+                TensorVar::csr("Y", 2),
+            ],
+        };
+        let consumer = TensorAlgebra {
+            lhs: Access::new("C", &["i", "k"]),
+            rhs: Expr::Mul(
+                Box::new(Expr::Access(Access::new("Y", &["i", "j"]))),
+                Box::new(Expr::Access(Access::new("B", &["j", "k"]))),
+            ),
+            tensors: vec![
+                TensorVar::csr("Y", 2),
+                TensorVar::dense("B", 2),
+                TensorVar::dense("C", 2),
+            ],
+        };
+        FusedAlgebra { producer, consumer }
+    }
+
+    /// The dependence check fusion legality rests on (WingSpan's
+    /// question): the consumer may read the producer's output **only at
+    /// the nonzero coordinates the producer wrote**. Concretely:
+    ///
+    /// 1. the producer is a sparse-dense hybrid whose output access uses
+    ///    exactly its sparse operand's index variables (so it writes one
+    ///    value per stored nonzero, nothing else),
+    /// 2. the producer's output is declared with its sparse operand's
+    ///    level formats (same stored coordinate set),
+    /// 3. the consumer reads the output tensor exactly once, at exactly
+    ///    the producer's written indices (no transpose, no re-indexing),
+    ///    and declares it with the same formats.
+    ///
+    /// Violations return a description of the broken rule; `compile`
+    /// wraps them as `CompileError::IllegalFusion`.
+    pub fn check_legal(&self) -> Result<(), String> {
+        let out = &self.producer.lhs;
+        if !self.producer.is_sparse_dense_hybrid() {
+            return Err(format!(
+                "producer `{}` is not a sparse-dense hybrid; its output has no \
+                 single nnz coordinate set to fuse over",
+                self.producer
+            ));
+        }
+        let sparse_access = self
+            .producer
+            .rhs
+            .accesses()
+            .into_iter()
+            .find(|a| self.producer.tensor(&a.tensor).map(|t| t.is_sparse()).unwrap_or(false))
+            .expect("hybrid algebras have a sparse operand");
+        if out.indices != sparse_access.indices {
+            return Err(format!(
+                "producer writes `{out}` but its sparse operand is `{sparse_access}`: \
+                 the output is not confined to the operand's nnz coordinates"
+            ));
+        }
+        let sparse_formats =
+            &self.producer.tensor(&sparse_access.tensor).expect("declared operand").formats;
+        match self.producer.tensor(&out.tensor) {
+            Some(t) if &t.formats == sparse_formats => {}
+            Some(_) => {
+                return Err(format!(
+                    "producer output `{}` is not stored with its sparse operand \
+                     `{}`'s level formats — the written coordinate sets differ",
+                    out.tensor, sparse_access.tensor
+                ))
+            }
+            None => return Err(format!("producer never declares its output `{}`", out.tensor)),
+        }
+        let reads: Vec<&Access> = self
+            .consumer
+            .rhs
+            .accesses()
+            .into_iter()
+            .filter(|a| a.tensor == out.tensor)
+            .collect();
+        let read = match reads.as_slice() {
+            [one] => *one,
+            [] => {
+                return Err(format!(
+                    "consumer `{}` never reads the producer's output `{}` — \
+                     nothing to fuse",
+                    self.consumer, out.tensor
+                ))
+            }
+            _ => {
+                return Err(format!(
+                    "consumer reads the producer's output `{}` more than once; \
+                     a single in-register value cannot serve multiple accesses",
+                    out.tensor
+                ))
+            }
+        };
+        if read.indices != out.indices {
+            return Err(format!(
+                "consumer reads `{read}` but the producer writes `{out}`: the \
+                 read coordinates are not the written nnz coordinates"
+            ));
+        }
+        match self.consumer.tensor(&out.tensor) {
+            Some(t) if t.formats == *sparse_formats => {}
+            Some(_) => {
+                return Err(format!(
+                    "consumer declares `{}` with different level formats than \
+                     the producer stores — the traversed coordinate sets differ",
+                    out.tensor
+                ))
+            }
+            None => {
+                return Err(format!("consumer never declares the intermediate `{}`", out.tensor))
+            }
+        }
+        Ok(())
+    }
+
+    /// Substitute the producer's expression for the consumer's read of the
+    /// intermediate, yielding the single flattened statement a fused
+    /// kernel lowers. Fails (with the violated rule) when the pair is not
+    /// [legal](FusedAlgebra::check_legal).
+    pub fn flatten(&self) -> Result<TensorAlgebra, String> {
+        self.check_legal()?;
+        let out = &self.producer.lhs;
+        let rhs = substitute(&self.consumer.rhs, &out.tensor, &self.producer.rhs);
+        let mut tensors: Vec<TensorVar> = Vec::new();
+        for t in self.producer.tensors.iter().chain(self.consumer.tensors.iter()) {
+            if t.name != out.tensor && !tensors.iter().any(|u| u.name == t.name) {
+                tensors.push(t.clone());
+            }
+        }
+        Ok(TensorAlgebra { lhs: self.consumer.lhs.clone(), rhs, tensors })
+    }
+}
+
+/// Replace every access to `tensor` in `e` with `with`.
+fn substitute(e: &Expr, tensor: &str, with: &Expr) -> Expr {
+    match e {
+        Expr::Access(a) if a.tensor == tensor => with.clone(),
+        Expr::Access(a) => Expr::Access(a.clone()),
+        Expr::Mul(l, r) => Expr::Mul(
+            Box::new(substitute(l, tensor, with)),
+            Box::new(substitute(r, tensor, with)),
+        ),
+        Expr::Add(l, r) => Expr::Add(
+            Box::new(substitute(l, tensor, with)),
+            Box::new(substitute(r, tensor, with)),
+        ),
+    }
+}
+
+impl fmt::Display for FusedAlgebra {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} where {}", self.consumer, self.producer)
     }
 }
 
@@ -289,6 +491,60 @@ mod tests {
     fn csr_format_is_sparse() {
         assert!(TensorVar::csr("A", 2).is_sparse());
         assert!(!TensorVar::dense("B", 2).is_sparse());
+    }
+
+    #[test]
+    fn fused_pair_flattens_to_one_statement() {
+        let pair = FusedAlgebra::sddmm_spmm();
+        pair.check_legal().unwrap();
+        let flat = pair.flatten().unwrap();
+        assert_eq!(flat, TensorAlgebra::fused_sddmm_spmm());
+        assert_eq!(flat.to_string(), "C(i,k) = A(i,j)*X1(i,l)*X2(l,j)*B(j,k)");
+        // one sparse operand, reduction over the shared j and the dot's l
+        assert!(flat.is_sparse_dense_hybrid());
+        assert_eq!(flat.reduction_dims(), vec![IndexVar::new("j"), IndexVar::new("l")]);
+        // the intermediate is gone; the operands survive once each
+        assert!(flat.tensor("Y").is_none());
+        for t in ["A", "X1", "X2", "B", "C"] {
+            assert!(flat.tensor(t).is_some(), "missing {t}");
+        }
+        assert!(pair.to_string().contains("where"));
+    }
+
+    #[test]
+    fn illegal_fusions_name_the_broken_rule() {
+        // transposed read: consumer asks for Y(j,i)
+        let mut pair = FusedAlgebra::sddmm_spmm();
+        pair.consumer.rhs = Expr::Mul(
+            Box::new(Expr::Access(Access::new("Y", &["j", "i"]))),
+            Box::new(Expr::Access(Access::new("B", &["j", "k"]))),
+        );
+        let err = pair.check_legal().unwrap_err();
+        assert!(err.contains("Y(j,i)"), "{err}");
+        assert!(pair.flatten().is_err());
+
+        // format mismatch: consumer declares the intermediate dense
+        let mut pair = FusedAlgebra::sddmm_spmm();
+        for t in &mut pair.consumer.tensors {
+            if t.name == "Y" {
+                *t = TensorVar::dense("Y", 2);
+            }
+        }
+        let err = pair.check_legal().unwrap_err();
+        assert!(err.contains("formats"), "{err}");
+
+        // consumer never touches the producer's output
+        let mut pair = FusedAlgebra::sddmm_spmm();
+        pair.producer.lhs = Access::new("Z", &["i", "j"]);
+        pair.producer.tensors.push(TensorVar::csr("Z", 2));
+        let err = pair.check_legal().unwrap_err();
+        assert!(err.contains("never reads"), "{err}");
+
+        // producer writing outside its sparse operand's coordinates
+        let mut pair = FusedAlgebra::sddmm_spmm();
+        pair.producer.lhs = Access::new("Y", &["j", "i"]);
+        let err = pair.check_legal().unwrap_err();
+        assert!(err.contains("nnz coordinates"), "{err}");
     }
 
     #[test]

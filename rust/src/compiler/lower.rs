@@ -36,7 +36,7 @@ use thiserror::Error;
 #[allow(unused_imports)] // ReductionStrategy referenced by the module docs
 use super::cin::{ReductionPlan, ReductionStrategy, Writeback};
 use super::llir::{Kernel, Param, Stmt, Val};
-use super::schedule::{DgConfig, Family, KernelConfig, Schedule, SddmmConfig};
+use super::schedule::{DgConfig, Family, FusedConfig, KernelConfig, Schedule, SddmmConfig};
 
 #[derive(Debug, Error)]
 pub enum LowerError {
@@ -84,6 +84,12 @@ pub fn lower(schedule: &Schedule) -> Result<Kernel, LowerError> {
         }
         (Family::TtmGroup, KernelConfig::Ttm(cfg)) => {
             Ok(lower_coo3_seg("ttm", false, cfg.l_dim, cfg.c, cfg.p, &plan))
+        }
+        (Family::FusedSddmmSpmm, KernelConfig::Fused(cfg)) => {
+            if plan.group > cfg.p {
+                return Err(LowerError::InvalidConfig("r must be <= threads per block".into()));
+            }
+            Ok(lower_fused(&cfg, &plan))
         }
         (family, _) => Err(LowerError::Unsupported(format!(
             "family {family:?} does not match the schedule's kernel config"
@@ -603,6 +609,144 @@ fn lower_sddmm_group(cfg: &SddmmConfig, plan: &ReductionPlan) -> Kernel {
     }
 }
 
+/// Fused SDDMM→SpMM `{<1 nnz, c col>, r}` — one pass over `pos/crd`.
+///
+/// The nnz-group SpMM skeleton with the SDDMM dot hoisted in front of the
+/// coarsening loop: each nnz-owning lane binary-searches its row **once**,
+/// computes the scaled attention score `tlaneY = A_vals[fposA] · Σ_l
+/// X1[i,l]·X2[l,f]` **in registers**, then feeds `tlaneY · B[f,k]` straight
+/// into the segment-group reduction for each of its `c` columns. No
+/// `Y_vals` buffer exists — the producer's output never touches memory,
+/// and the sparse structure is traversed exactly once (one
+/// `BinarySearchBefore`, one row-boundary scan, hoisted out of the column
+/// loop because the dot is column-invariant).
+///
+/// Zero extension (§5.2) carries over: out-of-bound lanes skip the dot,
+/// keep `val = 0`, and still flow through `segReduceGroup` branch-free.
+fn lower_fused(cfg: &FusedConfig, plan: &ReductionPlan) -> Kernel {
+    let c = cfg.c;
+    let nnzb = cfg.npb() as i64;
+    let r = plan.group;
+    let mut body = vec![Stmt::Comment(format!(
+        "fused sddmm\u{2192}spmm {{<1 nnz, {c} col>, {r}}} — in-register dot, one pos/crd pass"
+    ))];
+    body.extend(tile_decomp("fpos1", "ko", nnzb));
+    body.push(Stmt::Decl {
+        var: "fposA".into(),
+        init: Val::add(Val::mul(Val::BlockIdx, i(nnzb)), Val::var("fpos1")),
+        float: false,
+    });
+    body.extend(block_window());
+    body.push(row_search("i_pos", "fposA"));
+    body.push(Stmt::Decl { var: "i".into(), init: Val::var("i_pos"), float: false });
+    // the producer's value lives in a register for the lane's nonzero —
+    // computed once, consumed by every coarsened column below
+    body.push(Stmt::Decl { var: "tlaneY".into(), init: Val::ConstF(0.0), float: true });
+    body.push(Stmt::If {
+        cond: Val::lt(Val::var("fposA"), nnz_total()),
+        then: vec![
+            // row advance: skip row starts equal to fposA (empty rows)
+            row_boundary_scan(
+                "i_pos",
+                "fposA",
+                vec![
+                    Stmt::Assign { var: "i_pos".into(), val: Val::add(Val::var("i_pos"), i(1)) },
+                    Stmt::Assign { var: "i".into(), val: Val::var("i_pos") },
+                ],
+            ),
+            Stmt::Decl {
+                var: "f".into(),
+                init: Val::load("A2_crd", Val::var("fposA")),
+                float: false,
+            },
+            Stmt::Decl { var: "l".into(), init: i(0), float: false },
+            Stmt::While {
+                cond: Val::lt(Val::var("l"), Val::param("J_dimension")),
+                body: vec![
+                    accumulate(
+                        "tlaneY",
+                        Val::mul(
+                            Val::load(
+                                "X1_vals",
+                                Val::add(
+                                    Val::mul(Val::var("i"), Val::param("J_dimension")),
+                                    Val::var("l"),
+                                ),
+                            ),
+                            Val::load(
+                                "X2_vals",
+                                Val::add(
+                                    Val::mul(Val::var("l"), Val::param("A2_dimension")),
+                                    Val::var("f"),
+                                ),
+                            ),
+                        ),
+                    ),
+                    Stmt::Assign { var: "l".into(), val: Val::add(Val::var("l"), i(1)) },
+                ],
+            },
+            // scale by A's value once (distributes over the column loop)
+            Stmt::Assign {
+                var: "tlaneY".into(),
+                val: Val::mul(Val::var("tlaneY"), Val::load("A_vals", Val::var("fposA"))),
+            },
+        ],
+        els: vec![],
+    });
+    body.push(coarsen_loop(
+        c,
+        vec![
+            col_index(c),
+            // relaxed scalar workspace (§5.3), zero-extended (§5.2)
+            Stmt::Decl { var: "val".into(), init: Val::ConstF(0.0), float: true },
+            Stmt::If {
+                cond: Val::ge(Val::var("fposA"), nnz_total()),
+                then: vec![Stmt::Assign { var: "val".into(), val: Val::ConstF(0.0) }],
+                els: vec![
+                    Stmt::Decl {
+                        var: "f".into(),
+                        init: Val::load("A2_crd", Val::var("fposA")),
+                        float: false,
+                    },
+                    Stmt::Decl {
+                        var: "kB".into(),
+                        init: Val::add(
+                            Val::mul(Val::var("f"), Val::param("B2_dimension")),
+                            Val::var("k"),
+                        ),
+                        float: false,
+                    },
+                    Stmt::Assign {
+                        var: "val".into(),
+                        val: Val::mul(Val::var("tlaneY"), Val::load("B_vals", Val::var("kB"))),
+                    },
+                ],
+            },
+            Stmt::Decl { var: "kC".into(), init: c_index("i"), float: false },
+            emit_reduction(plan, "C_vals", Val::var("kC"), Val::var("val")),
+        ],
+    ));
+    Kernel {
+        name: format!("fused_sddmm_spmm_c{c}_r{r}"),
+        params: vec![
+            Param::i32_array("i_blockStarts"),
+            Param::i32_array("A2_pos"),
+            Param::i32_array("A2_crd"),
+            Param::f32_array("A_vals"),
+            Param::f32_array("X1_vals"),
+            Param::f32_array("X2_vals"),
+            Param::f32_array("B_vals"),
+            Param::f32_array("C_vals"),
+            Param::i32_scalar("A1_dimension"),
+            Param::i32_scalar("A2_dimension"),
+            Param::i32_scalar("B2_dimension"),
+            Param::i32_scalar("J_dimension"),
+        ],
+        body,
+        block_dim: cfg.p,
+    }
+}
+
 /// dgSPARSE RB+PR+RM — the row-balanced/partial-result shape.
 ///
 /// Thread decomposition (within a block of `blockSz` threads):
@@ -850,6 +994,48 @@ mod tests {
         lower(&Schedule::dgsparse_rb_pr(DgConfig::stock(16))).unwrap();
         lower(&Schedule::mttkrp_group(MttkrpConfig::new(8, 4, 16))).unwrap();
         lower(&Schedule::ttm_group(TtmConfig::new(4, 4, 8))).unwrap();
+        lower(&Schedule::fused_sddmm_spmm(FusedConfig::new(32, 4, 4, 16))).unwrap();
+    }
+
+    #[test]
+    fn fused_lowers_to_one_sparse_traversal_with_no_intermediate() {
+        let k = lower(&Schedule::fused_sddmm_spmm(FusedConfig::new(32, 4, 4, 16))).unwrap();
+        assert_eq!(k.name, "fused_sddmm_spmm_c4_r16");
+        // one pass over pos/crd: a single row search and a single
+        // row-boundary scan, both hoisted out of the column loop
+        let searches = k.count_matching(|s| {
+            matches!(s, Stmt::Decl { init: Val::BinarySearchBefore { .. }, .. })
+        });
+        assert_eq!(searches, 1, "fused kernel must search the row exactly once");
+        // one ReductionPlan, one segment macro — and never an atomic pair
+        assert_eq!(k.count_matching(|s| matches!(s, Stmt::SegReduceGroup { group: 16, .. })), 1);
+        assert_eq!(k.count_matching(|s| matches!(s, Stmt::AtomicAdd { .. })), 0);
+        // no intermediate nnz buffer anywhere in the LLIR: the producer's
+        // value lives in the tlaneY register
+        assert!(!k.params.iter().any(|p| p.name == "Y_vals"));
+        let touches_y = k.walk().iter().any(|s| format!("{s:?}").contains("Y_vals"));
+        assert!(!touches_y, "fused kernel must not touch a materialized Y");
+        // zero extension survives fusion: out-of-bound lanes zero the
+        // workspace and still reach the segment reduction
+        let zero_ext = k.count_matching(|s| {
+            matches!(s, Stmt::If { then, .. }
+                if matches!(then.first(), Some(Stmt::Assign { var, val: Val::ConstF(f) })
+                    if var == "val" && *f == 0.0))
+        });
+        assert_eq!(zero_ext, 1, "zero-extension branch missing");
+        // both dense factors of the producer's dot are bound
+        assert!(k.params.iter().any(|p| p.name == "X1_vals"));
+        assert!(k.params.iter().any(|p| p.name == "X2_vals"));
+    }
+
+    #[test]
+    fn fused_rejects_oversized_groups() {
+        // r wider than the contiguous nnz lanes per block (N/c = 64
+        // chunks leave only 4 nnz lanes)
+        assert!(matches!(
+            lower(&Schedule::fused_sddmm_spmm(FusedConfig::new(32, 64, 1, 8))),
+            Err(LowerError::InvalidConfig(_))
+        ));
     }
 
     #[test]

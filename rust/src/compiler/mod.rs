@@ -19,9 +19,13 @@
 //! ```
 //!
 //! Every served kernel — the four SpMM families, SDDMM, the dgSPARSE
-//! RB+PR shape, MTTKRP, and TTM (the full §2.1 quartet) — enters through
-//! [`compile()`]: an algebra in, a kernel out, with the grouped reduction
-//! provably bound to one of the expression's `reduction_dims()`.
+//! RB+PR shape, MTTKRP, TTM (the full §2.1 quartet), and the fused
+//! SDDMM→SpMM chain — enters through [`compile()`]: an algebra in, a
+//! kernel out, with the grouped reduction provably bound to one of the
+//! expression's `reduction_dims()`. Producer→consumer pairs enter as a
+//! [`FusedAlgebra`] whose legality ([`flatten_fused`]) is checked before
+//! any schedule runs: the consumer may read the producer's output only
+//! at the nnz coordinates the producer wrote.
 //!
 //! The optimization space the schedules draw from is formalized in
 //! [`spaces`] (atomic parallelism, §3).
@@ -38,12 +42,12 @@ pub mod spaces;
 pub use cin::{
     Cin, GroupSpec, OutputRaceStrategy, ParallelUnit, ReductionPlan, ReductionStrategy, Writeback,
 };
-pub use compile::{compile, CompileError, ScheduleBuilder};
-pub use expr::{Access, Expr, IndexVar, LevelFormat, TensorAlgebra, TensorVar};
+pub use compile::{compile, flatten_fused, CompileError, ScheduleBuilder};
+pub use expr::{Access, Expr, FusedAlgebra, IndexVar, LevelFormat, TensorAlgebra, TensorVar};
 pub use llir::{Kernel, LaunchConfig, Stmt, Val};
 pub use lower::{lower, LowerError};
 pub use schedule::{
-    DgConfig, Family, KernelConfig, MttkrpConfig, Schedule, ScheduleCmd, SddmmConfig, SpmmConfig,
-    TtmConfig,
+    DgConfig, Family, FusedConfig, KernelConfig, MttkrpConfig, Schedule, ScheduleCmd, SddmmConfig,
+    SpmmConfig, TtmConfig,
 };
 pub use spaces::{AtomicPoint, DataKind, Factor};

@@ -157,6 +157,52 @@ impl SddmmConfig {
     }
 }
 
+/// Tunable fused SDDMM→SpMM configuration: the attention chain
+/// `C = (A ⊙ (X1 · X2)) · B` lowered as **one** nnz-split kernel. Each
+/// nnz-owning lane computes the SDDMM dot over the dense `j_dim` (here
+/// named `l` in the algebra) in-register, then feeds it straight into the
+/// SpMM segment-group reduction over `n` output columns — no `Y` buffer,
+/// one pass over `pos`/`crd`. Launch shape matches the Listing-6 SpMM
+/// family: `c` output columns per thread, `p` threads per block, `r`-wide
+/// segment reduction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FusedConfig {
+    /// Dense dot length (the producer's reduction, X1 columns).
+    pub j_dim: u32,
+    /// Dense output columns (B/C width).
+    pub n: u32,
+    /// Column coarsening: output columns per thread.
+    pub c: u32,
+    /// Threads per block.
+    pub p: u32,
+    /// Reduction parallelism (GroupSize) of the consumer's segment
+    /// reduction.
+    pub r: u32,
+}
+
+impl FusedConfig {
+    pub fn new(j_dim: u32, n: u32, c: u32, r: u32) -> Self {
+        FusedConfig { j_dim, n, c, p: 256, r }
+    }
+
+    /// Column-chunks per tile (guarded like [`MttkrpConfig::kchunks`]).
+    pub fn kchunks(&self) -> u32 {
+        (self.n / self.c.max(1)).max(1)
+    }
+
+    /// Non-zeros per block.
+    pub fn npb(&self) -> u32 {
+        (self.p / self.kchunks()).max(1)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.j_dim == 0 {
+            return Err("fused SDDMM dot needs j_dim >= 1".into());
+        }
+        validate_coo3_shape("N", self.n, self.c, self.p, self.r)
+    }
+}
+
 /// One point in the dgSPARSE tuning space (§7.2): a block processes
 /// `tile_sz` real columns; `worker_sz` threads process one vectorized
 /// column (of `coarsen_sz` real columns) of one sparse row; `group_sz`
@@ -383,6 +429,9 @@ pub enum KernelConfig {
     Dg(DgConfig),
     Mttkrp(MttkrpConfig),
     Ttm(TtmConfig),
+    /// Fused SDDMM→SpMM — the producer's dot computed in-register inside
+    /// the consumer's nnz-split segment reduction.
+    Fused(FusedConfig),
 }
 
 impl KernelConfig {
@@ -393,6 +442,7 @@ impl KernelConfig {
             KernelConfig::Dg(c) => c.validate(),
             KernelConfig::Mttkrp(c) => c.validate(),
             KernelConfig::Ttm(c) => c.validate(),
+            KernelConfig::Fused(c) => c.validate(),
         }
     }
 
@@ -404,6 +454,7 @@ impl KernelConfig {
             KernelConfig::Dg(_) => "Dg",
             KernelConfig::Mttkrp(_) => "Mttkrp",
             KernelConfig::Ttm(_) => "Ttm",
+            KernelConfig::Fused(_) => "Fused",
         }
     }
 }
@@ -432,6 +483,10 @@ pub enum Family {
     /// TTM `{<1 nnz, c col>, r}` — COO-3 nnz split, grouped segment
     /// reduction keyed by the leading `(i,j)` fiber.
     TtmGroup,
+    /// Fused SDDMM→SpMM `{<1 nnz, c col>, r}` — the attention chain in
+    /// one traversal: in-register dot per nonzero, segment-group SpMM
+    /// writeback.
+    FusedSddmmSpmm,
 }
 
 impl fmt::Display for Family {
@@ -445,6 +500,7 @@ impl fmt::Display for Family {
             Family::DgRowBalanced => "dgsparse-rb-pr",
             Family::MttkrpGroup => "mttkrp-group {<1 nnz, c col>, r}",
             Family::TtmGroup => "ttm-group {<1 nnz, c col>, r}",
+            Family::FusedSddmmSpmm => "fused-sddmm-spmm {<1 nnz, c col>, r}",
         };
         write!(f, "{s}")
     }
@@ -674,6 +730,39 @@ impl Schedule {
         }
     }
 
+    /// Fused SDDMM→SpMM as a schedule: the Listing-6 nnz-split shape over
+    /// the flattened attention algebra, with the producer's dot held in
+    /// the `tlaneY` scalar workspace (§5.3's relaxed rule) instead of a
+    /// materialized `Y` — one pass over `pos`/`crd`, one grouped segment
+    /// reduction.
+    pub fn fused_sddmm_spmm(config: FusedConfig) -> Schedule {
+        let v = |s: &str| IndexVar::new(s);
+        Schedule {
+            cmds: vec![
+                ScheduleCmd::Fuse { a: v("i"), b: v("j"), into: v("f") },
+                ScheduleCmd::Pos { var: v("f"), pos_var: v("fpos"), access: Access::new("A", &["i", "j"]) },
+                ScheduleCmd::Split { var: v("fpos"), outer: v("block"), inner: v("fpos1"), factor: config.npb() },
+                ScheduleCmd::Split { var: v("k"), outer: v("ko"), inner: v("ki"), factor: config.c },
+                ScheduleCmd::Bound { var: v("ko"), bound_var: v("warp"), extent: config.kchunks() },
+                ScheduleCmd::Precompute { workspace: "tlaneY".into() },
+                ScheduleCmd::Parallelize { var: v("block"), unit: ParallelUnit::GPUBlock, race: OutputRaceStrategy::IgnoreRaces },
+                ScheduleCmd::Parallelize { var: v("warp"), unit: ParallelUnit::GPUWarp, race: OutputRaceStrategy::NoRaces },
+                ScheduleCmd::Parallelize { var: v("fpos1"), unit: ParallelUnit::GPUThread, race: OutputRaceStrategy::Atomics },
+                ScheduleCmd::ParallelizeGroup {
+                    var: v("fpos1"),
+                    // literal spec: invalid sizes are reported by
+                    // KernelConfig::validate at lowering, not asserted here
+                    spec: GroupSpec {
+                        size: config.r,
+                        strategy: ReductionStrategy::SegmentReduction,
+                    },
+                    race: OutputRaceStrategy::Atomics,
+                },
+            ],
+            config: KernelConfig::Fused(config),
+        }
+    }
+
     // ---- analysis --------------------------------------------------------
 
     /// The tensor algebra statement this schedule lowers — derived from
@@ -685,6 +774,7 @@ impl Schedule {
             KernelConfig::Sddmm(_) => TensorAlgebra::sddmm(),
             KernelConfig::Mttkrp(_) => TensorAlgebra::mttkrp(),
             KernelConfig::Ttm(_) => TensorAlgebra::ttm(),
+            KernelConfig::Fused(_) => TensorAlgebra::fused_sddmm_spmm(),
         }
     }
 
@@ -774,6 +864,9 @@ impl Schedule {
                 self.classify_coo3_seg("MTTKRP").map(|()| Family::MttkrpGroup)
             }
             KernelConfig::Ttm(_) => self.classify_coo3_seg("TTM").map(|()| Family::TtmGroup),
+            KernelConfig::Fused(_) => self
+                .classify_coo3_seg("fused SDDMM\u{2192}SpMM")
+                .map(|()| Family::FusedSddmmSpmm),
         }
     }
 
@@ -832,7 +925,8 @@ impl Schedule {
             | Family::SddmmGroup
             | Family::DgRowBalanced
             | Family::MttkrpGroup
-            | Family::TtmGroup => {
+            | Family::TtmGroup
+            | Family::FusedSddmmSpmm => {
                 self.group_cmd().expect("grouped families carry a GroupSpec").plan()
             }
         })
@@ -961,6 +1055,38 @@ impl Schedule {
                 let ki = Cin::forall("ki", ParallelUnit::Serial, OutputRaceStrategy::NoRaces, fpos1);
                 let ko = Cin::forall("ko", ParallelUnit::GPUWarp, OutputRaceStrategy::NoRaces, ki);
                 Cin::forall("block", ParallelUnit::GPUBlock, OutputRaceStrategy::IgnoreRaces, ko)
+            }
+            Family::FusedSddmmSpmm => {
+                let spec = self.group_cmd().unwrap();
+                // producer: the SDDMM dot accumulated into the tlaneY
+                // scalar workspace over the serial l loop
+                let producer = Cin::Assign {
+                    lhs: Access::new("tlaneY", &[]),
+                    reduce: true,
+                    rhs: Expr::Mul(
+                        Box::new(Expr::Access(Access::new("X1", &["i", "l"]))),
+                        Box::new(Expr::Access(Access::new("X2", &["l", "j"]))),
+                    ),
+                };
+                let l = Cin::forall("l", ParallelUnit::Serial, OutputRaceStrategy::NoRaces, producer);
+                // consumer: the SpMM contribution, scaling by A's value and
+                // consuming the dot in-register — no Y tensor anywhere
+                let consumer = Cin::Assign {
+                    lhs: Access::new("C", &["i", "k"]),
+                    reduce: true,
+                    rhs: Expr::Mul(
+                        Box::new(Expr::Mul(
+                            Box::new(Expr::Access(Access::new("A", &["i", "j"]))),
+                            Box::new(Expr::Access(Access::new("tlaneY", &[]))),
+                        )),
+                        Box::new(Expr::Access(Access::new("B", &["j", "k"]))),
+                    ),
+                };
+                let wh = Cin::Where { consumer: Box::new(consumer), producer: Box::new(l) };
+                let fpos1 = Cin::forall_group("fpos1", spec, OutputRaceStrategy::Atomics, wh);
+                let ki = Cin::forall("ki", ParallelUnit::Serial, OutputRaceStrategy::NoRaces, fpos1);
+                let warp = Cin::forall("warp", ParallelUnit::GPUWarp, OutputRaceStrategy::NoRaces, ki);
+                Cin::forall("block", ParallelUnit::GPUBlock, OutputRaceStrategy::IgnoreRaces, warp)
             }
             Family::RowGroup => {
                 let spec = self.group_cmd().unwrap();
@@ -1139,6 +1265,48 @@ mod tests {
         assert_eq!(Schedule::sddmm_group(SddmmConfig::new(16, 8, 4)).algebra(), TensorAlgebra::sddmm());
         assert_eq!(Schedule::mttkrp_group(MttkrpConfig::new(8, 4, 8)).algebra(), TensorAlgebra::mttkrp());
         assert_eq!(Schedule::ttm_group(TtmConfig::new(4, 4, 4)).algebra(), TensorAlgebra::ttm());
+        assert_eq!(
+            Schedule::fused_sddmm_spmm(FusedConfig::new(32, 4, 4, 16)).algebra(),
+            TensorAlgebra::fused_sddmm_spmm()
+        );
+    }
+
+    #[test]
+    fn fused_schedule_classifies_plans_and_has_no_intermediate() {
+        let s = Schedule::fused_sddmm_spmm(FusedConfig::new(32, 4, 4, 16));
+        assert_eq!(s.classify().unwrap(), Family::FusedSddmmSpmm);
+        let plan = s.reduction_plan().unwrap();
+        assert_eq!(plan.group, 16);
+        assert_eq!(plan.strategy, Some(ReductionStrategy::SegmentReduction));
+        assert_eq!(plan.writeback, Writeback::SegmentBoundary);
+        let txt = s.to_cin().to_string();
+        assert!(txt.contains("GPUGroup[16,Segment]"), "{txt}");
+        assert!(txt.contains("tlaneY+=X1(i,l)*X2(l,j)"), "{txt}");
+        assert!(txt.contains("C(i,k)+=A(i,j)*tlaneY*B(j,k)"), "{txt}");
+        // the whole point: no materialized Y anywhere in the fused CIN
+        assert!(!txt.contains("Y("), "{txt}");
+        // a non-segment writeback would drop all but the first segment
+        let mut bad = s.clone();
+        for cmd in &mut bad.cmds {
+            if let ScheduleCmd::ParallelizeGroup { spec, .. } = cmd {
+                spec.strategy = ReductionStrategy::ParallelReduction;
+            }
+        }
+        let err = bad.classify().unwrap_err();
+        assert!(err.contains("segment-boundary"), "{err}");
+    }
+
+    #[test]
+    fn fused_config_validates_launch_shape() {
+        assert!(FusedConfig::new(32, 4, 4, 16).validate().is_ok());
+        // c must divide N
+        assert!(FusedConfig::new(32, 4, 3, 16).validate().is_err());
+        // the dot needs at least one term
+        assert!(FusedConfig::new(0, 4, 4, 16).validate().is_err());
+        // r wider than the contiguous nnz lanes per block
+        assert!(FusedConfig::new(32, 64, 1, 8).validate().is_err());
+        assert_eq!(FusedConfig::new(32, 4, 4, 16).npb(), 256);
+        assert_eq!(FusedConfig::new(32, 4, 1, 16).npb(), 64);
     }
 
     #[test]

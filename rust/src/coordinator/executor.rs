@@ -377,6 +377,10 @@ impl Executor for SimExecutor {
                 let a = op.a.as_tensor().ok_or("sim admitted a non-tensor ttm op")?;
                 algo.run_ttm(&self.machine, a, &op.dense[0])
             }
+            OpKind::FusedSddmmSpmm => {
+                let a = op.a.as_matrix().ok_or("sim admitted a non-matrix fused op")?;
+                algo.run_fused(&self.machine, a, &op.dense[0], &op.dense[1], &op.dense[2])
+            }
         };
         res.map(|r| r.run.c).map_err(|e| e.to_string())
     }

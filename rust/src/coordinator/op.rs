@@ -30,6 +30,7 @@ use std::sync::{Arc, OnceLock};
 
 use crate::algos::catalog::Algo;
 use crate::algos::cpu_ref::spmm_serial;
+use crate::algos::fused::fused_serial;
 use crate::algos::mttkrp::{mttkrp_serial, ttm_serial};
 use crate::algos::sddmm::sddmm_serial;
 use crate::sparse::coo3::Coo3;
@@ -53,11 +54,17 @@ pub enum OpKind {
     Mttkrp,
     /// `Y(i,j,l) = Σ A(i,j,k)·X1(k,l)` over an order-3 COO tensor.
     Ttm,
+    /// Fused SDDMM→SpMM: `C = (A ⊙ X1·X2) · B` as one kernel, no
+    /// materialized intermediate. Two widths ride in one packed
+    /// `width = (j_dim << 16) | n` (see [`Op::fused`]).
+    FusedSddmmSpmm,
 }
 
 impl OpKind {
-    /// Every algebra the serving layer knows, in quartet order.
-    pub const ALL: [OpKind; 4] = [OpKind::Spmm, OpKind::Sddmm, OpKind::Mttkrp, OpKind::Ttm];
+    /// Every algebra the serving layer knows: the §2.1 quartet plus the
+    /// fused SDDMM→SpMM chain.
+    pub const ALL: [OpKind; 5] =
+        [OpKind::Spmm, OpKind::Sddmm, OpKind::Mttkrp, OpKind::Ttm, OpKind::FusedSddmmSpmm];
 
     /// Stable lowercase label (log/error prefix).
     pub fn label(self) -> &'static str {
@@ -66,6 +73,7 @@ impl OpKind {
             OpKind::Sddmm => "sddmm",
             OpKind::Mttkrp => "mttkrp",
             OpKind::Ttm => "ttm",
+            OpKind::FusedSddmmSpmm => "fused",
         }
     }
 
@@ -75,6 +83,7 @@ impl OpKind {
             OpKind::Spmm => "n",
             OpKind::Sddmm | OpKind::Mttkrp => "j_dim",
             OpKind::Ttm => "l_dim",
+            OpKind::FusedSddmmSpmm => "j_dim/n",
         }
     }
 
@@ -83,6 +92,7 @@ impl OpKind {
         match self {
             OpKind::Spmm | OpKind::Ttm => 1,
             OpKind::Sddmm | OpKind::Mttkrp => 2,
+            OpKind::FusedSddmmSpmm => 3,
         }
     }
 
@@ -96,10 +106,13 @@ impl OpKind {
     /// fallback rather than guessing a kernel.
     pub fn compatible(self, plan: &Algo) -> bool {
         match self {
-            OpKind::Spmm => !(plan.is_sddmm() || plan.is_mttkrp() || plan.is_ttm()),
+            OpKind::Spmm => {
+                !(plan.is_sddmm() || plan.is_mttkrp() || plan.is_ttm() || plan.is_fused())
+            }
             OpKind::Sddmm => plan.is_sddmm(),
             OpKind::Mttkrp => plan.is_mttkrp(),
             OpKind::Ttm => plan.is_ttm(),
+            OpKind::FusedSddmmSpmm => plan.is_fused(),
         }
     }
 }
@@ -215,7 +228,7 @@ impl SparseHandle {
         match kind {
             OpKind::Mttkrp => Some(self.inner.seg_mttkrp.get_or_init(|| SegStats::mttkrp(t))),
             OpKind::Ttm => Some(self.inner.seg_ttm.get_or_init(|| SegStats::ttm(t))),
-            OpKind::Spmm | OpKind::Sddmm => None,
+            OpKind::Spmm | OpKind::Sddmm | OpKind::FusedSddmmSpmm => None,
         }
     }
 
@@ -381,15 +394,58 @@ impl Op {
         Op { kind: OpKind::Ttm, a: a.clone(), dense: vec![x1.clone()], width: l_dim }
     }
 
-    /// Expected dense operands: `(name, sparse-side extent)` pairs, i.e.
-    /// operand `i` must hold `extent_i × width` elements. Errs when the
-    /// handle's operand class doesn't match the algebra.
-    fn dense_specs(&self) -> Result<Vec<(&'static str, usize)>, OpError> {
+    /// Fused SDDMM→SpMM `C = (A ⊙ X1·X2) · B` with `x1` row-major
+    /// `[a.rows × j_dim]`, `x2` row-major `[j_dim × a.cols]`, and `b`
+    /// row-major `[a.cols × n]`. The chain has *two* dense widths, so both
+    /// ride in the one generic width field packed as
+    /// `(j_dim << 16) | n` — the plan cache, batching keys, and tuner
+    /// requests stay single-field, and [`Op::fused_widths`] unpacks.
+    ///
+    /// # Panics
+    /// When either width does not fit in 16 bits.
+    pub fn fused(
+        a: &SparseHandle,
+        x1: &DenseHandle,
+        x2: &DenseHandle,
+        b: &DenseHandle,
+        j_dim: usize,
+        n: usize,
+    ) -> Op {
+        assert!(j_dim < (1 << 16) && n < (1 << 16), "fused widths must fit in 16 bits");
+        Op {
+            kind: OpKind::FusedSddmmSpmm,
+            a: a.clone(),
+            dense: vec![x1.clone(), x2.clone(), b.clone()],
+            width: (j_dim << 16) | n,
+        }
+    }
+
+    /// The fused op's `(j_dim, n)` pair, unpacked from the packed width.
+    /// Meaningful only when `kind` is [`OpKind::FusedSddmmSpmm`].
+    pub fn fused_widths(&self) -> (usize, usize) {
+        (self.width >> 16, self.width & 0xFFFF)
+    }
+
+    /// Expected dense operands: `(name, extent, width)` triples — operand
+    /// `i` must hold `extent_i × width_i` elements. Every algebra uses the
+    /// op's single width except the fused chain, whose operands split
+    /// across its two packed widths. Errs when the handle's operand class
+    /// doesn't match the algebra.
+    fn dense_specs(&self) -> Result<Vec<(&'static str, usize, usize)>, OpError> {
+        let w = self.width;
         match (self.kind, self.a.data()) {
-            (OpKind::Spmm, SparseData::Matrix(a)) => Ok(vec![("B", a.cols)]),
-            (OpKind::Sddmm, SparseData::Matrix(a)) => Ok(vec![("X1", a.rows), ("X2", a.cols)]),
-            (OpKind::Mttkrp, SparseData::Tensor(a)) => Ok(vec![("X1", a.dim1), ("X2", a.dim2)]),
-            (OpKind::Ttm, SparseData::Tensor(a)) => Ok(vec![("X1", a.dim2)]),
+            (OpKind::Spmm, SparseData::Matrix(a)) => Ok(vec![("B", a.cols, w)]),
+            (OpKind::Sddmm, SparseData::Matrix(a)) => {
+                Ok(vec![("X1", a.rows, w), ("X2", a.cols, w)])
+            }
+            (OpKind::FusedSddmmSpmm, SparseData::Matrix(a)) => {
+                let (j, n) = self.fused_widths();
+                Ok(vec![("X1", a.rows, j), ("X2", j, a.cols), ("B", a.cols, n)])
+            }
+            (OpKind::Mttkrp, SparseData::Tensor(a)) => {
+                Ok(vec![("X1", a.dim1, w), ("X2", a.dim2, w)])
+            }
+            (OpKind::Ttm, SparseData::Tensor(a)) => Ok(vec![("X1", a.dim2, w)]),
             (kind, data) => Err(OpError::OperandKind { kind, got: data.label() }),
         }
     }
@@ -397,31 +453,33 @@ impl Op {
     /// The single generic validator: width, operand class, dense arity,
     /// and every dense length against `extent × width` (with
     /// `checked_mul`, so absurd dims are a typed error, not a debug-build
-    /// overflow panic).
+    /// overflow panic). The fused chain checks *both* packed widths for
+    /// zero.
     pub fn validate(&self) -> Result<(), OpError> {
         let kind = self.kind;
-        if self.width == 0 {
+        let zero_width = match kind {
+            OpKind::FusedSddmmSpmm => {
+                let (j, n) = self.fused_widths();
+                j == 0 || n == 0
+            }
+            _ => self.width == 0,
+        };
+        if zero_width {
             return Err(OpError::ZeroWidth { kind });
         }
         let specs = self.dense_specs()?;
         if self.dense.len() != specs.len() {
             return Err(OpError::DenseArity { kind, want: specs.len(), got: self.dense.len() });
         }
-        for (&(operand, extent), d) in specs.iter().zip(&self.dense) {
-            let want = extent.checked_mul(self.width).ok_or_else(|| OpError::DimOverflow {
+        for (&(operand, extent, width), d) in specs.iter().zip(&self.dense) {
+            let want = extent.checked_mul(width).ok_or(OpError::DimOverflow {
                 kind,
                 operand,
                 extent,
-                width: self.width,
+                width,
             })?;
             if d.len() != want {
-                return Err(OpError::DenseShape {
-                    kind,
-                    operand,
-                    got: d.len(),
-                    extent,
-                    width: self.width,
-                });
+                return Err(OpError::DenseShape { kind, operand, got: d.len(), extent, width });
             }
         }
         Ok(())
@@ -441,6 +499,9 @@ impl Op {
         match (self.kind, self.a.data()) {
             (OpKind::Spmm, SparseData::Matrix(a)) => a.rows.checked_mul(self.width),
             (OpKind::Sddmm, SparseData::Matrix(a)) => Some(a.nnz()),
+            (OpKind::FusedSddmmSpmm, SparseData::Matrix(a)) => {
+                a.rows.checked_mul(self.fused_widths().1)
+            }
             (OpKind::Mttkrp, SparseData::Tensor(a)) => a.dim0.checked_mul(self.width),
             (OpKind::Ttm, SparseData::Tensor(a)) => {
                 a.dim0.checked_mul(a.dim1)?.checked_mul(self.width)
@@ -457,6 +518,7 @@ impl Op {
         match self.kind {
             OpKind::Spmm => Some(ShapeKey::spmm(self.a.matrix_stats()?, w)),
             OpKind::Sddmm => Some(ShapeKey::sddmm(self.a.matrix_stats()?, w)),
+            OpKind::FusedSddmmSpmm => Some(ShapeKey::fused(self.a.matrix_stats()?, w)),
             OpKind::Mttkrp => {
                 let t = self.a.as_tensor()?;
                 let seg = self.a.seg_stats(OpKind::Mttkrp)?;
@@ -496,6 +558,14 @@ impl Op {
                     None => selector.select_sddmm(stats, w),
                 })
             }
+            OpKind::FusedSddmmSpmm => {
+                let stats = self.a.matrix_stats()?;
+                let (j, n) = self.fused_widths();
+                match model {
+                    Some(m) => selector.select_fused_model(m, stats, j as u32, n as u32),
+                    None => selector.select_fused(stats, j as u32, n as u32),
+                }
+            }
             OpKind::Mttkrp => {
                 let seg = self.a.seg_stats(OpKind::Mttkrp)?;
                 match model {
@@ -524,6 +594,10 @@ impl Op {
             (OpKind::Spmm, SparseData::Matrix(a)) => spmm_serial(a, &self.dense[0], self.width),
             (OpKind::Sddmm, SparseData::Matrix(a)) => {
                 sddmm_serial(a, &self.dense[0], &self.dense[1], self.width)
+            }
+            (OpKind::FusedSddmmSpmm, SparseData::Matrix(a)) => {
+                let (j, n) = self.fused_widths();
+                fused_serial(a, &self.dense[0], &self.dense[1], &self.dense[2], j, n)
             }
             (OpKind::Mttkrp, SparseData::Tensor(a)) => {
                 mttkrp_serial(a, &self.dense[0], &self.dense[1], self.width)
@@ -649,11 +723,49 @@ mod tests {
     fn quartet_arity_and_width_names() {
         for kind in OpKind::ALL {
             assert!(!kind.label().is_empty());
-            assert!(kind.dense_arity() >= 1 && kind.dense_arity() <= 2);
+            assert!(kind.dense_arity() >= 1 && kind.dense_arity() <= 3);
         }
         assert_eq!(OpKind::Sddmm.width_name(), "j_dim");
         assert_eq!(OpKind::Ttm.to_string(), "ttm");
         assert!(OpKind::Mttkrp.wants_tensor() && !OpKind::Spmm.wants_tensor());
+        assert!(!OpKind::FusedSddmmSpmm.wants_tensor());
+        assert_eq!(OpKind::FusedSddmmSpmm.dense_arity(), 3);
+    }
+
+    #[test]
+    fn fused_ops_pack_two_widths_and_validate_each_operand() {
+        let h = mat_handle(); // 16 x 12
+        let x1 = DenseHandle::new(vec![0.0; 16 * 8]);
+        let x2 = DenseHandle::new(vec![0.0; 8 * 12]);
+        let b = DenseHandle::new(vec![0.0; 12 * 4]);
+        let op = Op::fused(&h, &x1, &x2, &b, 8, 4);
+        op.validate().unwrap();
+        assert_eq!(op.fused_widths(), (8, 4));
+        assert_eq!(op.width, (8 << 16) | 4);
+        assert_eq!(op.output_len(), Some(16 * 4), "output is rows x n, not rows x j");
+        assert_eq!(
+            op.shape_key(),
+            Some(ShapeKey::fused(op.a.matrix_stats().unwrap(), op.width as u32))
+        );
+        // the oracle is the two-stage chain
+        let a = op.a.as_matrix().unwrap();
+        let want = fused_serial(a, &x1, &x2, &b, 8, 4);
+        assert_eq!(op.run_serial(), want);
+        // each operand is checked against its own width
+        let bad = Op::fused(&h, &x1, &DenseHandle::new(vec![0.0; 7]), &b, 8, 4);
+        let err = bad.validate().unwrap_err();
+        assert!(matches!(err, OpError::DenseShape { operand: "X2", got: 7, .. }), "{err}");
+        // either packed width at zero is a typed zero-width error
+        for (j, n) in [(0usize, 4usize), (8, 0)] {
+            let z = Op::fused(&h, &x1, &x2, &b, j, n);
+            assert_eq!(z.validate(), Err(OpError::ZeroWidth { kind: OpKind::FusedSddmmSpmm }));
+        }
+        // plan compatibility keys on the fused family, both directions
+        let plan = crate::algos::FusedConfig::new(8, 4, 4, 8);
+        let fused_plan = Algo::FusedSddmmSpmm(plan);
+        assert!(OpKind::FusedSddmmSpmm.compatible(&fused_plan));
+        assert!(!OpKind::Spmm.compatible(&fused_plan));
+        assert!(!OpKind::FusedSddmmSpmm.compatible(&Algo::TacoRowSerial { x: 1, c: 1 }));
     }
 
     #[test]

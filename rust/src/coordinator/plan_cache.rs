@@ -75,6 +75,15 @@ impl ShapeKey {
         Self::quantized(Scenario::Sddmm, stats, j_dim)
     }
 
+    /// Fused SDDMM→SpMM key. `packed_width` is the op's packed
+    /// `(j_dim << 16) | n` pair — both widths shape the fused kernel's
+    /// cost, so both belong in the fingerprint. As with every key, a
+    /// collision can only cost performance: the fused run path re-derives
+    /// the actual extents from the operands that arrive.
+    pub fn fused(stats: &MatrixStats, packed_width: u32) -> ShapeKey {
+        Self::quantized(Scenario::FusedSddmmSpmm, stats, packed_width)
+    }
+
     /// Fingerprint of an order-3 tensor request: exact output-segment
     /// count (`rows`) / trailing extent / nnz plus the same quantized skew
     /// features as the matrix keys, computed over the scenario's output
@@ -280,6 +289,12 @@ mod tests {
         assert_ne!(key_of(&er, 4), key_of(&pl, 4), "skew separates ER from power-law");
         let stats = MatrixStats::of(&er);
         assert_ne!(ShapeKey::spmm(&stats, 4), ShapeKey::sddmm(&stats, 4));
+        // the fused scenario is its own key space, and both packed widths
+        // separate entries
+        let fused = ShapeKey::fused(&stats, (16 << 16) | 4);
+        assert_ne!(fused, ShapeKey::spmm(&stats, (16 << 16) | 4));
+        assert_ne!(fused, ShapeKey::fused(&stats, (16 << 16) | 8), "n separates");
+        assert_ne!(fused, ShapeKey::fused(&stats, (32 << 16) | 4), "j_dim separates");
     }
 
     #[test]

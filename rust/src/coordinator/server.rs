@@ -452,6 +452,19 @@ fn tuner_loop(
                 let cands = tuner::space::sddmm_candidates(task.width);
                 tuner::search::tune_sddmm_pruned(machine, &cands, a, &x1, &x2, top_k)
             }
+            (OpKind::FusedSddmmSpmm, SparseData::Matrix(a)) => {
+                // the fused width packs both dense extents: (j_dim << 16) | n
+                let (jw, nw) = (task.width >> 16, task.width & 0xFFFF);
+                let cands = tuner::space::fused_candidates(jw, nw);
+                if cands.is_empty() {
+                    continue;
+                }
+                let (j, n) = (jw as usize, nw as usize);
+                let x1: Vec<f32> = (0..a.rows * j).map(|_| rng.value()).collect();
+                let x2: Vec<f32> = (0..j * a.cols).map(|_| rng.value()).collect();
+                let b: Vec<f32> = (0..a.cols * n).map(|_| rng.value()).collect();
+                tuner::search::tune_fused_pruned(machine, &cands, a, &x1, &x2, &b, top_k)
+            }
             (OpKind::Mttkrp, SparseData::Tensor(a)) => {
                 let cands = tuner::space::mttkrp_candidates(task.width);
                 if cands.is_empty() {
@@ -606,6 +619,47 @@ mod tests {
         let plan = cache.get(&key).expect("plan still cached");
         assert_eq!(plan.origin, PlanOrigin::Tuned);
         assert!(plan.kind.is_mttkrp(), "tuned plan {} changed scenario", plan.kind.name());
+    }
+
+    #[test]
+    fn serves_fused_through_plan_cache_and_tuner() {
+        use crate::algos::fused::fused_serial;
+        use crate::coordinator::op::{DenseHandle, SparseHandle};
+        let coord = Coordinator::start(CoordinatorConfig {
+            workers: 2,
+            background_tune: true,
+            ..CoordinatorConfig::default()
+        })
+        .unwrap();
+        let a = erdos_renyi(48, 40, 300, 21).to_csr();
+        let (j, n) = (8usize, 4usize);
+        let mut rng = SplitMix64::new(2);
+        let x1 = DenseHandle::new((0..a.rows * j).map(|_| rng.value()).collect());
+        let x2 = DenseHandle::new((0..j * a.cols).map(|_| rng.value()).collect());
+        let b = DenseHandle::new((0..a.cols * n).map(|_| rng.value()).collect());
+        let h = SparseHandle::matrix(a.clone());
+        let want = fused_serial(&a, &x1, &x2, &b, j, n);
+        let op = Op::fused(&h, &x1, &x2, &b, j, n);
+        let resp = coord.submit(op.clone()).wait().unwrap();
+        assert_eq!(
+            resp.backend,
+            BackendKind::Sim { family: "fused-sddmm-spmm" },
+            "backend {}",
+            resp.backend
+        );
+        assert!(!resp.cache_hit && resp.plan.is_some());
+        assert!(max_rel_err(&resp.c, &want) < 5e-4);
+        // repeat: same registration hits the cache (the concurrent tuner
+        // may have upgraded the plan, so only accuracy is asserted)
+        let resp2 = coord.submit(op).wait().unwrap();
+        assert!(resp2.cache_hit);
+        assert!(max_rel_err(&resp2.c, &want) < 5e-4);
+        let key = ShapeKey::fused(&MatrixStats::of(&a), ((j << 16) | n) as u32);
+        let cache = coord.plan_cache.clone();
+        coord.shutdown(); // joins the tuner: the upgrade has landed
+        let plan = cache.get(&key).expect("plan still cached");
+        assert_eq!(plan.origin, PlanOrigin::Tuned);
+        assert!(plan.kind.is_fused(), "tuned plan {} changed scenario", plan.kind.name());
     }
 
     #[test]

@@ -146,6 +146,21 @@ impl Session {
         self.submit(Op::ttm(a, x1, l_dim))
     }
 
+    /// Build and submit a fused SDDMM→SpMM op against registered handles —
+    /// the attention chain `C = (A ⊙ X1·X2) · B` as one kernel, no
+    /// materialized intermediate (see [`Op::fused`] for operand layouts).
+    pub fn fused_sddmm_spmm(
+        &self,
+        a: &SparseHandle,
+        x1: &DenseHandle,
+        x2: &DenseHandle,
+        b: &DenseHandle,
+        j_dim: usize,
+        n: usize,
+    ) -> Ticket {
+        self.submit(Op::fused(a, x1, x2, b, j_dim, n))
+    }
+
     /// Stop accepting new work; in-flight and queued ops are still served.
     pub fn close(&self) {
         self.coord.close();

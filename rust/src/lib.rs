@@ -17,7 +17,8 @@
 //!   reduction + zero extension, LLIR, and CUDA-text / simulator codegen.
 //! * [`sim`] — the SIMT cost simulator standing in for the paper's GPUs.
 //! * [`algos`] — the §2.1 quartet behind the catalog: the four TACO SpMM
-//!   families, SDDMM, the dgSPARSE kernels, and the COO-3 MTTKRP/TTM
+//!   families, SDDMM, the fused SDDMM→SpMM chain (one kernel, no
+//!   intermediate), the dgSPARSE kernels, and the COO-3 MTTKRP/TTM
 //!   segment kernels, each with numeric and simulated execution paths.
 //! * [`tuner`] — atomic-parallelism space search (analytic cost-model
 //!   pricing + model-pruned or exhaustive grid search) and the

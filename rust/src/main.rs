@@ -8,6 +8,8 @@
 //!   stats     — print the evaluation-suite matrix statistics
 //!   spmm      — grid-search one suite matrix on the simulator (alias: tune)
 //!   sddmm     — grid-search the scheduled SDDMM candidates likewise
+//!   fused     — grid-search the fused SDDMM→SpMM candidates and compare
+//!               against the tuned two-stage pipeline
 //!   mttkrp    — grid-search the COO-3 MTTKRP candidates on a seeded tensor
 //!   ttm       — grid-search the COO-3 TTM candidates likewise
 //!   bench     — run the table-1/2/4 suites through the model-pruned
@@ -25,9 +27,11 @@ use anyhow::{bail, Context, Result};
 use sgap::bench_util::Table;
 use sgap::compiler::codegen_cuda::{emit_translation_unit, macro_header};
 use sgap::compiler::schedule::{
-    DgConfig, MttkrpConfig, Schedule, SddmmConfig, SpmmConfig, TtmConfig,
+    DgConfig, FusedConfig, MttkrpConfig, Schedule, SddmmConfig, SpmmConfig, TtmConfig,
 };
-use sgap::compiler::{spaces, ScheduleBuilder, TensorAlgebra};
+use sgap::compiler::{
+    flatten_fused, spaces, Access, Expr, FusedAlgebra, ScheduleBuilder, TensorAlgebra,
+};
 use sgap::coordinator::{CoordinatorConfig, Op, Session};
 use sgap::sim::{HwProfile, Machine};
 use sgap::sparse::{suite, Coo3, MatrixStats, SplitMix64};
@@ -83,6 +87,13 @@ fn cmd_codegen(flags: &HashMap<String, String>) -> Result<()> {
         // --n is the dense factor/output width for the COO-3 kernels
         "mttkrp" => Schedule::mttkrp_group(MttkrpConfig::new(n, c, r)),
         "ttm" => Schedule::ttm_group(TtmConfig::new(n, c, r)),
+        // --n is the consumer output width, --j the producer dot length
+        "fused" => Schedule::fused_sddmm_spmm(FusedConfig::new(
+            flag_u32(flags, "j", 16)?,
+            n,
+            c,
+            r,
+        )),
         // --g maps to workerSz, --r to groupSz, --c (if given) to coarsenSz
         "dgsparse" => {
             let stock = DgConfig::stock(n);
@@ -202,19 +213,25 @@ fn cmd_sddmm(flags: &HashMap<String, String>) -> Result<()> {
 
 /// The compile-API smoke test: every quartet algebra in, its reduction
 /// dims and legal schedule families out — all through the public
-/// `ScheduleBuilder` front door.
+/// `ScheduleBuilder` front door. The fused SDDMM→SpMM pair rides along:
+/// its legality check runs before any schedule, and an illegal pair is a
+/// typed `CompileError`, not a panic.
 fn cmd_expr() -> Result<()> {
-    let quartet = [
+    let statements = [
         ("spmm", TensorAlgebra::spmm()),
         ("sddmm", TensorAlgebra::sddmm()),
         ("mttkrp", TensorAlgebra::mttkrp()),
         ("ttm", TensorAlgebra::ttm()),
+        ("fused", TensorAlgebra::fused_sddmm_spmm()),
     ];
-    for (name, algebra) in quartet {
+    for (name, algebra) in statements {
         let builder = ScheduleBuilder::new(&algebra)?;
         let dims: Vec<String> =
             algebra.reduction_dims().iter().map(|d| d.to_string()).collect();
         println!("{name:<8} {algebra}");
+        if name == "fused" {
+            println!("         producer/consumer pair: {}", FusedAlgebra::sddmm_spmm());
+        }
         println!("         reduction dims: {{{}}}", dims.join(", "));
         println!("         legal schedule families:");
         for family in builder.legal_families() {
@@ -222,6 +239,78 @@ fn cmd_expr() -> Result<()> {
         }
         println!();
     }
+    // an illegal pair — the consumer reading the intermediate transposed,
+    // at coordinates the producer never wrote — is a typed error
+    let mut bad = FusedAlgebra::sddmm_spmm();
+    bad.consumer.rhs = Expr::Mul(
+        Box::new(Expr::Access(Access::new("Y", &["j", "i"]))),
+        Box::new(Expr::Access(Access::new("B", &["j", "k"]))),
+    );
+    match flatten_fused(&bad) {
+        Err(e) => println!("rejected (typed): {e}"),
+        Ok(_) => bail!("transposed intermediate read must be rejected"),
+    }
+    Ok(())
+}
+
+/// `sgap fused` — sweep the fused SDDMM→SpMM grid on one suite matrix and
+/// report the best fused plan against the tuned two-stage pipeline
+/// (best SDDMM sweep time + best SpMM sweep time on the same operands).
+fn cmd_fused(flags: &HashMap<String, String>) -> Result<()> {
+    let j = flag_u32(flags, "j", 16)?;
+    let n = flag_u32(flags, "n", 4)?;
+    let hw = hw_by_name(flags.get("hw").map(String::as_str).unwrap_or("3090"))?;
+    let name = flags.get("dataset").cloned().unwrap_or_else(|| "er_1024_d5e-3".into());
+    let ds = suite()
+        .into_iter()
+        .find(|d| d.name == name)
+        .with_context(|| format!("dataset `{name}` not in suite (try `sgap stats` for names)"))?;
+    let a = ds.matrix.to_csr();
+    let mut rng = SplitMix64::new(7);
+    let x1: Vec<f32> = (0..a.rows * j as usize).map(|_| rng.value()).collect();
+    let x2: Vec<f32> = (0..j as usize * a.cols).map(|_| rng.value()).collect();
+    let b: Vec<f32> = (0..a.cols * n as usize).map(|_| rng.value()).collect();
+    let machine = Machine::new(hw);
+
+    let cands = tuner::fused_candidates(j, n);
+    anyhow::ensure!(
+        !cands.is_empty(),
+        "no legal fused launch shape for N={n}; run `sgap sddmm` + `sgap spmm` separately"
+    );
+    println!("fused-tuning {} on {} ({} candidates, J={j}, N={n})", name, hw.name, cands.len());
+    let out = tuner::tune_fused_ranked(&machine, &cands, &a, &x1, &x2, &b)?;
+    print_ranked(&out)?;
+    let (_, t_fused) = out.best().context("empty fused sweep")?;
+    match tuner::Selector::default().select_fused(&MatrixStats::of(&a), j, n) {
+        Some(selected) => match out.time_of(&selected) {
+            Some(ts) => println!(
+                "selector fast path: {} at {:.2} us ({:.2}x of best)",
+                selected.name(),
+                ts * 1e6,
+                ts / t_fused
+            ),
+            None => println!("selector fast path: {} (outside the sweep grid)", selected.name()),
+        },
+        None => println!("selector fast path: none (two-stage fallback)"),
+    }
+    // the two-stage baseline: best SDDMM sweep + best SpMM sweep on the
+    // same operands (the SpMM stage's timing is value-independent, so the
+    // unscaled matrix stands in for the materialized intermediate)
+    let sddmm_out =
+        tuner::tune_sddmm(&machine, &tuner::sddmm_candidates(j), &a, &x1, &x2)?;
+    let mut spmm_cands = tuner::taco_candidates(n);
+    spmm_cands.extend(tuner::sgap_candidates(n));
+    let (_, t_spmm) = tuner::tune(&machine, &spmm_cands, &a, &b, n)?
+        .best()
+        .context("empty spmm sweep")?;
+    let t_two_stage = sddmm_out.1 + t_spmm;
+    println!(
+        "\ntwo-stage pipeline: {:.2} us (sddmm {:.2} + spmm {:.2}); fused is {:.2}x",
+        t_two_stage * 1e6,
+        sddmm_out.1 * 1e6,
+        t_spmm * 1e6,
+        t_two_stage / t_fused
+    );
     Ok(())
 }
 
@@ -435,6 +524,7 @@ fn main() -> Result<()> {
         // `spmm` is the quartet-consistent name; `tune` the historical one
         "tune" | "spmm" => cmd_tune(&flags),
         "sddmm" => cmd_sddmm(&flags),
+        "fused" => cmd_fused(&flags),
         "mttkrp" => cmd_mttkrp(&flags),
         "ttm" => cmd_ttm(&flags),
         "bench" => cmd_bench(&flags),
@@ -447,13 +537,16 @@ fn main() -> Result<()> {
             println!("sgap — segment group & atomic parallelism (Sgap reproduction)");
             println!();
             println!("usage: sgap <command> [--flag value ...]");
-            println!("  expr     (print the §2.1 quartet: algebra, reduction dims, legal families)");
-            println!("  codegen  --family nnz-group|row-group|nnz-serial|row-serial|sddmm|dgsparse|mttkrp|ttm --n 4 --c 4 --g 32 --r 32");
-            println!("           (sddmm/mttkrp/ttm: --n is the dense width; dgsparse: --g=workerSz --r=groupSz --c=coarsenSz)");
+            println!("  expr     (print the §2.1 quartet + the fused SDDMM→SpMM pair: algebra,");
+            println!("            reduction dims, legal families, and the typed illegal-fusion error)");
+            println!("  codegen  --family nnz-group|row-group|nnz-serial|row-serial|sddmm|dgsparse|mttkrp|ttm|fused --n 4 --c 4 --g 32 --r 32");
+            println!("           (sddmm/mttkrp/ttm: --n is the dense width; fused: --j is the dot length; dgsparse: --g=workerSz --r=groupSz --c=coarsenSz)");
             println!("  space    (print the Fig. 7/8 legality map)");
             println!("  stats    (print the evaluation-suite statistics)");
             println!("  spmm     --dataset er_1024_d5e-3 --n 4 --hw 3090|2080|v100 (alias: tune)");
             println!("  sddmm    --dataset er_1024_d5e-3 --j 16 --hw 3090|2080|v100");
+            println!("  fused    --dataset er_1024_d5e-3 --j 16 --n 4 --hw 3090|2080|v100");
+            println!("           (fused SDDMM→SpMM sweep vs the tuned two-stage pipeline)");
             println!("  mttkrp   --d0 128 --d1 96 --d2 64 --nnz 4000 --j 16 --hw 3090|2080|v100");
             println!("  ttm      --d0 128 --d1 96 --d2 64 --nnz 4000 --l 16 --hw 3090|2080|v100");
             println!("  bench    [--quick] [--out DIR] [--k 8] [--hw 3090|2080|v100]");

@@ -13,12 +13,13 @@ pub mod space;
 
 pub use model::{CostModel, Workload};
 pub use search::{
-    tune, tune_banded, tune_mttkrp, tune_mttkrp_pruned, tune_mttkrp_ranked, tune_pruned,
-    tune_sddmm, tune_sddmm_pruned, tune_sddmm_ranked, tune_ttm, tune_ttm_pruned, tune_ttm_ranked,
-    PrunedOutcome, TuneOutcome, DEFAULT_TOP_K,
+    tune, tune_banded, tune_fused, tune_fused_pruned, tune_fused_ranked, tune_mttkrp,
+    tune_mttkrp_pruned, tune_mttkrp_ranked, tune_pruned, tune_sddmm, tune_sddmm_pruned,
+    tune_sddmm_ranked, tune_ttm, tune_ttm_pruned, tune_ttm_ranked, PrunedOutcome, TuneOutcome,
+    DEFAULT_TOP_K,
 };
 pub use selector::Selector;
 pub use space::{
-    band_candidates, dg_candidates, mttkrp_candidates, sddmm_candidates, sgap_candidates,
-    taco_candidates, ttm_candidates,
+    band_candidates, dg_candidates, fused_candidates, mttkrp_candidates, sddmm_candidates,
+    sgap_candidates, taco_candidates, ttm_candidates,
 };

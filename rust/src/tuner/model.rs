@@ -25,6 +25,7 @@
 
 use crate::algos::catalog::{Algo, CompositeConfig};
 use crate::algos::dgsparse::DgConfig;
+use crate::algos::fused::FusedConfig;
 use crate::algos::mttkrp::{MttkrpConfig, TtmConfig};
 use crate::algos::sddmm::SddmmConfig;
 use crate::sim::{CostParams, HwProfile, Machine};
@@ -42,6 +43,8 @@ pub enum Workload<'a> {
     Mttkrp { seg: &'a SegStats, j: u32 },
     /// TTM over leading-fiber segments with output width `l`.
     Ttm { seg: &'a SegStats, l: u32 },
+    /// Fused SDDMM→SpMM with inner dense width `j` and output width `n`.
+    Fused { stats: &'a MatrixStats, j: u32, n: u32 },
 }
 
 /// Intermediate estimate in [`Machine::launch`]'s own units.
@@ -95,6 +98,9 @@ impl CostModel {
                 return self.price_composite(stats, *n, &cc)
             }
             (Workload::Sddmm { stats, .. }, Algo::Sddmm(cfg)) => self.est_sddmm(stats, &cfg),
+            (Workload::Fused { stats, .. }, Algo::FusedSddmmSpmm(cfg)) => {
+                self.est_fused(stats, &cfg)
+            }
             (Workload::Mttkrp { seg, .. }, Algo::Mttkrp(cfg)) => self.est_coo3(seg, &cfg_m(&cfg)),
             (Workload::Ttm { seg, .. }, Algo::Ttm(cfg)) => self.est_coo3(seg, &cfg_t(&cfg)),
             _ => return None,
@@ -380,6 +386,55 @@ impl CostModel {
         }
     }
 
+    /// Fused SDDMM→SpMM `{<1 nnz, c col>, r}` — the nnz-group skeleton
+    /// with the producer's dense-`j` dot charged **once per non-zero**
+    /// (hoisted out of the column loop, as the lowered kernel does) and
+    /// the intermediate's write-then-reread traffic entirely absent: one
+    /// traversal of `pos/crd`, one launch overhead. This one-traversal
+    /// pricing is what makes the pruner prefer fusion over the two-stage
+    /// pipeline whenever the dot cost doesn't dominate.
+    fn est_fused(&self, s: &MatrixStats, cfg: &FusedConfig) -> Estimate {
+        let p = &self.params;
+        let z = s.nnz as f64;
+        let d = s.row_degree_mean;
+        let j = cfg.j_dim as f64;
+        let (c, r, n) = (cfg.c, cfg.r, cfg.n);
+        let kch = (n / c).max(1) as f64;
+        let nnzb = P / kch;
+        let blocks = (z / nnzb).ceil().max(1.0);
+        let warps = blocks * (P / WARP);
+        let pb = Self::boundary_prob(d);
+
+        let (bs_cy, bs_sec) = p.bsearch(nnzb / d.max(1.0) + 2.0);
+        // hoisted producer work: row-boundary scan, the dense-j dot, and
+        // the A scaling — paid once per non-zero, not per coarsened column
+        let prologue = 4.0 * p.alu
+            + 2.0 * p.load_issue
+            + bs_cy
+            + (1.0 + pb) * (p.alu + p.load_issue) // row-boundary scan
+            + j * self.dot_iter()
+            + p.alu; // scale by A
+        // per coarsening step: bound check + crd/B loads + segment scan
+        let per_ki = 8.0 * p.alu
+            + 4.0 * p.load_issue
+            + 2.0 * p.branch
+            + p.seg_scan(r)
+            + p.atomic_chain((d / r as f64).clamp(1.0, WARP / r as f64));
+        let per_warp = prologue + c as f64 * per_ki;
+
+        let a_sectors = 8.0 + bs_sec + 2.0; // crd+vals coalesced, search, window
+        let b_sectors = Self::gather_sectors(WARP, s.cols as f64, n as f64);
+        // the producer's dense factors: each nnz lane reads one X1 row
+        // (coalesced within the row) and gathers one X2 column
+        let x1_sectors = Self::gather_sectors(WARP * (j / 8.0).max(1.0), s.rows as f64, j);
+        let x2_sectors = Self::gather_sectors(WARP * j, j, s.cols as f64);
+        Estimate {
+            cycles: warps * per_warp,
+            sectors: warps * (a_sectors + b_sectors + x1_sectors + x2_sectors),
+            critical: per_warp,
+        }
+    }
+
     /// COO-3 `{<1 nnz, c col>, r}` — the shared MTTKRP/TTM segment shape.
     fn est_coo3(&self, seg: &SegStats, cfg: &Coo3Shape) -> Estimate {
         let p = &self.params;
@@ -580,6 +635,38 @@ mod tests {
         let short = m.shortlist(&sddmm_candidates(4), &w, 4);
         assert_eq!(short.len(), 4);
         assert!(short.iter().all(|c| matches!(c, Algo::Sddmm(_))));
+    }
+
+    #[test]
+    fn fused_prices_one_traversal_below_the_two_stage_pipeline() {
+        let m = model();
+        let a = power_law(2048, 2048, 40_000, 1.9, 11).to_csr();
+        let stats = MatrixStats::of(&a);
+        let (j, n) = (32u32, 32u32);
+        let wf = Workload::Fused { stats: &stats, j, n };
+        let fused = Algo::FusedSddmmSpmm(FusedConfig::new(j, n, 4, 8));
+        let t_fused = m.price(&fused, &wf).unwrap();
+        assert!(t_fused.is_finite() && t_fused > 0.0);
+        // kind mismatches price None both ways
+        assert!(m.price(&fused, &Workload::Spmm { stats: &stats, n }).is_none());
+        assert!(m.price(&Algo::SgapNnzGroup { c: 4, r: 8 }, &wf).is_none());
+        // the payoff the pruner sees: one traversal + one launch must not
+        // exceed SDDMM-then-SpMM, which pays the intermediate and a second
+        // pass over pos/crd
+        let t_sddmm = m
+            .price(
+                &Algo::Sddmm(SddmmConfig::new(j, 32, 8)),
+                &Workload::Sddmm { stats: &stats, j },
+            )
+            .unwrap();
+        let t_spmm = m
+            .price(&Algo::SgapNnzGroup { c: 4, r: 8 }, &Workload::Spmm { stats: &stats, n })
+            .unwrap();
+        assert!(
+            t_fused <= t_sddmm + t_spmm,
+            "fused {t_fused} !<= two-stage {}",
+            t_sddmm + t_spmm
+        );
     }
 
     #[test]

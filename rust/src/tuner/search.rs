@@ -228,6 +228,67 @@ pub fn tune_sddmm_pruned(
     Ok(pruned_outcome(outcome, candidates.len(), &short))
 }
 
+/// Sweep fused SDDMM→SpMM plans ([`Algo::FusedSddmmSpmm`]) on
+/// `(a, x1, x2, b)`; returns all results sorted fastest-first. Serial,
+/// like every background-refinement sweep.
+pub fn tune_fused_ranked(
+    machine: &Machine,
+    candidates: &[Algo],
+    a: &Csr,
+    x1: &[f32],
+    x2: &[f32],
+    b: &[f32],
+) -> Result<TuneOutcome> {
+    anyhow::ensure!(!candidates.is_empty(), "no candidates supplied");
+    let mut ranked = Vec::with_capacity(candidates.len());
+    for alg in candidates {
+        let res = alg.run_fused(machine, a, x1, x2, b)?;
+        ranked.push((*alg, res.time_s, res.gflops));
+    }
+    ranked.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    Ok(TuneOutcome { ranked })
+}
+
+/// The fastest fused SDDMM→SpMM plan and its simulated time.
+pub fn tune_fused(
+    machine: &Machine,
+    candidates: &[Algo],
+    a: &Csr,
+    x1: &[f32],
+    x2: &[f32],
+    b: &[f32],
+) -> Result<(Algo, f64)> {
+    tune_fused_ranked(machine, candidates, a, x1, x2, b)?
+        .best()
+        .context("empty fused sweep")
+}
+
+/// Model-pruned fused sweep (serial, like [`tune_fused_ranked`]).
+pub fn tune_fused_pruned(
+    machine: &Machine,
+    candidates: &[Algo],
+    a: &Csr,
+    x1: &[f32],
+    x2: &[f32],
+    b: &[f32],
+    top_k: usize,
+) -> Result<PrunedOutcome> {
+    anyhow::ensure!(!candidates.is_empty(), "no candidates supplied");
+    let stats = MatrixStats::of(a);
+    let (j, n) = candidates
+        .iter()
+        .find_map(|c| match c {
+            Algo::FusedSddmmSpmm(cfg) => Some((cfg.j_dim, cfg.n)),
+            _ => None,
+        })
+        .unwrap_or((1, 1));
+    let model = CostModel::new(machine);
+    let short =
+        shortlist_for(&model, candidates, &Workload::Fused { stats: &stats, j, n }, top_k);
+    let outcome = tune_fused_ranked(machine, &short, a, x1, x2, b)?;
+    Ok(pruned_outcome(outcome, candidates.len(), &short))
+}
+
 /// Sweep MTTKRP plans ([`Algo::Mttkrp`]) on `(a, x1, x2)`; returns all
 /// results sorted fastest-first. Serial for the same reason as
 /// [`tune_sddmm_ranked`]: it runs on the coordinator's single
@@ -469,6 +530,36 @@ mod tests {
         for w in out.ranked.windows(2) {
             assert!(w[0].1 <= w[1].1);
         }
+    }
+
+    #[test]
+    fn tune_fused_ranks_the_attention_grid() {
+        use crate::tuner::space::fused_candidates;
+        let a = erdos_renyi(96, 96, 700, 5).to_csr();
+        let (j, n) = (16usize, 4usize);
+        let mut rng = SplitMix64::new(4);
+        let x1: Vec<f32> = (0..a.rows * j).map(|_| rng.value()).collect();
+        let x2: Vec<f32> = (0..j * a.cols).map(|_| rng.value()).collect();
+        let b: Vec<f32> = (0..a.cols * n).map(|_| rng.value()).collect();
+        let m = Machine::new(HwProfile::rtx3090());
+        let cands = fused_candidates(j as u32, n as u32);
+        let (best, t) = tune_fused(&m, &cands, &a, &x1, &x2, &b).unwrap();
+        let Algo::FusedSddmmSpmm(cfg) = best else {
+            panic!("winner {} not a fused plan", best.name())
+        };
+        cfg.validate().unwrap();
+        assert!(t > 0.0);
+        let out = tune_fused_ranked(&m, &cands, &a, &x1, &x2, &b).unwrap();
+        assert_eq!(out.ranked.len(), cands.len());
+        for w in out.ranked.windows(2) {
+            assert!(w[0].1 <= w[1].1);
+        }
+        // the pruned path survives with the same vocabulary
+        let pf = tune_fused_pruned(&m, &cands, &a, &x1, &x2, &b, 4).unwrap();
+        assert_eq!(pf.grid, cands.len());
+        assert!(pf.survivors <= 4 && pf.best().unwrap().0.is_fused());
+        // the pruned winner can never beat the exhaustive winner
+        assert!(pf.best().unwrap().1 >= t - 1e-18);
     }
 
     #[test]

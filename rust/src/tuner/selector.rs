@@ -11,6 +11,7 @@
 use anyhow::Context;
 
 use crate::algos::catalog::{c_values, Algo};
+use crate::algos::fused::FusedConfig;
 use crate::algos::mttkrp::{MttkrpConfig, TtmConfig};
 use crate::algos::sddmm::SddmmConfig;
 use crate::sim::Machine;
@@ -212,6 +213,39 @@ impl Selector {
         Algo::Sddmm(SddmmConfig::new(j_dim, g, r_cap.min(g)))
     }
 
+    /// Pick a fused SDDMM→SpMM plan from the matrix statistics. The
+    /// consumer's launch axes choose exactly like SpMM — widest legal
+    /// coarsening `c` of the output width, reduction width `r` by the
+    /// short-row rule capped at the nnz range a block's lanes own — while
+    /// the producer's dot length `j_dim` is serial per lane: it adds work
+    /// but no tuning axis. `None` when no coarsening satisfies the launch
+    /// divisibility for `n`; callers fall back to the two-stage pipeline.
+    pub fn select_fused(&self, stats: &MatrixStats, j_dim: u32, n: u32) -> Option<Algo> {
+        let c = *c_values(n).last()?;
+        let mut cfg = FusedConfig::new(j_dim, n, c, 2);
+        cfg.r = self.coo3_r(stats.row_degree_mean, cfg.npb());
+        cfg.validate().ok()?;
+        Some(Algo::FusedSddmmSpmm(cfg))
+    }
+
+    /// Fused analogue of [`Selector::select_model`]: model-argmin over the
+    /// fused grid, tree fallback when the grid is empty. The `None`
+    /// contract matches [`Selector::select_fused`] — no legal launch
+    /// shape means the serving layer runs the two stages separately.
+    pub fn select_fused_model(
+        &self,
+        model: &CostModel,
+        stats: &MatrixStats,
+        j_dim: u32,
+        n: u32,
+    ) -> Option<Algo> {
+        let grid = super::space::fused_candidates(j_dim, n);
+        if grid.is_empty() {
+            return self.select_fused(stats, j_dim, n);
+        }
+        Some(model.shortlist(&grid, &Workload::Fused { stats, j: j_dim, n }, 1)[0])
+    }
+
     /// Pick an MTTKRP plan from the tensor's segment dynamics: the widest
     /// coarsening that keeps the launch shape legal, reduction width by
     /// the mean segment length (short segments — few non-zeros per output
@@ -402,6 +436,35 @@ mod tests {
         // widths with no legal coarsening are declined, not mis-served
         assert!(s.select_mttkrp(&dense_rows, 20).is_none());
         assert!(s.select_ttm(&dense_rows, 20).is_none());
+    }
+
+    #[test]
+    fn fused_selection_tracks_row_dynamics_and_width() {
+        let machine = Machine::new(HwProfile::rtx3090());
+        let model = CostModel::new(&machine);
+        let s = Selector::default();
+        let short = erdos_renyi(512, 512, 1024, 3).to_csr(); // mean degree 2
+        let long = crate::sparse::banded(512, 65, 2).to_csr(); // mean degree 65
+        let (short_stats, long_stats) = (MatrixStats::of(&short), MatrixStats::of(&long));
+        let Some(Algo::FusedSddmmSpmm(cfg)) = s.select_fused(&short_stats, 16, 4) else {
+            panic!("expected a fused plan")
+        };
+        cfg.validate().unwrap();
+        assert_eq!((cfg.j_dim, cfg.n, cfg.r), (16, 4, 4), "short rows get the narrow reduction");
+        let Some(Algo::FusedSddmmSpmm(cfg)) = s.select_fused(&long_stats, 16, 4) else {
+            panic!("expected a fused plan")
+        };
+        assert_eq!(cfg.r, 32, "long rows get the wide reduction");
+        // model path stays in the fused vocabulary and validates
+        let Some(Algo::FusedSddmmSpmm(cfg)) = s.select_fused_model(&model, &short_stats, 16, 4)
+        else {
+            panic!("expected a fused plan from the model path")
+        };
+        cfg.validate().unwrap();
+        assert_eq!((cfg.j_dim, cfg.n), (16, 4));
+        // widths with no legal coarsening are declined on both paths
+        assert!(s.select_fused(&short_stats, 16, 20).is_none());
+        assert!(s.select_fused_model(&model, &short_stats, 16, 20).is_none());
     }
 
     #[test]

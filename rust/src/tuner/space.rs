@@ -6,6 +6,7 @@
 
 use crate::algos::catalog::{c_values, Algo};
 use crate::algos::dgsparse::DgConfig;
+use crate::algos::fused::FusedConfig;
 use crate::algos::mttkrp::{MttkrpConfig, TtmConfig};
 use crate::algos::sddmm::SddmmConfig;
 
@@ -103,6 +104,24 @@ pub fn sddmm_candidates(j_dim: u32) -> Vec<Algo> {
         for r in [2u32, 4, 8, 16, 32] {
             if r <= g {
                 out.push(Algo::Sddmm(SddmmConfig::new(j_dim, g, r)));
+            }
+        }
+    }
+    out
+}
+
+/// Fused SDDMM→SpMM candidate grid: the consumer's launch axes
+/// (coarsening `c` over the output width `n` × segment-reduction width
+/// `r`) — the producer's dot is serial per lane, so `j_dim` adds work but
+/// no tuning axis. Empty when no coarsening satisfies the launch
+/// divisibility for `n` — callers fall back to the two-stage pipeline.
+pub fn fused_candidates(j_dim: u32, n: u32) -> Vec<Algo> {
+    let mut out = Vec::new();
+    for c in c_values(n) {
+        for r in [2u32, 4, 8, 16, 32] {
+            let cfg = FusedConfig::new(j_dim, n, c, r);
+            if cfg.validate().is_ok() {
+                out.push(Algo::FusedSddmmSpmm(cfg));
             }
         }
     }
@@ -260,5 +279,25 @@ mod tests {
         // grid is empty and the serving layer routes to the CPU
         assert!(mttkrp_candidates(20).is_empty());
         assert!(ttm_candidates(20).is_empty());
+    }
+
+    #[test]
+    fn fused_grid_valid_and_keys_on_the_output_width() {
+        for n in [1u32, 4, 32] {
+            let cands = fused_candidates(16, n);
+            assert!(!cands.is_empty(), "no fused candidates for N={n}");
+            for a in &cands {
+                let Algo::FusedSddmmSpmm(cfg) = a else {
+                    panic!("{} not a fused plan", a.name())
+                };
+                cfg.validate().unwrap();
+                assert_eq!((cfg.j_dim, cfg.n), (16, n));
+            }
+        }
+        // the dot length adds work, not axes: same grid size either way
+        assert_eq!(fused_candidates(8, 4).len(), fused_candidates(64, 4).len());
+        // N = 20: no coarsening divides the block — empty grid, two-stage
+        // fallback
+        assert!(fused_candidates(16, 20).is_empty());
     }
 }

@@ -11,7 +11,8 @@
 use std::path::PathBuf;
 
 use sgap::bench_util::{
-    run_spmm_bench, run_tensor_bench, validate_bench_json, BENCH_SCHEMA_VERSION,
+    fused_suite, run_spmm_bench, run_tensor_bench, skew_suite, validate_bench_json,
+    BENCH_SCHEMA_VERSION,
 };
 use sgap::sim::{HwProfile, Machine};
 use sgap::tuner::DEFAULT_TOP_K;
@@ -72,8 +73,12 @@ fn committed_reports_cover_the_quick_suites() {
             d.name
         );
     }
-    for bench in ["\"families\"", "\"dgsparse\""] {
+    for bench in ["\"families\"", "\"dgsparse\"", "\"skew\"", "\"fused\""] {
         assert!(spmm.contains(bench), "missing {bench} rows");
+    }
+    // every fused-suite matrix has its fused row committed
+    for d in fused_suite() {
+        assert!(spmm.contains(&format!("\"{}\"", d.name)), "{} missing a fused row", d.name);
     }
     let tensor = std::fs::read_to_string(committed("BENCH_tensor.json")).unwrap();
     for bench in ["\"mttkrp\"", "\"ttm\""] {
@@ -85,8 +90,12 @@ fn committed_reports_cover_the_quick_suites() {
 fn live_quick_bench_round_trips_through_the_schema_gate() {
     let machine = Machine::new(HwProfile::rtx3090());
     let report = run_spmm_bench(&machine, true, DEFAULT_TOP_K).unwrap();
-    // two tables per quick-suite matrix
-    assert_eq!(report.rows.len(), 2 * sgap::sparse::dataset::mini_suite().len());
+    // two tables per quick-suite matrix, plus the analytic skew and
+    // fused tables (emitted in quick mode too)
+    assert_eq!(
+        report.rows.len(),
+        2 * sgap::sparse::dataset::mini_suite().len() + skew_suite().len() + fused_suite().len()
+    );
     let json = report.to_json();
     validate_bench_json(&json, "spmm").unwrap();
     assert!(json.contains(&format!("\"schema_version\": {BENCH_SCHEMA_VERSION}")));
@@ -106,6 +115,23 @@ fn live_quick_bench_round_trips_through_the_schema_gate() {
             1.0 / row.speedup_vs_baseline
         );
     }
+    // the fused table's own invariants: one row per fused-suite matrix,
+    // fusion never prices above the two-stage pipeline, and the
+    // footprint-amortization point clears the 1.5x headline
+    let fused: Vec<_> = report.rows.iter().filter(|r| r.bench == "fused").collect();
+    assert_eq!(fused.len(), fused_suite().len());
+    for row in &fused {
+        assert!(
+            row.speedup_vs_baseline >= 1.0,
+            "{}: fused priced above the two-stage pipeline",
+            row.matrix
+        );
+        assert!(row.baseline.contains(" + "), "{}: baseline is not a pipeline", row.matrix);
+    }
+    assert!(
+        fused.iter().any(|r| r.speedup_vs_baseline >= 1.5),
+        "no fused row at >= 1.5x over the two-stage pipeline"
+    );
 
     let tensor = run_tensor_bench(&machine, true, DEFAULT_TOP_K).unwrap();
     validate_bench_json(&tensor.to_json(), "tensor").unwrap();

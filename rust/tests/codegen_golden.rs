@@ -9,9 +9,9 @@
 
 use sgap::compiler::codegen_cuda::{emit_kernel, macro_header};
 use sgap::compiler::schedule::{
-    DgConfig, MttkrpConfig, Schedule, SddmmConfig, SpmmConfig, TtmConfig,
+    DgConfig, FusedConfig, MttkrpConfig, Schedule, SddmmConfig, SpmmConfig, TtmConfig,
 };
-use sgap::compiler::{compile, TensorAlgebra};
+use sgap::compiler::{compile, flatten_fused, FusedAlgebra, TensorAlgebra};
 
 fn check_golden(name: &str, got: &str) {
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden").join(name);
@@ -131,6 +131,31 @@ fn ttm_group_golden() {
     assert!(src.contains("segReduceGroup<float,8>(Y_vals, out, val);"), "{src}");
     assert!(!src.contains("X2_vals") && !src.contains("f2_idx"), "{src}");
     check_golden("ttm_c4_r8.cu", &src);
+}
+
+/// Fused SDDMM→SpMM `{<1 nnz, 4 col>, 16}` — compiled through the front
+/// door from the flattened producer→consumer pair. The producer's dot
+/// lives in the register `tlaneY` and is consumed by the same lane's
+/// segment-group reduction: exactly ONE `pos/crd` traversal (one binary
+/// search) and no `Y_vals` intermediate anywhere in the generated text.
+#[test]
+fn fused_sddmm_spmm_golden() {
+    let pair = FusedAlgebra::sddmm_spmm();
+    let algebra = flatten_fused(&pair).unwrap();
+    let sched = Schedule::fused_sddmm_spmm(FusedConfig::new(32, 4, 4, 16));
+    let kernel = compile(&algebra, &sched).unwrap();
+    let src = emit_kernel(&kernel);
+    assert!(src.contains("__global__ void fused_sddmm_spmm_c4_r16"), "{src}");
+    assert!(src.contains("float tlaneY = 0.0f;"), "in-register producer value missing:\n{src}");
+    assert!(src.contains("segReduceGroup<float,16>(C_vals, kC, val);"), "{src}");
+    assert!(!src.contains("Y_vals"), "fusion must not materialize the SDDMM output:\n{src}");
+    assert_eq!(
+        src.matches("taco_binarySearchBefore").count(),
+        1,
+        "the sparse operand must be traversed exactly once:\n{src}"
+    );
+    assert!(!src.contains("atomicAdd(&"), "segment reduction must not use plain atomics");
+    check_golden("fused_sddmm_spmm_c4_r16.cu", &src);
 }
 
 /// dgSPARSE's RB+PR point `<8, 256, 8, 1/2>` (a paper best-static shape)

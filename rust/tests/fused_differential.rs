@@ -1,0 +1,126 @@
+//! Differential property tests for the fused SDDMM→SpMM kernel: every
+//! legal fused launch shape must match the *materialized two-stage
+//! oracle* (`sddmm_serial` into `spmm_serial`, i.e. `fused_serial`)
+//! within 5e-4 — fusion is a pure scheduling transform and must never
+//! change the computed values.
+//!
+//! Covered: the matrix families the selector distinguishes (uniform ER,
+//! power-law skew, banded, empty-row corners) × (j, n) width pairs
+//! bracketing the grouped-reduction and coarsening grids, plus the
+//! plan-cache path (a cached fused plan reproduces fresh selection
+//! bit-for-bit).
+
+use sgap::algos::cpu_ref::max_rel_err;
+use sgap::algos::fused::fused_serial;
+use sgap::coordinator::{PlanCache, ShapeKey};
+use sgap::sim::{HwProfile, Machine};
+use sgap::sparse::{banded, erdos_renyi, power_law, Coo, Csr, MatrixStats, SplitMix64};
+use sgap::tuner::{fused_candidates, Selector};
+
+const TOL: f32 = 5e-4;
+
+/// (j, n) pairs: j = 20 exercises the non-power-of-two dot tail, n = 1
+/// the narrowest coarsening, n = 16 the widest committed fused grid.
+const WIDTHS: [(usize, usize); 3] = [(1, 4), (20, 16), (32, 1)];
+
+/// One matrix per family the selector distinguishes, plus the empty-row
+/// corners that stress zero extension and the hoisted row-advance scan.
+fn families(seed: u64) -> Vec<(&'static str, Csr)> {
+    // hub: one full row, everything else empty except a tail entry
+    let mut hub: Vec<(u32, u32, f32)> = (0..64u32).map(|c| (0u32, c, 1.0 - c as f32)).collect();
+    hub.push((63, 0, 2.5));
+    // comb: only every fourth row populated (interior + trailing empties)
+    let comb: Vec<(u32, u32, f32)> =
+        (0..96u32).step_by(4).flat_map(|r| [(r, r % 37, 1.5), (r, 40 + r % 23, -0.5)]).collect();
+    vec![
+        ("erdos_renyi", erdos_renyi(96, 80, 900, seed).to_csr()),
+        ("power_law", power_law(96, 96, 1100, 1.8, seed).to_csr()),
+        ("banded", banded(96, 7, seed).to_csr()),
+        ("corner_hub", Coo::new(64, 64, hub).to_csr()),
+        ("corner_empty_rows", Coo::new(96, 64, comb).to_csr()),
+    ]
+}
+
+/// Dense operand triple (X1 [rows×j], X2 [j×cols], B [cols×n]).
+fn operands(a: &Csr, j: usize, n: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut rng = SplitMix64::new(seed);
+    let x1 = (0..a.rows * j).map(|_| rng.value()).collect();
+    let x2 = (0..j * a.cols).map(|_| rng.value()).collect();
+    let b = (0..a.cols * n).map(|_| rng.value()).collect();
+    (x1, x2, b)
+}
+
+/// Every legal fused launch shape matches the materialized two-stage
+/// oracle across the family × width grid.
+#[test]
+fn every_fused_candidate_matches_two_stage_oracle() {
+    let machine = Machine::new(HwProfile::rtx3090());
+    for &(j, n) in &WIDTHS {
+        for (fam, a) in families(0xF05E ^ (j * 37 + n) as u64) {
+            let (x1, x2, b) = operands(&a, j, n, 11 + (j + n) as u64);
+            let want = fused_serial(&a, &x1, &x2, &b, j, n);
+            let cands = fused_candidates(j as u32, n as u32);
+            assert!(!cands.is_empty(), "no fused candidates for j={j} n={n}");
+            for alg in cands {
+                assert!(alg.is_fused(), "{}", alg.name());
+                let res = alg.run_fused(&machine, &a, &x1, &x2, &b).unwrap_or_else(|e| {
+                    panic!("{fam} j={j} n={n}: {} failed: {e}", alg.name())
+                });
+                let err = max_rel_err(&res.run.c, &want);
+                assert!(
+                    err < TOL,
+                    "{fam} j={j} n={n}: {} err {err} (matrix {}x{} nnz {})",
+                    alg.name(),
+                    a.rows,
+                    a.cols,
+                    a.nnz()
+                );
+            }
+        }
+    }
+}
+
+/// The fused plan-cache path is result-identical to fresh selection, and
+/// fused keys never collide into the SpMM scenario for the same matrix
+/// and packed width.
+#[test]
+fn fused_plan_cache_path_equals_fresh_selection() {
+    let machine = Machine::new(HwProfile::rtx3090());
+    let selector = Selector::default();
+    let cache = PlanCache::new(64);
+    for &(j, n) in &WIDTHS {
+        for (fam, a) in families(0xFCA5 ^ (j * 37 + n) as u64) {
+            let stats = MatrixStats::of(&a);
+            let packed = ((j as u32) << 16) | n as u32;
+            let key = ShapeKey::fused(&stats, packed);
+            assert_ne!(
+                key,
+                ShapeKey::spmm(&stats, packed),
+                "{fam} j={j} n={n}: scenario must separate the keys"
+            );
+            let fresh = selector
+                .select_fused(&stats, j as u32, n as u32)
+                .unwrap_or_else(|| panic!("{fam} j={j} n={n}: no fused plan"));
+            assert!(fresh.is_fused(), "{fam} j={j} n={n}: selector returned {}", fresh.name());
+            let (plan, hit) = cache.get_or_insert_with(key, || fresh);
+            assert!(!hit, "{fam} j={j} n={n}: first sight must miss");
+            let (plan2, hit2) = cache.get_or_insert_with(key, || unreachable!("hit expected"));
+            assert!(hit2 && plan2 == plan, "{fam} j={j} n={n}: repeat must hit the same plan");
+            assert_eq!(plan2.kind, fresh, "cached plan must be the selector's choice");
+
+            let (x1, x2, b) = operands(&a, j, n, 29 + (j + n) as u64);
+            let via_cache = plan2.kind.run_fused(&machine, &a, &x1, &x2, &b).unwrap();
+            let via_fresh = fresh.run_fused(&machine, &a, &x1, &x2, &b).unwrap();
+            assert_eq!(
+                via_cache.run.c, via_fresh.run.c,
+                "{fam} j={j} n={n}: cache path diverged from fresh selection"
+            );
+            let want = fused_serial(&a, &x1, &x2, &b, j, n);
+            let err = max_rel_err(&via_cache.run.c, &want);
+            assert!(err < TOL, "{fam} j={j} n={n}: selected {} err {err}", fresh.name());
+        }
+    }
+    let s = cache.stats();
+    assert_eq!(s.misses as usize, WIDTHS.len() * 5);
+    assert_eq!(s.hits, s.misses);
+}

@@ -1,0 +1,37 @@
+__global__ void fused_sddmm_spmm_c4_r16(int* __restrict__ i_blockStarts, int* __restrict__ A2_pos, int* __restrict__ A2_crd, float* __restrict__ A_vals, float* __restrict__ X1_vals, float* __restrict__ X2_vals, float* __restrict__ B_vals, float* __restrict__ C_vals, int A1_dimension, int A2_dimension, int B2_dimension, int J_dimension) {
+  // fused sddmm→spmm {<1 nnz, 4 col>, 16} — in-register dot, one pos/crd pass
+  int fpos1 = (threadIdx.x % 256);
+  int ko = (threadIdx.x / 256);
+  int fposA = ((blockIdx.x * 256) + fpos1);
+  int pA2_begin = i_blockStarts[blockIdx.x];
+  int pA2_end = i_blockStarts[(blockIdx.x + 1)];
+  int i_pos = taco_binarySearchBefore(A2_pos, pA2_begin, pA2_end, fposA);
+  int i = i_pos;
+  float tlaneY = 0.0f;
+  if ((fposA < A2_pos[A1_dimension])) {
+    while ((fposA == A2_pos[(i_pos + 1)])) {
+      i_pos = (i_pos + 1);
+      i = i_pos;
+    }
+    int f = A2_crd[fposA];
+    int l = 0;
+    while ((l < J_dimension)) {
+      tlaneY = (tlaneY + (X1_vals[((i * J_dimension) + l)] * X2_vals[((l * A2_dimension) + f)]));
+      l = (l + 1);
+    }
+    tlaneY = (tlaneY * A_vals[fposA]);
+  }
+  for (int ki = 0; ki < 4; ki += 1) {
+    int k = ((ko * 4) + ki);
+    float val = 0.0f;
+    if ((fposA >= A2_pos[A1_dimension])) {
+      val = 0.0f;
+    } else {
+      int f = A2_crd[fposA];
+      int kB = ((f * B2_dimension) + k);
+      val = (tlaneY * B_vals[kB]);
+    }
+    int kC = ((i * B2_dimension) + k);
+    segReduceGroup<float,16>(C_vals, kC, val);
+  }
+}

@@ -16,6 +16,7 @@ use crate::algos::mttkrp::{MttkrpConfig, TtmConfig};
 use crate::runtime::json::Json;
 use crate::sim::Machine;
 use crate::sparse::{dataset, gen, Coo3, DatasetSpec, MatrixStats, SplitMix64};
+use crate::tuner::calibrate::{self, Calibration, Sample, WorkloadSpec};
 use crate::tuner::{self, CostModel, PrunedOutcome, Selector, Workload};
 
 /// Geometric mean (the paper's aggregation for speedups, Table 4 note 1).
@@ -583,6 +584,170 @@ pub fn run_tensor_bench(machine: &Machine, quick: bool, top_k: usize) -> Result<
     })
 }
 
+// ---------------------------------------------------------------------------
+// offline profiling (`sgap profile` → CALIBRATION.json)
+// ---------------------------------------------------------------------------
+
+/// Rank fidelity on one profiled matrix: Spearman correlation between the
+/// analytic model's candidate ranking and the simulator's, before and
+/// after the fit.
+#[derive(Debug, Clone)]
+pub struct ProfileRow {
+    pub matrix: String,
+    /// Candidates both priced and measured on this matrix.
+    pub samples: usize,
+    pub spearman_before: f64,
+    pub spearman_after: f64,
+}
+
+/// What `sgap profile` produces: the fitted [`Calibration`] plus the
+/// per-matrix before/after rank fidelity it was judged on.
+#[derive(Debug, Clone)]
+pub struct ProfileReport {
+    pub calibration: Calibration,
+    pub rows: Vec<ProfileRow>,
+    pub quick: bool,
+}
+
+impl ProfileReport {
+    pub fn mean_spearman_before(&self) -> f64 {
+        mean(self.rows.iter().map(|r| r.spearman_before))
+    }
+
+    pub fn mean_spearman_after(&self) -> f64 {
+        mean(self.rows.iter().map(|r| r.spearman_after))
+    }
+}
+
+fn mean(xs: impl Iterator<Item = f64>) -> f64 {
+    let v: Vec<f64> = xs.collect();
+    if v.is_empty() {
+        return 0.0;
+    }
+    v.iter().sum::<f64>() / v.len() as f64
+}
+
+/// The offline profile→fit pipeline behind `sgap profile`: sweep the
+/// SpMM candidate grid over the bench suite on the warp simulator (the
+/// stand-in for hardware timers), fit `CostParams` +
+/// `launch_overhead_s` to the measurements, and report how the analytic
+/// model's candidate ranking correlates with the simulator's before vs
+/// after the fit. The returned calibration is what `sgap serve --calib`
+/// warm-starts from.
+pub fn run_profile(machine: &Machine, quick: bool) -> Result<ProfileReport> {
+    let n = 4u32;
+    let suite = if quick { dataset::mini_suite() } else { bench_suite() };
+    let mut cands = tuner::taco_candidates(n);
+    cands.extend(tuner::sgap_candidates(n));
+
+    // measure every candidate once per matrix; the same sweep feeds the
+    // fitter (as samples) and the fidelity report (as ground-truth ranks)
+    let mut measured: Vec<(String, MatrixStats, Vec<(crate::algos::catalog::Algo, f64)>)> =
+        Vec::new();
+    let mut samples = Vec::new();
+    for d in &suite {
+        let a = d.matrix.to_csr();
+        let b = random_b(a.cols, n as usize, 17);
+        let out = tuner::tune(machine, &cands, &a, &b, n)?;
+        let stats = MatrixStats::of(&a);
+        for (alg, t, _) in &out.ranked {
+            samples.push(Sample::new(*alg, WorkloadSpec::Spmm { stats: stats.clone(), n }, *t));
+        }
+        let times = out.ranked.iter().map(|(a, t, _)| (*a, *t)).collect();
+        measured.push((d.name.clone(), stats, times));
+    }
+
+    let calibration = calibrate::fit(machine, &samples);
+
+    let before = CostModel::new(machine);
+    let mut fitted_machine = machine.clone();
+    calibration.apply(&mut fitted_machine);
+    let after = CostModel::new(&fitted_machine);
+    let mut rows = Vec::new();
+    for (name, stats, times) in &measured {
+        let wl = Workload::Spmm { stats, n };
+        let (mut pb, mut pa, mut ms) = (Vec::new(), Vec::new(), Vec::new());
+        for (alg, t) in times {
+            let (Some(b), Some(f)) = (before.price(alg, &wl), after.price(alg, &wl)) else {
+                continue;
+            };
+            pb.push(b);
+            pa.push(f);
+            ms.push(*t);
+        }
+        rows.push(ProfileRow {
+            matrix: name.clone(),
+            samples: ms.len(),
+            spearman_before: calibrate::spearman(&pb, &ms),
+            spearman_after: calibrate::spearman(&pa, &ms),
+        });
+    }
+    Ok(ProfileReport { calibration, rows, quick })
+}
+
+/// Validate a `CALIBRATION.json` document: exact key sets, version, and
+/// the fit invariants (positive params, non-negative overhead, fitted
+/// loss no worse than the starting loss, at least one sample). The drift
+/// gate for the committed artifact, mirroring [`validate_bench_json`].
+pub fn validate_calibration_json(src: &str) -> Result<(), String> {
+    let doc = Json::parse(src).map_err(|e| e.to_string())?;
+    let obj = doc.as_obj().ok_or("top level must be an object")?;
+    let keys: Vec<&str> = obj.keys().map(String::as_str).collect();
+    let mut want = vec![
+        "schema_version",
+        "hw",
+        "samples",
+        "loss_before",
+        "loss_after",
+        "launch_overhead_s",
+        "params",
+    ];
+    want.sort_unstable();
+    if keys != want {
+        return Err(format!("top-level keys {keys:?} != schema {want:?}"));
+    }
+    let ver = doc.get("schema_version").and_then(Json::as_f64).ok_or("schema_version")?;
+    if ver as u64 != calibrate::CALIBRATION_SCHEMA_VERSION {
+        return Err(format!(
+            "schema_version {ver} != {}",
+            calibrate::CALIBRATION_SCHEMA_VERSION
+        ));
+    }
+    doc.get("hw").and_then(Json::as_str).ok_or("hw must be a string")?;
+    let samples = doc.get("samples").and_then(Json::as_f64).ok_or("samples")?;
+    if samples < 1.0 {
+        return Err("a committed calibration must have fitted >= 1 sample".into());
+    }
+    let lb = doc.get("loss_before").and_then(Json::as_f64).ok_or("loss_before")?;
+    let la = doc.get("loss_after").and_then(Json::as_f64).ok_or("loss_after")?;
+    if !(lb.is_finite() && la.is_finite() && lb >= 0.0 && la >= 0.0) {
+        return Err(format!("losses must be finite and non-negative ({lb}, {la})"));
+    }
+    if la > lb + 1e-12 {
+        return Err(format!("loss_after {la} worse than loss_before {lb}"));
+    }
+    let overhead =
+        doc.get("launch_overhead_s").and_then(Json::as_f64).ok_or("launch_overhead_s")?;
+    if !(overhead.is_finite() && overhead >= 0.0) {
+        return Err(format!("launch_overhead_s must be >= 0 ({overhead})"));
+    }
+    let params = doc.get("params").ok_or("params")?;
+    let pobj = params.as_obj().ok_or("params must be an object")?;
+    let pkeys: Vec<&str> = pobj.keys().map(String::as_str).collect();
+    let mut pwant: Vec<&str> = crate::sim::CostParams::NAMES.to_vec();
+    pwant.sort_unstable();
+    if pkeys != pwant {
+        return Err(format!("param keys {pkeys:?} != schema {pwant:?}"));
+    }
+    for name in crate::sim::CostParams::NAMES {
+        let v = params.get(name).and_then(Json::as_f64).ok_or(name)?;
+        if !(v.is_finite() && v > 0.0) {
+            return Err(format!("param {name} must be a positive number ({v})"));
+        }
+    }
+    Ok(())
+}
+
 /// Fixed-width table printer.
 pub struct Table {
     pub headers: Vec<String>,
@@ -670,5 +835,42 @@ mod tests {
         let s = bench_suite();
         let fams: std::collections::HashSet<&str> = s.iter().map(|d| d.family).collect();
         assert!(fams.len() >= 4, "families: {fams:?}");
+    }
+
+    fn sample_calibration() -> Calibration {
+        let machine = Machine::new(crate::sim::HwProfile::rtx3090());
+        let mut c = Calibration::identity(&machine);
+        c.samples = 3;
+        c.loss_before = 0.5;
+        c.loss_after = 0.25;
+        c
+    }
+
+    #[test]
+    fn calibration_validator_accepts_a_fit_artifact() {
+        validate_calibration_json(&sample_calibration().to_json()).unwrap();
+    }
+
+    #[test]
+    fn calibration_validator_rejects_drift() {
+        // unfitted artifact (zero samples)
+        let machine = Machine::new(crate::sim::HwProfile::rtx3090());
+        let identity = Calibration::identity(&machine);
+        assert!(validate_calibration_json(&identity.to_json()).is_err());
+        // a fit that made the loss worse
+        let mut worse = sample_calibration();
+        worse.loss_after = worse.loss_before * 2.0;
+        assert!(validate_calibration_json(&worse.to_json()).is_err());
+        // schema-version drift
+        let mut old = sample_calibration();
+        old.version = 999;
+        assert!(validate_calibration_json(&old.to_json()).is_err());
+        // a param driven to zero
+        let mut zeroed = sample_calibration();
+        zeroed.params.alu = 0.0;
+        assert!(validate_calibration_json(&zeroed.to_json()).is_err());
+        // a dropped key
+        let src = sample_calibration().to_json().replace("  \"hw\": \"RTX 3090\",\n", "");
+        assert!(validate_calibration_json(&src).is_err());
     }
 }

@@ -1,0 +1,301 @@
+//! Online calibration: per-`OpKind` drift tracking over served latencies,
+//! refit on threshold, plan-cache invalidation.
+//!
+//! Every sim-served op yields a `(plan, stats, measured seconds)` triple
+//! plus the analytic model's predicted price. [`OnlineCalibrator`] keeps,
+//! per [`OpKind`], an exponentially-weighted moving average of the
+//! absolute log-ratio residual `|ln(measured / predicted)|` — a
+//! dimensionless "how wrong is the model, multiplicatively" gauge that is
+//! robust to the µs↔s scale spread across ops. When the worst per-op EWMA
+//! crosses [`CalibConfig::drift_threshold`] (and at least
+//! [`CalibConfig::min_samples`] observations arrived since the last fit),
+//! the calibrator refits `CostParams` + `launch_overhead_s` on its sample
+//! ring via [`tuner::calibrate::fit`], bumps its generation (executors
+//! rebuild their cached [`CostModel`](crate::tuner::CostModel)s lazily),
+//! and invalidates the [`PlanCache`] entries of every op kind it saw —
+//! stale selector/tuner picks re-select under the refit model on next
+//! sight. `Metrics::{calib_samples, calib_refits, calib_residual}` track
+//! the loop.
+//!
+//! [`tuner::calibrate::fit`]: crate::tuner::calibrate::fit
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::sim::Machine;
+use crate::tuner::calibrate::{fit, Calibration, Sample};
+
+use super::metrics::Metrics;
+use super::op::OpKind;
+use super::plan_cache::PlanCache;
+
+/// Online-calibration policy knobs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CalibConfig {
+    /// Master switch. Off by default: the sim executor then only serves,
+    /// never observes, and the coordinator behaves exactly as before the
+    /// calibration subsystem existed.
+    pub enabled: bool,
+    /// Refit when any per-op EWMA residual reaches this (compared with
+    /// `>=`, so `0.0` means "refit as soon as `min_samples` arrive" —
+    /// what the drift-injection test uses).
+    pub drift_threshold: f64,
+    /// Observations required between refits (thrash guard).
+    pub min_samples: usize,
+    /// EWMA smoothing factor in `(0, 1]`; the tracker starts at 0, so
+    /// after `k` samples of constant residual `r` it reads
+    /// `r·(1 − (1−α)^k)`.
+    pub alpha: f64,
+    /// Sample ring capacity (oldest observations fall off first).
+    pub capacity: usize,
+}
+
+impl Default for CalibConfig {
+    fn default() -> CalibConfig {
+        CalibConfig {
+            enabled: false,
+            drift_threshold: 0.25,
+            min_samples: 64,
+            alpha: 0.25,
+            capacity: 512,
+        }
+    }
+}
+
+#[derive(Debug)]
+struct CalibState {
+    ring: VecDeque<(OpKind, Sample)>,
+    /// Per-op EWMA residual, indexed like [`OpKind::ALL`].
+    ewma: [f64; OpKind::ALL.len()],
+    since_refit: usize,
+}
+
+/// Shared drift tracker + refitter. One per coordinator; executors hold
+/// it behind an `Arc` through their `ExecutorEnv`.
+#[derive(Debug)]
+pub struct OnlineCalibrator {
+    cfg: CalibConfig,
+    /// The hand-seeded baseline (hw + default params) fits start from
+    /// when no calibration is live.
+    base: Machine,
+    current: Mutex<Calibration>,
+    /// Bumped on every applied fit (including a warm start); executors
+    /// compare against their cached model's `calib_generation`.
+    generation: AtomicU64,
+    state: Mutex<CalibState>,
+}
+
+impl OnlineCalibrator {
+    /// `warm` is yesterday's fit (from `Calibration::load`); applying it
+    /// counts as generation 1 so freshly built executors pick it up.
+    pub fn new(base: Machine, warm: Option<Calibration>, cfg: CalibConfig) -> OnlineCalibrator {
+        let (current, generation) = match warm {
+            Some(c) => (c, 1),
+            None => (Calibration::identity(&base), 0),
+        };
+        OnlineCalibrator {
+            cfg,
+            base,
+            current: Mutex::new(current),
+            generation: AtomicU64::new(generation),
+            state: Mutex::new(CalibState {
+                ring: VecDeque::new(),
+                ewma: [0.0; OpKind::ALL.len()],
+                since_refit: 0,
+            }),
+        }
+    }
+
+    pub fn config(&self) -> CalibConfig {
+        self.cfg
+    }
+
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::Acquire)
+    }
+
+    /// The calibration currently applied (identity before any fit).
+    pub fn current(&self) -> Calibration {
+        self.current.lock().unwrap().clone()
+    }
+
+    /// The base machine with the current calibration applied — what
+    /// executors should simulate and price with.
+    pub fn machine(&self) -> Machine {
+        let mut m = self.base.clone();
+        self.current.lock().unwrap().apply(&mut m);
+        m
+    }
+
+    /// Worst per-op EWMA residual right now.
+    pub fn residual(&self) -> f64 {
+        let st = self.state.lock().unwrap();
+        st.ewma.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Feed one served op: `measured_s` from the executor, `predicted_s`
+    /// from the model that routed it. Returns `true` when this
+    /// observation tripped a refit (new constants live, affected
+    /// [`PlanCache`] scenarios dropped, metrics bumped). Non-finite or
+    /// non-positive times are ignored — a degenerate measurement must
+    /// not poison the tracker.
+    pub fn observe(
+        &self,
+        kind: OpKind,
+        sample: Sample,
+        predicted_s: f64,
+        metrics: &Metrics,
+        plan_cache: &PlanCache,
+    ) -> bool {
+        if !self.cfg.enabled {
+            return false;
+        }
+        let measured = sample.measured_s;
+        if !(measured.is_finite() && measured > 0.0 && predicted_s.is_finite() && predicted_s > 0.0)
+        {
+            return false;
+        }
+        let residual = (measured / predicted_s).ln().abs();
+
+        let mut st = self.state.lock().unwrap();
+        let slot = OpKind::ALL.iter().position(|k| *k == kind).expect("OpKind::ALL is total");
+        st.ewma[slot] = self.cfg.alpha * residual + (1.0 - self.cfg.alpha) * st.ewma[slot];
+        if st.ring.len() >= self.cfg.capacity.max(1) {
+            st.ring.pop_front();
+        }
+        st.ring.push_back((kind, sample));
+        st.since_refit += 1;
+        let worst = st.ewma.iter().cloned().fold(0.0, f64::max);
+        metrics.on_calib_sample(worst);
+
+        if worst < self.cfg.drift_threshold || st.since_refit < self.cfg.min_samples.max(1) {
+            return false;
+        }
+
+        // Refit on the ring, warm-starting from the current constants so
+        // successive fits refine rather than restart.
+        let machine = {
+            let mut m = self.base.clone();
+            self.current.lock().unwrap().apply(&mut m);
+            m
+        };
+        let samples: Vec<Sample> = st.ring.iter().map(|(_, s)| s.clone()).collect();
+        let fitted = fit(&machine, &samples);
+        if fitted.samples == 0 {
+            // nothing usable in the ring; don't burn the counters
+            return false;
+        }
+        let mut kinds: Vec<OpKind> = st.ring.iter().map(|(k, _)| *k).collect();
+        kinds.sort_by_key(|k| OpKind::ALL.iter().position(|a| a == k));
+        kinds.dedup();
+
+        *self.current.lock().unwrap() = fitted;
+        self.generation.fetch_add(1, Ordering::Release);
+        st.ewma = [0.0; OpKind::ALL.len()];
+        st.since_refit = 0;
+        drop(st);
+
+        for k in kinds {
+            plan_cache.invalidate_scenario(k);
+        }
+        metrics.on_calib_refit();
+        true
+    }
+}
+
+/// Convenience alias for the shared handle executors carry.
+pub type SharedCalibrator = Arc<OnlineCalibrator>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::catalog::Algo;
+    use crate::sim::HwProfile;
+    use crate::sparse::{erdos_renyi, MatrixStats};
+    use crate::tuner::calibrate::WorkloadSpec;
+
+    fn sample(measured: f64) -> Sample {
+        let a = erdos_renyi(64, 64, 400, 9).to_csr();
+        let stats = MatrixStats::of(&a);
+        Sample::new(
+            Algo::SgapNnzGroup { c: 4, r: 8 },
+            WorkloadSpec::Spmm { stats, n: 4 },
+            measured,
+        )
+    }
+
+    #[test]
+    fn ewma_crosses_the_threshold_at_the_closed_form_step() {
+        // constant ratio 1.5 → residual ln 1.5 ≈ 0.4055; with α = 0.25
+        // the EWMA reads 0.4055·(1 − 0.75^k): below 0.25 through k = 3,
+        // above at k = 4. min_samples = 1 isolates the threshold logic.
+        let cfg = CalibConfig {
+            enabled: true,
+            drift_threshold: 0.25,
+            min_samples: 1,
+            alpha: 0.25,
+            capacity: 16,
+        };
+        let machine = Machine::new(HwProfile::rtx3090());
+        let cal = OnlineCalibrator::new(machine, None, cfg);
+        let metrics = Metrics::new();
+        let cache = PlanCache::new(8);
+        let mut tripped_at = None;
+        for k in 1..=6 {
+            // predicted 1.0, measured 1.5 — model price of this sample's
+            // own workload doesn't matter for the tracker math
+            if cal.observe(OpKind::Spmm, sample(1.5e-6), 1.0e-6, &metrics, &cache) {
+                tripped_at = Some(k);
+                break;
+            }
+        }
+        assert_eq!(tripped_at, Some(4), "EWMA must cross 0.25 exactly at the 4th sample");
+        assert_eq!(metrics.snapshot().calib_refits, 1);
+        assert_eq!(metrics.snapshot().calib_samples, 4);
+        assert_eq!(cal.generation(), 1);
+        // the refit resets the tracker
+        assert_eq!(cal.residual(), 0.0);
+    }
+
+    #[test]
+    fn disabled_calibrator_observes_nothing() {
+        let machine = Machine::new(HwProfile::rtx3090());
+        let cal = OnlineCalibrator::new(machine, None, CalibConfig::default());
+        let metrics = Metrics::new();
+        let cache = PlanCache::new(8);
+        assert!(!cal.observe(OpKind::Spmm, sample(1.0e-6), 2.0e-6, &metrics, &cache));
+        assert_eq!(metrics.snapshot().calib_samples, 0);
+        assert_eq!(cal.generation(), 0);
+    }
+
+    #[test]
+    fn degenerate_measurements_are_ignored() {
+        let cfg = CalibConfig {
+            enabled: true,
+            min_samples: 1,
+            drift_threshold: 0.0,
+            ..CalibConfig::default()
+        };
+        let machine = Machine::new(HwProfile::rtx3090());
+        let cal = OnlineCalibrator::new(machine, None, cfg);
+        let metrics = Metrics::new();
+        let cache = PlanCache::new(8);
+        assert!(!cal.observe(OpKind::Spmm, sample(0.0), 1.0e-6, &metrics, &cache));
+        assert!(!cal.observe(OpKind::Spmm, sample(f64::NAN), 1.0e-6, &metrics, &cache));
+        assert!(!cal.observe(OpKind::Spmm, sample(1.0e-6), f64::INFINITY, &metrics, &cache));
+        assert_eq!(metrics.snapshot().calib_samples, 0);
+    }
+
+    #[test]
+    fn warm_start_counts_as_a_generation() {
+        let machine = Machine::new(HwProfile::rtx3090());
+        let mut warm = Calibration::identity(&machine);
+        warm.params.alu = 1.5;
+        let cal = OnlineCalibrator::new(machine.clone(), Some(warm), CalibConfig::default());
+        assert_eq!(cal.generation(), 1);
+        assert_eq!(cal.machine().params.alu, 1.5);
+        let cold = OnlineCalibrator::new(machine, None, CalibConfig::default());
+        assert_eq!(cold.generation(), 0);
+    }
+}

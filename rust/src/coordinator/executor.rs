@@ -29,8 +29,10 @@ use std::sync::Arc;
 
 use crate::runtime::{ArtifactKind, Runtime};
 use crate::sim::{HwProfile, Machine};
+use crate::tuner::calibrate::{Sample, WorkloadSpec};
 use crate::tuner::{CostModel, Selector};
 
+use super::calibrate::SharedCalibrator;
 use super::metrics::Metrics;
 use super::op::{Op, OpKind, SparseHandle};
 use super::plan_cache::{Plan, PlanCache, ShapeKey};
@@ -134,6 +136,10 @@ pub struct ExecutorEnv {
     pub(crate) metrics: Arc<Metrics>,
     pub(crate) artifacts_dir: Option<PathBuf>,
     pub(crate) tune_tx: Option<SyncSender<TuneTask>>,
+    /// The coordinator's online calibrator. Always present (the
+    /// coordinator builds one even when calibration is disabled, so warm
+    /// starts apply uniformly); `None` only in hand-built test envs.
+    pub(crate) calibrator: Option<SharedCalibrator>,
 }
 
 impl ExecutorEnv {
@@ -155,6 +161,10 @@ impl ExecutorEnv {
 
     pub fn artifacts_dir(&self) -> Option<&PathBuf> {
         self.artifacts_dir.as_ref()
+    }
+
+    pub fn calibrator(&self) -> Option<&SharedCalibrator> {
+        self.calibrator.as_ref()
     }
 
     /// Hand a shape to the background tuner (best-effort: a full refine
@@ -303,17 +313,91 @@ impl Executor for PjrtExecutor {
 /// Admission consults the cache — a miss runs the selector (the analytic
 /// model argmin when configured) and enqueues a background refinement; a
 /// hit reuses the cached plan at zero selection cost.
+///
+/// This executor is also the calibration loop's sensor: every simulated
+/// run hands its measured time, the plan, and the op's cached stats to
+/// the coordinator's [`OnlineCalibrator`](super::OnlineCalibrator), and
+/// the cached machine/model are rebuilt whenever the calibrator's
+/// generation moves (a refit or warm start elsewhere).
 pub struct SimExecutor {
     machine: Machine,
     model: Option<CostModel>,
+    /// Calibrator generation `machine`/`model` were built from.
+    generation: u64,
     env: ExecutorEnv,
 }
 
 impl SimExecutor {
     pub fn new(env: &ExecutorEnv) -> SimExecutor {
-        let machine = Machine::new(env.hw);
-        let model = if env.model_select { Some(CostModel::new(&machine)) } else { None };
-        SimExecutor { machine, model, env: env.clone() }
+        let (machine, generation) = match &env.calibrator {
+            Some(c) => (c.machine(), c.generation()),
+            None => (Machine::new(env.hw), 0),
+        };
+        let model = make_model(env.model_select, &machine, generation);
+        SimExecutor { machine, model, generation, env: env.clone() }
+    }
+
+    /// Pick up a refit: rebuild the cached machine + model when the
+    /// calibrator's generation has moved since ours were built.
+    fn refresh(&mut self) {
+        if let Some(c) = &self.env.calibrator {
+            let g = c.generation();
+            if g != self.generation {
+                self.machine = c.machine();
+                self.model = make_model(self.env.model_select, &self.machine, g);
+                self.generation = g;
+            }
+        }
+    }
+
+    /// Feed one served op into the drift tracker (no-op without a
+    /// calibrator or with calibration disabled).
+    fn note_latency(&self, op: &Op, algo: crate::algos::catalog::Algo, measured_s: f64) {
+        let Some(cal) = &self.env.calibrator else { return };
+        if !cal.config().enabled {
+            return;
+        }
+        let Some(spec) = workload_spec(op) else { return };
+        let model = self.model.unwrap_or_else(|| CostModel::new(&self.machine));
+        let Some(predicted) = model.price(&algo, &spec.workload()) else { return };
+        cal.observe(
+            op.kind,
+            Sample::new(algo, spec, measured_s),
+            predicted,
+            &self.env.metrics,
+            &self.env.plan_cache,
+        );
+    }
+}
+
+fn make_model(model_select: bool, machine: &Machine, generation: u64) -> Option<CostModel> {
+    if !model_select {
+        return None;
+    }
+    let mut m = CostModel::new(machine);
+    m.calib_generation = generation;
+    Some(m)
+}
+
+/// The op's features as an owned [`WorkloadSpec`] — cloned from the
+/// handle's cached stats, so no fingerprint pass re-runs here.
+fn workload_spec(op: &Op) -> Option<WorkloadSpec> {
+    let w = op.width as u32;
+    match op.kind {
+        OpKind::Spmm => Some(WorkloadSpec::Spmm { stats: op.a.matrix_stats()?.clone(), n: w }),
+        OpKind::Sddmm => Some(WorkloadSpec::Sddmm { stats: op.a.matrix_stats()?.clone(), j: w }),
+        OpKind::FusedSddmmSpmm => {
+            let (j, n) = op.fused_widths();
+            Some(WorkloadSpec::Fused {
+                stats: op.a.matrix_stats()?.clone(),
+                j: j as u32,
+                n: n as u32,
+            })
+        }
+        OpKind::Mttkrp => {
+            Some(WorkloadSpec::Mttkrp { seg: *op.a.seg_stats(OpKind::Mttkrp)?, j: w })
+        }
+        OpKind::Ttm => Some(WorkloadSpec::Ttm { seg: *op.a.seg_stats(OpKind::Ttm)?, l: w }),
     }
 }
 
@@ -326,6 +410,7 @@ impl Executor for SimExecutor {
         if op.degenerate() {
             return None;
         }
+        self.refresh();
         let key = op.shape_key()?;
         // One generic cache consult for the whole quartet. The selector
         // closure only runs on a miss (repeats cost a hash lookup); a
@@ -382,7 +467,11 @@ impl Executor for SimExecutor {
                 algo.run_fused(&self.machine, a, &op.dense[0], &op.dense[1], &op.dense[2])
             }
         };
-        res.map(|r| r.run.c).map_err(|e| e.to_string())
+        let res = res.map_err(|e| e.to_string())?;
+        // Close the loop: the simulated time is this backend's measured
+        // latency — feed it to the drift tracker before answering.
+        self.note_latency(op, algo, res.time_s);
+        Ok(res.run.c)
     }
 }
 

@@ -42,9 +42,20 @@ pub struct Metrics {
     tune_model_agree: AtomicU64,
     /// Requests admitted with a per-band composite (hybrid) plan.
     banded: AtomicU64,
+    /// Measured latencies fed to the online calibrator.
+    calib_samples: AtomicU64,
+    /// Times the drift tracker crossed its threshold and refit
+    /// `CostParams` (invalidating the affected `PlanCache` entries).
+    calib_refits: AtomicU64,
+    /// Gauge: the worst per-`OpKind` EWMA |log(measured/predicted)|
+    /// residual last reported by the calibrator (f64 bits).
+    calib_residual: AtomicU64,
     /// Latencies in microseconds (bounded reservoir).
     latencies_us: Mutex<Vec<u64>>,
     backends: Mutex<BTreeMap<String, Hist>>,
+    /// Same histograms keyed by op label (`spmm`, `sddmm`, …) — the
+    /// per-`OpKind` p50/p99 the stress test asserts on.
+    ops: Mutex<BTreeMap<String, Hist>>,
 }
 
 /// Log2-bucketed latency histogram: bucket `i` counts samples with
@@ -94,6 +105,17 @@ pub struct BackendSnapshot {
     pub p99_us: u64,
 }
 
+/// Per-`OpKind` latency summary (same log2-bucket quantiles as
+/// [`BackendSnapshot`], keyed by `OpKind::label`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct OpSnapshot {
+    pub op: String,
+    pub count: u64,
+    pub mean_us: f64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+}
+
 /// Point-in-time view.
 #[derive(Debug, Clone, PartialEq)]
 pub struct MetricsSnapshot {
@@ -112,11 +134,19 @@ pub struct MetricsSnapshot {
     pub tune_model_agree: u64,
     /// Requests admitted with a per-band composite (hybrid) plan.
     pub banded: u64,
+    /// Calibration loop: samples observed, refits triggered, and the
+    /// worst current per-op EWMA residual (gauge, dimensionless log
+    /// ratio).
+    pub calib_samples: u64,
+    pub calib_refits: u64,
+    pub calib_residual: f64,
     pub p50_us: u64,
     pub p99_us: u64,
     pub mean_us: f64,
     /// One entry per backend label, sorted by label.
     pub backends: Vec<BackendSnapshot>,
+    /// One entry per op label (`OpKind::label`), sorted by label.
+    pub ops: Vec<OpSnapshot>,
 }
 
 const RESERVOIR: usize = 65_536;
@@ -165,8 +195,9 @@ impl Metrics {
         self.banded.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// Record a served request: global counters + the backend's histogram.
-    pub fn on_complete(&self, backend: &str, latency: Duration) {
+    /// Record a served request: global counters + the backend's and the
+    /// op's histograms (`op` is an `OpKind::label` — `spmm`, `sddmm`, …).
+    pub fn on_complete(&self, backend: &str, op: &str, latency: Duration) {
         self.completed.fetch_add(1, Ordering::Relaxed);
         let us = latency.as_micros() as u64;
         {
@@ -175,8 +206,24 @@ impl Metrics {
                 l.push(us);
             }
         }
-        let mut b = self.backends.lock().unwrap();
-        b.entry(backend.to_string()).or_default().record(us);
+        {
+            let mut b = self.backends.lock().unwrap();
+            b.entry(backend.to_string()).or_default().record(us);
+        }
+        let mut o = self.ops.lock().unwrap();
+        o.entry(op.to_string()).or_default().record(us);
+    }
+
+    /// One measured latency fed into the drift tracker; `ewma_residual`
+    /// is the tracker's updated worst per-op EWMA |log ratio| gauge.
+    pub fn on_calib_sample(&self, ewma_residual: f64) {
+        self.calib_samples.fetch_add(1, Ordering::Relaxed);
+        self.calib_residual.store(ewma_residual.to_bits(), Ordering::Relaxed);
+    }
+
+    /// The drift threshold tripped: the calibrator refit `CostParams`.
+    pub fn on_calib_refit(&self) {
+        self.calib_refits.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn on_error(&self) {
@@ -207,6 +254,19 @@ impl Metrics {
                 p99_us: h.quantile_us(0.99),
             })
             .collect();
+        let ops = self
+            .ops
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(name, h)| OpSnapshot {
+                op: name.clone(),
+                count: h.count,
+                mean_us: h.sum_us as f64 / h.count.max(1) as f64,
+                p50_us: h.quantile_us(0.50),
+                p99_us: h.quantile_us(0.99),
+            })
+            .collect();
         MetricsSnapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
@@ -220,10 +280,14 @@ impl Metrics {
             tune_survivors: self.tune_survivors.load(Ordering::Relaxed),
             tune_model_agree: self.tune_model_agree.load(Ordering::Relaxed),
             banded: self.banded.load(Ordering::Relaxed),
+            calib_samples: self.calib_samples.load(Ordering::Relaxed),
+            calib_refits: self.calib_refits.load(Ordering::Relaxed),
+            calib_residual: f64::from_bits(self.calib_residual.load(Ordering::Relaxed)),
             p50_us: q(0.50),
             p99_us: q(0.99),
             mean_us: mean,
             backends,
+            ops,
         }
     }
 }
@@ -237,7 +301,7 @@ mod tests {
         let m = Metrics::new();
         for i in 1..=100u64 {
             m.on_submit();
-            m.on_complete("cpu-serial", Duration::from_micros(i));
+            m.on_complete("cpu-serial", "spmm", Duration::from_micros(i));
         }
         m.on_error();
         let s = m.snapshot();
@@ -262,10 +326,10 @@ mod tests {
     fn per_backend_histograms_separate() {
         let m = Metrics::new();
         for _ in 0..10 {
-            m.on_complete("sim:sgap-nnz-group", Duration::from_micros(100));
+            m.on_complete("sim:sgap-nnz-group", "spmm", Duration::from_micros(100));
         }
         for _ in 0..5 {
-            m.on_complete("cpu-serial", Duration::from_micros(3000));
+            m.on_complete("cpu-serial", "sddmm", Duration::from_micros(3000));
         }
         let s = m.snapshot();
         assert_eq!(s.backends.len(), 2);
@@ -275,6 +339,65 @@ mod tests {
         assert_eq!(cpu.count, 5);
         assert!((sim.mean_us - 100.0).abs() < 1e-9);
         assert!(cpu.p50_us > sim.p50_us, "cpu {} !> sim {}", cpu.p50_us, sim.p50_us);
+        // and the same traffic shows up keyed by op
+        assert_eq!(s.ops.len(), 2);
+        let spmm = s.ops.iter().find(|o| o.op == "spmm").unwrap();
+        let sddmm = s.ops.iter().find(|o| o.op == "sddmm").unwrap();
+        assert_eq!((spmm.count, sddmm.count), (10, 5));
+        assert!(spmm.p50_us <= spmm.p99_us);
+        assert!(sddmm.p50_us > spmm.p50_us);
+    }
+
+    #[test]
+    fn hist_log2_bucket_boundaries() {
+        // record() puts `us` in the bucket of the first power of two
+        // strictly above it: 1 -> idx 1 (lower bound 1), 2 -> idx 2
+        // (lower bound 2), 3 -> idx 2, 4 -> idx 3
+        let cases = [(0u64, 0u64), (1, 1), (2, 2), (3, 2), (4, 4), (1023, 512), (1024, 1024)];
+        for (us, lower) in cases {
+            let mut h = Hist::default();
+            h.record(us);
+            assert_eq!(h.quantile_us(0.5), lower, "us={us}");
+            assert_eq!(h.count, 1);
+        }
+    }
+
+    #[test]
+    fn hist_quantile_edge_cases() {
+        // 0 samples: every quantile reads 0
+        let empty = Hist::default();
+        assert_eq!(empty.quantile_us(0.5), 0);
+        assert_eq!(empty.quantile_us(0.99), 0);
+
+        // 1 sample: every quantile reads that sample's bucket
+        let mut one = Hist::default();
+        one.record(77);
+        assert_eq!(one.quantile_us(0.0), 64);
+        assert_eq!(one.quantile_us(0.5), 64);
+        assert_eq!(one.quantile_us(1.0), 64);
+
+        // u64::MAX microseconds lands in the open-ended last bucket
+        // without overflowing the shift
+        let mut max = Hist::default();
+        max.record(u64::MAX);
+        assert_eq!(max.count, 1);
+        assert_eq!(max.quantile_us(0.5), 1u64 << 30);
+        assert_eq!(max.quantile_us(0.99), 1u64 << 30);
+    }
+
+    #[test]
+    fn calib_counters_advance() {
+        let m = Metrics::new();
+        let s0 = m.snapshot();
+        assert_eq!((s0.calib_samples, s0.calib_refits), (0, 0));
+        assert_eq!(s0.calib_residual, 0.0);
+        m.on_calib_sample(0.1);
+        m.on_calib_sample(0.3);
+        m.on_calib_refit();
+        let s = m.snapshot();
+        assert_eq!(s.calib_samples, 2);
+        assert_eq!(s.calib_refits, 1);
+        assert!((s.calib_residual - 0.3).abs() < 1e-12);
     }
 
     #[test]

@@ -37,6 +37,7 @@
 //! runtime); callers get a [`Ticket`] future per op.
 
 pub mod batcher;
+pub mod calibrate;
 pub mod executor;
 pub mod metrics;
 pub mod op;
@@ -46,11 +47,12 @@ pub mod server;
 pub mod session;
 
 pub use batcher::Batcher;
+pub use calibrate::{CalibConfig, OnlineCalibrator};
 pub use executor::{
     cpu_factory, factory, pjrt_factory, sim_factory, Admission, BackendKind, CpuExecutor,
     Executor, ExecutorEnv, ExecutorFactory, ExecutorRegistry, PjrtExecutor, SimExecutor,
 };
-pub use metrics::{BackendSnapshot, Metrics, MetricsSnapshot};
+pub use metrics::{BackendSnapshot, Metrics, MetricsSnapshot, OpSnapshot};
 pub use op::{DenseHandle, Op, OpError, OpKind, Request, SparseData, SparseHandle};
 pub use plan_cache::{Plan, PlanCache, PlanCacheStats, PlanOrigin, Scenario, ShapeKey};
 pub use pool::JobQueue;

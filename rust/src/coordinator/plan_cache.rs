@@ -152,6 +152,9 @@ pub struct PlanCacheStats {
     pub misses: u64,
     pub upgrades: u64,
     pub evictions: u64,
+    /// Entries dropped by [`PlanCache::invalidate_scenario`] (calibration
+    /// refits, not capacity pressure — those are `evictions`).
+    pub invalidations: u64,
 }
 
 struct Inner {
@@ -168,6 +171,7 @@ pub struct PlanCache {
     misses: AtomicU64,
     upgrades: AtomicU64,
     evictions: AtomicU64,
+    invalidations: AtomicU64,
 }
 
 impl PlanCache {
@@ -180,6 +184,7 @@ impl PlanCache {
             misses: AtomicU64::new(0),
             upgrades: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+            invalidations: AtomicU64::new(0),
         }
     }
 
@@ -250,6 +255,22 @@ impl PlanCache {
         }
     }
 
+    /// Drop every entry whose key serves `scenario`. The calibration
+    /// refit path: a new `CostParams` fit can reorder candidates for the
+    /// op kinds it was fitted on, so their cached selector/tuner picks
+    /// are stale — the next miss re-selects under the refit model.
+    /// Returns how many entries were dropped.
+    pub fn invalidate_scenario(&self, scenario: Scenario) -> usize {
+        let mut inner = self.inner.lock().unwrap();
+        let before = inner.map.len();
+        inner.map.retain(|k, _| k.scenario != scenario);
+        inner.order.retain(|k| k.scenario != scenario);
+        let dropped = before - inner.map.len();
+        drop(inner);
+        self.invalidations.fetch_add(dropped as u64, Ordering::Relaxed);
+        dropped
+    }
+
     pub fn len(&self) -> usize {
         self.inner.lock().unwrap().map.len()
     }
@@ -265,6 +286,7 @@ impl PlanCache {
             misses: self.misses.load(Ordering::Relaxed),
             upgrades: self.upgrades.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),
+            invalidations: self.invalidations.load(Ordering::Relaxed),
         }
     }
 }
@@ -363,6 +385,35 @@ mod tests {
         assert!(cache.get(&keys[2]).is_some());
         // upgrading an evicted key is a no-op
         assert!(!cache.upgrade(keys[0], Algo::SgapNnzGroup { c: 1, r: 2 }));
+    }
+
+    #[test]
+    fn invalidate_scenario_drops_only_that_op_kind() {
+        let cache = PlanCache::new(8);
+        let a = erdos_renyi(64, 64, 400, 9).to_csr();
+        let stats = MatrixStats::of(&a);
+        let plan = || Algo::SgapNnzGroup { c: 4, r: 8 };
+        let spmm4 = ShapeKey::spmm(&stats, 4);
+        let spmm8 = ShapeKey::spmm(&stats, 8);
+        let sddmm = ShapeKey::sddmm(&stats, 16);
+        cache.get_or_insert_with(spmm4, plan);
+        cache.get_or_insert_with(spmm8, plan);
+        let sddmm_plan = Algo::Sddmm(crate::algos::sddmm::SddmmConfig::new(16, 8, 4));
+        cache.get_or_insert_with(sddmm, || sddmm_plan);
+        assert_eq!(cache.len(), 3);
+
+        assert_eq!(cache.invalidate_scenario(Scenario::Spmm), 2);
+        assert_eq!(cache.len(), 1);
+        assert!(cache.get(&spmm4).is_none() && cache.get(&spmm8).is_none());
+        assert!(cache.get(&sddmm).is_some(), "other scenarios survive");
+        assert_eq!(cache.stats().invalidations, 2);
+        // idempotent: nothing left to drop, counters don't move
+        assert_eq!(cache.invalidate_scenario(Scenario::Spmm), 0);
+        assert_eq!(cache.stats().invalidations, 2);
+        // the FIFO order list shrank with the map: filling to capacity
+        // still evicts cleanly instead of popping stale keys
+        let (_, hit) = cache.get_or_insert_with(spmm4, plan);
+        assert!(!hit, "invalidated keys re-select on next sight");
     }
 
     #[test]

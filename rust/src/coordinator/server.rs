@@ -45,9 +45,11 @@ use crate::runtime::Registry;
 use crate::sim::{HwProfile, Machine};
 use crate::sparse::coo3::Coo3;
 use crate::sparse::{Csr, SplitMix64};
+use crate::tuner::calibrate::Calibration;
 use crate::tuner::{self, Selector};
 
 use super::batcher::Batcher;
+use super::calibrate::{CalibConfig, OnlineCalibrator};
 use super::executor::{Admission, BackendKind, Executor, ExecutorEnv, ExecutorRegistry, TuneTask};
 use super::metrics::Metrics;
 use super::op::{Op, OpKind, Request, SparseData};
@@ -125,6 +127,13 @@ pub struct CoordinatorConfig {
     /// the standard PJRT ▸ simulator ▸ CPU stack; push a custom
     /// [`Executor`] factory to plug in a new backend.
     pub executors: ExecutorRegistry,
+    /// Warm-start calibration (yesterday's fit, via `Calibration::load`).
+    /// Applied to the sim executors' machine and cost model whether or
+    /// not online calibration is enabled.
+    pub calibration: Option<Calibration>,
+    /// Online drift-tracking policy. Disabled by default — enable to let
+    /// served latencies refit `CostParams` live.
+    pub calib: CalibConfig,
 }
 
 impl Default for CoordinatorConfig {
@@ -143,6 +152,8 @@ impl Default for CoordinatorConfig {
             tune_top_k: tuner::DEFAULT_TOP_K,
             model_select: true,
             executors: ExecutorRegistry::standard(),
+            calibration: None,
+            calib: CalibConfig::default(),
         }
     }
 }
@@ -164,6 +175,10 @@ pub struct Coordinator {
     tuner: Option<JoinHandle<()>>,
     pub metrics: Arc<Metrics>,
     pub plan_cache: Arc<PlanCache>,
+    /// The online calibration loop (drift tracker + refitter). Present
+    /// even when `calib.enabled` is false, so warm-start fits apply and
+    /// `calibrator.current()` can be saved at shutdown either way.
+    pub calibrator: Arc<OnlineCalibrator>,
 }
 
 impl Coordinator {
@@ -183,12 +198,20 @@ impl Coordinator {
         let queue = Arc::new(JobQueue::new(cfg.queue_cap.max(1)));
         let metrics = Arc::new(Metrics::new());
         let plan_cache = Arc::new(PlanCache::new(cfg.plan_cache_capacity.max(1)));
+        let calibrator = Arc::new(OnlineCalibrator::new(
+            Machine::new(cfg.hw),
+            cfg.calibration.clone(),
+            cfg.calib,
+        ));
 
         let (tune_tx, tuner) = if cfg.background_tune {
             let (tx, rx) = std::sync::mpsc::sync_channel::<TuneTask>(32);
             let cache = plan_cache.clone();
             let tuner_metrics = metrics.clone();
-            let machine = Machine::new(cfg.hw);
+            // Snapshot the calibrated machine at startup: warm-start fits
+            // reach the background tuner; later online refits reach only
+            // the per-worker sim executors (which refresh per admit).
+            let machine = calibrator.machine();
             let top_k = cfg.tune_top_k;
             let handle = std::thread::Builder::new()
                 .name("sgap-tuner".into())
@@ -211,6 +234,7 @@ impl Coordinator {
                     metrics: metrics.clone(),
                     artifacts_dir: cfg.artifacts_dir.clone(),
                     tune_tx: tune_tx.clone(),
+                    calibrator: Some(calibrator.clone()),
                 },
                 registry: cfg.executors.clone(),
                 max_batch: cfg.max_batch,
@@ -222,7 +246,7 @@ impl Coordinator {
                     .expect("spawn coordinator worker"),
             );
         }
-        Ok(Coordinator { queue, workers, tune_tx, tuner, metrics, plan_cache })
+        Ok(Coordinator { queue, workers, tune_tx, tuner, metrics, plan_cache, calibrator })
     }
 
     /// Submit through the one generic serving path: any [`Op`] (or a
@@ -386,7 +410,7 @@ fn serve_one(routed: Routed, executors: &mut [Box<dyn Executor>], ctx: &WorkerCt
         }
     };
     let latency = job.submitted.elapsed();
-    ctx.env.metrics.on_complete(&backend.to_string(), latency);
+    ctx.env.metrics.on_complete(&backend.to_string(), job.op.kind.label(), latency);
     let _ = job.resp.send(Ok(Response {
         c,
         backend,

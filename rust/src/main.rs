@@ -15,6 +15,9 @@
 //!   bench     — run the table-1/2/4 suites through the model-pruned
 //!               tuner (plus the skew suite's hybrid-vs-single rows) and
 //!               emit versioned BENCH_spmm.json / BENCH_tensor.json
+//!   profile   — sweep the bench suite on the simulator, fit CostParams +
+//!               launch overhead to the measurements, report before/after
+//!               rank fidelity, and emit versioned CALIBRATION.json
 //!   serve     — start the coordinator and push a demo workload
 //!
 //! Argument parsing is hand-rolled (`--key value` pairs) — the offline
@@ -446,22 +449,89 @@ fn cmd_bench(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// `sgap profile` — the offline half of the calibration loop: measure the
+/// SpMM candidate grid over the bench suite on the warp simulator, fit
+/// `CostParams` + `launch_overhead_s` to the measurements
+/// (`tuner::calibrate::fit`), report per-matrix Spearman rank fidelity
+/// before vs after, and emit the versioned `CALIBRATION.json` artifact
+/// `sgap serve --calib` warm-starts from.
+fn cmd_profile(flags: &HashMap<String, String>) -> Result<()> {
+    let quick = flags.contains_key("quick");
+    let hw = hw_by_name(flags.get("hw").map(String::as_str).unwrap_or("3090"))?;
+    let out_dir = std::path::PathBuf::from(
+        flags.get("out").cloned().unwrap_or_else(|| ".".to_string()),
+    );
+    std::fs::create_dir_all(&out_dir)
+        .with_context(|| format!("creating {}", out_dir.display()))?;
+    let machine = Machine::new(hw);
+
+    println!(
+        "sgap profile: {} suite on {} (SpMM grid, N=4)",
+        if quick { "quick" } else { "full" },
+        hw.name
+    );
+    let report = sgap::bench_util::run_profile(&machine, quick)?;
+    let mut table = Table::new(&["matrix", "samples", "spearman before", "spearman after"]);
+    for r in &report.rows {
+        table.row(&[
+            r.matrix.clone(),
+            r.samples.to_string(),
+            format!("{:.3}", r.spearman_before),
+            format!("{:.3}", r.spearman_after),
+        ]);
+    }
+    table.print();
+    let cal = &report.calibration;
+    println!(
+        "\nfit: {} samples, loss {:.4} -> {:.4}; mean spearman {:.3} -> {:.3}",
+        cal.samples,
+        cal.loss_before,
+        cal.loss_after,
+        report.mean_spearman_before(),
+        report.mean_spearman_after(),
+    );
+    let path = out_dir.join("CALIBRATION.json");
+    cal.save(&path)?;
+    let written = std::fs::read_to_string(&path)?;
+    sgap::bench_util::validate_calibration_json(&written)
+        .map_err(|e| anyhow::anyhow!("emitted calibration fails its own schema: {e}"))?;
+    println!("wrote {} (schema v{}, validated)", path.display(), cal.version);
+    Ok(())
+}
+
 fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let dir = sgap::runtime::Runtime::default_dir();
     let use_artifacts = dir.join("manifest.json").exists()
         && sgap::runtime::Runtime::available()
         && !flags.contains_key("cpu-only");
+    // --calib FILE warm-starts the cost model from an `sgap profile`
+    // artifact; --calibrate additionally turns on the online drift loop
+    let calibration = match flags.get("calib") {
+        Some(path) => Some(sgap::tuner::calibrate::Calibration::load(std::path::Path::new(path))?),
+        None => None,
+    };
     let cfg = CoordinatorConfig {
         workers: flag_u32(flags, "workers", 2)? as usize,
         artifacts_dir: if use_artifacts { Some(dir) } else { None },
         background_tune: flags.contains_key("tune"),
+        calibration,
+        calib: sgap::coordinator::CalibConfig {
+            enabled: flags.contains_key("calibrate"),
+            ..sgap::coordinator::CalibConfig::default()
+        },
         ..CoordinatorConfig::default()
     };
     println!(
-        "starting session: {} workers, {} artifacts, background tune {}",
+        "starting session: {} workers, {} artifacts, background tune {}, calibration {}",
         cfg.workers,
         if use_artifacts { "PJRT" } else { "no" },
         if cfg.background_tune { "on" } else { "off" },
+        match (&cfg.calibration, cfg.calib.enabled) {
+            (Some(_), true) => "warm + online",
+            (Some(_), false) => "warm",
+            (None, true) => "online",
+            (None, false) => "off",
+        },
     );
     let session = Session::start(cfg)?;
     let requests = flag_u32(flags, "requests", 32)?;
@@ -505,9 +575,18 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     }
     let cs = coord.plan_cache.stats();
     println!(
-        "plan-cache entries {} (upgrades {}, evictions {})",
-        cs.entries, cs.upgrades, cs.evictions
+        "plan-cache entries {} (upgrades {}, evictions {}, invalidations {})",
+        cs.entries, cs.upgrades, cs.evictions, cs.invalidations
     );
+    if coord.calibrator.config().enabled {
+        println!(
+            "calibration: {} samples, {} refits, worst EWMA residual {:.4} (generation {})",
+            s.calib_samples,
+            s.calib_refits,
+            s.calib_residual,
+            coord.calibrator.generation()
+        );
+    }
     session.shutdown();
     Ok(())
 }
@@ -528,6 +607,7 @@ fn main() -> Result<()> {
         "mttkrp" => cmd_mttkrp(&flags),
         "ttm" => cmd_ttm(&flags),
         "bench" => cmd_bench(&flags),
+        "profile" => cmd_profile(&flags),
         "serve" => cmd_serve(&flags),
         "macros" => {
             print!("{}", macro_header());
@@ -552,7 +632,12 @@ fn main() -> Result<()> {
             println!("  bench    [--quick] [--out DIR] [--k 8] [--hw 3090|2080|v100]");
             println!("           (emits BENCH_spmm.json + BENCH_tensor.json incl. the skew");
             println!("            hybrid-vs-single rows; --k 0 = exhaustive)");
-            println!("  serve    --requests 32 --workers 2 [--tune] [--cpu-only] (SGAP_ARTIFACTS overrides artifacts dir)");
+            println!("  profile  [--quick] [--out DIR] [--hw 3090|2080|v100]");
+            println!("           (measure -> fit CostParams -> CALIBRATION.json; the offline");
+            println!("            half of the calibration loop, see DESIGN.md §calibration)");
+            println!("  serve    --requests 32 --workers 2 [--tune] [--cpu-only] [--calib FILE] [--calibrate]");
+            println!("           (--calib warm-starts from an `sgap profile` artifact; --calibrate");
+            println!("            turns on online drift-triggered refits; SGAP_ARTIFACTS overrides artifacts dir)");
             println!("  macros   (print the §5.3 macro-instruction header)");
             Ok(())
         }

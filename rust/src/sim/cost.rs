@@ -5,7 +5,7 @@
 //! and library kernels are priced identically.
 
 /// Microarchitectural cost constants (cycles unless noted).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct CostParams {
     /// One warp-wide ALU instruction.
     pub alu: f64,
@@ -42,6 +42,44 @@ impl Default for CostParams {
 }
 
 impl CostParams {
+    /// Number of tunable parameters (the calibration vector length).
+    pub const N: usize = 7;
+
+    /// Stable parameter names, in [`CostParams::to_array`] order — the
+    /// key order of the calibration artifact
+    /// (`tuner::calibrate::Calibration`).
+    pub const NAMES: [&'static str; CostParams::N] =
+        ["alu", "load_issue", "shfl", "sync_per_lane", "atomic", "branch", "bsearch_step"];
+
+    /// The parameter vector, in [`CostParams::NAMES`] order. Together
+    /// with [`CostParams::from_array`] this makes the params settable by
+    /// the calibration fitter instead of `Default`-only.
+    pub fn to_array(&self) -> [f64; CostParams::N] {
+        [
+            self.alu,
+            self.load_issue,
+            self.shfl,
+            self.sync_per_lane,
+            self.atomic,
+            self.branch,
+            self.bsearch_step,
+        ]
+    }
+
+    /// Rebuild params from a fitted vector (inverse of
+    /// [`CostParams::to_array`]).
+    pub fn from_array(v: [f64; CostParams::N]) -> CostParams {
+        CostParams {
+            alu: v[0],
+            load_issue: v[1],
+            shfl: v[2],
+            sync_per_lane: v[3],
+            atomic: v[4],
+            branch: v[5],
+            bsearch_step: v[6],
+        }
+    }
+
     /// Cost of one tree/scan reduction over a group of width `r`:
     /// `log2(r)` steps of `shfl_per_step` shuffles plus width-proportional
     /// convergence overhead.
@@ -178,6 +216,23 @@ mod tests {
         assert_eq!(sec, 6.0);
         assert_eq!(cy, p.bsearch_step * 6.0);
         assert_eq!(p.bsearch(1.0).1, 0.0);
+    }
+
+    #[test]
+    fn params_round_trip_through_the_calibration_vector() {
+        let p = CostParams::default();
+        let v = p.to_array();
+        assert_eq!(v.len(), CostParams::N);
+        assert_eq!(CostParams::NAMES.len(), CostParams::N);
+        let q = CostParams::from_array(v);
+        assert_eq!(q.to_array(), v);
+        // every named slot is live: perturbing slot i changes only field i
+        for i in 0..CostParams::N {
+            let mut w = v;
+            w[i] *= 2.0;
+            let r = CostParams::from_array(w);
+            assert_eq!(r.to_array(), w, "slot {} ({})", i, CostParams::NAMES[i]);
+        }
     }
 
     #[test]

@@ -23,20 +23,28 @@ pub struct HwProfile {
 }
 
 impl HwProfile {
-    // Launch overhead is 0: the paper measures *kernel duration* with
-    // nsight-compute (§7), which excludes the host-side launch path.
+    // Launch overhead is nonzero on every preset: the paper measures
+    // *kernel duration* with nsight-compute (§7), which excludes the
+    // host-side launch path but still pays the front-end drain/setup of
+    // each launch — and a zero here made every multi-launch plan
+    // (per-band composites, the two-stage SDDMM→SpMM pipeline) price its
+    // extra launches for free, biasing the selector toward them. The
+    // seeded values are scaled to the reduced-size simulation suite
+    // (whose kernel bodies sit in the 0.1–2 µs range) and, like
+    // `CostParams`, are calibratable: `tuner::calibrate` fits
+    // `launch_overhead_s` alongside the per-instruction charges.
 
     /// NVIDIA RTX 3090: 68 Ampere SMs @ 1.395 GHz, 936 GB/s GDDR6X.
     pub fn rtx3090() -> Self {
-        HwProfile { name: "RTX 3090", sm_count: 68, clock_ghz: 1.395, dram_gbps: 936.0, issue_width: 4.0, launch_overhead_s: 0.0 }
+        HwProfile { name: "RTX 3090", sm_count: 68, clock_ghz: 1.395, dram_gbps: 936.0, issue_width: 4.0, launch_overhead_s: 2.0e-8 }
     }
     /// NVIDIA RTX 2080: 46 Turing SMs @ 1.515 GHz, 448 GB/s GDDR6.
     pub fn rtx2080() -> Self {
-        HwProfile { name: "RTX 2080", sm_count: 46, clock_ghz: 1.515, dram_gbps: 448.0, issue_width: 4.0, launch_overhead_s: 0.0 }
+        HwProfile { name: "RTX 2080", sm_count: 46, clock_ghz: 1.515, dram_gbps: 448.0, issue_width: 4.0, launch_overhead_s: 2.5e-8 }
     }
     /// NVIDIA Tesla V100: 80 Volta SMs @ 1.370 GHz, 900 GB/s HBM2.
     pub fn v100() -> Self {
-        HwProfile { name: "Tesla V100", sm_count: 80, clock_ghz: 1.370, dram_gbps: 900.0, issue_width: 4.0, launch_overhead_s: 0.0 }
+        HwProfile { name: "Tesla V100", sm_count: 80, clock_ghz: 1.370, dram_gbps: 900.0, issue_width: 4.0, launch_overhead_s: 2.2e-8 }
     }
 
     pub fn all() -> Vec<HwProfile> {
@@ -177,6 +185,21 @@ mod tests {
         let b = HwProfile::rtx2080();
         assert!(a.dram_gbps > b.dram_gbps);
         assert_eq!(HwProfile::all().len(), 3);
+    }
+
+    #[test]
+    fn presets_charge_nonzero_launch_overhead() {
+        for hw in HwProfile::all() {
+            assert!(
+                hw.launch_overhead_s > 0.0,
+                "{}: multi-launch plans must not get their extra launches for free",
+                hw.name
+            );
+            // scaled to the reduced-size suite: well below the smallest
+            // simulated kernel bodies (~0.1 us), so single-launch ranking
+            // is a constant shift, not a reordering
+            assert!(hw.launch_overhead_s < 1.0e-7, "{}", hw.name);
+        }
     }
 
     #[test]

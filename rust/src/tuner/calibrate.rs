@@ -1,0 +1,496 @@
+//! Calibration: close the loop from measured latency back to
+//! [`CostParams`].
+//!
+//! The analytic model ([`CostModel`]) prices every candidate from the
+//! hand-seeded [`CostParams`] constants plus the preset
+//! `launch_overhead_s`. Those constants were chosen so the *rankings*
+//! land right on the synthetic suite — but every executed `Response`
+//! already carries a measured latency the tuner used to throw away. This
+//! module fits the constants to observed `(plan, stats, measured
+//! seconds)` triples:
+//!
+//! * [`Sample`] — one observation: an [`Algo`], the workload statistics
+//!   it ran on (owned, so samples outlive the matrices), and the
+//!   measured seconds.
+//! * [`fit`] — a deterministic coordinate-descent fitter over the
+//!   8-vector `θ = (7 CostParams, launch_overhead_s)`, minimising the
+//!   mean squared log-ratio `(ln price − ln measured)²`. The model's
+//!   charges (`par_reduce`/`seg_scan`/`atomic_chain`/`bsearch`) are
+//!   monotone in each coordinate, so cyclic descent with a shrinking
+//!   multiplicative step converges without gradients and — crucially for
+//!   the Python transliteration (`python/tools/seed_bench.py`) — with a
+//!   bit-reproducible trajectory.
+//! * [`Calibration`] — the versioned fit artifact. Serialises via
+//!   `runtime::json` with fixed key order and `{:.17e}` floats, so
+//!   `to_json → parse → to_json` is byte-identical and a restarted
+//!   coordinator warm-starts from yesterday's fit (`sgap serve --calib`).
+//!
+//! The online side (per-`OpKind` EWMA residual tracking + refit +
+//! `PlanCache` invalidation) lives in `coordinator::calibrate`; it calls
+//! [`fit`] on its sample ring whenever drift crosses the threshold.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::algos::catalog::Algo;
+use crate::runtime::json::Json;
+use crate::sim::{CostParams, Machine};
+use crate::sparse::{MatrixStats, SegStats};
+
+use super::model::{CostModel, Workload};
+
+/// Bump when the artifact layout changes; `from_json` rejects mismatches.
+pub const CALIBRATION_SCHEMA_VERSION: u64 = 1;
+
+/// Length of the fitted vector: the 7 [`CostParams`] plus
+/// `launch_overhead_s`.
+pub const THETA: usize = CostParams::N + 1;
+
+/// Fitted parameters never collapse to zero (a zero charge makes whole
+/// cost terms vanish and the log-loss landscape degenerate).
+const MIN_PARAM: f64 = 1e-6;
+
+/// Multiplicative step schedule: coarse-to-fine, two cyclic passes per
+/// factor. Deterministic — no randomness, no timestamps — so the Rust
+/// fitter and its Python transliteration walk the same trajectory.
+const FACTORS: [f64; 7] = [2.0, 1.5, 1.25, 1.1, 1.05, 1.02, 1.01];
+const PASSES_PER_FACTOR: usize = 2;
+
+/// An owned workload description — the same statistics
+/// [`Workload`] borrows, captured so a [`Sample`] can be stored in a
+/// ring buffer, serialised, or replayed long after the matrix is gone.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkloadSpec {
+    /// SpMM `C = A·B` with dense width `n`.
+    Spmm { stats: MatrixStats, n: u32 },
+    /// SDDMM with inner dense width `j`.
+    Sddmm { stats: MatrixStats, j: u32 },
+    /// MTTKRP over row segments with factor width `j`.
+    Mttkrp { seg: SegStats, j: u32 },
+    /// TTM over leading-fiber segments with output width `l`.
+    Ttm { seg: SegStats, l: u32 },
+    /// Fused SDDMM→SpMM with inner width `j` and output width `n`.
+    Fused { stats: MatrixStats, j: u32, n: u32 },
+}
+
+impl WorkloadSpec {
+    /// Borrow as the [`Workload`] the model prices.
+    pub fn workload(&self) -> Workload<'_> {
+        match self {
+            WorkloadSpec::Spmm { stats, n } => Workload::Spmm { stats, n: *n },
+            WorkloadSpec::Sddmm { stats, j } => Workload::Sddmm { stats, j: *j },
+            WorkloadSpec::Mttkrp { seg, j } => Workload::Mttkrp { seg, j: *j },
+            WorkloadSpec::Ttm { seg, l } => Workload::Ttm { seg, l: *l },
+            WorkloadSpec::Fused { stats, j, n } => Workload::Fused { stats, j: *j, n: *n },
+        }
+    }
+
+    /// Scenario label, matching `coordinator::OpKind::label`.
+    pub fn label(&self) -> &'static str {
+        match self {
+            WorkloadSpec::Spmm { .. } => "spmm",
+            WorkloadSpec::Sddmm { .. } => "sddmm",
+            WorkloadSpec::Mttkrp { .. } => "mttkrp",
+            WorkloadSpec::Ttm { .. } => "ttm",
+            WorkloadSpec::Fused { .. } => "fused",
+        }
+    }
+}
+
+/// One observation: `algo` ran on `workload` and took `measured_s`
+/// seconds (simulated or wall-clock).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sample {
+    pub algo: Algo,
+    pub workload: WorkloadSpec,
+    pub measured_s: f64,
+}
+
+impl Sample {
+    pub fn new(algo: Algo, workload: WorkloadSpec, measured_s: f64) -> Sample {
+        Sample { algo, workload, measured_s }
+    }
+}
+
+/// A versioned fit artifact: the constants the fitter settled on, plus
+/// enough provenance (hardware, sample count, loss before/after) to
+/// judge whether it is worth applying.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Calibration {
+    /// Artifact layout version ([`CALIBRATION_SCHEMA_VERSION`]).
+    pub version: u64,
+    /// `HwProfile::name` the samples were collected on.
+    pub hw: String,
+    /// Usable samples the fit saw (finite price, positive measurement).
+    pub samples: usize,
+    /// Mean squared log-ratio loss at the starting constants.
+    pub loss_before: f64,
+    /// Loss at the fitted constants. Coordinate descent only ever
+    /// accepts strict improvements, so `loss_after <= loss_before`.
+    pub loss_after: f64,
+    /// The fitted per-instruction charges.
+    pub params: CostParams,
+    /// The fitted fixed launch overhead (seconds).
+    pub launch_overhead_s: f64,
+}
+
+impl Calibration {
+    /// The do-nothing calibration: `machine`'s own constants, zero
+    /// samples, zero loss. What a coordinator runs with before any fit.
+    pub fn identity(machine: &Machine) -> Calibration {
+        Calibration {
+            version: CALIBRATION_SCHEMA_VERSION,
+            hw: machine.hw.name.to_string(),
+            samples: 0,
+            loss_before: 0.0,
+            loss_after: 0.0,
+            params: machine.params,
+            launch_overhead_s: machine.hw.launch_overhead_s,
+        }
+    }
+
+    /// Install the fitted constants: both the warp interpreter and the
+    /// analytic model read `machine.params` / `machine.hw`, so sim and
+    /// model shift consistently.
+    pub fn apply(&self, machine: &mut Machine) {
+        machine.params = self.params;
+        machine.hw.launch_overhead_s = self.launch_overhead_s;
+    }
+
+    /// The fitted vector in [`fit`]'s coordinate order.
+    pub fn theta(&self) -> [f64; THETA] {
+        let mut t = [0.0; THETA];
+        t[..CostParams::N].copy_from_slice(&self.params.to_array());
+        t[CostParams::N] = self.launch_overhead_s;
+        t
+    }
+
+    /// Serialise with fixed key order and `{:.17e}` floats: 18
+    /// significant digits round-trip f64 exactly, and the fixed format
+    /// makes `to_json ∘ from_json` the identity on bytes — the
+    /// round-trip contract `rust/tests/tuner_calibration.rs` pins.
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"schema_version\": {},\n", self.version));
+        s.push_str(&format!("  \"hw\": \"{}\",\n", self.hw));
+        s.push_str(&format!("  \"samples\": {},\n", self.samples));
+        s.push_str(&format!("  \"loss_before\": {},\n", fmt_f64(self.loss_before)));
+        s.push_str(&format!("  \"loss_after\": {},\n", fmt_f64(self.loss_after)));
+        s.push_str(&format!(
+            "  \"launch_overhead_s\": {},\n",
+            fmt_f64(self.launch_overhead_s)
+        ));
+        s.push_str("  \"params\": {\n");
+        let v = self.params.to_array();
+        for (i, name) in CostParams::NAMES.iter().enumerate() {
+            let comma = if i + 1 < CostParams::N { "," } else { "" };
+            s.push_str(&format!("    \"{}\": {}{}\n", name, fmt_f64(v[i]), comma));
+        }
+        s.push_str("  }\n");
+        s.push_str("}\n");
+        s
+    }
+
+    pub fn from_json(src: &str) -> Result<Calibration> {
+        let j = Json::parse(src).context("calibration artifact is not valid JSON")?;
+        let version = req_f64(&j, "schema_version")? as u64;
+        if version != CALIBRATION_SCHEMA_VERSION {
+            bail!(
+                "calibration schema version {version} (this build reads {})",
+                CALIBRATION_SCHEMA_VERSION
+            );
+        }
+        let hw = j
+            .get("hw")
+            .and_then(Json::as_str)
+            .context("calibration: missing `hw`")?
+            .to_string();
+        let samples = req_f64(&j, "samples")? as usize;
+        let loss_before = req_f64(&j, "loss_before")?;
+        let loss_after = req_f64(&j, "loss_after")?;
+        let launch_overhead_s = req_f64(&j, "launch_overhead_s")?;
+        let pj = j.get("params").context("calibration: missing `params`")?;
+        let mut v = [0.0; CostParams::N];
+        for (i, name) in CostParams::NAMES.iter().enumerate() {
+            v[i] = pj
+                .get(name)
+                .and_then(Json::as_f64)
+                .with_context(|| format!("calibration: missing param `{name}`"))?;
+        }
+        Ok(Calibration {
+            version,
+            hw,
+            samples,
+            loss_before,
+            loss_after,
+            params: CostParams::from_array(v),
+            launch_overhead_s,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json())
+            .with_context(|| format!("writing calibration to {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<Calibration> {
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading calibration from {}", path.display()))?;
+        Self::from_json(&src)
+    }
+}
+
+fn req_f64(j: &Json, key: &str) -> Result<f64> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .with_context(|| format!("calibration: missing `{key}`"))
+}
+
+/// `{:.17e}` gives 18 significant digits — more than the 17 needed for
+/// f64 round-trip — in a *fixed* format (`repr`-style shortest printing
+/// would make byte-identity depend on the value).
+fn fmt_f64(x: f64) -> String {
+    format!("{x:.17e}")
+}
+
+/// Build the model priced at `theta` on `machine`'s hardware.
+fn model_at(machine: &Machine, theta: &[f64; THETA]) -> CostModel {
+    let mut m = machine.clone();
+    let mut v = [0.0; CostParams::N];
+    v.copy_from_slice(&theta[..CostParams::N]);
+    m.params = CostParams::from_array(v);
+    m.hw.launch_overhead_s = theta[CostParams::N];
+    CostModel::new(&m)
+}
+
+/// Mean squared log-ratio between model price and measured seconds at
+/// `theta`, over the usable subset of `samples`. Returns `(loss,
+/// usable)`; `loss` is `f64::INFINITY` when nothing is usable.
+pub fn fit_loss(machine: &Machine, theta: &[f64; THETA], samples: &[Sample]) -> (f64, usize) {
+    let model = model_at(machine, theta);
+    let mut acc = 0.0;
+    let mut used = 0usize;
+    for s in samples {
+        if !(s.measured_s.is_finite() && s.measured_s > 0.0) {
+            continue;
+        }
+        let Some(t) = model.price(&s.algo, &s.workload.workload()) else { continue };
+        if !(t.is_finite() && t > 0.0) {
+            continue;
+        }
+        let r = t.ln() - s.measured_s.ln();
+        acc += r * r;
+        used += 1;
+    }
+    if used == 0 {
+        (f64::INFINITY, 0)
+    } else {
+        (acc / used as f64, used)
+    }
+}
+
+/// Fit `θ = (CostParams, launch_overhead_s)` to `samples`, starting from
+/// `machine`'s current constants.
+///
+/// Deterministic cyclic coordinate descent: for each factor in
+/// [`FACTORS`] (coarse → fine), two passes over the coordinates in
+/// order, trying `θᵢ·f` and `θᵢ/f` and accepting only strict loss
+/// improvements. Params are clamped to [`MIN_PARAM`]; the overhead stays
+/// positive because the steps are multiplicative. Monotone acceptance
+/// guarantees `loss_after <= loss_before`; with no usable samples the
+/// result is [`Calibration::identity`].
+pub fn fit(machine: &Machine, samples: &[Sample]) -> Calibration {
+    let mut theta = [0.0; THETA];
+    theta[..CostParams::N].copy_from_slice(&machine.params.to_array());
+    theta[CostParams::N] = machine.hw.launch_overhead_s;
+
+    let (before, used) = fit_loss(machine, &theta, samples);
+    if used == 0 {
+        return Calibration::identity(machine);
+    }
+
+    let mut best = before;
+    for &f in &FACTORS {
+        for _pass in 0..PASSES_PER_FACTOR {
+            for i in 0..THETA {
+                for cand in [theta[i] * f, theta[i] / f] {
+                    let cand = if i < CostParams::N { cand.max(MIN_PARAM) } else { cand.max(0.0) };
+                    let mut trial = theta;
+                    trial[i] = cand;
+                    let (loss, _) = fit_loss(machine, &trial, samples);
+                    if loss < best {
+                        best = loss;
+                        theta = trial;
+                    }
+                }
+            }
+        }
+    }
+
+    let mut v = [0.0; CostParams::N];
+    v.copy_from_slice(&theta[..CostParams::N]);
+    Calibration {
+        version: CALIBRATION_SCHEMA_VERSION,
+        hw: machine.hw.name.to_string(),
+        samples: used,
+        loss_before: before,
+        loss_after: best,
+        params: CostParams::from_array(v),
+        launch_overhead_s: theta[CostParams::N],
+    }
+}
+
+/// Spearman rank correlation (no tie correction — prices are continuous).
+/// The same helper `rust/tests/tuner_pruning.rs` checks model fidelity
+/// with; public here so `sgap profile` and the calibration tests report
+/// rank agreement identically.
+pub fn spearman(xs: &[f64], ys: &[f64]) -> f64 {
+    fn ranks(v: &[f64]) -> Vec<f64> {
+        let mut idx: Vec<usize> = (0..v.len()).collect();
+        idx.sort_by(|&a, &b| v[a].partial_cmp(&v[b]).unwrap());
+        let mut r = vec![0.0; v.len()];
+        for (rank, &i) in idx.iter().enumerate() {
+            r[i] = rank as f64;
+        }
+        r
+    }
+    let (rx, ry) = (ranks(xs), ranks(ys));
+    let n = xs.len() as f64;
+    let mean = (n - 1.0) / 2.0;
+    let mut cov = 0.0;
+    let mut vx = 0.0;
+    let mut vy = 0.0;
+    for i in 0..xs.len() {
+        cov += (rx[i] - mean) * (ry[i] - mean);
+        vx += (rx[i] - mean).powi(2);
+        vy += (ry[i] - mean).powi(2);
+    }
+    cov / (vx.sqrt() * vy.sqrt()).max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::HwProfile;
+    use crate::sparse::{erdos_renyi, power_law};
+    use crate::tuner::space::{sgap_candidates, taco_candidates};
+
+    fn machine() -> Machine {
+        Machine::new(HwProfile::rtx3090())
+    }
+
+    fn spmm_samples(truth: &CostModel) -> Vec<Sample> {
+        let mats = [
+            erdos_renyi(256, 256, 2000, 1).to_csr(),
+            power_law(256, 256, 4000, 1.8, 2).to_csr(),
+        ];
+        let mut cands = taco_candidates(4);
+        cands.extend(sgap_candidates(4));
+        let mut out = Vec::new();
+        for a in &mats {
+            let stats = crate::sparse::MatrixStats::of(a);
+            for c in &cands {
+                let spec = WorkloadSpec::Spmm { stats: stats.clone(), n: 4 };
+                let t = truth.price(c, &spec.workload()).unwrap();
+                out.push(Sample::new(*c, spec, t));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn identity_is_a_fixed_point_of_apply() {
+        let m = machine();
+        let c = Calibration::identity(&m);
+        let mut m2 = m.clone();
+        c.apply(&mut m2);
+        assert_eq!(m2.params.to_array(), m.params.to_array());
+        assert_eq!(m2.hw.launch_overhead_s, m.hw.launch_overhead_s);
+        assert_eq!(c.samples, 0);
+        assert_eq!(c.theta()[CostParams::N], m.hw.launch_overhead_s);
+    }
+
+    #[test]
+    fn json_round_trip_is_byte_identical() {
+        let m = machine();
+        let mut c = Calibration::identity(&m);
+        // awkward floats on purpose: subnormal-ish, repeating binary
+        c.loss_before = 0.1;
+        c.loss_after = 0.05 / 3.0;
+        c.params.load_issue = 4.0 * 1.1;
+        c.samples = 316;
+        let s1 = c.to_json();
+        let c2 = Calibration::from_json(&s1).unwrap();
+        assert_eq!(c2, c);
+        assert_eq!(c2.to_json(), s1, "to_json ∘ from_json must be identity on bytes");
+    }
+
+    #[test]
+    fn from_json_rejects_bad_artifacts() {
+        assert!(Calibration::from_json("not json").is_err());
+        assert!(Calibration::from_json("{}").is_err());
+        let m = machine();
+        let wrong = Calibration::identity(&m).to_json().replace(
+            "\"schema_version\": 1",
+            "\"schema_version\": 999",
+        );
+        assert!(Calibration::from_json(&wrong).is_err());
+    }
+
+    #[test]
+    fn fit_recovers_a_perturbed_model_and_never_worsens() {
+        let m = machine();
+        // ground truth: same formulas, drifted constants
+        let mut drifted = m.clone();
+        let base = m.params.to_array();
+        let mult = [1.8, 0.55, 1.6, 2.4, 0.45, 1.5, 2.0];
+        let mut v = [0.0; CostParams::N];
+        for i in 0..CostParams::N {
+            v[i] = base[i] * mult[i];
+        }
+        drifted.params = CostParams::from_array(v);
+        drifted.hw.launch_overhead_s *= 4.0;
+        let truth = CostModel::new(&drifted);
+
+        let samples = spmm_samples(&truth);
+        assert!(samples.len() > 20);
+        let cal = fit(&m, &samples);
+        assert_eq!(cal.samples, samples.len());
+        assert!(cal.loss_after <= cal.loss_before);
+        assert!(
+            cal.loss_after < cal.loss_before * 0.9,
+            "descent should strictly reduce an out-of-fit loss: {} -> {}",
+            cal.loss_before,
+            cal.loss_after
+        );
+        for (i, p) in cal.params.to_array().iter().enumerate() {
+            assert!(*p >= MIN_PARAM, "param {} collapsed: {p}", CostParams::NAMES[i]);
+        }
+        assert!(cal.launch_overhead_s >= 0.0);
+    }
+
+    #[test]
+    fn fit_with_no_usable_samples_is_identity() {
+        let m = machine();
+        let cal = fit(&m, &[]);
+        assert_eq!(cal, Calibration::identity(&m));
+        // non-positive measurements are unusable too
+        let a = erdos_renyi(64, 64, 300, 1).to_csr();
+        let stats = crate::sparse::MatrixStats::of(&a);
+        let bad = vec![Sample::new(
+            crate::algos::catalog::Algo::SgapNnzGroup { c: 4, r: 8 },
+            WorkloadSpec::Spmm { stats, n: 4 },
+            0.0,
+        )];
+        assert_eq!(fit(&m, &bad), Calibration::identity(&m));
+    }
+
+    #[test]
+    fn spearman_extremes() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((spearman(&xs, &[10.0, 20.0, 30.0, 40.0]) - 1.0).abs() < 1e-12);
+        assert!((spearman(&xs, &[4.0, 3.0, 2.0, 1.0]) + 1.0).abs() < 1e-12);
+    }
+}

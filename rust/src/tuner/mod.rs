@@ -5,16 +5,21 @@
 //! candidate, no warp interpretation) used to prune grids and drive the
 //! selector's model-argmin fast path; [`search`] simulates — exhaustively
 //! via `tune*`, or over a model-pruned shortlist via `tune*_pruned`.
+//! [`calibrate`] closes the loop the other way: it fits the model's
+//! constants to measured latencies (offline via `sgap profile`, online
+//! via the coordinator's drift tracker).
 
+pub mod calibrate;
 pub mod model;
 pub mod search;
 pub mod selector;
 pub mod space;
 
+pub use calibrate::{fit, spearman, Calibration, Sample, WorkloadSpec, CALIBRATION_SCHEMA_VERSION};
 pub use model::{CostModel, Workload};
 pub use search::{
-    tune, tune_banded, tune_fused, tune_fused_pruned, tune_fused_ranked, tune_mttkrp,
-    tune_mttkrp_pruned, tune_mttkrp_ranked, tune_pruned, tune_sddmm, tune_sddmm_pruned,
+    calibrated_machine, tune, tune_banded, tune_fused, tune_fused_pruned, tune_fused_ranked,
+    tune_mttkrp, tune_mttkrp_pruned, tune_mttkrp_ranked, tune_pruned, tune_sddmm, tune_sddmm_pruned,
     tune_sddmm_ranked, tune_ttm, tune_ttm_pruned, tune_ttm_ranked, PrunedOutcome, TuneOutcome,
     DEFAULT_TOP_K,
 };

@@ -63,6 +63,13 @@ struct Estimate {
 pub struct CostModel {
     pub hw: HwProfile,
     pub params: CostParams,
+    /// Which fit the constants came from: 0 = the hand-seeded defaults,
+    /// `n > 0` = the coordinator's nth refit
+    /// (`coordinator::calibrate::OnlineCalibrator` bumps this through
+    /// [`CostModel::calibrated`]). Pricing ignores it; executors compare
+    /// it against the calibrator's generation to know when their cached
+    /// model is stale.
+    pub calib_generation: u64,
 }
 
 const P: f64 = 256.0; // threads per block of every compiler family
@@ -71,7 +78,23 @@ const WARP: f64 = 32.0;
 impl CostModel {
     /// Price with the same profile and constants a [`Machine`] charges.
     pub fn new(machine: &Machine) -> CostModel {
-        CostModel { hw: machine.hw, params: machine.params }
+        CostModel { hw: machine.hw, params: machine.params, calib_generation: 0 }
+    }
+
+    /// Price with a fitted [`Calibration`] applied on top of `machine`:
+    /// the fitted `CostParams` and `launch_overhead_s` replace the
+    /// machine's own, and the model is tagged with `generation` so
+    /// caches can tell fits apart.
+    ///
+    /// [`Calibration`]: crate::tuner::calibrate::Calibration
+    pub fn calibrated(
+        machine: &Machine,
+        calib: &crate::tuner::calibrate::Calibration,
+        generation: u64,
+    ) -> CostModel {
+        let mut m = machine.clone();
+        calib.apply(&mut m);
+        CostModel { hw: m.hw, params: m.params, calib_generation: generation }
     }
 
     /// Estimated execution time in seconds for `algo` on `workload`.
@@ -493,6 +516,26 @@ mod tests {
 
     fn model() -> CostModel {
         CostModel::new(&Machine::new(HwProfile::rtx3090()))
+    }
+
+    #[test]
+    fn calibrated_model_prices_with_the_fitted_constants() {
+        let machine = Machine::new(HwProfile::rtx3090());
+        let mut cal = crate::tuner::calibrate::Calibration::identity(&machine);
+        cal.params.load_issue *= 2.0;
+        cal.launch_overhead_s *= 3.0;
+        let m = CostModel::calibrated(&machine, &cal, 7);
+        assert_eq!(m.calib_generation, 7);
+        assert_eq!(m.params.load_issue, machine.params.load_issue * 2.0);
+        assert_eq!(m.hw.launch_overhead_s, machine.hw.launch_overhead_s * 3.0);
+        // and the applied constants change actual prices
+        let a = erdos_renyi(256, 256, 2000, 1).to_csr();
+        let stats = MatrixStats::of(&a);
+        let w = Workload::Spmm { stats: &stats, n: 4 };
+        let plan = Algo::SgapNnzGroup { c: 4, r: 8 };
+        let base = CostModel::new(&machine).price(&plan, &w).unwrap();
+        let fitted = m.price(&plan, &w).unwrap();
+        assert!(fitted > base, "doubled load_issue must not price cheaper: {fitted} vs {base}");
     }
 
     #[test]

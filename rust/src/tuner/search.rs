@@ -14,11 +14,27 @@ use crate::sim::Machine;
 use crate::sparse::coo3::Coo3;
 use crate::sparse::{Csr, MatrixStats, SegStats};
 
+use super::calibrate::Calibration;
 use super::model::{CostModel, Workload};
 
 /// Shortlist size the serving layer prunes candidate grids to by default
 /// (the SpMM grid is ~4–8× larger; see DESIGN.md §cost-model-vs-analytic).
 pub const DEFAULT_TOP_K: usize = 8;
+
+/// The machine every `tune*` entry point should be handed when a fitted
+/// [`Calibration`] is live: the fit's `CostParams` + `launch_overhead_s`
+/// applied on top of `machine`. Both the analytic shortlist pricing and
+/// the warp simulation of the survivors read the returned machine's
+/// constants, so one call here keeps model and simulator consistent —
+/// there is deliberately no per-call `calib` parameter on the `tune*`
+/// family. `None` returns the machine unchanged.
+pub fn calibrated_machine(machine: &Machine, calib: Option<&Calibration>) -> Machine {
+    let mut m = machine.clone();
+    if let Some(c) = calib {
+        c.apply(&mut m);
+    }
+    m
+}
 
 /// Outcome of tuning one matrix: all results, sorted fastest-first.
 #[derive(Debug)]
@@ -403,6 +419,23 @@ mod tests {
     use crate::sim::HwProfile;
     use crate::sparse::{erdos_renyi, SplitMix64};
     use crate::tuner::space::{sddmm_candidates, sgap_candidates};
+
+    #[test]
+    fn calibrated_machine_applies_the_fit_to_sim_and_model_alike() {
+        let machine = Machine::new(HwProfile::rtx3090());
+        assert_eq!(
+            calibrated_machine(&machine, None).params.to_array(),
+            machine.params.to_array()
+        );
+        let mut cal = Calibration::identity(&machine);
+        cal.params.shfl = 5.0;
+        cal.launch_overhead_s = 1.0e-8;
+        let m = calibrated_machine(&machine, Some(&cal));
+        assert_eq!(m.params.shfl, 5.0);
+        assert_eq!(m.hw.launch_overhead_s, 1.0e-8);
+        // one machine feeds both tiers, so they see the same constants
+        assert_eq!(CostModel::new(&m).params.shfl, 5.0);
+    }
 
     #[test]
     fn tune_ranks_candidates() {

@@ -1,0 +1,85 @@
+//! The committed `CALIBRATION.json` artifact (repo root): schema
+//! validation, canonical-format byte round-trip, and the blessed
+//! regeneration flow — the calibration mirror of `bench_json.rs`.
+//!
+//! The committed file pins the *schema and invariants*, not the exact
+//! fitted constants — re-profiling legitimately moves them, so
+//! refreshing is a blessed operation:
+//! `SGAP_BLESS=1 cargo test --test calibration_json` (equivalently
+//! `cargo run --release -- profile --quick --out ..` from `rust/`).
+
+use std::path::PathBuf;
+
+use sgap::bench_util::{run_profile, validate_calibration_json};
+use sgap::sim::{HwProfile, Machine};
+use sgap::tuner::calibrate::{Calibration, CALIBRATION_SCHEMA_VERSION};
+
+fn committed() -> PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("CALIBRATION.json")
+}
+
+#[test]
+fn committed_calibration_matches_schema() {
+    let path = committed();
+    if std::env::var_os("SGAP_BLESS").is_some() {
+        let machine = Machine::new(HwProfile::rtx3090());
+        let report = run_profile(&machine, true).unwrap();
+        report.calibration.save(&path).unwrap_or_else(|e| panic!("bless {}: {e}", path.display()));
+    }
+    let src = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+        panic!(
+            "missing committed {}: {e}\n(regenerate with `SGAP_BLESS=1 cargo test --test \
+             calibration_json` or `sgap profile --quick`)",
+            path.display()
+        )
+    });
+    validate_calibration_json(&src).unwrap_or_else(|e| {
+        panic!("committed {} fails the documented schema: {e}", path.display())
+    });
+}
+
+#[test]
+fn committed_calibration_round_trips_byte_identically() {
+    if std::env::var_os("SGAP_BLESS").is_some() {
+        return; // the blessing test above rewrites the file this run
+    }
+    let src = std::fs::read_to_string(committed()).unwrap();
+    let cal = Calibration::from_json(&src).unwrap();
+    assert_eq!(cal.version, CALIBRATION_SCHEMA_VERSION);
+    // the committed artifact must be in canonical `to_json` format, so a
+    // coordinator that loads and re-saves it produces the same bytes
+    assert_eq!(cal.to_json(), src, "committed CALIBRATION.json is not in canonical format");
+    // and it applies cleanly to the profile it was fitted on
+    let mut m = Machine::new(HwProfile::rtx3090());
+    cal.apply(&mut m);
+    for (i, p) in m.params.to_array().iter().enumerate() {
+        assert!(*p > 0.0, "applied param {} must stay positive", sgap::sim::CostParams::NAMES[i]);
+    }
+    assert!(m.hw.launch_overhead_s >= 0.0);
+}
+
+#[test]
+fn live_quick_profile_round_trips_through_the_schema_gate() {
+    let machine = Machine::new(HwProfile::rtx3090());
+    let report = run_profile(&machine, true).unwrap();
+    // the emitted artifact passes its own schema gate
+    validate_calibration_json(&report.calibration.to_json()).unwrap();
+    // one fidelity row per quick-suite matrix, each sweeping > 1 candidate
+    assert_eq!(report.rows.len(), sgap::sparse::dataset::mini_suite().len());
+    for row in &report.rows {
+        assert!(row.samples > 1, "{}: degenerate sweep", row.matrix);
+        assert!(row.spearman_before.abs() <= 1.0 && row.spearman_after.abs() <= 1.0);
+    }
+    // the fit never makes the training loss worse (monotone descent)
+    assert!(report.calibration.loss_after <= report.calibration.loss_before);
+    // fitting to the simulator keeps rank fidelity at least competitive:
+    // the fit minimises magnitude error, so don't demand strict rank
+    // improvement here (the drift fixture in tuner_calibration.rs does);
+    // a collapse would mean the fitter broke
+    assert!(
+        report.mean_spearman_after() >= report.mean_spearman_before() - 0.1,
+        "fit collapsed rank fidelity: {:.4} -> {:.4}",
+        report.mean_spearman_before(),
+        report.mean_spearman_after()
+    );
+}

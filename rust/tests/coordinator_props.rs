@@ -9,7 +9,7 @@ use std::sync::Arc;
 use sgap::algos::cpu_ref::{max_rel_err, spmm_serial};
 use sgap::algos::mttkrp::{mttkrp_serial, ttm_serial};
 use sgap::algos::sddmm::sddmm_serial;
-use sgap::coordinator::{Batcher, Coordinator, CoordinatorConfig, Request};
+use sgap::coordinator::{Batcher, CalibConfig, Coordinator, CoordinatorConfig, Request};
 use sgap::sparse::{erdos_renyi, power_law, Coo3, Csr, SplitMix64};
 
 /// Random push/drain interleavings: FIFO per key, no loss, batch bound.
@@ -196,6 +196,20 @@ fn coordinator_stress_mixed_traffic() {
     assert!(s.backends.iter().any(|b| b.backend == "sim:ttm-group"), "{:?}", s.backends);
     let served: u64 = s.backends.iter().map(|b| b.count).sum();
     assert_eq!(served, s.completed, "per-backend counts sum to completed");
+    // per-op quantiles: the mix exercises the full quartet, so each op
+    // label has a populated histogram with ordered quantiles, and the
+    // per-op counts partition completed
+    for want in ["spmm", "sddmm", "mttkrp", "ttm"] {
+        let o = s
+            .ops
+            .iter()
+            .find(|o| o.op == want)
+            .unwrap_or_else(|| panic!("missing per-op snapshot for {want}: {:?}", s.ops));
+        assert!(o.count > 0, "{want}: empty op histogram");
+        assert!(o.p50_us <= o.p99_us, "{want}: p50 {} > p99 {}", o.p50_us, o.p99_us);
+    }
+    let op_total: u64 = s.ops.iter().map(|o| o.count).sum();
+    assert_eq!(op_total, s.completed, "per-op counts sum to completed");
 
     let cache = coord.plan_cache.stats();
     assert!(cache.hits > 0 && cache.entries >= 2);
@@ -261,6 +275,62 @@ fn submit_racing_shutdown_never_deadlocks() {
     Arc::try_unwrap(coord).ok().expect("submitters joined").shutdown();
     assert!(total > 0, "some requests must have been served");
     assert!(cache.stats().misses > 0);
+}
+
+/// Drift injection: with online calibration enabled and the drift
+/// threshold forced to zero, a stream of sim-served SpMM jobs must trip
+/// at least one refit — new constants go live (generation advances), the
+/// affected plan-cache scenario is invalidated, and the calibration
+/// metrics advance.
+#[test]
+fn online_drift_triggers_refit_and_cache_invalidation() {
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers: 1,
+        calib: CalibConfig {
+            enabled: true,
+            drift_threshold: 0.0, // every observation counts as drift
+            min_samples: 8,
+            ..CalibConfig::default()
+        },
+        ..CoordinatorConfig::default()
+    })
+    .unwrap();
+    assert_eq!(coord.calibrator.generation(), 0, "no warm start configured");
+
+    // one repeated sim-admitted shape: repeats hit the plan cache, so the
+    // invalidation provably dropped a live entry
+    let mut rng = SplitMix64::new(0xD21F7);
+    let a = erdos_renyi(32, 32, 100, 1).to_csr();
+    let n = 4usize;
+    let mut sim_served = 0usize;
+    for _ in 0..60 {
+        let b: Vec<f32> = (0..a.cols * n).map(|_| rng.value()).collect();
+        let resp = coord.spmm_blocking(a.clone(), b, n).unwrap();
+        if resp.backend.is_sim() {
+            sim_served += 1;
+        }
+    }
+    // premise: the shape is sim-admitted, so the calibrator saw samples
+    assert!(sim_served >= 8, "only {sim_served}/60 jobs were sim-served");
+
+    let s = coord.metrics.snapshot();
+    assert!(s.calib_samples >= 8, "calibrator observed {} samples", s.calib_samples);
+    assert!(s.calib_refits >= 1, "zero drift threshold must force a refit");
+    assert!(s.calib_residual >= 0.0 && s.calib_residual.is_finite());
+    assert!(
+        coord.calibrator.generation() >= 1,
+        "a refit must advance the calibrator generation"
+    );
+    let cache = coord.plan_cache.stats();
+    assert!(
+        cache.invalidations >= 1,
+        "refit must invalidate the spmm scenario's cached plans"
+    );
+    // the service kept answering correctly across refits (checked by
+    // spmm_blocking's Ok), and the loop converges rather than thrashing:
+    // after a refit the EWMA resets, so refits stay bounded by samples
+    assert!(s.calib_refits <= s.calib_samples / 8 + 1);
+    coord.shutdown();
 }
 
 /// Metrics quantiles are ordered and the global/identity counters agree.

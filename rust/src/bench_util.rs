@@ -748,6 +748,68 @@ pub fn validate_calibration_json(src: &str) -> Result<(), String> {
     Ok(())
 }
 
+/// Validate a `PLANS.json` plan-catalog document: exact key sets per
+/// level, version, scenario/origin vocabulary, and positive widths. The
+/// drift gate for the committed artifact, mirroring
+/// [`validate_calibration_json`]. Structural depth — per-family algo
+/// fields, hybrid band plans — is delegated to the typed parser, which
+/// rejects anything it cannot round-trip.
+pub fn validate_plan_catalog_json(src: &str) -> Result<(), String> {
+    use crate::coordinator::{OpKind, PlanCatalog, PLAN_CATALOG_SCHEMA_VERSION};
+    // the typed parser enforces per-family field presence and band
+    // structure; run it first so its errors name the offending entry
+    PlanCatalog::from_json(src).map_err(|e| format!("{e:#}"))?;
+    let doc = Json::parse(src).map_err(|e| e.to_string())?;
+    let obj = doc.as_obj().ok_or("top level must be an object")?;
+    let keys: Vec<&str> = obj.keys().map(String::as_str).collect();
+    let mut want = vec!["schema_version", "entries"];
+    want.sort_unstable();
+    if keys != want {
+        return Err(format!("top-level keys {keys:?} != schema {want:?}"));
+    }
+    let ver = doc.get("schema_version").and_then(Json::as_f64).ok_or("schema_version")?;
+    if ver as u64 != PLAN_CATALOG_SCHEMA_VERSION {
+        return Err(format!("schema_version {ver} != {PLAN_CATALOG_SCHEMA_VERSION}"));
+    }
+    let entries = doc.get("entries").and_then(Json::as_arr).ok_or("entries must be an array")?;
+    for (i, entry) in entries.iter().enumerate() {
+        let eobj = entry.as_obj().ok_or(format!("entry {i} must be an object"))?;
+        let ekeys: Vec<&str> = eobj.keys().map(String::as_str).collect();
+        let mut ewant = vec![
+            "scenario", "rows", "cols", "nnz", "width", "cv_q", "mean_q", "empty_q", "origin",
+            "plan",
+        ];
+        ewant.sort_unstable();
+        if ekeys != ewant {
+            return Err(format!("entry {i} keys {ekeys:?} != schema {ewant:?}"));
+        }
+        let scenario = entry.get("scenario").and_then(Json::as_str).ok_or("scenario")?;
+        if OpKind::from_label(scenario).is_none() {
+            return Err(format!("entry {i}: unknown scenario {scenario:?}"));
+        }
+        let origin = entry.get("origin").and_then(Json::as_str).ok_or("origin")?;
+        if !matches!(origin, "selector" | "tuned") {
+            return Err(format!("entry {i}: unknown origin {origin:?}"));
+        }
+        for field in ["rows", "cols", "nnz", "width", "cv_q", "mean_q", "empty_q"] {
+            let v = entry.get(field).and_then(Json::as_f64).ok_or(field)?;
+            if !(v.is_finite() && v >= 0.0 && v.fract() == 0.0) {
+                return Err(format!("entry {i}: {field} must be a non-negative integer ({v})"));
+            }
+        }
+        let width = entry.get("width").and_then(Json::as_f64).unwrap_or(0.0);
+        if width < 1.0 {
+            return Err(format!("entry {i}: width must be positive ({width})"));
+        }
+        entry
+            .get("plan")
+            .and_then(|p| p.get("algo"))
+            .and_then(Json::as_str)
+            .ok_or(format!("entry {i}: plan.algo must be a string"))?;
+    }
+    Ok(())
+}
+
 /// Fixed-width table printer.
 pub struct Table {
     pub headers: Vec<String>,
@@ -801,6 +863,36 @@ mod tests {
     fn normalized_clamps_at_one() {
         assert_eq!(normalized_speedup(2.0, 1.0), 1.0); // A slower: count 1
         assert_eq!(normalized_speedup(1.0, 2.0), 2.0);
+    }
+
+    #[test]
+    fn plan_catalog_validator_gates_the_committed_schema() {
+        use crate::algos::catalog::Algo;
+        use crate::coordinator::catalog::CatalogEntry;
+        use crate::coordinator::{
+            OpKind, Plan, PlanCatalog, PlanOrigin, ShapeKey, PLAN_CATALOG_SCHEMA_VERSION,
+        };
+        let key = ShapeKey::from_parts(OpKind::Spmm, 64, 48, 400, 4, 8, 2, 1);
+        let plan = Plan { kind: Algo::SgapNnzGroup { c: 4, r: 32 }, origin: PlanOrigin::Tuned };
+        let cat = PlanCatalog {
+            version: PLAN_CATALOG_SCHEMA_VERSION,
+            entries: vec![CatalogEntry { key, plan }],
+        };
+        let json = cat.to_json();
+        validate_plan_catalog_json(&json).unwrap();
+        // version drift
+        let bad = json.replace("\"schema_version\": 1", "\"schema_version\": 9");
+        assert!(validate_plan_catalog_json(&bad).is_err());
+        // vocabulary drift
+        let bad = json.replace("\"origin\": \"tuned\"", "\"origin\": \"oracle\"");
+        assert!(validate_plan_catalog_json(&bad).is_err());
+        // a lost key fails the exact-key-set gate
+        let bad = json.replace("      \"width\": 4,\n", "");
+        assert!(validate_plan_catalog_json(&bad).is_err());
+        // an extra key fails too — the typed parser tolerates it (get()
+        // by name), so only this validator pins the byte schema
+        let bad = json.replace("      \"rows\": 64,\n", "      \"rank\": 2,\n      \"rows\": 64,\n");
+        assert!(validate_plan_catalog_json(&bad).is_err());
     }
 
     #[test]

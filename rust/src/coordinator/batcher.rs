@@ -1,14 +1,19 @@
-//! Shape-bucket batcher: groups queued requests by routing key (the
-//! typed [`BackendKind`](super::BackendKind) an executor admission
-//! resolves to) so a worker amortizes executable lookup/dispatch over a
-//! batch.
+//! Shape-bucket batcher: groups queued requests by a coalescing key (the
+//! coordinator keys on the op's plan-cache `ShapeKey`, so same-shape ops
+//! from *different* sessions ride one launch) so a worker amortizes
+//! plan lookup/dispatch over a batch.
 //!
 //! Invariants (property-tested in `rust/tests/coordinator_props.rs`):
 //! * FIFO within a bucket — requests to the same key keep arrival order;
 //! * fairness across buckets — `next_batch` serves the bucket whose head
-//!   arrived earliest;
+//!   arrived earliest, so from the moment an item becomes its bucket's
+//!   head at most `live buckets` drains (≤ `buckets × max_batch` pops)
+//!   pass before its bucket is served — no bucket starves;
 //! * no loss — every pushed item is drained exactly once;
-//! * batch bound — a batch never exceeds `max_batch`.
+//! * batch bound — a batch never exceeds `max_batch`;
+//! * age bound — under [`Batcher::next_ready`], a bucket is held back to
+//!   coalesce only while it is neither full nor older than `age_bound`
+//!   arrivals, so coalescing never adds unbounded latency.
 
 use std::collections::{HashMap, VecDeque};
 use std::hash::Hash;
@@ -24,12 +29,34 @@ pub struct Batcher<K: Eq + Hash + Clone, T> {
     index: HashMap<K, usize>,
     counter: u64,
     max_batch: usize,
+    /// Coalescing window for [`Batcher::next_ready`], in arrivals: a
+    /// bucket is ripe once full or once `counter - head_seq >= age_bound`.
+    /// `0` (the [`Batcher::new`] default) makes every bucket instantly
+    /// ripe, i.e. no coalescing window.
+    age_bound: u64,
 }
 
 impl<K: Eq + Hash + Clone, T> Batcher<K, T> {
     pub fn new(max_batch: usize) -> Self {
+        Self::with_age_bound(max_batch, 0)
+    }
+
+    /// A batcher whose [`Batcher::next_ready`] holds partially-filled
+    /// buckets back for up to `age_bound` subsequent arrivals, waiting
+    /// for same-key traffic to coalesce.
+    pub fn with_age_bound(max_batch: usize, age_bound: u64) -> Self {
         assert!(max_batch > 0);
-        Batcher { buckets: Vec::new(), index: HashMap::new(), counter: 0, max_batch }
+        Batcher {
+            buckets: Vec::new(),
+            index: HashMap::new(),
+            counter: 0,
+            max_batch,
+            age_bound,
+        }
+    }
+
+    pub fn age_bound(&self) -> u64 {
+        self.age_bound
     }
 
     pub fn push(&mut self, key: K, item: T) {
@@ -63,6 +90,31 @@ impl<K: Eq + Hash + Clone, T> Batcher<K, T> {
             .filter(|(_, (_, q))| !q.is_empty())
             .min_by_key(|(_, (_, q))| q.front().map(|(s, _)| *s).unwrap_or(u64::MAX))
             .map(|(i, _)| i)?;
+        self.drain_bucket(idx)
+    }
+
+    /// Pop the next *ripe* batch — the oldest-head bucket among those that
+    /// are full (`len >= max_batch`) or whose head has waited `age_bound`
+    /// or more arrivals. Returns `None` while every bucket is still
+    /// inside its coalescing window (the caller flushes those with
+    /// [`Batcher::next_batch`] once no more traffic is imminent).
+    pub fn next_ready(&mut self) -> Option<(K, Vec<T>)> {
+        let counter = self.counter;
+        let (max_batch, age_bound) = (self.max_batch, self.age_bound);
+        let idx = self
+            .buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, (_, q))| {
+                q.len() >= max_batch
+                    || q.front().is_some_and(|(s, _)| counter - s >= age_bound)
+            })
+            .min_by_key(|(_, (_, q))| q.front().map(|(s, _)| *s).unwrap_or(u64::MAX))
+            .map(|(i, _)| i)?;
+        self.drain_bucket(idx)
+    }
+
+    fn drain_bucket(&mut self, idx: usize) -> Option<(K, Vec<T>)> {
         let key = self.buckets[idx].0.clone();
         let q = &mut self.buckets[idx].1;
         let take = q.len().min(self.max_batch);
@@ -131,6 +183,41 @@ mod tests {
         assert_eq!(b.next_batch().unwrap(), ("c", vec![3, 4]));
         assert_eq!(b.next_batch().unwrap(), ("a", vec![5]));
         assert!(b.next_batch().is_none() && b.is_empty());
+    }
+
+    #[test]
+    fn next_ready_holds_young_buckets_and_releases_full_or_aged_ones() {
+        let mut b = Batcher::with_age_bound(2, 4);
+        assert_eq!(b.age_bound(), 4);
+        b.push("a", 1);
+        // one item, head age 1 < 4: still inside the coalescing window
+        assert!(b.next_ready().is_none());
+        b.push("a", 2);
+        // full bucket is ripe regardless of age
+        assert_eq!(b.next_ready().unwrap(), ("a", vec![1, 2]));
+        // ageing out: a lone item becomes ripe after `age_bound` arrivals
+        b.push("b", 3);
+        assert!(b.next_ready().is_none());
+        b.push("c", 4);
+        b.push("c", 5);
+        b.push("c", 6);
+        // "b"'s head (seq 2) has now waited counter(6) - 2 = 4 arrivals,
+        // and it is the oldest ripe head — served before the full "c"
+        assert_eq!(b.next_ready().unwrap(), ("b", vec![3]));
+        assert_eq!(b.next_ready().unwrap(), ("c", vec![4, 5]));
+        // the "c" remainder (seq 6) is young and under-filled again
+        assert!(b.next_ready().is_none());
+        // next_batch flushes the window unconditionally
+        assert_eq!(b.next_batch().unwrap(), ("c", vec![6]));
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn zero_age_bound_makes_next_ready_eager() {
+        let mut b = Batcher::new(4);
+        b.push("a", 1);
+        assert_eq!(b.next_ready().unwrap(), ("a", vec![1]), "no window by default");
+        assert!(b.next_ready().is_none());
     }
 
     #[test]

@@ -1,0 +1,523 @@
+//! Persistent plan catalog: the serving layer's tuned-plan memory,
+//! serialized next to `CALIBRATION.json` so a restarted coordinator
+//! warm-starts with yesterday's winners instead of re-selecting and
+//! re-tuning every shape from scratch (`serve --plans FILE`).
+//!
+//! The artifact follows the same canonical-format discipline as
+//! [`Calibration`](crate::tuner::calibrate::Calibration): fixed key
+//! order, fixed `{:.17e}` float format, a `schema_version` gate that
+//! rejects unknown layouts with a typed error, and the byte-round-trip
+//! contract `to_json ∘ from_json = identity` (pinned by
+//! `rust/tests/plan_catalog.rs` against the committed `PLANS.json`).
+//! Entries are serialized **structurally** — one tagged object per
+//! [`Algo`] family carrying its config fields verbatim — because the
+//! human-readable `Algo::name` strings have no parser and never will:
+//! display strings drift, field lists don't.
+//!
+//! A loaded catalog is installed via [`PlanCatalog::warm`], which
+//! [`PlanCache::preload`]s each entry: preloaded entries keep their
+//! persisted origin, are marked *warm*, and hits on them surface as
+//! `Metrics::warm_hits` — the observable warm-start payoff the scale
+//! suite asserts on.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::algos::catalog::{Algo, BandAlgo, CompositeConfig};
+use crate::algos::{DgConfig, FusedConfig, MttkrpConfig, SddmmConfig, TtmConfig};
+use crate::runtime::json::Json;
+
+use super::op::OpKind;
+use super::plan_cache::{Plan, PlanCache, PlanOrigin, ShapeKey};
+
+/// Artifact layout version. Bump on any key or semantics change; loads
+/// of other versions fail with a typed error (the coordinator then
+/// cold-starts cleanly).
+pub const PLAN_CATALOG_SCHEMA_VERSION: u64 = 1;
+
+/// One persisted cache line: the shape fingerprint and the plan that
+/// served it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CatalogEntry {
+    pub key: ShapeKey,
+    pub plan: Plan,
+}
+
+/// A versioned snapshot of the plan cache, in canonical order (scenario,
+/// then exact shape, then quantized features) so `save → load → save` is
+/// byte-identical regardless of shard layout or arrival order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanCatalog {
+    pub version: u64,
+    pub entries: Vec<CatalogEntry>,
+}
+
+impl PlanCatalog {
+    /// Snapshot `cache` into canonical order.
+    pub fn from_cache(cache: &PlanCache) -> PlanCatalog {
+        let mut entries: Vec<CatalogEntry> =
+            cache.entries().into_iter().map(|(key, plan)| CatalogEntry { key, plan }).collect();
+        entries.sort_by_key(|e| sort_key(&e.key));
+        PlanCatalog { version: PLAN_CATALOG_SCHEMA_VERSION, entries }
+    }
+
+    /// Install every entry into `cache` via [`PlanCache::preload`].
+    /// Returns how many entries actually landed (keys already cached by
+    /// live traffic are skipped — live wins over yesterday's catalog).
+    pub fn warm(&self, cache: &PlanCache) -> usize {
+        self.entries.iter().filter(|e| cache.preload(e.key, e.plan)).count()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Serialize with fixed key order and `{:.17e}` floats — the same
+    /// byte-identity discipline as the calibration artifact. Entry order
+    /// is emitted verbatim ([`PlanCatalog::from_cache`] canonicalizes).
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"schema_version\": {},\n", self.version));
+        if self.entries.is_empty() {
+            s.push_str("  \"entries\": []\n");
+        } else {
+            s.push_str("  \"entries\": [\n");
+            for (i, e) in self.entries.iter().enumerate() {
+                s.push_str(&entry_json(e));
+                s.push_str(if i + 1 < self.entries.len() { ",\n" } else { "\n" });
+            }
+            s.push_str("  ]\n");
+        }
+        s.push_str("}\n");
+        s
+    }
+
+    pub fn from_json(src: &str) -> Result<PlanCatalog> {
+        let j = Json::parse(src).context("plan catalog is not valid JSON")?;
+        let version = j
+            .get("schema_version")
+            .and_then(Json::as_f64)
+            .context("plan catalog: missing `schema_version`")? as u64;
+        if version != PLAN_CATALOG_SCHEMA_VERSION {
+            bail!(
+                "plan catalog schema version {version} (this build reads {})",
+                PLAN_CATALOG_SCHEMA_VERSION
+            );
+        }
+        let entries_j =
+            j.get("entries").and_then(Json::as_arr).context("plan catalog: missing `entries`")?;
+        let mut entries = Vec::with_capacity(entries_j.len());
+        for (i, ej) in entries_j.iter().enumerate() {
+            entries.push(entry_from_json(ej).with_context(|| format!("plan catalog: entry {i}"))?);
+        }
+        Ok(PlanCatalog { version, entries })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json())
+            .with_context(|| format!("writing plan catalog to {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<PlanCatalog> {
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading plan catalog from {}", path.display()))?;
+        Self::from_json(&src)
+    }
+}
+
+/// Canonical entry order: scenario (in [`OpKind::ALL`] order), then the
+/// exact-shape fields, then the quantized features.
+fn sort_key(k: &ShapeKey) -> (usize, usize, usize, usize, u32, u16, u16, u16) {
+    let (cv_q, mean_q, empty_q) = k.quantized_features();
+    let sc = OpKind::ALL.iter().position(|s| *s == k.scenario).unwrap_or(usize::MAX);
+    (sc, k.rows, k.cols, k.nnz, k.width, cv_q, mean_q, empty_q)
+}
+
+fn origin_label(o: PlanOrigin) -> &'static str {
+    match o {
+        PlanOrigin::Selector => "selector",
+        PlanOrigin::Tuned => "tuned",
+    }
+}
+
+fn origin_from_label(s: &str) -> Result<PlanOrigin> {
+    match s {
+        "selector" => Ok(PlanOrigin::Selector),
+        "tuned" => Ok(PlanOrigin::Tuned),
+        other => bail!("unknown plan origin `{other}`"),
+    }
+}
+
+/// Same fixed float format as the calibration artifact: 18 significant
+/// digits round-trip f64 exactly, and the fixed width keeps byte
+/// identity independent of the value.
+fn fmt_f64(x: f64) -> String {
+    format!("{x:.17e}")
+}
+
+fn entry_json(e: &CatalogEntry) -> String {
+    let (cv_q, mean_q, empty_q) = e.key.quantized_features();
+    let mut s = String::new();
+    s.push_str("    {\n");
+    s.push_str(&format!("      \"scenario\": \"{}\",\n", e.key.scenario.label()));
+    s.push_str(&format!("      \"rows\": {},\n", e.key.rows));
+    s.push_str(&format!("      \"cols\": {},\n", e.key.cols));
+    s.push_str(&format!("      \"nnz\": {},\n", e.key.nnz));
+    s.push_str(&format!("      \"width\": {},\n", e.key.width));
+    s.push_str(&format!("      \"cv_q\": {cv_q},\n"));
+    s.push_str(&format!("      \"mean_q\": {mean_q},\n"));
+    s.push_str(&format!("      \"empty_q\": {empty_q},\n"));
+    s.push_str(&format!("      \"origin\": \"{}\",\n", origin_label(e.plan.origin)));
+    s.push_str(&format!("      \"plan\": {}\n", algo_obj(&e.plan.kind, 6)));
+    s.push_str("    }");
+    s
+}
+
+fn entry_from_json(j: &Json) -> Result<CatalogEntry> {
+    let scenario_s = j.get("scenario").and_then(Json::as_str).context("missing `scenario`")?;
+    let scenario = OpKind::from_label(scenario_s)
+        .with_context(|| format!("unknown scenario `{scenario_s}`"))?;
+    let us = |key: &str| -> Result<usize> {
+        j.get(key).and_then(Json::as_usize).with_context(|| format!("missing `{key}`"))
+    };
+    let key = ShapeKey::from_parts(
+        scenario,
+        us("rows")?,
+        us("cols")?,
+        us("nnz")?,
+        us("width")? as u32,
+        us("cv_q")? as u16,
+        us("mean_q")? as u16,
+        us("empty_q")? as u16,
+    );
+    let origin =
+        origin_from_label(j.get("origin").and_then(Json::as_str).context("missing `origin`")?)?;
+    let kind = algo_from_json(j.get("plan").context("missing `plan`")?)?;
+    Ok(CatalogEntry { key, plan: Plan { kind, origin } })
+}
+
+/// Serialize one plan as a tagged object: `"algo"` is the stable
+/// [`Algo::family_label`], the remaining keys are the family's config
+/// fields verbatim. `base` is the indent of the line embedding the
+/// opening brace; inner keys sit at `base + 2`.
+fn algo_obj(a: &Algo, base: usize) -> String {
+    let p = " ".repeat(base + 2);
+    let mut s = String::from("{\n");
+    s.push_str(&format!("{p}\"algo\": \"{}\",\n", a.family_label()));
+    match *a {
+        Algo::TacoNnzSerial { g, c } => {
+            s.push_str(&format!("{p}\"g\": {g},\n{p}\"c\": {c}\n"));
+        }
+        Algo::TacoRowSerial { x, c } => {
+            s.push_str(&format!("{p}\"x\": {x},\n{p}\"c\": {c}\n"));
+        }
+        Algo::SgapRowGroup { g, c, r } => {
+            s.push_str(&format!("{p}\"g\": {g},\n{p}\"c\": {c},\n{p}\"r\": {r}\n"));
+        }
+        Algo::SgapNnzGroup { c, r } => {
+            s.push_str(&format!("{p}\"c\": {c},\n{p}\"r\": {r}\n"));
+        }
+        Algo::Dg(d) => {
+            s.push_str(&format!("{p}\"n\": {},\n", d.n));
+            s.push_str(&format!("{p}\"group_sz\": {},\n", d.group_sz));
+            s.push_str(&format!("{p}\"block_sz\": {},\n", d.block_sz));
+            s.push_str(&format!("{p}\"tile_sz\": {},\n", d.tile_sz));
+            s.push_str(&format!("{p}\"worker_dim_r_frac\": {},\n", fmt_f64(d.worker_dim_r_frac)));
+            s.push_str(&format!("{p}\"worker_sz\": {},\n", d.worker_sz));
+            s.push_str(&format!("{p}\"coarsen_sz\": {}\n", d.coarsen_sz));
+        }
+        Algo::Sddmm(c) => {
+            s.push_str(&format!(
+                "{p}\"j_dim\": {},\n{p}\"g\": {},\n{p}\"r\": {},\n{p}\"p\": {}\n",
+                c.j_dim, c.g, c.r, c.p
+            ));
+        }
+        Algo::Mttkrp(c) => {
+            s.push_str(&format!(
+                "{p}\"j_dim\": {},\n{p}\"c\": {},\n{p}\"p\": {},\n{p}\"r\": {}\n",
+                c.j_dim, c.c, c.p, c.r
+            ));
+        }
+        Algo::Ttm(c) => {
+            s.push_str(&format!(
+                "{p}\"l_dim\": {},\n{p}\"c\": {},\n{p}\"p\": {},\n{p}\"r\": {}\n",
+                c.l_dim, c.c, c.p, c.r
+            ));
+        }
+        Algo::FusedSddmmSpmm(c) => {
+            s.push_str(&format!(
+                "{p}\"j_dim\": {},\n{p}\"n\": {},\n{p}\"c\": {},\n{p}\"p\": {},\n{p}\"r\": {}\n",
+                c.j_dim, c.n, c.c, c.p, c.r
+            ));
+        }
+        Algo::Composite(cc) => {
+            s.push_str(&format!("{p}\"bands\": {},\n", cc.bands));
+            s.push_str(&format!("{p}\"cuts\": [{}, {}],\n", cc.cuts[0], cc.cuts[1]));
+            s.push_str(&format!("{p}\"plans\": [\n"));
+            for (i, bp) in cc.plans.iter().enumerate() {
+                s.push_str(&format!("{p}  {}", algo_obj(&bp.to_algo(), base + 4)));
+                s.push_str(if i + 1 < cc.plans.len() { ",\n" } else { "\n" });
+            }
+            s.push_str(&format!("{p}]\n"));
+        }
+    }
+    s.push_str(&format!("{}}}", " ".repeat(base)));
+    s
+}
+
+fn algo_from_json(j: &Json) -> Result<Algo> {
+    let tag = j.get("algo").and_then(Json::as_str).context("plan: missing `algo`")?;
+    let u = |key: &str| -> Result<u32> {
+        j.get(key)
+            .and_then(Json::as_f64)
+            .map(|v| v as u32)
+            .with_context(|| format!("plan `{tag}`: missing `{key}`"))
+    };
+    let f = |key: &str| -> Result<f64> {
+        j.get(key)
+            .and_then(Json::as_f64)
+            .with_context(|| format!("plan `{tag}`: missing `{key}`"))
+    };
+    match tag {
+        "taco-nnz-serial" => Ok(Algo::TacoNnzSerial { g: u("g")?, c: u("c")? }),
+        "taco-row-serial" => Ok(Algo::TacoRowSerial { x: u("x")?, c: u("c")? }),
+        "sgap-row-group" => Ok(Algo::SgapRowGroup { g: u("g")?, c: u("c")?, r: u("r")? }),
+        "sgap-nnz-group" => Ok(Algo::SgapNnzGroup { c: u("c")?, r: u("r")? }),
+        "dgsparse" => Ok(Algo::Dg(DgConfig {
+            n: u("n")?,
+            group_sz: u("group_sz")?,
+            block_sz: u("block_sz")?,
+            tile_sz: u("tile_sz")?,
+            worker_dim_r_frac: f("worker_dim_r_frac")?,
+            worker_sz: u("worker_sz")?,
+            coarsen_sz: u("coarsen_sz")?,
+        })),
+        "sddmm-group" => Ok(Algo::Sddmm(SddmmConfig {
+            j_dim: u("j_dim")?,
+            g: u("g")?,
+            r: u("r")?,
+            p: u("p")?,
+        })),
+        "mttkrp-group" => Ok(Algo::Mttkrp(MttkrpConfig {
+            j_dim: u("j_dim")?,
+            c: u("c")?,
+            p: u("p")?,
+            r: u("r")?,
+        })),
+        "ttm-group" => Ok(Algo::Ttm(TtmConfig {
+            l_dim: u("l_dim")?,
+            c: u("c")?,
+            p: u("p")?,
+            r: u("r")?,
+        })),
+        "fused-sddmm-spmm" => Ok(Algo::FusedSddmmSpmm(FusedConfig {
+            j_dim: u("j_dim")?,
+            n: u("n")?,
+            c: u("c")?,
+            p: u("p")?,
+            r: u("r")?,
+        })),
+        "hybrid" => {
+            let bands = u("bands")? as u8;
+            let cuts_j =
+                j.get("cuts").and_then(Json::as_arr).context("plan `hybrid`: missing `cuts`")?;
+            if cuts_j.len() != 2 {
+                bail!("plan `hybrid`: `cuts` must hold exactly 2 buckets");
+            }
+            let cut = |i: usize| -> Result<u8> {
+                cuts_j[i]
+                    .as_f64()
+                    .map(|v| v as u8)
+                    .with_context(|| format!("plan `hybrid`: cuts[{i}] is not a number"))
+            };
+            let plans_j =
+                j.get("plans").and_then(Json::as_arr).context("plan `hybrid`: missing `plans`")?;
+            if plans_j.len() != 3 {
+                bail!("plan `hybrid`: `plans` must hold exactly 3 band plans");
+            }
+            let mut plans = [BandAlgo::SgapNnzGroup { c: 1, r: 1 }; 3];
+            for (i, pj) in plans_j.iter().enumerate() {
+                let band = algo_from_json(pj).with_context(|| format!("plan `hybrid`: band {i}"))?;
+                plans[i] = BandAlgo::from_algo(band).with_context(|| {
+                    format!("plan `hybrid`: band {i} must be an SpMM compiler-family plan")
+                })?;
+            }
+            Ok(Algo::Composite(CompositeConfig { bands, cuts: [cut(0)?, cut(1)?], plans }))
+        }
+        other => bail!("plan catalog: unknown algo family `{other}`"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// One entry per serializable family — the full structural surface.
+    fn full_catalog() -> PlanCatalog {
+        let k = |i: usize, scenario: OpKind| {
+            ShapeKey::from_parts(scenario, 64 + i, 48, 400 + i, 4, 8, 2, 1)
+        };
+        let entries = vec![
+            CatalogEntry {
+                key: k(0, OpKind::Spmm),
+                plan: Plan {
+                    kind: Algo::TacoNnzSerial { g: 16, c: 4 },
+                    origin: PlanOrigin::Selector,
+                },
+            },
+            CatalogEntry {
+                key: k(1, OpKind::Spmm),
+                plan: Plan { kind: Algo::TacoRowSerial { x: 2, c: 2 }, origin: PlanOrigin::Tuned },
+            },
+            CatalogEntry {
+                key: k(2, OpKind::Spmm),
+                plan: Plan {
+                    kind: Algo::SgapRowGroup { g: 8, c: 4, r: 8 },
+                    origin: PlanOrigin::Tuned,
+                },
+            },
+            CatalogEntry {
+                key: k(3, OpKind::Spmm),
+                plan: Plan { kind: Algo::SgapNnzGroup { c: 4, r: 8 }, origin: PlanOrigin::Tuned },
+            },
+            CatalogEntry {
+                key: k(4, OpKind::Spmm),
+                plan: Plan { kind: Algo::Dg(DgConfig::stock(4)), origin: PlanOrigin::Selector },
+            },
+            CatalogEntry {
+                key: k(5, OpKind::Spmm),
+                plan: Plan {
+                    kind: Algo::Composite(CompositeConfig {
+                        bands: 3,
+                        cuts: [2, 5],
+                        plans: [
+                            BandAlgo::TacoRowSerial { x: 1, c: 4 },
+                            BandAlgo::SgapRowGroup { g: 8, c: 4, r: 8 },
+                            BandAlgo::SgapNnzGroup { c: 4, r: 32 },
+                        ],
+                    }),
+                    origin: PlanOrigin::Tuned,
+                },
+            },
+            CatalogEntry {
+                key: k(0, OpKind::Sddmm),
+                plan: Plan {
+                    kind: Algo::Sddmm(SddmmConfig::new(16, 8, 4)),
+                    origin: PlanOrigin::Selector,
+                },
+            },
+            CatalogEntry {
+                key: k(0, OpKind::Mttkrp),
+                plan: Plan {
+                    kind: Algo::Mttkrp(MttkrpConfig::new(8, 4, 8)),
+                    origin: PlanOrigin::Tuned,
+                },
+            },
+            CatalogEntry {
+                key: k(0, OpKind::Ttm),
+                plan: Plan { kind: Algo::Ttm(TtmConfig::new(4, 4, 8)), origin: PlanOrigin::Tuned },
+            },
+            CatalogEntry {
+                key: k(0, OpKind::FusedSddmmSpmm),
+                plan: Plan {
+                    kind: Algo::FusedSddmmSpmm(FusedConfig::new(16, 4, 4, 8)),
+                    origin: PlanOrigin::Selector,
+                },
+            },
+        ];
+        PlanCatalog { version: PLAN_CATALOG_SCHEMA_VERSION, entries }
+    }
+
+    #[test]
+    fn every_family_round_trips_byte_identically() {
+        let cat = full_catalog();
+        let json = cat.to_json();
+        let back = PlanCatalog::from_json(&json).unwrap();
+        assert_eq!(back, cat, "structural round-trip");
+        assert_eq!(back.to_json(), json, "byte round-trip");
+    }
+
+    #[test]
+    fn empty_catalog_round_trips() {
+        let cat = PlanCatalog { version: PLAN_CATALOG_SCHEMA_VERSION, entries: vec![] };
+        let json = cat.to_json();
+        assert!(json.contains("\"entries\": []"));
+        let back = PlanCatalog::from_json(&json).unwrap();
+        assert!(back.is_empty());
+        assert_eq!(back.to_json(), json);
+    }
+
+    #[test]
+    fn version_gate_and_corruption_are_typed_errors() {
+        let cat = full_catalog();
+        let json = cat.to_json();
+        // wrong version: typed bail naming both versions
+        let bumped = json.replace("\"schema_version\": 1", "\"schema_version\": 99");
+        let err = PlanCatalog::from_json(&bumped).unwrap_err().to_string();
+        assert!(err.contains("99") && err.contains('1'), "{err}");
+        // truncation: parse error, not a panic
+        assert!(PlanCatalog::from_json(&json[..json.len() / 2]).is_err());
+        // unknown family tag
+        let bad = json.replace("\"algo\": \"sgap-nnz-group\"", "\"algo\": \"warp-magic\"");
+        let err = PlanCatalog::from_json(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("warp-magic"), "{err:#}");
+        // a band plan outside the four SpMM families is rejected: the
+        // needle's 12-space indent matches only the composite's band 0,
+        // not the top-level taco-row-serial entry (8-space indent)
+        let needle = "\"algo\": \"taco-row-serial\",\n            \"x\"";
+        let swap = "\"algo\": \"dgsparse\",\n            \"x\"";
+        let bad_band = json.replace(needle, swap);
+        assert_ne!(bad_band, json, "needle must match the band plan");
+        assert!(PlanCatalog::from_json(&bad_band).is_err());
+    }
+
+    #[test]
+    fn from_cache_is_canonically_sorted_and_warm_restores() {
+        let cache = PlanCache::with_shards(64, 4);
+        // insert in deliberately scrambled order
+        for e in full_catalog().entries.iter().rev() {
+            assert!(cache.preload(e.key, e.plan));
+        }
+        let cat = PlanCatalog::from_cache(&cache);
+        assert_eq!(cat.len(), full_catalog().len());
+        let keys: Vec<_> = cat.entries.iter().map(|e| sort_key(&e.key)).collect();
+        let mut sorted = keys.clone();
+        sorted.sort();
+        assert_eq!(keys, sorted, "from_cache emits canonical order");
+        // the snapshot order is shard-independent: a 1-shard rebuild of
+        // the same contents serializes to the same bytes
+        let single = PlanCache::new(64);
+        for e in cat.entries.iter() {
+            assert!(single.preload(e.key, e.plan));
+        }
+        assert_eq!(PlanCatalog::from_cache(&single).to_json(), cat.to_json());
+        // warm() installs everything into a cold cache, once
+        let cold = PlanCache::with_shards(64, 8);
+        assert_eq!(cat.warm(&cold), cat.len());
+        assert_eq!(cold.len(), cat.len());
+        assert_eq!(cat.warm(&cold), 0, "re-warming an already-warm cache is a no-op");
+        for e in &cat.entries {
+            assert_eq!(cold.get(&e.key), Some(e.plan), "plans and origins survive");
+        }
+    }
+
+    #[test]
+    fn save_load_save_is_byte_identical_on_disk() {
+        let dir = std::env::temp_dir().join(format!("sgap-catalog-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("PLANS.json");
+        let cat = full_catalog();
+        cat.save(&path).unwrap();
+        let first = std::fs::read(&path).unwrap();
+        let loaded = PlanCatalog::load(&path).unwrap();
+        loaded.save(&path).unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), first);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

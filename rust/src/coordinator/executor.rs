@@ -417,12 +417,15 @@ impl Executor for SimExecutor {
         // `None` selection means no legal launch shape covers the width —
         // the op is declined, untouched by cache statistics, and falls to
         // the CPU executor.
-        let (plan, hit) = self
+        let (plan, hit, warm) = self
             .env
             .plan_cache
-            .try_get_or_insert_with(key, || op.select(&self.env.selector, self.model.as_ref()))?;
+            .try_get_or_insert_traced(key, || op.select(&self.env.selector, self.model.as_ref()))?;
         if hit {
             self.env.metrics.on_cache_hit();
+            if warm {
+                self.env.metrics.on_warm_hit();
+            }
         } else {
             self.env.metrics.on_cache_miss();
             self.env.request_tune(key, op.a.clone(), op.width as u32);

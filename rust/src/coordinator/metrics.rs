@@ -50,6 +50,16 @@ pub struct Metrics {
     /// Gauge: the worst per-`OpKind` EWMA |log(measured/predicted)|
     /// residual last reported by the calibrator (f64 bits).
     calib_residual: AtomicU64,
+    /// Requests that rode another session's launch: for every cross-session
+    /// batch of `k > 1` same-`ShapeKey` ops, `k - 1` are counted coalesced.
+    coalesced: AtomicU64,
+    /// Submissions refused by admission control (`OpError::Overloaded`).
+    /// Rejected ops are *not* counted in `submitted`, so
+    /// `completed + errors == submitted` still holds.
+    rejected: AtomicU64,
+    /// Plan-cache hits that landed on a catalog-preloaded (warm) entry —
+    /// the `serve --plans` warm-start payoff.
+    warm_hits: AtomicU64,
     /// Latencies in microseconds (bounded reservoir).
     latencies_us: Mutex<Vec<u64>>,
     backends: Mutex<BTreeMap<String, Hist>>,
@@ -140,6 +150,14 @@ pub struct MetricsSnapshot {
     pub calib_samples: u64,
     pub calib_refits: u64,
     pub calib_residual: f64,
+    /// Requests that rode another session's launch (per batch of `k`
+    /// same-key ops, `k - 1` count as coalesced).
+    pub coalesced: u64,
+    /// Submissions refused by admission control; disjoint from
+    /// `submitted`.
+    pub rejected: u64,
+    /// Plan-cache hits on catalog-preloaded entries (warm starts).
+    pub warm_hits: u64,
     pub p50_us: u64,
     pub p99_us: u64,
     pub mean_us: f64,
@@ -226,6 +244,23 @@ impl Metrics {
         self.calib_refits.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// `extra` requests rode a launch they didn't trigger — a
+    /// cross-session batch of `k` same-key ops reports `k - 1`.
+    pub fn on_coalesced(&self, extra: u64) {
+        self.coalesced.fetch_add(extra, Ordering::Relaxed);
+    }
+
+    /// Admission control refused a submission (queue saturated). The op
+    /// never entered the queue, so `on_submit` was not called for it.
+    pub fn on_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A plan-cache hit landed on a catalog-preloaded (warm) entry.
+    pub fn on_warm_hit(&self) {
+        self.warm_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn on_error(&self) {
         self.errors.fetch_add(1, Ordering::Relaxed);
     }
@@ -283,6 +318,9 @@ impl Metrics {
             calib_samples: self.calib_samples.load(Ordering::Relaxed),
             calib_refits: self.calib_refits.load(Ordering::Relaxed),
             calib_residual: f64::from_bits(self.calib_residual.load(Ordering::Relaxed)),
+            coalesced: self.coalesced.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            warm_hits: self.warm_hits.load(Ordering::Relaxed),
             p50_us: q(0.50),
             p99_us: q(0.99),
             mean_us: mean,
@@ -435,6 +473,22 @@ mod tests {
         assert_eq!(s.tune_survivors, 31);
         assert_eq!(s.tune_model_agree, 2);
         assert_eq!(Metrics::new().snapshot().tunes, 0);
+    }
+
+    #[test]
+    fn serving_scale_trio_tracks_independently() {
+        let m = Metrics::new();
+        let s0 = m.snapshot();
+        assert_eq!((s0.coalesced, s0.rejected, s0.warm_hits), (0, 0, 0));
+        m.on_coalesced(3); // a 4-op cross-session batch
+        m.on_coalesced(1); // a 2-op batch
+        m.on_rejected();
+        m.on_warm_hit();
+        m.on_warm_hit();
+        let s = m.snapshot();
+        assert_eq!((s.coalesced, s.rejected, s.warm_hits), (4, 1, 2));
+        // rejection never touches the submitted/completed identity
+        assert_eq!((s.submitted, s.completed, s.errors), (0, 0, 0));
     }
 
     #[test]

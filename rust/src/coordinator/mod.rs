@@ -22,22 +22,30 @@
 //!   backends plug in through the registry.
 //!
 //! Mechanically: a **pool** of worker threads ([`pool`]) drains a bounded
-//! job queue (backpressure on submit), micro-batches by backend
-//! ([`batcher`]), and serves the full §2.1 quartet. Kernel choice is
-//! **tuner-aware**: each operand fingerprint is looked up in the
-//! [`plan_cache`] — a miss runs the DA-SpMM-style
-//! [`Selector`](crate::tuner::Selector) fast path (by default the
-//! analytic cost-model argmin), and an optional background thread refines
-//! hot shapes with the model-pruned `tuner::tune*_pruned` sweep,
-//! upgrading the cached plan in place. [`metrics`] keeps global
-//! quantiles, per-backend latency histograms, and cache hit/miss
-//! counters.
+//! job queue (blocking backpressure on `submit`, typed
+//! `OpError::Overloaded` rejection on `try_submit`), coalesces
+//! same-shape traffic **across sessions** in one shared [`batcher`]
+//! keyed by plan-cache [`ShapeKey`] (operands are `Arc`-backed, so a
+//! cross-session batch is routing, not copying), and serves the full
+//! §2.1 quartet. Kernel choice is **tuner-aware**: each operand
+//! fingerprint is looked up in the [`plan_cache`] — N key-hashed shards,
+//! so 64 concurrent sessions don't serialize on one mutex — where a miss
+//! runs the DA-SpMM-style [`Selector`](crate::tuner::Selector) fast path
+//! (by default the analytic cost-model argmin), and an optional
+//! background thread refines hot shapes with the model-pruned
+//! `tuner::tune*_pruned` sweep, upgrading the cached plan in place.
+//! Tuned plans persist across runs via the versioned [`catalog`]
+//! artifact (`serve --plans FILE` warm-starts from it). [`metrics`]
+//! keeps global quantiles, per-backend and per-op latency histograms,
+//! cache hit/miss counters, and the serving-at-scale trio
+//! (`coalesced`/`rejected`/`warm_hits`).
 //!
 //! Thread-based throughout (the offline dependency set has no async
 //! runtime); callers get a [`Ticket`] future per op.
 
 pub mod batcher;
 pub mod calibrate;
+pub mod catalog;
 pub mod executor;
 pub mod metrics;
 pub mod op;
@@ -48,6 +56,7 @@ pub mod session;
 
 pub use batcher::Batcher;
 pub use calibrate::{CalibConfig, OnlineCalibrator};
+pub use catalog::{CatalogEntry, PlanCatalog, PLAN_CATALOG_SCHEMA_VERSION};
 pub use executor::{
     cpu_factory, factory, pjrt_factory, sim_factory, Admission, BackendKind, CpuExecutor,
     Executor, ExecutorEnv, ExecutorFactory, ExecutorRegistry, PjrtExecutor, SimExecutor,

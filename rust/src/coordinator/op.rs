@@ -77,6 +77,12 @@ impl OpKind {
         }
     }
 
+    /// Inverse of [`OpKind::label`] — the plan-catalog load path, where
+    /// persisted scenario tags must round-trip exactly.
+    pub fn from_label(label: &str) -> Option<OpKind> {
+        OpKind::ALL.into_iter().find(|k| k.label() == label)
+    }
+
     /// The name of the dense-width dimension in this algebra's signature.
     pub fn width_name(self) -> &'static str {
         match self {
@@ -321,6 +327,10 @@ pub enum OpError {
     /// `extent × width` overflows `usize` — absurd dims are rejected here
     /// instead of overflowing (and panicking) in debug builds.
     DimOverflow { kind: OpKind, operand: &'static str, extent: usize, width: usize },
+    /// Admission control refused the op: the job queue already holds
+    /// `depth` of its `cap` jobs. The op never entered the queue — retry
+    /// with backoff, shed load, or use the blocking submit path.
+    Overloaded { depth: usize, cap: usize },
 }
 
 impl fmt::Display for OpError {
@@ -349,6 +359,9 @@ impl fmt::Display for OpError {
                     "{kind}: {operand} extent {extent} x {} {width} overflows usize",
                     kind.width_name(),
                 )
+            }
+            OpError::Overloaded { depth, cap } => {
+                write!(f, "overloaded: job queue at {depth}/{cap}, submission rejected")
             }
         }
     }
@@ -712,6 +725,10 @@ mod tests {
         assert!(matches!(huge.validate(), Err(OpError::DimOverflow { operand: "B", .. })));
         assert!(huge.validate().unwrap_err().to_string().contains("overflows"));
 
+        // admission-control rejection renders its depth/cap pair
+        let over = OpError::Overloaded { depth: 256, cap: 256 };
+        assert_eq!(over.to_string(), "overloaded: job queue at 256/256, submission rejected");
+
         // operand-class mismatch is typed too
         let t = SparseHandle::tensor(Coo3::random((8, 6, 5), 30, 2));
         let cross = Op { kind: OpKind::Spmm, a: t, dense: vec![], width: 4 };
@@ -724,7 +741,10 @@ mod tests {
         for kind in OpKind::ALL {
             assert!(!kind.label().is_empty());
             assert!(kind.dense_arity() >= 1 && kind.dense_arity() <= 3);
+            assert_eq!(OpKind::from_label(kind.label()), Some(kind), "labels round-trip");
         }
+        assert_eq!(OpKind::from_label("spmm2"), None);
+        assert_eq!(OpKind::from_label(""), None);
         assert_eq!(OpKind::Sddmm.width_name(), "j_dim");
         assert_eq!(OpKind::Ttm.to_string(), "ttm");
         assert!(OpKind::Mttkrp.wants_tensor() && !OpKind::Spmm.wants_tensor());

@@ -124,6 +124,28 @@ impl ShapeKey {
     pub fn ttm(a: &Coo3, l_dim: u32) -> ShapeKey {
         Self::ttm_stats(&SegStats::ttm(a), a.dim2, l_dim)
     }
+
+    /// Rebuild a key from its serialized parts — the plan-catalog load
+    /// path ([`PlanCatalog`](super::PlanCatalog)), where the quantized
+    /// features were persisted verbatim and must not be re-derived.
+    pub fn from_parts(
+        scenario: Scenario,
+        rows: usize,
+        cols: usize,
+        nnz: usize,
+        width: u32,
+        cv_q: u16,
+        mean_q: u16,
+        empty_q: u16,
+    ) -> ShapeKey {
+        ShapeKey { scenario, rows, cols, nnz, width, cv_q, mean_q, empty_q }
+    }
+
+    /// The quantized structure features `(cv_q, mean_q, empty_q)` — what
+    /// the plan catalog persists alongside the exact-shape fields.
+    pub fn quantized_features(&self) -> (u16, u16, u16) {
+        (self.cv_q, self.mean_q, self.empty_q)
+    }
 }
 
 /// How the cached plan was chosen.
@@ -155,41 +177,94 @@ pub struct PlanCacheStats {
     /// Entries dropped by [`PlanCache::invalidate_scenario`] (calibration
     /// refits, not capacity pressure — those are `evictions`).
     pub invalidations: u64,
+    /// Hits on entries preloaded from a persisted plan catalog
+    /// ([`PlanCache::preload`]) — the warm-start payoff counter.
+    pub warm_hits: u64,
+}
+
+/// One cached entry: the served plan plus whether it arrived via
+/// [`PlanCache::preload`] (a persisted catalog) — hits on warm entries
+/// are counted separately so warm-start effectiveness is observable.
+#[derive(Clone, Copy)]
+struct Entry {
+    plan: Plan,
+    warm: bool,
 }
 
 struct Inner {
-    map: HashMap<ShapeKey, Plan>,
+    map: HashMap<ShapeKey, Entry>,
     /// Insertion order for FIFO eviction.
     order: VecDeque<ShapeKey>,
 }
 
-/// Bounded, thread-safe plan cache (FIFO eviction).
+impl Inner {
+    fn empty() -> Inner {
+        Inner { map: HashMap::new(), order: VecDeque::new() }
+    }
+}
+
+/// Bounded, thread-safe plan cache: N key-hashed shards, each a FIFO
+/// bounded map behind its own lock, so concurrent sessions hitting
+/// disjoint shapes never serialize on one mutex. Hit/miss/upgrade
+/// counters stay cache-global (one `stats()` surface); eviction is FIFO
+/// *per shard* with a per-shard bound of `ceil(capacity / shards)`, so
+/// total entries never exceed `capacity + shards - 1`.
+/// [`PlanCache::new`] builds a single shard, which preserves the exact
+/// pre-sharding semantics (global FIFO order, global capacity).
 pub struct PlanCache {
-    inner: Mutex<Inner>,
-    capacity: usize,
+    shards: Vec<Mutex<Inner>>,
+    shard_capacity: usize,
     hits: AtomicU64,
     misses: AtomicU64,
     upgrades: AtomicU64,
     evictions: AtomicU64,
     invalidations: AtomicU64,
+    warm_hits: AtomicU64,
 }
 
 impl PlanCache {
+    /// A single-shard cache — exact global FIFO semantics. The
+    /// coordinator builds the sharded variant via
+    /// [`PlanCache::with_shards`].
     pub fn new(capacity: usize) -> PlanCache {
+        Self::with_shards(capacity, 1)
+    }
+
+    /// A cache of `shards` key-hashed shards sharing `capacity` entries
+    /// (each shard bounds `ceil(capacity / shards)`, FIFO per shard).
+    pub fn with_shards(capacity: usize, shards: usize) -> PlanCache {
         assert!(capacity > 0, "plan cache capacity must be positive");
+        assert!(shards > 0, "plan cache needs at least one shard");
         PlanCache {
-            inner: Mutex::new(Inner { map: HashMap::new(), order: VecDeque::new() }),
-            capacity,
+            shards: (0..shards).map(|_| Mutex::new(Inner::empty())).collect(),
+            shard_capacity: capacity.div_ceil(shards),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             upgrades: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
             invalidations: AtomicU64::new(0),
+            warm_hits: AtomicU64::new(0),
         }
     }
 
-    /// Look up `key`; on a miss run `select` (under the lock — selection is
-    /// a few float comparisons) and cache its choice with
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard holding `key` — a hash of the full key, so all lookups,
+    /// inserts, upgrades, and preloads of one shape agree on the lock.
+    /// `DefaultHasher::new()` uses fixed keys, so routing is deterministic
+    /// within a build (shard tests and differential traces reproduce).
+    fn shard(&self, key: &ShapeKey) -> &Mutex<Inner> {
+        use std::collections::hash_map::DefaultHasher;
+        use std::hash::{Hash, Hasher};
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[(h.finish() as usize) % self.shards.len()]
+    }
+
+    /// Look up `key`; on a miss run `select` (under the shard lock —
+    /// selection is a few float comparisons) and cache its choice with
     /// [`PlanOrigin::Selector`]. Returns the plan and whether it was a hit.
     pub fn get_or_insert_with(
         &self,
@@ -210,15 +285,40 @@ impl PlanCache {
         key: ShapeKey,
         select: impl FnOnce() -> Option<Algo>,
     ) -> Option<(Plan, bool)> {
-        let mut inner = self.inner.lock().unwrap();
-        if let Some(plan) = inner.map.get(&key) {
-            let plan = *plan;
+        self.try_get_or_insert_traced(key, select).map(|(plan, hit, _)| (plan, hit))
+    }
+
+    /// [`PlanCache::try_get_or_insert_with`] that also reports whether a
+    /// hit landed on a warm (catalog-preloaded) entry — the serving path
+    /// uses the third flag to drive `Metrics::warm_hits`.
+    pub fn try_get_or_insert_traced(
+        &self,
+        key: ShapeKey,
+        select: impl FnOnce() -> Option<Algo>,
+    ) -> Option<(Plan, bool, bool)> {
+        let mut inner = self.shard(&key).lock().unwrap();
+        if let Some(entry) = inner.map.get(&key) {
+            let entry = *entry;
             drop(inner);
             self.hits.fetch_add(1, Ordering::Relaxed);
-            return Some((plan, true));
+            if entry.warm {
+                self.warm_hits.fetch_add(1, Ordering::Relaxed);
+            }
+            return Some((entry.plan, true, entry.warm));
         }
         let kind = select()?;
-        while inner.map.len() >= self.capacity {
+        self.evict_to_fit(&mut inner);
+        let plan = Plan { kind, origin: PlanOrigin::Selector };
+        inner.map.insert(key, Entry { plan, warm: false });
+        inner.order.push_back(key);
+        drop(inner);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        Some((plan, false, false))
+    }
+
+    /// FIFO-evict until the shard has room for one more entry.
+    fn evict_to_fit(&self, inner: &mut Inner) {
+        while inner.map.len() >= self.shard_capacity {
             match inner.order.pop_front() {
                 Some(old) => {
                     inner.map.remove(&old);
@@ -227,26 +327,37 @@ impl PlanCache {
                 None => break, // map/order drifted; never expected, but don't spin
             }
         }
-        let plan = Plan { kind, origin: PlanOrigin::Selector };
-        inner.map.insert(key, plan);
+    }
+
+    /// Install a persisted catalog entry (warm start). Keeps the plan's
+    /// persisted origin, marks the entry warm, and respects the shard
+    /// bound (FIFO eviction). Returns `false` — and changes nothing —
+    /// when the key is already cached: live traffic outranks yesterday's
+    /// catalog. Records neither a hit nor a miss (no op consulted a plan).
+    pub fn preload(&self, key: ShapeKey, plan: Plan) -> bool {
+        let mut inner = self.shard(&key).lock().unwrap();
+        if inner.map.contains_key(&key) {
+            return false;
+        }
+        self.evict_to_fit(&mut inner);
+        inner.map.insert(key, Entry { plan, warm: true });
         inner.order.push_back(key);
-        drop(inner);
-        self.misses.fetch_add(1, Ordering::Relaxed);
-        Some((plan, false))
+        true
     }
 
     pub fn get(&self, key: &ShapeKey) -> Option<Plan> {
-        self.inner.lock().unwrap().map.get(key).copied()
+        self.shard(key).lock().unwrap().map.get(key).map(|e| e.plan)
     }
 
     /// Replace an existing entry with a tuner-chosen plan. Returns false if
     /// the entry was evicted in the meantime (the upgrade is dropped — the
-    /// next miss re-selects and may be re-tuned).
+    /// next miss re-selects and may be re-tuned). A warm entry stays warm:
+    /// its key still came from the catalog.
     pub fn upgrade(&self, key: ShapeKey, kind: Algo) -> bool {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.shard(&key).lock().unwrap();
         match inner.map.get_mut(&key) {
-            Some(plan) => {
-                *plan = Plan { kind, origin: PlanOrigin::Tuned };
+            Some(entry) => {
+                entry.plan = Plan { kind, origin: PlanOrigin::Tuned };
                 drop(inner);
                 self.upgrades.fetch_add(1, Ordering::Relaxed);
                 true
@@ -259,20 +370,41 @@ impl PlanCache {
     /// refit path: a new `CostParams` fit can reorder candidates for the
     /// op kinds it was fitted on, so their cached selector/tuner picks
     /// are stale — the next miss re-selects under the refit model.
-    /// Returns how many entries were dropped.
+    /// Each shard is swept atomically under its own lock (a concurrent
+    /// lookup sees either all of a shard's stale entries or none of
+    /// them); shards are swept in order. Returns how many entries were
+    /// dropped.
     pub fn invalidate_scenario(&self, scenario: Scenario) -> usize {
-        let mut inner = self.inner.lock().unwrap();
-        let before = inner.map.len();
-        inner.map.retain(|k, _| k.scenario != scenario);
-        inner.order.retain(|k| k.scenario != scenario);
-        let dropped = before - inner.map.len();
-        drop(inner);
+        let mut dropped = 0usize;
+        for shard in &self.shards {
+            let mut inner = shard.lock().unwrap();
+            let before = inner.map.len();
+            inner.map.retain(|k, _| k.scenario != scenario);
+            inner.order.retain(|k| k.scenario != scenario);
+            dropped += before - inner.map.len();
+        }
         self.invalidations.fetch_add(dropped as u64, Ordering::Relaxed);
         dropped
     }
 
+    /// Snapshot every cached `(key, plan)` pair, shard by shard in FIFO
+    /// order — the plan catalog's save path. (Canonical catalog order is
+    /// imposed by the catalog itself, not by shard layout.)
+    pub fn entries(&self) -> Vec<(ShapeKey, Plan)> {
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            let inner = shard.lock().unwrap();
+            for key in &inner.order {
+                if let Some(entry) = inner.map.get(key) {
+                    out.push((*key, entry.plan));
+                }
+            }
+        }
+        out
+    }
+
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().map.len()
+        self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -287,6 +419,7 @@ impl PlanCache {
             upgrades: self.upgrades.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),
             invalidations: self.invalidations.load(Ordering::Relaxed),
+            warm_hits: self.warm_hits.load(Ordering::Relaxed),
         }
     }
 }
@@ -414,6 +547,97 @@ mod tests {
         // still evicts cleanly instead of popping stale keys
         let (_, hit) = cache.get_or_insert_with(spmm4, plan);
         assert!(!hit, "invalidated keys re-select on next sight");
+    }
+
+    #[test]
+    fn sharded_cache_serves_like_single_shard_without_eviction_pressure() {
+        let sharded = PlanCache::with_shards(64, 8);
+        assert_eq!(sharded.shard_count(), 8);
+        let keys: Vec<ShapeKey> = (0..16usize)
+            .map(|i| key_of(&erdos_renyi(32 + i, 32, 64 + 4 * i, i as u64).to_csr(), 4))
+            .collect();
+        for k in &keys {
+            sharded.get_or_insert_with(*k, || Algo::TacoRowSerial { x: 1, c: 1 });
+            sharded.get_or_insert_with(*k, || panic!("second sight must hit"));
+        }
+        let s = sharded.stats();
+        assert_eq!((s.hits, s.misses, s.entries, s.evictions), (16, 16, 16, 0));
+        for k in &keys {
+            assert!(sharded.get(k).is_some(), "every key lands on its routing shard");
+        }
+        // upgrades route to the same shard as the original insert
+        assert!(sharded.upgrade(keys[3], Algo::SgapNnzGroup { c: 2, r: 4 }));
+        assert_eq!(sharded.get(&keys[3]).unwrap().origin, PlanOrigin::Tuned);
+        // scenario invalidation sweeps every shard
+        assert_eq!(sharded.invalidate_scenario(Scenario::Spmm), 16);
+        assert!(sharded.is_empty());
+    }
+
+    #[test]
+    fn preload_marks_entries_warm_and_hits_count_separately() {
+        let cache = PlanCache::with_shards(16, 4);
+        let key = key_of(&erdos_renyi(64, 64, 400, 9).to_csr(), 4);
+        let plan = Plan { kind: Algo::SgapNnzGroup { c: 4, r: 8 }, origin: PlanOrigin::Tuned };
+        assert!(cache.preload(key, plan));
+        // preloading records neither a hit nor a miss
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.warm_hits, s.entries), (0, 0, 0, 1));
+        // a live lookup hits the warm entry without re-selecting, keeping
+        // the persisted Tuned origin, and bumps both hit counters
+        let (p, hit, warm) = cache
+            .try_get_or_insert_traced(key, || panic!("warm entry must not re-select"))
+            .unwrap();
+        assert!(hit && warm);
+        assert_eq!(p, plan);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.warm_hits), (1, 0, 1));
+        // live traffic outranks the catalog: preload refuses to overwrite
+        let other = Plan { kind: Algo::TacoNnzSerial { g: 2, c: 1 }, origin: PlanOrigin::Selector };
+        assert!(!cache.preload(key, other));
+        assert_eq!(cache.get(&key).unwrap(), plan);
+        // a tuner upgrade keeps the entry warm (its key came from the catalog)
+        assert!(cache.upgrade(key, Algo::SgapRowGroup { g: 2, c: 2, r: 4 }));
+        let (_, _, still_warm) = cache.try_get_or_insert_traced(key, || None).unwrap();
+        assert!(still_warm);
+        // cold entries report warm = false on hits
+        let cold = key_of(&erdos_renyi(32, 32, 100, 3).to_csr(), 8);
+        cache.get_or_insert_with(cold, || Algo::TacoRowSerial { x: 1, c: 1 });
+        let (_, hit, warm) = cache.try_get_or_insert_traced(cold, || None).unwrap();
+        assert!(hit && !warm);
+        assert_eq!(cache.stats().warm_hits, 2, "cold hits don't move warm_hits");
+    }
+
+    #[test]
+    fn entries_snapshot_matches_cache_contents() {
+        let cache = PlanCache::with_shards(32, 4);
+        let keys: Vec<ShapeKey> = (0..6usize)
+            .map(|i| key_of(&erdos_renyi(48 + i, 48, 200, i as u64).to_csr(), 4))
+            .collect();
+        for k in &keys {
+            cache.get_or_insert_with(*k, || Algo::SgapNnzGroup { c: 4, r: 8 });
+        }
+        let snap = cache.entries();
+        assert_eq!(snap.len(), keys.len());
+        for k in &keys {
+            let (_, plan) = snap.iter().find(|(sk, _)| sk == k).expect("key snapshotted");
+            assert_eq!(*plan, cache.get(k).unwrap());
+        }
+    }
+
+    #[test]
+    fn preload_respects_shard_capacity() {
+        // single shard, capacity 2: the third preload FIFO-evicts the first
+        let cache = PlanCache::new(2);
+        let keys: Vec<ShapeKey> = (0..3usize)
+            .map(|i| key_of(&erdos_renyi(32 + i, 32, 64, i as u64).to_csr(), 4))
+            .collect();
+        let plan = Plan { kind: Algo::SgapNnzGroup { c: 4, r: 8 }, origin: PlanOrigin::Tuned };
+        for k in &keys {
+            assert!(cache.preload(*k, plan));
+        }
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.stats().evictions, 1);
+        assert!(cache.get(&keys[0]).is_none(), "oldest preloaded entry evicted");
     }
 
     #[test]

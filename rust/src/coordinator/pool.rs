@@ -49,11 +49,19 @@ impl<T> JobQueue<T> {
     /// item back if the queue has been closed.
     pub fn push(&self, item: T) -> Result<(), T> {
         let mut inner = self.inner.lock().unwrap();
-        while inner.items.len() >= self.capacity && !inner.closed {
+        // Closed is checked FIRST on every wakeup: a pusher woken by
+        // `close()` must hand its item back even if a concurrent pop just
+        // opened a slot, otherwise a pusher that loses the race to the
+        // `not_full` signal can re-sleep on a closed queue and wedge
+        // shutdown (nobody signals `not_full` again after the drain).
+        loop {
+            if inner.closed {
+                return Err(item);
+            }
+            if inner.items.len() < self.capacity {
+                break;
+            }
             inner = self.not_full.wait(inner).unwrap();
-        }
-        if inner.closed {
-            return Err(item);
         }
         inner.items.push_back(item);
         drop(inner);
@@ -180,6 +188,49 @@ mod tests {
         qe.close();
         assert_eq!(pusher.join().unwrap(), Err(8), "pusher got its item back");
         assert_eq!(popper.join().unwrap(), None);
+    }
+
+    #[test]
+    fn close_with_many_blocked_pushers_and_concurrent_drain_does_not_wedge() {
+        // Regression: several pushers block on a full queue while a
+        // consumer drains it and the owner closes concurrently. Every
+        // pusher must return (Ok if it won a slot before close, Err with
+        // its item back otherwise) — none may re-sleep past `close()`.
+        for round in 0..20u32 {
+            let q = Arc::new(JobQueue::new(1));
+            q.push(usize::MAX).unwrap();
+            let mut pushers = Vec::new();
+            for p in 0..4usize {
+                let q = q.clone();
+                pushers.push(std::thread::spawn(move || q.push(p)));
+            }
+            // let the pushers reach the wait loop, then race drain + close
+            std::thread::sleep(Duration::from_millis(5));
+            let qd = q.clone();
+            let drainer = std::thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Some(v) = qd.pop() {
+                    got.push(v);
+                }
+                got
+            });
+            q.close();
+            let mut accepted = 0usize;
+            let mut returned = 0usize;
+            for (p, h) in pushers.into_iter().enumerate() {
+                // join() hanging here is the wedge this test guards against
+                match h.join().unwrap() {
+                    Ok(()) => accepted += 1,
+                    Err(item) => {
+                        assert_eq!(item, p, "pusher got someone else's item back");
+                        returned += 1;
+                    }
+                }
+            }
+            assert_eq!(accepted + returned, 4, "round {round}: a pusher vanished");
+            let drained = drainer.join().unwrap();
+            assert_eq!(drained.len(), 1 + accepted, "round {round}: accepted items were lost");
+        }
     }
 
     #[test]

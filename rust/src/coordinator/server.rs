@@ -2,31 +2,41 @@
 //! §2.1 quartet — SpMM, SDDMM, MTTKRP, and TTM ops — with tuner-aware
 //! kernel selection through a shared [`PlanCache`].
 //!
-//! Architecture (see DESIGN.md §serving):
+//! Architecture (see DESIGN.md §serving and §serving-at-scale):
 //!
 //! ```text
-//! callers ── submit(Op) ──▶ bounded JobQueue (backpressure) ──▶ N workers
-//!                                                                │
+//! callers ── submit(Op) / try_submit ──▶ bounded JobQueue ──▶ N workers
+//!             (blocking)  (Overloaded)                          │
 //!                 ┌──────────────────────────────────────────────┤
 //!                 ▼                                              ▼
-//!          PlanCache (ShapeKey → Algo, any kernel kind)  Batcher per worker
-//!                 │ miss: Selector (model argmin)               │
-//!                 │ async: tuner upgrades the plan              ▼
+//!          PlanCache (sharded; ShapeKey → Algo)   shared Batcher (ShapeKey):
+//!                 │ miss: Selector (model argmin)  cross-session coalescing
+//!                 │ async: tuner upgrades the plan              │
+//!                 │ warm start: PlanCatalog                     ▼
 //!                 ▼                                     Executor stack:
 //!          background tuner thread                      PJRT ▸ sim ▸ CPU
 //! ```
 //!
 //! Callers `submit()` a generic [`Op`] — built from `Arc`-backed operand
 //! handles, so a submit moves pointers, never operand data — and receive
-//! a [`Ticket`]. Workers drain the shared queue (micro-batching under
-//! load via the [`Batcher`], keyed by the typed [`BackendKind`]), ask
-//! their [`Executor`] stack for admission, and serve. The first sight of
-//! a shape runs the DA-SpMM-style [`Selector`] inside the sim executor's
-//! cache consult; repeats are served with the cached plan at zero
-//! selection cost. When `background_tune` is on, every cache miss also
-//! enqueues a grid-search refinement that later *upgrades* the cached
-//! plan to the sweep's winner, so sustained traffic converges on the
-//! tuned kernel.
+//! a [`Ticket`]; `try_submit()` is the non-blocking admission-controlled
+//! variant that answers a saturated queue with a typed
+//! [`OpError::Overloaded`] instead of applying backpressure. Workers
+//! drain the shared queue into one pool-wide [`Batcher`] keyed by the
+//! plan-cache [`ShapeKey`](super::plan_cache::ShapeKey), so same-shape
+//! ops **coalesce across sessions** into a single launch batch (the
+//! `Arc`-backed operands make that routing, not copying); an age bound
+//! keeps a half-full bucket from waiting forever behind hot shapes.
+//! Each batch is then admitted per-op against the worker's [`Executor`]
+//! stack and served. The first sight of a shape runs the DA-SpMM-style
+//! [`Selector`] inside the sim executor's cache consult; repeats are
+//! served with the cached plan at zero selection cost. When
+//! `background_tune` is on, every cache miss also enqueues a grid-search
+//! refinement that later *upgrades* the cached plan to the sweep's
+//! winner, so sustained traffic converges on the tuned kernel. A
+//! [`PlanCatalog`] passed in [`CoordinatorConfig::plans`] pre-warms the
+//! cache so a restarted coordinator skips the selector on day-one
+//! traffic (hits on preloaded entries count `warm_hits`).
 //!
 //! The legacy per-algebra surface (`Request`, `spmm_blocking`,
 //! `submit_mttkrp`, …) is kept as thin shims over the one generic
@@ -34,8 +44,9 @@
 //! new code.
 
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Sender, SyncSender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -50,10 +61,11 @@ use crate::tuner::{self, Selector};
 
 use super::batcher::Batcher;
 use super::calibrate::{CalibConfig, OnlineCalibrator};
-use super::executor::{Admission, BackendKind, Executor, ExecutorEnv, ExecutorRegistry, TuneTask};
+use super::catalog::PlanCatalog;
+use super::executor::{BackendKind, Executor, ExecutorEnv, ExecutorRegistry, TuneTask};
 use super::metrics::Metrics;
-use super::op::{Op, OpKind, Request, SparseData};
-use super::plan_cache::{Plan, PlanCache};
+use super::op::{Op, OpError, OpKind, Request, SparseData};
+use super::plan_cache::{Plan, PlanCache, ShapeKey};
 use super::pool::JobQueue;
 use super::session::Ticket;
 
@@ -89,11 +101,23 @@ struct Job {
     resp: Sender<Result<Response, String>>,
 }
 
-struct Routed {
-    job: Job,
-    adm: Admission,
-    /// Index of the admitting executor in the worker's stack.
-    exec: usize,
+/// The cross-session coalescing key. Ops with a plan-cache fingerprint
+/// share a bucket — no matter which session submitted them — so one drain
+/// serves them as a single batch; keyless ops (degenerate inputs whose
+/// fingerprint is undefined) get a unique `Solo` id and batch alone.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+enum CoalesceKey {
+    Shape(ShapeKey),
+    Solo(u64),
+}
+
+/// The pool-wide coalescing state: one [`Batcher`] shared by every
+/// worker (same-shape jobs from different sessions and different queue
+/// drains meet here), plus the `Solo` id well. The mutex is held only to
+/// stage or drain — never while a batch is served.
+struct Coalescer {
+    batcher: Mutex<Batcher<CoalesceKey, Job>>,
+    solo_seq: AtomicU64,
 }
 
 /// Tuning parameters of the serving layer.
@@ -109,8 +133,18 @@ pub struct CoordinatorConfig {
     pub artifacts_dir: Option<PathBuf>,
     /// Refine cache misses with a background grid-search tuner.
     pub background_tune: bool,
-    /// Plan-cache entry bound (FIFO eviction).
+    /// Plan-cache entry bound (FIFO eviction per shard).
     pub plan_cache_capacity: usize,
+    /// Plan-cache shard count: the key space is hash-partitioned over
+    /// this many independently locked shards so concurrent sessions
+    /// don't serialize on one mutex. `1` reproduces the single-lock
+    /// cache exactly.
+    pub plan_shards: usize,
+    /// Warm-start plan catalog (yesterday's plans, via
+    /// [`PlanCatalog::load`]). Preloaded entries serve without a
+    /// selector run and count [`Metrics`] `warm_hits` when traffic
+    /// finds them.
+    pub plans: Option<PlanCatalog>,
     /// Hardware profile for the simulator backend.
     pub hw: HwProfile,
     /// The input-dynamics selector (fast-path plan choice).
@@ -147,6 +181,8 @@ impl Default for CoordinatorConfig {
             artifacts_dir: None,
             background_tune: false,
             plan_cache_capacity: 1024,
+            plan_shards: 8,
+            plans: None,
             hw: HwProfile::rtx3090(),
             selector: Selector::default(),
             tune_top_k: tuner::DEFAULT_TOP_K,
@@ -165,11 +201,13 @@ struct WorkerCtx {
     env: ExecutorEnv,
     registry: ExecutorRegistry,
     max_batch: usize,
+    coalescer: Arc<Coalescer>,
 }
 
 /// Handle to a running coordinator.
 pub struct Coordinator {
     queue: Arc<JobQueue<Job>>,
+    queue_cap: usize,
     workers: Vec<JoinHandle<()>>,
     tune_tx: Option<SyncSender<TuneTask>>,
     tuner: Option<JoinHandle<()>>,
@@ -195,9 +233,26 @@ impl Coordinator {
         if let Some(dir) = &cfg.artifacts_dir {
             Registry::load(dir)?; // fail fast on a broken manifest
         }
-        let queue = Arc::new(JobQueue::new(cfg.queue_cap.max(1)));
+        let queue_cap = cfg.queue_cap.max(1);
+        let queue = Arc::new(JobQueue::new(queue_cap));
         let metrics = Arc::new(Metrics::new());
-        let plan_cache = Arc::new(PlanCache::new(cfg.plan_cache_capacity.max(1)));
+        let plan_cache = Arc::new(PlanCache::with_shards(
+            cfg.plan_cache_capacity.max(1),
+            cfg.plan_shards.max(1),
+        ));
+        if let Some(catalog) = &cfg.plans {
+            catalog.warm(&plan_cache);
+        }
+        // One batcher for the whole pool: same-shape jobs coalesce no
+        // matter which worker staged them. The age bound keeps a
+        // half-full bucket from starving behind a stream of hot shapes.
+        let coalescer = Arc::new(Coalescer {
+            batcher: Mutex::new(Batcher::with_age_bound(
+                cfg.max_batch,
+                (cfg.max_batch as u64).saturating_mul(4),
+            )),
+            solo_seq: AtomicU64::new(0),
+        });
         let calibrator = Arc::new(OnlineCalibrator::new(
             Machine::new(cfg.hw),
             cfg.calibration.clone(),
@@ -238,6 +293,7 @@ impl Coordinator {
                 },
                 registry: cfg.executors.clone(),
                 max_batch: cfg.max_batch,
+                coalescer: coalescer.clone(),
             };
             workers.push(
                 std::thread::Builder::new()
@@ -246,7 +302,16 @@ impl Coordinator {
                     .expect("spawn coordinator worker"),
             );
         }
-        Ok(Coordinator { queue, workers, tune_tx, tuner, metrics, plan_cache, calibrator })
+        Ok(Coordinator {
+            queue,
+            queue_cap,
+            workers,
+            tune_tx,
+            tuner,
+            metrics,
+            plan_cache,
+            calibrator,
+        })
     }
 
     /// Submit through the one generic serving path: any [`Op`] (or a
@@ -264,6 +329,38 @@ impl Coordinator {
             self.metrics.on_submit();
         }
         Ticket::new(rrx)
+    }
+
+    /// Admission-controlled submit: never blocks. A saturated queue
+    /// answers with the typed [`OpError::Overloaded`] — carrying the
+    /// observed depth and the configured cap, so callers can shed or
+    /// retry with context — and counts [`Metrics`] `rejected` (rejected
+    /// ops are *not* `submitted`, preserving the identity
+    /// `completed + errors == submitted`). A closed pool yields a
+    /// disconnected ticket, exactly like [`Coordinator::submit`].
+    pub fn try_submit(&self, op: impl Into<Op>) -> Result<Ticket, OpError> {
+        let (rtx, rrx) = channel();
+        let job = Job { op: op.into(), submitted: Instant::now(), resp: rtx };
+        match self.queue.try_push(job) {
+            Ok(()) => {
+                self.metrics.on_submit();
+                Ok(Ticket::new(rrx))
+            }
+            // the rejected job (and its response sender) drops here; on a
+            // closed pool the caller sees a disconnected ticket instead
+            // of an error, mirroring the blocking path
+            Err(_job) if self.queue.is_closed() => Ok(Ticket::new(rrx)),
+            Err(_job) => {
+                self.metrics.on_rejected();
+                Err(OpError::Overloaded { depth: self.queue.len(), cap: self.queue_cap })
+            }
+        }
+    }
+
+    /// Jobs currently waiting in the bounded queue (staged-but-unserved
+    /// batcher jobs not included). `queue_depth() <= queue_cap` always.
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
     }
 
     /// Legacy shim: submit an SpMM job and wait. Prefer
@@ -346,62 +443,103 @@ impl Drop for Coordinator {
 
 fn worker_loop(ctx: WorkerCtx) {
     // Each worker instantiates its own executor stack (the PJRT client is
-    // !Send, and per-worker executors keep their caches hot).
+    // !Send, and per-worker executors keep their caches hot). Batching
+    // state, by contrast, is pool-wide: staged jobs live in the shared
+    // coalescer, so same-shape traffic from different sessions — and
+    // different workers' drains — lands in one bucket.
     let mut executors = ctx.registry.build(&ctx.env);
-    let mut batcher: Batcher<BackendKind, Routed> = Batcher::new(ctx.max_batch);
     while let Some(job) = ctx.queue.pop() {
         let mut drained = 1usize;
-        enqueue(job, &mut executors, &ctx, &mut batcher);
+        stage(job, &ctx);
         // opportunistic micro-batch: grab whatever else is queued, up to
         // the batch window, without blocking
         while drained < ctx.max_batch {
             match ctx.queue.try_pop() {
                 Some(job) => {
-                    enqueue(job, &mut executors, &ctx, &mut batcher);
+                    stage(job, &ctx);
                     drained += 1;
                 }
                 None => break,
             }
         }
-        while let Some((_, jobs)) = batcher.next_batch() {
-            ctx.env.metrics.on_batch();
-            for routed in jobs {
-                serve_one(routed, &mut executors, &ctx);
-            }
+        // serve every ripe bucket: full ones, and ones whose oldest job
+        // has aged past the coalescing window
+        loop {
+            let batch = ctx.coalescer.batcher.lock().unwrap().next_ready();
+            let Some((key, jobs)) = batch else { break };
+            serve_batch(key, jobs, &mut executors, &ctx);
+        }
+        // Nothing left upstream: flush young buckets rather than strand
+        // them (the age bound only advances with new pushes). Every
+        // staged job is drained either here by its stager or by whichever
+        // worker consumed the queue's last item — no job outlives the
+        // traffic that could have coalesced with it.
+        if ctx.queue.is_empty() {
+            flush(&mut executors, &ctx);
         }
     }
+    // shutdown: the queue is closed and drained; flush residual batches
+    flush(&mut executors, &ctx);
 }
 
-/// Validate, admit (priority scan over the executor stack), and stage a
-/// job for batching. Invalid ops — and ops no executor admits — are
-/// answered immediately and never enter a batch.
-fn enqueue(
-    job: Job,
-    executors: &mut [Box<dyn Executor>],
-    ctx: &WorkerCtx,
-    batcher: &mut Batcher<BackendKind, Routed>,
-) {
+/// Validate and stage one job into the shared coalescer. Invalid ops are
+/// answered immediately and never enter a bucket.
+fn stage(job: Job, ctx: &WorkerCtx) {
     if let Err(e) = job.op.validate() {
         ctx.env.metrics.on_error();
         let _ = job.resp.send(Err(e.to_string()));
         return;
     }
-    for (exec, ex) in executors.iter_mut().enumerate() {
-        if let Some(adm) = ex.admit(&job.op) {
-            batcher.push(adm.backend.clone(), Routed { job, adm, exec });
-            return;
-        }
-    }
-    // unreachable with the standard stack (the CPU executor admits all)
-    ctx.env.metrics.on_error();
-    let _ = job.resp.send(Err(format!("no executor admitted this {} op", job.op.kind)));
+    let key = match job.op.shape_key() {
+        Some(k) => CoalesceKey::Shape(k),
+        None => CoalesceKey::Solo(ctx.coalescer.solo_seq.fetch_add(1, Ordering::Relaxed)),
+    };
+    ctx.coalescer.batcher.lock().unwrap().push(key, job);
 }
 
-/// Run one admitted job. An executor failure (or an incompatible cached
-/// plan) drops to the serial CPU oracle — an op can lose latency, never
-/// its response.
-fn serve_one(routed: Routed, executors: &mut [Box<dyn Executor>], ctx: &WorkerCtx) {
-    let Routed { job, adm, exec } = routed;
+/// Unconditionally drain the shared batcher, serving batch by batch (the
+/// lock is released while serving, so other workers stage and drain
+/// concurrently; `next_batch` hands each bucket to exactly one worker).
+fn flush(executors: &mut [Box<dyn Executor>], ctx: &WorkerCtx) {
+    loop {
+        let batch = ctx.coalescer.batcher.lock().unwrap().next_batch();
+        let Some((key, jobs)) = batch else { break };
+        serve_batch(key, jobs, &mut executors[..], ctx);
+    }
+}
+
+/// Serve one coalesced bucket. A multi-job `Shape` bucket is the payoff:
+/// `len - 1` ops rode along with the first (same plan, warm executor
+/// state) and are counted [`Metrics`] `coalesced`.
+fn serve_batch(
+    key: CoalesceKey,
+    jobs: Vec<Job>,
+    executors: &mut [Box<dyn Executor>],
+    ctx: &WorkerCtx,
+) {
+    ctx.env.metrics.on_batch();
+    if matches!(key, CoalesceKey::Shape(_)) && jobs.len() > 1 {
+        ctx.env.metrics.on_coalesced(jobs.len() as u64 - 1);
+    }
+    for job in jobs {
+        serve_one(job, executors, ctx);
+    }
+}
+
+/// Admit (priority scan over the executor stack) and run one staged job.
+/// An executor failure (or an incompatible cached plan) drops to the
+/// serial CPU oracle — an op can lose latency, never its response.
+fn serve_one(job: Job, executors: &mut [Box<dyn Executor>], ctx: &WorkerCtx) {
+    let admitted = executors.iter_mut().enumerate().find_map(|(exec, ex)| {
+        let adm = ex.admit(&job.op)?;
+        Some((adm, exec))
+    });
+    let Some((adm, exec)) = admitted else {
+        // unreachable with the standard stack (the CPU executor admits all)
+        ctx.env.metrics.on_error();
+        let _ = job.resp.send(Err(format!("no executor admitted this {} op", job.op.kind)));
+        return;
+    };
     let (c, backend) = match executors[exec].execute(&job.op, &adm) {
         Ok(c) => (c, adm.backend),
         Err(_) => {
@@ -762,5 +900,142 @@ mod tests {
     fn shutdown_is_clean() {
         let coord = Coordinator::start(small_cfg()).unwrap();
         coord.shutdown(); // no panic, workers joined
+    }
+
+    use crate::coordinator::executor::{factory, Admission};
+
+    /// Parks in `execute` until the test feeds the gate — lets tests hold
+    /// the (single) worker busy at a deterministic point.
+    struct GateExec {
+        entered: Arc<Mutex<Sender<()>>>,
+        gate: Arc<Mutex<std::sync::mpsc::Receiver<()>>>,
+    }
+
+    impl Executor for GateExec {
+        fn name(&self) -> &'static str {
+            "gate"
+        }
+
+        fn admit(&mut self, _op: &Op) -> Option<Admission> {
+            Some(Admission {
+                backend: BackendKind::Custom("gate".into()),
+                plan: None,
+                cache_hit: false,
+            })
+        }
+
+        fn execute(&mut self, op: &Op, _adm: &Admission) -> Result<Vec<f32>, String> {
+            let _ = self.entered.lock().unwrap().send(());
+            let _ = self.gate.lock().unwrap().recv();
+            Ok(op.run_serial())
+        }
+    }
+
+    fn gated_registry(
+        entered: &Arc<Mutex<Sender<()>>>,
+        gate: &Arc<Mutex<std::sync::mpsc::Receiver<()>>>,
+    ) -> ExecutorRegistry {
+        let (e, g) = (entered.clone(), gate.clone());
+        let mut reg = ExecutorRegistry::empty();
+        reg.push(factory(move |_| {
+            Some(Box::new(GateExec { entered: e.clone(), gate: g.clone() }) as Box<dyn Executor>)
+        }));
+        reg
+    }
+
+    #[test]
+    fn try_submit_rejects_with_typed_overload_when_saturated() {
+        let (entered_tx, entered_rx) = channel::<()>();
+        let (gate_tx, gate_rx) = channel::<()>();
+        let entered = Arc::new(Mutex::new(entered_tx));
+        let gate = Arc::new(Mutex::new(gate_rx));
+        let coord = Coordinator::start(CoordinatorConfig {
+            workers: 1,
+            queue_cap: 1,
+            executors: gated_registry(&entered, &gate),
+            ..CoordinatorConfig::default()
+        })
+        .unwrap();
+        let a = erdos_renyi(16, 16, 40, 3).to_csr();
+        let b = vec![1.0f32; 16 * 2];
+        let t1 = coord.submit(Request::Spmm { a: a.clone(), b: b.clone(), n: 2 });
+        // once `entered` fires, the worker has drained t1 and is parked
+        // inside execute — the queue holds exactly what we put there next
+        entered_rx.recv().unwrap();
+        let t2 = coord
+            .try_submit(Request::Spmm { a: a.clone(), b: b.clone(), n: 2 })
+            .expect("one free slot");
+        let err = coord.try_submit(Request::Spmm { a, b, n: 2 }).unwrap_err();
+        assert!(matches!(err, OpError::Overloaded { depth: 1, cap: 1 }), "{err}");
+        assert_eq!(coord.queue_depth(), 1);
+        // release the gate twice: t1 finishes, then the worker serves t2
+        gate_tx.send(()).unwrap();
+        gate_tx.send(()).unwrap();
+        assert_eq!(t1.wait().unwrap().c.len(), 16 * 2);
+        assert_eq!(t2.wait().unwrap().c.len(), 16 * 2);
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.rejected, 1);
+        assert_eq!(snap.submitted, 2, "rejected ops are not submitted");
+        assert_eq!(snap.completed, 2);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn same_shape_jobs_coalesce_into_one_batch() {
+        let (entered_tx, entered_rx) = channel::<()>();
+        let (gate_tx, gate_rx) = channel::<()>();
+        let entered = Arc::new(Mutex::new(entered_tx));
+        let gate = Arc::new(Mutex::new(gate_rx));
+        let coord = Coordinator::start(CoordinatorConfig {
+            workers: 1,
+            executors: gated_registry(&entered, &gate),
+            ..CoordinatorConfig::default()
+        })
+        .unwrap();
+        let a = erdos_renyi(24, 24, 80, 9).to_csr();
+        let b = vec![0.5f32; 24 * 2];
+        // park the worker on a sacrificial op, then queue two same-shape
+        // ops behind it: the worker's next drain stages both into one
+        // ShapeKey bucket and serves them as a single coalesced batch
+        let warmup = coord.submit(Request::Spmm { a: a.clone(), b: b.clone(), n: 2 });
+        entered_rx.recv().unwrap();
+        let t1 = coord.submit(Request::Spmm { a: a.clone(), b: b.clone(), n: 2 });
+        let t2 = coord.submit(Request::Spmm { a, b, n: 2 });
+        for _ in 0..3 {
+            gate_tx.send(()).unwrap();
+        }
+        warmup.wait().unwrap();
+        let r1 = t1.wait().unwrap();
+        let r2 = t2.wait().unwrap();
+        assert_eq!(r1.c, r2.c, "coalesced twins must agree");
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.coalesced, 1, "t2 rode along with t1");
+        assert_eq!(snap.completed, 3);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn plan_catalog_warm_starts_a_fresh_coordinator() {
+        let a = erdos_renyi(48, 48, 260, 11).to_csr();
+        let b = vec![1.0f32; 48 * 4];
+        let first = Coordinator::start(small_cfg()).unwrap();
+        first.spmm_blocking(a.clone(), b.clone(), 4).unwrap();
+        let catalog = PlanCatalog::from_cache(&first.plan_cache);
+        assert_eq!(catalog.len(), 1);
+        first.shutdown();
+
+        let second = Coordinator::start(CoordinatorConfig {
+            workers: 2,
+            plans: Some(catalog),
+            ..CoordinatorConfig::default()
+        })
+        .unwrap();
+        let resp = second.spmm_blocking(a, b, 4).unwrap();
+        assert!(resp.cache_hit, "preloaded plan must serve the first request");
+        let snap = second.metrics.snapshot();
+        assert_eq!(snap.warm_hits, 1);
+        assert_eq!(snap.cache_misses, 0, "no selector run on replayed traffic");
+        assert_eq!(snap.cache_hits, 1);
+        second.shutdown();
     }
 }

@@ -114,6 +114,15 @@ impl Session {
         self.coord.submit(op)
     }
 
+    /// Admission-controlled submit: never blocks on a full queue.
+    /// Returns [`OpError::Overloaded`](super::OpError::Overloaded) —
+    /// with the observed queue depth and cap — when the coordinator is
+    /// saturated, so callers can shed load instead of queueing behind
+    /// it. See [`Coordinator::try_submit`].
+    pub fn try_submit(&self, op: impl Into<Op>) -> Result<Ticket, super::OpError> {
+        self.coord.try_submit(op)
+    }
+
     /// Build and submit an SpMM op against registered handles.
     pub fn spmm(&self, a: &SparseHandle, b: &DenseHandle, n: usize) -> Ticket {
         self.submit(Op::spmm(a, b, n))

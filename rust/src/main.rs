@@ -510,11 +510,31 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         Some(path) => Some(sgap::tuner::calibrate::Calibration::load(std::path::Path::new(path))?),
         None => None,
     };
+    // --plans FILE warm-starts the plan cache from a previous run's
+    // catalog and saves the (possibly tuner-upgraded) catalog back on
+    // shutdown. A missing file is a cold start; an unreadable or
+    // corrupted one is reported and also cold-starts — yesterday's
+    // artifact must never be able to take today's serving down.
+    let plans_path = flags.get("plans").map(std::path::PathBuf::from);
+    let plans = match &plans_path {
+        Some(path) if path.exists() => {
+            match sgap::coordinator::PlanCatalog::load(path) {
+                Ok(catalog) => Some(catalog),
+                Err(e) => {
+                    eprintln!("warning: ignoring plan catalog {}: {e:#}", path.display());
+                    None
+                }
+            }
+        }
+        _ => None,
+    };
     let cfg = CoordinatorConfig {
         workers: flag_u32(flags, "workers", 2)? as usize,
+        queue_cap: flag_u32(flags, "queue-cap", 256)?.max(1) as usize,
         artifacts_dir: if use_artifacts { Some(dir) } else { None },
         background_tune: flags.contains_key("tune"),
         calibration,
+        plans,
         calib: sgap::coordinator::CalibConfig {
             enabled: flags.contains_key("calibrate"),
             ..sgap::coordinator::CalibConfig::default()
@@ -522,8 +542,10 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         ..CoordinatorConfig::default()
     };
     println!(
-        "starting session: {} workers, {} artifacts, background tune {}, calibration {}",
+        "starting session: {} workers, queue cap {}, {} artifacts, background tune {}, \
+         calibration {}, {} warm plans",
         cfg.workers,
+        cfg.queue_cap,
         if use_artifacts { "PJRT" } else { "no" },
         if cfg.background_tune { "on" } else { "off" },
         match (&cfg.calibration, cfg.calib.enabled) {
@@ -532,6 +554,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
             (None, true) => "online",
             (None, false) => "off",
         },
+        cfg.plans.as_ref().map_or(0, sgap::coordinator::PlanCatalog::len),
     );
     let session = Session::start(cfg)?;
     let requests = flag_u32(flags, "requests", 32)?;
@@ -564,8 +587,12 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         s.completed, s.batches, s.p50_us, s.p99_us, s.mean_us
     );
     println!(
-        "plan cache: {} hits / {} misses; {} fallbacks",
-        s.cache_hits, s.cache_misses, s.fallbacks
+        "plan cache: {} hits ({} warm) / {} misses; {} fallbacks",
+        s.cache_hits, s.warm_hits, s.cache_misses, s.fallbacks
+    );
+    println!(
+        "scale: {} ops coalesced into shared batches, {} submissions rejected (overload)",
+        s.coalesced, s.rejected
     );
     for b in &s.backends {
         println!(
@@ -585,6 +612,21 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
             s.calib_refits,
             s.calib_residual,
             coord.calibrator.generation()
+        );
+    }
+    // persist the (possibly tuner-upgraded) plans for the next run's
+    // warm start, with the same write→validate discipline as profile
+    if let Some(path) = &plans_path {
+        let catalog = sgap::coordinator::PlanCatalog::from_cache(&coord.plan_cache);
+        catalog.save(path)?;
+        let written = std::fs::read_to_string(path)?;
+        sgap::bench_util::validate_plan_catalog_json(&written)
+            .map_err(|e| anyhow::anyhow!("emitted plan catalog fails its own schema: {e}"))?;
+        println!(
+            "wrote {} ({} plans, schema v{}, validated)",
+            path.display(),
+            catalog.len(),
+            catalog.version
         );
     }
     session.shutdown();
@@ -635,9 +677,12 @@ fn main() -> Result<()> {
             println!("  profile  [--quick] [--out DIR] [--hw 3090|2080|v100]");
             println!("           (measure -> fit CostParams -> CALIBRATION.json; the offline");
             println!("            half of the calibration loop, see DESIGN.md §calibration)");
-            println!("  serve    --requests 32 --workers 2 [--tune] [--cpu-only] [--calib FILE] [--calibrate]");
+            println!("  serve    --requests 32 --workers 2 [--queue-cap 256] [--tune] [--cpu-only]");
+            println!("           [--calib FILE] [--calibrate] [--plans FILE]");
             println!("           (--calib warm-starts from an `sgap profile` artifact; --calibrate");
-            println!("            turns on online drift-triggered refits; SGAP_ARTIFACTS overrides artifacts dir)");
+            println!("            turns on online drift-triggered refits; --plans warm-starts the");
+            println!("            plan cache from PLANS.json and saves it back on shutdown;");
+            println!("            --queue-cap bounds the admission queue; SGAP_ARTIFACTS overrides artifacts dir)");
             println!("  macros   (print the §5.3 macro-instruction header)");
             Ok(())
         }

@@ -60,6 +60,144 @@ fn prop_batcher_invariants() {
     }
 }
 
+/// Model-based fairness check of the shared batcher: `next_ready` must
+/// always serve the ripe bucket with the oldest head (no bucket starves
+/// behind hot shapes), and — with a drain loop after every push — no head
+/// ever outlives its coalescing window.
+#[test]
+fn prop_batcher_oldest_ripe_head_is_always_served_first() {
+    use std::collections::VecDeque;
+    let mut rng = SplitMix64::new(0xFA1C);
+    for case in 0..40 {
+        let max_batch = 1 + rng.below(6) as usize;
+        let age_bound = rng.below(12);
+        let keys = 1 + rng.below(5) as u32;
+        let mut b: Batcher<u32, u64> = Batcher::with_age_bound(max_batch, age_bound);
+        // external model: per-key queue of push seqs plus the push counter
+        let mut model: Vec<VecDeque<u64>> = vec![VecDeque::new(); keys as usize];
+        let mut counter = 0u64;
+        for _ in 0..200 {
+            let k = rng.below(keys as u64) as u32;
+            b.push(k, counter);
+            model[k as usize].push_back(counter);
+            counter += 1;
+            // drain everything ripe, checking the fairness order each time
+            loop {
+                let ripe_heads: Vec<(u64, usize)> = model
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(key, q)| {
+                        let head = *q.front()?;
+                        (q.len() >= max_batch || counter - head >= age_bound)
+                            .then_some((head, key))
+                    })
+                    .collect();
+                match b.next_ready() {
+                    None => {
+                        assert!(ripe_heads.is_empty(), "case {case}: ready bucket held back");
+                        break;
+                    }
+                    Some((key, items)) => {
+                        let (oldest, want_key) =
+                            *ripe_heads.iter().min().expect("drained an unripe bucket");
+                        assert_eq!(key as usize, want_key, "case {case}: fairness violated");
+                        assert_eq!(items.first(), Some(&oldest), "case {case}: wrong head");
+                        assert!(items.len() <= max_batch);
+                        // served promptly: a head never ages past the
+                        // coalescing window when drains follow every push
+                        assert!(
+                            counter - oldest <= age_bound.max(1) + max_batch as u64,
+                            "case {case}: head waited {} pushes (bound {age_bound})",
+                            counter - oldest,
+                        );
+                        let q = &mut model[key as usize];
+                        for it in items {
+                            assert_eq!(q.pop_front(), Some(it), "case {case}: not FIFO");
+                        }
+                    }
+                }
+            }
+        }
+        // a final unconditional flush drains the model dry, oldest head first
+        let mut last_head = 0u64;
+        while let Some((key, items)) = b.next_batch() {
+            let head = *items.first().unwrap();
+            assert!(head >= last_head, "case {case}: flush not oldest-first");
+            last_head = head;
+            let q = &mut model[key as usize];
+            for it in items {
+                assert_eq!(q.pop_front(), Some(it), "case {case}: flush not FIFO");
+            }
+        }
+        assert!(model.iter().all(VecDeque::is_empty), "case {case}: flush lost items");
+    }
+}
+
+/// Differential: the sharded plan cache must behave exactly like the
+/// single-lock cache — same hit/miss/upgrade/invalidation counts and the
+/// same served plan per key — whenever eviction pressure is off (per-
+/// shard FIFO eviction order is the one sanctioned divergence under
+/// pressure, so capacity here exceeds the working set).
+#[test]
+fn prop_sharded_cache_matches_single_lock_reference() {
+    use sgap::algos::Algo;
+    use sgap::coordinator::{OpKind, Plan, PlanCache, PlanOrigin, ShapeKey};
+
+    let keys: Vec<ShapeKey> = (0..48usize)
+        .map(|i| {
+            let scenario = OpKind::ALL[i % OpKind::ALL.len()];
+            ShapeKey::from_parts(scenario, 16 + i, 24, 100 + 3 * i, 4, (i % 9) as u16, 2, 1)
+        })
+        .collect();
+    let plan_for = |i: usize| Plan {
+        kind: Algo::TacoNnzSerial { g: 32 + (i as u32 % 4) * 32, c: 4 },
+        origin: PlanOrigin::Selector,
+    };
+
+    let single = PlanCache::new(256);
+    let sharded = PlanCache::with_shards(256, 8);
+    assert_eq!(sharded.shard_count(), 8);
+    let mut rng = SplitMix64::new(0x5AFD);
+    for step in 0..600 {
+        let i = rng.below(keys.len() as u64) as usize;
+        let k = keys[i];
+        match rng.below(4) {
+            0 | 1 => {
+                let a = single.get_or_insert_with(k, || plan_for(i).kind);
+                let b = sharded.get_or_insert_with(k, || plan_for(i).kind);
+                assert_eq!(a, b, "step {step}: divergent consult");
+            }
+            2 => {
+                let a = single.upgrade(k, plan_for(i).kind);
+                let b = sharded.upgrade(k, plan_for(i).kind);
+                assert_eq!(a, b, "step {step}: divergent upgrade");
+            }
+            _ => {
+                let scen = OpKind::ALL[rng.below(OpKind::ALL.len() as u64) as usize];
+                let a = single.invalidate_scenario(scen);
+                let b = sharded.invalidate_scenario(scen);
+                assert_eq!(a, b, "step {step}: divergent invalidation sweep");
+            }
+        }
+        assert_eq!(single.get(&k), sharded.get(&k), "step {step}: divergent entry");
+    }
+    let (a, b) = (single.stats(), sharded.stats());
+    assert_eq!(a.entries, b.entries);
+    assert_eq!(a.hits, b.hits);
+    assert_eq!(a.misses, b.misses);
+    assert_eq!(a.upgrades, b.upgrades);
+    assert_eq!(a.invalidations, b.invalidations);
+    assert_eq!(a.evictions, 0, "capacity must exceed the working set");
+    assert_eq!(b.evictions, 0);
+    // final contents agree key-by-key, and so do the serialized catalogs
+    for k in &keys {
+        assert_eq!(single.get(k), sharded.get(k));
+    }
+    let single_cat = sgap::coordinator::PlanCatalog::from_cache(&single);
+    let sharded_cat = sgap::coordinator::PlanCatalog::from_cache(&sharded);
+    assert_eq!(single_cat.to_json(), sharded_cat.to_json(), "catalogs must serialize identically");
+}
+
 /// The number of repeated request shapes in the stress mix.
 const SHAPES: usize = 8;
 

@@ -1,0 +1,175 @@
+//! The committed `PLANS.json` artifact (repo root): schema validation,
+//! canonical-format byte round-trip, and the blessed regeneration flow —
+//! the plan-catalog mirror of `calibration_json.rs`.
+//!
+//! Unlike `CALIBRATION.json` (whose fitted constants legitimately move
+//! under re-profiling), the committed catalog pins *content* as well as
+//! schema: it is a hand-picked exhibit of the serialization surface
+//! (simple, dgsparse-with-float, nested hybrid, tensor scenario), built
+//! programmatically by [`committed_catalog`] so the bytes on disk are
+//! reproducible. Refreshing after a deliberate schema change is still a
+//! blessed operation: `SGAP_BLESS=1 cargo test --test plan_catalog`.
+
+use std::path::PathBuf;
+
+use sgap::algos::catalog::{Algo, BandAlgo, CompositeConfig};
+use sgap::algos::{DgConfig, MttkrpConfig};
+use sgap::bench_util::validate_plan_catalog_json;
+use sgap::coordinator::{
+    CatalogEntry, CoordinatorConfig, OpKind, Plan, PlanCache, PlanCatalog, PlanOrigin, Session,
+    ShapeKey, PLAN_CATALOG_SCHEMA_VERSION,
+};
+use sgap::sparse::erdos_renyi;
+
+fn committed() -> PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("PLANS.json")
+}
+
+/// The exact catalog the committed artifact holds, in canonical order:
+/// a plain compiler-family plan, a dgsparse plan (the one family with a
+/// float field, pinning the `{:.17e}` format), a nested hybrid plan,
+/// and a tensor-scenario plan.
+fn committed_catalog() -> PlanCatalog {
+    let entries = vec![
+        CatalogEntry {
+            key: ShapeKey::from_parts(OpKind::Spmm, 512, 512, 8192, 8, 12, 3, 0),
+            plan: Plan { kind: Algo::SgapNnzGroup { c: 4, r: 32 }, origin: PlanOrigin::Tuned },
+        },
+        CatalogEntry {
+            key: ShapeKey::from_parts(OpKind::Spmm, 1024, 1024, 16384, 16, 6, 3, 1),
+            plan: Plan {
+                kind: Algo::Dg(DgConfig {
+                    n: 16,
+                    group_sz: 32,
+                    block_sz: 8,
+                    tile_sz: 256,
+                    worker_dim_r_frac: 0.5,
+                    worker_sz: 32,
+                    coarsen_sz: 4,
+                }),
+                origin: PlanOrigin::Selector,
+            },
+        },
+        CatalogEntry {
+            key: ShapeKey::from_parts(OpKind::Spmm, 4096, 4096, 131072, 4, 25, 4, 2),
+            plan: Plan {
+                kind: Algo::Composite(CompositeConfig {
+                    bands: 3,
+                    cuts: [2, 5],
+                    plans: [
+                        BandAlgo::TacoRowSerial { x: 1, c: 4 },
+                        BandAlgo::SgapRowGroup { g: 8, c: 4, r: 8 },
+                        BandAlgo::SgapNnzGroup { c: 4, r: 32 },
+                    ],
+                }),
+                origin: PlanOrigin::Tuned,
+            },
+        },
+        CatalogEntry {
+            key: ShapeKey::from_parts(OpKind::Mttkrp, 1024, 64, 20000, 8, 10, 2, 0),
+            plan: Plan {
+                kind: Algo::Mttkrp(MttkrpConfig { j_dim: 8, c: 4, p: 256, r: 16 }),
+                origin: PlanOrigin::Tuned,
+            },
+        },
+    ];
+    PlanCatalog { version: PLAN_CATALOG_SCHEMA_VERSION, entries }
+}
+
+#[test]
+fn committed_plans_match_schema() {
+    let path = committed();
+    if std::env::var_os("SGAP_BLESS").is_some() {
+        let cat = committed_catalog();
+        cat.save(&path).unwrap_or_else(|e| panic!("bless {}: {e}", path.display()));
+    }
+    let src = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+        panic!(
+            "missing committed {}: {e}\n(regenerate with `SGAP_BLESS=1 cargo test --test \
+             plan_catalog`)",
+            path.display()
+        )
+    });
+    validate_plan_catalog_json(&src).unwrap_or_else(|e| {
+        panic!("committed {} fails the documented schema: {e}", path.display())
+    });
+}
+
+#[test]
+fn committed_plans_round_trip_byte_identically() {
+    if std::env::var_os("SGAP_BLESS").is_some() {
+        return; // the blessing test above rewrites the file this run
+    }
+    let src = std::fs::read_to_string(committed()).unwrap();
+    let cat = PlanCatalog::from_json(&src).unwrap();
+    assert_eq!(cat.version, PLAN_CATALOG_SCHEMA_VERSION);
+    // the committed artifact must be in canonical `to_json` format, so a
+    // coordinator that loads and re-saves it produces the same bytes
+    assert_eq!(cat.to_json(), src, "committed PLANS.json is not in canonical format");
+    // and it holds exactly the pinned exhibit (content drift is a
+    // deliberate, blessed act — not an accident)
+    assert_eq!(cat, committed_catalog(), "committed PLANS.json content drifted");
+    // warming a sharded cache and re-snapshotting reproduces the same
+    // bytes: canonical order survives hash-sharded storage
+    let cache = PlanCache::with_shards(64, 8);
+    assert_eq!(cat.warm(&cache), cat.len());
+    assert_eq!(PlanCatalog::from_cache(&cache).to_json(), src);
+}
+
+#[test]
+fn emitted_catalog_passes_its_own_schema_gate() {
+    validate_plan_catalog_json(&committed_catalog().to_json()).unwrap();
+    // the empty catalog is also schema-valid (a cold coordinator's save)
+    let empty = PlanCatalog { version: PLAN_CATALOG_SCHEMA_VERSION, entries: vec![] };
+    validate_plan_catalog_json(&empty.to_json()).unwrap();
+    assert_eq!(PlanCatalog::from_json(&empty.to_json()).unwrap().to_json(), empty.to_json());
+}
+
+/// Truncated, corrupted, or version-skewed artifacts fail the load with
+/// a *typed* error — and the serving policy on that error is a clean
+/// cold start, exactly what `serve --plans` does: the coordinator comes
+/// up plan-less and serves from the selector.
+#[test]
+fn damaged_artifacts_are_typed_errors_and_cold_start_cleanly() {
+    let src = committed_catalog().to_json();
+
+    // truncation: a parse error, not a panic
+    let err = PlanCatalog::from_json(&src[..src.len() / 2]).unwrap_err();
+    assert!(format!("{err:#}").contains("JSON"), "{err:#}");
+    // version skew: names both versions
+    let skewed = src.replace("\"schema_version\": 1", "\"schema_version\": 99");
+    let err = PlanCatalog::from_json(&skewed).unwrap_err().to_string();
+    assert!(err.contains("99") && err.contains('1'), "{err}");
+    // corrupted enum tag: the bad value is named in the error chain
+    let bad = src.replace("\"origin\": \"selector\"", "\"origin\": \"oracle\"");
+    let err = PlanCatalog::from_json(&bad).unwrap_err();
+    assert!(format!("{err:#}").contains("oracle"), "{err:#}");
+    // lost field: reported against the entry that lost it
+    let lost = src.replace("      \"nnz\": 8192,\n", "");
+    let err = PlanCatalog::from_json(&lost).unwrap_err();
+    assert!(format!("{err:#}").contains("nnz"), "{err:#}");
+
+    // cold start after a failed load: the `serve --plans` policy is to
+    // warn and start plan-less — serving must be unaffected
+    let dir = std::env::temp_dir().join(format!("sgap-plan-catalog-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("PLANS.json");
+    std::fs::write(&path, &src[..src.len() / 2]).unwrap();
+    let plans = PlanCatalog::load(&path).ok(); // None: damaged artifact dropped
+    assert!(plans.is_none());
+    let session = Session::start(CoordinatorConfig {
+        workers: 1,
+        background_tune: false,
+        plans,
+        ..CoordinatorConfig::default()
+    })
+    .unwrap();
+    let a = session.register_matrix(erdos_renyi(32, 32, 160, 3).to_csr());
+    let b = session.register_dense(vec![1.0; 32 * 4]);
+    let resp = session.spmm(&a, &b, 4).wait().unwrap();
+    assert_eq!(resp.c.len(), 32 * 4);
+    let snap = session.coordinator().metrics.snapshot();
+    assert_eq!((snap.warm_hits, snap.cache_misses), (0, 1), "cold start serves from the selector");
+    session.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,290 @@
+//! Serving at scale: the concurrency suite behind DESIGN.md
+//! §serving-at-scale.
+//!
+//! Three scenarios against one shared [`Coordinator`]:
+//!
+//! * a **64-session mixed-quartet soak** — every ticket resolves (no
+//!   deadlock, no lost `Ticket`), cross-session coalescing actually
+//!   fires (`coalesced > 0`), the sharded plan cache fingerprints each
+//!   distinct shape exactly once, and the final snapshot carries
+//!   per-`OpKind` p50/p99 SLO gauges;
+//! * **admission control under an undersized queue** — `try_submit`
+//!   sheds load with the typed `OpError::Overloaded { depth, cap }`,
+//!   depth stays bounded by the cap throughout the storm, and every
+//!   *accepted* ticket still completes;
+//! * **warm start end-to-end** — a second coordinator started from the
+//!   first one's persisted [`PlanCatalog`] replays the same trace with
+//!   zero selector misses and `warm_hits > 0`.
+//!
+//! `SGAP_SOAK_QUICK=1` shrinks the soak for CI's quick lane; the
+//! default sizes are the ones the issue's acceptance bullet names.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use sgap::coordinator::{Coordinator, CoordinatorConfig, Op, OpError, OpKind, PlanCatalog, Session};
+use sgap::sparse::{erdos_renyi, power_law, Coo3, SplitMix64};
+
+fn dense(len: usize, seed: u64) -> Vec<f32> {
+    let mut rng = SplitMix64::new(seed);
+    (0..len).map(|_| rng.value()).collect()
+}
+
+fn quick() -> bool {
+    std::env::var_os("SGAP_SOAK_QUICK").is_some()
+}
+
+/// The shared mixed workload: the §2.1 quartet plus the fused chain,
+/// over handles registered once — so ops built by different sessions
+/// carry *identical* `ShapeKey`s and are eligible for cross-session
+/// coalescing and cache sharing. Returns six distinct-shape ops.
+fn mixed_workload(session: &Session) -> Vec<Op> {
+    let a1 = session.register_matrix(erdos_renyi(64, 56, 500, 11).to_csr());
+    let b1 = session.register_dense(dense(56 * 4, 1));
+    let a2 = session.register_matrix(power_law(96, 96, 1400, 1.9, 3).to_csr());
+    let b2 = session.register_dense(dense(96 * 4, 2));
+    let a3 = session.register_matrix(erdos_renyi(48, 40, 320, 12).to_csr());
+    let x1 = session.register_dense(dense(48 * 8, 3));
+    let x2 = session.register_dense(dense(8 * 40, 4));
+    let t = session.register_tensor(Coo3::random((28, 20, 14), 350, 13));
+    let f1 = session.register_dense(dense(20 * 8, 5));
+    let f2 = session.register_dense(dense(14 * 8, 6));
+    let tx = session.register_dense(dense(14 * 4, 7));
+    let fa = session.register_dense(dense(64 * 8, 8));
+    let fb = session.register_dense(dense(8 * 56, 9));
+    vec![
+        Op::spmm(&a1, &b1, 4),
+        Op::spmm(&a2, &b2, 4),
+        Op::sddmm(&a3, &x1, &x2, 8),
+        Op::mttkrp(&t, &f1, &f2, 8),
+        Op::ttm(&t, &tx, 4),
+        Op::fused(&a1, &fa, &fb, &b1, 8, 4),
+    ]
+}
+
+/// 64 concurrent sessions sharing one coordinator, each burst-submitting
+/// mixed-quartet traffic built from shared registrations. Every ticket
+/// resolves `Ok` (no deadlock, no lost ticket), same-shape ops from
+/// different sessions coalesce into shared batches, each distinct shape
+/// fingerprints exactly once across all 64 sessions, and the final
+/// snapshot reports per-`OpKind` latency quantiles.
+#[test]
+fn soak_64_sessions_mixed_quartet() {
+    let sessions = 64usize;
+    let per_session = if quick() { 4 } else { 16 };
+    let coord = Arc::new(
+        Coordinator::start(CoordinatorConfig {
+            workers: 4,
+            max_batch: 8,
+            queue_cap: 256,
+            background_tune: false,
+            ..CoordinatorConfig::default()
+        })
+        .unwrap(),
+    );
+    let root = Session::with(coord.clone());
+    let ops = mixed_workload(&root);
+    let shapes = ops.len();
+
+    let mut handles = Vec::new();
+    for s in 0..sessions {
+        let session = Session::with(coord.clone());
+        let ops = ops.clone();
+        handles.push(std::thread::spawn(move || {
+            // burst-submit first (tickets pile up in the queue and the
+            // shared batcher, where same-shape traffic coalesces), then
+            // wait — a lost ticket would hang here, a dropped one errors
+            let mut tickets = Vec::new();
+            for i in 0..per_session {
+                tickets.push(session.submit(ops[(s + i) % ops.len()].clone()));
+            }
+            for (i, t) in tickets.into_iter().enumerate() {
+                let resp = t.wait().unwrap_or_else(|e| panic!("session {s} op {i}: {e}"));
+                assert!(!resp.c.is_empty(), "session {s} op {i}: empty output");
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.submitted, (sessions * per_session) as u64);
+    assert_eq!(snap.completed, snap.submitted, "no ticket lost, none served twice");
+    assert_eq!(snap.errors, 0);
+    assert_eq!(snap.rejected, 0, "blocking submit never sheds load");
+    assert!(
+        snap.coalesced > 0,
+        "64 sessions x shared shapes must coalesce at least once (got {})",
+        snap.coalesced
+    );
+    assert_eq!(
+        snap.cache_misses, shapes as u64,
+        "each distinct shape fingerprints exactly once across all sessions"
+    );
+    assert!(snap.cache_hits + snap.warm_hits > 0);
+    // per-OpKind SLO gauges: every kind served, quantiles ordered
+    for kind in OpKind::ALL {
+        let o = snap
+            .ops
+            .iter()
+            .find(|o| o.op == kind.label())
+            .unwrap_or_else(|| panic!("no per-op gauge for {kind}"));
+        assert!(o.count > 0, "{kind}: empty gauge");
+        assert!(o.p50_us <= o.p99_us, "{kind}: p50 {} > p99 {}", o.p50_us, o.p99_us);
+    }
+    assert_eq!(coord.queue_depth(), 0, "drained queue");
+
+    root.shutdown();
+    Arc::try_unwrap(coord).ok().expect("all sessions released the pool").shutdown();
+}
+
+/// Admission control: against a deliberately undersized queue, a storm
+/// of non-blocking submits is shed with the typed overload error (depth
+/// bounded by the cap — observed both in the error payload and by
+/// sampling live queue depth), while every accepted ticket still
+/// completes and the books balance exactly.
+#[test]
+fn try_submit_sheds_load_with_bounded_depth() {
+    let cap = 2usize;
+    let threads = 16usize;
+    let attempts = if quick() { 30 } else { 120 };
+    let coord = Arc::new(
+        Coordinator::start(CoordinatorConfig {
+            workers: 1,
+            max_batch: 4,
+            queue_cap: cap,
+            background_tune: false,
+            ..CoordinatorConfig::default()
+        })
+        .unwrap(),
+    );
+    let root = Session::with(coord.clone());
+    let a = root.register_matrix(power_law(64, 64, 900, 1.8, 5).to_csr());
+    let b = root.register_dense(dense(64 * 4, 21));
+
+    let accepted = Arc::new(AtomicUsize::new(0));
+    let rejected = Arc::new(AtomicUsize::new(0));
+    let storming = Arc::new(AtomicBool::new(true));
+
+    // main thread samples live depth throughout the storm: structurally
+    // bounded by the cap, never by luck
+    let sampler = {
+        let (coord, storming) = (coord.clone(), storming.clone());
+        std::thread::spawn(move || {
+            let mut max_seen = 0;
+            while storming.load(Ordering::Acquire) {
+                let d = coord.queue_depth();
+                assert!(d <= cap, "live queue depth {d} exceeds cap {cap}");
+                max_seen = max_seen.max(d);
+                std::thread::yield_now();
+            }
+            max_seen
+        })
+    };
+
+    let mut handles = Vec::new();
+    for s in 0..threads {
+        let session = Session::with(coord.clone());
+        let (a, b) = (a.clone(), b.clone());
+        let (accepted, rejected) = (accepted.clone(), rejected.clone());
+        handles.push(std::thread::spawn(move || {
+            let mut tickets = Vec::new();
+            for i in 0..attempts {
+                match session.try_submit(Op::spmm(&a, &b, 4)) {
+                    Ok(t) => {
+                        accepted.fetch_add(1, Ordering::Relaxed);
+                        tickets.push(t);
+                    }
+                    Err(OpError::Overloaded { depth, cap: seen_cap }) => {
+                        rejected.fetch_add(1, Ordering::Relaxed);
+                        assert_eq!(seen_cap, cap, "thread {s} attempt {i}");
+                        assert!(depth <= cap, "thread {s} attempt {i}: depth {depth} > cap {cap}");
+                    }
+                    Err(e) => panic!("thread {s} attempt {i}: unexpected error {e}"),
+                }
+            }
+            // accepted work is never dropped: each ticket resolves Ok
+            for (i, t) in tickets.into_iter().enumerate() {
+                t.wait().unwrap_or_else(|e| panic!("thread {s} accepted ticket {i}: {e}"));
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    storming.store(false, Ordering::Release);
+    let max_depth = sampler.join().unwrap();
+    assert!(max_depth <= cap);
+
+    let (accepted, rejected) = (accepted.load(Ordering::Relaxed), rejected.load(Ordering::Relaxed));
+    assert_eq!(accepted + rejected, threads * attempts, "every attempt accounted for");
+    assert!(accepted > 0, "an empty queue must admit");
+    assert!(rejected > 0, "a cap-{cap} queue under {threads}-thread storm must shed load");
+
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.rejected, rejected as u64, "one typed error per rejection");
+    assert_eq!(snap.submitted, accepted as u64, "rejected ops never enter the books");
+    assert_eq!(snap.completed, accepted as u64);
+    assert_eq!(snap.errors, 0);
+    assert_eq!(coord.queue_depth(), 0);
+
+    root.shutdown();
+    Arc::try_unwrap(coord).ok().expect("all sessions released the pool").shutdown();
+}
+
+/// Warm start end-to-end: serve a trace, persist the plan catalog to
+/// disk, start a *second* coordinator from the file, replay the trace —
+/// zero selector misses, `warm_hits > 0`, byte-identical re-save.
+#[test]
+fn plan_catalog_warm_start_round_trip() {
+    // first life: cold coordinator serves the mixed trace
+    let first = Session::start(CoordinatorConfig {
+        workers: 2,
+        background_tune: false,
+        ..CoordinatorConfig::default()
+    })
+    .unwrap();
+    let ops = mixed_workload(&first);
+    for op in &ops {
+        first.submit(op.clone()).wait().unwrap();
+    }
+    let catalog = PlanCatalog::from_cache(&first.coordinator().plan_cache);
+    assert_eq!(catalog.len(), ops.len(), "one persisted plan per distinct shape");
+    let snap1 = first.coordinator().metrics.snapshot();
+    assert_eq!(snap1.cache_misses, ops.len() as u64);
+    assert_eq!(snap1.warm_hits, 0, "a cold coordinator has nothing to be warm about");
+
+    let dir = std::env::temp_dir().join(format!("sgap-serving-scale-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("PLANS.json");
+    catalog.save(&path).unwrap();
+    first.shutdown();
+
+    // second life: warm-started from the persisted catalog
+    let loaded = PlanCatalog::load(&path).unwrap();
+    assert_eq!(loaded, catalog, "save → load is lossless");
+    assert_eq!(loaded.to_json(), catalog.to_json(), "and byte-identical");
+    let second = Session::start(CoordinatorConfig {
+        workers: 2,
+        background_tune: false,
+        plans: Some(loaded),
+        ..CoordinatorConfig::default()
+    })
+    .unwrap();
+    for op in &ops {
+        let resp = second.submit(op.clone()).wait().unwrap();
+        assert!(resp.cache_hit, "replayed {} must hit the warmed cache", op.kind);
+    }
+    let snap2 = second.coordinator().metrics.snapshot();
+    assert_eq!(snap2.cache_misses, 0, "zero selector misses on the replayed trace");
+    assert_eq!(snap2.warm_hits, ops.len() as u64, "every replayed op hit a persisted plan");
+    assert_eq!(snap2.cache_hits, ops.len() as u64);
+
+    // the warmed cache re-persists to the same bytes (catalog order is
+    // canonical, not arrival order)
+    let resaved = PlanCatalog::from_cache(&second.coordinator().plan_cache);
+    assert_eq!(resaved.to_json(), catalog.to_json());
+    second.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}

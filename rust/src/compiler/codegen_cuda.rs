@@ -1,132 +1,34 @@
-//! CUDA-like text emission from LLIR (§2.4.3 back-end).
+//! CUDA text emission from LLIR (§2.4.3 back-end) — the [`Cuda`]
+//! instantiation of the dialect-generic walk in
+//! [`dialect::emit`](super::dialect::emit).
 //!
-//! Produces compilable-looking CUDA C for inspection, docs, and the golden
-//! tests that check the Listing 1 → Listing 2 transformation (and, since
-//! SDDMM/dgSPARSE lower through the shared pipeline, their generated
-//! kernels too — see `rust/tests/golden/`). The two macro instructions
-//! are emitted as calls to the §5.3 template device functions
-//! `atomicAddGroup<T,G>` / `segReduceGroup<T,G>`, whose definitions are
-//! emitted in a header prologue.
+//! Produces compilable-looking CUDA C for inspection, docs, and the
+//! golden tests that check the Listing 1 → Listing 2 transformation
+//! (and, since SDDMM/dgSPARSE lower through the shared pipeline, their
+//! generated kernels too — see `rust/tests/golden/`). The two macro
+//! instructions are emitted as calls to the §5.3 template device
+//! functions `atomicAddGroup<T,G>` / `segReduceGroup<T,G>`; the
+//! translation-unit prologue defines exactly the templates the kernel
+//! references (none for pure-store or plain-atomic lowerings).
+//!
+//! This module is a byte-compatibility shim: its output is pinned by the
+//! committed `.cu` goldens, and `emit_kernel` here must stay identical
+//! to `dialect::emit::emit_kernel::<Cuda>` — which it now simply calls.
 
-use std::fmt::Write;
+pub use super::dialect::cuda::macro_header;
 
-use super::llir::{Kernel, Param, ParamKind, Stmt};
-
-/// The §5.3 macro-instruction header (cooperative-groups implementation).
-pub fn macro_header() -> &'static str {
-    r#"// --- sgap macro instructions (§5.3) ------------------------------------
-// atomicAddGroup<T,G>: tree-reduce `value` over each aligned G-lane group
-// with __shfl_down_sync, then lane 0 of the group issues one atomicAdd.
-template <typename T, int G>
-__device__ __forceinline__ void atomicAddGroup(T* array, int idx, T value) {
-  unsigned mask = __activemask();
-  #pragma unroll
-  for (int offset = G / 2; offset > 0; offset /= 2)
-    value += __shfl_down_sync(mask, value, offset, G);
-  if ((threadIdx.x % G) == 0) atomicAdd(&array[idx], value);
-}
-
-// segReduceGroup<T,G>: segmented inclusive scan over each aligned G-lane
-// group keyed by `idx`; segment-end lanes write back (runtime-decided
-// writeback threads — segment reduction).
-template <typename T, int G>
-__device__ __forceinline__ void segReduceGroup(T* array, int idx, T value) {
-  unsigned mask = __activemask();
-  int lane = threadIdx.x % G;
-  #pragma unroll
-  for (int offset = 1; offset < G; offset *= 2) {
-    T up = __shfl_up_sync(mask, value, offset, G);
-    int upIdx = __shfl_up_sync(mask, idx, offset, G);
-    if (lane >= offset && upIdx == idx) value += up;
-  }
-  int dnIdx = __shfl_down_sync(mask, idx, 1, G);
-  if (lane == G - 1 || dnIdx != idx) atomicAdd(&array[idx], value);
-}
-// ------------------------------------------------------------------------
-"#
-}
-
-fn param_decl(p: &Param) -> String {
-    match p.kind {
-        ParamKind::ArrayF32 => format!("float* __restrict__ {}", p.name),
-        ParamKind::ArrayI32 => format!("int* __restrict__ {}", p.name),
-        ParamKind::ScalarI32 => format!("int {}", p.name),
-    }
-}
-
-fn indent(out: &mut String, depth: usize) {
-    for _ in 0..depth {
-        out.push_str("  ");
-    }
-}
-
-fn emit_stmts(out: &mut String, stmts: &[Stmt], depth: usize) {
-    for s in stmts {
-        emit_stmt(out, s, depth);
-    }
-}
-
-fn emit_stmt(out: &mut String, s: &Stmt, depth: usize) {
-    indent(out, depth);
-    match s {
-        Stmt::Decl { var, init, float } => {
-            let ty = if *float { "float" } else { "int" };
-            writeln!(out, "{ty} {var} = {init};").unwrap();
-        }
-        Stmt::Assign { var, val } => writeln!(out, "{var} = {val};").unwrap(),
-        Stmt::Store { array, idx, val } => writeln!(out, "{array}[{idx}] = {val};").unwrap(),
-        Stmt::AtomicAdd { array, idx, val } => {
-            writeln!(out, "atomicAdd(&{array}[{idx}], {val});").unwrap()
-        }
-        Stmt::AtomicAddGroup { array, idx, val, group } => {
-            writeln!(out, "atomicAddGroup<float,{group}>({array}, {idx}, {val});").unwrap()
-        }
-        Stmt::SegReduceGroup { array, idx, val, group } => {
-            writeln!(out, "segReduceGroup<float,{group}>({array}, {idx}, {val});").unwrap()
-        }
-        Stmt::For { var, lo, hi, step, body } => {
-            writeln!(out, "for (int {var} = {lo}; {var} < {hi}; {var} += {step}) {{").unwrap();
-            emit_stmts(out, body, depth + 1);
-            indent(out, depth);
-            writeln!(out, "}}").unwrap();
-        }
-        Stmt::While { cond, body } => {
-            writeln!(out, "while ({cond}) {{").unwrap();
-            emit_stmts(out, body, depth + 1);
-            indent(out, depth);
-            writeln!(out, "}}").unwrap();
-        }
-        Stmt::If { cond, then, els } => {
-            writeln!(out, "if ({cond}) {{").unwrap();
-            emit_stmts(out, then, depth + 1);
-            indent(out, depth);
-            if els.is_empty() {
-                writeln!(out, "}}").unwrap();
-            } else {
-                writeln!(out, "}} else {{").unwrap();
-                emit_stmts(out, els, depth + 1);
-                indent(out, depth);
-                writeln!(out, "}}").unwrap();
-            }
-        }
-        Stmt::Break => writeln!(out, "break;").unwrap(),
-        Stmt::Comment(c) => writeln!(out, "// {c}").unwrap(),
-    }
-}
+use super::dialect::{emit, Cuda};
+use super::llir::Kernel;
 
 /// Emit the kernel as CUDA-like source text (without the macro header).
 pub fn emit_kernel(k: &Kernel) -> String {
-    let mut out = String::new();
-    let params: Vec<String> = k.params.iter().map(param_decl).collect();
-    writeln!(out, "__global__ void {}({}) {{", k.name, params.join(", ")).unwrap();
-    emit_stmts(&mut out, &k.body, 1);
-    writeln!(out, "}}").unwrap();
-    out
+    emit::emit_kernel::<Cuda>(k)
 }
 
-/// Full translation unit: header + kernel.
+/// Full translation unit: the §5.3 helpers the kernel references (if
+/// any), then the kernel.
 pub fn emit_translation_unit(k: &Kernel) -> String {
-    format!("{}\n{}", macro_header(), emit_kernel(k))
+    emit::emit_translation_unit::<Cuda>(k)
 }
 
 #[cfg(test)]
@@ -171,11 +73,23 @@ mod tests {
         assert!(h.contains("__shfl_up_sync"));
     }
 
+    /// The translation unit defines only the referenced helpers: none
+    /// for a store-only kernel, exactly one template for each grouped
+    /// family (no dead `atomicAddGroup` next to a segment reduction).
     #[test]
-    fn translation_unit_composes() {
-        let k = crate::compiler::lower(&Schedule::taco_row_serial(SpmmConfig::default())).unwrap();
-        let tu = emit_translation_unit(&k);
-        assert!(tu.contains("template <typename T, int G>"));
-        assert!(tu.contains("__global__ void spmm_row_serial"));
+    fn translation_unit_emits_only_referenced_helpers() {
+        let row = crate::compiler::lower(&Schedule::taco_row_serial(SpmmConfig::default())).unwrap();
+        let tu = emit_translation_unit(&row);
+        assert!(!tu.contains("template <typename T, int G>"));
+        assert!(tu.starts_with("__global__ void spmm_row_serial"));
+
+        let seg = crate::compiler::lower(&Schedule::sgap_nnz_group(SpmmConfig::default(), 32)).unwrap();
+        let tu = emit_translation_unit(&seg);
+        assert!(tu.contains("void segReduceGroup") && !tu.contains("void atomicAddGroup"));
+        assert!(tu.contains("segReduceGroup<float,32>(C_vals, kC, val);"));
+
+        let grp = crate::compiler::lower(&Schedule::sgap_row_group(SpmmConfig::default(), 8)).unwrap();
+        let tu = emit_translation_unit(&grp);
+        assert!(tu.contains("void atomicAddGroup") && !tu.contains("void segReduceGroup"));
     }
 }

@@ -1,0 +1,330 @@
+//! The dialect-generic LLIR walk: one traversal emits every target.
+//!
+//! `emit_kernel::<Cuda>` reproduces the pre-dialect `codegen_cuda`
+//! output byte-for-byte (the committed `.cu` goldens enforce this);
+//! `emit_kernel::<Hip>` / `emit_kernel::<Wgsl>` reuse the identical
+//! traversal and differ only in the [`Dialect`] spelling hooks.
+//!
+//! [`EmitCtx`] is the per-kernel analysis the hooks consult: which
+//! arrays are written (and how), which §5.3 macro instructions — and
+//! which group sizes — the body references, and whether the TACO row
+//! binary search appears. Dialects use it to emit only the helper
+//! definitions a kernel actually needs, and WGSL additionally derives
+//! each storage binding's access mode and element type from it.
+
+use std::collections::BTreeSet;
+
+use super::super::llir::{BinOp, Kernel, Stmt, Val};
+use super::Dialect;
+
+/// What one kernel body references — computed once per emission by a
+/// single pass over the statement tree and every value expression.
+#[derive(Debug, Default, Clone)]
+pub struct EmitCtx {
+    /// Arrays written by an atomic form (`AtomicAdd`, `AtomicAddGroup`,
+    /// `SegReduceGroup`) — WGSL binds these as `array<atomic<u32>>`.
+    pub atomic_arrays: BTreeSet<String>,
+    /// Arrays written by a plain `Store`.
+    pub stored_arrays: BTreeSet<String>,
+    /// Group sizes used by `AtomicAddGroup` call sites.
+    pub atomic_groups: BTreeSet<u32>,
+    /// Group sizes used by `SegReduceGroup` call sites.
+    pub seg_groups: BTreeSet<u32>,
+    /// Whether a plain (non-grouped) `AtomicAdd` appears.
+    pub uses_atomic_add: bool,
+    /// Whether `taco_binarySearchBefore` appears in any expression.
+    pub uses_binary_search: bool,
+}
+
+impl EmitCtx {
+    /// Scan `k` once, depth-first.
+    pub fn analyze(k: &Kernel) -> EmitCtx {
+        let mut cx = EmitCtx::default();
+        for s in k.walk() {
+            match s {
+                Stmt::Store { array, .. } => {
+                    cx.stored_arrays.insert(array.clone());
+                }
+                Stmt::AtomicAdd { array, .. } => {
+                    cx.uses_atomic_add = true;
+                    cx.atomic_arrays.insert(array.clone());
+                }
+                Stmt::AtomicAddGroup { array, group, .. } => {
+                    cx.atomic_groups.insert(*group);
+                    cx.atomic_arrays.insert(array.clone());
+                }
+                Stmt::SegReduceGroup { array, group, .. } => {
+                    cx.seg_groups.insert(*group);
+                    cx.atomic_arrays.insert(array.clone());
+                }
+                _ => {}
+            }
+            for_each_val(s, &mut |v| {
+                if matches!(v, Val::BinarySearchBefore { .. }) {
+                    cx.uses_binary_search = true;
+                }
+            });
+        }
+        cx
+    }
+
+    /// Whether any §5.3 macro instruction (either group reduction)
+    /// appears — i.e. whether a group-reduce helper prologue is needed.
+    pub fn uses_group_macros(&self) -> bool {
+        !self.atomic_groups.is_empty() || !self.seg_groups.is_empty()
+    }
+
+    /// Whether `array` is written at all (any store or atomic form).
+    pub fn writes(&self, array: &str) -> bool {
+        self.stored_arrays.contains(array) || self.atomic_arrays.contains(array)
+    }
+}
+
+/// Visit the value expressions directly owned by `s` (block statements'
+/// bodies are covered by `Kernel::walk`), recursing into sub-values.
+fn for_each_val(s: &Stmt, f: &mut impl FnMut(&Val)) {
+    fn go(v: &Val, f: &mut impl FnMut(&Val)) {
+        f(v);
+        match v {
+            Val::Bin(_, a, b) => {
+                go(a, f);
+                go(b, f);
+            }
+            Val::Load(_, i) => go(i, f),
+            Val::BinarySearchBefore { lo, hi, target, .. } => {
+                go(lo, f);
+                go(hi, f);
+                go(target, f);
+            }
+            _ => {}
+        }
+    }
+    match s {
+        Stmt::Decl { init: v, .. } | Stmt::Assign { val: v, .. } | Stmt::While { cond: v, .. } => {
+            go(v, f)
+        }
+        Stmt::Store { idx, val, .. }
+        | Stmt::AtomicAdd { idx, val, .. }
+        | Stmt::AtomicAddGroup { idx, val, .. }
+        | Stmt::SegReduceGroup { idx, val, .. } => {
+            go(idx, f);
+            go(val, f);
+        }
+        Stmt::For { lo, hi, step, .. } => {
+            go(lo, f);
+            go(hi, f);
+            go(step, f);
+        }
+        Stmt::If { cond, .. } => go(cond, f),
+        Stmt::Break | Stmt::Comment(_) => {}
+    }
+}
+
+/// Render one value expression in dialect `D`. Operator symbols,
+/// parenthesization, and `min()` are shared; literals, builtins, and the
+/// binary-search call go through the dialect hooks.
+pub fn fmt_val<D: Dialect>(v: &Val) -> String {
+    match v {
+        Val::Var(n) | Val::Param(n) => n.clone(),
+        Val::ConstI(c) => c.to_string(),
+        Val::ConstF(c) => D::const_f32(*c),
+        Val::Bin(op, a, b) => {
+            let (a, b) = (fmt_val::<D>(a), fmt_val::<D>(b));
+            let sym = match op {
+                BinOp::Add => "+",
+                BinOp::Sub => "-",
+                BinOp::Mul => "*",
+                BinOp::Div => "/",
+                BinOp::Mod => "%",
+                BinOp::Min => return format!("min({a}, {b})"),
+                BinOp::Lt => "<",
+                BinOp::Le => "<=",
+                BinOp::Eq => "==",
+                BinOp::Ne => "!=",
+                BinOp::Ge => ">=",
+                BinOp::Gt => ">",
+                BinOp::And => "&&",
+                BinOp::Or => "||",
+            };
+            format!("({a} {sym} {b})")
+        }
+        Val::Load(a, i) => format!("{a}[{}]", fmt_val::<D>(i)),
+        Val::BinarySearchBefore { array, lo, hi, target } => {
+            let (lo, hi, t) = (fmt_val::<D>(lo), fmt_val::<D>(hi), fmt_val::<D>(target));
+            D::binary_search(array, &lo, &hi, &t)
+        }
+        Val::BlockIdx => D::block_idx().to_string(),
+        Val::ThreadIdx => D::thread_idx().to_string(),
+    }
+}
+
+fn indent(out: &mut String, depth: usize) {
+    for _ in 0..depth {
+        out.push_str("  ");
+    }
+}
+
+fn line(out: &mut String, s: &str) {
+    out.push_str(s);
+    out.push('\n');
+}
+
+fn emit_stmts<D: Dialect>(out: &mut String, stmts: &[Stmt], depth: usize) {
+    for s in stmts {
+        emit_stmt::<D>(out, s, depth);
+    }
+}
+
+fn emit_stmt<D: Dialect>(out: &mut String, s: &Stmt, depth: usize) {
+    indent(out, depth);
+    match s {
+        Stmt::Decl { var, init, float } => line(out, &D::decl(var, *float, &fmt_val::<D>(init))),
+        Stmt::Assign { var, val } => line(out, &format!("{var} = {};", fmt_val::<D>(val))),
+        Stmt::Store { array, idx, val } => {
+            line(out, &D::store(array, &fmt_val::<D>(idx), &fmt_val::<D>(val)))
+        }
+        Stmt::AtomicAdd { array, idx, val } => {
+            line(out, &D::atomic_add(array, &fmt_val::<D>(idx), &fmt_val::<D>(val)))
+        }
+        Stmt::AtomicAddGroup { array, idx, val, group } => {
+            let (i, v) = (fmt_val::<D>(idx), fmt_val::<D>(val));
+            line(out, &D::atomic_add_group(array, &i, &v, *group));
+        }
+        Stmt::SegReduceGroup { array, idx, val, group } => {
+            let (i, v) = (fmt_val::<D>(idx), fmt_val::<D>(val));
+            line(out, &D::seg_reduce_group(array, &i, &v, *group));
+        }
+        Stmt::For { var, lo, hi, step, body } => {
+            let (lo, hi, step) = (fmt_val::<D>(lo), fmt_val::<D>(hi), fmt_val::<D>(step));
+            line(out, &D::for_open(var, &lo, &hi, &step));
+            emit_stmts::<D>(out, body, depth + 1);
+            indent(out, depth);
+            line(out, "}");
+        }
+        Stmt::While { cond, body } => {
+            line(out, &format!("while ({}) {{", fmt_val::<D>(cond)));
+            emit_stmts::<D>(out, body, depth + 1);
+            indent(out, depth);
+            line(out, "}");
+        }
+        Stmt::If { cond, then, els } => {
+            line(out, &format!("if ({}) {{", fmt_val::<D>(cond)));
+            emit_stmts::<D>(out, then, depth + 1);
+            indent(out, depth);
+            if els.is_empty() {
+                line(out, "}");
+            } else {
+                line(out, "} else {");
+                emit_stmts::<D>(out, els, depth + 1);
+                indent(out, depth);
+                line(out, "}");
+            }
+        }
+        Stmt::Break => line(out, "break;"),
+        Stmt::Comment(c) => line(out, &format!("// {c}")),
+    }
+}
+
+/// Emit the bare kernel (no prologue) in dialect `D`.
+pub fn emit_kernel<D: Dialect>(k: &Kernel) -> String {
+    let cx = EmitCtx::analyze(k);
+    let mut out = String::new();
+    line(&mut out, &D::kernel_open(k, &cx));
+    emit_stmts::<D>(&mut out, &k.body, 1);
+    line(&mut out, D::kernel_close());
+    out
+}
+
+/// Full translation unit: the dialect prologue (only the helpers the
+/// kernel references — possibly nothing) plus the kernel.
+pub fn emit_translation_unit<D: Dialect>(k: &Kernel) -> String {
+    let cx = EmitCtx::analyze(k);
+    let pro = D::prologue(&cx);
+    let kernel = emit_kernel::<D>(k);
+    if pro.is_empty() {
+        kernel
+    } else {
+        format!("{pro}\n{kernel}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::super::llir::Param;
+    use super::super::Cuda;
+    use super::*;
+
+    fn kernel_with(body: Vec<Stmt>) -> Kernel {
+        Kernel {
+            name: "k".into(),
+            params: vec![Param::f32_array("C_vals"), Param::i32_scalar("n")],
+            body,
+            block_dim: 256,
+        }
+    }
+
+    #[test]
+    fn ctx_classifies_writes_and_helpers() {
+        let k = kernel_with(vec![
+            Stmt::Store { array: "C_vals".into(), idx: Val::ConstI(0), val: Val::ConstF(1.0) },
+            Stmt::SegReduceGroup {
+                array: "Y_vals".into(),
+                idx: Val::ConstI(0),
+                val: Val::ConstF(0.0),
+                group: 16,
+            },
+            Stmt::Decl {
+                var: "p".into(),
+                float: false,
+                init: Val::BinarySearchBefore {
+                    array: "A2_pos".into(),
+                    lo: Box::new(Val::ConstI(0)),
+                    hi: Box::new(Val::ConstI(4)),
+                    target: Box::new(Val::ThreadIdx),
+                },
+            },
+        ]);
+        let cx = EmitCtx::analyze(&k);
+        assert!(cx.stored_arrays.contains("C_vals"));
+        assert!(cx.atomic_arrays.contains("Y_vals"));
+        assert_eq!(cx.seg_groups.iter().copied().collect::<Vec<_>>(), vec![16]);
+        assert!(cx.atomic_groups.is_empty());
+        assert!(cx.uses_binary_search && !cx.uses_atomic_add);
+        assert!(cx.uses_group_macros());
+        assert!(cx.writes("C_vals") && cx.writes("Y_vals") && !cx.writes("A2_pos"));
+    }
+
+    #[test]
+    fn generic_val_matches_display() {
+        // The generic formatter instantiated at Cuda must agree with
+        // `Val`'s own Display (the pre-dialect emission path).
+        let vals = [
+            Val::add(Val::mul(Val::BlockIdx, Val::ConstI(256)), Val::ThreadIdx),
+            Val::min(Val::var("a"), Val::ConstF(0.5)),
+            Val::and(Val::ge(Val::var("x"), Val::ConstI(1)), Val::ne(Val::var("y"), Val::var("z"))),
+            Val::lt(Val::div(Val::var("p"), Val::ConstI(2)), Val::ConstI(9)),
+            Val::load("A_vals", Val::rem(Val::ThreadIdx, Val::ConstI(32))),
+            Val::BinarySearchBefore {
+                array: "A2_pos".into(),
+                lo: Box::new(Val::var("lo")),
+                hi: Box::new(Val::var("hi")),
+                target: Box::new(Val::var("t")),
+            },
+        ];
+        for v in &vals {
+            assert_eq!(fmt_val::<Cuda>(v), v.to_string());
+        }
+    }
+
+    #[test]
+    fn empty_prologue_means_bare_translation_unit() {
+        let k = kernel_with(vec![Stmt::Store {
+            array: "C_vals".into(),
+            idx: Val::ConstI(0),
+            val: Val::ConstF(1.0),
+        }]);
+        let tu = emit_translation_unit::<Cuda>(&k);
+        assert_eq!(tu, emit_kernel::<Cuda>(&k));
+        assert!(tu.starts_with("__global__ void k("));
+    }
+}

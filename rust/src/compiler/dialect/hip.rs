@@ -1,0 +1,145 @@
+//! The HIP/ROCm spelling. The kernel body is source-compatible C++ —
+//! identical bytes to the CUDA emission — so this dialect delegates
+//! every body hook to [`Cuda`] and differs only in the translation-unit
+//! prologue: the `<hip/hip_runtime.h>` include, and §5.3 helper
+//! templates built on the maskless `__shfl_up`/`__shfl_down` width
+//! forms. AMD wavefronts (64-wide on CDNA/GCN) have no independent
+//! per-lane-mask synchronization, so HIP has no `__activemask()` /
+//! `*_sync` shuffle variants; the width argument `G` windows the
+//! shuffle exactly as on NVIDIA.
+
+use super::super::llir::Kernel;
+use super::cuda::Cuda;
+use super::emit::EmitCtx;
+use super::Dialect;
+
+const INCLUDE: &str = "#include <hip/hip_runtime.h>\n";
+
+const BANNER: &str =
+    "// --- sgap macro instructions (§5.3), HIP spelling -----------------------\n";
+
+const ATOMIC_ADD_GROUP_DEF: &str = r#"// atomicAddGroup<T,G>: tree-reduce `value` over each aligned G-lane group
+// with __shfl_down, then lane 0 of the group issues one atomicAdd. No
+// lane mask: AMD wavefronts have no independent per-lane-mask sync.
+template <typename T, int G>
+__device__ __forceinline__ void atomicAddGroup(T* array, int idx, T value) {
+  #pragma unroll
+  for (int offset = G / 2; offset > 0; offset /= 2)
+    value += __shfl_down(value, offset, G);
+  if ((threadIdx.x % G) == 0) atomicAdd(&array[idx], value);
+}
+"#;
+
+const SEG_REDUCE_GROUP_DEF: &str = r#"// segReduceGroup<T,G>: segmented inclusive scan over each aligned G-lane
+// group keyed by `idx`; segment-end lanes write back (runtime-decided
+// writeback threads — segment reduction).
+template <typename T, int G>
+__device__ __forceinline__ void segReduceGroup(T* array, int idx, T value) {
+  int lane = threadIdx.x % G;
+  #pragma unroll
+  for (int offset = 1; offset < G; offset *= 2) {
+    T up = __shfl_up(value, offset, G);
+    int upIdx = __shfl_up(idx, offset, G);
+    if (lane >= offset && upIdx == idx) value += up;
+  }
+  int dnIdx = __shfl_down(idx, 1, G);
+  if (lane == G - 1 || dnIdx != idx) atomicAdd(&array[idx], value);
+}
+"#;
+
+const FOOTER: &str =
+    "// ------------------------------------------------------------------------\n";
+
+/// The HIP dialect (AMD ROCm; maskless width-windowed shuffles).
+pub struct Hip;
+
+impl Dialect for Hip {
+    const NAME: &'static str = "hip";
+    const FILE_EXT: &'static str = "hip";
+
+    fn prologue(cx: &EmitCtx) -> String {
+        let atomic = !cx.atomic_groups.is_empty();
+        let seg = !cx.seg_groups.is_empty();
+        let mut s = String::from(INCLUDE);
+        if !atomic && !seg {
+            return s;
+        }
+        s.push('\n');
+        s.push_str(BANNER);
+        if atomic {
+            s.push_str(ATOMIC_ADD_GROUP_DEF);
+        }
+        if atomic && seg {
+            s.push('\n');
+        }
+        if seg {
+            s.push_str(SEG_REDUCE_GROUP_DEF);
+        }
+        s.push_str(FOOTER);
+        s
+    }
+
+    fn kernel_open(k: &Kernel, cx: &EmitCtx) -> String {
+        Cuda::kernel_open(k, cx)
+    }
+
+    fn decl(var: &str, float: bool, init: &str) -> String {
+        Cuda::decl(var, float, init)
+    }
+
+    fn atomic_add(array: &str, idx: &str, val: &str) -> String {
+        Cuda::atomic_add(array, idx, val)
+    }
+
+    fn atomic_add_group(array: &str, idx: &str, val: &str, group: u32) -> String {
+        Cuda::atomic_add_group(array, idx, val, group)
+    }
+
+    fn seg_reduce_group(array: &str, idx: &str, val: &str, group: u32) -> String {
+        Cuda::seg_reduce_group(array, idx, val, group)
+    }
+
+    fn for_open(var: &str, lo: &str, hi: &str, step: &str) -> String {
+        Cuda::for_open(var, lo, hi, step)
+    }
+
+    fn const_f32(c: f32) -> String {
+        Cuda::const_f32(c)
+    }
+
+    fn thread_idx() -> &'static str {
+        Cuda::thread_idx()
+    }
+
+    fn block_idx() -> &'static str {
+        Cuda::block_idx()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::emit::emit_kernel;
+    use super::*;
+
+    #[test]
+    fn hip_body_is_byte_identical_to_cuda() {
+        use crate::compiler::schedule::{Schedule, SpmmConfig};
+        let k = crate::compiler::lower(&Schedule::sgap_nnz_group(SpmmConfig::default(), 32)).unwrap();
+        assert_eq!(emit_kernel::<Hip>(&k), emit_kernel::<Cuda>(&k));
+    }
+
+    #[test]
+    fn hip_prologue_has_no_mask_forms() {
+        let mut cx = EmitCtx::default();
+        cx.atomic_groups.insert(8);
+        cx.seg_groups.insert(32);
+        let p = Hip::prologue(&cx);
+        assert!(p.starts_with(INCLUDE));
+        assert!(p.contains("__shfl_down(value, offset, G)"));
+        assert!(p.contains("__shfl_up(value, offset, G)"));
+        assert!(!p.contains("_sync") && !p.contains("__activemask"));
+
+        // Helper-free kernels still get the runtime include, nothing else.
+        assert_eq!(Hip::prologue(&EmitCtx::default()), INCLUDE);
+    }
+}

@@ -1,0 +1,178 @@
+//! Dialect-parameterized back ends — one LLIR walk, three targets.
+//!
+//! The §5.3 macro instructions (`atomicAddGroup`/`segReduceGroup`) are
+//! *semantic* reduction primitives; what varies per GPU target is only
+//! their **spelling**: which shuffle intrinsic implements the tree
+//! reduce / segmented scan, how a float atomic add is written, what the
+//! kernel signature and qualifiers look like, and which helper prologue
+//! the translation unit needs. Following the `WarpInstruction<D: Dialect>`
+//! idiom from kubecl's `cubecl-cpp` (see SNIPPETS.md), every such
+//! spelling lives behind the [`Dialect`] trait, and the single generic
+//! walk in [`emit`] turns a [`Kernel`](crate::compiler::llir::Kernel)
+//! into source text for any of the three implementations:
+//!
+//! * [`Cuda`] — the original back end, byte-identical to what
+//!   `codegen_cuda` emitted before this module existed (the committed
+//!   `.cu` goldens pin this).
+//! * [`Hip`] — same C++ body; the helper templates drop the lane-mask
+//!   (`__activemask`/`_sync`) forms, which AMD wavefronts don't have.
+//! * [`Wgsl`] — structurally different spellings: storage-buffer
+//!   bindings instead of pointer parameters, `override` scalars,
+//!   CAS-loop float atomics, and lane-guarded subgroup shuffles (WGSL
+//!   subgroup ops take no width argument — see DESIGN.md §dialects).
+//!
+//! [`DialectKind`] is the runtime tag for CLI/config dispatch
+//! (`sgap codegen --dialect cuda|hip|wgsl`).
+
+pub mod cuda;
+pub mod emit;
+pub mod hip;
+pub mod wgsl;
+
+use std::fmt;
+
+pub use cuda::Cuda;
+pub use emit::EmitCtx;
+pub use hip::Hip;
+pub use wgsl::Wgsl;
+
+use super::llir::Kernel;
+
+/// Every target-specific spelling the generic emitter consults. The
+/// loop/branch structure, expression nesting, operators, indentation,
+/// and comments are shared by the walk in [`emit`]; a dialect only
+/// decides how declarations, stores, reductions, builtins, and the
+/// surrounding translation unit are written.
+pub trait Dialect {
+    /// Lowercase dialect name — the `--dialect` CLI value and the
+    /// dialect-qualified backend label suffix.
+    const NAME: &'static str;
+    /// Source-file extension for emitted kernels (`cu`, `hip`, `wgsl`).
+    const FILE_EXT: &'static str;
+
+    /// Translation-unit prologue: includes/directives plus the helper
+    /// definitions `cx` says the kernel actually references — only those
+    /// (a pure-store kernel gets no reduction templates at all). Empty
+    /// means the translation unit is the bare kernel.
+    fn prologue(cx: &EmitCtx) -> String;
+
+    /// Kernel signature up to and including the opening `{` (multi-line
+    /// for targets that declare bindings at module scope).
+    fn kernel_open(k: &Kernel, cx: &EmitCtx) -> String;
+
+    /// The final token closing the kernel body.
+    fn kernel_close() -> &'static str {
+        "}"
+    }
+
+    /// `int`/`float` declaration-with-initializer statement.
+    fn decl(var: &str, float: bool, init: &str) -> String;
+
+    /// Plain global store.
+    fn store(array: &str, idx: &str, val: &str) -> String {
+        format!("{array}[{idx}] = {val};")
+    }
+
+    /// Plain (non-grouped) float atomic add.
+    fn atomic_add(array: &str, idx: &str, val: &str) -> String;
+
+    /// §5.3 `atomicAddGroup` call site.
+    fn atomic_add_group(array: &str, idx: &str, val: &str, group: u32) -> String;
+
+    /// §5.3 `segReduceGroup` call site.
+    fn seg_reduce_group(array: &str, idx: &str, val: &str, group: u32) -> String;
+
+    /// Counted-loop header up to and including the opening `{`.
+    fn for_open(var: &str, lo: &str, hi: &str, step: &str) -> String;
+
+    /// Typed float literal.
+    fn const_f32(c: f32) -> String;
+
+    /// The lane id within the workgroup/block (TACO's `threadIdx.x`).
+    fn thread_idx() -> &'static str;
+
+    /// The workgroup/block id (TACO's `blockIdx.x`).
+    fn block_idx() -> &'static str;
+
+    /// TACO's `taco_binarySearchBefore` row-search call site.
+    fn binary_search(array: &str, lo: &str, hi: &str, target: &str) -> String {
+        format!("taco_binarySearchBefore({array}, {lo}, {hi}, {target})")
+    }
+}
+
+/// Runtime dialect tag — the value-level mirror of the [`Dialect`]
+/// type parameter, for CLI flags, config fields, and backend labels.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, Hash)]
+pub enum DialectKind {
+    #[default]
+    Cuda,
+    Hip,
+    Wgsl,
+}
+
+impl DialectKind {
+    /// Every dialect the emitter speaks, in CLI/docs order.
+    pub const ALL: [DialectKind; 3] = [DialectKind::Cuda, DialectKind::Hip, DialectKind::Wgsl];
+
+    /// Parse a `--dialect` flag value (case-insensitive).
+    pub fn parse(s: &str) -> Option<DialectKind> {
+        DialectKind::ALL.into_iter().find(|d| d.name().eq_ignore_ascii_case(s))
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DialectKind::Cuda => Cuda::NAME,
+            DialectKind::Hip => Hip::NAME,
+            DialectKind::Wgsl => Wgsl::NAME,
+        }
+    }
+
+    pub fn file_ext(self) -> &'static str {
+        match self {
+            DialectKind::Cuda => Cuda::FILE_EXT,
+            DialectKind::Hip => Hip::FILE_EXT,
+            DialectKind::Wgsl => Wgsl::FILE_EXT,
+        }
+    }
+
+    /// Emit the bare kernel in this dialect.
+    pub fn emit_kernel(self, k: &Kernel) -> String {
+        match self {
+            DialectKind::Cuda => emit::emit_kernel::<Cuda>(k),
+            DialectKind::Hip => emit::emit_kernel::<Hip>(k),
+            DialectKind::Wgsl => emit::emit_kernel::<Wgsl>(k),
+        }
+    }
+
+    /// Emit prologue + kernel in this dialect.
+    pub fn emit_translation_unit(self, k: &Kernel) -> String {
+        match self {
+            DialectKind::Cuda => emit::emit_translation_unit::<Cuda>(k),
+            DialectKind::Hip => emit::emit_translation_unit::<Hip>(k),
+            DialectKind::Wgsl => emit::emit_translation_unit::<Wgsl>(k),
+        }
+    }
+}
+
+impl fmt::Display for DialectKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_round_trips_names() {
+        for d in DialectKind::ALL {
+            assert_eq!(DialectKind::parse(d.name()), Some(d));
+            assert_eq!(DialectKind::parse(&d.name().to_uppercase()), Some(d));
+        }
+        assert_eq!(DialectKind::parse("metal"), None);
+        assert_eq!(DialectKind::default(), DialectKind::Cuda);
+        assert_eq!(DialectKind::Hip.to_string(), "hip");
+        assert_eq!(DialectKind::ALL.map(DialectKind::file_ext), ["cu", "hip", "wgsl"]);
+    }
+}

@@ -1,0 +1,259 @@
+//! The WGSL (WebGPU) spelling — the target that actually exercises the
+//! dialect abstraction, because almost every spelling differs:
+//!
+//! * Kernels take no pointer parameters. Array params become module-scope
+//!   `@group(0) @binding(n)` storage buffers (access mode derived from
+//!   the [`EmitCtx`] write classification) and scalar params become
+//!   `override` pipeline constants.
+//! * WGSL has no `f32` atomics: reduction outputs bind as
+//!   `array<atomic<u32>>` and every float atomic add goes through a
+//!   bitcast CAS loop (`atomicAddF32`).
+//! * WGSL subgroup shuffles (`enable subgroups;`) take **no width
+//!   argument** and there is no independent sub-warp synchronization or
+//!   lane mask (`__activemask` has no analogue). The §5.3 group
+//!   primitives therefore window the full-subgroup shuffles with lane
+//!   guards computed from the thread id — correct exactly when the
+//!   subgroup size is a multiple of the group size `G`, which holds for
+//!   the paper's `G ∈ {2,4,8,16,32}` on 32/64-wide hardware. This is why
+//!   the segment-scan emission *changes shape* here rather than merely
+//!   renaming an intrinsic — see DESIGN.md §dialects.
+//! * Helpers take `ptr<storage, ...>` parameters, which needs the
+//!   `unrestricted_pointer_parameters` language extension.
+
+use std::fmt::Write as _;
+
+use super::super::llir::{Kernel, ParamKind};
+use super::emit::EmitCtx;
+use super::Dialect;
+
+const BANNER: &str =
+    "// --- sgap macro instructions (§5.3), WGSL spelling ----------------------\n";
+
+const FOOTER: &str =
+    "// ------------------------------------------------------------------------\n";
+
+const ATOMIC_ADD_F32_DEF: &str = r#"// atomicAddF32: WGSL has no float atomics — emulate atomicAdd on an
+// f32 cell stored as atomic<u32> with a bitcast compare-exchange loop.
+fn atomicAddF32(a: ptr<storage, array<atomic<u32>>, read_write>, idx: i32, value: f32) {
+  var bits: u32 = atomicLoad(&(*a)[idx]);
+  loop {
+    let updated: u32 = bitcast<u32>(bitcast<f32>(bits) + value);
+    let r = atomicCompareExchangeWeak(&(*a)[idx], bits, updated);
+    if (r.exchanged) { break; }
+    bits = r.old_value;
+  }
+}
+"#;
+
+const BINARY_SEARCH_DEF: &str = r#"// taco_binarySearchBefore: largest i in [lo, hi] with a[i] <= target
+// (TACO's device helper, Listing 1's row search).
+fn taco_binarySearchBefore(a: ptr<storage, array<i32>, read>, lo: i32, hi: i32, target: i32) -> i32 {
+  if ((*a)[hi] <= target) { return hi; }
+  var lowerBound: i32 = lo;
+  var upperBound: i32 = hi;
+  while (upperBound - lowerBound > 1) {
+    let mid: i32 = (upperBound + lowerBound) / 2;
+    let midValue: i32 = (*a)[mid];
+    if (midValue < target) { lowerBound = mid; }
+    else if (midValue > target) { upperBound = mid; }
+    else { return mid; }
+  }
+  return lowerBound;
+}
+"#;
+
+/// Monomorphized `atomicAddGroup` for one group size (WGSL has no
+/// templates, so each referenced `G` gets its own function).
+fn atomic_add_group_def(g: u32) -> String {
+    format!(
+        r#"// atomicAddGroup_{g}: tree-reduce `value` over each aligned {g}-lane group,
+// then lane 0 of the group issues one atomic add. WGSL subgroup shuffles
+// have no width window, so lane guards confine the reduction to the
+// group (requires subgroup_size % {g} == 0).
+fn atomicAddGroup_{g}(a: ptr<storage, array<atomic<u32>>, read_write>, idx: i32, value: f32, tid: i32) {{
+  let lane: i32 = tid % {g};
+  var v: f32 = value;
+  for (var offset: i32 = {g} / 2; offset > 0; offset /= 2) {{
+    let dn: f32 = subgroupShuffleDown(v, u32(offset));
+    if (lane < {g} - offset) {{ v += dn; }}
+  }}
+  if (lane == 0) {{ atomicAddF32(a, idx, v); }}
+}}
+"#
+    )
+}
+
+/// Monomorphized `segReduceGroup` for one group size.
+fn seg_reduce_group_def(g: u32) -> String {
+    format!(
+        r#"// segReduceGroup_{g}: segmented inclusive scan over each aligned {g}-lane
+// group keyed by `idx`; segment-end lanes write back. Lane guards window
+// the un-widthed subgroup shuffles (requires subgroup_size % {g} == 0).
+fn segReduceGroup_{g}(a: ptr<storage, array<atomic<u32>>, read_write>, idx: i32, value: f32, tid: i32) {{
+  let lane: i32 = tid % {g};
+  var v: f32 = value;
+  for (var offset: i32 = 1; offset < {g}; offset *= 2) {{
+    let up: f32 = subgroupShuffleUp(v, u32(offset));
+    let upIdx: i32 = subgroupShuffleUp(idx, u32(offset));
+    if (lane >= offset && upIdx == idx) {{ v += up; }}
+  }}
+  let dnIdx: i32 = subgroupShuffleDown(idx, 1u);
+  if (lane == {g} - 1 || dnIdx != idx) {{ atomicAddF32(a, idx, v); }}
+}}
+"#
+    )
+}
+
+/// The WGSL dialect (WebGPU compute; storage bindings + subgroup ops).
+pub struct Wgsl;
+
+impl Dialect for Wgsl {
+    const NAME: &'static str = "wgsl";
+    const FILE_EXT: &'static str = "wgsl";
+
+    fn prologue(cx: &EmitCtx) -> String {
+        let groups = cx.uses_group_macros();
+        let atomics = groups || cx.uses_atomic_add;
+        if !atomics && !cx.uses_binary_search {
+            return String::new();
+        }
+        let mut s = String::new();
+        if groups {
+            s.push_str("enable subgroups;\n");
+        }
+        s.push_str("requires unrestricted_pointer_parameters;\n");
+        s.push('\n');
+        s.push_str(BANNER);
+        let mut defs: Vec<String> = Vec::new();
+        if atomics {
+            defs.push(ATOMIC_ADD_F32_DEF.into());
+        }
+        for g in &cx.atomic_groups {
+            defs.push(atomic_add_group_def(*g));
+        }
+        for g in &cx.seg_groups {
+            defs.push(seg_reduce_group_def(*g));
+        }
+        if cx.uses_binary_search {
+            defs.push(BINARY_SEARCH_DEF.into());
+        }
+        s.push_str(&defs.join("\n"));
+        s.push_str(FOOTER);
+        s
+    }
+
+    fn kernel_open(k: &Kernel, cx: &EmitCtx) -> String {
+        let mut s = String::new();
+        let mut binding = 0;
+        for p in &k.params {
+            match p.kind {
+                ParamKind::ArrayF32 | ParamKind::ArrayI32 => {
+                    let base = if p.kind == ParamKind::ArrayF32 { "f32" } else { "i32" };
+                    let (access, elem) = if cx.atomic_arrays.contains(&p.name) {
+                        ("read_write", "atomic<u32>".to_string())
+                    } else if cx.stored_arrays.contains(&p.name) {
+                        ("read_write", base.to_string())
+                    } else {
+                        ("read", base.to_string())
+                    };
+                    let name = &p.name;
+                    writeln!(
+                        s,
+                        "@group(0) @binding({binding}) var<storage, {access}> {name}: array<{elem}>;"
+                    )
+                    .unwrap();
+                    binding += 1;
+                }
+                ParamKind::ScalarI32 => writeln!(s, "override {}: i32;", p.name).unwrap(),
+            }
+        }
+        s.push('\n');
+        writeln!(s, "@compute @workgroup_size({})", k.block_dim).unwrap();
+        write!(
+            s,
+            "fn {}(@builtin(workgroup_id) wgid: vec3<u32>, @builtin(local_invocation_id) lid: vec3<u32>) {{",
+            k.name
+        )
+        .unwrap();
+        s
+    }
+
+    fn decl(var: &str, float: bool, init: &str) -> String {
+        let ty = if float { "f32" } else { "i32" };
+        format!("var {var}: {ty} = {init};")
+    }
+
+    fn atomic_add(array: &str, idx: &str, val: &str) -> String {
+        format!("atomicAddF32(&{array}, {idx}, {val});")
+    }
+
+    fn atomic_add_group(array: &str, idx: &str, val: &str, group: u32) -> String {
+        format!("atomicAddGroup_{group}(&{array}, {idx}, {val}, i32(lid.x));")
+    }
+
+    fn seg_reduce_group(array: &str, idx: &str, val: &str, group: u32) -> String {
+        format!("segReduceGroup_{group}(&{array}, {idx}, {val}, i32(lid.x));")
+    }
+
+    fn for_open(var: &str, lo: &str, hi: &str, step: &str) -> String {
+        format!("for (var {var}: i32 = {lo}; {var} < {hi}; {var} += {step}) {{")
+    }
+
+    fn const_f32(c: f32) -> String {
+        format!("{c:?}")
+    }
+
+    fn thread_idx() -> &'static str {
+        "i32(lid.x)"
+    }
+
+    fn block_idx() -> &'static str {
+        "i32(wgid.x)"
+    }
+
+    fn binary_search(array: &str, lo: &str, hi: &str, target: &str) -> String {
+        format!("taco_binarySearchBefore(&{array}, {lo}, {hi}, {target})")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::emit::{emit_kernel, emit_translation_unit};
+    use super::*;
+    use crate::compiler::schedule::{Schedule, SpmmConfig};
+
+    #[test]
+    fn wgsl_spellings_differ_structurally() {
+        let k = crate::compiler::lower(&Schedule::sgap_nnz_group(SpmmConfig::default(), 32)).unwrap();
+        let src = emit_kernel::<Wgsl>(&k);
+        // Bindings replace pointer params; the reduction target is atomic.
+        assert!(src.contains("@group(0) @binding(0) var<storage, read> i_blockStarts: array<i32>;"));
+        assert!(src.contains("var<storage, read_write> C_vals: array<atomic<u32>>;"));
+        assert!(src.contains("override A1_dimension: i32;"));
+        // Builtins replace threadIdx/blockIdx, declarations are typed vars.
+        assert!(src.contains("var fpos1: i32 = (i32(lid.x) % 256);"));
+        assert!(!src.contains("threadIdx") && !src.contains("__global__"));
+        // The macro call passes the lane id explicitly (no implicit mask).
+        assert!(src.contains("segReduceGroup_32(&C_vals, kC, val, i32(lid.x));"));
+        assert!(src.contains("taco_binarySearchBefore(&A2_pos, pA2_begin, pA2_end, fposA)"));
+        // No stray `0.0f` CUDA literals.
+        assert!(src.contains("var val: f32 = 0.0;"));
+    }
+
+    #[test]
+    fn wgsl_prologue_defines_only_referenced_helpers() {
+        let k = crate::compiler::lower(&Schedule::sgap_nnz_group(SpmmConfig::default(), 32)).unwrap();
+        let tu = emit_translation_unit::<Wgsl>(&k);
+        assert!(tu.starts_with("enable subgroups;\nrequires unrestricted_pointer_parameters;\n"));
+        assert!(tu.contains("fn segReduceGroup_32(") && tu.contains("fn atomicAddF32("));
+        assert!(tu.contains("fn taco_binarySearchBefore("));
+        assert!(!tu.contains("atomicAddGroup_"));
+
+        // A store-only kernel needs no helpers and no directives at all.
+        let row = crate::compiler::lower(&Schedule::taco_row_serial(SpmmConfig::default())).unwrap();
+        let tu = emit_translation_unit::<Wgsl>(&row);
+        assert!(!tu.contains("enable subgroups"));
+        assert!(!tu.contains("requires"));
+        assert!(tu.contains("var<storage, read_write> C_vals: array<f32>;"));
+    }
+}

@@ -14,7 +14,9 @@
 //!                    GPUWarp carries *tiling-only* semantics (§5.1)
 //!             └─ lower → imperative LLIR (lower, llir)
 //!                  — segment-reduction lowering + zero extension (§5.2–5.3)
-//!             └─ codegen → CUDA-like text (codegen_cuda)
+//!             └─ codegen → dialect-parameterized text (dialect)
+//!                  — one generic LLIR walk emits CUDA, HIP, or WGSL;
+//!                    codegen_cuda is the CUDA instantiation (goldens)
 //!                        → simulator launch (the LLIR itself runs on `sim`)
 //! ```
 //!
@@ -33,6 +35,7 @@
 pub mod cin;
 pub mod codegen_cuda;
 pub mod compile;
+pub mod dialect;
 pub mod expr;
 pub mod llir;
 pub mod lower;
@@ -43,6 +46,7 @@ pub use cin::{
     Cin, GroupSpec, OutputRaceStrategy, ParallelUnit, ReductionPlan, ReductionStrategy, Writeback,
 };
 pub use compile::{compile, flatten_fused, CompileError, ScheduleBuilder};
+pub use dialect::{Cuda, Dialect, DialectKind, EmitCtx, Hip, Wgsl};
 pub use expr::{Access, Expr, FusedAlgebra, IndexVar, LevelFormat, TensorAlgebra, TensorVar};
 pub use llir::{Kernel, LaunchConfig, Stmt, Val};
 pub use lower::{lower, LowerError};

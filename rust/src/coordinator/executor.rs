@@ -27,6 +27,9 @@ use std::path::PathBuf;
 use std::sync::mpsc::SyncSender;
 use std::sync::Arc;
 
+use crate::compiler::DialectKind;
+use crate::runtime::artifact::{pad_coo, pad_dense};
+use crate::runtime::pool::{DeviceImage, DevicePool, PoolRef};
 use crate::runtime::{ArtifactKind, Runtime};
 use crate::sim::{HwProfile, Machine};
 use crate::tuner::calibrate::{Sample, WorkloadSpec};
@@ -34,7 +37,7 @@ use crate::tuner::{CostModel, Selector};
 
 use super::calibrate::SharedCalibrator;
 use super::metrics::Metrics;
-use super::op::{Op, OpKind, SparseHandle};
+use super::op::{Op, OpKind, SparseData, SparseHandle};
 use super::plan_cache::{Plan, PlanCache, ShapeKey};
 
 /// Typed backend tag of a served response. Its `Display` form is the
@@ -47,6 +50,11 @@ pub enum BackendKind {
     Pjrt { artifact: String },
     /// A plan-cache kernel on the SIMT simulator, by family label.
     Sim { family: &'static str },
+    /// A plan-cache kernel served under a non-CUDA codegen dialect
+    /// (`sim:<dialect>:<family>`). The default CUDA dialect keeps the
+    /// bare [`BackendKind::Sim`] label, so existing dashboards and the
+    /// pinned label tests read on unchanged.
+    SimDialect { family: &'static str, dialect: DialectKind },
     /// Serial CPU path (degenerate inputs / uncovered widths).
     CpuSerial,
     /// Serial CPU path after the admitted backend failed.
@@ -61,7 +69,7 @@ impl BackendKind {
     }
 
     pub fn is_sim(&self) -> bool {
-        matches!(self, BackendKind::Sim { .. })
+        matches!(self, BackendKind::Sim { .. } | BackendKind::SimDialect { .. })
     }
 
     /// Either CPU path (serial or fallback).
@@ -79,6 +87,7 @@ impl fmt::Display for BackendKind {
         match self {
             BackendKind::Pjrt { artifact } => write!(f, "pjrt:{artifact}"),
             BackendKind::Sim { family } => write!(f, "sim:{family}"),
+            BackendKind::SimDialect { family, dialect } => write!(f, "sim:{dialect}:{family}"),
             BackendKind::CpuSerial => f.write_str("cpu-serial"),
             BackendKind::CpuFallback => f.write_str("cpu-fallback"),
             BackendKind::Custom(label) => f.write_str(label),
@@ -140,6 +149,14 @@ pub struct ExecutorEnv {
     /// coordinator builds one even when calibration is disabled, so warm
     /// starts apply uniformly); `None` only in hand-built test envs.
     pub(crate) calibrator: Option<SharedCalibrator>,
+    /// The device-buffer pool staging operand images across submits.
+    /// `None` when pooling is disabled (`pool_budget_bytes: 0`) —
+    /// executors then rebuild and "re-upload" per run, the pre-pool
+    /// behavior.
+    pub(crate) pool: Option<Arc<DevicePool>>,
+    /// The codegen dialect this coordinator serves under; non-CUDA
+    /// dialects surface in the simulator's backend labels.
+    pub(crate) dialect: DialectKind,
 }
 
 impl ExecutorEnv {
@@ -165,6 +182,14 @@ impl ExecutorEnv {
 
     pub fn calibrator(&self) -> Option<&SharedCalibrator> {
         self.calibrator.as_ref()
+    }
+
+    pub fn pool(&self) -> Option<&Arc<DevicePool>> {
+        self.pool.as_ref()
+    }
+
+    pub fn dialect(&self) -> DialectKind {
+        self.dialect
     }
 
     /// Hand a shape to the background tuner (best-effort: a full refine
@@ -258,7 +283,8 @@ pub fn pjrt_factory() -> ExecutorFactory {
         }
         let dir = env.artifacts_dir.as_ref()?;
         let rt = Runtime::load(dir).ok()?;
-        Some(Box::new(PjrtExecutor { rt }) as Box<dyn Executor>)
+        let exec = PjrtExecutor { rt, pool: env.pool.clone(), metrics: env.metrics.clone() };
+        Some(Box::new(exec) as Box<dyn Executor>)
     })
 }
 
@@ -274,9 +300,13 @@ pub fn cpu_factory() -> ExecutorFactory {
 
 /// PJRT artifact execution (the numeric hot path). Each worker owns its
 /// own [`Runtime`] — the client is `!Send` and the executable cache
-/// stays hot per worker.
+/// stays hot per worker. With a device pool configured, the padded
+/// COO/dense images are staged once per (handle, bucket) and repeats
+/// skip the `pad_coo`/`pad_dense` rebuild and re-upload entirely.
 pub struct PjrtExecutor {
     rt: Runtime,
+    pool: Option<Arc<DevicePool>>,
+    metrics: Arc<Metrics>,
 }
 
 impl Executor for PjrtExecutor {
@@ -305,8 +335,41 @@ impl Executor for PjrtExecutor {
             return Err("pjrt executor given a non-pjrt admission".into());
         };
         let a = op.a.as_matrix().ok_or("pjrt admitted a non-matrix op")?;
-        self.rt.run_spmm_nnz(artifact, a, &op.dense[0]).map_err(|e| e.to_string())
+        let Some(pool) = self.pool.clone() else {
+            return self.rt.run_spmm_nnz(artifact, a, &op.dense[0]).map_err(|e| e.to_string());
+        };
+        // Stage the padded images under keys salted with the bucket name:
+        // the same handle served by two buckets pads differently, so each
+        // (handle, bucket) pairing gets its own page. Resubmits hit.
+        let spec = self.rt.registry.get(artifact).map_err(|e| e.to_string())?.clone();
+        let salt = fnv_str(artifact);
+        let sref = pool
+            .try_acquire(op.a.pool_key().salted(salt), || Ok(DeviceImage::Coo(pad_coo(a, &spec)?)))
+            .map_err(|e| e.to_string())?;
+        let b = &op.dense[0];
+        let bref = pool
+            .try_acquire(b.pool_key().salted(salt), || {
+                Ok(DeviceImage::Dense(pad_dense(b, a.cols, spec.n, spec.cols)))
+            })
+            .map_err(|e| e.to_string())?;
+        for r in [&sref, &bref] {
+            if r.hit() {
+                self.metrics.on_pool_hit();
+            } else {
+                self.metrics.on_pool_miss();
+            }
+        }
+        self.metrics.set_pool_bytes(pool.stats().bytes_resident as u64);
+        let (DeviceImage::Coo(coo), DeviceImage::Dense(bp)) = (sref.image(), bref.image()) else {
+            return Err("pjrt staged image kind mismatch".into());
+        };
+        self.rt.run_spmm_nnz_staged(artifact, coo, bp, a.rows).map_err(|e| e.to_string())
     }
+}
+
+/// FNV-1a over a label — the salt distinguishing per-bucket stagings.
+fn fnv_str(s: &str) -> u64 {
+    s.bytes().fold(0xcbf2_9ce4_8422_2325, |h, b| crate::runtime::pool::fnv_mix(h, b as u64))
 }
 
 /// Plan-cache + SIMT-simulator execution: the tuner-aware default path.
@@ -367,6 +430,32 @@ impl SimExecutor {
             &self.env.metrics,
             &self.env.plan_cache,
         );
+    }
+
+    /// Pin the op's operand images in the device pool for the run —
+    /// repeats of the same handles hit and skip the "upload" (the clone
+    /// into a [`DeviceImage`]). Returns `None` when pooling is disabled;
+    /// the refs are held across the simulated launch the way real device
+    /// buffers stay resident, then released on drop.
+    fn stage(&self, op: &Op) -> Option<Vec<PoolRef>> {
+        let pool = self.env.pool.as_ref()?;
+        let mut refs = Vec::with_capacity(1 + op.dense.len());
+        refs.push(pool.acquire(op.a.pool_key(), || match op.a.data() {
+            SparseData::Matrix(m) => DeviceImage::of_matrix(m),
+            SparseData::Tensor(t) => DeviceImage::of_tensor(t),
+        }));
+        for d in &op.dense {
+            refs.push(pool.acquire(d.pool_key(), || DeviceImage::Dense(d.as_slice().to_vec())));
+        }
+        for r in &refs {
+            if r.hit() {
+                self.env.metrics.on_pool_hit();
+            } else {
+                self.env.metrics.on_pool_miss();
+            }
+        }
+        self.env.metrics.set_pool_bytes(pool.stats().bytes_resident as u64);
+        Some(refs)
     }
 }
 
@@ -433,11 +522,12 @@ impl Executor for SimExecutor {
         if plan.kind.is_composite() {
             self.env.metrics.on_banded();
         }
-        Some(Admission {
-            backend: BackendKind::Sim { family: plan.kind.family_label() },
-            plan: Some(plan),
-            cache_hit: hit,
-        })
+        let family = plan.kind.family_label();
+        let backend = match self.env.dialect {
+            DialectKind::Cuda => BackendKind::Sim { family },
+            d => BackendKind::SimDialect { family, dialect: d },
+        };
+        Some(Admission { backend, plan: Some(plan), cache_hit: hit })
     }
 
     fn execute(&mut self, op: &Op, adm: &Admission) -> Result<Vec<f32>, String> {
@@ -448,6 +538,7 @@ impl Executor for SimExecutor {
         if !op.kind.compatible(&algo) {
             return Err(format!("plan {} cannot serve a {} op", algo.name(), op.kind));
         }
+        let _staged = self.stage(op);
         let res = match op.kind {
             OpKind::Spmm => {
                 let a = op.a.as_matrix().ok_or("sim admitted a non-matrix spmm op")?;
@@ -505,6 +596,9 @@ mod tests {
     fn backend_labels_are_stable() {
         assert_eq!(BackendKind::Pjrt { artifact: "spmm_a".into() }.to_string(), "pjrt:spmm_a");
         assert_eq!(BackendKind::Sim { family: "sgap-nnz-group" }.to_string(), "sim:sgap-nnz-group");
+        let hip = BackendKind::SimDialect { family: "sgap-nnz-group", dialect: DialectKind::Hip };
+        assert_eq!(hip.to_string(), "sim:hip:sgap-nnz-group");
+        assert!(hip.is_sim() && !hip.is_cpu());
         assert_eq!(BackendKind::CpuSerial.to_string(), "cpu-serial");
         assert_eq!(BackendKind::CpuFallback.to_string(), "cpu-fallback");
         assert_eq!(BackendKind::Custom("fpga:v1".into()).to_string(), "fpga:v1");

@@ -60,6 +60,16 @@ pub struct Metrics {
     /// Plan-cache hits that landed on a catalog-preloaded (warm) entry —
     /// the `serve --plans` warm-start payoff.
     warm_hits: AtomicU64,
+    /// Device-pool stagings that found the operand image resident (the
+    /// upload was skipped) vs built it fresh.
+    pool_hits: AtomicU64,
+    pool_misses: AtomicU64,
+    /// Uploads skipped by pool hits — the resubmit payoff counter
+    /// (tracks `pool_hits`; kept separate so a future partial-hit path
+    /// can diverge).
+    uploads_skipped: AtomicU64,
+    /// Gauge: bytes resident in the device pool after the last staging.
+    pool_bytes: AtomicU64,
     /// Latencies in microseconds (bounded reservoir).
     latencies_us: Mutex<Vec<u64>>,
     backends: Mutex<BTreeMap<String, Hist>>,
@@ -158,6 +168,14 @@ pub struct MetricsSnapshot {
     pub rejected: u64,
     /// Plan-cache hits on catalog-preloaded entries (warm starts).
     pub warm_hits: u64,
+    /// Device-pool staging: hits (image resident, upload skipped) and
+    /// misses (image built and "uploaded").
+    pub pool_hits: u64,
+    pub pool_misses: u64,
+    /// Operand uploads skipped thanks to pool hits.
+    pub uploads_skipped: u64,
+    /// Gauge: bytes resident in the device pool (live + free pages).
+    pub pool_bytes_live: u64,
     pub p50_us: u64,
     pub p99_us: u64,
     pub mean_us: f64,
@@ -261,6 +279,23 @@ impl Metrics {
         self.warm_hits.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// A device-pool staging found the operand image resident: the
+    /// padded-buffer rebuild and upload were both skipped.
+    pub fn on_pool_hit(&self) {
+        self.pool_hits.fetch_add(1, Ordering::Relaxed);
+        self.uploads_skipped.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A device-pool staging built (and "uploaded") a fresh image.
+    pub fn on_pool_miss(&self) {
+        self.pool_misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Update the pool-residency gauge (bytes in live + free pages).
+    pub fn set_pool_bytes(&self, bytes: u64) {
+        self.pool_bytes.store(bytes, Ordering::Relaxed);
+    }
+
     pub fn on_error(&self) {
         self.errors.fetch_add(1, Ordering::Relaxed);
     }
@@ -321,6 +356,10 @@ impl Metrics {
             coalesced: self.coalesced.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
             warm_hits: self.warm_hits.load(Ordering::Relaxed),
+            pool_hits: self.pool_hits.load(Ordering::Relaxed),
+            pool_misses: self.pool_misses.load(Ordering::Relaxed),
+            uploads_skipped: self.uploads_skipped.load(Ordering::Relaxed),
+            pool_bytes_live: self.pool_bytes.load(Ordering::Relaxed),
             p50_us: q(0.50),
             p99_us: q(0.99),
             mean_us: mean,
@@ -489,6 +528,23 @@ mod tests {
         assert_eq!((s.coalesced, s.rejected, s.warm_hits), (4, 1, 2));
         // rejection never touches the submitted/completed identity
         assert_eq!((s.submitted, s.completed, s.errors), (0, 0, 0));
+    }
+
+    #[test]
+    fn pool_counters_and_gauge() {
+        let m = Metrics::new();
+        let s0 = m.snapshot();
+        assert_eq!((s0.pool_hits, s0.pool_misses, s0.uploads_skipped), (0, 0, 0));
+        assert_eq!(s0.pool_bytes_live, 0);
+        m.on_pool_miss();
+        m.on_pool_hit();
+        m.on_pool_hit();
+        m.set_pool_bytes(4096);
+        let s = m.snapshot();
+        assert_eq!((s.pool_hits, s.pool_misses, s.uploads_skipped), (2, 1, 2));
+        assert_eq!(s.pool_bytes_live, 4096);
+        m.set_pool_bytes(1024); // gauge overwrites, never accumulates
+        assert_eq!(m.snapshot().pool_bytes_live, 1024);
     }
 
     #[test]

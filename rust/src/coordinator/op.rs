@@ -26,6 +26,7 @@
 //!   handles, never cloning them).
 
 use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, OnceLock};
 
 use crate::algos::catalog::Algo;
@@ -33,6 +34,7 @@ use crate::algos::cpu_ref::spmm_serial;
 use crate::algos::fused::fused_serial;
 use crate::algos::mttkrp::{mttkrp_serial, ttm_serial};
 use crate::algos::sddmm::sddmm_serial;
+use crate::runtime::pool::{fnv_mix, PoolKey};
 use crate::sparse::coo3::Coo3;
 use crate::sparse::{Csr, MatrixStats, SegStats};
 use crate::tuner::{CostModel, Selector};
@@ -146,9 +148,43 @@ impl SparseData {
     }
 }
 
+/// Registration uids for the device pool's [`PoolKey`]s. Monotonic and
+/// never reused — unlike `Arc` addresses, which the allocator recycles
+/// (a recycled address could alias a dead handle's staged device image).
+static NEXT_OPERAND_UID: AtomicU64 = AtomicU64::new(1);
+
+fn next_operand_uid() -> u64 {
+    NEXT_OPERAND_UID.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Sampled FNV-1a content fingerprint: dimensions and nnz always mix in;
+/// values/indices are strided down to ≤ 64 probes so registration stays
+/// O(1)-ish on huge operands. The pool pairs this with the uid, so it
+/// only has to catch *mutation behind a uid*, not global uniqueness.
+fn sampled_fp(dims: &[u64], ints: &[u32], floats: &[f32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &d in dims {
+        h = fnv_mix(h, d);
+    }
+    let stride = |len: usize| (len / 64).max(1);
+    let s = stride(ints.len());
+    for &v in ints.iter().step_by(s) {
+        h = fnv_mix(h, v as u64);
+    }
+    let s = stride(floats.len());
+    for &v in floats.iter().step_by(s) {
+        h = fnv_mix(h, v.to_bits() as u64);
+    }
+    h
+}
+
 #[derive(Debug)]
 struct SparseInner {
     data: SparseData,
+    /// Pool identity: never-reused registration uid + sampled content
+    /// fingerprint (see [`SparseHandle::pool_key`]).
+    uid: u64,
+    pool_fp: u64,
     /// Matrix fingerprint — computed on first use (primed eagerly by
     /// `Session::register_matrix`), then cached for the handle's life.
     stats: OnceLock<MatrixStats>,
@@ -178,9 +214,12 @@ impl SparseHandle {
     /// [`Session::register_matrix`](super::Session::register_matrix)
     /// primes it eagerly at registration time.
     pub fn matrix(a: Csr) -> SparseHandle {
+        let fp = sampled_fp(&[a.rows as u64, a.cols as u64, a.nnz() as u64], &a.indices, &a.data);
         SparseHandle {
             inner: Arc::new(SparseInner {
                 data: SparseData::Matrix(a),
+                uid: next_operand_uid(),
+                pool_fp: fp,
                 stats: OnceLock::new(),
                 seg_mttkrp: OnceLock::new(),
                 seg_ttm: OnceLock::new(),
@@ -191,9 +230,13 @@ impl SparseHandle {
     /// Register an order-3 COO tensor. The per-scenario [`SegStats`]
     /// passes run lazily, on the first MTTKRP/TTM op using the handle.
     pub fn tensor(a: Coo3) -> SparseHandle {
+        let dims = [a.dim0 as u64, a.dim1 as u64, a.dim2 as u64, a.nnz() as u64];
+        let fp = sampled_fp(&dims, &a.idx0, &a.vals);
         SparseHandle {
             inner: Arc::new(SparseInner {
                 data: SparseData::Tensor(a),
+                uid: next_operand_uid(),
+                pool_fp: fp,
                 stats: OnceLock::new(),
                 seg_mttkrp: OnceLock::new(),
                 seg_ttm: OnceLock::new(),
@@ -256,6 +299,19 @@ impl SparseHandle {
     pub fn strong_count(&self) -> usize {
         Arc::strong_count(&self.inner)
     }
+
+    /// Registration uid — monotonic, never reused, shared by clones of
+    /// this handle. The address for
+    /// [`DevicePool::invalidate`](crate::runtime::pool::DevicePool::invalidate).
+    pub fn uid(&self) -> u64 {
+        self.inner.uid
+    }
+
+    /// The handle's device-pool identity: uid + sampled content
+    /// fingerprint. Every clone stages (and hits) the same pool page.
+    pub fn pool_key(&self) -> PoolKey {
+        PoolKey { uid: self.inner.uid, fp: self.inner.pool_fp }
+    }
 }
 
 impl From<Csr> for SparseHandle {
@@ -275,11 +331,15 @@ impl From<Coo3> for SparseHandle {
 #[derive(Debug, Clone)]
 pub struct DenseHandle {
     data: Arc<Vec<f32>>,
+    /// Pool identity (see [`SparseHandle::pool_key`]); clones share it.
+    uid: u64,
+    pool_fp: u64,
 }
 
 impl DenseHandle {
     pub fn new(v: Vec<f32>) -> DenseHandle {
-        DenseHandle { data: Arc::new(v) }
+        let fp = sampled_fp(&[v.len() as u64], &[], &v);
+        DenseHandle { data: Arc::new(v), uid: next_operand_uid(), pool_fp: fp }
     }
 
     pub fn as_slice(&self) -> &[f32] {
@@ -294,6 +354,16 @@ impl DenseHandle {
     /// See [`SparseHandle::strong_count`].
     pub fn strong_count(&self) -> usize {
         Arc::strong_count(&self.data)
+    }
+
+    /// See [`SparseHandle::uid`].
+    pub fn uid(&self) -> u64 {
+        self.uid
+    }
+
+    /// See [`SparseHandle::pool_key`].
+    pub fn pool_key(&self) -> PoolKey {
+        PoolKey { uid: self.uid, fp: self.pool_fp }
     }
 }
 

@@ -52,7 +52,8 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::runtime::Registry;
+use crate::compiler::DialectKind;
+use crate::runtime::{DevicePool, Registry};
 use crate::sim::{HwProfile, Machine};
 use crate::sparse::coo3::Coo3;
 use crate::sparse::{Csr, SplitMix64};
@@ -168,6 +169,15 @@ pub struct CoordinatorConfig {
     /// Online drift-tracking policy. Disabled by default — enable to let
     /// served latencies refit `CostParams` live.
     pub calib: CalibConfig,
+    /// Byte budget of the device-buffer pool that keeps staged operand
+    /// images resident across submits (resubmitting a registered handle
+    /// skips the padded-buffer rebuild and re-upload). `0` disables
+    /// pooling entirely.
+    pub pool_budget_bytes: usize,
+    /// Codegen dialect this coordinator serves under. Non-CUDA dialects
+    /// surface in the simulator backend labels (`sim:<dialect>:<family>`);
+    /// the CUDA default keeps the legacy `sim:<family>` labels.
+    pub dialect: DialectKind,
 }
 
 impl Default for CoordinatorConfig {
@@ -190,6 +200,8 @@ impl Default for CoordinatorConfig {
             executors: ExecutorRegistry::standard(),
             calibration: None,
             calib: CalibConfig::default(),
+            pool_budget_bytes: 64 << 20,
+            dialect: DialectKind::default(),
         }
     }
 }
@@ -217,6 +229,9 @@ pub struct Coordinator {
     /// even when `calib.enabled` is false, so warm-start fits apply and
     /// `calibrator.current()` can be saved at shutdown either way.
     pub calibrator: Arc<OnlineCalibrator>,
+    /// The device-buffer pool shared by every worker's executors
+    /// (`None` when `pool_budget_bytes` was 0).
+    pub pool: Option<Arc<DevicePool>>,
 }
 
 impl Coordinator {
@@ -258,6 +273,10 @@ impl Coordinator {
             cfg.calibration.clone(),
             cfg.calib,
         ));
+        // One pool for the whole worker pool: operands staged by one
+        // worker hit from every worker (the simulated device is shared).
+        let pool =
+            (cfg.pool_budget_bytes > 0).then(|| Arc::new(DevicePool::new(cfg.pool_budget_bytes)));
 
         let (tune_tx, tuner) = if cfg.background_tune {
             let (tx, rx) = std::sync::mpsc::sync_channel::<TuneTask>(32);
@@ -290,6 +309,8 @@ impl Coordinator {
                     artifacts_dir: cfg.artifacts_dir.clone(),
                     tune_tx: tune_tx.clone(),
                     calibrator: Some(calibrator.clone()),
+                    pool: pool.clone(),
+                    dialect: cfg.dialect,
                 },
                 registry: cfg.executors.clone(),
                 max_batch: cfg.max_batch,
@@ -311,6 +332,7 @@ impl Coordinator {
             metrics,
             plan_cache,
             calibrator,
+            pool,
         })
     }
 

@@ -3,7 +3,7 @@
 //! Subcommands:
 //!   expr      — print each §2.1 algebra, its reduction dims, and the
 //!               legal schedule families (the compile-API smoke test)
-//!   codegen   — lower a scheduled kernel and print the CUDA-like source
+//!   codegen   — lower a scheduled kernel and print its source (CUDA, HIP, or WGSL)
 //!   space     — print the atomic-parallelism legality map (Fig. 7/8)
 //!   stats     — print the evaluation-suite matrix statistics
 //!   spmm      — grid-search one suite matrix on the simulator (alias: tune)
@@ -28,7 +28,8 @@ use std::collections::HashMap;
 use anyhow::{bail, Context, Result};
 
 use sgap::bench_util::Table;
-use sgap::compiler::codegen_cuda::{emit_translation_unit, macro_header};
+use sgap::compiler::codegen_cuda::macro_header;
+use sgap::compiler::DialectKind;
 use sgap::compiler::schedule::{
     DgConfig, FusedConfig, MttkrpConfig, Schedule, SddmmConfig, SpmmConfig, TtmConfig,
 };
@@ -117,7 +118,12 @@ fn cmd_codegen(flags: &HashMap<String, String>) -> Result<()> {
     println!("// CIN: {}", schedule.to_cin());
     println!();
     let kernel = sgap::compiler::compile(&schedule.algebra(), &schedule)?;
-    print!("{}", emit_translation_unit(&kernel));
+    // --dialect picks the backend spelling; the same LLIR walk emits all
+    // three, so every family/flag combination above works per dialect
+    let dialect_name = flags.get("dialect").map(String::as_str).unwrap_or("cuda");
+    let dialect = DialectKind::parse(dialect_name)
+        .with_context(|| format!("unknown dialect `{dialect_name}` (cuda|hip|wgsl)"))?;
+    print!("{}", dialect.emit_translation_unit(&kernel));
     Ok(())
 }
 
@@ -539,6 +545,8 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
             enabled: flags.contains_key("calibrate"),
             ..sgap::coordinator::CalibConfig::default()
         },
+        // --pool-mb sizes the device-buffer pool (0 disables pooling)
+        pool_budget_bytes: (flag_u32(flags, "pool-mb", 64)? as usize) << 20,
         ..CoordinatorConfig::default()
     };
     println!(
@@ -605,6 +613,19 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         "plan-cache entries {} (upgrades {}, evictions {}, invalidations {})",
         cs.entries, cs.upgrades, cs.evictions, cs.invalidations
     );
+    if let Some(pool) = &coord.pool {
+        let ps = pool.stats();
+        println!(
+            "device pool: {} hits / {} misses, {} uploads skipped, {} evictions, \
+             {} KiB resident (budget {} KiB)",
+            ps.hits,
+            ps.misses,
+            s.uploads_skipped,
+            ps.evictions,
+            ps.bytes_resident / 1024,
+            pool.budget_bytes() / 1024
+        );
+    }
     if coord.calibrator.config().enabled {
         println!(
             "calibration: {} samples, {} refits, worst EWMA residual {:.4} (generation {})",
@@ -661,8 +682,9 @@ fn main() -> Result<()> {
             println!("usage: sgap <command> [--flag value ...]");
             println!("  expr     (print the §2.1 quartet + the fused SDDMM→SpMM pair: algebra,");
             println!("            reduction dims, legal families, and the typed illegal-fusion error)");
-            println!("  codegen  --family nnz-group|row-group|nnz-serial|row-serial|sddmm|dgsparse|mttkrp|ttm|fused --n 4 --c 4 --g 32 --r 32");
-            println!("           (sddmm/mttkrp/ttm: --n is the dense width; fused: --j is the dot length; dgsparse: --g=workerSz --r=groupSz --c=coarsenSz)");
+            println!("  codegen  --family nnz-group|row-group|nnz-serial|row-serial|sddmm|dgsparse|mttkrp|ttm|fused --n 4 --c 4 --g 32 --r 32 [--dialect cuda|hip|wgsl]");
+            println!("           (sddmm/mttkrp/ttm: --n is the dense width; fused: --j is the dot length; dgsparse: --g=workerSz --r=groupSz --c=coarsenSz;");
+            println!("            --dialect respells the same LLIR walk for CUDA, HIP, or WGSL)");
             println!("  space    (print the Fig. 7/8 legality map)");
             println!("  stats    (print the evaluation-suite statistics)");
             println!("  spmm     --dataset er_1024_d5e-3 --n 4 --hw 3090|2080|v100 (alias: tune)");
@@ -678,11 +700,12 @@ fn main() -> Result<()> {
             println!("           (measure -> fit CostParams -> CALIBRATION.json; the offline");
             println!("            half of the calibration loop, see DESIGN.md §calibration)");
             println!("  serve    --requests 32 --workers 2 [--queue-cap 256] [--tune] [--cpu-only]");
-            println!("           [--calib FILE] [--calibrate] [--plans FILE]");
+            println!("           [--calib FILE] [--calibrate] [--plans FILE] [--pool-mb 64]");
             println!("           (--calib warm-starts from an `sgap profile` artifact; --calibrate");
             println!("            turns on online drift-triggered refits; --plans warm-starts the");
             println!("            plan cache from PLANS.json and saves it back on shutdown;");
-            println!("            --queue-cap bounds the admission queue; SGAP_ARTIFACTS overrides artifacts dir)");
+            println!("            --queue-cap bounds the admission queue; --pool-mb budgets the");
+            println!("            device-buffer pool (0 disables); SGAP_ARTIFACTS overrides artifacts dir)");
             println!("  macros   (print the §5.3 macro-instruction header)");
             Ok(())
         }

@@ -16,6 +16,7 @@
 
 pub mod artifact;
 pub mod json;
+pub mod pool;
 
 #[cfg(feature = "pjrt")]
 mod pjrt;
@@ -28,6 +29,7 @@ mod stub;
 pub use stub::Runtime;
 
 pub use artifact::{ArtifactKind, ArtifactSpec, PaddedCoo, PaddedEll, Registry};
+pub use pool::{DeviceImage, DevicePool, PoolKey, PoolRef, PoolStats};
 
 /// Artifacts directory: `$SGAP_ARTIFACTS` or `./artifacts`.
 pub fn default_artifacts_dir() -> std::path::PathBuf {

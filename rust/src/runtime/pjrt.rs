@@ -8,7 +8,7 @@ use anyhow::Result;
 
 use crate::sparse::Csr;
 
-use super::artifact::{pad_coo, pad_dense, pad_ell, ArtifactKind, Registry};
+use super::artifact::{pad_coo, pad_dense, pad_ell, ArtifactKind, PaddedCoo, Registry};
 
 /// The PJRT-backed executor.
 pub struct Runtime {
@@ -71,20 +71,37 @@ impl Runtime {
     pub fn run_spmm_nnz(&mut self, name: &str, a: &Csr, b: &[f32]) -> Result<Vec<f32>> {
         let spec = self.registry.get(name)?.clone();
         anyhow::ensure!(spec.kind == ArtifactKind::SpmmNnzSr, "{name} is not spmm_nnz_sr");
-        let n = spec.n;
-        anyhow::ensure!(b.len() == a.cols * n, "B must be cols x n");
+        anyhow::ensure!(b.len() == a.cols * spec.n, "B must be cols x n");
         let coo = pad_coo(a, &spec)?;
-        let bp = pad_dense(b, a.cols, n, spec.cols);
+        let bp = pad_dense(b, a.cols, spec.n, spec.cols);
+        self.run_spmm_nnz_staged(name, &coo, &bp, a.rows)
+    }
+
+    /// Run the segment-reduction SpMM artifact from pre-staged padded
+    /// buffers — the device-pool hot path: on a pool hit no
+    /// `pad_coo`/`pad_dense` rebuild (or upload) happens at all.
+    pub fn run_spmm_nnz_staged(
+        &mut self,
+        name: &str,
+        coo: &PaddedCoo,
+        bp: &[f32],
+        out_rows: usize,
+    ) -> Result<Vec<f32>> {
+        let spec = self.registry.get(name)?.clone();
+        anyhow::ensure!(spec.kind == ArtifactKind::SpmmNnzSr, "{name} is not spmm_nnz_sr");
+        let n = spec.n;
+        anyhow::ensure!(coo.vals.len() == spec.nnz, "staged COO must match the bucket");
+        anyhow::ensure!(bp.len() == spec.cols * n, "staged B must be padded cols x n");
         let inputs = [
             xla::Literal::vec1(&coo.row_idx),
             xla::Literal::vec1(&coo.col_idx),
             xla::Literal::vec1(&coo.vals),
-            xla::Literal::vec1(&bp)
+            xla::Literal::vec1(bp)
                 .reshape(&[spec.cols as i64, n as i64])
                 .map_err(|e| anyhow::anyhow!("reshape B: {e:?}"))?,
         ];
         let mut out = self.execute(name, &inputs)?;
-        out.truncate(a.rows * n);
+        out.truncate(out_rows * n);
         Ok(out)
     }
 

@@ -1,0 +1,428 @@
+//! Device-buffer pool: exclusive size-class pages keyed by operand
+//! fingerprint, so resubmitting a registered handle reuses its staged
+//! device image instead of rebuilding padded buffers and re-uploading.
+//!
+//! This build has no physical accelerator — the "device image"
+//! ([`DeviceImage`]) is the marshalled buffer set an executor would copy
+//! to one: padded COO/ELL for PJRT artifacts, raw CSR/COO-3/dense views
+//! for the simulator. What the pool makes real is the *policy* layer a
+//! device allocator needs either way:
+//!
+//! * **Exclusive pages** — one image per page (never sub-allocated), in
+//!   power-of-two size classes so a reuse never depends on exact byte
+//!   matches.
+//! * **Fingerprint keying** — a [`PoolKey`] pairs the handle's
+//!   never-reused registration uid with a sampled content fingerprint,
+//!   so a stale image cannot be resurrected by id recycling.
+//! * **LRU reclamation under a byte budget** — free (unreferenced)
+//!   pages are evicted oldest-first whenever residency exceeds the
+//!   budget; pages with live [`PoolRef`]s are never evicted.
+//! * **Explicit invalidation** — [`DevicePool::invalidate`] unmaps every
+//!   page of a uid, forcing the next acquire to rebuild and re-upload.
+//!
+//! Executors hold a [`PoolRef`] for the duration of a run (the buffer is
+//! "on device"); dropping it returns the page to the free pool and
+//! re-runs budget reclamation.
+
+use std::collections::HashMap;
+use std::ops::Deref;
+use std::sync::{Arc, Mutex};
+
+use crate::sparse::{Coo3, Csr};
+
+use super::artifact::{PaddedCoo, PaddedEll};
+
+/// Smallest page size class (bytes) — tiny operands round up to this.
+const MIN_CLASS_BYTES: usize = 256;
+
+/// Identity of one staged operand image: the owning handle's registration
+/// uid (never reused across the process lifetime) plus a sampled content
+/// fingerprint. Artifact-specific stagings of the same handle (e.g. the
+/// padded COO for one PJRT bucket) salt the fingerprint so they get their
+/// own page.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PoolKey {
+    pub uid: u64,
+    pub fp: u64,
+}
+
+impl PoolKey {
+    /// Derive a variant key for an alternate staging of the same operand
+    /// (same uid, fingerprint mixed with `salt`) — used to keep a PJRT
+    /// bucket's padded image distinct from the raw simulator image.
+    pub fn salted(self, salt: u64) -> PoolKey {
+        PoolKey { uid: self.uid, fp: fnv_mix(self.fp, salt) }
+    }
+}
+
+/// One FNV-1a round — the pool's (and the handles') cheap mixer.
+pub fn fnv_mix(h: u64, x: u64) -> u64 {
+    (h ^ x).wrapping_mul(0x100_0000_01b3)
+}
+
+/// A staged, device-resident operand image — the bytes an executor would
+/// have uploaded. Building one is the "upload"; a pool hit skips it.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DeviceImage {
+    /// Raw CSR buffers (simulator staging of a matrix handle).
+    Csr { indptr: Vec<u32>, indices: Vec<u32>, vals: Vec<f32> },
+    /// Raw order-3 COO (simulator staging of a tensor handle).
+    Tensor(Coo3),
+    /// A dense operand (row-major values, possibly padded).
+    Dense(Vec<f32>),
+    /// Padded COO for a PJRT nnz-bucket artifact.
+    Coo(PaddedCoo),
+    /// Padded ELL for a PJRT row-bucket artifact.
+    Ell(PaddedEll),
+}
+
+impl DeviceImage {
+    /// Stage a CSR matrix (clones the three arrays — the simulated H2D
+    /// copy a pool hit avoids).
+    pub fn of_matrix(a: &Csr) -> DeviceImage {
+        DeviceImage::Csr {
+            indptr: a.indptr.clone(),
+            indices: a.indices.clone(),
+            vals: a.data.clone(),
+        }
+    }
+
+    pub fn of_tensor(t: &Coo3) -> DeviceImage {
+        DeviceImage::Tensor(t.clone())
+    }
+
+    /// Payload size in bytes (what the page's size class is derived from).
+    pub fn size_bytes(&self) -> usize {
+        match self {
+            DeviceImage::Csr { indptr, indices, vals } => {
+                4 * (indptr.len() + indices.len() + vals.len())
+            }
+            DeviceImage::Tensor(t) => 16 * t.nnz(),
+            DeviceImage::Dense(v) => 4 * v.len(),
+            DeviceImage::Coo(c) => 4 * (c.row_idx.len() + c.col_idx.len() + c.vals.len()),
+            DeviceImage::Ell(e) => 4 * (e.cols.len() + e.vals.len()),
+        }
+    }
+}
+
+/// Point-in-time pool counters (monotonic) and gauges.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PoolStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub invalidations: u64,
+    /// Bytes (size-class rounded) in pages with live [`PoolRef`]s.
+    pub bytes_live: usize,
+    /// Bytes (size-class rounded) in all resident pages, live or free.
+    pub bytes_resident: usize,
+    pub pages: usize,
+}
+
+#[derive(Debug)]
+struct Page {
+    class_bytes: usize,
+    key: PoolKey,
+    image: Arc<DeviceImage>,
+    refs: usize,
+    last_used: u64,
+    /// Invalidated while referenced: freed (not recycled) on release.
+    dead: bool,
+}
+
+#[derive(Debug)]
+struct PoolInner {
+    budget: usize,
+    pages: HashMap<u64, Page>,
+    by_key: HashMap<PoolKey, u64>,
+    next_page: u64,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    invalidations: u64,
+}
+
+impl PoolInner {
+    fn resident_bytes(&self) -> usize {
+        self.pages.values().map(|p| p.class_bytes).sum()
+    }
+
+    /// Evict free pages oldest-first until residency fits the budget.
+    /// Live pages are skipped — residency can exceed the budget only
+    /// while over-budget images are actually in use.
+    fn evict_over_budget(&mut self) {
+        while self.resident_bytes() > self.budget {
+            let victim = self
+                .pages
+                .iter()
+                .filter(|(_, p)| p.refs == 0)
+                .min_by_key(|(_, p)| p.last_used)
+                .map(|(&id, _)| id);
+            let Some(id) = victim else { break };
+            let key = self.pages.remove(&id).unwrap().key;
+            self.by_key.remove(&key);
+            self.evictions += 1;
+        }
+    }
+
+    fn release(&mut self, id: u64) {
+        self.tick += 1;
+        let tick = self.tick;
+        let drop_page = match self.pages.get_mut(&id) {
+            Some(p) => {
+                p.refs -= 1;
+                p.last_used = tick;
+                p.refs == 0 && p.dead
+            }
+            None => false,
+        };
+        if drop_page {
+            self.pages.remove(&id);
+        }
+        self.evict_over_budget();
+    }
+}
+
+/// The shared device-buffer pool. Cheap to clone (`Arc`-backed); all
+/// methods are thread-safe.
+#[derive(Debug, Clone)]
+pub struct DevicePool {
+    inner: Arc<Mutex<PoolInner>>,
+}
+
+impl DevicePool {
+    /// A pool reclaiming free pages above `budget_bytes` of residency.
+    pub fn new(budget_bytes: usize) -> DevicePool {
+        DevicePool {
+            inner: Arc::new(Mutex::new(PoolInner {
+                budget: budget_bytes,
+                pages: HashMap::new(),
+                by_key: HashMap::new(),
+                next_page: 0,
+                tick: 0,
+                hits: 0,
+                misses: 0,
+                evictions: 0,
+                invalidations: 0,
+            })),
+        }
+    }
+
+    /// Acquire the image for `key`: a hit pins the resident page (the
+    /// upload is skipped); a miss runs `build` (the upload), preferring
+    /// to recycle the least-recently-used *free* page of the same size
+    /// class over growing the pool.
+    pub fn acquire(&self, key: PoolKey, build: impl FnOnce() -> DeviceImage) -> PoolRef {
+        self.try_acquire(key, || Ok(build())).expect("infallible build")
+    }
+
+    /// [`DevicePool::acquire`] with a fallible builder (padding can
+    /// reject an operand); nothing is cached when `build` errors.
+    pub fn try_acquire(
+        &self,
+        key: PoolKey,
+        build: impl FnOnce() -> anyhow::Result<DeviceImage>,
+    ) -> anyhow::Result<PoolRef> {
+        let mut g = self.inner.lock().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        if let Some(&id) = g.by_key.get(&key) {
+            g.hits += 1;
+            let p = g.pages.get_mut(&id).unwrap();
+            p.refs += 1;
+            p.last_used = tick;
+            let image = p.image.clone();
+            return Ok(PoolRef { pool: self.inner.clone(), page: id, image, hit: true });
+        }
+        g.misses += 1;
+        // The miss path builds under the lock: the executors staging here
+        // are per-worker and the build is the cost being measured — a
+        // concurrent same-key acquire *should* wait and then hit.
+        let image = Arc::new(build()?);
+        let class = class_bytes(image.size_bytes());
+        let recycle = g
+            .pages
+            .iter()
+            .filter(|(_, p)| p.refs == 0 && p.class_bytes == class)
+            .min_by_key(|(_, p)| p.last_used)
+            .map(|(&id, _)| id);
+        let id = match recycle {
+            Some(id) => {
+                let old_key = {
+                    let p = g.pages.get_mut(&id).unwrap();
+                    let old = p.key;
+                    p.key = key;
+                    p.image = image.clone();
+                    p.refs = 1;
+                    p.last_used = tick;
+                    old
+                };
+                g.by_key.remove(&old_key);
+                id
+            }
+            None => {
+                let id = g.next_page;
+                g.next_page += 1;
+                let page = Page {
+                    class_bytes: class,
+                    key,
+                    image: image.clone(),
+                    refs: 1,
+                    last_used: tick,
+                    dead: false,
+                };
+                g.pages.insert(id, page);
+                id
+            }
+        };
+        g.by_key.insert(key, id);
+        g.evict_over_budget();
+        Ok(PoolRef { pool: self.inner.clone(), page: id, image, hit: false })
+    }
+
+    /// Unmap every page staged for registration `uid` (all salted
+    /// variants), forcing the next acquire to rebuild and re-upload.
+    /// Pages still referenced stay resident until released, then free
+    /// their bytes instead of returning to the pool. Returns the number
+    /// of pages invalidated.
+    pub fn invalidate(&self, uid: u64) -> usize {
+        let mut g = self.inner.lock().unwrap();
+        let ids: Vec<u64> = g
+            .pages
+            .iter()
+            .filter(|(_, p)| p.key.uid == uid && !p.dead)
+            .map(|(&id, _)| id)
+            .collect();
+        for &id in &ids {
+            let key = {
+                let p = g.pages.get_mut(&id).unwrap();
+                p.dead = true;
+                p.key
+            };
+            g.by_key.remove(&key);
+            g.invalidations += 1;
+        }
+        let freed: Vec<u64> = ids.iter().copied().filter(|id| g.pages[id].refs == 0).collect();
+        for id in freed {
+            g.pages.remove(&id);
+        }
+        ids.len()
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        let g = self.inner.lock().unwrap();
+        let bytes_live = g.pages.values().filter(|p| p.refs > 0).map(|p| p.class_bytes).sum();
+        PoolStats {
+            hits: g.hits,
+            misses: g.misses,
+            evictions: g.evictions,
+            invalidations: g.invalidations,
+            bytes_live,
+            bytes_resident: g.resident_bytes(),
+            pages: g.pages.len(),
+        }
+    }
+
+    /// The configured byte budget.
+    pub fn budget_bytes(&self) -> usize {
+        self.inner.lock().unwrap().budget
+    }
+}
+
+/// Size class: next power of two, floored at [`MIN_CLASS_BYTES`].
+fn class_bytes(size: usize) -> usize {
+    size.max(MIN_CLASS_BYTES).next_power_of_two()
+}
+
+/// A pinned staged image: derefs to the [`DeviceImage`]; dropping it
+/// releases the page back to the free pool (and re-runs reclamation).
+#[derive(Debug)]
+pub struct PoolRef {
+    pool: Arc<Mutex<PoolInner>>,
+    page: u64,
+    image: Arc<DeviceImage>,
+    hit: bool,
+}
+
+impl PoolRef {
+    /// Whether this acquire found the image resident (upload skipped).
+    pub fn hit(&self) -> bool {
+        self.hit
+    }
+
+    pub fn image(&self) -> &DeviceImage {
+        &self.image
+    }
+}
+
+impl Deref for PoolRef {
+    type Target = DeviceImage;
+
+    fn deref(&self) -> &DeviceImage {
+        &self.image
+    }
+}
+
+impl Drop for PoolRef {
+    fn drop(&mut self) {
+        if let Ok(mut g) = self.pool.lock() {
+            g.release(self.page);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(uid: u64) -> PoolKey {
+        PoolKey { uid, fp: uid.wrapping_mul(0x9e37_79b9_7f4a_7c15) }
+    }
+
+    fn dense(words: usize) -> DeviceImage {
+        DeviceImage::Dense(vec![1.0; words])
+    }
+
+    #[test]
+    fn hit_pins_and_skips_upload() {
+        let pool = DevicePool::new(1 << 20);
+        let mut built = 0;
+        let a = pool.acquire(key(1), || {
+            built += 1;
+            dense(100)
+        });
+        assert!(!a.hit());
+        drop(a);
+        let b = pool.acquire(key(1), || {
+            built += 1;
+            dense(100)
+        });
+        assert!(b.hit());
+        assert_eq!(built, 1, "the hit must not rebuild the image");
+        let s = pool.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert_eq!(s.bytes_live, 512); // 400 B rounds to the 512 class
+    }
+
+    #[test]
+    fn size_classes_round_up() {
+        assert_eq!(class_bytes(0), MIN_CLASS_BYTES);
+        assert_eq!(class_bytes(256), 256);
+        assert_eq!(class_bytes(257), 512);
+        assert_eq!(class_bytes(4096), 4096);
+    }
+
+    #[test]
+    fn concurrent_refs_share_one_page() {
+        let pool = DevicePool::new(1 << 20);
+        let a = pool.acquire(key(7), || dense(10));
+        let b = pool.acquire(key(7), || unreachable!("must hit"));
+        assert!(b.hit());
+        assert_eq!(pool.stats().pages, 1);
+        drop(a);
+        assert_eq!(pool.stats().bytes_live, 256, "second ref still pins the page");
+        drop(b);
+        assert_eq!(pool.stats().bytes_live, 0);
+    }
+}

@@ -12,7 +12,7 @@ use anyhow::{bail, Result};
 
 use crate::sparse::Csr;
 
-use super::artifact::Registry;
+use super::artifact::{PaddedCoo, Registry};
 
 const UNAVAILABLE: &str =
     "PJRT runtime unavailable: this build has the `pjrt` feature disabled \
@@ -47,6 +47,16 @@ impl Runtime {
     }
 
     pub fn run_spmm_nnz(&mut self, _name: &str, _a: &Csr, _b: &[f32]) -> Result<Vec<f32>> {
+        bail!(UNAVAILABLE)
+    }
+
+    pub fn run_spmm_nnz_staged(
+        &mut self,
+        _name: &str,
+        _coo: &PaddedCoo,
+        _bp: &[f32],
+        _out_rows: usize,
+    ) -> Result<Vec<f32>> {
         bail!(UNAVAILABLE)
     }
 

@@ -2,7 +2,8 @@
 //! schedules is pinned against committed golden text, covering
 //! `segReduceGroup<float,r>` (SegmentReduction) and `atomicAddGroup
 //! <float,r>` (ParallelReduction) emission plus the zero-extension
-//! predicate; the §5.3 macro-instruction header is pinned too.
+//! predicate; the §5.3 macro-instruction header is pinned too, and the
+//! HIP/WGSL translation units the same LLIR walk emits.
 //!
 //! Regenerate after an intentional codegen change with
 //! `SGAP_BLESS=1 cargo test --test codegen_golden`.
@@ -11,7 +12,7 @@ use sgap::compiler::codegen_cuda::{emit_kernel, macro_header};
 use sgap::compiler::schedule::{
     DgConfig, FusedConfig, MttkrpConfig, Schedule, SddmmConfig, SpmmConfig, TtmConfig,
 };
-use sgap::compiler::{compile, flatten_fused, FusedAlgebra, TensorAlgebra};
+use sgap::compiler::{compile, flatten_fused, DialectKind, FusedAlgebra, TensorAlgebra};
 
 fn check_golden(name: &str, got: &str) {
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden").join(name);
@@ -156,6 +157,33 @@ fn fused_sddmm_spmm_golden() {
     );
     assert!(!src.contains("atomicAdd(&"), "segment reduction must not use plain atomics");
     check_golden("fused_sddmm_spmm_c4_r16.cu", &src);
+}
+
+/// The same LLIR walk behind every `.cu` golden also emits HIP and WGSL:
+/// both representative kernels (the Listing 6 nnz-group SpMM and the
+/// fused SDDMM→SpMM) are pinned per dialect. HIP shares the CUDA kernel
+/// body byte-for-byte (only the prologue differs: maskless shuffles, no
+/// `__activemask()`); WGSL respells declarations, builtins, and the
+/// group macros as monomorphized subgroup helpers.
+#[test]
+fn dialect_translation_unit_goldens() {
+    let nnz = sgap::compiler::lower(&Schedule::sgap_nnz_group(SpmmConfig::default(), 32)).unwrap();
+    let sched = Schedule::fused_sddmm_spmm(FusedConfig::new(32, 4, 4, 16));
+    let fused = compile(&flatten_fused(&FusedAlgebra::sddmm_spmm()).unwrap(), &sched).unwrap();
+    for (stem, kernel) in [("spmm_nnz_group_c4_r32", &nnz), ("fused_sddmm_spmm_c4_r16", &fused)] {
+        let cuda_kernel = sgap::compiler::codegen_cuda::emit_kernel(kernel);
+        for dialect in [DialectKind::Hip, DialectKind::Wgsl] {
+            let tu = dialect.emit_translation_unit(kernel);
+            if dialect == DialectKind::Hip {
+                assert!(tu.ends_with(&cuda_kernel), "HIP body must be the CUDA bytes:\n{tu}");
+                assert!(!tu.contains("__shfl_up_sync"), "HIP must not use masked shuffles");
+            } else {
+                assert!(tu.starts_with("enable subgroups;"), "{tu}");
+                assert!(!tu.contains("__restrict__"), "CUDA qualifier leaked into WGSL:\n{tu}");
+            }
+            check_golden(&format!("{stem}.{}", dialect.file_ext()), &tu);
+        }
+    }
 }
 
 /// dgSPARSE's RB+PR point `<8, 256, 8, 1/2>` (a paper best-static shape)

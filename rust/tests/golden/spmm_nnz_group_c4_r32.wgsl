@@ -1,0 +1,85 @@
+enable subgroups;
+requires unrestricted_pointer_parameters;
+
+// --- sgap macro instructions (§5.3), WGSL spelling ----------------------
+// atomicAddF32: WGSL has no float atomics — emulate atomicAdd on an
+// f32 cell stored as atomic<u32> with a bitcast compare-exchange loop.
+fn atomicAddF32(a: ptr<storage, array<atomic<u32>>, read_write>, idx: i32, value: f32) {
+  var bits: u32 = atomicLoad(&(*a)[idx]);
+  loop {
+    let updated: u32 = bitcast<u32>(bitcast<f32>(bits) + value);
+    let r = atomicCompareExchangeWeak(&(*a)[idx], bits, updated);
+    if (r.exchanged) { break; }
+    bits = r.old_value;
+  }
+}
+
+// segReduceGroup_32: segmented inclusive scan over each aligned 32-lane
+// group keyed by `idx`; segment-end lanes write back. Lane guards window
+// the un-widthed subgroup shuffles (requires subgroup_size % 32 == 0).
+fn segReduceGroup_32(a: ptr<storage, array<atomic<u32>>, read_write>, idx: i32, value: f32, tid: i32) {
+  let lane: i32 = tid % 32;
+  var v: f32 = value;
+  for (var offset: i32 = 1; offset < 32; offset *= 2) {
+    let up: f32 = subgroupShuffleUp(v, u32(offset));
+    let upIdx: i32 = subgroupShuffleUp(idx, u32(offset));
+    if (lane >= offset && upIdx == idx) { v += up; }
+  }
+  let dnIdx: i32 = subgroupShuffleDown(idx, 1u);
+  if (lane == 32 - 1 || dnIdx != idx) { atomicAddF32(a, idx, v); }
+}
+
+// taco_binarySearchBefore: largest i in [lo, hi] with a[i] <= target
+// (TACO's device helper, Listing 1's row search).
+fn taco_binarySearchBefore(a: ptr<storage, array<i32>, read>, lo: i32, hi: i32, target: i32) -> i32 {
+  if ((*a)[hi] <= target) { return hi; }
+  var lowerBound: i32 = lo;
+  var upperBound: i32 = hi;
+  while (upperBound - lowerBound > 1) {
+    let mid: i32 = (upperBound + lowerBound) / 2;
+    let midValue: i32 = (*a)[mid];
+    if (midValue < target) { lowerBound = mid; }
+    else if (midValue > target) { upperBound = mid; }
+    else { return mid; }
+  }
+  return lowerBound;
+}
+// ------------------------------------------------------------------------
+
+@group(0) @binding(0) var<storage, read> i_blockStarts: array<i32>;
+@group(0) @binding(1) var<storage, read> A2_pos: array<i32>;
+@group(0) @binding(2) var<storage, read> A2_crd: array<i32>;
+@group(0) @binding(3) var<storage, read> A_vals: array<f32>;
+@group(0) @binding(4) var<storage, read> B_vals: array<f32>;
+@group(0) @binding(5) var<storage, read_write> C_vals: array<atomic<u32>>;
+override A1_dimension: i32;
+override B2_dimension: i32;
+
+@compute @workgroup_size(256)
+fn spmm_nnz_group_c4_r32(@builtin(workgroup_id) wgid: vec3<u32>, @builtin(local_invocation_id) lid: vec3<u32>) {
+  // {<1 nnz, 4 col>, 32} — grouped segment reduction
+  var fpos1: i32 = (i32(lid.x) % 256);
+  var ko: i32 = (i32(lid.x) / 256);
+  var fposA: i32 = ((i32(wgid.x) * 256) + fpos1);
+  var pA2_begin: i32 = i_blockStarts[i32(wgid.x)];
+  var pA2_end: i32 = i_blockStarts[(i32(wgid.x) + 1)];
+  var i_pos: i32 = taco_binarySearchBefore(&A2_pos, pA2_begin, pA2_end, fposA);
+  var i: i32 = i_pos;
+  for (var ki: i32 = 0; ki < 4; ki += 1) {
+    var k: i32 = ((ko * 4) + ki);
+    var val: f32 = 0.0;
+    if ((fposA >= A2_pos[A1_dimension])) {
+      val = 0.0;
+    } else {
+      var f: i32 = A2_crd[fposA];
+      var kB: i32 = ((f * B2_dimension) + k);
+      while ((fposA == A2_pos[(i_pos + 1)])) {
+        i_pos = (i_pos + 1);
+        i = i_pos;
+      }
+      val = (A_vals[fposA] * B_vals[kB]);
+    }
+    var kC: i32 = ((i * B2_dimension) + k);
+    segReduceGroup_32(&C_vals, kC, val, i32(lid.x));
+  }
+}

@@ -1,0 +1,166 @@
+//! Property tests for the device-buffer pool (DESIGN.md §memory-pool):
+//! page recycling, LRU eviction under a byte budget, fingerprint
+//! invalidation, leak accounting — and the coordinator-level guarantee
+//! the pool exists for: resubmitting a registered handle skips the
+//! upload (`uploads_skipped` grows, `pool_misses` does not).
+
+use sgap::coordinator::{CoordinatorConfig, Op, Session};
+use sgap::runtime::{DeviceImage, DevicePool, PoolKey};
+use sgap::sparse::{erdos_renyi, SplitMix64};
+
+fn key(uid: u64) -> PoolKey {
+    PoolKey { uid, fp: uid.wrapping_mul(0x9e37_79b9_7f4a_7c15) }
+}
+
+/// A dense image of `words` f32 values (`4 * words` payload bytes).
+fn dense(words: usize) -> DeviceImage {
+    DeviceImage::Dense(vec![0.5; words])
+}
+
+/// alloc → release → alloc of a *different* key in the same size class
+/// recycles the freed page instead of growing the pool, and the
+/// displaced key is unmapped — re-acquiring it rebuilds rather than
+/// aliasing the recycled page.
+#[test]
+fn realloc_recycles_the_freed_page() {
+    let pool = DevicePool::new(1 << 20);
+    drop(pool.acquire(key(1), || dense(100))); // 400 B -> 512 class
+    let s0 = pool.stats();
+    assert_eq!((s0.pages, s0.bytes_resident), (1, 512));
+
+    let b = pool.acquire(key(2), || dense(120)); // 480 B -> same 512 class
+    assert!(!b.hit());
+    let s1 = pool.stats();
+    assert_eq!(s1.pages, 1, "same-class realloc must reuse the free page");
+    assert_eq!(s1.bytes_resident, 512, "no growth");
+    assert_eq!(s1.evictions, 0, "recycling is not an eviction");
+    drop(b);
+
+    let a = pool.acquire(key(1), || dense(100));
+    assert!(!a.hit(), "the displaced key must rebuild, never alias the recycled page");
+    assert!(matches!(a.image(), DeviceImage::Dense(v) if v.len() == 100));
+}
+
+/// Budget overflow evicts *free* pages oldest-first, and only until the
+/// budget fits again. The three images land in pairwise-distinct size
+/// classes so same-class recycling cannot mask the eviction path.
+#[test]
+fn budget_overflow_evicts_lru_first() {
+    let pool = DevicePool::new(3072);
+    drop(pool.acquire(key(1), || dense(100))); // 512 class, oldest free
+    drop(pool.acquire(key(2), || dense(200))); // 1024 class
+    assert_eq!(pool.stats().bytes_resident, 1536);
+
+    let c = pool.acquire(key(3), || dense(300)); // 2048 class -> 3584 resident
+    let s = pool.stats();
+    assert_eq!(s.evictions, 1, "evict only until the budget fits");
+    assert_eq!(s.bytes_resident, 3072);
+    drop(c);
+
+    assert!(pool.acquire(key(2), || dense(200)).hit(), "the younger free page survived");
+    assert!(!pool.acquire(key(1), || dense(100)).hit(), "the oldest free page was the victim");
+}
+
+/// Invalidation unmaps every page of the uid: the next acquire rebuilds
+/// and re-uploads. A page invalidated while pinned stays resident until
+/// its ref drops, then frees its bytes instead of going back on the
+/// free list.
+#[test]
+fn invalidation_forces_reupload() {
+    let pool = DevicePool::new(1 << 20);
+    drop(pool.acquire(key(9), || dense(64)));
+    assert_eq!(pool.invalidate(9), 1);
+    let s = pool.stats();
+    assert_eq!((s.pages, s.invalidations), (0, 1), "a free invalidated page leaves at once");
+
+    let mut rebuilt = false;
+    let pinned = pool.acquire(key(9), || {
+        rebuilt = true;
+        dense(64)
+    });
+    assert!(rebuilt && !pinned.hit(), "the unmapped key must re-upload");
+
+    // invalidate while referenced: unmapped now, bytes freed on release
+    assert_eq!(pool.invalidate(9), 1);
+    assert_eq!(pool.stats().pages, 1, "the pinned page stays resident until released");
+    let fresh = pool.acquire(key(9), || dense(64));
+    assert!(!fresh.hit(), "a dead page can never satisfy a hit");
+    assert_eq!(pool.stats().pages, 2);
+    drop(pinned);
+    assert_eq!(pool.stats().pages, 1, "the dead page frees on release instead of going free");
+    drop(fresh);
+    assert_eq!(pool.stats().bytes_live, 0);
+}
+
+/// Live-byte accounting balances: salted variants of one handle get
+/// their own pages, and once every ref drops, `bytes_live` returns to
+/// exactly zero while the images stay resident for the next submit.
+#[test]
+fn accounting_balances_to_zero_live_bytes() {
+    let pool = DevicePool::new(1 << 20);
+    let base = key(5);
+    let keys = [base, base.salted(0xb0c), key(6)];
+    let refs: Vec<_> = keys.into_iter().map(|k| pool.acquire(k, || dense(32))).collect();
+    assert!(refs.iter().all(|r| !r.hit()), "three distinct keys, three uploads");
+    let s = pool.stats();
+    assert_eq!((s.pages, s.bytes_live), (3, 3 * 256));
+    assert_eq!(s.bytes_live, s.bytes_resident, "every page is pinned");
+    drop(refs);
+    let s = pool.stats();
+    assert_eq!(s.bytes_live, 0, "no leaked refs");
+    assert_eq!((s.pages, s.bytes_resident), (3, 3 * 256), "images stay warm for the next submit");
+}
+
+/// End to end through the coordinator: the second submit of the same op
+/// pins both operand images the first one staged — `uploads_skipped`
+/// grows while `pool_misses` stays put.
+#[test]
+fn resubmit_skips_the_upload_through_the_coordinator() {
+    let session = Session::start(CoordinatorConfig {
+        workers: 1,
+        background_tune: false,
+        ..CoordinatorConfig::default()
+    })
+    .unwrap();
+    let a = session.register_matrix(erdos_renyi(48, 40, 320, 7).to_csr());
+    let mut rng = SplitMix64::new(3);
+    let b = session.register_dense((0..40 * 4).map(|_| rng.value()).collect());
+    let op = Op::spmm(&a, &b, 4);
+
+    session.submit(op.clone()).wait().unwrap();
+    let cold = session.coordinator().metrics.snapshot();
+    assert_eq!(cold.pool_misses, 2, "first submit uploads the matrix and the dense operand");
+    assert_eq!(cold.uploads_skipped, 0, "a cold pool has nothing staged");
+
+    session.submit(op).wait().unwrap();
+    let warm = session.coordinator().metrics.snapshot();
+    assert_eq!(warm.pool_misses, cold.pool_misses, "steady state re-uploads nothing");
+    assert_eq!(warm.uploads_skipped, 2, "both operand images were already on device");
+
+    let pool = session.coordinator().pool.as_ref().expect("default config enables the pool");
+    let ps = pool.stats();
+    assert_eq!((ps.hits, ps.misses), (2, 2));
+    assert!(ps.bytes_resident <= pool.budget_bytes(), "residency bounded by the budget");
+    assert_eq!(ps.bytes_live, 0, "no refs outlive a run");
+    session.shutdown();
+}
+
+/// `pool_budget_bytes: 0` disables pooling entirely: the coordinator
+/// builds no pool and the counters stay at zero.
+#[test]
+fn zero_budget_disables_the_pool() {
+    let session = Session::start(CoordinatorConfig {
+        workers: 1,
+        background_tune: false,
+        pool_budget_bytes: 0,
+        ..CoordinatorConfig::default()
+    })
+    .unwrap();
+    assert!(session.coordinator().pool.is_none());
+    let a = session.register_matrix(erdos_renyi(32, 32, 200, 9).to_csr());
+    let b = session.register_dense(vec![0.25; 32 * 4]);
+    session.submit(Op::spmm(&a, &b, 4)).wait().unwrap();
+    let snap = session.coordinator().metrics.snapshot();
+    assert_eq!((snap.pool_hits, snap.pool_misses, snap.uploads_skipped), (0, 0, 0));
+    session.shutdown();
+}

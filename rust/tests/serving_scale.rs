@@ -6,8 +6,9 @@
 //! * a **64-session mixed-quartet soak** — every ticket resolves (no
 //!   deadlock, no lost `Ticket`), cross-session coalescing actually
 //!   fires (`coalesced > 0`), the sharded plan cache fingerprints each
-//!   distinct shape exactly once, and the final snapshot carries
-//!   per-`OpKind` p50/p99 SLO gauges;
+//!   distinct shape exactly once, the device pool uploads each operand
+//!   handle exactly once (steady-state resubmits re-upload nothing), and
+//!   the final snapshot carries per-`OpKind` p50/p99 SLO gauges;
 //! * **admission control under an undersized queue** — `try_submit`
 //!   sheds load with the typed `OpError::Overloaded { depth, cap }`,
 //!   depth stays bounded by the cap throughout the storm, and every
@@ -133,6 +134,12 @@ fn soak_64_sessions_mixed_quartet() {
         assert!(o.count > 0, "{kind}: empty gauge");
         assert!(o.p50_us <= o.p99_us, "{kind}: p50 {} > p99 {}", o.p50_us, o.p99_us);
     }
+    // device pool: the 13 registered operand handles upload exactly once
+    // across all 64 sessions; every resubmit pins the staged image
+    assert_eq!(snap.pool_misses, 13, "one upload per distinct operand handle");
+    assert!(snap.uploads_skipped > 0, "steady-state resubmits must skip the upload");
+    assert_eq!(snap.pool_hits, snap.uploads_skipped);
+    assert!(snap.pool_bytes_live <= 64u64 << 20, "residency stays inside the default budget");
     assert_eq!(coord.queue_depth(), 0, "drained queue");
 
     root.shutdown();
